@@ -1,0 +1,65 @@
+//! The three-layer stack end to end: load the AOT-compiled JAX/Pallas
+//! relaxation artifact through PJRT and cross-validate the accelerated CEFT
+//! backend against the pure-rust DP on a spread of instances.
+//!
+//! Requires `make artifacts` to have been run first.
+//!
+//! Run with: `cargo run --release --example accelerated_ceft`
+
+use ceft::cp::ceft::find_critical_path;
+use ceft::graph::generator::{generate, RggParams};
+use ceft::platform::{CostModel, Platform};
+use ceft::runtime::{AcceleratedCeft, PjrtRuntime};
+
+fn main() {
+    let rt = match PjrtRuntime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT client unavailable: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {}", rt.platform_name());
+    let acc = AcceleratedCeft::new(rt);
+
+    let mut checked = 0;
+    for &p in &[2usize, 4, 8, 16] {
+        if !acc.supports(p) {
+            println!("p={p}: artifact missing (run `make artifacts`), skipping");
+            continue;
+        }
+        for &n in &[64usize, 256, 512] {
+            let plat = Platform::uniform(p, 1.0, 0.1);
+            let inst = generate(
+                &RggParams {
+                    n,
+                    out_degree: 4,
+                    ccr: 1.0,
+                    alpha: 0.5,
+                    beta_pct: 75.0,
+                    gamma: 0.25,
+                },
+                &CostModel::Classic { beta: 0.75 },
+                &plat,
+                n as u64 * 31 + p as u64,
+            );
+            let cpu = find_critical_path(&inst.graph, &plat, &inst.comp);
+            let accel = acc
+                .find_critical_path(&inst.graph, &plat, &inst.comp)
+                .expect("accelerated CEFT");
+            let rel = (cpu.length - accel.length).abs() / cpu.length;
+            let paths_match = cpu.tasks() == accel.tasks();
+            println!(
+                "n={n:<4} p={p:<3} rust CPL {:>12.4}  pjrt CPL {:>12.4}  rel {:.2e}  paths {}",
+                cpu.length,
+                accel.length,
+                rel,
+                if paths_match { "identical" } else { "DIFFER" }
+            );
+            assert!(rel < 1e-4, "accelerated backend diverged");
+            assert!(paths_match, "path reconstruction diverged");
+            checked += 1;
+        }
+    }
+    println!("\naccelerated_ceft: {checked} instances cross-validated OK");
+}

@@ -1,0 +1,91 @@
+//! End-to-end validation driver: run the paper's whole evaluation pipeline
+//! on a real (reduced-scale) workload and report the headline metrics next
+//! to the paper's numbers. This is the run recorded in EXPERIMENTS.md.
+//!
+//! Pipeline exercised: graph generators → cost models → CEFT DP → CPOP/HEFT
+//! baselines → CEFT-CPOP scheduler → metrics → aggregation, across all four
+//! RGG workload families and the four real-world benchmarks, in parallel
+//! via the coordinator.
+//!
+//! Run with: `cargo run --release --example paper_experiments [--scale paper-small]`
+
+use ceft::coordinator::Coordinator;
+use ceft::exp::cells::{realworld_grid, RealWorld, Scale, Workload};
+use ceft::exp::figures::EQUAL_EPS;
+use ceft::exp::run::run_realworld_sweep;
+use ceft::metrics::{compare, WinTally};
+use ceft::util::pool;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let scale = argv
+        .iter()
+        .position(|a| a == "--scale")
+        .and_then(|i| argv.get(i + 1))
+        .map(|s| Scale::parse(s).expect("bad scale"))
+        .unwrap_or(Scale::PaperSmall);
+    let threads = pool::default_threads();
+    println!("paper_experiments: scale={scale:?} threads={threads}");
+
+    let mut coord = Coordinator::new(threads, scale, "results".into(), true);
+
+    // --- Table 3: the paper's headline -----------------------------------
+    // paper: CEFT CPL shorter in 0 / 58.92 / 83.14 / 83.99 % and CEFT-CPOP
+    // makespan shorter in 15.9 / 75.94 / 90.29 / 89.69 % of experiments
+    // (RGG-classic / low / medium / high).
+    println!("\n=== Table 3 (paper headline) ===");
+    let paper_cpl_shorter = [0.0, 58.92, 83.14, 83.99];
+    let paper_mk_shorter = [15.9, 75.94, 90.29, 89.69];
+    for (i, wl) in Workload::ALL.into_iter().enumerate() {
+        let rows = coord.rgg_rows(wl).to_vec();
+        let mut cpl = WinTally::default();
+        let mut mk = WinTally::default();
+        for r in &rows {
+            cpl.push(compare(r.cpl_ceft, r.cpl_cpop_realized, EQUAL_EPS));
+            mk.push(compare(
+                r.algo("CEFT-CPOP").makespan,
+                r.algo("CPOP").makespan,
+                EQUAL_EPS,
+            ));
+        }
+        let (_, _, cpl_shorter) = cpl.percentages();
+        let (_, _, mk_shorter) = mk.percentages();
+        println!(
+            "{:<12} CPL shorter: measured {:>6.2}% (paper {:>6.2}%)   makespan shorter: measured {:>6.2}% (paper {:>6.2}%)",
+            wl.name(),
+            cpl_shorter,
+            paper_cpl_shorter[i],
+            mk_shorter,
+            paper_mk_shorter[i],
+        );
+    }
+
+    // --- real-world benchmarks -------------------------------------------
+    // paper §8.1: on medium variants CEFT paths shorter than CPOP's in
+    // ~73.8% of cases, better makespans in ~77.77%.
+    println!("\n=== Real-world benchmarks (medium variants) ===");
+    let mut cpl = WinTally::default();
+    let mut mk = WinTally::default();
+    for fam in RealWorld::ALL {
+        let cells = realworld_grid(fam, scale);
+        let rows = run_realworld_sweep(&cells, threads, false);
+        for r in rows.iter().filter(|r| r.workload.ends_with("medium")) {
+            cpl.push(compare(r.cpl_ceft, r.cpl_cpop_realized, EQUAL_EPS));
+            mk.push(compare(
+                r.algo("CEFT-CPOP").makespan,
+                r.algo("CPOP").makespan,
+                EQUAL_EPS,
+            ));
+        }
+    }
+    let (_, _, cpl_s) = cpl.percentages();
+    let (_, _, mk_s) = mk.percentages();
+    println!(
+        "CPL shorter: measured {cpl_s:.2}% (paper ~73.8%)   makespan shorter: measured {mk_s:.2}% (paper ~77.77%)"
+    );
+
+    // --- write every figure CSV -------------------------------------------
+    println!("\n=== writing all figure CSVs to results/ ===");
+    coord.produce_and_write("all").expect("write results");
+    println!("done — see results/*.csv and EXPERIMENTS.md");
+}

@@ -1,0 +1,79 @@
+//! Quickstart: build a small heterogeneous instance, find its CEFT critical
+//! path, and schedule it with every algorithm.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use ceft::cp::ceft::find_critical_path;
+use ceft::cp::ranks::cpop_critical_path;
+use ceft::graph::TaskGraph;
+use ceft::metrics;
+use ceft::platform::Platform;
+use ceft::sched::{ceft_cpop::CeftCpop, cpop::Cpop, heft::Heft, Scheduler};
+
+fn main() {
+    // A small fork-join pipeline: preprocess -> {gpu-friendly kernel,
+    // cpu-friendly kernel} -> reduce -> postprocess. Edge weights are data
+    // volumes.
+    let graph = TaskGraph::from_edges(
+        5,
+        &[
+            (0, 1, 20.0),
+            (0, 2, 20.0),
+            (1, 3, 10.0),
+            (2, 3, 10.0),
+            (3, 4, 5.0),
+        ],
+    );
+
+    // Two processor classes ("CPU", "GPU"), unit bandwidth, no startup cost.
+    let platform = Platform::uniform(2, 1.0, 0.0);
+
+    // Execution costs (v x P, row-major): the array task is 10x faster on
+    // the GPU class, the scalar task is hopeless there — the §1 motivating
+    // shape.
+    #[rustfmt::skip]
+    let comp = vec![
+        //  CPU    GPU
+        5.0,   6.0,   // 0 preprocess
+        80.0,  8.0,   // 1 array kernel: GPU 10x
+        12.0,  90.0,  // 2 scalar kernel: CPU only
+        6.0,   5.0,   // 3 reduce
+        4.0,   4.0,   // 4 postprocess
+    ];
+
+    println!("== CEFT critical path (paper Algorithm 1) ==");
+    let cp = find_critical_path(&graph, &platform, &comp);
+    println!("length = {:.2}", cp.length);
+    for step in &cp.path {
+        println!(
+            "  task {} -> class {}  (exec {:.1})",
+            step.task,
+            step.class,
+            comp[step.task * 2 + step.class]
+        );
+    }
+
+    let (cpop_cp, cpop_len) = cpop_critical_path(&graph, &platform, &comp);
+    println!("\n== CPOP mean-value critical path ==");
+    println!("tasks {:?}, estimated length {:.2}", cpop_cp, cpop_len);
+    println!("(note how averaging distorts the path cost when tasks are specialised)");
+
+    println!("\n== Schedules ==");
+    let algos: [&dyn Scheduler; 3] = [&CeftCpop, &Cpop, &Heft];
+    for a in algos {
+        let s = a.schedule(&graph, &platform, &comp);
+        s.validate(&graph, &platform, &comp).expect("valid schedule");
+        println!(
+            "{:<10} makespan {:>7.2}  speedup {:.3}  slr {:.3}",
+            a.name(),
+            s.makespan(),
+            metrics::speedup(&comp, 2, s.makespan()),
+            metrics::slr(&graph, &comp, 2, s.makespan()),
+        );
+    }
+
+    // Gantt view of the paper's scheduler
+    let s = CeftCpop.schedule(&graph, &platform, &comp);
+    println!("\n== CEFT-CPOP Gantt (P0 = CPU class, P1 = GPU class) ==");
+    print!("{}", ceft::sched::gantt::render(&s, 70));
+}

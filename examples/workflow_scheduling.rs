@@ -1,0 +1,77 @@
+//! Schedule the four real-world workflows of §7.2 (FFT, Gaussian
+//! elimination, molecular dynamics, epigenomics) across CCR settings —
+//! a compact version of the paper's Figures 15–18.
+//!
+//! Run with: `cargo run --release --example workflow_scheduling`
+
+use ceft::graph::realworld::{
+    epigenomics, fft, gaussian_elimination, molecular_dynamics, weighted_instance, Skeleton,
+};
+use ceft::metrics;
+use ceft::platform::{CostModel, Platform};
+use ceft::sched::{ceft_cpop::CeftCpop, cpop::Cpop, heft::Heft, Scheduler};
+use ceft::util::csv::Table;
+
+fn main() {
+    let skeletons: Vec<Skeleton> = vec![
+        fft(16),
+        gaussian_elimination(12),
+        molecular_dynamics(),
+        epigenomics(12),
+    ];
+    let p = 8;
+    let algos: [&dyn Scheduler; 3] = [&CeftCpop, &Cpop, &Heft];
+
+    for skel in &skeletons {
+        println!(
+            "\n== {} ({} tasks, {} edges) ==",
+            skel.name,
+            skel.n,
+            skel.edges.len()
+        );
+        let mut t = Table::new(vec![
+            "ccr",
+            "CEFT-CPOP slr",
+            "CPOP slr",
+            "HEFT slr",
+            "CEFT-CPOP speedup",
+            "CPOP speedup",
+            "HEFT speedup",
+        ]);
+        for &ccr in &[0.1, 1.0, 10.0] {
+            // average over a few seeds per CCR
+            let mut slrs = [0.0f64; 3];
+            let mut sps = [0.0f64; 3];
+            let reps = 5;
+            for seed in 0..reps {
+                let platform = Platform::uniform(p, 1.0, 0.0);
+                let inst = weighted_instance(
+                    skel,
+                    ccr,
+                    50.0,
+                    &CostModel::Classic { beta: 0.5 },
+                    &platform,
+                    seed,
+                );
+                for (i, a) in algos.iter().enumerate() {
+                    let s = a.schedule(&inst.graph, &platform, &inst.comp);
+                    s.validate(&inst.graph, &platform, &inst.comp).unwrap();
+                    slrs[i] +=
+                        metrics::slr(&inst.graph, &inst.comp, p, s.makespan()) / reps as f64;
+                    sps[i] += metrics::speedup(&inst.comp, p, s.makespan()) / reps as f64;
+                }
+            }
+            t.push_row(vec![
+                format!("{ccr}"),
+                format!("{:.3}", slrs[0]),
+                format!("{:.3}", slrs[1]),
+                format!("{:.3}", slrs[2]),
+                format!("{:.3}", sps[0]),
+                format!("{:.3}", sps[1]),
+                format!("{:.3}", sps[2]),
+            ]);
+        }
+        print!("{}", t.to_ascii());
+    }
+    println!("\n(regenerate the full paper sweeps with `repro experiment fig15` … `fig18`)");
+}

@@ -1,0 +1,94 @@
+"""AOT export: lower the Layer-2 function to HLO text artifacts.
+
+HLO *text* (not `.serialize()`d protos) is the interchange format: jax >=
+0.5 emits HloModuleProtos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per processor-class count:
+    ceft_relax_b256_p{2,4,8,16,32,64}.hlo.txt
+plus a manifest.json describing shapes, and is a no-op when artifacts are
+newer than the python sources (the Makefile also guards this).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BATCH = 256
+CLASS_SIZES = [2, 4, 8, 16, 32, 64]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_relax(p: int, batch: int = BATCH) -> str:
+    """Lower ceft_relax_batch for (batch, p) and return HLO text."""
+    args = model.example_args(batch, p)
+    lowered = jax.jit(model.ceft_relax_batch).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--class-sizes",
+        default=",".join(str(p) for p in CLASS_SIZES),
+        help="comma-separated processor-class counts",
+    )
+    ap.add_argument("--batch", type=int, default=BATCH)
+    ap.add_argument("--force", action="store_true", help="re-export even if fresh")
+    ns = ap.parse_args(argv)
+
+    os.makedirs(ns.out_dir, exist_ok=True)
+    sizes = [int(s) for s in ns.class_sizes.split(",") if s]
+    manifest = {"batch": ns.batch, "class_sizes": sizes, "artifacts": {}}
+    src_mtime = max(
+        os.path.getmtime(f)
+        for f in [
+            __file__,
+            os.path.join(os.path.dirname(__file__), "model.py"),
+            os.path.join(os.path.dirname(__file__), "kernels", "minplus.py"),
+        ]
+    )
+    for p in sizes:
+        name = f"ceft_relax_b{ns.batch}_p{p}.hlo.txt"
+        path = os.path.join(ns.out_dir, name)
+        fresh = (
+            not ns.force
+            and os.path.exists(path)
+            and os.path.getmtime(path) >= src_mtime
+        )
+        if fresh:
+            print(f"fresh: {name}")
+        else:
+            text = export_relax(p, ns.batch)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {name} ({len(text)} chars)")
+        manifest["artifacts"][str(p)] = name
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

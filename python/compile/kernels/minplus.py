@@ -1,0 +1,108 @@
+"""Layer 1 — the CEFT edge-relaxation Pallas kernel.
+
+The numeric hot spot of the CEFT dynamic program (Algorithm 1 of the paper)
+is the per-edge relaxation
+
+    out[b, j] = min_l ( F[b, l] + comm(l, j, data[b]) ) + comp[b, j]
+    comm(l, j, d) = 0                       if l == j
+                  = L[l] + d * invbw[l, j]  otherwise
+
+i.e. a batched *tropical (min-plus) matrix product* between the parent CEFT
+rows F (B x P) and the communication-cost matrix (P x P, data-dependent per
+edge), followed by the elementwise add of the child execution costs.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): tropical algebra cannot use
+the MXU (a bf16 ring-matmul systolic array), so the kernel targets the VPU
+with the P_l reduction materialised as a (B, P_l, P_j) broadcast inside a
+VMEM tile and min-reduced over axis 1. BlockSpec tiles the batch dimension
+so HBM->VMEM traffic is one F/comp tile per block; L/invbw are tiny and
+replicated into every block. VMEM per block = TILE_B*(2P + P) + P^2 + P
+floats — ~144 KiB at TILE_B=256, P=64 — far under a TPU core's ~16 MiB.
+
+interpret=True everywhere on CPU: real-TPU lowering would emit a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile along the edge-batch dimension. 256 edges per block keeps the
+# broadcast tensor (TILE_B x P x P) under 4 MiB for P = 64 in f32.
+TILE_B = 256
+
+
+def _relax_kernel(f_ref, data_ref, l_ref, invbw_ref, comp_ref, out_ref):
+    """Pallas kernel body: one (TILE_B, P) block of the relaxation.
+
+    f_ref:     (TILE_B, P)  parent CEFT values for each edge in the block
+    data_ref:  (TILE_B, 1)  payload of each edge
+    l_ref:     (1, P)       per-class communication startup latency
+    invbw_ref: (P, P)       reciprocal bandwidth (diagonal ignored)
+    comp_ref:  (TILE_B, P)  child execution cost on each class
+    out_ref:   (TILE_B, P)  relaxed CEFT candidates
+    """
+    f = f_ref[...]  # (B, P)
+    data = data_ref[...]  # (B, 1)
+    lat = l_ref[...]  # (1, P)
+    invbw = invbw_ref[...]  # (P, P)
+    comp = comp_ref[...]  # (B, P)
+
+    p = f.shape[1]
+    # comm[b, l, j] = L[l] + data[b] * invbw[l, j], zeroed on the diagonal.
+    # Build the (B, P_l, P_j) tensor in VMEM; the l-axis is the reduction.
+    comm = lat.reshape(1, p, 1) + data[:, :, None] * invbw[None, :, :]
+    eye = jnp.eye(p, dtype=f.dtype)
+    comm = jnp.where(eye[None, :, :] > 0, jnp.zeros_like(comm), comm)
+    # tropical contraction: min over l of F[b, l] + comm[b, l, j]
+    arrival = jnp.min(f[:, :, None] + comm, axis=1)  # (B, P_j)
+    out_ref[...] = arrival + comp
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def relax(f, data, l, invbw, comp, *, interpret=True):
+    """Batched CEFT edge relaxation via the Pallas kernel.
+
+    Args:
+      f:      (B, P) float32 — parent CEFT rows.
+      data:   (B,)   float32 — edge payloads.
+      l:      (P,)   float32 — per-class startup latency.
+      invbw:  (P, P) float32 — reciprocal bandwidths (diagonal ignored).
+      comp:   (B, P) float32 — child execution costs.
+      interpret: run the kernel in interpret mode (required on CPU).
+
+    Returns:
+      (B, P) float32 — min-plus relaxed CEFT candidates.
+    """
+    b, p = f.shape
+    assert b % TILE_B == 0, f"batch {b} must be a multiple of {TILE_B}"
+    grid = (b // TILE_B,)
+    return pl.pallas_call(
+        _relax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, p), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_B, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, p), lambda i: (0, 0)),
+            pl.BlockSpec((p, p), lambda i: (0, 0)),
+            pl.BlockSpec((TILE_B, p), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, p), f.dtype),
+        interpret=interpret,
+    )(f, data.reshape(b, 1), l.reshape(1, p), invbw, comp)
+
+
+def vmem_bytes(tile_b: int, p: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of one kernel block (see module docstring).
+
+    Counts the resident operands, the output tile, and the dominant
+    intermediate (the (tile_b, p, p) comm/broadcast tensor).
+    """
+    operands = tile_b * p * 2 + tile_b + p + p * p + tile_b * p
+    intermediate = tile_b * p * p
+    return (operands + intermediate) * dtype_bytes

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the Layer-1 relaxation kernel.
+
+This is the correctness contract: `minplus.relax` must agree with
+`ref.relax_reference` to float32 tolerance for every shape and input
+distribution (pytest + hypothesis sweep in python/tests/test_kernel.py),
+and the rust `runtime::relax_batch_reference` mirrors the same semantics
+on the other side of the AOT boundary.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def comm_matrix(data, l, invbw):
+    """(B, P, P) communication costs: comm[b, l, j] per Definition 3.
+
+    Zero on the diagonal (co-located tasks), else L[l] + data[b]*invbw[l,j].
+    """
+    b = data.shape[0]
+    p = l.shape[0]
+    comm = l.reshape(1, p, 1) + data.reshape(b, 1, 1) * invbw.reshape(1, p, p)
+    eye = jnp.eye(p, dtype=comm.dtype).reshape(1, p, p)
+    return jnp.where(eye > 0, jnp.zeros_like(comm), comm)
+
+
+def relax_reference(f, data, l, invbw, comp):
+    """out[b, j] = min_l (F[b, l] + comm[b, l, j]) + comp[b, j]."""
+    comm = comm_matrix(data, l, invbw)
+    arrival = jnp.min(f[:, :, None] + comm, axis=1)
+    return arrival + comp
+
+
+def ceft_table_reference(n, preds, comp, l, invbw):
+    """Whole-graph CEFT table in pure numpy-ish jnp, for model-level tests.
+
+    Args:
+      n: number of tasks.
+      preds: list over tasks of lists of (parent, data) pairs; tasks must be
+        topologically ordered (parent < child).
+      comp: (n, P) execution costs.
+      l, invbw: platform comm parameters.
+
+    Returns:
+      (n, P) CEFT values.
+    """
+    p = comp.shape[1]
+    table = [None] * n
+    for t in range(n):
+        if not preds[t]:
+            table[t] = comp[t]
+            continue
+        best = None
+        for (k, data) in preds[t]:
+            comm = comm_matrix(jnp.array([data], comp.dtype), l, invbw)[0]
+            arrival = jnp.min(table[k][:, None] + comm, axis=0)
+            best = arrival if best is None else jnp.maximum(best, arrival)
+        table[t] = best + comp[t]
+    return jnp.stack(table)

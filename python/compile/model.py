@@ -1,0 +1,56 @@
+"""Layer 2 — the JAX compute graph around the Layer-1 kernel.
+
+The rust coordinator drives the CEFT dynamic program level by level; the
+exported computation is the *edge-relaxation batch*: the per-level inner
+loop of Algorithm 1 over a fixed-size batch of edges. `ceft_relax_batch`
+wraps the Pallas kernel so it lowers into the exported HLO; `aot.py`
+exports one artifact per processor-class count.
+
+A fused multi-step variant (`ceft_relax_multi`) runs K relaxation rounds in
+one call via `lax.scan` — used to amortise PJRT call overhead for deep
+chain-like graphs, and to exercise scan-lowering through the AOT path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import minplus
+
+
+def ceft_relax_batch(f, data, l, invbw, comp):
+    """One batched CEFT edge relaxation (the Algorithm-1 inner loop).
+
+    Shapes: f (B, P), data (B,), l (P,), invbw (P, P), comp (B, P).
+    Returns (B, P). B must be a multiple of minplus.TILE_B.
+    """
+    return minplus.relax(f, data, l, invbw, comp, interpret=True)
+
+
+def ceft_relax_multi(f, data, l, invbw, comp, steps: int):
+    """`steps` chained relaxations of the same edge batch.
+
+    Feeds each round's output back as the next round's parent rows —
+    the fixed-point iteration view of the DP on a chain. Lowered with
+    `lax.scan` so the exported HLO contains a single rolled loop instead of
+    `steps` unrolled kernel bodies (smaller artifact, same numerics).
+    """
+
+    def step(carry, _):
+        out = ceft_relax_batch(carry, data, l, invbw, comp)
+        return out, ()
+
+    out, _ = jax.lax.scan(step, f, None, length=steps)
+    return out
+
+
+def example_args(b: int, p: int, dtype=jnp.float32):
+    """ShapeDtypeStructs matching one artifact signature."""
+    return (
+        jax.ShapeDtypeStruct((b, p), dtype),  # f
+        jax.ShapeDtypeStruct((b,), dtype),  # data
+        jax.ShapeDtypeStruct((p,), dtype),  # l
+        jax.ShapeDtypeStruct((p, p), dtype),  # invbw
+        jax.ShapeDtypeStruct((b, p), dtype),  # comp
+    )

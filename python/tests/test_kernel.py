@@ -1,0 +1,119 @@
+"""Pytest: the Pallas kernel vs the pure-jnp oracle — the core correctness
+signal of the compile path, plus hypothesis sweeps over shapes/values."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import minplus, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_inputs(rng, b, p, data_scale=10.0, f_scale=100.0):
+    f = rng.uniform(0.0, f_scale, size=(b, p)).astype(np.float32)
+    data = rng.uniform(0.0, data_scale, size=(b,)).astype(np.float32)
+    l = rng.uniform(0.0, 2.0, size=(p,)).astype(np.float32)
+    invbw = rng.uniform(0.1, 2.0, size=(p, p)).astype(np.float32)
+    np.fill_diagonal(invbw, 0.0)
+    comp = rng.uniform(0.1, 50.0, size=(b, p)).astype(np.float32)
+    return f, data, l, invbw, comp
+
+
+@pytest.mark.parametrize("p", [2, 4, 8, 16, 32, 64])
+def test_kernel_matches_reference_all_class_sizes(p):
+    rng = np.random.default_rng(p)
+    args = make_inputs(rng, minplus.TILE_B, p)
+    out = minplus.relax(*map(jnp.asarray, args))
+    expect = ref.relax_reference(*map(jnp.asarray, args))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("blocks", [1, 2, 4])
+def test_kernel_multi_block_grid(blocks):
+    rng = np.random.default_rng(blocks)
+    args = make_inputs(rng, minplus.TILE_B * blocks, 8)
+    out = minplus.relax(*map(jnp.asarray, args))
+    expect = ref.relax_reference(*map(jnp.asarray, args))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-6, atol=1e-5)
+
+
+def test_same_class_comm_is_free():
+    # one parent at 10.0 on class 0; child on class 0 must not pay comm
+    p = 4
+    b = minplus.TILE_B
+    f = np.full((b, p), 1e6, np.float32)
+    f[:, 0] = 10.0
+    data = np.full((b,), 1e5, np.float32)  # enormous payload
+    l = np.ones((p,), np.float32)
+    invbw = np.ones((p, p), np.float32)
+    np.fill_diagonal(invbw, 0.0)
+    comp = np.ones((b, p), np.float32)
+    out = np.asarray(minplus.relax(*map(jnp.asarray, (f, data, l, invbw, comp))))
+    # class 0: arrival = 10 (no comm), +1 comp
+    np.testing.assert_allclose(out[:, 0], 11.0)
+    # class 1: best is still from class 0 but pays 1 + 1e5
+    np.testing.assert_allclose(out[:, 1], 10.0 + 1.0 + 1e5 + 1.0)
+
+
+def test_zero_data_still_pays_startup():
+    p = 2
+    b = minplus.TILE_B
+    f = np.zeros((b, p), np.float32)
+    f[:, 1] = 1e6
+    data = np.zeros((b,), np.float32)
+    l = np.array([3.0, 5.0], np.float32)
+    invbw = np.ones((p, p), np.float32)
+    np.fill_diagonal(invbw, 0.0)
+    comp = np.zeros((b, p), np.float32)
+    out = np.asarray(minplus.relax(*map(jnp.asarray, (f, data, l, invbw, comp))))
+    # dest class 1: from class 0 pays L[0]=3 even with zero payload
+    np.testing.assert_allclose(out[:, 1], 3.0)
+    np.testing.assert_allclose(out[:, 0], 0.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    p=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+    data_scale=st.sampled_from([0.0, 0.1, 10.0, 1e4]),
+)
+def test_kernel_matches_reference_hypothesis(p, seed, data_scale):
+    rng = np.random.default_rng(seed)
+    args = make_inputs(rng, minplus.TILE_B, p, data_scale=data_scale)
+    out = minplus.relax(*map(jnp.asarray, args))
+    expect = ref.relax_reference(*map(jnp.asarray, args))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(expect), rtol=1e-5, atol=1e-4
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_relaxation_monotone_in_parent_values(seed):
+    # CEFT monotonicity: raising any parent value cannot lower any output
+    rng = np.random.default_rng(seed)
+    f, data, l, invbw, comp = make_inputs(rng, minplus.TILE_B, 4)
+    out1 = np.asarray(minplus.relax(*map(jnp.asarray, (f, data, l, invbw, comp))))
+    bump = f + rng.uniform(0.0, 5.0, size=f.shape).astype(np.float32)
+    out2 = np.asarray(minplus.relax(*map(jnp.asarray, (bump, data, l, invbw, comp))))
+    assert (out2 >= out1 - 1e-4).all()
+
+
+def test_output_lower_bound_is_colocated_path():
+    # out[b, j] >= F[b, j] + comp[b, j] can fail (another class may be
+    # cheaper), but out[b, j] <= F[b, j] + comp[b, j] always holds: the
+    # co-located candidate is in the min.
+    rng = np.random.default_rng(99)
+    f, data, l, invbw, comp = make_inputs(rng, minplus.TILE_B, 8)
+    out = np.asarray(minplus.relax(*map(jnp.asarray, (f, data, l, invbw, comp))))
+    assert (out <= f + comp + 1e-4).all()
+
+
+def test_vmem_estimate_within_tpu_budget():
+    # structural perf check (DESIGN.md §Perf): worst-case block fits VMEM
+    assert minplus.vmem_bytes(minplus.TILE_B, 64) < 16 * 2**20

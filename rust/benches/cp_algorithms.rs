@@ -1,0 +1,47 @@
+//! Bench: critical-path algorithms (CEFT vs CPOP-CP vs min-exec vs CP_MIN)
+//! across graph sizes and class counts. The paper's complexity claim is
+//! O(P²e) for CEFT vs O(Pe)-ish for the mean-value ranks; this bench makes
+//! the constant factors visible and tracks the DP's cells/second.
+
+use ceft::cp::ceft::find_critical_path;
+use ceft::cp::cpmin::cp_min_cost;
+use ceft::cp::minexec::min_exec_critical_path;
+use ceft::cp::ranks::cpop_critical_path;
+use ceft::graph::generator::{generate, RggParams};
+use ceft::platform::{CostModel, Platform};
+use ceft::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("cp_algorithms");
+    for &(n, p) in &[(128usize, 8usize), (1024, 8), (4096, 8), (1024, 2), (1024, 64)] {
+        let plat = Platform::uniform(p, 1.0, 0.0);
+        let inst = generate(
+            &RggParams {
+                n,
+                out_degree: 4,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 50.0,
+                gamma: 0.25,
+            },
+            &CostModel::Classic { beta: 0.5 },
+            &plat,
+            42,
+        );
+        let e = inst.graph.num_edges() as u64;
+        let cells = e * (p * p) as u64;
+        b.case_with_elements(&format!("ceft/n{n}_p{p}"), Some(cells), || {
+            black_box(find_critical_path(&inst.graph, &plat, &inst.comp));
+        });
+        b.case(&format!("cpop_cp/n{n}_p{p}"), || {
+            black_box(cpop_critical_path(&inst.graph, &plat, &inst.comp));
+        });
+        b.case(&format!("minexec/n{n}_p{p}"), || {
+            black_box(min_exec_critical_path(&inst.graph, &plat, &inst.comp, false));
+        });
+        b.case(&format!("cp_min/n{n}_p{p}"), || {
+            black_box(cp_min_cost(&inst.graph, &inst.comp, p));
+        });
+    }
+    b.save_csv();
+}

@@ -1,0 +1,37 @@
+//! Bench: the real-world benchmark figures (15–18) — generator + cell
+//! pipeline per family, plus generator-only cases (FFT/GE/MD/EW structure
+//! construction).
+
+use ceft::exp::cells::{realworld_grid, RealWorld, Scale};
+use ceft::exp::run::{run_realworld_cell, run_realworld_sweep};
+use ceft::graph::realworld;
+use ceft::util::bench::{black_box, Bench};
+use ceft::util::pool;
+
+fn main() {
+    let mut b = Bench::new("figures_realworld");
+
+    b.case("structure/fft_64", || {
+        black_box(realworld::fft(64));
+    });
+    b.case("structure/ge_32", || {
+        black_box(realworld::gaussian_elimination(32));
+    });
+    b.case("structure/md", || {
+        black_box(realworld::molecular_dynamics());
+    });
+    b.case("structure/ew_64", || {
+        black_box(realworld::epigenomics(64));
+    });
+
+    for fam in RealWorld::ALL {
+        let cells = realworld_grid(fam, Scale::Smoke);
+        b.case(&format!("cell/{}", fam.name()), || {
+            black_box(run_realworld_cell(&cells[0]));
+        });
+        b.case(&format!("sweep/{}x{}", fam.name(), cells.len()), || {
+            black_box(run_realworld_sweep(&cells, pool::default_threads(), false));
+        });
+    }
+    b.save_csv();
+}

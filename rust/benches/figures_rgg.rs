@@ -1,0 +1,51 @@
+//! Bench: figure-regeneration kernels for the RGG figures (7–14, 19, 20) —
+//! sweep slices at reduced scale plus the aggregation stage itself. Each
+//! case is one paper figure's compute at smoke scale (full regeneration is
+//! `repro experiment <id>`).
+
+use ceft::exp::cells::{grid, Scale, Workload};
+use ceft::exp::figures;
+use ceft::exp::run::run_sweep;
+use ceft::util::bench::{black_box, Bench};
+use ceft::util::pool;
+
+fn main() {
+    let mut b = Bench::new("figures_rgg");
+    let threads = pool::default_threads();
+
+    // sweep slice: one smoke grid per workload (shared by all figures)
+    for wl in [Workload::RggClassic, Workload::RggHigh] {
+        let cells = grid(wl, Scale::Smoke);
+        b.case(&format!("sweep/{}x{}", wl.name(), cells.len()), || {
+            black_box(run_sweep(&cells, threads, false));
+        });
+    }
+
+    // aggregation stage on a precomputed row set
+    let rows = {
+        let mut all = Vec::new();
+        for wl in Workload::ALL {
+            all.extend(run_sweep(&grid(wl, Scale::Smoke), threads, false));
+        }
+        all
+    };
+    b.case("aggregate/table3", || {
+        black_box(figures::table3(&rows));
+    });
+    b.case("aggregate/fig7", || {
+        black_box(figures::fig7(&rows));
+    });
+    b.case("aggregate/fig10", || {
+        black_box(figures::fig10(&rows));
+    });
+    b.case("aggregate/fig13b", || {
+        black_box(figures::fig13b(&rows));
+    });
+    b.case("aggregate/fig19", || {
+        black_box(figures::fig19(&rows));
+    });
+    b.case("aggregate/raw_csv", || {
+        black_box(figures::raw_rows(&rows).to_csv());
+    });
+    b.save_csv();
+}

@@ -1,0 +1,70 @@
+//! Bench: the PJRT artifact path vs the pure-rust relaxation — measures the
+//! per-call overhead of the AOT boundary and the crossover batch size.
+//! Skips (with a message) when `artifacts/` has not been built.
+
+use ceft::runtime::{relax_batch_reference, AcceleratedCeft, PjrtRuntime, BATCH};
+use ceft::util::bench::{black_box, Bench};
+use ceft::util::rng::Xoshiro256;
+
+fn main() {
+    let mut b = Bench::new("runtime_pjrt");
+    let rt = match PjrtRuntime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping runtime_pjrt bench: PJRT client unavailable ({e})");
+            return;
+        }
+    };
+    if !rt.has_artifact(8) {
+        eprintln!("skipping runtime_pjrt bench: run `make artifacts` first");
+        return;
+    }
+
+    let mut rng = Xoshiro256::new(1);
+    for &p in &[2usize, 8, 64] {
+        if !rt.has_artifact(p) {
+            continue;
+        }
+        let f: Vec<f32> = (0..BATCH * p).map(|_| rng.uniform(0.0, 100.0) as f32).collect();
+        let data: Vec<f32> = (0..BATCH).map(|_| rng.uniform(0.0, 10.0) as f32).collect();
+        let l: Vec<f32> = (0..p).map(|_| 0.0).collect();
+        let mut invbw = vec![1f32; p * p];
+        for i in 0..p {
+            invbw[i * p + i] = 0.0;
+        }
+        let comp: Vec<f32> = (0..BATCH * p).map(|_| rng.uniform(1.0, 20.0) as f32).collect();
+        let cells = (BATCH * p * p) as u64;
+        // warm the executable cache outside the timed region
+        rt.relax_batch(p, &f, &data, &l, &invbw, &comp).unwrap();
+        b.case_with_elements(&format!("pjrt_relax/p{p}"), Some(cells), || {
+            black_box(rt.relax_batch(p, &f, &data, &l, &invbw, &comp).unwrap());
+        });
+        b.case_with_elements(&format!("rust_relax/p{p}"), Some(cells), || {
+            black_box(relax_batch_reference(p, &f, &data, &l, &invbw, &comp));
+        });
+    }
+
+    // whole-graph accelerated CEFT vs pure rust
+    let acc = AcceleratedCeft::new(rt);
+    let plat = ceft::platform::Platform::uniform(8, 1.0, 0.0);
+    let inst = ceft::graph::generator::generate(
+        &ceft::graph::generator::RggParams {
+            n: 512,
+            out_degree: 4,
+            ccr: 1.0,
+            alpha: 0.5,
+            beta_pct: 50.0,
+            gamma: 0.25,
+        },
+        &ceft::platform::CostModel::Classic { beta: 0.5 },
+        &plat,
+        3,
+    );
+    b.case("accelerated_ceft/n512_p8", || {
+        black_box(acc.find_critical_path(&inst.graph, &plat, &inst.comp).unwrap());
+    });
+    b.case("rust_ceft/n512_p8", || {
+        black_box(ceft::cp::ceft::find_critical_path(&inst.graph, &plat, &inst.comp));
+    });
+    b.save_csv();
+}

@@ -1,0 +1,52 @@
+//! Bench: end-to-end scheduler wall-clock (CPOP, HEFT, CEFT-CPOP, rank
+//! variants) across sizes — the cost of adopting CEFT-CPOP over CPOP is the
+//! headline here (one extra O(P²e) DP on top of CPOP's own machinery).
+
+use ceft::graph::generator::{generate, RggParams};
+use ceft::platform::{CostModel, Platform};
+use ceft::sched::{
+    ceft_cpop::CeftCpop,
+    ceft_heft::{CeftHeftDown, CeftHeftUp},
+    cpop::Cpop,
+    heft::{Heft, HeftDown},
+    Scheduler,
+};
+use ceft::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("schedulers");
+    for &(n, p) in &[(128usize, 8usize), (1024, 8), (1024, 32)] {
+        let plat = Platform::uniform(p, 1.0, 0.0);
+        let inst = generate(
+            &RggParams {
+                n,
+                out_degree: 4,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 50.0,
+                gamma: 0.25,
+            },
+            &CostModel::Classic { beta: 0.5 },
+            &plat,
+            7,
+        );
+        let algos: [&dyn Scheduler; 6] = [
+            &Cpop,
+            &Heft,
+            &CeftCpop,
+            &HeftDown,
+            &CeftHeftUp,
+            &CeftHeftDown,
+        ];
+        for a in algos {
+            b.case_with_elements(
+                &format!("{}/n{n}_p{p}", a.name()),
+                Some(n as u64),
+                || {
+                    black_box(a.schedule(&inst.graph, &plat, &inst.comp));
+                },
+            );
+        }
+    }
+    b.save_csv();
+}

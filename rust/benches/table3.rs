@@ -1,0 +1,26 @@
+//! Bench: the Table-3 pipeline — one full experiment cell (generate →
+//! all CP algorithms → all 6 schedulers → all metrics) per workload family.
+//! This is the unit of work the coordinator fans out 86,400× at full scale;
+//! its wall-clock bounds the whole reproduction.
+
+use ceft::exp::cells::{grid, Scale, Workload};
+use ceft::exp::run::run_cell;
+use ceft::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("table3_cell");
+    for wl in Workload::ALL {
+        let mut cell = grid(wl, Scale::Smoke)[0];
+        cell.n = 256;
+        cell.p = 8;
+        b.case(&format!("{}/n256_p8", wl.name()), || {
+            black_box(run_cell(&cell));
+        });
+        let mut big = cell;
+        big.n = 1024;
+        b.case(&format!("{}/n1024_p8", wl.name()), || {
+            black_box(run_cell(&big));
+        });
+    }
+    b.save_csv();
+}

@@ -1,0 +1,320 @@
+//! Layer-3 coordinator: experiment orchestration.
+//!
+//! The coordinator owns the mapping from paper artifact ids (`table3`,
+//! `fig7` … `fig20`) to the sweeps that produce them, runs those sweeps on
+//! a worker pool, caches rows so figures sharing a sweep don't recompute
+//! it, and writes CSV + ASCII outputs. The `repro` binary and the
+//! `paper_experiments` example are thin shells over this module.
+
+use crate::exp::cells::{grid, realworld_grid, RealWorld, Scale, Workload};
+use crate::exp::figures;
+use crate::exp::run::{run_realworld_sweep, run_sweep, Row};
+use crate::util::csv::Table;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// All experiment ids the coordinator can produce.
+pub const EXPERIMENT_IDS: [&str; 17] = [
+    "table3", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
+    "fig16", "fig17", "fig18", "fig19", "fig20", "breakdown", "all",
+];
+
+/// Orchestrates sweeps and caches their results.
+pub struct Coordinator {
+    /// worker threads for sweeps
+    pub threads: usize,
+    /// sweep scale
+    pub scale: Scale,
+    /// output directory for CSV files
+    pub out_dir: PathBuf,
+    /// print progress to stderr
+    pub verbose: bool,
+    rgg_cache: HashMap<Workload, Vec<Row>>,
+    rw_cache: HashMap<RealWorld, Vec<Row>>,
+}
+
+/// One produced artifact: output file stem + the table.
+pub struct Produced {
+    /// file stem, e.g. `fig10_RGG-high`
+    pub name: String,
+    /// the data
+    pub table: Table,
+}
+
+impl Coordinator {
+    /// New coordinator.
+    pub fn new(threads: usize, scale: Scale, out_dir: PathBuf, verbose: bool) -> Self {
+        Self {
+            threads,
+            scale,
+            out_dir,
+            verbose,
+            rgg_cache: HashMap::new(),
+            rw_cache: HashMap::new(),
+        }
+    }
+
+    /// Rows for one RGG workload (cached).
+    pub fn rgg_rows(&mut self, wl: Workload) -> &[Row] {
+        if !self.rgg_cache.contains_key(&wl) {
+            let cells = grid(wl, self.scale);
+            if self.verbose {
+                eprintln!("sweep {} ({} cells)...", wl.name(), cells.len());
+            }
+            let rows = run_sweep(&cells, self.threads, self.verbose);
+            self.rgg_cache.insert(wl, rows);
+        }
+        &self.rgg_cache[&wl]
+    }
+
+    /// Rows for one real-world family (cached).
+    pub fn rw_rows(&mut self, fam: RealWorld) -> &[Row] {
+        if !self.rw_cache.contains_key(&fam) {
+            let cells = realworld_grid(fam, self.scale);
+            if self.verbose {
+                eprintln!("sweep {} ({} cells)...", fam.name(), cells.len());
+            }
+            let rows = run_realworld_sweep(&cells, self.threads, self.verbose);
+            self.rw_cache.insert(fam, rows);
+        }
+        &self.rw_cache[&fam]
+    }
+
+    fn all_rgg_rows(&mut self) -> Vec<Row> {
+        let mut rows = Vec::new();
+        for wl in Workload::ALL {
+            rows.extend(self.rgg_rows(wl).to_vec());
+        }
+        rows
+    }
+
+    /// Produce one experiment id (possibly several tables).
+    pub fn produce(&mut self, id: &str) -> Vec<Produced> {
+        match id {
+            "table3" => {
+                let rows = self.all_rgg_rows();
+                vec![Produced {
+                    name: "table3".into(),
+                    table: figures::table3(&rows),
+                }]
+            }
+            "fig7" => {
+                let mut out = Vec::new();
+                for wl in [Workload::RggClassic, Workload::RggHigh] {
+                    let rows = self.rgg_rows(wl).to_vec();
+                    out.push(Produced {
+                        name: format!("fig7_{}", wl.name()),
+                        table: figures::fig7(&rows),
+                    });
+                }
+                out
+            }
+            "fig8" => {
+                let rows = self.rgg_rows(Workload::RggMedium).to_vec();
+                vec![Produced {
+                    name: "fig8_RGG-medium".into(),
+                    table: figures::fig8(&rows),
+                }]
+            }
+            "fig9" => {
+                let rows = self.rgg_rows(Workload::RggHigh).to_vec();
+                vec![Produced {
+                    name: "fig9_RGG-high".into(),
+                    table: figures::fig9(&rows),
+                }]
+            }
+            "fig10" | "fig11" | "fig12" | "fig19" | "fig20" => {
+                let f: fn(&[Row]) -> Table = match id {
+                    "fig10" => figures::fig10,
+                    "fig11" => figures::fig11,
+                    "fig12" => figures::fig12,
+                    "fig19" => figures::fig19,
+                    _ => figures::fig20,
+                };
+                let mut out = Vec::new();
+                for wl in Workload::ALL {
+                    let rows = self.rgg_rows(wl).to_vec();
+                    out.push(Produced {
+                        name: format!("{id}_{}", wl.name()),
+                        table: f(&rows),
+                    });
+                }
+                out
+            }
+            "fig13" => {
+                let rows = self.rgg_rows(Workload::RggClassic).to_vec();
+                vec![
+                    Produced {
+                        name: "fig13a_slr_vs_alpha".into(),
+                        table: figures::fig13a(&rows),
+                    },
+                    Produced {
+                        name: "fig13b_slr_vs_ccr".into(),
+                        table: figures::fig13b(&rows),
+                    },
+                    Produced {
+                        name: "fig13c_slack_vs_ccr".into(),
+                        table: figures::fig13c(&rows),
+                    },
+                ]
+            }
+            "fig14" => {
+                let rows = self.rgg_rows(Workload::RggClassic).to_vec();
+                vec![
+                    Produced {
+                        name: "fig14a_slr_vs_n".into(),
+                        table: figures::fig14a(&rows),
+                    },
+                    Produced {
+                        name: "fig14b_slr_vs_p".into(),
+                        table: figures::fig14b(&rows),
+                    },
+                ]
+            }
+            "fig15" | "fig16" | "fig17" | "fig18" => {
+                // 15: medium SLR; 16: classic speedup; 17: classic SLR;
+                // 18: medium speedup
+                let medium = id == "fig15" || id == "fig18";
+                let slr = id == "fig15" || id == "fig17";
+                let mut out = Vec::new();
+                for fam in RealWorld::ALL {
+                    let rows: Vec<Row> = self
+                        .rw_rows(fam)
+                        .iter()
+                        .filter(|r| r.workload.ends_with(if medium { "medium" } else { "classic" }))
+                        .cloned()
+                        .collect();
+                    let table = if slr {
+                        figures::fig_realworld_slr(&rows)
+                    } else {
+                        figures::fig_realworld_speedup(&rows)
+                    };
+                    out.push(Produced {
+                        name: format!(
+                            "{id}_{}_{}",
+                            fam.name(),
+                            if medium { "medium" } else { "classic" }
+                        ),
+                        table,
+                    });
+                }
+                out
+            }
+            "breakdown" => {
+                let rows = self.rgg_rows(Workload::RggHigh).to_vec();
+                vec![
+                    Produced {
+                        name: "breakdown_ccr".into(),
+                        table: figures::table3_breakdown(&rows, "ccr", |r| r.ccr),
+                    },
+                    Produced {
+                        name: "breakdown_n".into(),
+                        table: figures::table3_breakdown(&rows, "n", |r| r.n as f64),
+                    },
+                    Produced {
+                        name: "breakdown_p".into(),
+                        table: figures::table3_breakdown(&rows, "p", |r| r.p as f64),
+                    },
+                    Produced {
+                        name: "breakdown_beta".into(),
+                        table: figures::table3_breakdown(&rows, "beta", |r| r.beta_pct),
+                    },
+                ]
+            }
+            "all" => {
+                let mut out = Vec::new();
+                for id in EXPERIMENT_IDS.iter().filter(|&&i| i != "all") {
+                    out.extend(self.produce(id));
+                }
+                // also dump raw rows for post-hoc analysis
+                let rows = self.all_rgg_rows();
+                out.push(Produced {
+                    name: "raw_rgg".into(),
+                    table: figures::raw_rows(&rows),
+                });
+                out
+            }
+            other => panic!("unknown experiment id {other:?} (see EXPERIMENT_IDS)"),
+        }
+    }
+
+    /// Produce an experiment and write its tables to `out_dir` as CSV.
+    /// Returns the produced tables (for printing).
+    pub fn produce_and_write(&mut self, id: &str) -> std::io::Result<Vec<Produced>> {
+        let produced = self.produce(id);
+        std::fs::create_dir_all(&self.out_dir)?;
+        for p in &produced {
+            let path = self.out_dir.join(format!("{}.csv", p.name));
+            p.table.write_file(&path)?;
+            if self.verbose {
+                eprintln!("wrote {}", path.display());
+            }
+        }
+        Ok(produced)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_coordinator() -> Coordinator {
+        Coordinator::new(
+            2,
+            Scale::Smoke,
+            std::env::temp_dir().join("ceft-coord-test"),
+            false,
+        )
+    }
+
+    #[test]
+    fn table3_produces_one_table() {
+        let mut c = smoke_coordinator();
+        let out = c.produce("table3");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].table.rows.len(), 12); // 4 workloads x 3 outcomes
+    }
+
+    #[test]
+    fn cache_prevents_recomputation() {
+        let mut c = smoke_coordinator();
+        let _ = c.produce("fig10");
+        let before = c.rgg_cache.len();
+        let _ = c.produce("fig11"); // same sweeps
+        assert_eq!(c.rgg_cache.len(), before);
+    }
+
+    #[test]
+    fn fig13_produces_three_tables() {
+        let mut c = smoke_coordinator();
+        let out = c.produce("fig13");
+        assert_eq!(out.len(), 3);
+        assert!(out[0].name.contains("alpha"));
+    }
+
+    #[test]
+    fn realworld_figures_filter_variant() {
+        let mut c = smoke_coordinator();
+        let out = c.produce("fig15");
+        assert_eq!(out.len(), 4);
+        for p in &out {
+            assert!(p.name.contains("medium"));
+            assert!(!p.table.rows.is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown experiment id")]
+    fn unknown_id_panics() {
+        smoke_coordinator().produce("fig99");
+    }
+
+    #[test]
+    fn write_creates_csv_files() {
+        let dir = std::env::temp_dir().join(format!("ceft-coord-{}", std::process::id()));
+        let mut c = Coordinator::new(2, Scale::Smoke, dir.clone(), false);
+        c.produce_and_write("fig8").unwrap();
+        assert!(dir.join("fig8_RGG-medium.csv").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,92 @@
+//! `CP_MIN` — the minimum-computation critical path (Definition 4), used as
+//! the denominator of the schedule length ratio (eq. 9).
+//!
+//! The longest entry→exit path when each task is charged
+//! `min_p C_comp(t, p)` and communication is ignored. No valid schedule can
+//! beat this value, so `SLR >= 1` always.
+
+use crate::graph::TaskGraph;
+use crate::platform::Costs;
+
+/// Sum of minimum computation costs along the minimum-computation critical
+/// path — eq. 9's denominator.
+pub fn cp_min_cost(graph: &TaskGraph, comp: &[f64], p: usize) -> f64 {
+    let costs = Costs { comp, p };
+    let node_w: Vec<f64> = (0..graph.num_tasks()).map(|t| costs.min(t)).collect();
+    graph.longest_path(&node_w, |_, _, _| 0.0)
+}
+
+/// The tasks on the minimum-computation critical path (for diagnostics).
+pub fn cp_min_tasks(graph: &TaskGraph, comp: &[f64], p: usize) -> Vec<usize> {
+    let costs = Costs { comp, p };
+    let v = graph.num_tasks();
+    let mut dist = vec![0f64; v];
+    let mut pred: Vec<Option<usize>> = vec![None; v];
+    for &t in graph.topo_order() {
+        for &(k, _) in graph.preds(t) {
+            if pred[t].is_none() || dist[k] > dist[pred[t].unwrap()] {
+                pred[t] = Some(k);
+            }
+        }
+        dist[t] = pred[t].map(|k| dist[k]).unwrap_or(0.0) + costs.min(t);
+    }
+    let end = graph
+        .sinks()
+        .into_iter()
+        .max_by(|&a, &b| dist[a].partial_cmp(&dist[b]).unwrap())
+        .expect("graph has sinks");
+    let mut tasks = vec![end];
+    let mut t = end;
+    while let Some(k) = pred[t] {
+        tasks.push(k);
+        t = k;
+    }
+    tasks.reverse();
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+
+    #[test]
+    fn chain_sums_minima() {
+        let g = TaskGraph::from_edges(3, &[(0, 1, 100.0), (1, 2, 100.0)]);
+        let comp = vec![5.0, 2.0, 4.0, 7.0, 1.0, 3.0];
+        assert_eq!(cp_min_cost(&g, &comp, 2), 2.0 + 4.0 + 1.0);
+        assert_eq!(cp_min_tasks(&g, &comp, 2), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn picks_heavier_branch() {
+        let g = TaskGraph::from_edges(
+            4,
+            &[(0, 1, 1.0), (0, 2, 1.0), (1, 3, 1.0), (2, 3, 1.0)],
+        );
+        let comp = vec![1.0, 1.0, 9.0, 9.0, 2.0, 2.0, 1.0, 1.0];
+        assert_eq!(cp_min_cost(&g, &comp, 2), 1.0 + 9.0 + 1.0);
+        assert_eq!(cp_min_tasks(&g, &comp, 2), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn cpmin_is_a_lower_bound_for_ceft() {
+        let inst = crate::graph::generator::generate(
+            &crate::graph::generator::RggParams {
+                n: 120,
+                out_degree: 4,
+                ccr: 2.0,
+                alpha: 0.75,
+                beta_pct: 95.0,
+                gamma: 0.5,
+            },
+            &crate::platform::CostModel::Classic { beta: 0.95 },
+            &crate::platform::Platform::uniform(4, 1.0, 0.0),
+            41,
+        );
+        let plat = crate::platform::Platform::uniform(4, 1.0, 0.0);
+        let ceft = crate::cp::ceft::find_critical_path(&inst.graph, &plat, &inst.comp);
+        let cpmin = cp_min_cost(&inst.graph, &inst.comp, 4);
+        assert!(cpmin <= ceft.length + 1e-9);
+    }
+}

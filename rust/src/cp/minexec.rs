@@ -1,0 +1,143 @@
+//! The minimum-execution-time critical path (§3 of the paper).
+//!
+//! When communication costs are ignored (or assumed allocation-independent),
+//! the optimal per-task choice is simply the fastest class, and the standard
+//! homogeneous longest-path algorithm applies. The paper notes this simple
+//! strategy is *more* accurate than averaging yet had not been proposed
+//! before. We implement it both as a baseline and as an ablation for the
+//! experiment harness.
+
+use crate::graph::TaskGraph;
+use crate::platform::{Costs, Platform};
+
+/// Result of the min-exec critical path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MinExecPath {
+    /// path length (min execution costs + mean comm costs along the path)
+    pub length: f64,
+    /// tasks on the path
+    pub tasks: Vec<usize>,
+    /// the fastest class chosen for each path task
+    pub classes: Vec<usize>,
+}
+
+/// Find the longest path when every task is charged its *minimum* execution
+/// cost. `include_mean_comm` selects whether edges are charged the mean
+/// communication cost (the Topcuoglu-style variant) or zero (the pure
+/// zero-comm variant from §3).
+pub fn min_exec_critical_path(
+    graph: &TaskGraph,
+    platform: &Platform,
+    comp: &[f64],
+    include_mean_comm: bool,
+) -> MinExecPath {
+    let p = platform.num_classes();
+    let costs = Costs { comp, p };
+    let v = graph.num_tasks();
+    let mut dist = vec![0f64; v];
+    let mut pred: Vec<Option<usize>> = vec![None; v];
+    for &t in graph.topo_order() {
+        let mut best = 0f64;
+        let mut best_pred = None;
+        for &(k, data) in graph.preds(t) {
+            let comm = if include_mean_comm {
+                platform.mean_comm_cost(data)
+            } else {
+                0.0
+            };
+            let cand = dist[k] + comm;
+            if best_pred.is_none() || cand > best {
+                best = cand;
+                best_pred = Some(k);
+            }
+        }
+        dist[t] = best + costs.min(t);
+        pred[t] = best_pred;
+    }
+    // best sink
+    let end = graph
+        .sinks()
+        .into_iter()
+        .max_by(|&a, &b| dist[a].partial_cmp(&dist[b]).unwrap())
+        .expect("graph has sinks");
+    let mut tasks = vec![end];
+    let mut t = end;
+    while let Some(k) = pred[t] {
+        tasks.push(k);
+        t = k;
+    }
+    tasks.reverse();
+    let classes = tasks.iter().map(|&t| costs.argmin(t)).collect();
+    MinExecPath {
+        length: dist[end],
+        tasks,
+        classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::platform::Platform;
+
+    #[test]
+    fn picks_fastest_class_per_task() {
+        let g = TaskGraph::from_edges(2, &[(0, 1, 10.0)]);
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let comp = vec![5.0, 2.0, 3.0, 9.0];
+        let r = min_exec_critical_path(&g, &plat, &comp, false);
+        assert_eq!(r.length, 2.0 + 3.0);
+        assert_eq!(r.classes, vec![1, 0]);
+        assert_eq!(r.tasks, vec![0, 1]);
+    }
+
+    #[test]
+    fn mean_comm_variant_adds_edges() {
+        let g = TaskGraph::from_edges(2, &[(0, 1, 10.0)]);
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let comp = vec![5.0, 2.0, 3.0, 9.0];
+        let r = min_exec_critical_path(&g, &plat, &comp, true);
+        assert_eq!(r.length, 2.0 + 10.0 + 3.0);
+    }
+
+    #[test]
+    fn tracks_the_longer_branch() {
+        let g = TaskGraph::from_edges(
+            4,
+            &[(0, 1, 0.0), (0, 2, 0.0), (1, 3, 0.0), (2, 3, 0.0)],
+        );
+        let plat = Platform::uniform(1, 1.0, 0.0);
+        let comp = vec![1.0, 10.0, 2.0, 1.0];
+        let r = min_exec_critical_path(&g, &plat, &comp, false);
+        assert_eq!(r.tasks, vec![0, 1, 3]);
+        assert_eq!(r.length, 12.0);
+    }
+
+    #[test]
+    fn min_exec_lower_bounds_ceft() {
+        // zero-comm min-exec CP length <= CEFT CP length on the same instance
+        let inst = crate::graph::generator::generate(
+            &crate::graph::generator::RggParams {
+                n: 150,
+                out_degree: 3,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 75.0,
+                gamma: 0.2,
+            },
+            &crate::platform::CostModel::Classic { beta: 0.75 },
+            &Platform::uniform(4, 1.0, 0.0),
+            31,
+        );
+        let plat = Platform::uniform(4, 1.0, 0.0);
+        let me = min_exec_critical_path(&inst.graph, &plat, &inst.comp, false);
+        let ceft = crate::cp::ceft::find_critical_path(&inst.graph, &plat, &inst.comp);
+        assert!(
+            me.length <= ceft.length + 1e-9,
+            "minexec {} > ceft {}",
+            me.length,
+            ceft.length
+        );
+    }
+}

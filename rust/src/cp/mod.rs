@@ -1,0 +1,20 @@
+//! Critical-path algorithms for heterogeneous machines.
+//!
+//! * [`ceft`] — the paper's contribution: the Critical Earliest Finish Time
+//!   dynamic program (Algorithm 1) that finds the critical path *together
+//!   with* the partial assignment of its tasks to processor classes.
+//! * [`ranks`] — the mean-value upward/downward ranks of HEFT/CPOP and
+//!   CPOP's critical-path extraction (Algorithm 2 lines 2–13).
+//! * [`minexec`] — the "every task on its fastest processor, zero comm"
+//!   critical path that §3 of the paper proposes as a better simple
+//!   baseline.
+//! * [`cpmin`] — `CP_MIN`, the minimum-computation critical path used as
+//!   the SLR denominator (eq. 9).
+//! * [`exact`] — exponential brute-force oracles for tiny graphs
+//!   (duplication-allowed vs no-duplication critical paths, §4.1).
+
+pub mod ceft;
+pub mod exact;
+pub mod cpmin;
+pub mod minexec;
+pub mod ranks;

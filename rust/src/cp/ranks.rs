@@ -1,0 +1,240 @@
+//! Mean-value ranking functions and CPOP's critical path (Algorithm 2,
+//! lines 2–13).
+//!
+//! HEFT and CPOP scalarise the heterogeneous cost structure up front:
+//! each task gets its *average* execution cost over classes, each edge its
+//! *average* communication cost over distinct class pairs. The paper's
+//! central claim is that the critical paths extracted from these averages
+//! are misleading once heterogeneity is real; this module implements the
+//! averaging machinery faithfully so the comparison is fair.
+
+use crate::graph::TaskGraph;
+use crate::platform::{Costs, Platform};
+
+/// Relative epsilon used when testing `priority(t) == |CP|` (floating-point
+/// equality of sums of identical terms — exact in theory, guarded anyway).
+const PRIO_EPS: f64 = 1e-9;
+
+/// Mean-value view of an instance: scalar task and edge costs.
+#[derive(Clone, Debug)]
+pub struct MeanCosts {
+    /// mean execution cost per task
+    pub wbar: Vec<f64>,
+    /// mean communication cost per edge, aligned with `graph.edges()` order;
+    /// accessed through pred/succ adjacency instead in the sweeps below
+    pub p: usize,
+}
+
+/// Upward rank: `rank_u(t) = w̄(t) + max_{s ∈ succ(t)} ( c̄(t,s) + rank_u(s) )`.
+pub fn rank_upward(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Vec<f64> {
+    let costs = Costs {
+        comp,
+        p: platform.num_classes(),
+    };
+    let v = graph.num_tasks();
+    let mut rank = vec![0f64; v];
+    for &t in graph.topo_order().iter().rev() {
+        let mut best = 0f64;
+        for &(s, data) in graph.succs(t) {
+            best = best.max(platform.mean_comm_cost(data) + rank[s]);
+        }
+        rank[t] = costs.mean(t) + best;
+    }
+    rank
+}
+
+/// Downward rank: `rank_d(t) = max_{k ∈ pred(t)} ( rank_d(k) + w̄(k) + c̄(k,t) )`,
+/// zero for entry tasks.
+pub fn rank_downward(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Vec<f64> {
+    let costs = Costs {
+        comp,
+        p: platform.num_classes(),
+    };
+    let v = graph.num_tasks();
+    let mut rank = vec![0f64; v];
+    for &t in graph.topo_order() {
+        let mut best = 0f64;
+        let mut any = false;
+        for &(k, data) in graph.preds(t) {
+            any = true;
+            best = best.max(rank[k] + costs.mean(k) + platform.mean_comm_cost(data));
+        }
+        rank[t] = if any { best } else { 0.0 };
+    }
+    rank
+}
+
+/// CPOP's critical path (Algorithm 2 lines 5–12): `priority = rank_u +
+/// rank_d`; `|CP| = priority(entry)`; walk from the entry picking the
+/// successor whose priority equals `|CP|`.
+///
+/// Returns `(cp_tasks, cp_length_estimate)` where the estimate is `|CP|`,
+/// CPOP's mean-value critical-path length — the CPL the paper compares CEFT
+/// against in Table 3.
+///
+/// Graphs with multiple entries take the max-priority entry (the paper's
+/// generators produce single-entry graphs; MD does not, so we generalise the
+/// same way `rank_d` does).
+pub fn cpop_critical_path(
+    graph: &TaskGraph,
+    platform: &Platform,
+    comp: &[f64],
+) -> (Vec<usize>, f64) {
+    let up = rank_upward(graph, platform, comp);
+    let down = rank_downward(graph, platform, comp);
+    cpop_critical_path_from_ranks(graph, &up, &down)
+}
+
+/// CP extraction from precomputed ranks (shared with the CEFT-ranked
+/// variants in §8.2).
+pub fn cpop_critical_path_from_ranks(
+    graph: &TaskGraph,
+    up: &[f64],
+    down: &[f64],
+) -> (Vec<usize>, f64) {
+    let prio: Vec<f64> = up.iter().zip(down).map(|(u, d)| u + d).collect();
+    let entry = graph
+        .sources()
+        .into_iter()
+        .max_by(|&a, &b| prio[a].partial_cmp(&prio[b]).unwrap())
+        .expect("graph has sources");
+    let cp_len = prio[entry];
+    let mut set = vec![entry];
+    let mut t = entry;
+    while graph.out_degree(t) > 0 {
+        // successor with priority == |CP| (relative epsilon); fall back to
+        // the max-priority successor if float drift breaks exact equality
+        let mut chosen = None;
+        let mut fallback = graph.succs(t)[0].0;
+        for &(s, _) in graph.succs(t) {
+            if prio[s] > prio[fallback] {
+                fallback = s;
+            }
+            let eq = (prio[s] - cp_len).abs() <= PRIO_EPS * cp_len.abs().max(1.0);
+            if eq && chosen.is_none() {
+                chosen = Some(s);
+            }
+        }
+        t = chosen.unwrap_or(fallback);
+        set.push(t);
+    }
+    (set, cp_len)
+}
+
+/// The processor that minimises the critical path's total execution time
+/// when the whole path is placed on it (Algorithm 2 line 13).
+pub fn cpop_cp_processor(cp: &[usize], comp: &[f64], p: usize) -> usize {
+    let costs = Costs { comp, p };
+    let mut best = 0usize;
+    let mut best_sum = f64::INFINITY;
+    for j in 0..p {
+        let sum: f64 = cp.iter().map(|&t| costs.get(t, j)).sum();
+        if sum < best_sum {
+            best_sum = sum;
+            best = j;
+        }
+    }
+    best
+}
+
+/// Realised length of CPOP's critical path: the path's tasks executed
+/// back-to-back on the single chosen processor (zero internal comm).
+pub fn cpop_realized_cp_length(cp: &[usize], comp: &[f64], p: usize) -> f64 {
+    let costs = Costs { comp, p };
+    let j = cpop_cp_processor(cp, comp, p);
+    cp.iter().map(|&t| costs.get(t, j)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::platform::Platform;
+
+    fn chain3() -> (TaskGraph, Platform, Vec<f64>) {
+        let g = TaskGraph::from_edges(3, &[(0, 1, 10.0), (1, 2, 20.0)]);
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        // means: 2, 4, 6
+        let comp = vec![1.0, 3.0, 3.0, 5.0, 5.0, 7.0];
+        (g, plat, comp)
+    }
+
+    #[test]
+    fn rank_u_on_chain() {
+        let (g, plat, comp) = chain3();
+        let up = rank_upward(&g, &plat, &comp);
+        // rank_u(2)=6; rank_u(1)=4+20+6=30; rank_u(0)=2+10+30=42
+        assert_eq!(up, vec![42.0, 30.0, 6.0]);
+    }
+
+    #[test]
+    fn rank_d_on_chain() {
+        let (g, plat, comp) = chain3();
+        let down = rank_downward(&g, &plat, &comp);
+        // rank_d(0)=0; rank_d(1)=0+2+10=12; rank_d(2)=12+4+20=36
+        assert_eq!(down, vec![0.0, 12.0, 36.0]);
+    }
+
+    #[test]
+    fn priority_constant_along_cp() {
+        let (g, plat, comp) = chain3();
+        let (cp, len) = cpop_critical_path(&g, &plat, &comp);
+        assert_eq!(cp, vec![0, 1, 2]);
+        assert_eq!(len, 42.0);
+    }
+
+    #[test]
+    fn cp_walks_the_heavy_branch() {
+        // 0 -> 1 -> 3 and 0 -> 2 -> 3; task 2 much heavier on average
+        let g = TaskGraph::from_edges(
+            4,
+            &[(0, 1, 1.0), (0, 2, 1.0), (1, 3, 1.0), (2, 3, 1.0)],
+        );
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        #[rustfmt::skip]
+        let comp = vec![
+            2.0, 2.0,
+            1.0, 1.0,
+            50.0, 50.0,
+            2.0, 2.0,
+        ];
+        let (cp, _) = cpop_critical_path(&g, &plat, &comp);
+        assert_eq!(cp, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn cp_processor_minimises_sum() {
+        let comp = vec![
+            1.0, 10.0, //
+            1.0, 10.0, //
+            1.0, 10.0,
+        ];
+        assert_eq!(cpop_cp_processor(&[0, 1, 2], &comp, 2), 0);
+        assert_eq!(cpop_realized_cp_length(&[0, 1, 2], &comp, 2), 3.0);
+    }
+
+    #[test]
+    fn multi_entry_uses_max_priority_entry() {
+        // two entries: 0 (light) and 1 (heavy) both -> 2
+        let g = TaskGraph::from_edges(3, &[(0, 2, 1.0), (1, 2, 1.0)]);
+        let plat = Platform::uniform(1, 1.0, 0.0);
+        let comp = vec![1.0, 50.0, 2.0];
+        let (cp, len) = cpop_critical_path(&g, &plat, &comp);
+        assert_eq!(cp, vec![1, 2]);
+        assert_eq!(len, 52.0);
+    }
+
+    #[test]
+    fn single_class_ranks_are_exact_longest_paths() {
+        // with P=1 the mean is the true cost: rank_u(entry) = true CP length
+        let g = TaskGraph::from_edges(
+            4,
+            &[(0, 1, 5.0), (0, 2, 1.0), (1, 3, 5.0), (2, 3, 1.0)],
+        );
+        let plat = Platform::uniform(1, 1.0, 0.0);
+        let comp = vec![1.0, 2.0, 3.0, 4.0];
+        let up = rank_upward(&g, &plat, &comp);
+        // P=1 => mean comm = 0 (co-located), path = node weights only
+        assert_eq!(up[0], 1.0 + 3.0 + 4.0);
+    }
+}

@@ -1,0 +1,375 @@
+//! Experiment grids (§7.1–§7.2 of the paper).
+//!
+//! The paper's full factorial: `n ∈ {128..16384}`, out-degree `{2,4,8}`,
+//! CCR `{0.001..10}`, α `{0.1..1.0}`, β `{10..95}`, γ `{0.1..0.95}`,
+//! processor graphs `p ∈ {2..64}` — 86,400 experiments per workload family,
+//! 345,600 total. [`Scale`] selects the full grid or two reduced grids that
+//! preserve every swept dimension (see DESIGN.md §6 for the substitution
+//! argument).
+
+use crate::platform::CostModel;
+
+/// Workload family (§7.1): how execution-cost heterogeneity is generated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// eq. 5, the Topcuoglu-style β-band heterogeneity
+    RggClassic,
+    /// eq. 6 with I₂ = [1e3, 1e4]
+    RggLow,
+    /// eq. 6 with I₂ = [1e4, 1e5]
+    RggMedium,
+    /// eq. 6 with I₂ = [1e5, 1e6]
+    RggHigh,
+}
+
+impl Workload {
+    /// All four families, Table 3 order.
+    pub const ALL: [Workload; 4] = [
+        Workload::RggClassic,
+        Workload::RggLow,
+        Workload::RggMedium,
+        Workload::RggHigh,
+    ];
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::RggClassic => "RGG-classic",
+            Workload::RggLow => "RGG-low",
+            Workload::RggMedium => "RGG-medium",
+            Workload::RggHigh => "RGG-high",
+        }
+    }
+
+    /// Stable id used in seed derivation.
+    pub fn id(&self) -> u64 {
+        match self {
+            Workload::RggClassic => 0,
+            Workload::RggLow => 1,
+            Workload::RggMedium => 2,
+            Workload::RggHigh => 3,
+        }
+    }
+
+    /// The cost model for a given β percentage.
+    pub fn cost_model(&self, beta_pct: f64) -> CostModel {
+        let beta = beta_pct / 100.0;
+        match self {
+            Workload::RggClassic => CostModel::Classic { beta },
+            Workload::RggLow => CostModel::two_weight_low(beta),
+            Workload::RggMedium => CostModel::two_weight_medium(beta),
+            Workload::RggHigh => CostModel::two_weight_high(beta),
+        }
+    }
+
+    /// Whether the platform needs two-weight class capacities.
+    pub fn needs_two_weight_platform(&self) -> bool {
+        !matches!(self, Workload::RggClassic)
+    }
+}
+
+/// Sweep scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// the paper's exact grid (86,400 cells per workload family)
+    Full,
+    /// every dimension swept, reduced cardinality (default; minutes)
+    PaperSmall,
+    /// tiny grid for CI and unit tests (seconds)
+    Smoke,
+}
+
+impl Scale {
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Result<Scale, String> {
+        match s {
+            "full" => Ok(Scale::Full),
+            "paper-small" | "small" => Ok(Scale::PaperSmall),
+            "smoke" => Ok(Scale::Smoke),
+            other => Err(format!("unknown scale {other:?} (full|paper-small|smoke)")),
+        }
+    }
+
+    fn ns(&self) -> Vec<usize> {
+        match self {
+            Scale::Full => vec![128, 256, 512, 1024, 2048, 4096, 8192, 16384],
+            Scale::PaperSmall => vec![128, 512, 2048],
+            Scale::Smoke => vec![64],
+        }
+    }
+
+    fn out_degrees(&self) -> Vec<usize> {
+        match self {
+            Scale::Full => vec![2, 4, 8],
+            Scale::PaperSmall => vec![4],
+            Scale::Smoke => vec![3],
+        }
+    }
+
+    fn ccrs(&self) -> Vec<f64> {
+        match self {
+            Scale::Full => vec![0.001, 0.01, 0.1, 1.0, 5.0, 10.0],
+            Scale::PaperSmall => vec![0.01, 0.1, 1.0, 10.0],
+            Scale::Smoke => vec![1.0],
+        }
+    }
+
+    fn alphas(&self) -> Vec<f64> {
+        match self {
+            Scale::Full => vec![0.1, 0.25, 0.75, 1.0],
+            Scale::PaperSmall => vec![0.1, 0.25, 0.75, 1.0],
+            Scale::Smoke => vec![0.5],
+        }
+    }
+
+    fn betas(&self) -> Vec<f64> {
+        match self {
+            Scale::Full => vec![10.0, 25.0, 50.0, 75.0, 95.0],
+            Scale::PaperSmall => vec![10.0, 25.0, 50.0, 75.0, 95.0],
+            Scale::Smoke => vec![50.0],
+        }
+    }
+
+    fn gammas(&self) -> Vec<f64> {
+        match self {
+            Scale::Full => vec![0.1, 0.25, 0.5, 0.75, 0.95],
+            Scale::PaperSmall => vec![0.25, 0.75],
+            Scale::Smoke => vec![0.25],
+        }
+    }
+
+    fn procs(&self) -> Vec<usize> {
+        match self {
+            Scale::Full => vec![2, 4, 8, 16, 32, 64],
+            Scale::PaperSmall => vec![2, 4, 8, 32],
+            Scale::Smoke => vec![4],
+        }
+    }
+}
+
+/// One experiment cell: an (application graph spec, processor graph) pair.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    /// workload family
+    pub workload: Workload,
+    /// number of tasks
+    pub n: usize,
+    /// average out-degree
+    pub out_degree: usize,
+    /// communication-to-computation ratio
+    pub ccr: f64,
+    /// shape α
+    pub alpha: f64,
+    /// heterogeneity β (percent)
+    pub beta_pct: f64,
+    /// skewness γ
+    pub gamma: f64,
+    /// number of processors (classes)
+    pub p: usize,
+    /// cell index within the grid (seed derivation)
+    pub index: u64,
+}
+
+/// The RGG grid for one workload family at the given scale.
+pub fn grid(workload: Workload, scale: Scale) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    let mut index = 0u64;
+    for &n in &scale.ns() {
+        for &out_degree in &scale.out_degrees() {
+            for &ccr in &scale.ccrs() {
+                for &alpha in &scale.alphas() {
+                    for &beta_pct in &scale.betas() {
+                        for &gamma in &scale.gammas() {
+                            for &p in &scale.procs() {
+                                cells.push(Cell {
+                                    workload,
+                                    n,
+                                    out_degree,
+                                    ccr,
+                                    alpha,
+                                    beta_pct,
+                                    gamma,
+                                    p,
+                                    index,
+                                });
+                                index += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    cells
+}
+
+/// Real-world benchmark family (§7.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RealWorld {
+    /// Fast Fourier Transform
+    Fft,
+    /// Gaussian elimination
+    Ge,
+    /// Molecular dynamics (fixed 41-task graph)
+    Md,
+    /// Epigenomics workflow
+    Ew,
+}
+
+impl RealWorld {
+    /// All four families, paper order.
+    pub const ALL: [RealWorld; 4] = [
+        RealWorld::Fft,
+        RealWorld::Ge,
+        RealWorld::Md,
+        RealWorld::Ew,
+    ];
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RealWorld::Fft => "FFT",
+            RealWorld::Ge => "GE",
+            RealWorld::Md => "MD",
+            RealWorld::Ew => "EW",
+        }
+    }
+
+    /// Stable id for seeding (offset past RGG ids).
+    pub fn id(&self) -> u64 {
+        match self {
+            RealWorld::Fft => 10,
+            RealWorld::Ge => 11,
+            RealWorld::Md => 12,
+            RealWorld::Ew => 13,
+        }
+    }
+
+    /// Structure sizes used per scale (size parameter of the generator).
+    pub fn sizes(&self, scale: Scale) -> Vec<usize> {
+        match (self, scale) {
+            (RealWorld::Fft, Scale::Full) => vec![8, 16, 32, 64],
+            (RealWorld::Fft, Scale::PaperSmall) => vec![8, 16],
+            (RealWorld::Fft, Scale::Smoke) => vec![8],
+            (RealWorld::Ge, Scale::Full) => vec![8, 16, 32, 64],
+            (RealWorld::Ge, Scale::PaperSmall) => vec![8, 16],
+            (RealWorld::Ge, Scale::Smoke) => vec![8],
+            (RealWorld::Md, _) => vec![0], // fixed graph
+            (RealWorld::Ew, Scale::Full) => vec![8, 16, 32, 64],
+            (RealWorld::Ew, Scale::PaperSmall) => vec![8, 16],
+            (RealWorld::Ew, Scale::Smoke) => vec![8],
+        }
+    }
+}
+
+/// One real-world experiment cell.
+#[derive(Clone, Copy, Debug)]
+pub struct RealWorldCell {
+    /// benchmark family
+    pub family: RealWorld,
+    /// generator size parameter (matrix size m, FFT points, EW lanes)
+    pub size: usize,
+    /// CCR
+    pub ccr: f64,
+    /// heterogeneity β (percent)
+    pub beta_pct: f64,
+    /// "classic" (eq. 5) vs "medium" (eq. 6 medium intervals) variant
+    pub medium_variant: bool,
+    /// processors
+    pub p: usize,
+    /// cell index for seeding
+    pub index: u64,
+}
+
+/// The real-world grid (§7.2): CCR ∈ {0.001..10}, β ∈ {10..95}, both cost
+/// variants, the six processor graphs.
+pub fn realworld_grid(family: RealWorld, scale: Scale) -> Vec<RealWorldCell> {
+    let ccrs: Vec<f64> = match scale {
+        Scale::Full => vec![0.001, 0.01, 0.1, 0.5, 1.0, 5.0, 10.0],
+        Scale::PaperSmall => vec![0.1, 1.0, 10.0],
+        Scale::Smoke => vec![1.0],
+    };
+    let betas: Vec<f64> = match scale {
+        Scale::Full => vec![10.0, 25.0, 50.0, 75.0, 95.0],
+        Scale::PaperSmall => vec![10.0, 50.0, 95.0],
+        Scale::Smoke => vec![50.0],
+    };
+    let procs: Vec<usize> = match scale {
+        Scale::Full => vec![2, 4, 8, 16, 32, 64],
+        Scale::PaperSmall => vec![2, 8, 32],
+        Scale::Smoke => vec![4],
+    };
+    let mut cells = Vec::new();
+    let mut index = 0u64;
+    for &size in &family.sizes(scale) {
+        for &ccr in &ccrs {
+            for &beta_pct in &betas {
+                for &medium_variant in &[false, true] {
+                    for &p in &procs {
+                        cells.push(RealWorldCell {
+                            family,
+                            size,
+                            ccr,
+                            beta_pct,
+                            medium_variant,
+                            p,
+                            index,
+                        });
+                        index += 1;
+                    }
+                }
+            }
+        }
+    }
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_grid_matches_paper_cardinality() {
+        let cells = grid(Workload::RggClassic, Scale::Full);
+        // 8 n × 3 o × 6 ccr × 4 α × 5 β × 5 γ × 6 p = 86,400
+        assert_eq!(cells.len(), 86_400);
+    }
+
+    #[test]
+    fn paper_small_is_tractable() {
+        let cells = grid(Workload::RggHigh, Scale::PaperSmall);
+        assert!(cells.len() <= 4000, "got {}", cells.len());
+        assert!(cells.len() >= 500);
+    }
+
+    #[test]
+    fn indices_are_unique() {
+        let cells = grid(Workload::RggLow, Scale::PaperSmall);
+        let mut idx: Vec<u64> = cells.iter().map(|c| c.index).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        assert_eq!(idx.len(), cells.len());
+    }
+
+    #[test]
+    fn scale_parsing() {
+        assert_eq!(Scale::parse("full").unwrap(), Scale::Full);
+        assert_eq!(Scale::parse("paper-small").unwrap(), Scale::PaperSmall);
+        assert_eq!(Scale::parse("smoke").unwrap(), Scale::Smoke);
+        assert!(Scale::parse("nope").is_err());
+    }
+
+    #[test]
+    fn workload_ids_distinct() {
+        let ids: std::collections::HashSet<u64> =
+            Workload::ALL.iter().map(|w| w.id()).collect();
+        assert_eq!(ids.len(), 4);
+    }
+
+    #[test]
+    fn realworld_grid_has_both_variants() {
+        let cells = realworld_grid(RealWorld::Ge, Scale::Smoke);
+        assert!(cells.iter().any(|c| c.medium_variant));
+        assert!(cells.iter().any(|c| !c.medium_variant));
+    }
+}

@@ -1,0 +1,382 @@
+//! Table/figure emitters: turn experiment [`Row`]s into the exact tables
+//! and data series of the paper's evaluation section.
+//!
+//! Each `figN` function returns a [`Table`] whose rows are the data points
+//! of the corresponding paper figure (the figure's x-axis as the first
+//! column, one column per plotted series). `table3` reproduces Table 3
+//! (plus Figures 5 and 6, which are the same data drawn as bars).
+
+use super::run::{Row, ALGOS};
+use crate::metrics::{compare, Cmp, WinTally};
+use crate::util::csv::Table;
+
+/// Relative tolerance for classifying two lengths as "equal".
+pub const EQUAL_EPS: f64 = 1e-6;
+
+fn fmt(v: f64) -> String {
+    if v.abs() >= 1000.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Table 3 (and Figures 5–6): per workload, the percentage of experiments
+/// where CEFT's CPL / CEFT-CPOP's makespan is longer / equal / shorter than
+/// CPOP's.
+pub fn table3(rows: &[Row]) -> Table {
+    let mut table = Table::new(vec![
+        "workload",
+        "experiments",
+        "outcome",
+        "CPL(%)",
+        "makespan(%)",
+    ]);
+    let mut workloads: Vec<String> = Vec::new();
+    for r in rows {
+        if !workloads.contains(&r.workload) {
+            workloads.push(r.workload.clone());
+        }
+    }
+    for wl in &workloads {
+        let mut cpl = WinTally::default();
+        let mut mk = WinTally::default();
+        let mut count = 0u64;
+        for r in rows.iter().filter(|r| &r.workload == wl) {
+            cpl.push(compare(r.cpl_ceft, r.cpl_cpop_realized, EQUAL_EPS));
+            mk.push(compare(
+                r.algo("CEFT-CPOP").makespan,
+                r.algo("CPOP").makespan,
+                EQUAL_EPS,
+            ));
+            count += 1;
+        }
+        let (cl, ce, cs) = cpl.percentages();
+        let (ml, me, ms) = mk.percentages();
+        for (outcome, c, m) in [
+            ("Longer", cl, ml),
+            ("Equal", ce, me),
+            ("Shorter", cs, ms),
+        ] {
+            table.push_row(vec![
+                wl.clone(),
+                count.to_string(),
+                outcome.to_string(),
+                format!("{c:.2}"),
+                format!("{m:.2}"),
+            ]);
+        }
+    }
+    table
+}
+
+/// Group rows by a key, average a metric per group, one series per
+/// algorithm. `key` maps a row to an x-axis value (rendered `{:.3}` trimmed).
+fn series_by<K: Fn(&Row) -> f64, M: Fn(&Row, &str) -> f64>(
+    rows: &[Row],
+    x_name: &str,
+    key: K,
+    metric: M,
+    algos: &[&str],
+) -> Table {
+    let mut header = vec![x_name.to_string()];
+    header.extend(algos.iter().map(|a| a.to_string()));
+    let mut table = Table::new(header);
+    let mut xs: Vec<f64> = rows.iter().map(&key).collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+    for x in xs {
+        let group: Vec<&Row> = rows
+            .iter()
+            .filter(|r| (key(r) - x).abs() < 1e-12)
+            .collect();
+        let mut cells = vec![trim_float(x)];
+        for &a in algos {
+            let mean =
+                group.iter().map(|r| metric(r, a)).sum::<f64>() / group.len() as f64;
+            cells.push(fmt(mean));
+        }
+        table.push_row(cells);
+    }
+    table
+}
+
+fn trim_float(x: f64) -> String {
+    if x.fract() == 0.0 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// The three paper headliner algorithms.
+const MAIN3: [&str; 3] = ["CEFT-CPOP", "CPOP", "HEFT"];
+/// The §8.2 ranking-variant comparison set (Figures 19–20).
+const RANKS6: [&str; 6] = [
+    "CEFT-CPOP",
+    "CPOP",
+    "HEFT",
+    "HEFT-DOWN",
+    "CEFT-HEFT-UP",
+    "CEFT-HEFT-DOWN",
+];
+
+/// Figure 7: CPL ratio (CEFT / CPOP) vs α — the per-α mean ratio plus the
+/// spread (p10/p90), standing in for the paper's jittered scatter "bars".
+pub fn fig7(rows: &[Row]) -> Table {
+    let mut table = Table::new(vec!["alpha", "mean_ratio", "p10", "p90"]);
+    let mut alphas: Vec<f64> = rows.iter().map(|r| r.alpha).collect();
+    alphas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    alphas.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+    for a in alphas {
+        let ratios: Vec<f64> = rows
+            .iter()
+            .filter(|r| (r.alpha - a).abs() < 1e-12)
+            .map(|r| r.cpl_ceft / r.cpl_cpop_realized)
+            .collect();
+        table.push_row(vec![
+            trim_float(a),
+            fmt(crate::util::stats::mean(&ratios)),
+            fmt(crate::util::stats::percentile(&ratios, 10.0)),
+            fmt(crate::util::stats::percentile(&ratios, 90.0)),
+        ]);
+    }
+    table
+}
+
+/// Figure 8: mean CPL vs β (CEFT vs CPOP estimates).
+pub fn fig8(rows: &[Row]) -> Table {
+    let mut table = Table::new(vec!["beta", "CEFT_CPL", "CPOP_CPL"]);
+    let mut betas: Vec<f64> = rows.iter().map(|r| r.beta_pct).collect();
+    betas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    betas.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+    for b in betas {
+        let group: Vec<&Row> = rows
+            .iter()
+            .filter(|r| (r.beta_pct - b).abs() < 1e-12)
+            .collect();
+        let ceft = group.iter().map(|r| r.cpl_ceft).sum::<f64>() / group.len() as f64;
+        let cpop = group.iter().map(|r| r.cpl_cpop_realized).sum::<f64>() / group.len() as f64;
+        table.push_row(vec![trim_float(b), fmt(ceft), fmt(cpop)]);
+    }
+    table
+}
+
+/// Figure 9: speedup vs number of tasks.
+pub fn fig9(rows: &[Row]) -> Table {
+    series_by(rows, "n", |r| r.n as f64, |r, a| r.algo(a).speedup, &MAIN3)
+}
+
+/// Figure 10: speedup vs number of processors.
+pub fn fig10(rows: &[Row]) -> Table {
+    series_by(rows, "p", |r| r.p as f64, |r, a| r.algo(a).speedup, &MAIN3)
+}
+
+/// Figure 11: SLR vs β.
+pub fn fig11(rows: &[Row]) -> Table {
+    series_by(rows, "beta", |r| r.beta_pct, |r, a| r.algo(a).slr, &MAIN3)
+}
+
+/// Figure 12: speedup vs β.
+pub fn fig12(rows: &[Row]) -> Table {
+    series_by(rows, "beta", |r| r.beta_pct, |r, a| r.algo(a).speedup, &MAIN3)
+}
+
+/// Figure 13a: SLR vs α.
+pub fn fig13a(rows: &[Row]) -> Table {
+    series_by(rows, "alpha", |r| r.alpha, |r, a| r.algo(a).slr, &MAIN3)
+}
+
+/// Figure 13b: SLR vs CCR.
+pub fn fig13b(rows: &[Row]) -> Table {
+    series_by(rows, "ccr", |r| r.ccr, |r, a| r.algo(a).slr, &MAIN3)
+}
+
+/// Figure 13c: slack vs CCR.
+pub fn fig13c(rows: &[Row]) -> Table {
+    series_by(rows, "ccr", |r| r.ccr, |r, a| r.algo(a).slack, &MAIN3)
+}
+
+/// Figure 14a: SLR vs number of tasks.
+pub fn fig14a(rows: &[Row]) -> Table {
+    series_by(rows, "n", |r| r.n as f64, |r, a| r.algo(a).slr, &MAIN3)
+}
+
+/// Figure 14b: SLR vs number of processors.
+pub fn fig14b(rows: &[Row]) -> Table {
+    series_by(rows, "p", |r| r.p as f64, |r, a| r.algo(a).slr, &MAIN3)
+}
+
+/// Figures 15/17 (real-world SLR vs CCR) — pass rows filtered to the
+/// benchmark variant.
+pub fn fig_realworld_slr(rows: &[Row]) -> Table {
+    series_by(rows, "ccr", |r| r.ccr, |r, a| r.algo(a).slr, &MAIN3)
+}
+
+/// Figures 16/18 (real-world speedup vs CCR).
+pub fn fig_realworld_speedup(rows: &[Row]) -> Table {
+    series_by(rows, "ccr", |r| r.ccr, |r, a| r.algo(a).speedup, &MAIN3)
+}
+
+/// Figure 19: speedup vs α for the ranking-function variants.
+pub fn fig19(rows: &[Row]) -> Table {
+    series_by(rows, "alpha", |r| r.alpha, |r, a| r.algo(a).speedup, &RANKS6)
+}
+
+/// Figure 20: SLR vs α for the ranking-function variants.
+pub fn fig20(rows: &[Row]) -> Table {
+    series_by(rows, "alpha", |r| r.alpha, |r, a| r.algo(a).slr, &RANKS6)
+}
+
+/// Dump raw rows as a CSV table (one row per experiment, all metrics).
+pub fn raw_rows(rows: &[Row]) -> Table {
+    let mut header = vec![
+        "workload".to_string(),
+        "n".to_string(),
+        "out_degree".to_string(),
+        "ccr".to_string(),
+        "alpha".to_string(),
+        "beta".to_string(),
+        "gamma".to_string(),
+        "p".to_string(),
+        "cpl_ceft".to_string(),
+        "cpl_cpop".to_string(),
+        "cpl_cpop_realized".to_string(),
+        "cpl_minexec".to_string(),
+        "cp_min".to_string(),
+    ];
+    for a in ALGOS {
+        for m in ["makespan", "speedup", "slr", "slack"] {
+            header.push(format!("{a}:{m}"));
+        }
+    }
+    let mut table = Table::new(header);
+    for r in rows {
+        let mut cells = vec![
+            r.workload.clone(),
+            r.n.to_string(),
+            r.out_degree.to_string(),
+            format!("{}", r.ccr),
+            format!("{}", r.alpha),
+            format!("{}", r.beta_pct),
+            format!("{}", r.gamma),
+            r.p.to_string(),
+            format!("{}", r.cpl_ceft),
+            format!("{}", r.cpl_cpop),
+            format!("{}", r.cpl_cpop_realized),
+            format!("{}", r.cpl_minexec),
+            format!("{}", r.cp_min),
+        ];
+        for a in &r.algos {
+            cells.push(format!("{}", a.makespan));
+            cells.push(format!("{}", a.speedup));
+            cells.push(format!("{}", a.slr));
+            cells.push(format!("{}", a.slack));
+        }
+        table.push_row(cells);
+    }
+    table
+}
+
+/// Table-3 outcome percentages broken down by a grid dimension (diagnostic
+/// view: where in the sweep does CEFT win/lose?).
+pub fn table3_breakdown<K: Fn(&Row) -> f64>(rows: &[Row], dim: &str, key: K) -> Table {
+    let mut table = Table::new(vec![
+        dim.to_string(),
+        "cpl_longer%".to_string(),
+        "cpl_shorter%".to_string(),
+        "mk_longer%".to_string(),
+        "mk_shorter%".to_string(),
+        "n_exp".to_string(),
+    ]);
+    let mut xs: Vec<f64> = rows.iter().map(&key).collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+    for x in xs {
+        let mut cpl = WinTally::default();
+        let mut mk = WinTally::default();
+        for r in rows.iter().filter(|r| (key(r) - x).abs() < 1e-12) {
+            cpl.push(compare(r.cpl_ceft, r.cpl_cpop_realized, EQUAL_EPS));
+            mk.push(compare(
+                r.algo("CEFT-CPOP").makespan,
+                r.algo("CPOP").makespan,
+                EQUAL_EPS,
+            ));
+        }
+        let (cl, _, cs) = cpl.percentages();
+        let (ml, _, ms) = mk.percentages();
+        table.push_row(vec![
+            trim_float(x),
+            format!("{cl:.1}"),
+            format!("{cs:.1}"),
+            format!("{ml:.1}"),
+            format!("{ms:.1}"),
+            cpl.total().to_string(),
+        ]);
+    }
+    table
+}
+
+/// Win/tie/loss classification for one row's CPL comparison (exposed for
+/// tests and the CLI summary).
+pub fn cpl_outcome(r: &Row) -> Cmp {
+    compare(r.cpl_ceft, r.cpl_cpop_realized, EQUAL_EPS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::cells::{grid, Scale, Workload};
+    use crate::exp::run::run_sweep;
+
+    fn smoke_rows() -> Vec<Row> {
+        let cells = grid(Workload::RggClassic, Scale::Smoke);
+        run_sweep(&cells, 2, false)
+    }
+
+    #[test]
+    fn table3_has_three_outcomes_per_workload() {
+        let rows = smoke_rows();
+        let t = table3(&rows);
+        assert_eq!(t.rows.len(), 3);
+        // percentages sum to ~100
+        let sum: f64 = t
+            .rows
+            .iter()
+            .map(|r| r[3].parse::<f64>().unwrap())
+            .sum();
+        assert!((sum - 100.0).abs() < 0.1, "cpl% sum={sum}");
+    }
+
+    #[test]
+    fn figures_have_expected_columns() {
+        let rows = smoke_rows();
+        assert_eq!(fig10(&rows).header[0], "p");
+        assert_eq!(fig11(&rows).header.len(), 4);
+        assert_eq!(fig19(&rows).header.len(), 7);
+        assert!(!fig7(&rows).rows.is_empty());
+        assert!(!fig8(&rows).rows.is_empty());
+    }
+
+    #[test]
+    fn raw_rows_roundtrip_via_csv() {
+        let rows = smoke_rows();
+        let t = raw_rows(&rows);
+        let parsed = crate::util::csv::Table::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(parsed.rows.len(), rows.len());
+        assert_eq!(parsed.header.len(), 13 + 6 * 4);
+    }
+
+    #[test]
+    fn series_means_are_finite() {
+        let rows = smoke_rows();
+        for t in [fig9(&rows), fig10(&rows), fig12(&rows), fig13b(&rows)] {
+            for row in &t.rows {
+                for cell in &row[1..] {
+                    let v: f64 = cell.parse().unwrap();
+                    assert!(v.is_finite());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! The experiment harness: regenerates every table and figure of the
+//! paper's evaluation (§7–§8).
+//!
+//! * [`cells`] — the factorial experiment grids (workload families ×
+//!   parameter sweeps × processor graphs) at three scales.
+//! * [`run`] — run one cell (generate instance → run every algorithm →
+//!   record every metric) and whole sweeps in parallel.
+//! * [`figures`] — aggregate result rows into the paper's tables/figures
+//!   (Table 3, Figures 5–20) as CSV + ASCII tables.
+
+pub mod cells;
+pub mod figures;
+pub mod run;
+
+pub use cells::{grid, realworld_grid, Cell, Scale, Workload};
+pub use run::{run_cell, run_sweep, Row, ALGOS};

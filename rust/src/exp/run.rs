@@ -1,0 +1,308 @@
+//! Running experiment cells: instance generation, algorithm execution,
+//! metric collection.
+
+use super::cells::{Cell, RealWorldCell};
+use crate::cp::ceft::find_critical_path;
+use crate::cp::cpmin::cp_min_cost;
+use crate::cp::minexec::min_exec_critical_path;
+use crate::cp::ranks::cpop_critical_path;
+use crate::graph::generator::{generate, Instance, RggParams};
+use crate::graph::realworld;
+use crate::metrics;
+use crate::platform::{CostModel, Platform};
+use crate::sched::{
+    ceft_cpop::CeftCpop,
+    ceft_heft::{CeftHeftDown, CeftHeftUp},
+    cpop::Cpop,
+    heft::{Heft, HeftDown},
+    Scheduler,
+};
+use crate::util::pool;
+use crate::util::rng::SplitMix64;
+
+/// Salt XORed into cell seeds to derive the independent platform RNG stream.
+const PLATFORM_SEED_SALT: u64 = 0x504C_4154_504C_4154; // "PLATPLAT"
+
+/// The schedulers every cell runs, in result-column order.
+pub const ALGOS: [&str; 6] = [
+    "CPOP",
+    "HEFT",
+    "CEFT-CPOP",
+    "HEFT-DOWN",
+    "CEFT-HEFT-UP",
+    "CEFT-HEFT-DOWN",
+];
+
+/// Per-algorithm metrics for one cell.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AlgoResult {
+    /// makespan of the produced schedule
+    pub makespan: f64,
+    /// eq. 8 speedup
+    pub speedup: f64,
+    /// eq. 9 schedule length ratio
+    pub slr: f64,
+    /// eq. 10 slack
+    pub slack: f64,
+}
+
+/// Full record of one experiment.
+#[derive(Clone, Debug)]
+pub struct Row {
+    /// workload family name (or real-world family)
+    pub workload: String,
+    /// grid coordinates
+    pub n: usize,
+    /// average out-degree (0 for real-world graphs)
+    pub out_degree: usize,
+    /// CCR
+    pub ccr: f64,
+    /// α (0 for real-world graphs — their structure is fixed, §7.2)
+    pub alpha: f64,
+    /// β percent
+    pub beta_pct: f64,
+    /// γ (0 for real-world)
+    pub gamma: f64,
+    /// processors
+    pub p: usize,
+    /// CEFT critical-path length (with partial assignment)
+    pub cpl_ceft: f64,
+    /// CPOP mean-value critical-path length estimate (|CP|)
+    pub cpl_cpop: f64,
+    /// CPOP's path re-costed on its single chosen processor
+    pub cpl_cpop_realized: f64,
+    /// min-execution-time CP (zero comm), the §3 baseline
+    pub cpl_minexec: f64,
+    /// CP_MIN (SLR denominator)
+    pub cp_min: f64,
+    /// per-algorithm results, aligned with [`ALGOS`]
+    pub algos: [AlgoResult; 6],
+}
+
+impl Row {
+    /// Result for a named algorithm.
+    pub fn algo(&self, name: &str) -> &AlgoResult {
+        let i = ALGOS.iter().position(|&a| a == name).expect("unknown algo");
+        &self.algos[i]
+    }
+}
+
+/// Build the platform + instance for an RGG cell (deterministic in the cell).
+pub fn build_instance(cell: &Cell) -> (Platform, Instance) {
+    let seed = SplitMix64::seed_for(&[cell.workload.id(), cell.index]);
+    let mut plat_rng = crate::util::rng::Xoshiro256::new(seed ^ PLATFORM_SEED_SALT);
+    let platform = if cell.workload.needs_two_weight_platform() {
+        Platform::two_weight(cell.p, cell.beta_pct / 100.0, &mut plat_rng, 1.0, 0.0)
+    } else {
+        Platform::uniform(cell.p, 1.0, 0.0)
+    };
+    let params = RggParams {
+        n: cell.n,
+        out_degree: cell.out_degree,
+        ccr: cell.ccr,
+        alpha: cell.alpha,
+        beta_pct: cell.beta_pct,
+        gamma: cell.gamma,
+    };
+    let model = cell.workload.cost_model(cell.beta_pct);
+    let inst = generate(&params, &model, &platform, seed);
+    (platform, inst)
+}
+
+/// Run every algorithm and metric on one instance.
+pub fn run_instance(
+    workload: &str,
+    n: usize,
+    out_degree: usize,
+    ccr: f64,
+    alpha: f64,
+    beta_pct: f64,
+    gamma: f64,
+    platform: &Platform,
+    inst: &Instance,
+) -> Row {
+    let g = &inst.graph;
+    let comp = &inst.comp;
+    let p = platform.num_classes();
+
+    let ceft_cp = find_critical_path(g, platform, comp);
+    let (cpop_cp, cpl_cpop) = cpop_critical_path(g, platform, comp);
+    let cpl_cpop_realized =
+        crate::cp::ranks::cpop_realized_cp_length(&cpop_cp, comp, p);
+    let minexec = min_exec_critical_path(g, platform, comp, false);
+    let cp_min = cp_min_cost(g, comp, p);
+
+    let schedulers: [&dyn Scheduler; 6] = [
+        &Cpop,
+        &Heft,
+        &CeftCpop,
+        &HeftDown,
+        &CeftHeftUp,
+        &CeftHeftDown,
+    ];
+    let mut algos = [AlgoResult::default(); 6];
+    for (i, s) in schedulers.iter().enumerate() {
+        let schedule = s.schedule(g, platform, comp);
+        debug_assert!(schedule.validate(g, platform, comp).is_ok());
+        let m = schedule.makespan();
+        algos[i] = AlgoResult {
+            makespan: m,
+            speedup: metrics::speedup(comp, p, m),
+            slr: metrics::slr(g, comp, p, m),
+            slack: metrics::slack(g, platform, comp, &schedule),
+        };
+    }
+
+    Row {
+        workload: workload.to_string(),
+        n,
+        out_degree,
+        ccr,
+        alpha,
+        beta_pct,
+        gamma,
+        p,
+        cpl_ceft: ceft_cp.length,
+        cpl_cpop,
+        cpl_cpop_realized,
+        cpl_minexec: minexec.length,
+        cp_min,
+        algos,
+    }
+}
+
+/// Run one RGG cell end to end.
+pub fn run_cell(cell: &Cell) -> Row {
+    let (platform, inst) = build_instance(cell);
+    run_instance(
+        cell.workload.name(),
+        cell.n,
+        cell.out_degree,
+        cell.ccr,
+        cell.alpha,
+        cell.beta_pct,
+        cell.gamma,
+        &platform,
+        &inst,
+    )
+}
+
+/// Run one real-world cell end to end.
+pub fn run_realworld_cell(cell: &RealWorldCell) -> Row {
+    let seed = SplitMix64::seed_for(&[cell.family.id(), cell.index]);
+    let skel = match cell.family {
+        super::cells::RealWorld::Fft => realworld::fft(cell.size),
+        super::cells::RealWorld::Ge => realworld::gaussian_elimination(cell.size),
+        super::cells::RealWorld::Md => realworld::molecular_dynamics(),
+        super::cells::RealWorld::Ew => realworld::epigenomics(cell.size),
+    };
+    let beta = cell.beta_pct / 100.0;
+    let mut plat_rng = crate::util::rng::Xoshiro256::new(seed ^ PLATFORM_SEED_SALT);
+    let (platform, model) = if cell.medium_variant {
+        (
+            Platform::two_weight(cell.p, beta, &mut plat_rng, 1.0, 0.0),
+            CostModel::two_weight_medium(beta),
+        )
+    } else {
+        (
+            Platform::uniform(cell.p, 1.0, 0.0),
+            CostModel::Classic { beta },
+        )
+    };
+    let inst =
+        realworld::weighted_instance(&skel, cell.ccr, cell.beta_pct, &model, &platform, seed);
+    let variant = if cell.medium_variant { "medium" } else { "classic" };
+    run_instance(
+        &format!("{}-{}", cell.family.name(), variant),
+        inst.graph.num_tasks(),
+        0,
+        cell.ccr,
+        0.0,
+        cell.beta_pct,
+        0.0,
+        &platform,
+        &inst,
+    )
+}
+
+/// Run a sweep of RGG cells in parallel with optional progress output.
+pub fn run_sweep(cells: &[Cell], threads: usize, verbose: bool) -> Vec<Row> {
+    let done = std::sync::atomic::AtomicUsize::new(0);
+    pool::parallel_map(cells, threads, |_, cell| {
+        let row = run_cell(cell);
+        let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+        if verbose && (d % 100 == 0 || d == cells.len()) {
+            eprintln!("  [{d}/{}] cells done", cells.len());
+        }
+        row
+    })
+}
+
+/// Run a sweep of real-world cells in parallel.
+pub fn run_realworld_sweep(cells: &[RealWorldCell], threads: usize, verbose: bool) -> Vec<Row> {
+    let done = std::sync::atomic::AtomicUsize::new(0);
+    pool::parallel_map(cells, threads, |_, cell| {
+        let row = run_realworld_cell(cell);
+        let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+        if verbose && (d % 100 == 0 || d == cells.len()) {
+            eprintln!("  [{d}/{}] real-world cells done", cells.len());
+        }
+        row
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::cells::{grid, realworld_grid, RealWorld, Scale, Workload};
+
+    #[test]
+    fn run_cell_produces_consistent_metrics() {
+        let cells = grid(Workload::RggClassic, Scale::Smoke);
+        let row = run_cell(&cells[0]);
+        assert!(row.cpl_ceft > 0.0);
+        assert!(row.cp_min > 0.0);
+        assert!(row.cp_min <= row.cpl_ceft + 1e-9);
+        for a in &row.algos {
+            assert!(a.makespan > 0.0);
+            assert!(a.slr >= 1.0 - 1e-9, "slr={}", a.slr);
+            assert!(a.speedup > 0.0);
+            // makespan >= CP_MIN (hard lower bound)
+            assert!(a.makespan + 1e-9 >= row.cp_min);
+        }
+    }
+
+    #[test]
+    fn rerun_is_deterministic() {
+        let cells = grid(Workload::RggHigh, Scale::Smoke);
+        let a = run_cell(&cells[0]);
+        let b = run_cell(&cells[0]);
+        assert_eq!(a.cpl_ceft, b.cpl_ceft);
+        assert_eq!(a.algos[0].makespan, b.algos[0].makespan);
+        assert_eq!(a.algos[2].slr, b.algos[2].slr);
+    }
+
+    #[test]
+    fn sweep_parallel_equals_serial() {
+        let cells: Vec<_> = grid(Workload::RggClassic, Scale::Smoke)
+            .into_iter()
+            .take(4)
+            .collect();
+        let par = run_sweep(&cells, 4, false);
+        let ser = run_sweep(&cells, 1, false);
+        for (a, b) in par.iter().zip(&ser) {
+            assert_eq!(a.cpl_ceft, b.cpl_ceft);
+            assert_eq!(a.algos[2].makespan, b.algos[2].makespan);
+        }
+    }
+
+    #[test]
+    fn realworld_cells_run() {
+        for family in RealWorld::ALL {
+            let cells = realworld_grid(family, Scale::Smoke);
+            let row = run_realworld_cell(&cells[0]);
+            assert!(row.cpl_ceft > 0.0, "{}", family.name());
+            assert!(row.algos.iter().all(|a| a.makespan > 0.0));
+        }
+    }
+}

@@ -1,0 +1,325 @@
+//! Topcuoglu-style random graph generator (§7.1 of the paper).
+//!
+//! Generates layered DAGs controlled by the six paper parameters:
+//!
+//! * `n` — number of tasks,
+//! * `out_degree` — average out-degree,
+//! * `ccr` — communication-to-computation ratio,
+//! * `alpha` — shape (height ≈ √n/α; level width ~ U with mean α√n),
+//! * `beta` — heterogeneity factor (percent, 0..100),
+//! * `gamma` — skewness (fraction of "hot" levels holding heavy tasks).
+//!
+//! The generator guarantees a single entry and a single exit task (levels 0
+//! and h−1 have width 1), every non-entry task has at least one parent in an
+//! earlier level, and every non-exit task has at least one child — the
+//! structural properties CPOP's critical-path extraction needs.
+
+use super::TaskGraph;
+use crate::platform::{CostModel, Platform};
+use crate::util::rng::Xoshiro256;
+
+/// Parameters of one random graph (one experiment cell).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RggParams {
+    /// number of tasks
+    pub n: usize,
+    /// average out-degree
+    pub out_degree: usize,
+    /// communication-to-computation ratio
+    pub ccr: f64,
+    /// shape parameter α
+    pub alpha: f64,
+    /// heterogeneity factor β as a percentage (paper values {10,25,50,75,95})
+    pub beta_pct: f64,
+    /// skewness γ ∈ [0, 1]
+    pub gamma: f64,
+}
+
+impl RggParams {
+    /// β as a fraction in [0, 1].
+    pub fn beta(&self) -> f64 {
+        self.beta_pct / 100.0
+    }
+}
+
+/// A generated problem instance: structure + payloads + execution costs.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    /// the task DAG (edge `data` fields are the communication volumes)
+    pub graph: TaskGraph,
+    /// dense `v × P` execution-cost matrix
+    pub comp: Vec<f64>,
+    /// number of processor classes (row stride of `comp`)
+    pub p: usize,
+}
+
+/// Generate the *structure* of a layered DAG: returns `(edges, level_of)`.
+///
+/// Levels: `h ≈ √n/α` levels; widths drawn `U(1, 2α√n)` (mean α√n) until all
+/// `n` tasks are placed; first and last levels forced to width 1.
+fn structure(params: &RggParams, rng: &mut Xoshiro256) -> (Vec<(usize, usize)>, Vec<usize>) {
+    let n = params.n;
+    assert!(n >= 2, "need at least entry and exit");
+    let sqrt_n = (n as f64).sqrt();
+    let mean_width = (params.alpha * sqrt_n).max(1.0);
+    let height = ((sqrt_n / params.alpha).round() as usize).clamp(2, n);
+
+    // Assign widths: level 0 and last are 1; middle levels sampled.
+    let mut widths = vec![1usize; height];
+    let mut placed = 2usize; // entry + exit
+    let middle = height.saturating_sub(2);
+    if middle > 0 {
+        for w in widths.iter_mut().take(height - 1).skip(1) {
+            if placed >= n {
+                *w = 0;
+                continue;
+            }
+            let draw = rng.uniform(1.0, (2.0 * mean_width).max(2.0)).round() as usize;
+            let take = draw.clamp(1, n - placed);
+            *w = take;
+            placed += take;
+        }
+        // distribute any remainder over middle levels round-robin
+        let mut l = 1;
+        while placed < n {
+            widths[1 + (l % middle)] += 1;
+            placed += 1;
+            l += 1;
+        }
+        // drop empty middle levels
+        widths.retain(|&w| w > 0);
+    } else {
+        // height 2: everything beyond entry/exit goes to a middle level
+        if n > 2 {
+            widths = vec![1, n - 2, 1];
+        }
+    }
+
+    // task ids assigned level-major: level 0 = {0}, etc.
+    let height = widths.len();
+    let mut level_start = vec![0usize; height + 1];
+    for l in 0..height {
+        level_start[l + 1] = level_start[l] + widths[l];
+    }
+    debug_assert_eq!(level_start[height], n);
+    let mut level_of = vec![0usize; n];
+    for l in 0..height {
+        for t in level_start[l]..level_start[l + 1] {
+            level_of[t] = l;
+        }
+    }
+
+    // Edges. For each task, out-degree ~ U(1, 2*o); targets drawn from the
+    // next few levels (geometric preference for the immediate next level,
+    // as in the reference generator).
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    let mut has_parent = vec![false; n];
+    let mut has_child = vec![false; n];
+    let mut seen = std::collections::HashSet::new();
+    for src in 0..n {
+        let l = level_of[src];
+        if l + 1 >= height {
+            continue;
+        }
+        let deg = rng.range_inclusive(1, 2 * params.out_degree.max(1));
+        for _ in 0..deg {
+            // pick target level: next level with prob 0.7, else uniform later
+            let tl = if l + 2 >= height || rng.chance(0.7) {
+                l + 1
+            } else {
+                rng.range_inclusive(l + 2, height - 1)
+            };
+            let dst = rng.range_inclusive(level_start[tl], level_start[tl + 1] - 1);
+            if seen.insert((src, dst)) {
+                edges.push((src, dst));
+                has_parent[dst] = true;
+                has_child[src] = true;
+            }
+        }
+    }
+    // Guarantee connectivity: parent from an earlier level for every
+    // non-entry task, child for every non-exit task.
+    for t in 1..n {
+        if !has_parent[t] {
+            let l = level_of[t];
+            let pl = rng.range_inclusive(0, l - 1);
+            let src = rng.range_inclusive(level_start[pl], level_start[pl + 1] - 1);
+            if seen.insert((src, t)) {
+                edges.push((src, t));
+            }
+            has_parent[t] = true;
+            has_child[src] = true;
+        }
+    }
+    for t in 0..n - 1 {
+        if !has_child[t] {
+            let l = level_of[t];
+            let tl = rng.range_inclusive(l + 1, height - 1);
+            let dst = rng.range_inclusive(level_start[tl], level_start[tl + 1] - 1);
+            if seen.insert((t, dst)) {
+                edges.push((t, dst));
+            }
+            has_child[t] = true;
+        }
+    }
+    (edges, level_of)
+}
+
+/// Draw per-task base weights `w_i` with skewness γ: a γ-fraction of levels
+/// is "hot" and draws from a 4× heavier uniform range (pockets of
+/// computation, §7.1).
+fn base_weights(
+    n: usize,
+    level_of: &[usize],
+    gamma: f64,
+    rng: &mut Xoshiro256,
+) -> Vec<f64> {
+    let w_dag = rng.uniform(50.0, 150.0);
+    let height = level_of.iter().copied().max().unwrap_or(0) + 1;
+    let hot: Vec<bool> = (0..height).map(|_| rng.chance(gamma)).collect();
+    (0..n)
+        .map(|t| {
+            let scale = if hot[level_of[t]] { 4.0 } else { 1.0 };
+            rng.uniform(0.0, 2.0 * w_dag * scale).max(1e-3)
+        })
+        .collect()
+}
+
+/// Generate a full instance under the given cost model and platform.
+///
+/// Edge data volumes follow the paper: the weight of an edge leaving `t_i`
+/// is `U(w_i·c·(1-β/2), w_i·c·(1+β/2))` where `w_i` is the scalar task
+/// weight (mean execution time under the two-weight model).
+pub fn generate(
+    params: &RggParams,
+    model: &CostModel,
+    platform: &Platform,
+    seed: u64,
+) -> Instance {
+    let mut rng = Xoshiro256::new(seed);
+    let (skeleton, level_of) = structure(params, &mut rng);
+    let w = base_weights(params.n, &level_of, params.gamma, &mut rng);
+    let (comp, scalar) = model.generate(&w, platform, &mut rng);
+    let beta = params.beta();
+    let edges: Vec<(usize, usize, f64)> = skeleton
+        .into_iter()
+        .map(|(src, dst)| {
+            let lo = scalar[src] * params.ccr * (1.0 - beta / 2.0);
+            let hi = scalar[src] * params.ccr * (1.0 + beta / 2.0);
+            let data = if hi > lo { rng.uniform(lo, hi) } else { lo };
+            (src, dst, data.max(0.0))
+        })
+        .collect();
+    Instance {
+        graph: TaskGraph::from_edges(params.n, &edges),
+        comp,
+        p: platform.num_classes(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(n: usize, alpha: f64) -> RggParams {
+        RggParams {
+            n,
+            out_degree: 3,
+            ccr: 1.0,
+            alpha,
+            beta_pct: 50.0,
+            gamma: 0.25,
+        }
+    }
+
+    #[test]
+    fn generates_requested_size_single_entry_exit() {
+        for &n in &[2usize, 8, 32, 128, 500] {
+            for &alpha in &[0.1, 0.5, 1.0] {
+                let plat = Platform::uniform(4, 1.0, 0.0);
+                let inst = generate(
+                    &params(n, alpha),
+                    &CostModel::Classic { beta: 0.5 },
+                    &plat,
+                    42,
+                );
+                assert_eq!(inst.graph.num_tasks(), n);
+                assert_eq!(inst.graph.sources().len(), 1, "n={n} alpha={alpha}");
+                assert_eq!(inst.graph.sinks().len(), 1, "n={n} alpha={alpha}");
+                assert_eq!(inst.comp.len(), n * 4);
+                inst.graph.validate(true).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let plat = Platform::uniform(4, 1.0, 0.0);
+        let a = generate(&params(64, 0.5), &CostModel::Classic { beta: 0.5 }, &plat, 7);
+        let b = generate(&params(64, 0.5), &CostModel::Classic { beta: 0.5 }, &plat, 7);
+        assert_eq!(a.comp, b.comp);
+        assert_eq!(a.graph.num_edges(), b.graph.num_edges());
+        let c = generate(&params(64, 0.5), &CostModel::Classic { beta: 0.5 }, &plat, 8);
+        assert_ne!(a.comp, c.comp);
+    }
+
+    #[test]
+    fn alpha_controls_shape() {
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let skinny = generate(&params(256, 0.1), &CostModel::Classic { beta: 0.5 }, &plat, 1);
+        let fat = generate(&params(256, 1.0), &CostModel::Classic { beta: 0.5 }, &plat, 1);
+        // tall skinny graphs have many levels; short fat graphs few
+        let h_skinny = *skinny.graph.levels().iter().max().unwrap();
+        let h_fat = *fat.graph.levels().iter().max().unwrap();
+        assert!(
+            h_skinny > h_fat,
+            "alpha=0.1 height {h_skinny} should exceed alpha=1.0 height {h_fat}"
+        );
+        assert!(fat.graph.width() > skinny.graph.width());
+    }
+
+    #[test]
+    fn ccr_scales_edge_data() {
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let mut lo_params = params(128, 0.5);
+        lo_params.ccr = 0.01;
+        let mut hi_params = lo_params;
+        hi_params.ccr = 10.0;
+        let lo = generate(&lo_params, &CostModel::Classic { beta: 0.5 }, &plat, 3);
+        let hi = generate(&hi_params, &CostModel::Classic { beta: 0.5 }, &plat, 3);
+        let mean = |inst: &Instance| {
+            inst.graph.edges().iter().map(|e| e.data).sum::<f64>()
+                / inst.graph.num_edges() as f64
+        };
+        assert!(mean(&hi) > 100.0 * mean(&lo));
+    }
+
+    #[test]
+    fn out_degree_tracks_parameter() {
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let mut p2 = params(512, 0.5);
+        p2.out_degree = 2;
+        let mut p8 = p2;
+        p8.out_degree = 8;
+        let g2 = generate(&p2, &CostModel::Classic { beta: 0.5 }, &plat, 5);
+        let g8 = generate(&p8, &CostModel::Classic { beta: 0.5 }, &plat, 5);
+        assert!(g8.graph.num_edges() > g2.graph.num_edges());
+    }
+
+    #[test]
+    fn two_weight_instance_builds() {
+        let mut rng = Xoshiro256::new(9);
+        let plat = Platform::two_weight(8, 0.5, &mut rng, 1.0, 0.0);
+        let inst = generate(&params(128, 0.5), &CostModel::two_weight_high(0.5), &plat, 11);
+        assert_eq!(inst.comp.len(), 128 * 8);
+        assert!(inst.comp.iter().all(|&c| c > 0.0 && c.is_finite()));
+    }
+
+    #[test]
+    fn all_costs_positive_finite() {
+        let plat = Platform::uniform(4, 1.0, 0.0);
+        let inst = generate(&params(200, 0.75), &CostModel::Classic { beta: 0.95 }, &plat, 13);
+        assert!(inst.comp.iter().all(|&c| c > 0.0 && c.is_finite()));
+        assert!(inst.graph.edges().iter().all(|e| e.data >= 0.0));
+    }
+}

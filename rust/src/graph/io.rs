@@ -1,0 +1,140 @@
+//! Graph / instance serialization: JSON interchange and Graphviz DOT export.
+
+use super::generator::Instance;
+use super::TaskGraph;
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Serialize an instance (structure + data volumes + cost matrix) to JSON.
+pub fn instance_to_json(inst: &Instance) -> Json {
+    let edges = inst
+        .graph
+        .edges()
+        .iter()
+        .map(|e| {
+            Json::Arr(vec![
+                Json::Num(e.src as f64),
+                Json::Num(e.dst as f64),
+                Json::Num(e.data),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("n", Json::Num(inst.graph.num_tasks() as f64)),
+        ("p", Json::Num(inst.p as f64)),
+        ("edges", Json::Arr(edges)),
+        (
+            "comp",
+            Json::Arr(inst.comp.iter().map(|&c| Json::Num(c)).collect()),
+        ),
+    ])
+}
+
+/// Parse an instance back from [`instance_to_json`] output.
+pub fn instance_from_json(j: &Json) -> Result<Instance, String> {
+    let n = j
+        .get("n")
+        .and_then(Json::as_usize)
+        .ok_or("missing n")?;
+    let p = j
+        .get("p")
+        .and_then(Json::as_usize)
+        .ok_or("missing p")?;
+    let edges: Vec<(usize, usize, f64)> = j
+        .get("edges")
+        .and_then(Json::as_arr)
+        .ok_or("missing edges")?
+        .iter()
+        .map(|e| {
+            let a = e.as_arr().ok_or("edge not an array")?;
+            Ok((
+                a[0].as_usize().ok_or("bad src")?,
+                a[1].as_usize().ok_or("bad dst")?,
+                a[2].as_f64().ok_or("bad data")?,
+            ))
+        })
+        .collect::<Result<_, String>>()?;
+    let comp: Vec<f64> = j
+        .get("comp")
+        .and_then(Json::as_arr)
+        .ok_or("missing comp")?
+        .iter()
+        .map(|c| c.as_f64().ok_or_else(|| "bad comp".to_string()))
+        .collect::<Result<_, String>>()?;
+    if comp.len() != n * p {
+        return Err(format!("comp has {} entries, expected {}", comp.len(), n * p));
+    }
+    Ok(Instance {
+        graph: TaskGraph::from_edges(n, &edges),
+        comp,
+        p,
+    })
+}
+
+/// Render a task graph as Graphviz DOT (node label = id, edge label = data).
+pub fn to_dot(g: &TaskGraph, highlight: &[usize]) -> String {
+    let hi: std::collections::HashSet<usize> = highlight.iter().copied().collect();
+    let mut s = String::from("digraph tasks {\n  rankdir=TB;\n");
+    for t in 0..g.num_tasks() {
+        if hi.contains(&t) {
+            let _ = writeln!(
+                s,
+                "  t{t} [label=\"{t}\", style=filled, fillcolor=gold];"
+            );
+        } else {
+            let _ = writeln!(s, "  t{t} [label=\"{t}\"];");
+        }
+    }
+    for e in g.edges() {
+        let _ = writeln!(s, "  t{} -> t{} [label=\"{:.1}\"];", e.src, e.dst, e.data);
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{generate, RggParams};
+    use crate::platform::{CostModel, Platform};
+
+    #[test]
+    fn json_roundtrip() {
+        let plat = Platform::uniform(3, 1.0, 0.0);
+        let inst = generate(
+            &RggParams {
+                n: 32,
+                out_degree: 2,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 50.0,
+                gamma: 0.2,
+            },
+            &CostModel::Classic { beta: 0.5 },
+            &plat,
+            99,
+        );
+        let j = instance_to_json(&inst);
+        let text = j.to_string();
+        let back = instance_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.graph.num_tasks(), inst.graph.num_tasks());
+        assert_eq!(back.graph.num_edges(), inst.graph.num_edges());
+        assert_eq!(back.comp, inst.comp);
+        assert_eq!(back.p, inst.p);
+    }
+
+    #[test]
+    fn dot_contains_nodes_and_highlight() {
+        let g = TaskGraph::from_edges(3, &[(0, 1, 2.0), (1, 2, 3.0)]);
+        let dot = to_dot(&g, &[1]);
+        assert!(dot.contains("t0 -> t1"));
+        assert!(dot.contains("fillcolor=gold"));
+        assert!(dot.starts_with("digraph"));
+    }
+
+    #[test]
+    fn from_json_rejects_bad_comp_len() {
+        let j = Json::parse(r#"{"n":2,"p":2,"edges":[[0,1,1.0]],"comp":[1,2,3]}"#).unwrap();
+        assert!(instance_from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,351 @@
+//! Task graphs: weighted DAGs of computational tasks.
+//!
+//! Vertices are tasks; a directed edge `(u, v, data)` means task `v` consumes
+//! `data` units of output from task `u` and cannot start before `u` finishes
+//! (plus communication time when they run on different processors).
+//!
+//! [`TaskGraph`] stores both successor and predecessor adjacency in CSR form
+//! and a cached topological order, since every algorithm in [`crate::cp`] and
+//! [`crate::sched`] is a sweep in (reverse) topological order.
+
+pub mod generator;
+pub mod io;
+pub mod realworld;
+
+/// A directed edge with a data volume (communication payload).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    /// producing task
+    pub src: usize,
+    /// consuming task
+    pub dst: usize,
+    /// units of data transferred from `src` to `dst`
+    pub data: f64,
+}
+
+/// An immutable task DAG with CSR adjacency and a cached topological order.
+#[derive(Clone, Debug)]
+pub struct TaskGraph {
+    n: usize,
+    edges: Vec<Edge>,
+    succ_off: Vec<usize>,
+    succ: Vec<(usize, f64)>,
+    pred_off: Vec<usize>,
+    pred: Vec<(usize, f64)>,
+    topo: Vec<usize>,
+}
+
+impl TaskGraph {
+    /// Build from an edge list over `n` tasks. Panics if the edge list
+    /// contains out-of-range vertices or a cycle (this is a programming
+    /// error in a generator, not a runtime condition).
+    pub fn from_edges(n: usize, edges: &[(usize, usize, f64)]) -> Self {
+        let edges: Vec<Edge> = edges
+            .iter()
+            .map(|&(src, dst, data)| {
+                assert!(src < n && dst < n, "edge ({src},{dst}) out of range n={n}");
+                assert_ne!(src, dst, "self loop at {src}");
+                assert!(data >= 0.0, "negative data on edge ({src},{dst})");
+                Edge { src, dst, data }
+            })
+            .collect();
+        Self::from_edge_structs(n, edges)
+    }
+
+    fn from_edge_structs(n: usize, edges: Vec<Edge>) -> Self {
+        // CSR for successors
+        let mut succ_off = vec![0usize; n + 1];
+        for e in &edges {
+            succ_off[e.src + 1] += 1;
+        }
+        for i in 0..n {
+            succ_off[i + 1] += succ_off[i];
+        }
+        let mut succ = vec![(0usize, 0f64); edges.len()];
+        let mut cursor = succ_off.clone();
+        for e in &edges {
+            succ[cursor[e.src]] = (e.dst, e.data);
+            cursor[e.src] += 1;
+        }
+        // CSR for predecessors
+        let mut pred_off = vec![0usize; n + 1];
+        for e in &edges {
+            pred_off[e.dst + 1] += 1;
+        }
+        for i in 0..n {
+            pred_off[i + 1] += pred_off[i];
+        }
+        let mut pred = vec![(0usize, 0f64); edges.len()];
+        let mut cursor = pred_off.clone();
+        for e in &edges {
+            pred[cursor[e.dst]] = (e.src, e.data);
+            cursor[e.dst] += 1;
+        }
+        // Kahn topological sort (also detects cycles)
+        let mut indeg: Vec<usize> = (0..n).map(|v| pred_off[v + 1] - pred_off[v]).collect();
+        let mut queue: std::collections::VecDeque<usize> =
+            (0..n).filter(|&v| indeg[v] == 0).collect();
+        let mut topo = Vec::with_capacity(n);
+        while let Some(v) = queue.pop_front() {
+            topo.push(v);
+            for &(s, _) in &succ[succ_off[v]..succ_off[v + 1]] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+        assert_eq!(topo.len(), n, "graph contains a cycle");
+        Self {
+            n,
+            edges,
+            succ_off,
+            succ,
+            pred_off,
+            pred,
+            topo,
+        }
+    }
+
+    /// Number of tasks.
+    pub fn num_tasks(&self) -> usize {
+        self.n
+    }
+
+    /// Number of edges.
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// All edges.
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// Successors of `t` as `(task, data)` pairs.
+    pub fn succs(&self, t: usize) -> &[(usize, f64)] {
+        &self.succ[self.succ_off[t]..self.succ_off[t + 1]]
+    }
+
+    /// Predecessors (parents) of `t` as `(task, data)` pairs.
+    pub fn preds(&self, t: usize) -> &[(usize, f64)] {
+        &self.pred[self.pred_off[t]..self.pred_off[t + 1]]
+    }
+
+    /// Out-degree of `t`.
+    pub fn out_degree(&self, t: usize) -> usize {
+        self.succ_off[t + 1] - self.succ_off[t]
+    }
+
+    /// In-degree of `t`.
+    pub fn in_degree(&self, t: usize) -> usize {
+        self.pred_off[t + 1] - self.pred_off[t]
+    }
+
+    /// A topological order of all tasks (cached).
+    pub fn topo_order(&self) -> &[usize] {
+        &self.topo
+    }
+
+    /// Tasks with no predecessors (entry/source tasks).
+    pub fn sources(&self) -> Vec<usize> {
+        (0..self.n).filter(|&t| self.in_degree(t) == 0).collect()
+    }
+
+    /// Tasks with no successors (exit/sink tasks).
+    pub fn sinks(&self) -> Vec<usize> {
+        (0..self.n).filter(|&t| self.out_degree(t) == 0).collect()
+    }
+
+    /// The transposed DAG (all edges reversed). Used by the CEFT upward
+    /// ranking function (§8.2 of the paper).
+    pub fn transpose(&self) -> TaskGraph {
+        let edges: Vec<Edge> = self
+            .edges
+            .iter()
+            .map(|e| Edge {
+                src: e.dst,
+                dst: e.src,
+                data: e.data,
+            })
+            .collect();
+        Self::from_edge_structs(self.n, edges)
+    }
+
+    /// Level (longest hop-distance from any source) of each task.
+    /// Level 0 = sources. Useful for wavefront/batched processing.
+    pub fn levels(&self) -> Vec<usize> {
+        let mut level = vec![0usize; self.n];
+        for &t in &self.topo {
+            for &(k, _) in self.preds(t) {
+                level[t] = level[t].max(level[k] + 1);
+            }
+        }
+        level
+    }
+
+    /// Width parameter β of the graph: the maximum number of tasks on any
+    /// level (the moving-frontier bound from the paper's space-complexity
+    /// argument, §5).
+    pub fn width(&self) -> usize {
+        let levels = self.levels();
+        let max_level = levels.iter().copied().max().unwrap_or(0);
+        let mut counts = vec![0usize; max_level + 1];
+        for &l in &levels {
+            counts[l] += 1;
+        }
+        counts.into_iter().max().unwrap_or(0)
+    }
+
+    /// Longest path length counting node weights `w` and edge weights from
+    /// `edge_w(src, dst, data)`. The classical (homogeneous) critical-path
+    /// primitive that CEFT generalizes.
+    pub fn longest_path<EW: Fn(usize, usize, f64) -> f64>(
+        &self,
+        node_w: &[f64],
+        edge_w: EW,
+    ) -> f64 {
+        assert_eq!(node_w.len(), self.n);
+        let mut dist = vec![0f64; self.n];
+        let mut best: f64 = 0.0;
+        for &t in &self.topo {
+            let mut d: f64 = 0.0;
+            for &(k, data) in self.preds(t) {
+                d = d.max(dist[k] + edge_w(k, t, data));
+            }
+            dist[t] = d + node_w[t];
+            best = best.max(dist[t]);
+        }
+        best
+    }
+
+    /// Check structural sanity of a generated graph: connected-ish (every
+    /// non-source has a parent, every non-sink has a child is trivially true)
+    /// — here we verify single-entry/single-exit when `strict` is set, and
+    /// that all data weights are non-negative and finite.
+    pub fn validate(&self, strict_single_entry_exit: bool) -> Result<(), String> {
+        for e in &self.edges {
+            if !e.data.is_finite() || e.data < 0.0 {
+                return Err(format!("bad data weight on edge {}->{}", e.src, e.dst));
+            }
+        }
+        if strict_single_entry_exit {
+            let s = self.sources();
+            let t = self.sinks();
+            if s.len() != 1 {
+                return Err(format!("expected single entry, got {}", s.len()));
+            }
+            if t.len() != 1 {
+                return Err(format!("expected single exit, got {}", t.len()));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> TaskGraph {
+        TaskGraph::from_edges(
+            4,
+            &[(0, 1, 5.0), (0, 2, 6.0), (1, 3, 7.0), (2, 3, 8.0)],
+        )
+    }
+
+    #[test]
+    fn adjacency_is_consistent() {
+        let g = diamond();
+        assert_eq!(g.num_tasks(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.succs(0).len(), 2);
+        assert_eq!(g.preds(3).len(), 2);
+        assert_eq!(g.preds(0).len(), 0);
+        assert_eq!(g.succs(3).len(), 0);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.in_degree(3), 2);
+        // data payloads preserved
+        assert!(g.preds(3).iter().any(|&(k, d)| k == 1 && d == 7.0));
+        assert!(g.preds(3).iter().any(|&(k, d)| k == 2 && d == 8.0));
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = diamond();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; 4];
+            for (i, &t) in g.topo_order().iter().enumerate() {
+                p[t] = i;
+            }
+            p
+        };
+        for e in g.edges() {
+            assert!(pos[e.src] < pos[e.dst]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cycle_detected() {
+        TaskGraph::from_edges(2, &[(0, 1, 1.0), (1, 0, 1.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_edge_panics() {
+        TaskGraph::from_edges(2, &[(0, 5, 1.0)]);
+    }
+
+    #[test]
+    fn sources_and_sinks() {
+        let g = diamond();
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![3]);
+    }
+
+    #[test]
+    fn transpose_swaps_roles() {
+        let g = diamond().transpose();
+        assert_eq!(g.sources(), vec![3]);
+        assert_eq!(g.sinks(), vec![0]);
+        assert_eq!(g.preds(0).len(), 2);
+    }
+
+    #[test]
+    fn levels_and_width() {
+        let g = diamond();
+        assert_eq!(g.levels(), vec![0, 1, 1, 2]);
+        assert_eq!(g.width(), 2);
+    }
+
+    #[test]
+    fn longest_path_homogeneous() {
+        let g = diamond();
+        // node weights 1, edge weight = data
+        let lp = g.longest_path(&[1.0, 1.0, 1.0, 1.0], |_, _, d| d);
+        // 0 ->(6) 2 ->(8) 3 : 1 + 6 + 1 + 8 + 1 = 17
+        assert_eq!(lp, 17.0);
+    }
+
+    #[test]
+    fn longest_path_ignores_edges_when_zeroed() {
+        let g = diamond();
+        let lp = g.longest_path(&[1.0, 2.0, 3.0, 4.0], |_, _, _| 0.0);
+        assert_eq!(lp, 1.0 + 3.0 + 4.0);
+    }
+
+    #[test]
+    fn validate_flags_multi_exit() {
+        let g = TaskGraph::from_edges(3, &[(0, 1, 1.0), (0, 2, 1.0)]);
+        assert!(g.validate(false).is_ok());
+        assert!(g.validate(true).is_err());
+    }
+
+    #[test]
+    fn empty_graph_ok() {
+        let g = TaskGraph::from_edges(1, &[]);
+        assert_eq!(g.topo_order(), &[0]);
+        assert_eq!(g.width(), 1);
+    }
+}

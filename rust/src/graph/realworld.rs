@@ -1,0 +1,350 @@
+//! Real-world application task graphs (§7.2 of the paper).
+//!
+//! Four families, all generated from their published structure:
+//!
+//! * [`gaussian_elimination`] — GE(m): `(m² + m − 2)/2` tasks (Wu & Gajski;
+//!   Cosnard et al.).
+//! * [`fft`] — FFT(m) for a power-of-two input vector: `2m − 1` recursive
+//!   call tasks + `m·log₂m` butterfly tasks (Topcuoglu et al.).
+//! * [`molecular_dynamics`] — the fixed 41-task irregular graph modified by
+//!   Kim & Browne.
+//! * [`epigenomics`] — the Pegasus epigenomics workflow EW(g): a split into
+//!   `g` parallel 4-stage lanes, then merge / filter / map tail.
+//!
+//! Each builder returns only the *structure* (edges with unit data); use
+//! [`weighted_instance`] to attach paper-style weights (base task weights
+//! `w_i`, CCR-scaled edge volumes, and a [`CostModel`] execution matrix).
+
+use super::generator::Instance;
+use super::TaskGraph;
+use crate::platform::{CostModel, Platform};
+use crate::util::rng::Xoshiro256;
+
+/// Structure of a real-world DAG: `n` tasks and unit-data edges.
+#[derive(Clone, Debug)]
+pub struct Skeleton {
+    /// number of tasks
+    pub n: usize,
+    /// edges (src, dst)
+    pub edges: Vec<(usize, usize)>,
+    /// human-readable family name
+    pub name: &'static str,
+}
+
+/// Gaussian elimination on an `m × m` matrix.
+///
+/// Step `k` (1-based, `k = 1..m-1`) has one pivot task followed by `m − k`
+/// update tasks. Pivot k feeds all its update tasks; update task `(k, j)`
+/// feeds pivot `k+1` when `j = k+1` and update `(k+1, j)` otherwise.
+/// Total tasks: `Σ_{k=1}^{m-1} (1 + m − k) = (m² + m − 2)/2`.
+pub fn gaussian_elimination(m: usize) -> Skeleton {
+    assert!(m >= 2, "GE needs m >= 2");
+    // id layout: step k starts at offset(k); pivot first, then updates j=k+1..=m
+    let offset = |k: usize| -> usize {
+        // sum over s=1..k-1 of (1 + m - s)
+        (k - 1) * (m + 1) - (k * (k - 1)) / 2
+    };
+    let pivot = |k: usize| offset(k);
+    let update = |k: usize, j: usize| offset(k) + 1 + (j - k - 1);
+    let n = offset(m); // == (m^2 + m - 2) / 2
+    debug_assert_eq!(n, (m * m + m - 2) / 2);
+    let mut edges = Vec::new();
+    for k in 1..m {
+        for j in k + 1..=m {
+            edges.push((pivot(k), update(k, j)));
+        }
+        if k + 1 < m {
+            // update (k, k+1) -> pivot k+1 ; update (k, j) -> update (k+1, j)
+            edges.push((update(k, k + 1), pivot(k + 1)));
+            for j in k + 2..=m {
+                edges.push((update(k, k + 1), update(k + 1, j)));
+                edges.push((update(k, j), update(k + 1, j)));
+            }
+        }
+    }
+    Skeleton {
+        n,
+        edges,
+        name: "GE",
+    }
+}
+
+/// Fast Fourier Transform over an input vector of size `m` (power of two).
+///
+/// Recursive-call part: a binary tree with `2m − 1` nodes rooted at task 0,
+/// leaves at the bottom. Butterfly part: `log₂m` levels of `m` tasks; level
+/// `ℓ` task `i` feeds level `ℓ+1` tasks `i` and `i XOR 2^ℓ`. Tree leaves
+/// feed butterfly level 0 one-to-one. The `m` final butterfly tasks are the
+/// exit frontier (the paper notes every root-to-exit path is critical).
+pub fn fft(m: usize) -> Skeleton {
+    assert!(m >= 2 && m.is_power_of_two(), "FFT needs power-of-two m >= 2");
+    let log_m = m.trailing_zeros() as usize;
+    let tree = 2 * m - 1;
+    let n = tree + m * log_m;
+    let mut edges = Vec::new();
+    // binary tree (heap layout): node i -> children 2i+1, 2i+2 for i < m-1
+    for i in 0..m - 1 {
+        edges.push((i, 2 * i + 1));
+        edges.push((i, 2 * i + 2));
+    }
+    // leaves are ids m-1 .. 2m-2; butterfly level l starts at tree + l*m
+    let bfly = |l: usize, i: usize| tree + l * m + i;
+    if log_m > 0 {
+        for i in 0..m {
+            edges.push((m - 1 + i, bfly(0, i)));
+        }
+        for l in 0..log_m - 1 {
+            for i in 0..m {
+                edges.push((bfly(l, i), bfly(l + 1, i)));
+                edges.push((bfly(l, i), bfly(l + 1, i ^ (1 << l))));
+            }
+        }
+    }
+    Skeleton {
+        n,
+        edges,
+        name: "FFT",
+    }
+}
+
+/// The modified molecular-dynamics task graph of Kim & Browne — a fixed
+/// 41-task irregular DAG (redrawn from the paper's Figure 4). Multiple
+/// entry tasks, one exit; irregular fan-in/fan-out, the classic stress test
+/// for list schedulers.
+pub fn molecular_dynamics() -> Skeleton {
+    // Adjacency transcribed from the published figure: 41 tasks in 11
+    // irregular levels.
+    let edges: Vec<(usize, usize)> = vec![
+        // level 0: entries 0,1,2,3
+        (0, 4),
+        (0, 5),
+        (1, 5),
+        (1, 6),
+        (2, 6),
+        (2, 7),
+        (3, 7),
+        (3, 8),
+        // level 1 -> 2
+        (4, 9),
+        (4, 10),
+        (5, 10),
+        (5, 11),
+        (6, 11),
+        (6, 12),
+        (7, 12),
+        (7, 13),
+        (8, 13),
+        (8, 14),
+        // level 2 -> 3 (fan-in pocket)
+        (9, 15),
+        (10, 15),
+        (10, 16),
+        (11, 16),
+        (11, 17),
+        (12, 17),
+        (12, 18),
+        (13, 18),
+        (14, 18),
+        (14, 19),
+        // level 3 -> 4
+        (15, 20),
+        (15, 21),
+        (16, 21),
+        (16, 22),
+        (17, 22),
+        (18, 23),
+        (19, 23),
+        (19, 24),
+        // level 4 -> 5
+        (20, 25),
+        (21, 25),
+        (21, 26),
+        (22, 26),
+        (22, 27),
+        (23, 27),
+        (23, 28),
+        (24, 28),
+        // level 5 -> 6 (irregular skips)
+        (25, 29),
+        (26, 29),
+        (26, 30),
+        (27, 30),
+        (28, 31),
+        (20, 31), // long skip edge
+        // level 6 -> 7
+        (29, 32),
+        (29, 33),
+        (30, 33),
+        (30, 34),
+        (31, 34),
+        (31, 35),
+        // level 7 -> 8
+        (32, 36),
+        (33, 36),
+        (33, 37),
+        (34, 37),
+        (35, 38),
+        // level 8 -> 9
+        (36, 39),
+        (37, 39),
+        (38, 39),
+        (25, 38), // another skip
+        // level 9 -> exit
+        (39, 40),
+        (35, 40), // skip into exit
+    ];
+    Skeleton {
+        n: 41,
+        edges,
+        name: "MD",
+    }
+}
+
+/// Epigenomics workflow EW(g): fastq split feeding `g` independent 4-stage
+/// lanes (filterContams → sol2sanger → fastq2bfq → map), merged and followed
+/// by the 3-stage tail (mapMerge → maqIndex → pileup). Wider than it is
+/// tall, with a compact parallel structure (§7.2.4).
+pub fn epigenomics(g: usize) -> Skeleton {
+    assert!(g >= 1);
+    let n = 1 + 4 * g + 3;
+    let mut edges = Vec::new();
+    let lane = |i: usize, stage: usize| 1 + i * 4 + stage;
+    let merge = 1 + 4 * g;
+    for i in 0..g {
+        edges.push((0, lane(i, 0)));
+        for s in 0..3 {
+            edges.push((lane(i, s), lane(i, s + 1)));
+        }
+        edges.push((lane(i, 3), merge));
+    }
+    edges.push((merge, merge + 1));
+    edges.push((merge + 1, merge + 2));
+    Skeleton {
+        n,
+        edges,
+        name: "EW",
+    }
+}
+
+/// Attach weights to a skeleton, paper-style: task base weights
+/// `w_i ~ U(0, 2·w_DAG)`, edge volumes `U(w_i·c·(1∓β/2))`, and an execution
+/// matrix from `model`. This is how §7.2 builds the "classic" and "medium"
+/// variants of the real-world benchmarks.
+pub fn weighted_instance(
+    skel: &Skeleton,
+    ccr: f64,
+    beta_pct: f64,
+    model: &CostModel,
+    platform: &Platform,
+    seed: u64,
+) -> Instance {
+    let mut rng = Xoshiro256::new(seed);
+    let beta = beta_pct / 100.0;
+    let w_dag = rng.uniform(50.0, 150.0);
+    let w: Vec<f64> = (0..skel.n)
+        .map(|_| rng.uniform(0.0, 2.0 * w_dag).max(1e-3))
+        .collect();
+    let (comp, scalar) = model.generate(&w, platform, &mut rng);
+    let edges: Vec<(usize, usize, f64)> = skel
+        .edges
+        .iter()
+        .map(|&(s, d)| {
+            let lo = scalar[s] * ccr * (1.0 - beta / 2.0);
+            let hi = scalar[s] * ccr * (1.0 + beta / 2.0);
+            let data = if hi > lo { rng.uniform(lo, hi) } else { lo };
+            (s, d, data.max(0.0))
+        })
+        .collect();
+    Instance {
+        graph: TaskGraph::from_edges(skel.n, &edges),
+        comp,
+        p: platform.num_classes(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ge_task_count_matches_formula() {
+        for m in 2..=12 {
+            let s = gaussian_elimination(m);
+            assert_eq!(s.n, (m * m + m - 2) / 2, "m={m}");
+            let g = TaskGraph::from_edges(s.n, &unit(&s.edges));
+            assert_eq!(g.sources().len(), 1);
+            assert_eq!(g.sinks().len(), 1);
+        }
+    }
+
+    #[test]
+    fn ge5_has_14_tasks_like_paper_figure() {
+        let s = gaussian_elimination(5);
+        assert_eq!(s.n, 14);
+    }
+
+    #[test]
+    fn fft_task_count_matches_formula() {
+        for &m in &[2usize, 4, 8, 16, 32] {
+            let log_m = m.trailing_zeros() as usize;
+            let s = fft(m);
+            assert_eq!(s.n, 2 * m - 1 + m * log_m, "m={m}");
+            let g = TaskGraph::from_edges(s.n, &unit(&s.edges));
+            assert_eq!(g.sources().len(), 1, "single root");
+            // exit frontier: the m final butterfly tasks
+            assert_eq!(g.sinks().len(), m, "m={m}");
+        }
+    }
+
+    #[test]
+    fn fft_all_paths_equal_length() {
+        // the paper notes every root-to-exit path in FFT has the same hops
+        let s = fft(8);
+        let g = TaskGraph::from_edges(s.n, &unit(&s.edges));
+        let levels = g.levels();
+        let sink_levels: std::collections::HashSet<usize> =
+            g.sinks().iter().map(|&t| levels[t]).collect();
+        assert_eq!(sink_levels.len(), 1);
+    }
+
+    #[test]
+    fn md_is_valid_dag_with_41_tasks() {
+        let s = molecular_dynamics();
+        assert_eq!(s.n, 41);
+        let g = TaskGraph::from_edges(s.n, &unit(&s.edges));
+        assert!(g.sources().len() > 1, "MD has multiple entries");
+        assert_eq!(g.sinks(), vec![40]);
+        // every task is reachable / co-reachable (no isolated tasks)
+        for t in 0..41 {
+            assert!(
+                g.in_degree(t) + g.out_degree(t) > 0,
+                "task {t} isolated"
+            );
+        }
+    }
+
+    #[test]
+    fn ew_structure() {
+        let s = epigenomics(6);
+        assert_eq!(s.n, 1 + 24 + 3);
+        let g = TaskGraph::from_edges(s.n, &unit(&s.edges));
+        assert_eq!(g.sources().len(), 1);
+        assert_eq!(g.sinks().len(), 1);
+        // wider than tall: width g, height 8
+        assert_eq!(g.width(), 6);
+    }
+
+    #[test]
+    fn weighted_instance_attaches_costs() {
+        let s = gaussian_elimination(6);
+        let plat = Platform::uniform(4, 1.0, 0.0);
+        let inst = weighted_instance(&s, 1.0, 50.0, &CostModel::Classic { beta: 0.5 }, &plat, 3);
+        assert_eq!(inst.comp.len(), s.n * 4);
+        assert_eq!(inst.graph.num_edges(), s.edges.len());
+        assert!(inst.comp.iter().all(|&c| c > 0.0));
+    }
+
+    fn unit(edges: &[(usize, usize)]) -> Vec<(usize, usize, f64)> {
+        edges.iter().map(|&(s, d)| (s, d, 1.0)).collect()
+    }
+}

@@ -1,0 +1,86 @@
+//! # CEFT — Critical Earliest Finish Time
+//!
+//! A production-quality reproduction of *"Mutual Inclusivity of the Critical
+//! Path and its Partial Schedule on Heterogeneous Systems"* (Vasudevan &
+//! Gregg, 2017).
+//!
+//! The paper's thesis: on a heterogeneous machine the critical path of a task
+//! DAG cannot be defined independently of a mapping of tasks to processor
+//! classes. The CEFT dynamic program (Algorithm 1 in the paper,
+//! [`cp::ceft`] here) finds, in `O(P²e)` time, both the length of the true
+//! critical path *and* the partial assignment of its tasks to processor
+//! classes. The partial schedule is then injected into CPOP
+//! ([`sched::ceft_cpop`]) and into HEFT's ranking functions
+//! ([`sched::ceft_heft`]).
+//!
+//! ## Crate layout
+//!
+//! * [`graph`] — task DAGs: construction, topological structure, random
+//!   (Topcuoglu-style) and real-world (FFT / Gaussian elimination /
+//!   molecular dynamics / epigenomics) generators.
+//! * [`platform`] — heterogeneous processor graphs, communication model,
+//!   and the two execution-cost models from the paper (eq. 5 "classic",
+//!   eq. 6 "two-weight").
+//! * [`cp`] — critical-path algorithms: CEFT (the paper's contribution),
+//!   CPOP's mean-value critical path, the min-execution-time critical path,
+//!   and `CP_MIN` (the SLR denominator).
+//! * [`sched`] — list schedulers: HEFT, CPOP, CEFT-CPOP, and the
+//!   CEFT-ranked HEFT variants, all over a shared insertion-based core.
+//! * [`metrics`] — makespan, speedup, SLR, slack, and pairwise
+//!   win/tie/loss comparison.
+//! * [`exp`] — the experiment harness that regenerates every table and
+//!   figure of the paper's evaluation section.
+//! * [`runtime`] — PJRT-backed execution of the AOT-compiled JAX/Pallas
+//!   relaxation kernel (`artifacts/*.hlo.txt`), plus the accelerated CEFT
+//!   backend that uses it.
+//! * [`coordinator`] — the layer-3 orchestrator: job queue, worker pool,
+//!   progress, and result sinks for large sweeps.
+//! * [`util`] — substrates built from scratch for this offline image:
+//!   deterministic RNG, statistics, a thread pool, CSV / JSON writers, a
+//!   micro-benchmark harness and a property-test harness.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use ceft::graph::TaskGraph;
+//! use ceft::platform::Platform;
+//! use ceft::cp::ceft::find_critical_path;
+//!
+//! // diamond DAG: 0 -> {1,2} -> 3, data sizes on edges
+//! let g = TaskGraph::from_edges(4, &[(0, 1, 10.0), (0, 2, 10.0), (1, 3, 10.0), (2, 3, 10.0)]);
+//! // two processor classes, uniform comm
+//! let plat = Platform::uniform(2, 1.0, 0.0);
+//! // explicit v x P execution-cost matrix (row-major, task-major)
+//! let comp = vec![
+//!     1.0, 8.0, // task 0: fast on class 0
+//!     9.0, 2.0, // task 1: fast on class 1
+//!     4.0, 4.0, // task 2
+//!     1.0, 9.0, // task 3: fast on class 0
+//! ];
+//! let cp = find_critical_path(&g, &plat, &comp);
+//! assert!(cp.length > 0.0);
+//! assert_eq!(cp.path.first().unwrap().task, 0);
+//! assert_eq!(cp.path.last().unwrap().task, 3);
+//! ```
+
+pub mod coordinator;
+pub mod cp;
+pub mod exp;
+pub mod graph;
+pub mod metrics;
+pub mod platform;
+pub mod runtime;
+pub mod sched;
+pub mod util;
+
+/// Convenience prelude for examples and downstream users.
+pub mod prelude {
+    pub use crate::cp::ceft::{find_critical_path, CriticalPath, PathStep};
+    pub use crate::cp::cpmin::cp_min_cost;
+    pub use crate::graph::{generator::RggParams, realworld, TaskGraph};
+    pub use crate::metrics::{makespan, slack, slr, speedup};
+    pub use crate::platform::{CostModel, Platform};
+    pub use crate::sched::{
+        ceft_cpop::CeftCpop, cpop::Cpop, heft::Heft, Schedule, Scheduler,
+    };
+}

@@ -1,0 +1,288 @@
+//! `repro` — the CEFT command-line driver.
+//!
+//! Subcommands:
+//!
+//! * `repro experiment <id>` — regenerate a paper table/figure
+//!   (`table3`, `fig7`..`fig20`, or `all`) at a chosen `--scale`.
+//! * `repro schedule` — generate one instance and print every algorithm's
+//!   schedule metrics (quick inspection of a single cell).
+//! * `repro cp` — print the CEFT critical path (with assignment) of one
+//!   instance next to CPOP's estimate.
+//! * `repro gengraph` — emit a generated instance as JSON or DOT.
+//! * `repro runtime-check` — load the PJRT artifacts and cross-validate the
+//!   accelerated CEFT backend against the pure-rust one.
+
+use ceft::coordinator::{Coordinator, EXPERIMENT_IDS};
+use ceft::cp::ceft::find_critical_path;
+use ceft::cp::ranks::cpop_critical_path;
+use ceft::exp::cells::{grid, Scale, Workload};
+use ceft::exp::run::{build_instance, run_cell, ALGOS};
+use ceft::graph::io;
+use ceft::util::cli::Args;
+use ceft::sched::Scheduler as _;
+use ceft::util::pool;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    }
+    let cmd = argv[0].as_str();
+    let rest = &argv[1..];
+    let code = match cmd {
+        "experiment" => cmd_experiment(rest),
+        "schedule" => cmd_schedule(rest),
+        "cp" => cmd_cp(rest),
+        "gengraph" => cmd_gengraph(rest),
+        "runtime-check" => cmd_runtime_check(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            0
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{}", usage());
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    format!(
+        "repro — CEFT critical paths & schedules on heterogeneous systems\n\n\
+         USAGE:\n  repro <command> [options]\n\n\
+         COMMANDS:\n\
+         \x20 experiment <id>   regenerate a paper table/figure ({})\n\
+         \x20 schedule          run every scheduler on one generated instance\n\
+         \x20 cp                print CEFT vs CPOP critical paths for one instance\n\
+         \x20 gengraph          emit a generated instance (JSON or DOT)\n\
+         \x20 runtime-check     validate the PJRT artifact backend\n\n\
+         Run `repro <command> --help` for options.",
+        EXPERIMENT_IDS.join("|")
+    )
+}
+
+fn parse_or_exit(args: Args, tokens: &[String]) -> ceft::util::cli::Parsed {
+    match args.parse(tokens) {
+        Ok(p) => p,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn workload_of(name: &str) -> Workload {
+    match name {
+        "rgg-classic" | "classic" => Workload::RggClassic,
+        "rgg-low" | "low" => Workload::RggLow,
+        "rgg-medium" | "medium" => Workload::RggMedium,
+        "rgg-high" | "high" => Workload::RggHigh,
+        other => {
+            eprintln!("unknown workload {other:?} (rgg-classic|rgg-low|rgg-medium|rgg-high)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_experiment(tokens: &[String]) -> i32 {
+    let args = Args::new("repro experiment", "regenerate a paper table/figure")
+        .positional("id", "table3 | fig7..fig20 | all")
+        .opt("scale", Some("paper-small"), "full | paper-small | smoke")
+        .opt("threads", None, "worker threads (default: all cores)")
+        .opt("out", Some("results"), "output directory for CSVs")
+        .flag("quiet", "suppress progress output");
+    let p = parse_or_exit(args, tokens);
+    let id = p.req("id").to_string();
+    if !EXPERIMENT_IDS.contains(&id.as_str()) {
+        eprintln!("unknown experiment id {id:?}; valid: {}", EXPERIMENT_IDS.join(", "));
+        return 2;
+    }
+    let scale = match Scale::parse(p.req("scale")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let threads = p
+        .get_parse::<usize>("threads")
+        .unwrap_or_else(pool::default_threads);
+    let mut coord = Coordinator::new(
+        threads,
+        scale,
+        p.req("out").into(),
+        !p.is_set("quiet"),
+    );
+    let produced = match coord.produce_and_write(&id) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            return 1;
+        }
+    };
+    for t in &produced {
+        println!("\n# {}", t.name);
+        print!("{}", t.table.to_ascii());
+    }
+    0
+}
+
+/// Shared instance options for `schedule`, `cp`, `gengraph`.
+fn instance_args(program: &str, about: &str) -> Args {
+    Args::new(program, about)
+        .opt("workload", Some("rgg-high"), "rgg-classic|rgg-low|rgg-medium|rgg-high")
+        .opt("n", Some("128"), "number of tasks")
+        .opt("out-degree", Some("4"), "average out-degree")
+        .opt("ccr", Some("1.0"), "communication-to-computation ratio")
+        .opt("alpha", Some("0.5"), "shape parameter")
+        .opt("beta", Some("50"), "heterogeneity percent")
+        .opt("gamma", Some("0.25"), "skewness")
+        .opt("p", Some("8"), "number of processors")
+        .opt("seed", Some("0"), "cell index / seed")
+        .flag("gantt", "render a Gantt chart of the CEFT-CPOP schedule")
+}
+
+fn cell_from(p: &ceft::util::cli::Parsed) -> ceft::exp::cells::Cell {
+    ceft::exp::cells::Cell {
+        workload: workload_of(p.req("workload")),
+        n: p.get_parse("n").unwrap(),
+        out_degree: p.get_parse("out-degree").unwrap(),
+        ccr: p.get_parse("ccr").unwrap(),
+        alpha: p.get_parse("alpha").unwrap(),
+        beta_pct: p.get_parse("beta").unwrap(),
+        gamma: p.get_parse("gamma").unwrap(),
+        p: p.get_parse("p").unwrap(),
+        index: p.get_parse("seed").unwrap(),
+    }
+}
+
+fn cmd_schedule(tokens: &[String]) -> i32 {
+    let args = instance_args("repro schedule", "run every scheduler on one instance");
+    let parsed = parse_or_exit(args, tokens);
+    let cell = cell_from(&parsed);
+    let row = run_cell(&cell);
+    println!(
+        "instance: {} n={} p={} ccr={} alpha={} beta={} gamma={}",
+        row.workload, row.n, row.p, row.ccr, row.alpha, row.beta_pct, row.gamma
+    );
+    println!(
+        "CPL: ceft={:.2} cpop_est={:.2} cpop_realized={:.2} minexec={:.2} cp_min={:.2}",
+        row.cpl_ceft, row.cpl_cpop, row.cpl_cpop_realized, row.cpl_minexec, row.cp_min
+    );
+    let mut t = ceft::util::csv::Table::new(vec![
+        "algorithm", "makespan", "speedup", "slr", "slack",
+    ]);
+    for (i, a) in ALGOS.iter().enumerate() {
+        let r = &row.algos[i];
+        t.push_row(vec![
+            a.to_string(),
+            format!("{:.2}", r.makespan),
+            format!("{:.3}", r.speedup),
+            format!("{:.3}", r.slr),
+            format!("{:.2}", r.slack),
+        ]);
+    }
+    print!("{}", t.to_ascii());
+    if parsed.is_set("gantt") {
+        let (platform, inst) = build_instance(&cell);
+        let s = ceft::sched::ceft_cpop::CeftCpop.schedule(&inst.graph, &platform, &inst.comp);
+        println!("\nCEFT-CPOP Gantt:");
+        print!("{}", ceft::sched::gantt::render(&s, 100));
+    }
+    0
+}
+
+fn cmd_cp(tokens: &[String]) -> i32 {
+    let args = instance_args("repro cp", "print CEFT vs CPOP critical paths");
+    let parsed = parse_or_exit(args, tokens);
+    let cell = cell_from(&parsed);
+    let (platform, inst) = build_instance(&cell);
+    let ceft_cp = find_critical_path(&inst.graph, &platform, &inst.comp);
+    let (cpop_cp, cpop_len) = cpop_critical_path(&inst.graph, &platform, &inst.comp);
+    println!("CEFT critical path (length {:.2}):", ceft_cp.length);
+    for s in &ceft_cp.path {
+        println!("  task {:>5} -> class {}", s.task, s.class);
+    }
+    println!("\nCPOP critical path (mean-value estimate {cpop_len:.2}):");
+    println!(
+        "  tasks: {:?} (all pinned to one processor by CPOP)",
+        cpop_cp
+    );
+    0
+}
+
+fn cmd_gengraph(tokens: &[String]) -> i32 {
+    let args = instance_args("repro gengraph", "emit a generated instance")
+        .opt("format", Some("json"), "json | dot");
+    let parsed = parse_or_exit(args, tokens);
+    let cell = cell_from(&parsed);
+    let (platform, inst) = build_instance(&cell);
+    match parsed.req("format") {
+        "json" => println!("{}", io::instance_to_json(&inst).to_string()),
+        "dot" => {
+            let cp = find_critical_path(&inst.graph, &platform, &inst.comp);
+            print!("{}", io::to_dot(&inst.graph, &cp.tasks()));
+        }
+        other => {
+            eprintln!("unknown format {other:?}");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_runtime_check(tokens: &[String]) -> i32 {
+    let args = Args::new(
+        "repro runtime-check",
+        "load PJRT artifacts and cross-validate vs pure-rust CEFT",
+    )
+    .opt("p", Some("8"), "processor count (artifact to test)")
+    .opt("n", Some("128"), "tasks in the validation instance");
+    let parsed = parse_or_exit(args, tokens);
+    let p: usize = parsed.get_parse("p").unwrap();
+    let n: usize = parsed.get_parse("n").unwrap();
+    let rt = match ceft::runtime::PjrtRuntime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT client failed: {e}");
+            return 1;
+        }
+    };
+    println!("PJRT platform: {}", rt.platform_name());
+    if !rt.has_artifact(p) {
+        eprintln!(
+            "artifact {} missing — run `make artifacts` first",
+            ceft::runtime::artifact_name(p)
+        );
+        return 1;
+    }
+    let acc = ceft::runtime::AcceleratedCeft::new(rt);
+    let cells = grid(Workload::RggClassic, Scale::Smoke);
+    let mut cell = cells[0];
+    cell.n = n;
+    cell.p = p;
+    let (platform, inst) = build_instance(&cell);
+    let cpu = find_critical_path(&inst.graph, &platform, &inst.comp);
+    match acc.find_critical_path(&inst.graph, &platform, &inst.comp) {
+        Ok(accel) => {
+            let rel = (cpu.length - accel.length).abs() / cpu.length.max(1e-12);
+            println!(
+                "pure-rust CPL = {:.4}, accelerated CPL = {:.4}, rel diff = {:.2e}",
+                cpu.length, accel.length, rel
+            );
+            if rel < 1e-4 && cpu.tasks() == accel.tasks() {
+                println!("runtime-check OK (paths identical, lengths within f32 tolerance)");
+                0
+            } else {
+                eprintln!("runtime-check FAILED");
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("accelerated CEFT failed: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,226 @@
+//! Comparison metrics (§7.3 of the paper): makespan, speedup, SLR, slack,
+//! and pairwise longer/equal/shorter tallies.
+
+use crate::cp::cpmin::cp_min_cost;
+use crate::graph::TaskGraph;
+use crate::platform::{Costs, Platform};
+use crate::sched::Schedule;
+
+/// Makespan of a schedule (§7.3.3 context).
+pub fn makespan(s: &Schedule) -> f64 {
+    s.makespan()
+}
+
+/// Best sequential execution time: all tasks on the single processor
+/// minimising the total (the numerator of eq. 8). Independent of the
+/// scheduling algorithm.
+pub fn serial_time(comp: &[f64], p: usize) -> f64 {
+    let v = comp.len() / p;
+    let costs = Costs { comp, p };
+    (0..p)
+        .map(|j| (0..v).map(|t| costs.get(t, j)).sum::<f64>())
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Speedup (eq. 8): best sequential time / makespan.
+pub fn speedup(comp: &[f64], p: usize, makespan: f64) -> f64 {
+    serial_time(comp, p) / makespan
+}
+
+/// Schedule length ratio (eq. 9): makespan normalised by the
+/// minimum-computation critical path. `>= 1` for every valid schedule.
+pub fn slr(graph: &TaskGraph, comp: &[f64], p: usize, makespan: f64) -> f64 {
+    makespan / cp_min_cost(graph, comp, p)
+}
+
+/// Slack (eq. 10): mean over tasks of `M − b_level(t) − t_level(t)`,
+/// computed on the *scheduled* DAG — each task weighted by its realised
+/// execution cost on its assigned processor, each edge by the realised
+/// communication cost between the assigned processors.
+pub fn slack(graph: &TaskGraph, platform: &Platform, comp: &[f64], s: &Schedule) -> f64 {
+    let costs = Costs {
+        comp,
+        p: platform.num_classes(),
+    };
+    let v = graph.num_tasks();
+    let m = s.makespan();
+    let w = |t: usize| costs.get(t, s.assignments[t].proc);
+    let c = |k: usize, t: usize, data: f64| {
+        platform.comm_cost(s.assignments[k].proc, s.assignments[t].proc, data)
+    };
+    // t_level: longest path from an entry up to (excluding) t
+    let mut tlevel = vec![0f64; v];
+    for &t in graph.topo_order() {
+        let mut best = 0f64;
+        for &(k, data) in graph.preds(t) {
+            best = best.max(tlevel[k] + w(k) + c(k, t, data));
+        }
+        tlevel[t] = best;
+    }
+    // b_level: longest path from t (inclusive) to an exit
+    let mut blevel = vec![0f64; v];
+    for &t in graph.topo_order().iter().rev() {
+        let mut best = 0f64;
+        for &(su, data) in graph.succs(t) {
+            best = best.max(c(t, su, data) + blevel[su]);
+        }
+        blevel[t] = w(t) + best;
+    }
+    let total: f64 = (0..v).map(|t| m - blevel[t] - tlevel[t]).sum();
+    total / v as f64
+}
+
+/// Outcome of a pairwise comparison with relative tolerance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    /// left value is larger
+    Longer,
+    /// equal within tolerance
+    Equal,
+    /// left value is smaller
+    Shorter,
+}
+
+/// Compare `a` vs `b` with relative epsilon (the Table 3
+/// longer/equal/shorter classification).
+pub fn compare(a: f64, b: f64, rel_eps: f64) -> Cmp {
+    let tol = rel_eps * a.abs().max(b.abs()).max(1e-30);
+    if (a - b).abs() <= tol {
+        Cmp::Equal
+    } else if a > b {
+        Cmp::Longer
+    } else {
+        Cmp::Shorter
+    }
+}
+
+/// Tally of pairwise outcomes, convertible to Table 3 percentages.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WinTally {
+    /// count of Longer outcomes
+    pub longer: u64,
+    /// count of Equal outcomes
+    pub equal: u64,
+    /// count of Shorter outcomes
+    pub shorter: u64,
+}
+
+impl WinTally {
+    /// Record one comparison.
+    pub fn push(&mut self, c: Cmp) {
+        match c {
+            Cmp::Longer => self.longer += 1,
+            Cmp::Equal => self.equal += 1,
+            Cmp::Shorter => self.shorter += 1,
+        }
+    }
+
+    /// Merge another tally.
+    pub fn merge(&mut self, o: &WinTally) {
+        self.longer += o.longer;
+        self.equal += o.equal;
+        self.shorter += o.shorter;
+    }
+
+    /// Total comparisons recorded.
+    pub fn total(&self) -> u64 {
+        self.longer + self.equal + self.shorter
+    }
+
+    /// `(longer%, equal%, shorter%)`.
+    pub fn percentages(&self) -> (f64, f64, f64) {
+        let n = self.total().max(1) as f64;
+        (
+            100.0 * self.longer as f64 / n,
+            100.0 * self.equal as f64 / n,
+            100.0 * self.shorter as f64 / n,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::sched::{Placement, Scheduler};
+
+    fn chain() -> (TaskGraph, Platform, Vec<f64>) {
+        let g = TaskGraph::from_edges(3, &[(0, 1, 10.0), (1, 2, 10.0)]);
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let comp = vec![2.0, 4.0, 2.0, 4.0, 2.0, 4.0];
+        (g, plat, comp)
+    }
+
+    #[test]
+    fn serial_time_picks_best_processor() {
+        let (_, _, comp) = chain();
+        assert_eq!(serial_time(&comp, 2), 6.0);
+    }
+
+    #[test]
+    fn speedup_of_serial_schedule_is_one() {
+        let (g, plat, comp) = chain();
+        let s = crate::sched::list_schedule(
+            &g,
+            &plat,
+            &comp,
+            &[2.0, 1.0, 0.0],
+            &Placement::MinEft,
+        );
+        // chain on one proc: makespan 6 == best serial
+        assert!((speedup(&comp, 2, s.makespan()) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slr_at_least_one() {
+        let (g, plat, comp) = chain();
+        let s = crate::sched::heft::Heft.schedule(&g, &plat, &comp);
+        assert!(slr(&g, &comp, 2, s.makespan()) >= 1.0 - 1e-12);
+    }
+
+    #[test]
+    fn slack_zero_on_linear_dag() {
+        // the paper: a linear DAG's schedule has zero slack
+        let (g, plat, comp) = chain();
+        let s = crate::sched::heft::Heft.schedule(&g, &plat, &comp);
+        let sl = slack(&g, &plat, &comp, &s);
+        assert!(sl.abs() < 1e-9, "slack={sl}");
+    }
+
+    #[test]
+    fn slack_positive_on_parallel_dag() {
+        let g = TaskGraph::from_edges(
+            4,
+            &[(0, 1, 0.1), (0, 2, 0.1), (1, 3, 0.1), (2, 3, 0.1)],
+        );
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        // branch 2 much shorter than branch 1 -> it has slack
+        let comp = vec![1.0, 1.0, 50.0, 50.0, 1.0, 1.0, 1.0, 1.0];
+        let s = crate::sched::heft::Heft.schedule(&g, &plat, &comp);
+        assert!(slack(&g, &plat, &comp, &s) > 0.0);
+    }
+
+    #[test]
+    fn compare_with_tolerance() {
+        assert_eq!(compare(1.0, 1.0 + 1e-12, 1e-9), Cmp::Equal);
+        assert_eq!(compare(2.0, 1.0, 1e-9), Cmp::Longer);
+        assert_eq!(compare(1.0, 2.0, 1e-9), Cmp::Shorter);
+    }
+
+    #[test]
+    fn tally_percentages() {
+        let mut t = WinTally::default();
+        t.push(Cmp::Longer);
+        t.push(Cmp::Shorter);
+        t.push(Cmp::Shorter);
+        t.push(Cmp::Equal);
+        let (l, e, s) = t.percentages();
+        assert!((l - 25.0).abs() < 1e-9);
+        assert!((e - 25.0).abs() < 1e-9);
+        assert!((s - 50.0).abs() < 1e-9);
+        let mut t2 = WinTally::default();
+        t2.push(Cmp::Longer);
+        t.merge(&t2);
+        assert_eq!(t.total(), 5);
+    }
+}

@@ -1,0 +1,419 @@
+//! Heterogeneous processor graphs and execution-cost models.
+//!
+//! A [`Platform`] is the paper's resource graph `G_r(V_r, C_r)`: a set of
+//! processor *classes* with a communication startup latency `L(p)` per class
+//! and a bandwidth `c[p][q]` per ordered pair of classes. Communication
+//! between tasks co-located on the same class costs zero (Definition 3).
+//!
+//! Execution costs `C_comp(t, p)` are a dense `v × P` matrix produced by one
+//! of two [`CostModel`]s at generation time:
+//!
+//! * **Classic** (eq. 5): `w_{i,j} ~ U(w_i(1-β/2), w_i(1+β/2))` — the
+//!   Topcuoglu-style heterogeneity factor; a task is at most ~3× faster on
+//!   its best processor than its worst.
+//! * **Two-weight** (eq. 6): tasks and processors carry two weights drawn
+//!   from intervals (I₁, I₂); `cost(t,p) = w₁(t)/W₁(p) + w₀(t)/W₀(p)`. This
+//!   produces *accelerator-like* heterogeneity: a task can be orders of
+//!   magnitude faster on the processor class that matches it.
+
+use crate::util::rng::Xoshiro256;
+
+/// A heterogeneous machine: `P` processor classes with per-class
+/// communication parameters.
+#[derive(Clone, Debug)]
+pub struct Platform {
+    p: usize,
+    /// `L(p)` — communication startup latency paid by the *sender* class.
+    startup: Vec<f64>,
+    /// `c[p*P+q]` — link bandwidth between classes `p` and `q` (data/time).
+    bandwidth: Vec<f64>,
+    /// Two-weight model processor weights `(W0, W1)` per class, when built
+    /// by [`Platform::two_weight`]; empty otherwise.
+    weights: Vec<(f64, f64)>,
+    /// Precomputed mean-comm factors (perf: `mean_comm_cost` is called once
+    /// per edge by every rank computation; recomputing the O(P²) average
+    /// each time made CPOP/HEFT rank sweeps O(P²e) — see EXPERIMENTS.md
+    /// §Perf). `mean_comm_cost(d) = mean_startup + d * mean_inv_bw`.
+    mean_startup: f64,
+    /// mean reciprocal bandwidth over distinct ordered pairs
+    mean_inv_bw: f64,
+}
+
+impl Platform {
+    /// Uniform platform: all links share `bandwidth`, all classes share
+    /// `startup`. This is the communication model of the paper's RGG
+    /// experiments (heterogeneity lives in the edge data volumes).
+    pub fn uniform(p: usize, bandwidth: f64, startup: f64) -> Self {
+        assert!(p >= 1);
+        assert!(bandwidth > 0.0);
+        Self::finish(p, vec![startup; p], vec![bandwidth; p * p], Vec::new())
+    }
+
+    /// Compute the cached mean-comm factors and assemble the platform.
+    fn finish(
+        p: usize,
+        startup: Vec<f64>,
+        bandwidth: Vec<f64>,
+        weights: Vec<(f64, f64)>,
+    ) -> Self {
+        let (mut ms, mut mib) = (0.0, 0.0);
+        if p > 1 {
+            let pairs = (p * (p - 1)) as f64;
+            // each sender's startup is paid for (p-1) destinations
+            ms = startup.iter().sum::<f64>() * (p - 1) as f64 / pairs;
+            for l in 0..p {
+                for j in 0..p {
+                    if l != j {
+                        mib += 1.0 / bandwidth[l * p + j];
+                    }
+                }
+            }
+            mib /= pairs;
+        }
+        Self {
+            p,
+            startup,
+            bandwidth,
+            weights,
+            mean_startup: ms,
+            mean_inv_bw: mib,
+        }
+    }
+
+    /// Fully heterogeneous platform: per-class startup in
+    /// `[startup_lo, startup_hi)`, per-pair bandwidth in `[bw_lo, bw_hi)`
+    /// (symmetric). Models NUMA/cluster-style link heterogeneity (§3 of the
+    /// paper motivates this case).
+    pub fn random_links(
+        p: usize,
+        rng: &mut Xoshiro256,
+        bw_lo: f64,
+        bw_hi: f64,
+        startup_lo: f64,
+        startup_hi: f64,
+    ) -> Self {
+        assert!(p >= 1);
+        let startup = (0..p).map(|_| rng.uniform(startup_lo, startup_hi)).collect();
+        let mut bandwidth = vec![0.0; p * p];
+        for i in 0..p {
+            for j in i..p {
+                let bw = rng.uniform(bw_lo, bw_hi);
+                bandwidth[i * p + j] = bw;
+                bandwidth[j * p + i] = bw;
+            }
+        }
+        Self::finish(p, startup, bandwidth, Vec::new())
+    }
+
+    /// Two-weight-model platform (§7.1): each class draws `(W0, W1)` from
+    /// the resource intervals `I₁ = [1e2, 1e3]`, `I₂ = [1e3, 1e4]`; with
+    /// probability `beta` the order is `(I₁, I₂)`, otherwise interchanged.
+    /// Links are uniform (`bandwidth`, `startup`).
+    pub fn two_weight(
+        p: usize,
+        beta: f64,
+        rng: &mut Xoshiro256,
+        bandwidth: f64,
+        startup: f64,
+    ) -> Self {
+        let mut plat = Self::uniform(p, bandwidth, startup);
+        plat.weights = (0..p)
+            .map(|_| {
+                let a = rng.log_uniform(1e2, 1e3);
+                let b = rng.log_uniform(1e3, 1e4);
+                if rng.chance(beta) {
+                    (a, b)
+                } else {
+                    (b, a)
+                }
+            })
+            .collect();
+        plat
+    }
+
+    /// Number of processor classes `P`.
+    pub fn num_classes(&self) -> usize {
+        self.p
+    }
+
+    /// `L(p)` — startup latency of class `p`.
+    pub fn startup(&self, p: usize) -> f64 {
+        self.startup[p]
+    }
+
+    /// Bandwidth between classes `p` and `q`.
+    pub fn bandwidth(&self, p: usize, q: usize) -> f64 {
+        self.bandwidth[p * self.p + q]
+    }
+
+    /// Two-weight processor weights `(W0, W1)` of class `p`.
+    /// Panics when the platform was not built by [`Platform::two_weight`].
+    pub fn class_weights(&self, p: usize) -> (f64, f64) {
+        self.weights[p]
+    }
+
+    /// Definition 3: communication cost of moving `data` units from a task
+    /// on class `pl` to a task on class `pj`. Zero when co-located.
+    #[inline]
+    pub fn comm_cost(&self, pl: usize, pj: usize, data: f64) -> f64 {
+        if pl == pj {
+            0.0
+        } else {
+            self.startup[pl] + data / self.bandwidth[pl * self.p + pj]
+        }
+    }
+
+    /// Mean communication cost over all *distinct* ordered class pairs —
+    /// the scalarisation CPOP/HEFT use (they "set the comm costs of edges
+    /// with mean values", Algorithm 2 line 2). Zero when `P == 1`.
+    /// O(1): the pair averages are precomputed at construction.
+    #[inline]
+    pub fn mean_comm_cost(&self, data: f64) -> f64 {
+        self.mean_startup + data * self.mean_inv_bw
+    }
+}
+
+/// How execution costs `C_comp(t, p)` are generated.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CostModel {
+    /// eq. 5 — `w_{i,j} ~ U(w_i(1-β/2), w_i(1+β/2))`, β ∈ [0, 1].
+    Classic {
+        /// heterogeneity factor β (paper values {10,25,50,75,95} are
+        /// percentages; pass them /100).
+        beta: f64,
+    },
+    /// eq. 6 — two-weight interval model; the interval pair selects the
+    /// workload family.
+    TwoWeight {
+        /// probability of drawing `(I₁, I₂)` in order (β in §7.1).
+        beta: f64,
+        /// second interval low bound (I₂.lo): 1e3 (low), 1e4 (medium), 1e5 (high)
+        i2_lo: f64,
+        /// second interval high bound (I₂.hi): 1e4 / 1e5 / 1e6
+        i2_hi: f64,
+    },
+}
+
+impl CostModel {
+    /// The two-weight model for the paper's RGG-low workload.
+    pub fn two_weight_low(beta: f64) -> Self {
+        CostModel::TwoWeight {
+            beta,
+            i2_lo: 1e3,
+            i2_hi: 1e4,
+        }
+    }
+
+    /// RGG-medium.
+    pub fn two_weight_medium(beta: f64) -> Self {
+        CostModel::TwoWeight {
+            beta,
+            i2_lo: 1e4,
+            i2_hi: 1e5,
+        }
+    }
+
+    /// RGG-high.
+    pub fn two_weight_high(beta: f64) -> Self {
+        CostModel::TwoWeight {
+            beta,
+            i2_lo: 1e5,
+            i2_hi: 1e6,
+        }
+    }
+
+    /// Generate the dense `v × P` execution-cost matrix for tasks with base
+    /// weights `w` (classic) or fresh two-weight draws (two-weight model).
+    ///
+    /// Returns `(comp, task_scalar_weight)` where `task_scalar_weight[i]` is
+    /// the scalar weight used to scale edge data volumes — always the
+    /// structural base weight `w_i`: the paper's two-weight workload
+    /// families share the classic structure *and edge weights*, differing
+    /// only in execution times (§7.1).
+    pub fn generate(
+        &self,
+        w: &[f64],
+        platform: &Platform,
+        rng: &mut Xoshiro256,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let p = platform.num_classes();
+        let v = w.len();
+        let mut comp = vec![0f64; v * p];
+        let mut scalar = vec![0f64; v];
+        match *self {
+            CostModel::Classic { beta } => {
+                assert!((0.0..=1.0).contains(&beta), "beta must be in [0,1]");
+                for i in 0..v {
+                    for j in 0..p {
+                        comp[i * p + j] =
+                            rng.uniform(w[i] * (1.0 - beta / 2.0), w[i] * (1.0 + beta / 2.0))
+                                .max(1e-9);
+                    }
+                    scalar[i] = w[i];
+                }
+            }
+            CostModel::TwoWeight { beta, i2_lo, i2_hi } => {
+                assert!(
+                    !platform.weights.is_empty(),
+                    "two-weight cost model requires Platform::two_weight"
+                );
+                for i in 0..v {
+                    let a = rng.log_uniform(1e2, 1e3);
+                    let b = rng.log_uniform(i2_lo, i2_hi);
+                    let (w0, w1) = if rng.chance(beta) { (a, b) } else { (b, a) };
+                    for j in 0..p {
+                        let (cap0, cap1) = platform.class_weights(j);
+                        comp[i * p + j] = w1 / cap1 + w0 / cap0;
+                    }
+                    // Edge-volume scale for CCR: the paper leaves the
+                    // two-weight vertex "weight" scalar unspecified (tasks
+                    // have two weights). We use the task's *minimum*
+                    // execution time so CCR measures communication against
+                    // the cost a well-mapped task actually has — using the
+                    // cross-class mean instead would let the slow classes
+                    // inflate every edge and drown the heterogeneity signal
+                    // (DESIGN.md §6 records this interpretation).
+                    let mut mn = f64::INFINITY;
+                    for j in 0..p {
+                        mn = mn.min(comp[i * p + j]);
+                    }
+                    scalar[i] = mn;
+                }
+            }
+        }
+        (comp, scalar)
+    }
+}
+
+/// Dense execution-cost matrix accessor helpers (row-major `v × P`).
+#[derive(Clone, Debug)]
+pub struct Costs<'a> {
+    /// the matrix
+    pub comp: &'a [f64],
+    /// number of classes
+    pub p: usize,
+}
+
+impl<'a> Costs<'a> {
+    /// `C_comp(t, j)`.
+    #[inline]
+    pub fn get(&self, t: usize, j: usize) -> f64 {
+        self.comp[t * self.p + j]
+    }
+
+    /// Mean execution cost of task `t` over classes — the CPOP/HEFT
+    /// scalarisation.
+    pub fn mean(&self, t: usize) -> f64 {
+        let row = &self.comp[t * self.p..(t + 1) * self.p];
+        row.iter().sum::<f64>() / self.p as f64
+    }
+
+    /// Fastest class for task `t` (lowest cost; ties at lowest id).
+    pub fn argmin(&self, t: usize) -> usize {
+        let row = &self.comp[t * self.p..(t + 1) * self.p];
+        let mut best = 0;
+        for j in 1..self.p {
+            if row[j] < row[best] {
+                best = j;
+            }
+        }
+        best
+    }
+
+    /// Minimum execution cost of task `t`.
+    pub fn min(&self, t: usize) -> f64 {
+        let row = &self.comp[t * self.p..(t + 1) * self.p];
+        row.iter().fold(f64::INFINITY, |a, &b| a.min(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_comm_costs() {
+        let p = Platform::uniform(3, 2.0, 0.5);
+        assert_eq!(p.comm_cost(0, 0, 100.0), 0.0);
+        assert_eq!(p.comm_cost(0, 1, 100.0), 0.5 + 50.0);
+        assert_eq!(p.num_classes(), 3);
+    }
+
+    #[test]
+    fn mean_comm_excludes_diagonal() {
+        let p = Platform::uniform(2, 1.0, 0.0);
+        // only pairs (0,1) and (1,0), each costing data
+        assert_eq!(p.mean_comm_cost(10.0), 10.0);
+        let p1 = Platform::uniform(1, 1.0, 0.0);
+        assert_eq!(p1.mean_comm_cost(10.0), 0.0);
+    }
+
+    #[test]
+    fn random_links_symmetric_bandwidth() {
+        let mut rng = Xoshiro256::new(1);
+        let p = Platform::random_links(4, &mut rng, 0.5, 1.5, 0.0, 0.1);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(p.bandwidth(i, j), p.bandwidth(j, i));
+                assert!(p.bandwidth(i, j) >= 0.5 && p.bandwidth(i, j) < 1.5);
+            }
+        }
+    }
+
+    #[test]
+    fn classic_model_range() {
+        let mut rng = Xoshiro256::new(2);
+        let plat = Platform::uniform(4, 1.0, 0.0);
+        let w = vec![100.0; 10];
+        let (comp, scalar) = CostModel::Classic { beta: 0.5 }.generate(&w, &plat, &mut rng);
+        assert_eq!(comp.len(), 40);
+        assert_eq!(scalar, w);
+        for &c in &comp {
+            assert!((75.0..=125.0).contains(&c), "c={c}");
+        }
+    }
+
+    #[test]
+    fn two_weight_model_heterogeneity() {
+        let mut rng = Xoshiro256::new(3);
+        let plat = Platform::two_weight(8, 0.5, &mut rng, 1.0, 0.0);
+        let w = vec![1.0; 200]; // base weights unused by two-weight
+        let (comp, scalar) =
+            CostModel::two_weight_high(0.5).generate(&w, &plat, &mut rng);
+        let costs = Costs { comp: &comp, p: 8 };
+        // expect large best/worst ratios for at least some tasks
+        let mut max_ratio: f64 = 0.0;
+        for t in 0..200 {
+            let mut worst: f64 = 0.0;
+            for j in 0..8 {
+                worst = worst.max(costs.get(t, j));
+            }
+            max_ratio = max_ratio.max(worst / costs.min(t));
+        }
+        assert!(
+            max_ratio > 3.0,
+            "two-weight high model should exceed classic's 3x bound, got {max_ratio}"
+        );
+        // scalar weight is the best-case execution time (CCR anchor)
+        assert!((scalar[0] - costs.min(0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn costs_accessors() {
+        let comp = vec![3.0, 1.0, 2.0, 5.0, 5.0, 5.0];
+        let c = Costs { comp: &comp, p: 3 };
+        assert_eq!(c.get(0, 1), 1.0);
+        assert_eq!(c.argmin(0), 1);
+        assert_eq!(c.min(0), 1.0);
+        assert!((c.mean(0) - 2.0).abs() < 1e-12);
+        assert_eq!(c.argmin(1), 0); // ties -> lowest id
+    }
+
+    #[test]
+    #[should_panic(expected = "two-weight cost model requires")]
+    fn two_weight_needs_platform_weights() {
+        let mut rng = Xoshiro256::new(4);
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        CostModel::two_weight_low(0.5).generate(&[1.0], &plat, &mut rng);
+    }
+}

@@ -1,0 +1,366 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The compile path (`make artifacts`) lowers the Layer-1 Pallas relaxation
+//! kernel, wrapped in the Layer-2 JAX function, to HLO *text* (see
+//! `python/compile/aot.py`; text rather than serialized proto because the
+//! crate's xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids).
+//! This module loads those artifacts through the `xla` crate
+//! (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`) and exposes them as a batched CEFT edge-relaxation evaluator.
+//!
+//! Python never runs at this point: the artifacts are self-contained.
+
+use crate::cp::ceft::{CeftTable, CriticalPath};
+use crate::graph::TaskGraph;
+use crate::platform::{Costs, Platform};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Batch size the artifacts are compiled for (must match `aot.py`).
+pub const BATCH: usize = 256;
+/// Processor-class counts with a compiled artifact (must match `aot.py`).
+pub const CLASS_SIZES: [usize; 6] = [2, 4, 8, 16, 32, 64];
+
+/// Artifact file name for a class count.
+pub fn artifact_name(p: usize) -> String {
+    format!("ceft_relax_b{BATCH}_p{p}.hlo.txt")
+}
+
+/// Directory holding the artifacts (env `CEFT_ARTIFACTS` override, else
+/// `artifacts/` relative to the working directory).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("CEFT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// A PJRT CPU client with a cache of compiled executables, one per class
+/// count.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    exes: Mutex<HashMap<usize, xla::PjRtLoadedExecutable>>,
+    dir: PathBuf,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client rooted at the default artifacts directory.
+    pub fn new() -> Result<Self> {
+        Self::with_dir(artifacts_dir())
+    }
+
+    /// Create a CPU PJRT client rooted at `dir`.
+    pub fn with_dir<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            exes: Mutex::new(HashMap::new()),
+            dir: dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Platform name reported by PJRT (e.g. "cpu").
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Whether the artifact for `p` classes exists on disk.
+    pub fn has_artifact(&self, p: usize) -> bool {
+        self.dir.join(artifact_name(p)).exists()
+    }
+
+    /// Load (or fetch from cache) the executable for `p` classes.
+    fn executable(&self, p: usize) -> Result<()> {
+        let mut exes = self.exes.lock().unwrap();
+        if exes.contains_key(&p) {
+            return Ok(());
+        }
+        let path = self.dir.join(artifact_name(p));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("load {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        exes.insert(p, exe);
+        Ok(())
+    }
+
+    /// One batched CEFT edge relaxation on the accelerator:
+    ///
+    /// `out[b, j] = min_l ( F[b, l] + (l==j ? 0 : L[l] + data[b] * invbw[l, j]) ) + comp[b, j]`
+    ///
+    /// Shapes: `f` is `BATCH×p` (parent CEFT rows), `data` is `BATCH`
+    /// (edge payloads), `l` is `p` (startup latencies), `invbw` is `p×p`
+    /// (reciprocal bandwidths, diagonal ignored), `comp` is `BATCH×p`
+    /// (child execution costs). Returns `BATCH×p`.
+    pub fn relax_batch(
+        &self,
+        p: usize,
+        f: &[f32],
+        data: &[f32],
+        l: &[f32],
+        invbw: &[f32],
+        comp: &[f32],
+    ) -> Result<Vec<f32>> {
+        assert_eq!(f.len(), BATCH * p);
+        assert_eq!(data.len(), BATCH);
+        assert_eq!(l.len(), p);
+        assert_eq!(invbw.len(), p * p);
+        assert_eq!(comp.len(), BATCH * p);
+        self.executable(p)?;
+        let exes = self.exes.lock().unwrap();
+        let exe = exes.get(&p).unwrap();
+        let lit = |v: &[f32], shape: &[i64]| -> Result<xla::Literal> {
+            xla::Literal::vec1(v)
+                .reshape(shape)
+                .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+        };
+        let b = BATCH as i64;
+        let pi = p as i64;
+        let args = [
+            lit(f, &[b, pi])?,
+            lit(data, &[b])?,
+            lit(l, &[pi])?,
+            lit(invbw, &[pi, pi])?,
+            lit(comp, &[b, pi])?,
+        ];
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        // aot.py lowers with return_tuple=True -> 1-tuple
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+/// CEFT evaluated through the PJRT artifact: fills the DP table by batching
+/// all parent edges of each topological level into `BATCH`-sized artifact
+/// calls, then reconstructs the path (and backpointers along it) in rust.
+///
+/// This is the "accelerated backend" of the coordinator; it must agree with
+/// [`crate::cp::ceft::find_critical_path`] to float32 tolerance (asserted by
+/// the integration tests and the `accelerated_ceft` example).
+pub struct AcceleratedCeft {
+    rt: PjrtRuntime,
+}
+
+impl AcceleratedCeft {
+    /// Wrap a runtime.
+    pub fn new(rt: PjrtRuntime) -> Self {
+        Self { rt }
+    }
+
+    /// Whether `p` classes are supported by the compiled artifacts.
+    pub fn supports(&self, p: usize) -> bool {
+        CLASS_SIZES.contains(&p) && self.rt.has_artifact(p)
+    }
+
+    /// Compute the CEFT table on the accelerator.
+    pub fn ceft_table(
+        &self,
+        graph: &TaskGraph,
+        platform: &Platform,
+        comp: &[f64],
+    ) -> Result<CeftTable> {
+        let p = platform.num_classes();
+        if !CLASS_SIZES.contains(&p) {
+            return Err(anyhow!("no artifact for p={p}"));
+        }
+        let v = graph.num_tasks();
+        let costs = Costs { comp, p };
+        let l: Vec<f32> = (0..p).map(|j| platform.startup(j) as f32).collect();
+        let mut invbw = vec![0f32; p * p];
+        for a in 0..p {
+            for b in 0..p {
+                invbw[a * p + b] = if a == b {
+                    0.0
+                } else {
+                    (1.0 / platform.bandwidth(a, b)) as f32
+                };
+            }
+        }
+        let mut table = vec![0f64; v * p];
+        // process tasks level by level; batch the edge relaxations
+        let levels = graph.levels();
+        let max_level = levels.iter().copied().max().unwrap_or(0);
+        let mut tasks_at: Vec<Vec<usize>> = vec![Vec::new(); max_level + 1];
+        for t in 0..v {
+            tasks_at[levels[t]].push(t);
+        }
+        // edge batch buffers
+        let mut fbuf = vec![0f32; BATCH * p];
+        let mut dbuf = vec![0f32; BATCH];
+        let mut cbuf = vec![0f32; BATCH * p];
+        for level_tasks in &tasks_at {
+            // collect (task, parent, data) tuples for this level
+            let mut items: Vec<(usize, usize, f64)> = Vec::new();
+            for &t in level_tasks {
+                if graph.preds(t).is_empty() {
+                    for j in 0..p {
+                        table[t * p + j] = costs.get(t, j);
+                    }
+                } else {
+                    for &(k, data) in graph.preds(t) {
+                        items.push((t, k, data));
+                    }
+                }
+            }
+            // relax in BATCH-sized chunks; aggregate max over parents per task
+            for chunk in items.chunks(BATCH) {
+                for (i, &(t, k, data)) in chunk.iter().enumerate() {
+                    for j in 0..p {
+                        fbuf[i * p + j] = table[k * p + j] as f32;
+                        cbuf[i * p + j] = costs.get(t, j) as f32;
+                    }
+                    dbuf[i] = data as f32;
+                }
+                // pad the tail with copies of the first item (results ignored)
+                for i in chunk.len()..BATCH {
+                    for j in 0..p {
+                        fbuf[i * p + j] = 0.0;
+                        cbuf[i * p + j] = 0.0;
+                    }
+                    dbuf[i] = 0.0;
+                }
+                let out = self.rt.relax_batch(p, &fbuf, &dbuf, &l, &invbw, &cbuf)?;
+                for (i, &(t, _, _)) in chunk.iter().enumerate() {
+                    for j in 0..p {
+                        let cand = out[i * p + j] as f64;
+                        let cell = &mut table[t * p + j];
+                        if cand > *cell {
+                            *cell = cand;
+                        }
+                    }
+                }
+            }
+        }
+        // Backpointers are not produced by the kernel; reconstruct them in
+        // rust (cheap second pass, same recurrence, f64).
+        let bt = crate::cp::ceft::ceft_table(graph, platform, comp);
+        Ok(CeftTable {
+            p,
+            table,
+            backptr: bt.backptr,
+        })
+    }
+
+    /// Full critical path via the accelerator table (path structure from the
+    /// f64 backpointer pass, length from the accelerated table).
+    pub fn find_critical_path(
+        &self,
+        graph: &TaskGraph,
+        platform: &Platform,
+        comp: &[f64],
+    ) -> Result<CriticalPath> {
+        let t = self.ceft_table(graph, platform, comp)?;
+        Ok(crate::cp::ceft::critical_path_from_table(graph, &t))
+    }
+}
+
+/// Reference (pure-rust, f32) implementation of the artifact's relaxation,
+/// used by unit tests to validate [`PjrtRuntime::relax_batch`] numerics
+/// without requiring the artifacts to exist.
+pub fn relax_batch_reference(
+    p: usize,
+    f: &[f32],
+    data: &[f32],
+    l: &[f32],
+    invbw: &[f32],
+    comp: &[f32],
+) -> Vec<f32> {
+    let b = data.len();
+    let mut out = vec![0f32; b * p];
+    for i in 0..b {
+        for j in 0..p {
+            let mut best = f32::INFINITY;
+            for k in 0..p {
+                let comm = if k == j {
+                    0.0
+                } else {
+                    l[k] + data[i] * invbw[k * p + j]
+                };
+                let cand = f[i * p + k] + comm;
+                if cand < best {
+                    best = cand;
+                }
+            }
+            out[i * p + j] = best + comp[i * p + j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names_are_stable() {
+        assert_eq!(artifact_name(8), "ceft_relax_b256_p8.hlo.txt");
+    }
+
+    #[test]
+    fn reference_relaxation_matches_scalar_ceft_recurrence() {
+        // single edge, p=2: compare against hand computation
+        let p = 2;
+        let f = vec![10.0f32, 20.0]; // parent CEFT per class (batch row 0)
+        let data = vec![4.0f32];
+        let l = vec![1.0f32, 2.0];
+        let invbw = vec![0.0f32, 0.5, 0.25, 0.0];
+        let comp = vec![3.0f32, 7.0];
+        let mut fb = vec![0f32; p];
+        fb.copy_from_slice(&f);
+        let out = relax_batch_reference(p, &fb, &data, &l, &invbw, &comp);
+        // j=0: min(f0 + 0, f1 + l1 + 4*invbw[1,0]) = min(10, 20+2+1) = 10; +3 = 13
+        assert_eq!(out[0], 13.0);
+        // j=1: min(f0 + l0 + 4*0.5, f1 + 0) = min(10+1+2, 20) = 13; +7 = 20
+        assert_eq!(out[1], 20.0);
+    }
+
+    #[test]
+    fn reference_relaxation_agrees_with_platform_comm_cost() {
+        // randomised cross-check against Platform::comm_cost + scalar min
+        let mut rng = crate::util::rng::Xoshiro256::new(77);
+        let p = 4;
+        let plat = Platform::random_links(p, &mut rng, 0.5, 2.0, 0.0, 1.0);
+        let l: Vec<f32> = (0..p).map(|j| plat.startup(j) as f32).collect();
+        let mut invbw = vec![0f32; p * p];
+        for a in 0..p {
+            for b in 0..p {
+                invbw[a * p + b] = if a == b {
+                    0.0
+                } else {
+                    (1.0 / plat.bandwidth(a, b)) as f32
+                };
+            }
+        }
+        let b = 8;
+        let f: Vec<f32> = (0..b * p).map(|_| rng.uniform(0.0, 50.0) as f32).collect();
+        let data: Vec<f32> = (0..b).map(|_| rng.uniform(0.0, 20.0) as f32).collect();
+        let comp: Vec<f32> = (0..b * p).map(|_| rng.uniform(1.0, 9.0) as f32).collect();
+        let out = relax_batch_reference(p, &f, &data, &l, &invbw, &comp);
+        for i in 0..b {
+            for j in 0..p {
+                let mut best = f64::INFINITY;
+                for k in 0..p {
+                    let cand =
+                        f[i * p + k] as f64 + plat.comm_cost(k, j, data[i] as f64);
+                    best = best.min(cand);
+                }
+                let expect = best + comp[i * p + j] as f64;
+                assert!(
+                    (out[i * p + j] as f64 - expect).abs() < 1e-3,
+                    "({i},{j}): {} vs {expect}",
+                    out[i * p + j]
+                );
+            }
+        }
+    }
+}

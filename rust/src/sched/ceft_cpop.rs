@@ -1,0 +1,136 @@
+//! CEFT-CPOP — the paper's scheduling algorithm (§6).
+//!
+//! Identical to CPOP except lines 2–13 of Algorithm 2 are replaced: the
+//! critical path *and its partial assignment* come from the CEFT dynamic
+//! program. Each CP task is pinned to the class CEFT chose for it — the
+//! whole point of the paper's "mutual inclusivity": the path is only
+//! critical *together with* its mapping, so the scheduler honours that
+//! mapping instead of collapsing the path onto one processor.
+
+use super::{list_schedule, Placement, Schedule, Scheduler};
+use crate::cp::ceft::find_critical_path;
+use crate::cp::ranks::{rank_downward, rank_upward};
+use crate::graph::TaskGraph;
+use crate::platform::Platform;
+use std::collections::HashMap;
+
+/// CEFT-CPOP: CPOP with CEFT's critical path and partial assignment.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CeftCpop;
+
+impl Scheduler for CeftCpop {
+    fn name(&self) -> &'static str {
+        "CEFT-CPOP"
+    }
+
+    fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule {
+        // priorities stay mean-value rank_u + rank_d ("the rest of the
+        // algorithm remains the same", §6)
+        let up = rank_upward(graph, platform, comp);
+        let down = rank_downward(graph, platform, comp);
+        let prio: Vec<f64> = up.iter().zip(&down).map(|(u, d)| u + d).collect();
+        let cp = find_critical_path(graph, platform, comp);
+        let pin: HashMap<usize, usize> =
+            cp.path.iter().map(|s| (s.task, s.class)).collect();
+        list_schedule(graph, platform, comp, &prio, &Placement::Pinned(pin))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{generate, RggParams};
+    use crate::platform::CostModel;
+    use crate::sched::cpop::Cpop;
+    use crate::util::rng::Xoshiro256;
+
+    fn rgg(seed: u64, plat: &Platform, model: &CostModel, n: usize) -> (TaskGraph, Vec<f64>) {
+        let inst = generate(
+            &RggParams {
+                n,
+                out_degree: 3,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 50.0,
+                gamma: 0.2,
+            },
+            model,
+            plat,
+            seed,
+        );
+        (inst.graph, inst.comp)
+    }
+
+    #[test]
+    fn ceft_cpop_schedules_are_valid() {
+        let plat = Platform::uniform(4, 1.0, 0.0);
+        for seed in 0..5 {
+            let (g, comp) = rgg(seed, &plat, &CostModel::Classic { beta: 0.5 }, 100);
+            let s = CeftCpop.schedule(&g, &plat, &comp);
+            s.validate(&g, &plat, &comp).unwrap();
+        }
+    }
+
+    #[test]
+    fn cp_tasks_follow_ceft_assignment() {
+        let plat = Platform::uniform(4, 1.0, 0.0);
+        let (g, comp) = rgg(21, &plat, &CostModel::Classic { beta: 0.5 }, 80);
+        let cp = find_critical_path(&g, &plat, &comp);
+        let s = CeftCpop.schedule(&g, &plat, &comp);
+        for step in &cp.path {
+            assert_eq!(
+                s.assignments[step.task].proc, step.class,
+                "task {} should be pinned to class {}",
+                step.task, step.class
+            );
+        }
+    }
+
+    #[test]
+    fn beats_cpop_under_high_heterogeneity_most_of_the_time() {
+        // the paper's headline: under accelerator-like heterogeneity the
+        // CEFT path (and its multi-class assignment) yields shorter
+        // makespans in ~90% of experiments. Check the direction on a small
+        // sample: CEFT-CPOP must win strictly more often than it loses.
+        let mut wins = 0;
+        let mut losses = 0;
+        for seed in 0..30u64 {
+            let mut prng = Xoshiro256::new(seed.wrapping_mul(0xABCD));
+            let plat = Platform::two_weight(8, 0.5, &mut prng, 1.0, 0.0);
+            let inst = generate(
+                &RggParams {
+                    n: 120,
+                    out_degree: 3,
+                    ccr: 0.1,
+                    alpha: 0.5,
+                    beta_pct: 50.0,
+                    gamma: 0.2,
+                },
+                &CostModel::two_weight_high(0.5),
+                &plat,
+                seed,
+            );
+            let m_ceft = CeftCpop.schedule(&inst.graph, &plat, &inst.comp).makespan();
+            let m_cpop = Cpop.schedule(&inst.graph, &plat, &inst.comp).makespan();
+            if m_ceft < m_cpop * (1.0 - 1e-9) {
+                wins += 1;
+            } else if m_cpop < m_ceft * (1.0 - 1e-9) {
+                losses += 1;
+            }
+        }
+        assert!(
+            wins > losses,
+            "CEFT-CPOP should dominate CPOP on RGG-high-like instances: {wins} wins vs {losses} losses"
+        );
+    }
+
+    #[test]
+    fn identical_when_single_class() {
+        // with P=1 both algorithms degenerate to the same serial schedule
+        let plat = Platform::uniform(1, 1.0, 0.0);
+        let (g, comp) = rgg(4, &plat, &CostModel::Classic { beta: 0.0 }, 60);
+        let a = CeftCpop.schedule(&g, &plat, &comp).makespan();
+        let b = Cpop.schedule(&g, &plat, &comp).makespan();
+        assert!((a - b).abs() < 1e-9);
+    }
+}

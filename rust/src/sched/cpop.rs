@@ -1,0 +1,99 @@
+//! CPOP — Critical Path On a Processor (Topcuoglu et al., 2002),
+//! Algorithm 2 of the paper.
+//!
+//! Priorities are `rank_u + rank_d` on mean costs; the (mean-value) critical
+//! path is extracted by priority equality and pinned *in its entirety* onto
+//! the single processor minimising its total execution time. The paper
+//! argues this single-processor restriction is CPOP's central weakness once
+//! tasks on the path prefer different classes.
+
+use super::{list_schedule, Placement, Schedule, Scheduler};
+use crate::cp::ranks::{cpop_cp_processor, cpop_critical_path, rank_downward, rank_upward};
+use crate::graph::TaskGraph;
+use crate::platform::Platform;
+use std::collections::HashMap;
+
+/// Classic CPOP.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cpop;
+
+impl Scheduler for Cpop {
+    fn name(&self) -> &'static str {
+        "CPOP"
+    }
+
+    fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule {
+        let up = rank_upward(graph, platform, comp);
+        let down = rank_downward(graph, platform, comp);
+        let prio: Vec<f64> = up.iter().zip(&down).map(|(u, d)| u + d).collect();
+        let (cp, _) = cpop_critical_path(graph, platform, comp);
+        let p_cp = cpop_cp_processor(&cp, comp, platform.num_classes());
+        let pin: HashMap<usize, usize> = cp.into_iter().map(|t| (t, p_cp)).collect();
+        list_schedule(graph, platform, comp, &prio, &Placement::Pinned(pin))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cp::ranks::cpop_critical_path;
+    use crate::graph::generator::{generate, RggParams};
+    use crate::platform::CostModel;
+
+    fn instance(seed: u64, p: usize) -> (TaskGraph, Platform, Vec<f64>) {
+        let plat = Platform::uniform(p, 1.0, 0.0);
+        let inst = generate(
+            &RggParams {
+                n: 80,
+                out_degree: 3,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 75.0,
+                gamma: 0.2,
+            },
+            &CostModel::Classic { beta: 0.75 },
+            &plat,
+            seed,
+        );
+        (inst.graph, plat, inst.comp)
+    }
+
+    #[test]
+    fn cpop_schedules_are_valid() {
+        for seed in 0..5 {
+            let (g, plat, comp) = instance(seed, 4);
+            let s = Cpop.schedule(&g, &plat, &comp);
+            s.validate(&g, &plat, &comp).unwrap();
+        }
+    }
+
+    #[test]
+    fn critical_path_tasks_share_one_processor() {
+        let (g, plat, comp) = instance(3, 4);
+        let (cp, _) = cpop_critical_path(&g, &plat, &comp);
+        let s = Cpop.schedule(&g, &plat, &comp);
+        let procs: std::collections::HashSet<usize> =
+            cp.iter().map(|&t| s.assignments[t].proc).collect();
+        assert_eq!(procs.len(), 1, "CPOP must pin the whole CP to one proc");
+    }
+
+    #[test]
+    fn cp_is_entry_to_exit_connected() {
+        let (g, plat, comp) = instance(9, 4);
+        let (cp, _) = cpop_critical_path(&g, &plat, &comp);
+        assert_eq!(g.in_degree(cp[0]), 0);
+        assert_eq!(g.out_degree(*cp.last().unwrap()), 0);
+        for w in cp.windows(2) {
+            assert!(g.succs(w[0]).iter().any(|&(s, _)| s == w[1]));
+        }
+    }
+
+    #[test]
+    fn single_proc_cpop_is_serial() {
+        let (g, plat, comp) = instance(5, 1);
+        let s = Cpop.schedule(&g, &plat, &comp);
+        s.validate(&g, &plat, &comp).unwrap();
+        let serial: f64 = comp.iter().sum();
+        assert!((s.makespan() - serial).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,78 @@
+//! ASCII Gantt rendering of schedules — terminal visualisation for the CLI
+//! and examples.
+
+use super::Schedule;
+use std::fmt::Write as _;
+
+/// Render a schedule as one row per processor, time flowing right, each
+/// task drawn as `[id···]` scaled to `width` columns. Tasks too narrow to
+/// label are drawn as `#`.
+pub fn render(s: &Schedule, width: usize) -> String {
+    let m = s.makespan().max(1e-12);
+    let scale = width as f64 / m;
+    // group tasks per processor, sorted by start
+    let mut per_proc: Vec<Vec<(usize, f64, f64)>> = vec![Vec::new(); s.p];
+    for (t, a) in s.assignments.iter().enumerate() {
+        per_proc[a.proc].push((t, a.start, a.finish));
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "makespan = {m:.2}");
+    for (j, tasks) in per_proc.iter_mut().enumerate() {
+        tasks.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let mut row = String::new();
+        let mut col = 0usize;
+        for &(t, start, finish) in tasks.iter() {
+            let s_col = (start * scale).round() as usize;
+            let e_col = ((finish * scale).round() as usize).max(s_col + 1);
+            if s_col > col {
+                row.push_str(&".".repeat(s_col - col));
+            }
+            let w = e_col - s_col;
+            let label = format!("{t}");
+            if w >= label.len() + 2 {
+                let pad = w - label.len() - 2;
+                row.push('[');
+                row.push_str(&label);
+                row.push_str(&"·".repeat(pad));
+                row.push(']');
+            } else {
+                row.push_str(&"#".repeat(w));
+            }
+            col = e_col;
+        }
+        let _ = writeln!(out, "P{j:<3}|{row}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+    use crate::platform::Platform;
+    use crate::sched::{heft::Heft, Scheduler};
+
+    #[test]
+    fn renders_all_processors_and_tasks() {
+        let g = TaskGraph::from_edges(3, &[(0, 1, 1.0), (0, 2, 1.0)]);
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let comp = vec![5.0, 5.0, 10.0, 10.0, 10.0, 10.0];
+        let s = Heft.schedule(&g, &plat, &comp);
+        let text = render(&s, 60);
+        assert!(text.contains("P0"));
+        assert!(text.contains("P1"));
+        assert!(text.contains("makespan"));
+        // at least one labelled task box
+        assert!(text.contains('['));
+    }
+
+    #[test]
+    fn tiny_width_degrades_to_hashes() {
+        let g = TaskGraph::from_edges(2, &[(0, 1, 1.0)]);
+        let plat = Platform::uniform(1, 1.0, 0.0);
+        let comp = vec![1.0, 1.0];
+        let s = Heft.schedule(&g, &plat, &comp);
+        let text = render(&s, 4);
+        assert!(text.contains('#') || text.contains('['));
+    }
+}

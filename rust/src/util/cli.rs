@@ -1,0 +1,276 @@
+//! Declarative command-line argument parsing — the clap substitute.
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! auto-generated `--help`. Just enough for the `repro` binary and examples.
+
+use std::collections::BTreeMap;
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// An argument parser for one (sub)command.
+#[derive(Clone, Debug)]
+pub struct Args {
+    program: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positional: Vec<(String, String)>,
+    values: BTreeMap<String, String>,
+    pos_values: Vec<String>,
+}
+
+impl Args {
+    /// New parser for `program` with a one-line description.
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            positional: Vec::new(),
+            values: BTreeMap::new(),
+            pos_values: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(String::from),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Declare a positional argument (all required, in order).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positional.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    /// Render help text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positional.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positional {
+                s.push_str(&format!("  <{p:<12}> {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let metavar = if o.is_flag {
+                    format!("--{}", o.name)
+                } else {
+                    format!("--{} <v>", o.name)
+                };
+                let def = o
+                    .default
+                    .as_ref()
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                s.push_str(&format!("  {metavar:<24} {}{def}\n", o.help));
+            }
+        }
+        s
+    }
+
+    /// Parse a token list (no program name). Returns Err(help) on `--help`
+    /// or error text on bad input.
+    pub fn parse(mut self, tokens: &[String]) -> Result<Parsed, String> {
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if t == "--help" || t == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(rest) = t.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help_text()))?
+                    .clone();
+                let val = if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    tokens
+                        .get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("option --{key} requires a value"))?
+                };
+                self.values.insert(key, val);
+            } else {
+                if self.pos_values.len() >= self.positional.len() {
+                    return Err(format!(
+                        "unexpected positional argument {t:?}\n\n{}",
+                        self.help_text()
+                    ));
+                }
+                self.pos_values.push(t.clone());
+            }
+            i += 1;
+        }
+        if self.pos_values.len() < self.positional.len() {
+            return Err(format!(
+                "missing required argument <{}>\n\n{}",
+                self.positional[self.pos_values.len()].0,
+                self.help_text()
+            ));
+        }
+        // fill defaults
+        for o in &self.opts {
+            if !o.is_flag && !self.values.contains_key(&o.name) {
+                if let Some(d) = &o.default {
+                    self.values.insert(o.name.clone(), d.clone());
+                }
+            }
+        }
+        Ok(Parsed {
+            values: self.values,
+            pos_values: self.pos_values,
+            pos_names: self.positional.into_iter().map(|(n, _)| n).collect(),
+        })
+    }
+}
+
+/// Parsed argument values.
+#[derive(Clone, Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pos_values: Vec<String>,
+    pos_names: Vec<String>,
+}
+
+impl Parsed {
+    /// String value of an option or positional by name.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v);
+        }
+        self.pos_names
+            .iter()
+            .position(|n| n == name)
+            .and_then(|i| self.pos_values.get(i))
+            .map(|s| s.as_str())
+    }
+
+    /// Required string value (panics with a clear message when absent).
+    pub fn req(&self, name: &str) -> &str {
+        self.get(name)
+            .unwrap_or_else(|| panic!("missing required option --{name}"))
+    }
+
+    /// Typed accessor.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Option<T> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    /// Boolean flag presence.
+    pub fn is_set(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let p = Args::new("demo", "test")
+            .positional("cmd", "the command")
+            .opt("n", Some("128"), "tasks")
+            .opt("out", None, "output file")
+            .flag("verbose", "chatty")
+            .parse(&toks(&["run", "--n", "256", "--verbose", "--out=x.csv"]))
+            .unwrap();
+        assert_eq!(p.get("cmd"), Some("run"));
+        assert_eq!(p.get_parse::<u32>("n"), Some(256));
+        assert_eq!(p.get("out"), Some("x.csv"));
+        assert!(p.is_set("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = Args::new("demo", "t")
+            .opt("n", Some("128"), "tasks")
+            .parse(&[])
+            .unwrap();
+        assert_eq!(p.get_parse::<u32>("n"), Some(128));
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        let e = Args::new("demo", "t").parse(&toks(&["--wat"])).unwrap_err();
+        assert!(e.contains("unknown option"));
+    }
+
+    #[test]
+    fn missing_positional_is_error() {
+        let e = Args::new("demo", "t")
+            .positional("cmd", "c")
+            .parse(&[])
+            .unwrap_err();
+        assert!(e.contains("missing required argument"));
+    }
+
+    #[test]
+    fn help_lists_everything() {
+        let e = Args::new("demo", "about-me")
+            .positional("cmd", "the command")
+            .opt("n", Some("1"), "count")
+            .flag("fast", "go fast")
+            .parse(&toks(&["--help"]))
+            .unwrap_err();
+        for needle in ["about-me", "<cmd", "--n", "--fast", "default: 1"] {
+            assert!(e.contains(needle), "help missing {needle}: {e}");
+        }
+    }
+
+    #[test]
+    fn flag_with_value_is_error() {
+        let e = Args::new("demo", "t")
+            .flag("fast", "f")
+            .parse(&toks(&["--fast=yes"]))
+            .unwrap_err();
+        assert!(e.contains("takes no value"));
+    }
+}

@@ -1,0 +1,241 @@
+//! Minimal CSV writer/reader for experiment results.
+//!
+//! The harness writes plain RFC-4180-ish CSV (quoting only when needed) and
+//! reads back its own output; this is not a general-purpose CSV library.
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// A CSV table: header + rows of stringly-typed cells.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Table {
+    /// Column names.
+    pub header: Vec<String>,
+    /// Row-major cells; each row has `header.len()` cells.
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column names.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics if the arity mismatches the header.
+    pub fn push_row<S: Into<String>>(&mut self, row: Vec<S>) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// Serialize to CSV text.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        write_record(&mut s, &self.header);
+        for row in &self.rows {
+            write_record(&mut s, row);
+        }
+        s
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write_file<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+
+    /// Parse CSV text (must have a header line).
+    pub fn from_csv(text: &str) -> Result<Table, String> {
+        let mut records = parse_csv(text)?;
+        if records.is_empty() {
+            return Err("empty csv".into());
+        }
+        let header = records.remove(0);
+        for (i, r) in records.iter().enumerate() {
+            if r.len() != header.len() {
+                return Err(format!(
+                    "row {} has {} cells, header has {}",
+                    i,
+                    r.len(),
+                    header.len()
+                ));
+            }
+        }
+        Ok(Table {
+            header,
+            rows: records,
+        })
+    }
+
+    /// Render as an aligned ASCII table (for terminal output).
+    pub fn to_ascii(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            for w in &widths {
+                let _ = write!(out, "+{}", "-".repeat(w + 2));
+            }
+            out.push_str("+\n");
+        };
+        sep(&mut out);
+        for (i, h) in self.header.iter().enumerate() {
+            let _ = write!(out, "| {:>w$} ", h, w = widths[i]);
+        }
+        out.push_str("|\n");
+        sep(&mut out);
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                let _ = write!(out, "| {:>w$} ", c, w = widths[i]);
+            }
+            out.push_str("|\n");
+        }
+        sep(&mut out);
+        out
+    }
+}
+
+fn needs_quoting(s: &str) -> bool {
+    s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r')
+}
+
+fn write_record(out: &mut String, cells: &[String]) {
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if needs_quoting(c) {
+            out.push('"');
+            out.push_str(&c.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(c);
+        }
+    }
+    out.push('\n');
+}
+
+fn parse_csv(text: &str) -> Result<Vec<Vec<String>>, String> {
+    let mut records = Vec::new();
+    let mut record = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                _ => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => {
+                    record.push(std::mem::take(&mut field));
+                }
+                '\r' => {}
+                '\n' => {
+                    record.push(std::mem::take(&mut field));
+                    records.push(std::mem::take(&mut record));
+                }
+                _ => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err("unterminated quote".into());
+    }
+    if any && (!field.is_empty() || !record.is_empty()) {
+        record.push(field);
+        records.push(record);
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.push_row(vec!["1", "x"]);
+        t.push_row(vec!["2", "y"]);
+        let parsed = Table::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(parsed, t);
+    }
+
+    #[test]
+    fn roundtrip_quoted() {
+        let mut t = Table::new(vec!["name", "note"]);
+        t.push_row(vec!["a,b", "say \"hi\"\nnewline"]);
+        let parsed = Table::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(parsed, t);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.push_row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn col_lookup() {
+        let t = Table::new(vec!["x", "y", "z"]);
+        assert_eq!(t.col("y"), Some(1));
+        assert_eq!(t.col("nope"), None);
+    }
+
+    #[test]
+    fn ascii_render_contains_cells() {
+        let mut t = Table::new(vec!["metric", "value"]);
+        t.push_row(vec!["slr", "1.25"]);
+        let a = t.to_ascii();
+        assert!(a.contains("slr"));
+        assert!(a.contains("1.25"));
+        assert!(a.contains('+'));
+    }
+
+    #[test]
+    fn parse_rejects_ragged() {
+        let err = Table::from_csv("a,b\n1\n").unwrap_err();
+        assert!(err.contains("cells"));
+    }
+
+    #[test]
+    fn parse_handles_missing_trailing_newline() {
+        let t = Table::from_csv("a,b\n1,2").unwrap();
+        assert_eq!(t.rows, vec![vec!["1".to_string(), "2".to_string()]]);
+    }
+}

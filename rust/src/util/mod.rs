@@ -1,0 +1,28 @@
+//! From-scratch substrates.
+//!
+//! This image is fully offline and only the `xla` crate closure is present in
+//! the local registry, so the usual ecosystem crates (rayon, clap, serde,
+//! criterion, proptest) are unavailable. Everything the system needs from
+//! them is implemented here, purpose-built and tested:
+//!
+//! * [`rng`] — deterministic SplitMix64 / xoshiro256** PRNG streams.
+//! * [`stats`] — mean / stddev / percentile / online accumulators.
+//! * [`pool`] — a scoped thread pool with work queue (rayon substitute for
+//!   the experiment sweeps).
+//! * [`csv`] — CSV writer/reader for results files.
+//! * [`json`] — a minimal JSON value model + serializer/parser for graph and
+//!   result interchange.
+//! * [`bench`] — a micro-benchmark harness (criterion substitute) used by
+//!   `cargo bench` targets.
+//! * [`prop`] — a property-test harness (proptest substitute): random input
+//!   generation + shrinking-free counterexample reporting with fixed seeds.
+//! * [`cli`] — a small declarative argument parser (clap substitute).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,155 @@
+//! A scoped thread pool — the rayon substitute for experiment sweeps.
+//!
+//! The harness needs exactly one parallel primitive: "map this function over
+//! a list of independent jobs on N threads and collect results in input
+//! order". [`parallel_map`] provides it with a shared atomic cursor (so work
+//! is dynamically balanced across threads even when job costs are skewed,
+//! which they are: graph sizes span 128..16384 tasks).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: `CEFT_THREADS` env override, else the
+/// available parallelism, else 4.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("CEFT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Dynamically-balanced parallel map preserving input order.
+///
+/// `f` must be `Sync` (it is shared by all workers); items are taken from a
+/// shared cursor so long jobs don't serialise behind short ones.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots: Vec<Mutex<&mut Option<R>>> = out.iter_mut().map(Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                **slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    drop(slots);
+    out.into_iter().map(|r| r.expect("worker wrote slot")).collect()
+}
+
+/// Parallel for-each with a progress callback invoked (from worker threads)
+/// after every completed item. Used by the coordinator to print progress.
+pub fn parallel_for_each<T, F, P>(items: &[T], threads: usize, f: F, progress: P)
+where
+    T: Sync,
+    F: Fn(usize, &T) + Sync,
+    P: Fn(usize, usize) + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, n);
+    let cursor = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i, &items[i]);
+                let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+                progress(d, n);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_single_thread_path() {
+        let items = vec![1, 2, 3];
+        let out = parallel_map(&items, 1, |i, &x| x + i);
+        assert_eq!(out, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn map_empty() {
+        let items: Vec<u32> = vec![];
+        let out: Vec<u32> = parallel_map(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_with_skewed_costs() {
+        // long job first: dynamic balancing should still finish correctly
+        let items: Vec<u64> = (0..64).collect();
+        let out = parallel_map(&items, 4, |_, &x| {
+            if x == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            x
+        });
+        assert_eq!(out, items);
+    }
+
+    #[test]
+    fn for_each_counts_progress() {
+        use std::sync::atomic::AtomicUsize;
+        let items: Vec<u32> = (0..100).collect();
+        let seen = AtomicUsize::new(0);
+        let max_done = AtomicUsize::new(0);
+        parallel_for_each(
+            &items,
+            4,
+            |_, _| {
+                seen.fetch_add(1, Ordering::Relaxed);
+            },
+            |done, total| {
+                assert!(done <= total);
+                max_done.fetch_max(done, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(seen.load(Ordering::Relaxed), 100);
+        assert_eq!(max_done.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn threads_env_default_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,122 @@
+//! Property-test harness — the proptest substitute.
+//!
+//! A property test generates `cases` random inputs from a deterministic seed
+//! and checks an invariant for each. On failure, it reports the seed and
+//! case index so the exact counterexample is reproducible with
+//! `CEFT_PROP_SEED`/`CEFT_PROP_CASE`. We don't shrink; instead generators
+//! are parameterised so failures are usually already small.
+
+use crate::util::rng::Xoshiro256;
+
+/// Default number of cases (override with `CEFT_PROP_CASES`).
+pub fn default_cases() -> u32 {
+    std::env::var("CEFT_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run a property: `gen` draws an input from the RNG, `check` returns
+/// `Err(msg)` on violation. Panics with a reproduction line on failure.
+pub fn check_property<T, G, C>(name: &str, cases: u32, base_seed: u64, mut gen: G, mut check: C)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Xoshiro256) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    let (seed, only_case) = overrides(base_seed);
+    for case in 0..cases {
+        if let Some(oc) = only_case {
+            if case != oc {
+                continue;
+            }
+        }
+        let mut rng = Xoshiro256::new(seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property '{name}' failed at case {case}: {msg}\n\
+                 reproduce with CEFT_PROP_SEED={seed} CEFT_PROP_CASE={case}\n\
+                 input: {input:#?}"
+            );
+        }
+    }
+}
+
+fn overrides(base_seed: u64) -> (u64, Option<u32>) {
+    let seed = std::env::var("CEFT_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(base_seed);
+    let case = std::env::var("CEFT_PROP_CASE")
+        .ok()
+        .and_then(|v| v.parse().ok());
+    (seed, case)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_property(
+            "reverse-reverse-id",
+            32,
+            42,
+            |rng| {
+                let n = rng.below(20);
+                (0..n).map(|_| rng.next_u64() % 100).collect::<Vec<_>>()
+            },
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                if &w == v {
+                    Ok(())
+                } else {
+                    Err("reverse twice changed the vec".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        check_property(
+            "always-fails",
+            4,
+            7,
+            |rng| rng.next_u64(),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn deterministic_inputs_per_seed() {
+        let mut first: Vec<u64> = Vec::new();
+        check_property(
+            "collect",
+            8,
+            99,
+            |rng| rng.next_u64(),
+            |x| {
+                first.push(*x);
+                Ok(())
+            },
+        );
+        let mut second: Vec<u64> = Vec::new();
+        check_property(
+            "collect",
+            8,
+            99,
+            |rng| rng.next_u64(),
+            |x| {
+                second.push(*x);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,267 @@
+//! Integration tests across modules: generators → CP algorithms →
+//! schedulers → metrics, plus cross-checks between independent
+//! implementations of the same quantity.
+
+use ceft::cp::ceft::{ceft_table, chain_optimal_length, find_critical_path};
+use ceft::cp::cpmin::cp_min_cost;
+use ceft::cp::minexec::min_exec_critical_path;
+use ceft::cp::ranks::{cpop_critical_path, cpop_realized_cp_length, rank_upward};
+use ceft::exp::cells::{grid, realworld_grid, RealWorld, Scale, Workload};
+use ceft::exp::run::{run_cell, run_realworld_cell};
+use ceft::graph::generator::{generate, RggParams};
+use ceft::graph::realworld;
+use ceft::graph::TaskGraph;
+use ceft::metrics;
+use ceft::platform::{CostModel, Platform};
+use ceft::sched::{
+    ceft_cpop::CeftCpop,
+    ceft_heft::{CeftHeftDown, CeftHeftUp},
+    cpop::Cpop,
+    heft::{Heft, HeftDown},
+    Scheduler,
+};
+use ceft::util::rng::Xoshiro256;
+
+fn rgg(seed: u64, n: usize, p: usize, ccr: f64) -> (TaskGraph, Platform, Vec<f64>) {
+    let plat = Platform::uniform(p, 1.0, 0.0);
+    let inst = generate(
+        &RggParams {
+            n,
+            out_degree: 4,
+            ccr,
+            alpha: 0.5,
+            beta_pct: 75.0,
+            gamma: 0.25,
+        },
+        &CostModel::Classic { beta: 0.75 },
+        &plat,
+        seed,
+    );
+    (inst.graph, plat, inst.comp)
+}
+
+/// Every scheduler produces a valid schedule on every workload family and
+/// a spread of sizes/platforms — the whole-stack smoke matrix.
+#[test]
+fn all_schedulers_valid_on_all_workloads() {
+    let schedulers: [&dyn Scheduler; 6] = [
+        &Cpop,
+        &Heft,
+        &CeftCpop,
+        &HeftDown,
+        &CeftHeftUp,
+        &CeftHeftDown,
+    ];
+    for wl in Workload::ALL {
+        for (seed, &(n, p)) in [(64usize, 2usize), (128, 8), (200, 16)].iter().enumerate() {
+            let mut prng = Xoshiro256::new(seed as u64 + wl.id() * 100);
+            let plat = if wl.needs_two_weight_platform() {
+                Platform::two_weight(p, 0.5, &mut prng, 1.0, 0.0)
+            } else {
+                Platform::uniform(p, 1.0, 0.0)
+            };
+            let inst = generate(
+                &RggParams {
+                    n,
+                    out_degree: 3,
+                    ccr: 1.0,
+                    alpha: 0.5,
+                    beta_pct: 50.0,
+                    gamma: 0.25,
+                },
+                &wl.cost_model(50.0),
+                &plat,
+                seed as u64,
+            );
+            for s in schedulers {
+                let sched = s.schedule(&inst.graph, &plat, &inst.comp);
+                sched
+                    .validate(&inst.graph, &plat, &inst.comp)
+                    .unwrap_or_else(|e| panic!("{} on {} n={n} p={p}: {e}", s.name(), wl.name()));
+            }
+        }
+    }
+}
+
+/// The lower-bound lattice: CP_MIN <= minexec CP <= CEFT CPL <= any makespan
+/// whose schedule respects dependencies... (the last only when comm costs
+/// don't let a schedule "beat" the CEFT path — CP_MIN is the only hard
+/// bound, but the first two orderings are structural).
+#[test]
+fn bound_ordering_holds() {
+    for seed in 0..20 {
+        let (g, plat, comp) = rgg(seed, 150, 8, 1.0);
+        let cpmin = cp_min_cost(&g, &comp, 8);
+        let me = min_exec_critical_path(&g, &plat, &comp, false);
+        let ceft = find_critical_path(&g, &plat, &comp);
+        assert!(cpmin <= me.length + 1e-9, "seed {seed}");
+        assert!(me.length <= ceft.length + 1e-9, "seed {seed}");
+        for s in [
+            Cpop.schedule(&g, &plat, &comp),
+            Heft.schedule(&g, &plat, &comp),
+            CeftCpop.schedule(&g, &plat, &comp),
+        ] {
+            assert!(s.makespan() + 1e-9 >= cpmin, "makespan below CP_MIN, seed {seed}");
+        }
+    }
+}
+
+/// With a single processor class, every algorithm collapses to the same
+/// serial makespan and CEFT equals the classical longest path.
+#[test]
+fn single_class_degeneracy() {
+    let (g, plat, comp) = rgg(3, 100, 1, 1.0);
+    let serial: f64 = comp.iter().sum();
+    for s in [
+        Cpop.schedule(&g, &plat, &comp),
+        Heft.schedule(&g, &plat, &comp),
+        CeftCpop.schedule(&g, &plat, &comp),
+    ] {
+        assert!((s.makespan() - serial).abs() < 1e-6);
+    }
+    let ceft = find_critical_path(&g, &plat, &comp);
+    let classic = g.longest_path(&comp, |_, _, _| 0.0);
+    assert!((ceft.length - classic).abs() < 1e-9);
+}
+
+/// CEFT length via the DP equals the chain re-evaluation of its own path
+/// when the path's assignment is re-optimised chain-locally — and the
+/// reported assignment achieves a length >= the chain optimum (Definition 7
+/// consistency).
+#[test]
+fn ceft_path_self_consistency() {
+    for seed in 0..10 {
+        let (g, plat, comp) = rgg(seed + 50, 120, 4, 2.0);
+        let cp = find_critical_path(&g, &plat, &comp);
+        let chain = chain_optimal_length(&g, &plat, &comp, &cp.tasks());
+        assert!(
+            chain <= cp.length + 1e-9,
+            "chain optimum {chain} exceeds DP length {}",
+            cp.length
+        );
+        // realized length of the reported assignment along the chain
+        let mut realized = 0.0;
+        for (i, step) in cp.path.iter().enumerate() {
+            if i > 0 {
+                let prev = &cp.path[i - 1];
+                let data = g
+                    .succs(prev.task)
+                    .iter()
+                    .find(|&&(d, _)| d == step.task)
+                    .unwrap()
+                    .1;
+                realized += plat.comm_cost(prev.class, step.class, data);
+            }
+            realized += comp[step.task * 4 + step.class];
+        }
+        assert!(
+            realized <= cp.length + 1e-9,
+            "assignment realization {realized} exceeds CPL {}",
+            cp.length
+        );
+    }
+}
+
+/// CPOP's realized CP cost can never beat the per-task minimum sum of its
+/// own path, and CEFT's CPL is within [cp_min, cpop mean estimate * big].
+#[test]
+fn cpop_realized_bounds() {
+    for seed in 0..10 {
+        let (g, plat, comp) = rgg(seed + 80, 100, 8, 0.5);
+        let (cp, estimate) = cpop_critical_path(&g, &plat, &comp);
+        let realized = cpop_realized_cp_length(&cp, &comp, 8);
+        let per_task_min: f64 = cp
+            .iter()
+            .map(|&t| {
+                (0..8)
+                    .map(|j| comp[t * 8 + j])
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .sum();
+        assert!(realized + 1e-9 >= per_task_min, "seed {seed}");
+        assert!(estimate > 0.0 && realized > 0.0);
+    }
+}
+
+/// HEFT's priority order (descending rank_u) is topologically consistent:
+/// parents strictly precede children.
+#[test]
+fn heft_rank_topological_consistency() {
+    let (g, plat, comp) = rgg(7, 200, 8, 1.0);
+    let rank = rank_upward(&g, &plat, &comp);
+    for e in g.edges() {
+        assert!(
+            rank[e.src] > rank[e.dst],
+            "rank_u({}) = {} !> rank_u({}) = {}",
+            e.src,
+            rank[e.src],
+            e.dst,
+            rank[e.dst]
+        );
+    }
+}
+
+/// Real-world generators feed the whole pipeline.
+#[test]
+fn realworld_families_full_pipeline() {
+    for fam in RealWorld::ALL {
+        for cell in realworld_grid(fam, Scale::Smoke) {
+            let row = run_realworld_cell(&cell);
+            assert!(row.cp_min > 0.0);
+            assert!(row.cpl_ceft + 1e-9 >= row.cp_min, "{}", fam.name());
+            for a in &row.algos {
+                assert!(a.slr >= 1.0 - 1e-9, "{} slr {}", fam.name(), a.slr);
+            }
+        }
+    }
+}
+
+/// Experiment rows are bit-reproducible across runs and threads.
+#[test]
+fn experiment_cells_reproducible() {
+    for wl in [Workload::RggClassic, Workload::RggHigh] {
+        let cells = grid(wl, Scale::Smoke);
+        let a = run_cell(&cells[0]);
+        let b = run_cell(&cells[0]);
+        assert_eq!(a.cpl_ceft.to_bits(), b.cpl_ceft.to_bits());
+        for (x, y) in a.algos.iter().zip(&b.algos) {
+            assert_eq!(x.makespan.to_bits(), y.makespan.to_bits());
+            assert_eq!(x.slack.to_bits(), y.slack.to_bits());
+        }
+    }
+}
+
+/// The FFT graph: the paper notes every root→exit path is a critical path
+/// when costs are uniform — check CEFT agrees (all sinks have equal CEFT
+/// min within tolerance under uniform costs).
+#[test]
+fn fft_all_paths_critical_under_uniform_costs() {
+    let skel = realworld::fft(8);
+    let edges: Vec<(usize, usize, f64)> =
+        skel.edges.iter().map(|&(s, d)| (s, d, 1.0)).collect();
+    let g = TaskGraph::from_edges(skel.n, &edges);
+    let plat = Platform::uniform(2, 1.0, 0.0);
+    let comp = vec![1.0; skel.n * 2];
+    let table = ceft_table(&g, &plat, &comp);
+    let sink_mins: Vec<f64> = g
+        .sinks()
+        .iter()
+        .map(|&s| table.min_over_classes(s))
+        .collect();
+    let first = sink_mins[0];
+    for m in &sink_mins {
+        assert!((m - first).abs() < 1e-9, "sink CEFTs differ: {sink_mins:?}");
+    }
+}
+
+/// Speedup can exceed 1 only through genuine parallelism, and the serial
+/// schedule achieves exactly speedup 1 on its own best processor.
+#[test]
+fn speedup_semantics() {
+    let (g, plat, comp) = rgg(11, 150, 8, 0.1);
+    let s = Heft.schedule(&g, &plat, &comp);
+    let sp = metrics::speedup(&comp, 8, s.makespan());
+    assert!(sp > 1.0, "HEFT at low CCR should parallelise, speedup={sp}");
+    let serial = metrics::serial_time(&comp, 8);
+    assert!((metrics::speedup(&comp, 8, serial) - 1.0).abs() < 1e-12);
+}

@@ -1,0 +1,127 @@
+//! Integration tests for the AOT boundary: JAX/Pallas → HLO text → PJRT →
+//! rust. These tests *require* `make artifacts` to have run; they are
+//! skipped (with a note) when the artifacts are missing so `cargo test`
+//! stays green on a fresh checkout.
+
+use ceft::cp::ceft::find_critical_path;
+use ceft::graph::generator::{generate, RggParams};
+use ceft::platform::{CostModel, Platform};
+use ceft::runtime::{relax_batch_reference, AcceleratedCeft, PjrtRuntime, BATCH, CLASS_SIZES};
+use ceft::util::rng::Xoshiro256;
+
+fn runtime_or_skip() -> Option<PjrtRuntime> {
+    let rt = match PjrtRuntime::new() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP: PJRT client unavailable: {e}");
+            return None;
+        }
+    };
+    if !rt.has_artifact(8) {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return None;
+    }
+    Some(rt)
+}
+
+#[test]
+fn pjrt_relaxation_matches_rust_reference() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Xoshiro256::new(42);
+    for &p in &CLASS_SIZES {
+        if !rt.has_artifact(p) {
+            continue;
+        }
+        let f: Vec<f32> = (0..BATCH * p)
+            .map(|_| rng.uniform(0.0, 1000.0) as f32)
+            .collect();
+        let data: Vec<f32> = (0..BATCH).map(|_| rng.uniform(0.0, 100.0) as f32).collect();
+        let l: Vec<f32> = (0..p).map(|_| rng.uniform(0.0, 2.0) as f32).collect();
+        let mut invbw: Vec<f32> = (0..p * p)
+            .map(|_| rng.uniform(0.1, 3.0) as f32)
+            .collect();
+        for i in 0..p {
+            invbw[i * p + i] = 0.0;
+        }
+        let comp: Vec<f32> = (0..BATCH * p)
+            .map(|_| rng.uniform(0.5, 50.0) as f32)
+            .collect();
+        let got = rt.relax_batch(p, &f, &data, &l, &invbw, &comp).unwrap();
+        let expect = relax_batch_reference(p, &f, &data, &l, &invbw, &comp);
+        assert_eq!(got.len(), expect.len());
+        for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+            assert!(
+                (g - e).abs() <= 1e-3 * e.abs().max(1.0),
+                "p={p} cell {i}: pjrt {g} vs rust {e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn accelerated_ceft_agrees_with_pure_rust() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let acc = AcceleratedCeft::new(rt);
+    for &(n, p, ccr) in &[(64usize, 2usize, 0.1), (128, 8, 1.0), (256, 4, 10.0)] {
+        if !acc.supports(p) {
+            continue;
+        }
+        let plat = Platform::uniform(p, 1.0, 0.5);
+        let inst = generate(
+            &RggParams {
+                n,
+                out_degree: 4,
+                ccr,
+                alpha: 0.5,
+                beta_pct: 75.0,
+                gamma: 0.25,
+            },
+            &CostModel::Classic { beta: 0.75 },
+            &plat,
+            n as u64,
+        );
+        let cpu = find_critical_path(&inst.graph, &plat, &inst.comp);
+        let accel = acc
+            .find_critical_path(&inst.graph, &plat, &inst.comp)
+            .unwrap();
+        let rel = (cpu.length - accel.length).abs() / cpu.length;
+        assert!(rel < 1e-4, "n={n} p={p}: rel diff {rel}");
+        assert_eq!(cpu.tasks(), accel.tasks(), "paths diverged n={n} p={p}");
+    }
+}
+
+#[test]
+fn accelerated_table_matches_f64_table_everywhere() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let acc = AcceleratedCeft::new(rt);
+    let p = 8;
+    if !acc.supports(p) {
+        return;
+    }
+    let plat = Platform::uniform(p, 2.0, 0.0);
+    let inst = generate(
+        &RggParams {
+            n: 200,
+            out_degree: 3,
+            ccr: 1.0,
+            alpha: 0.5,
+            beta_pct: 50.0,
+            gamma: 0.25,
+        },
+        &CostModel::Classic { beta: 0.5 },
+        &plat,
+        9,
+    );
+    let accel = acc.ceft_table(&inst.graph, &plat, &inst.comp).unwrap();
+    let exact = ceft::cp::ceft::ceft_table(&inst.graph, &plat, &inst.comp);
+    for t in 0..200 {
+        for j in 0..p {
+            let a = accel.get(t, j);
+            let e = exact.get(t, j);
+            assert!(
+                (a - e).abs() <= 1e-3 * e.abs().max(1.0),
+                "cell ({t},{j}): accel {a} vs exact {e}"
+            );
+        }
+    }
+}
