@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# CI entry point: build, test, run the quickstart + online-service examples,
+# and round-trip the serve/request protocol over TCP.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== build =="
+cargo build --release
+
+echo "== tests =="
+cargo test -q
+
+echo "== quickstart example =="
+cargo run --release --example quickstart
+
+echo "== online service example (in-process engine) =="
+cargo run --release --example online_service
+
+echo "== serve/request round trip (TCP) =="
+ADDR="127.0.0.1:17077"
+./target/release/repro serve --addr "$ADDR" &
+SERVER_PID=$!
+trap 'kill $SERVER_PID 2>/dev/null || true' EXIT
+
+# wait for the listener to come up
+for i in $(seq 1 50); do
+  if ./target/release/repro request --addr "$ADDR" --op ping >/dev/null 2>&1; then
+    break
+  fi
+  sleep 0.1
+done
+
+./target/release/repro request --addr "$ADDR" --op ping
+./target/release/repro request --addr "$ADDR" --op submit --n 64 --p 4
+./target/release/repro request --addr "$ADDR" --op cp --n 64 --p 4
+./target/release/repro request --addr "$ADDR" --op schedule --algorithm CEFT-CPOP --n 64 --p 4
+# the identical request again must be a cache hit
+./target/release/repro request --addr "$ADDR" --op schedule --algorithm CEFT-CPOP --n 64 --p 4 \
+  | grep -q '"cached":true'
+./target/release/repro request --addr "$ADDR" --op stats
+./target/release/repro request --addr "$ADDR" --op shutdown
+wait "$SERVER_PID"
+trap - EXIT
+
+echo "== loadgen smoke =="
+./target/release/repro loadgen --n 64 --p 4 --count 8 --rate 200 --duration 1
+
+echo "ci.sh: all green"

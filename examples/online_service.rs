@@ -1,0 +1,91 @@
+//! The online scheduling service, embedded in-process: start an engine,
+//! submit a handful of generated instances over the JSON line protocol,
+//! request critical paths and schedules, then show the memoization at work
+//! via the stats endpoint.
+//!
+//! The same frames work over `repro serve` (stdin/stdout or TCP); this
+//! example drives the engine directly so it runs anywhere, instantly.
+//!
+//! Run with: `cargo run --release --example online_service`
+
+use ceft::exp::cells::{grid, Scale, Workload};
+use ceft::exp::run::build_instance;
+use ceft::graph::io;
+use ceft::sched::Algorithm;
+use ceft::service::{Engine, EngineConfig};
+use ceft::util::json::Json;
+
+fn main() {
+    let engine = Engine::new(EngineConfig {
+        cache_capacity: 256,
+        threads: ceft::util::pool::default_threads(),
+        ..EngineConfig::default()
+    });
+
+    // Five instances from the smoke grid, different seeds.
+    let base = grid(Workload::RggClassic, Scale::Smoke)[0];
+    let mut ids = Vec::new();
+    println!("submitting 5 instances:");
+    for i in 0..5u64 {
+        let mut cell = base;
+        cell.index = i;
+        let (platform, inst) = build_instance(&cell);
+        let line = format!(
+            r#"{{"op":"submit","instance":{},"platform":{}}}"#,
+            io::instance_to_json(&inst).to_string(),
+            io::platform_to_json(&platform).to_string()
+        );
+        let (resp, _) = engine.handle_line(&line);
+        let id = resp
+            .get("id")
+            .and_then(Json::as_str)
+            .expect("submit response carries a handle")
+            .to_string();
+        println!(
+            "  seed {i}: id={id} n={} edges={}",
+            resp.get("n").and_then(Json::as_f64).unwrap(),
+            resp.get("edges").and_then(Json::as_f64).unwrap()
+        );
+        ids.push(id);
+    }
+
+    // Critical path + two schedulers per instance, by handle.
+    println!("\nper-instance results (first pass, every request computes):");
+    for id in &ids {
+        let (cp, _) = engine.handle_line(&format!(r#"{{"op":"cp","id":"{id}"}}"#));
+        let length = cp.get("length").and_then(Json::as_f64).unwrap();
+        let mut makespans = Vec::new();
+        for algo in [Algorithm::CeftCpop, Algorithm::Heft] {
+            let (resp, _) = engine.handle_line(&format!(
+                r#"{{"op":"schedule","algorithm":"{}","id":"{id}"}}"#,
+                algo.name()
+            ));
+            assert_eq!(resp.get("cached"), Some(&Json::Bool(false)));
+            makespans.push((
+                algo.name(),
+                resp.get("makespan").and_then(Json::as_f64).unwrap(),
+            ));
+        }
+        println!(
+            "  {id}: CPL {length:10.2}   {} {:10.2}   {} {:10.2}",
+            makespans[0].0, makespans[0].1, makespans[1].0, makespans[1].1
+        );
+    }
+
+    // Second pass: identical requests, now served from cache.
+    let mut hits = 0;
+    for id in &ids {
+        let (resp, _) = engine.handle_line(&format!(
+            r#"{{"op":"schedule","algorithm":"CEFT-CPOP","id":"{id}"}}"#
+        ));
+        if resp.get("cached") == Some(&Json::Bool(true)) {
+            hits += 1;
+        }
+    }
+    println!("\nsecond pass: {hits}/5 schedule requests served from cache");
+    assert_eq!(hits, 5, "repeat requests must hit the memo cache");
+
+    let (stats, _) = engine.handle_line(r#"{"op":"stats"}"#);
+    println!("stats: {}", stats.to_string());
+    println!("\nonline_service: OK");
+}

@@ -1,0 +1,68 @@
+//! Bench: online-service throughput — requests/sec through the engine at
+//! 1, N, and 2N worker threads, on cached (memo hit) and uncached (forced
+//! miss) request mixes. The throughput column ("Melem/s") is requests/sec
+//! divided by 1e6.
+
+use ceft::exp::cells::{grid, Scale, Workload};
+use ceft::exp::run::build_instance;
+use ceft::graph::io;
+use ceft::service::{Engine, EngineConfig};
+use ceft::util::bench::{black_box, Bench};
+
+fn request_lines(count: usize) -> Vec<String> {
+    let base = grid(Workload::RggClassic, Scale::Smoke)[0];
+    (0..count)
+        .map(|i| {
+            let mut cell = base;
+            cell.index = i as u64;
+            let (platform, inst) = build_instance(&cell);
+            format!(
+                r#"{{"op":"schedule","algorithm":"CEFT-CPOP","instance":{},"platform":{}}}"#,
+                io::instance_to_json(&inst).to_string(),
+                io::platform_to_json(&platform).to_string()
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new("service_throughput");
+    let n = ceft::util::pool::default_threads();
+    let mut thread_counts = vec![1, n, 2 * n];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+
+    let lines = request_lines(32);
+    for &threads in &thread_counts {
+        // cached: warm every entry once, then measure pure memo-hit serving
+        let engine = Engine::new(EngineConfig {
+            cache_capacity: 4096,
+            threads,
+            ..EngineConfig::default()
+        });
+        engine.handle_batch(&lines);
+        b.case_with_elements(
+            &format!("cached/t{threads}"),
+            Some(lines.len() as u64),
+            || {
+                black_box(engine.handle_batch(&lines));
+            },
+        );
+
+        // uncached: capacity 1 with 32 distinct instances means every
+        // request misses and reruns the full CEFT + list-scheduler path
+        let cold = Engine::new(EngineConfig {
+            cache_capacity: 1,
+            threads,
+            ..EngineConfig::default()
+        });
+        b.case_with_elements(
+            &format!("uncached/t{threads}"),
+            Some(lines.len() as u64),
+            || {
+                black_box(cold.handle_batch(&lines));
+            },
+        );
+    }
+    b.save_csv();
+}

@@ -10,27 +10,23 @@ use crate::graph::generator::{generate, Instance, RggParams};
 use crate::graph::realworld;
 use crate::metrics;
 use crate::platform::{CostModel, Platform};
-use crate::sched::{
-    ceft_cpop::CeftCpop,
-    ceft_heft::{CeftHeftDown, CeftHeftUp},
-    cpop::Cpop,
-    heft::{Heft, HeftDown},
-    Scheduler,
-};
+use crate::sched::Algorithm;
 use crate::util::pool;
 use crate::util::rng::SplitMix64;
 
 /// Salt XORed into cell seeds to derive the independent platform RNG stream.
 const PLATFORM_SEED_SALT: u64 = 0x504C_4154_504C_4154; // "PLATPLAT"
 
-/// The schedulers every cell runs, in result-column order.
+/// The schedulers every cell runs, in result-column order — derived from
+/// the unified [`Algorithm`] registry so the batch harness, the CLI, and
+/// the online service all agree on names and ordering.
 pub const ALGOS: [&str; 6] = [
-    "CPOP",
-    "HEFT",
-    "CEFT-CPOP",
-    "HEFT-DOWN",
-    "CEFT-HEFT-UP",
-    "CEFT-HEFT-DOWN",
+    Algorithm::Cpop.name(),
+    Algorithm::Heft.name(),
+    Algorithm::CeftCpop.name(),
+    Algorithm::HeftDown.name(),
+    Algorithm::CeftHeftUp.name(),
+    Algorithm::CeftHeftDown.name(),
 ];
 
 /// Per-algorithm metrics for one cell.
@@ -132,17 +128,9 @@ pub fn run_instance(
     let minexec = min_exec_critical_path(g, platform, comp, false);
     let cp_min = cp_min_cost(g, comp, p);
 
-    let schedulers: [&dyn Scheduler; 6] = [
-        &Cpop,
-        &Heft,
-        &CeftCpop,
-        &HeftDown,
-        &CeftHeftUp,
-        &CeftHeftDown,
-    ];
     let mut algos = [AlgoResult::default(); 6];
-    for (i, s) in schedulers.iter().enumerate() {
-        let schedule = s.schedule(g, platform, comp);
+    for (i, a) in Algorithm::ALL.iter().enumerate() {
+        let schedule = a.schedule(g, platform, comp);
         debug_assert!(schedule.validate(g, platform, comp).is_ok());
         let m = schedule.makespan();
         algos[i] = AlgoResult {
@@ -293,6 +281,13 @@ mod tests {
         for (a, b) in par.iter().zip(&ser) {
             assert_eq!(a.cpl_ceft, b.cpl_ceft);
             assert_eq!(a.algos[2].makespan, b.algos[2].makespan);
+        }
+    }
+
+    #[test]
+    fn algos_column_order_matches_registry() {
+        for (name, a) in ALGOS.iter().zip(Algorithm::ALL.iter()) {
+            assert_eq!(*name, a.name());
         }
     }
 

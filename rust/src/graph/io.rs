@@ -1,9 +1,24 @@
-//! Graph / instance serialization: JSON interchange and Graphviz DOT export.
+//! Graph / instance / platform / schedule serialization: JSON interchange
+//! and Graphviz DOT export.
+//!
+//! Everything round-trips bit-exactly: the JSON writer emits shortest
+//! round-tripping decimal for `f64`, so `x_from_json(x_to_json(v)) == v`
+//! down to the float bits. The service layer (`crate::service`) relies on
+//! this for its memoization keys and its repeat-request determinism
+//! guarantee.
 
 use super::generator::Instance;
 use super::TaskGraph;
+use crate::platform::Platform;
+use crate::sched::{Assignment, Schedule};
 use crate::util::json::Json;
 use std::fmt::Write as _;
+
+/// Upper bound on task counts accepted from untrusted JSON (guards the
+/// service against allocation bombs; far above anything the paper sweeps).
+pub const MAX_TASKS: usize = 10_000_000;
+/// Upper bound on processor-class counts accepted from untrusted JSON.
+pub const MAX_CLASSES: usize = 4096;
 
 /// Serialize an instance (structure + data volumes + cost matrix) to JSON.
 pub fn instance_to_json(inst: &Instance) -> Json {
@@ -40,6 +55,12 @@ pub fn instance_from_json(j: &Json) -> Result<Instance, String> {
         .get("p")
         .and_then(Json::as_usize)
         .ok_or("missing p")?;
+    if n == 0 || n > MAX_TASKS {
+        return Err(format!("n = {n} out of range [1, {MAX_TASKS}]"));
+    }
+    if p == 0 || p > MAX_CLASSES {
+        return Err(format!("p = {p} out of range [1, {MAX_CLASSES}]"));
+    }
     let edges: Vec<(usize, usize, f64)> = j
         .get("edges")
         .and_then(Json::as_arr)
@@ -47,6 +68,9 @@ pub fn instance_from_json(j: &Json) -> Result<Instance, String> {
         .iter()
         .map(|e| {
             let a = e.as_arr().ok_or("edge not an array")?;
+            if a.len() != 3 {
+                return Err(format!("edge has {} fields, expected 3", a.len()));
+            }
             Ok((
                 a[0].as_usize().ok_or("bad src")?,
                 a[1].as_usize().ok_or("bad dst")?,
@@ -64,11 +88,141 @@ pub fn instance_from_json(j: &Json) -> Result<Instance, String> {
     if comp.len() != n * p {
         return Err(format!("comp has {} entries, expected {}", comp.len(), n * p));
     }
+    if let Some(i) = comp.iter().position(|c| !c.is_finite() || *c < 0.0) {
+        return Err(format!(
+            "comp[{i}] = {} must be finite and >= 0 (non-finite costs would poison every downstream result)",
+            comp[i]
+        ));
+    }
     Ok(Instance {
-        graph: TaskGraph::from_edges(n, &edges),
+        graph: TaskGraph::try_from_edges(n, &edges)?,
         comp,
         p,
     })
+}
+
+/// Serialize a platform (class count, startup latencies, bandwidth matrix,
+/// optional two-weight class capacities) to JSON.
+pub fn platform_to_json(plat: &Platform) -> Json {
+    let p = plat.num_classes();
+    let startup: Vec<Json> = (0..p).map(|j| Json::Num(plat.startup(j))).collect();
+    let mut bandwidth = Vec::with_capacity(p * p);
+    for a in 0..p {
+        for b in 0..p {
+            bandwidth.push(Json::Num(plat.bandwidth(a, b)));
+        }
+    }
+    let mut fields = vec![
+        ("p", Json::Num(p as f64)),
+        ("startup", Json::Arr(startup)),
+        ("bandwidth", Json::Arr(bandwidth)),
+    ];
+    let weights = plat.class_weight_table();
+    if !weights.is_empty() {
+        fields.push((
+            "weights",
+            Json::Arr(
+                weights
+                    .iter()
+                    .map(|&(w0, w1)| Json::Arr(vec![Json::Num(w0), Json::Num(w1)]))
+                    .collect(),
+            ),
+        ));
+    }
+    Json::obj(fields)
+}
+
+/// Parse a platform back from [`platform_to_json`] output.
+pub fn platform_from_json(j: &Json) -> Result<Platform, String> {
+    let p = j.get("p").and_then(Json::as_usize).ok_or("missing p")?;
+    if p == 0 || p > MAX_CLASSES {
+        return Err(format!("p = {p} out of range [1, {MAX_CLASSES}]"));
+    }
+    let startup: Vec<f64> = j
+        .get("startup")
+        .and_then(Json::as_arr)
+        .ok_or("missing startup")?
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| "bad startup entry".to_string()))
+        .collect::<Result<_, String>>()?;
+    let bandwidth: Vec<f64> = j
+        .get("bandwidth")
+        .and_then(Json::as_arr)
+        .ok_or("missing bandwidth")?
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| "bad bandwidth entry".to_string()))
+        .collect::<Result<_, String>>()?;
+    let weights: Vec<(f64, f64)> = match j.get("weights") {
+        None => Vec::new(),
+        Some(w) => w
+            .as_arr()
+            .ok_or("weights must be an array")?
+            .iter()
+            .map(|pair| {
+                let a = pair.as_arr().ok_or("weight entry not an array")?;
+                if a.len() != 2 {
+                    return Err(format!("weight entry has {} fields, expected 2", a.len()));
+                }
+                Ok((
+                    a[0].as_f64().ok_or("bad weight w0")?,
+                    a[1].as_f64().ok_or("bad weight w1")?,
+                ))
+            })
+            .collect::<Result<_, String>>()?,
+    };
+    Platform::from_parts(p, startup, bandwidth, weights)
+}
+
+/// Serialize a schedule (per-task `[proc, start, finish]` triples) to JSON.
+pub fn schedule_to_json(s: &Schedule) -> Json {
+    Json::obj(vec![
+        ("p", Json::Num(s.p as f64)),
+        (
+            "assignments",
+            Json::Arr(
+                s.assignments
+                    .iter()
+                    .map(|a| {
+                        Json::Arr(vec![
+                            Json::Num(a.proc as f64),
+                            Json::Num(a.start),
+                            Json::Num(a.finish),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Parse a schedule back from [`schedule_to_json`] output.
+pub fn schedule_from_json(j: &Json) -> Result<Schedule, String> {
+    let p = j.get("p").and_then(Json::as_usize).ok_or("missing p")?;
+    if p == 0 || p > MAX_CLASSES {
+        return Err(format!("p = {p} out of range [1, {MAX_CLASSES}]"));
+    }
+    let assignments: Vec<Assignment> = j
+        .get("assignments")
+        .and_then(Json::as_arr)
+        .ok_or("missing assignments")?
+        .iter()
+        .map(|a| {
+            let t = a.as_arr().ok_or("assignment not an array")?;
+            if t.len() != 3 {
+                return Err(format!("assignment has {} fields, expected 3", t.len()));
+            }
+            let proc = t[0].as_usize().ok_or("bad proc")?;
+            if proc >= p {
+                return Err(format!("proc {proc} out of range p={p}"));
+            }
+            Ok(Assignment {
+                proc,
+                start: t[1].as_f64().ok_or("bad start")?,
+                finish: t[2].as_f64().ok_or("bad finish")?,
+            })
+        })
+        .collect::<Result<_, String>>()?;
+    Ok(Schedule { assignments, p })
 }
 
 /// Render a task graph as Graphviz DOT (node label = id, edge label = data).
@@ -136,5 +290,83 @@ mod tests {
     fn from_json_rejects_bad_comp_len() {
         let j = Json::parse(r#"{"n":2,"p":2,"edges":[[0,1,1.0]],"comp":[1,2,3]}"#).unwrap();
         assert!(instance_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_structure_without_panicking() {
+        // cycle
+        let j = Json::parse(
+            r#"{"n":2,"p":1,"edges":[[0,1,1.0],[1,0,1.0]],"comp":[1,2]}"#,
+        )
+        .unwrap();
+        assert!(instance_from_json(&j).unwrap_err().contains("cycle"));
+        // out-of-range vertex
+        let j = Json::parse(r#"{"n":2,"p":1,"edges":[[0,9,1.0]],"comp":[1,2]}"#).unwrap();
+        assert!(instance_from_json(&j).unwrap_err().contains("out of range"));
+        // zero tasks
+        let j = Json::parse(r#"{"n":0,"p":1,"edges":[],"comp":[]}"#).unwrap();
+        assert!(instance_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn platform_json_roundtrip_uniform_and_two_weight() {
+        let mut rng = crate::util::rng::Xoshiro256::new(12);
+        for plat in [
+            Platform::uniform(4, 2.0, 0.25),
+            Platform::random_links(3, &mut rng, 0.5, 1.5, 0.0, 0.3),
+            Platform::two_weight(5, 0.5, &mut rng, 1.0, 0.0),
+        ] {
+            let text = platform_to_json(&plat).to_string();
+            let back = platform_from_json(&Json::parse(&text).unwrap()).unwrap();
+            let p = plat.num_classes();
+            assert_eq!(back.num_classes(), p);
+            for a in 0..p {
+                assert_eq!(back.startup(a), plat.startup(a));
+                for b in 0..p {
+                    assert_eq!(back.bandwidth(a, b), plat.bandwidth(a, b));
+                }
+            }
+            assert_eq!(back.class_weight_table(), plat.class_weight_table());
+            // derived comm scalarisation identical -> same schedules downstream
+            assert_eq!(back.mean_comm_cost(3.7), plat.mean_comm_cost(3.7));
+        }
+    }
+
+    #[test]
+    fn platform_from_json_rejects_bad_shapes() {
+        for bad in [
+            r#"{"startup":[0],"bandwidth":[1]}"#,                      // missing p
+            r#"{"p":2,"startup":[0],"bandwidth":[1,1,1,1]}"#,          // short startup
+            r#"{"p":2,"startup":[0,0],"bandwidth":[1,1,1]}"#,          // short bandwidth
+            r#"{"p":2,"startup":[0,0],"bandwidth":[1,0,1,1]}"#,        // zero bandwidth
+            r#"{"p":2,"startup":[0,0],"bandwidth":[1,1,1,1],"weights":[[1,2]]}"#, // short weights
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(platform_from_json(&j).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn schedule_json_roundtrip_is_bit_exact() {
+        let g = TaskGraph::from_edges(3, &[(0, 1, 2.0), (0, 2, 3.0)]);
+        let plat = Platform::uniform(2, 1.0, 0.1);
+        let comp = vec![1.5, 2.5, 3.25, 0.75, 2.0, 4.0];
+        let s = crate::sched::Algorithm::CeftCpop.schedule(&g, &plat, &comp);
+        let text = schedule_to_json(&s).to_string();
+        let back = schedule_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.p, s.p);
+        assert_eq!(back.assignments, s.assignments);
+        // still a legal schedule after the round trip
+        back.validate(&g, &plat, &comp).unwrap();
+    }
+
+    #[test]
+    fn schedule_from_json_rejects_bad_entries() {
+        let j = Json::parse(r#"{"p":1,"assignments":[[5,0.0,1.0]]}"#).unwrap();
+        assert!(schedule_from_json(&j).unwrap_err().contains("out of range"));
+        let j = Json::parse(r#"{"p":1,"assignments":[[0,0.0]]}"#).unwrap();
+        assert!(schedule_from_json(&j).is_err());
+        let j = Json::parse(r#"{"p":0,"assignments":[]}"#).unwrap();
+        assert!(schedule_from_json(&j).is_err());
     }
 }

@@ -40,19 +40,34 @@ impl TaskGraph {
     /// contains out-of-range vertices or a cycle (this is a programming
     /// error in a generator, not a runtime condition).
     pub fn from_edges(n: usize, edges: &[(usize, usize, f64)]) -> Self {
-        let edges: Vec<Edge> = edges
-            .iter()
-            .map(|&(src, dst, data)| {
-                assert!(src < n && dst < n, "edge ({src},{dst}) out of range n={n}");
-                assert_ne!(src, dst, "self loop at {src}");
-                assert!(data >= 0.0, "negative data on edge ({src},{dst})");
-                Edge { src, dst, data }
-            })
-            .collect();
-        Self::from_edge_structs(n, edges)
+        Self::try_from_edges(n, edges).unwrap_or_else(|e| panic!("{e}"))
     }
 
-    fn from_edge_structs(n: usize, edges: Vec<Edge>) -> Self {
+    /// Fallible variant of [`TaskGraph::from_edges`] for untrusted input
+    /// (e.g. instances arriving over the service protocol): returns an error
+    /// instead of panicking on out-of-range vertices, self loops, negative
+    /// data weights, or cycles.
+    pub fn try_from_edges(n: usize, edges: &[(usize, usize, f64)]) -> Result<Self, String> {
+        let mut checked: Vec<Edge> = Vec::with_capacity(edges.len());
+        for &(src, dst, data) in edges {
+            if src >= n || dst >= n {
+                return Err(format!("edge ({src},{dst}) out of range n={n}"));
+            }
+            if src == dst {
+                return Err(format!("self loop at {src}"));
+            }
+            if !(data >= 0.0) {
+                return Err(format!("negative data on edge ({src},{dst})"));
+            }
+            if !data.is_finite() {
+                return Err(format!("non-finite data on edge ({src},{dst})"));
+            }
+            checked.push(Edge { src, dst, data });
+        }
+        Self::from_edge_structs(n, checked)
+    }
+
+    fn from_edge_structs(n: usize, edges: Vec<Edge>) -> Result<Self, String> {
         // CSR for successors
         let mut succ_off = vec![0usize; n + 1];
         for e in &edges {
@@ -95,8 +110,10 @@ impl TaskGraph {
                 }
             }
         }
-        assert_eq!(topo.len(), n, "graph contains a cycle");
-        Self {
+        if topo.len() != n {
+            return Err("graph contains a cycle".to_string());
+        }
+        Ok(Self {
             n,
             edges,
             succ_off,
@@ -104,7 +121,7 @@ impl TaskGraph {
             pred_off,
             pred,
             topo,
-        }
+        })
     }
 
     /// Number of tasks.
@@ -170,6 +187,7 @@ impl TaskGraph {
             })
             .collect();
         Self::from_edge_structs(self.n, edges)
+            .expect("transposing an acyclic graph cannot fail")
     }
 
     /// Level (longest hop-distance from any source) of each task.
@@ -340,6 +358,19 @@ mod tests {
         let g = TaskGraph::from_edges(3, &[(0, 1, 1.0), (0, 2, 1.0)]);
         assert!(g.validate(false).is_ok());
         assert!(g.validate(true).is_err());
+    }
+
+    #[test]
+    fn try_from_edges_reports_errors_without_panicking() {
+        assert!(TaskGraph::try_from_edges(2, &[(0, 1, 1.0)]).is_ok());
+        let cyc = TaskGraph::try_from_edges(2, &[(0, 1, 1.0), (1, 0, 1.0)]);
+        assert!(cyc.unwrap_err().contains("cycle"));
+        let oob = TaskGraph::try_from_edges(2, &[(0, 5, 1.0)]);
+        assert!(oob.unwrap_err().contains("out of range"));
+        let neg = TaskGraph::try_from_edges(2, &[(0, 1, -1.0)]);
+        assert!(neg.unwrap_err().contains("negative data"));
+        let selfloop = TaskGraph::try_from_edges(2, &[(1, 1, 1.0)]);
+        assert!(selfloop.unwrap_err().contains("self loop"));
     }
 
     #[test]

@@ -32,9 +32,16 @@
 //!   figure of the paper's evaluation section.
 //! * [`runtime`] — PJRT-backed execution of the AOT-compiled JAX/Pallas
 //!   relaxation kernel (`artifacts/*.hlo.txt`), plus the accelerated CEFT
-//!   backend that uses it.
+//!   backend that uses it (gated behind the `pjrt` cargo feature; a stub
+//!   with the same API compiles by default).
 //! * [`coordinator`] — the layer-3 orchestrator: job queue, worker pool,
 //!   progress, and result sinks for large sweeps.
+//! * [`service`] — the online scheduling service: a persistent engine that
+//!   interns instances by structural hash, memoizes CEFT results and
+//!   schedules in LRU caches, and speaks a newline-delimited JSON protocol
+//!   over stdin/stdout or TCP (`repro serve` / `repro request` /
+//!   `repro loadgen`). This is the seam the batch algorithms plug into to
+//!   serve streams of small online requests instead of one offline sweep.
 //! * [`util`] — substrates built from scratch for this offline image:
 //!   deterministic RNG, statistics, a thread pool, CSV / JSON writers, a
 //!   micro-benchmark harness and a property-test harness.
@@ -71,6 +78,7 @@ pub mod metrics;
 pub mod platform;
 pub mod runtime;
 pub mod sched;
+pub mod service;
 pub mod util;
 
 /// Convenience prelude for examples and downstream users.
@@ -81,6 +89,7 @@ pub mod prelude {
     pub use crate::metrics::{makespan, slack, slr, speedup};
     pub use crate::platform::{CostModel, Platform};
     pub use crate::sched::{
-        ceft_cpop::CeftCpop, cpop::Cpop, heft::Heft, Schedule, Scheduler,
+        ceft_cpop::CeftCpop, cpop::Cpop, heft::Heft, Algorithm, Schedule, Scheduler,
     };
+    pub use crate::service::{Engine, EngineConfig};
 }

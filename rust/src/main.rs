@@ -11,6 +11,10 @@
 //! * `repro gengraph` — emit a generated instance as JSON or DOT.
 //! * `repro runtime-check` — load the PJRT artifacts and cross-validate the
 //!   accelerated CEFT backend against the pure-rust one.
+//! * `repro serve` — run the online scheduling engine (stdin/stdout or TCP).
+//! * `repro request` — send one protocol request to a running server.
+//! * `repro loadgen` — replay generated instances against an in-process
+//!   engine at a target rate and report requests/sec.
 
 use ceft::coordinator::{Coordinator, EXPERIMENT_IDS};
 use ceft::cp::ceft::find_critical_path;
@@ -18,9 +22,13 @@ use ceft::cp::ranks::cpop_critical_path;
 use ceft::exp::cells::{grid, Scale, Workload};
 use ceft::exp::run::{build_instance, run_cell, ALGOS};
 use ceft::graph::io;
+use ceft::sched::{Algorithm, Scheduler as _};
+use ceft::service::{serve_stdio, Engine, EngineConfig, Request, Server, Target};
 use ceft::util::cli::Args;
-use ceft::sched::Scheduler as _;
+use ceft::util::json::Json;
 use ceft::util::pool;
+use std::io::{BufRead as _, BufReader, Write as _};
+use std::sync::Arc;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -36,6 +44,9 @@ fn main() {
         "cp" => cmd_cp(rest),
         "gengraph" => cmd_gengraph(rest),
         "runtime-check" => cmd_runtime_check(rest),
+        "serve" => cmd_serve(rest),
+        "request" => cmd_request(rest),
+        "loadgen" => cmd_loadgen(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             0
@@ -57,7 +68,10 @@ fn usage() -> String {
          \x20 schedule          run every scheduler on one generated instance\n\
          \x20 cp                print CEFT vs CPOP critical paths for one instance\n\
          \x20 gengraph          emit a generated instance (JSON or DOT)\n\
-         \x20 runtime-check     validate the PJRT artifact backend\n\n\
+         \x20 runtime-check     validate the PJRT artifact backend\n\
+         \x20 serve             run the online scheduling engine (stdio or TCP)\n\
+         \x20 request           send one request to a running `repro serve`\n\
+         \x20 loadgen           measure engine requests/sec at a target rate\n\n\
          Run `repro <command> --help` for options.",
         EXPERIMENT_IDS.join("|")
     )
@@ -70,6 +84,32 @@ fn parse_or_exit(args: Args, tokens: &[String]) -> ceft::util::cli::Parsed {
             eprintln!("{msg}");
             std::process::exit(2);
         }
+    }
+}
+
+/// Parse `--name`'s numeric value, exiting with a message on malformed
+/// input (rather than silently falling back to a default). When the option
+/// was not given at all, `missing` supplies the value.
+fn num_or_exit<T: std::str::FromStr>(
+    parsed: &ceft::util::cli::Parsed,
+    name: &str,
+    missing: Option<T>,
+) -> T {
+    match parsed.get(name) {
+        Some(v) => match v.parse::<T>() {
+            Ok(x) => x,
+            Err(_) => {
+                eprintln!("invalid value for --{name}: {v:?}");
+                std::process::exit(2);
+            }
+        },
+        None => match missing {
+            Some(d) => d,
+            None => {
+                eprintln!("missing required option --{name}");
+                std::process::exit(2);
+            }
+        },
     }
 }
 
@@ -147,14 +187,14 @@ fn instance_args(program: &str, about: &str) -> Args {
 fn cell_from(p: &ceft::util::cli::Parsed) -> ceft::exp::cells::Cell {
     ceft::exp::cells::Cell {
         workload: workload_of(p.req("workload")),
-        n: p.get_parse("n").unwrap(),
-        out_degree: p.get_parse("out-degree").unwrap(),
-        ccr: p.get_parse("ccr").unwrap(),
-        alpha: p.get_parse("alpha").unwrap(),
-        beta_pct: p.get_parse("beta").unwrap(),
-        gamma: p.get_parse("gamma").unwrap(),
-        p: p.get_parse("p").unwrap(),
-        index: p.get_parse("seed").unwrap(),
+        n: num_or_exit(p, "n", None),
+        out_degree: num_or_exit(p, "out-degree", None),
+        ccr: num_or_exit(p, "ccr", None),
+        alpha: num_or_exit(p, "alpha", None),
+        beta_pct: num_or_exit(p, "beta", None),
+        gamma: num_or_exit(p, "gamma", None),
+        p: num_or_exit(p, "p", None),
+        index: num_or_exit(p, "seed", None),
     }
 }
 
@@ -231,6 +271,294 @@ fn cmd_gengraph(tokens: &[String]) -> i32 {
         }
     }
     0
+}
+
+fn cmd_serve(tokens: &[String]) -> i32 {
+    let args = Args::new("repro serve", "run the online scheduling engine")
+        .opt(
+            "addr",
+            None,
+            "TCP listen address (e.g. 127.0.0.1:7077); omit to serve stdin/stdout",
+        )
+        .opt(
+            "cache-capacity",
+            Some("1024"),
+            "LRU entries per result cache (also bounds interned instances)",
+        )
+        .opt("threads", None, "worker threads (default: all cores)");
+    let p = parse_or_exit(args, tokens);
+    let cache_capacity: usize = num_or_exit(&p, "cache-capacity", None);
+    let config = EngineConfig {
+        cache_capacity,
+        intern_capacity: cache_capacity,
+        threads: num_or_exit(&p, "threads", Some(pool::default_threads())),
+    };
+    let engine = Engine::new(config);
+    match p.get("addr") {
+        Some(addr) => {
+            let server = match Server::bind(Arc::new(engine), addr) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("bind {addr}: {e}");
+                    return 1;
+                }
+            };
+            match server.local_addr() {
+                Ok(a) => eprintln!("repro serve: listening on {a}"),
+                Err(_) => eprintln!("repro serve: listening on {addr}"),
+            }
+            match server.run() {
+                Ok(()) => 0,
+                Err(e) => {
+                    eprintln!("serve failed: {e}");
+                    1
+                }
+            }
+        }
+        None => match serve_stdio(&engine) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("serve failed: {e}");
+                1
+            }
+        },
+    }
+}
+
+/// Send one line to a TCP server and read one response line.
+fn send_request(addr: &str, line: &str) -> Result<String, String> {
+    let mut stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| format!("connect {addr}: {e}"))?;
+    writeln!(stream, "{line}").map_err(|e| format!("send: {e}"))?;
+    stream.flush().map_err(|e| format!("send: {e}"))?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader
+        .read_line(&mut resp)
+        .map_err(|e| format!("receive: {e}"))?;
+    if resp.is_empty() {
+        return Err("server closed the connection without responding".to_string());
+    }
+    Ok(resp.trim_end().to_string())
+}
+
+fn cmd_request(tokens: &[String]) -> i32 {
+    let args = instance_args("repro request", "send one request to a running `repro serve`")
+        .opt("addr", Some("127.0.0.1:7077"), "server address")
+        .opt(
+            "op",
+            Some("schedule"),
+            "ping | submit | cp | schedule | stats | evict | clear | shutdown",
+        )
+        .opt("algorithm", Some("CEFT-CPOP"), "scheduler for --op schedule")
+        .opt(
+            "id",
+            None,
+            "instance handle from a previous submit (skips instance generation)",
+        );
+    let parsed = parse_or_exit(args, tokens);
+    let op = parsed.req("op").to_string();
+    let parse_id = |s: &str| match ceft::service::protocol::parse_handle(s) {
+        Ok(id) => id,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let target = || -> Target {
+        match parsed.get("id") {
+            Some(id) => Target::Handle(parse_id(id)),
+            None => {
+                let (platform, inst) = build_instance(&cell_from(&parsed));
+                Target::Inline {
+                    instance: inst,
+                    platform: Some(platform),
+                }
+            }
+        }
+    };
+    let req = match op.as_str() {
+        "ping" => Request::Ping,
+        "stats" => Request::Stats,
+        "clear" => Request::Clear,
+        "shutdown" => Request::Shutdown,
+        "evict" => match parsed.get("id") {
+            Some(id) => Request::Evict { id: parse_id(id) },
+            None => {
+                eprintln!("--op evict requires --id");
+                return 2;
+            }
+        },
+        "submit" => {
+            if parsed.get("id").is_some() {
+                eprintln!("--op submit does not take --id (it creates handles)");
+                return 2;
+            }
+            let (platform, inst) = build_instance(&cell_from(&parsed));
+            Request::Submit {
+                instance: inst,
+                platform: Some(platform),
+            }
+        }
+        "cp" => Request::CriticalPath { target: target() },
+        "schedule" => {
+            let algorithm = match Algorithm::parse(parsed.req("algorithm")) {
+                Ok(a) => a,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            };
+            Request::Schedule {
+                algorithm,
+                target: target(),
+            }
+        }
+        other => {
+            eprintln!("unknown op {other:?}");
+            return 2;
+        }
+    };
+    let line = ceft::service::request_to_json(&req).to_string();
+    match send_request(parsed.req("addr"), &line) {
+        Ok(resp) => {
+            println!("{resp}");
+            match Json::parse(&resp) {
+                Ok(j) if j.get("ok") == Some(&Json::Bool(true)) => 0,
+                _ => 1,
+            }
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+fn cmd_loadgen(tokens: &[String]) -> i32 {
+    let args = instance_args(
+        "repro loadgen",
+        "replay generated instances against an in-process engine",
+    )
+    .opt("count", Some("16"), "distinct instances in the replay mix")
+    .opt("rate", Some("1000"), "target requests/sec")
+    .opt("duration", Some("3"), "seconds to run")
+    .opt("algorithm", Some("CEFT-CPOP"), "scheduler to request")
+    .opt("cache-capacity", Some("4096"), "LRU entries per result cache")
+    .opt("threads", None, "worker threads (default: all cores)");
+    let parsed = parse_or_exit(args, tokens);
+    let count: usize = num_or_exit::<usize>(&parsed, "count", None).max(1);
+    let rate: f64 = num_or_exit(&parsed, "rate", None);
+    let duration_s: f64 = num_or_exit(&parsed, "duration", None);
+    let algo = match Algorithm::parse(parsed.req("algorithm")) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if !(rate > 0.0) || !(duration_s > 0.0) {
+        eprintln!("--rate and --duration must be positive");
+        return 2;
+    }
+    let cache_capacity: usize = num_or_exit(&parsed, "cache-capacity", None);
+    let engine = Engine::new(EngineConfig {
+        cache_capacity,
+        intern_capacity: cache_capacity.max(count),
+        threads: num_or_exit(&parsed, "threads", Some(pool::default_threads())),
+    });
+
+    // Submit `count` distinct instances (same grid coordinates, different
+    // seeds) and keep their handles for the replay mix.
+    let base = cell_from(&parsed);
+    let mut ids = Vec::with_capacity(count);
+    for i in 0..count {
+        let mut cell = base;
+        cell.index = base.index + i as u64;
+        let (platform, inst) = build_instance(&cell);
+        let line = ceft::service::request_to_json(&Request::Submit {
+            instance: inst,
+            platform: Some(platform),
+        })
+        .to_string();
+        let (resp, _) = engine.handle_line(&line);
+        match resp.get("id").and_then(Json::as_str) {
+            Some(id) => match ceft::service::protocol::parse_handle(id) {
+                Ok(h) => ids.push(h),
+                Err(e) => {
+                    eprintln!("submit returned a bad handle: {e}");
+                    return 1;
+                }
+            },
+            None => {
+                eprintln!("submit failed: {}", resp.to_string());
+                return 1;
+            }
+        }
+    }
+    let lines: Vec<String> = ids
+        .iter()
+        .map(|&id| {
+            ceft::service::request_to_json(&Request::Schedule {
+                algorithm: algo,
+                target: Target::Handle(id),
+            })
+            .to_string()
+        })
+        .collect();
+
+    // Fire in 50ms ticks at the target rate; measure what the engine
+    // actually sustains.
+    let tick = std::time::Duration::from_millis(50);
+    let per_tick = ((rate * tick.as_secs_f64()).ceil() as usize).max(1);
+    // Pre-expanded ring: any window of `per_tick` consecutive requests is a
+    // contiguous slice, so the hot loop passes borrowed slices instead of
+    // cloning multi-KB strings every tick.
+    let ring: Vec<String> = lines
+        .iter()
+        .cycle()
+        .take(lines.len() + per_tick)
+        .cloned()
+        .collect();
+    let deadline = std::time::Duration::from_secs_f64(duration_s);
+    let mut batch_lat = ceft::util::stats::Accumulator::new();
+    let mut sent: u64 = 0;
+    let mut failures: u64 = 0;
+    let start = std::time::Instant::now();
+    while start.elapsed() < deadline {
+        let tick_start = std::time::Instant::now();
+        let offset = sent as usize % lines.len();
+        let batch = &ring[offset..offset + per_tick];
+        let t0 = std::time::Instant::now();
+        let results = engine.handle_batch(batch);
+        batch_lat.push(t0.elapsed().as_secs_f64() / batch.len() as f64);
+        sent += batch.len() as u64;
+        failures += results
+            .iter()
+            .filter(|(r, _)| r.get("ok") != Some(&Json::Bool(true)))
+            .count() as u64;
+        if let Some(rest) = tick.checked_sub(tick_start.elapsed()) {
+            std::thread::sleep(rest);
+        }
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    let achieved = sent as f64 / elapsed;
+    println!(
+        "loadgen: {} requests in {:.2}s -> {:.0} req/s (target {:.0}), {} failures",
+        sent, elapsed, achieved, rate, failures
+    );
+    println!(
+        "per-request engine time: mean {:.1} µs, min {:.1} µs, max {:.1} µs",
+        batch_lat.mean() * 1e6,
+        batch_lat.min() * 1e6,
+        batch_lat.max() * 1e6
+    );
+    println!("{}", engine.stats_json().to_string());
+    if failures > 0 {
+        1
+    } else {
+        0
+    }
 }
 
 fn cmd_runtime_check(tokens: &[String]) -> i32 {

@@ -131,6 +131,54 @@ impl Platform {
         plat
     }
 
+    /// Rebuild a platform from raw parts — the inverse of
+    /// [`crate::graph::io::platform_to_json`]. `startup` must have `p`
+    /// entries, `bandwidth` `p × p` (row-major), and `weights` either `p`
+    /// entries (two-weight platforms) or none. Validates instead of
+    /// panicking so untrusted service input cannot kill a worker.
+    pub fn from_parts(
+        p: usize,
+        startup: Vec<f64>,
+        bandwidth: Vec<f64>,
+        weights: Vec<(f64, f64)>,
+    ) -> Result<Self, String> {
+        if p < 1 {
+            return Err("platform needs at least one class".to_string());
+        }
+        if startup.len() != p {
+            return Err(format!("startup has {} entries, expected {p}", startup.len()));
+        }
+        if bandwidth.len() != p * p {
+            return Err(format!(
+                "bandwidth has {} entries, expected {}",
+                bandwidth.len(),
+                p * p
+            ));
+        }
+        if !weights.is_empty() && weights.len() != p {
+            return Err(format!("weights has {} entries, expected {p} or 0", weights.len()));
+        }
+        for (i, &s) in startup.iter().enumerate() {
+            if !(s >= 0.0) || !s.is_finite() {
+                return Err(format!("startup[{i}] = {s} must be finite and >= 0"));
+            }
+        }
+        for (i, &b) in bandwidth.iter().enumerate() {
+            if !(b > 0.0) || !b.is_finite() {
+                return Err(format!("bandwidth[{i}] = {b} must be finite and > 0"));
+            }
+        }
+        Ok(Self::finish(p, startup, bandwidth, weights))
+    }
+
+    /// The two-weight capacities of every class: `p` entries for platforms
+    /// built by [`Platform::two_weight`] (or [`Platform::from_parts`] with
+    /// weights), empty otherwise. Serialization-friendly counterpart of the
+    /// panicking per-class [`Platform::class_weights`].
+    pub fn class_weight_table(&self) -> &[(f64, f64)] {
+        &self.weights
+    }
+
     /// Number of processor classes `P`.
     pub fn num_classes(&self) -> usize {
         self.p
@@ -407,6 +455,35 @@ mod tests {
         assert_eq!(c.min(0), 1.0);
         assert!((c.mean(0) - 2.0).abs() < 1e-12);
         assert_eq!(c.argmin(1), 0); // ties -> lowest id
+    }
+
+    #[test]
+    fn from_parts_roundtrips_and_validates() {
+        let mut rng = Xoshiro256::new(6);
+        let orig = Platform::random_links(3, &mut rng, 0.5, 1.5, 0.0, 0.2);
+        let startup: Vec<f64> = (0..3).map(|j| orig.startup(j)).collect();
+        let mut bw = Vec::new();
+        for a in 0..3 {
+            for b in 0..3 {
+                bw.push(orig.bandwidth(a, b));
+            }
+        }
+        let back = Platform::from_parts(3, startup, bw, Vec::new()).unwrap();
+        assert_eq!(back.num_classes(), 3);
+        for a in 0..3 {
+            for b in 0..3 {
+                assert_eq!(back.bandwidth(a, b), orig.bandwidth(a, b));
+            }
+            assert_eq!(back.startup(a), orig.startup(a));
+        }
+        // cached mean factors are reproduced exactly
+        assert_eq!(back.mean_comm_cost(7.0), orig.mean_comm_cost(7.0));
+        // validation errors instead of panics
+        assert!(Platform::from_parts(0, vec![], vec![], vec![]).is_err());
+        assert!(Platform::from_parts(2, vec![0.0], vec![1.0; 4], vec![]).is_err());
+        assert!(Platform::from_parts(2, vec![0.0; 2], vec![1.0; 3], vec![]).is_err());
+        assert!(Platform::from_parts(2, vec![0.0; 2], vec![0.0; 4], vec![]).is_err());
+        assert!(Platform::from_parts(2, vec![0.0; 2], vec![1.0; 4], vec![(1.0, 1.0)]).is_err());
     }
 
     #[test]

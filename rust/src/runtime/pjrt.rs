@@ -1,0 +1,113 @@
+//! The real PJRT client, compiled only with `--features pjrt` (requires the
+//! vendored `xla` crate closure — see the note in `Cargo.toml`).
+
+use super::{artifact_name, artifacts_dir, Result, RuntimeError, BATCH};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A PJRT CPU client with a cache of compiled executables, one per class
+/// count.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    exes: Mutex<HashMap<usize, xla::PjRtLoadedExecutable>>,
+    dir: PathBuf,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client rooted at the default artifacts directory.
+    pub fn new() -> Result<Self> {
+        Self::with_dir(artifacts_dir())
+    }
+
+    /// Create a CPU PJRT client rooted at `dir`.
+    pub fn with_dir<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| RuntimeError(format!("pjrt cpu client: {e:?}")))?;
+        Ok(Self {
+            client,
+            exes: Mutex::new(HashMap::new()),
+            dir: dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Platform name reported by PJRT (e.g. "cpu").
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Whether the artifact for `p` classes exists on disk.
+    pub fn has_artifact(&self, p: usize) -> bool {
+        self.dir.join(artifact_name(p)).exists()
+    }
+
+    /// Load (or fetch from cache) the executable for `p` classes.
+    fn executable(&self, p: usize) -> Result<()> {
+        let mut exes = self.exes.lock().unwrap();
+        if exes.contains_key(&p) {
+            return Ok(());
+        }
+        let path = self.dir.join(artifact_name(p));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| RuntimeError(format!("load {path:?}: {e:?}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| RuntimeError(format!("compile {path:?}: {e:?}")))?;
+        exes.insert(p, exe);
+        Ok(())
+    }
+
+    /// One batched CEFT edge relaxation on the accelerator:
+    ///
+    /// `out[b, j] = min_l ( F[b, l] + (l==j ? 0 : L[l] + data[b] * invbw[l, j]) ) + comp[b, j]`
+    ///
+    /// Shapes: `f` is `BATCH×p` (parent CEFT rows), `data` is `BATCH`
+    /// (edge payloads), `l` is `p` (startup latencies), `invbw` is `p×p`
+    /// (reciprocal bandwidths, diagonal ignored), `comp` is `BATCH×p`
+    /// (child execution costs). Returns `BATCH×p`.
+    pub fn relax_batch(
+        &self,
+        p: usize,
+        f: &[f32],
+        data: &[f32],
+        l: &[f32],
+        invbw: &[f32],
+        comp: &[f32],
+    ) -> Result<Vec<f32>> {
+        assert_eq!(f.len(), BATCH * p);
+        assert_eq!(data.len(), BATCH);
+        assert_eq!(l.len(), p);
+        assert_eq!(invbw.len(), p * p);
+        assert_eq!(comp.len(), BATCH * p);
+        self.executable(p)?;
+        let exes = self.exes.lock().unwrap();
+        let exe = exes.get(&p).unwrap();
+        let lit = |v: &[f32], shape: &[i64]| -> Result<xla::Literal> {
+            xla::Literal::vec1(v)
+                .reshape(shape)
+                .map_err(|e| RuntimeError(format!("reshape {shape:?}: {e:?}")))
+        };
+        let b = BATCH as i64;
+        let pi = p as i64;
+        let args = [
+            lit(f, &[b, pi])?,
+            lit(data, &[b])?,
+            lit(l, &[pi])?,
+            lit(invbw, &[pi, pi])?,
+            lit(comp, &[b, pi])?,
+        ];
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| RuntimeError(format!("execute: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| RuntimeError(format!("fetch: {e:?}")))?;
+        // aot.py lowers with return_tuple=True -> 1-tuple
+        let out = result
+            .to_tuple1()
+            .map_err(|e| RuntimeError(format!("untuple: {e:?}")))?;
+        out.to_vec::<f32>()
+            .map_err(|e| RuntimeError(format!("to_vec: {e:?}")))
+    }
+}

@@ -118,6 +118,95 @@ pub trait Scheduler {
     fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule;
 }
 
+/// The unified algorithm registry: one name per scheduler, shared by the
+/// batch driver (`repro schedule`, the experiment harness) and the online
+/// service, so "CEFT-CPOP" means the same code path everywhere. Variants
+/// are in result-column order (the order of [`crate::exp::run::ALGOS`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// CPOP (Algorithm 2): mean-value ranks, critical path on one processor
+    Cpop,
+    /// classic HEFT: mean-value upward rank, min-EFT placement
+    Heft,
+    /// the paper's CEFT-CPOP: CEFT path + partial assignment pinned
+    CeftCpop,
+    /// HEFT driven by the mean-value downward rank
+    HeftDown,
+    /// HEFT with the CEFT upward rank (§8.2)
+    CeftHeftUp,
+    /// HEFT with the CEFT downward rank (§8.2)
+    CeftHeftDown,
+}
+
+impl Algorithm {
+    /// Every algorithm, in result-column order.
+    pub const ALL: [Algorithm; 6] = [
+        Algorithm::Cpop,
+        Algorithm::Heft,
+        Algorithm::CeftCpop,
+        Algorithm::HeftDown,
+        Algorithm::CeftHeftUp,
+        Algorithm::CeftHeftDown,
+    ];
+
+    /// Canonical display name (matches [`Scheduler::name`]).
+    pub const fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Cpop => "CPOP",
+            Algorithm::Heft => "HEFT",
+            Algorithm::CeftCpop => "CEFT-CPOP",
+            Algorithm::HeftDown => "HEFT-DOWN",
+            Algorithm::CeftHeftUp => "CEFT-HEFT-UP",
+            Algorithm::CeftHeftDown => "CEFT-HEFT-DOWN",
+        }
+    }
+
+    /// Stable numeric id — part of the service's memoization cache key, so
+    /// these values must never be reused for a different algorithm.
+    pub const fn id(&self) -> u64 {
+        match self {
+            Algorithm::Cpop => 0,
+            Algorithm::Heft => 1,
+            Algorithm::CeftCpop => 2,
+            Algorithm::HeftDown => 3,
+            Algorithm::CeftHeftUp => 4,
+            Algorithm::CeftHeftDown => 5,
+        }
+    }
+
+    /// Parse a (case-insensitive, `_`/`-` agnostic) algorithm name.
+    pub fn parse(s: &str) -> Result<Algorithm, String> {
+        let norm = s.trim().to_ascii_lowercase().replace('_', "-");
+        for a in Algorithm::ALL {
+            if a.name().to_ascii_lowercase() == norm {
+                return Ok(a);
+            }
+        }
+        let names: Vec<&str> = Algorithm::ALL.iter().map(|a| a.name()).collect();
+        Err(format!(
+            "unknown algorithm {s:?} (expected one of: {})",
+            names.join(", ")
+        ))
+    }
+
+    /// The scheduler implementation behind this registry entry.
+    pub fn scheduler(&self) -> &'static dyn Scheduler {
+        match self {
+            Algorithm::Cpop => &cpop::Cpop,
+            Algorithm::Heft => &heft::Heft,
+            Algorithm::CeftCpop => &ceft_cpop::CeftCpop,
+            Algorithm::HeftDown => &heft::HeftDown,
+            Algorithm::CeftHeftUp => &ceft_heft::CeftHeftUp,
+            Algorithm::CeftHeftDown => &ceft_heft::CeftHeftDown,
+        }
+    }
+
+    /// Schedule an instance with this algorithm.
+    pub fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule {
+        self.scheduler().schedule(graph, platform, comp)
+    }
+}
+
 /// Placement policy for the generic list scheduler.
 pub enum Placement {
     /// choose the processor minimising the (insertion-based) EFT
@@ -389,6 +478,40 @@ mod tests {
             p: 1,
         };
         assert!(s.validate(&g, &plat, &comp).unwrap_err().contains("duration"));
+    }
+
+    #[test]
+    fn algorithm_registry_is_consistent() {
+        // names unique, ids unique, registry name == scheduler name
+        let mut names = std::collections::HashSet::new();
+        let mut ids = std::collections::HashSet::new();
+        for a in Algorithm::ALL {
+            assert!(names.insert(a.name()), "duplicate name {}", a.name());
+            assert!(ids.insert(a.id()), "duplicate id {}", a.id());
+            assert_eq!(a.name(), a.scheduler().name());
+        }
+    }
+
+    #[test]
+    fn algorithm_parse_accepts_aliases_and_rejects_unknown() {
+        assert_eq!(Algorithm::parse("CEFT-CPOP").unwrap(), Algorithm::CeftCpop);
+        assert_eq!(Algorithm::parse("ceft_cpop").unwrap(), Algorithm::CeftCpop);
+        assert_eq!(Algorithm::parse(" heft ").unwrap(), Algorithm::Heft);
+        assert_eq!(
+            Algorithm::parse("ceft-heft-down").unwrap(),
+            Algorithm::CeftHeftDown
+        );
+        let e = Algorithm::parse("nope").unwrap_err();
+        assert!(e.contains("unknown algorithm"));
+        assert!(e.contains("CEFT-CPOP"));
+    }
+
+    #[test]
+    fn algorithm_dispatch_matches_direct_scheduler() {
+        let (g, plat, comp) = tiny();
+        let via_registry = Algorithm::CeftCpop.schedule(&g, &plat, &comp);
+        let direct = crate::sched::ceft_cpop::CeftCpop.schedule(&g, &plat, &comp);
+        assert_eq!(via_registry.assignments, direct.assignments);
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Bounded LRU result cache with hit/miss/eviction accounting.
+//!
+//! The engine keeps two of these: one for CEFT critical paths and one for
+//! schedules, both keyed by [`CacheKey`]. Recency is tracked with a
+//! monotonic tick and a `BTreeMap<tick, key>` index, giving `O(log n)`
+//! touch/insert/evict without unsafe code or intrusive lists — plenty for a
+//! cache bounded at thousands of entries, and trivially correct to audit.
+
+use std::collections::{BTreeMap, HashMap};
+use std::hash::Hash;
+
+/// Memoization key: structural hashes of the problem parts plus the
+/// algorithm id ([`crate::sched::Algorithm::id`], or the critical-path
+/// marker used by the engine).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CacheKey {
+    /// [`crate::service::hashing::hash_graph`] of the task graph
+    pub graph: u64,
+    /// [`crate::service::hashing::hash_platform`] of the platform
+    pub platform: u64,
+    /// [`crate::service::hashing::hash_comp`] of the realized cost matrix
+    pub comp: u64,
+    /// algorithm id (the cost model is already folded into `comp`)
+    pub algorithm: u64,
+}
+
+/// Counters exposed through the service stats endpoint.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// lookups that found a live entry
+    pub hits: u64,
+    /// lookups that missed
+    pub misses: u64,
+    /// entries written (including overwrites)
+    pub insertions: u64,
+    /// entries displaced by the capacity bound
+    pub evictions: u64,
+}
+
+/// A bounded least-recently-used map.
+pub struct LruCache<K, V> {
+    cap: usize,
+    map: HashMap<K, (u64, V)>,
+    order: BTreeMap<u64, K>,
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl<K: Eq + Hash + Copy, V> LruCache<K, V> {
+    /// New cache bounded at `cap` entries (`cap >= 1`).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "cache capacity must be at least 1");
+        Self {
+            cap,
+            map: HashMap::new(),
+            order: BTreeMap::new(),
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Look up `k`, bumping its recency on a hit.
+    pub fn get(&mut self, k: &K) -> Option<&V> {
+        let tick = self.next_tick();
+        if let Some(entry) = self.map.get_mut(k) {
+            self.order.remove(&entry.0);
+            entry.0 = tick;
+            self.order.insert(tick, *k);
+            self.stats.hits += 1;
+            Some(&entry.1)
+        } else {
+            self.stats.misses += 1;
+            None
+        }
+    }
+
+    /// Check for `k` without bumping recency or counting a hit/miss.
+    pub fn peek(&self, k: &K) -> Option<&V> {
+        self.map.get(k).map(|(_, v)| v)
+    }
+
+    /// Insert (or overwrite) `k`, evicting the least-recently-used entry
+    /// when over capacity.
+    pub fn put(&mut self, k: K, v: V) {
+        let tick = self.next_tick();
+        if let Some((old_tick, _)) = self.map.insert(k, (tick, v)) {
+            self.order.remove(&old_tick);
+        } else if self.map.len() > self.cap {
+            // the new key has no order entry yet, so it can't be the victim
+            if let Some((_, victim)) = self.order.pop_first() {
+                self.map.remove(&victim);
+                self.stats.evictions += 1;
+            }
+        }
+        self.order.insert(tick, k);
+        self.stats.insertions += 1;
+    }
+
+    /// Remove one key; returns its value when present.
+    pub fn remove(&mut self, k: &K) -> Option<V> {
+        match self.map.remove(k) {
+            Some((tick, v)) => {
+                self.order.remove(&tick);
+                Some(v)
+            }
+            None => None,
+        }
+    }
+
+    /// Remove every key matching a predicate; returns how many were removed.
+    pub fn remove_matching<F: Fn(&K) -> bool>(&mut self, f: F) -> usize {
+        let victims: Vec<K> = self.map.keys().filter(|k| f(k)).copied().collect();
+        for k in &victims {
+            self.remove(k);
+        }
+        victims.len()
+    }
+
+    /// Drop every entry (stats are kept).
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.order.clear();
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Capacity bound.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: u64) -> CacheKey {
+        CacheKey {
+            graph: n,
+            platform: 10 + n,
+            comp: 20 + n,
+            algorithm: 0,
+        }
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let mut c: LruCache<CacheKey, u32> = LruCache::new(4);
+        assert!(c.get(&key(1)).is_none());
+        c.put(key(1), 11);
+        assert_eq!(c.get(&key(1)), Some(&11));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions, s.evictions), (1, 1, 1, 0));
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: LruCache<CacheKey, u32> = LruCache::new(2);
+        c.put(key(1), 1);
+        c.put(key(2), 2);
+        // touch 1 so 2 becomes the LRU
+        assert!(c.get(&key(1)).is_some());
+        c.put(key(3), 3);
+        assert_eq!(c.len(), 2);
+        assert!(c.peek(&key(2)).is_none(), "LRU entry must be evicted");
+        assert!(c.peek(&key(1)).is_some());
+        assert!(c.peek(&key(3)).is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn overwrite_does_not_evict() {
+        let mut c: LruCache<CacheKey, u32> = LruCache::new(2);
+        c.put(key(1), 1);
+        c.put(key(2), 2);
+        c.put(key(1), 100);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.peek(&key(1)), Some(&100));
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn remove_and_remove_matching() {
+        let mut c: LruCache<CacheKey, u32> = LruCache::new(8);
+        for n in 0..6 {
+            c.put(key(n), n as u32);
+        }
+        assert_eq!(c.remove(&key(3)), Some(3));
+        assert_eq!(c.remove(&key(3)), None);
+        let removed = c.remove_matching(|k| k.graph < 2);
+        assert_eq!(removed, 2);
+        assert_eq!(c.len(), 3);
+        // removed keys can be re-inserted and found again
+        c.put(key(0), 99);
+        assert_eq!(c.get(&key(0)), Some(&99));
+    }
+
+    #[test]
+    fn clear_keeps_stats() {
+        let mut c: LruCache<CacheKey, u32> = LruCache::new(2);
+        c.put(key(1), 1);
+        assert!(c.get(&key(1)).is_some());
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.stats().hits, 1);
+    }
+
+    #[test]
+    fn heavy_churn_respects_capacity() {
+        let mut c: LruCache<CacheKey, u64> = LruCache::new(16);
+        for n in 0..1000 {
+            c.put(key(n), n);
+            assert!(c.len() <= 16);
+        }
+        assert_eq!(c.len(), 16);
+        // the 16 most recent keys survive
+        for n in 984..1000 {
+            assert!(c.peek(&key(n)).is_some(), "key {n} should be live");
+        }
+        assert_eq!(c.stats().evictions, 1000 - 16);
+    }
+}

@@ -1,0 +1,820 @@
+//! The persistent scheduling engine and its serving loops.
+//!
+//! [`Engine`] is the long-lived heart of the service: it interns platforms
+//! and task graphs by structural hash, memoizes CEFT critical paths and
+//! schedules in LRU caches keyed by
+//! `(graph-hash, platform-hash, comp-hash, algorithm)`, and dispatches
+//! every computation through the unified [`Algorithm`] registry — the same
+//! code paths as the batch `repro schedule` / `repro cp` commands, so an
+//! online answer is bit-identical to the offline one (both inherit
+//! [`crate::cp::ceft`]'s deterministic tie-breaking).
+//!
+//! Concurrency model: the engine state sits behind one mutex, but all
+//! algorithm work (the `O(P²e)` CEFT DP, the list schedulers) runs outside
+//! it, so the lock is only held for hash-map lookups. Two racing clients
+//! may compute the same uncached result twice; both arrive at the same
+//! bits, and the second `put` is an idempotent overwrite — accepted in
+//! exchange for never blocking the fast path. Batched entry points fan
+//! work across [`crate::util::pool`] workers so throughput scales with
+//! cores (see `benches/service_throughput.rs`).
+//!
+//! Serving loops: [`serve_stdio`] speaks the protocol on stdin/stdout,
+//! greedily draining whatever lines are already buffered into one batch;
+//! [`Server`] accepts TCP connections (`std::net`) with one thread per
+//! connection. Both share one engine, hence one cache.
+
+use crate::cp::ceft::{find_critical_path, CriticalPath};
+use crate::graph::generator::Instance;
+use crate::graph::io;
+use crate::graph::TaskGraph;
+use crate::platform::Platform;
+use crate::sched::{Algorithm, Schedule};
+use crate::service::cache::{CacheKey, CacheStats, LruCache};
+use crate::service::hashing;
+use crate::service::protocol::{self, Request, Target};
+use crate::util::json::Json;
+use crate::util::pool;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Algorithm-slot marker for critical-path cache entries. Real algorithm
+/// ids ([`Algorithm::id`]) are small; this can never collide.
+const CP_MARKER: u64 = u64::MAX;
+
+/// Cap on one protocol line over TCP, enforced *before* the line is parsed
+/// (the JSON-level `MAX_TASKS` guard only runs after a full line is
+/// buffered, so without this a newline-free stream would grow the read
+/// buffer without bound). 16 MiB comfortably fits instances with hundreds
+/// of thousands of tasks while keeping per-connection transient memory
+/// bounded.
+const MAX_REQUEST_BYTES: u64 = 16 * 1024 * 1024;
+
+/// Cap on concurrently served TCP connections; beyond it new clients get an
+/// error line and are disconnected, bounding total transient memory at
+/// roughly `MAX_CONNECTIONS × MAX_REQUEST_BYTES` plus parse overhead.
+const MAX_CONNECTIONS: usize = 256;
+
+/// Engine tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// LRU bound per result cache (critical paths and schedules each)
+    pub cache_capacity: usize,
+    /// LRU bound on interned instances; least-recently-used handles expire
+    /// (subsequent by-handle requests get "unknown instance id")
+    pub intern_capacity: usize,
+    /// worker threads for batched entry points
+    pub threads: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            cache_capacity: 1024,
+            intern_capacity: 1024,
+            threads: pool::default_threads(),
+        }
+    }
+}
+
+/// Field-by-field platform equality (Platform deliberately has no
+/// `PartialEq`; this compares exactly what the algorithms read).
+fn platforms_equal(a: &Platform, b: &Platform) -> bool {
+    let p = a.num_classes();
+    if p != b.num_classes() || a.class_weight_table() != b.class_weight_table() {
+        return false;
+    }
+    for i in 0..p {
+        if a.startup(i) != b.startup(i) {
+            return false;
+        }
+        for j in 0..p {
+            if a.bandwidth(i, j) != b.bandwidth(i, j) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// An interned instance: shared, hash-addressed, immutable.
+struct Interned {
+    id: u64,
+    graph: Arc<TaskGraph>,
+    comp: Arc<Vec<f64>>,
+    platform: Arc<Platform>,
+    graph_hash: u64,
+    platform_hash: u64,
+    comp_hash: u64,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Counters {
+    requests: u64,
+    errors: u64,
+    submits: u64,
+    cp_requests: u64,
+    schedule_requests: u64,
+}
+
+struct State {
+    /// interned instances, LRU-bounded: stale handles expire instead of
+    /// letting a stream of distinct instances grow memory without bound
+    instances: LruCache<u64, Arc<Interned>>,
+    cp_cache: LruCache<CacheKey, Arc<CriticalPath>>,
+    sched_cache: LruCache<CacheKey, Arc<Schedule>>,
+    counters: Counters,
+}
+
+/// The persistent, memoizing scheduling engine.
+pub struct Engine {
+    state: Mutex<State>,
+    threads: usize,
+}
+
+impl Engine {
+    /// New engine with the given configuration.
+    pub fn new(config: EngineConfig) -> Self {
+        let cap = config.cache_capacity.max(1);
+        Self {
+            state: Mutex::new(State {
+                instances: LruCache::new(config.intern_capacity.max(1)),
+                cp_cache: LruCache::new(cap),
+                sched_cache: LruCache::new(cap),
+                counters: Counters::default(),
+            }),
+            threads: config.threads.max(1),
+        }
+    }
+
+    /// New engine with default configuration.
+    pub fn with_defaults() -> Self {
+        Self::new(EngineConfig::default())
+    }
+
+    /// Worker threads used by the batched entry points.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Intern an instance (idempotent: same content ⇒ same handle).
+    fn intern(
+        &self,
+        instance: Instance,
+        platform: Option<Platform>,
+    ) -> Result<Arc<Interned>, String> {
+        let platform = match platform {
+            Some(p) => {
+                if p.num_classes() != instance.p {
+                    return Err(format!(
+                        "platform has {} classes but instance expects {}",
+                        p.num_classes(),
+                        instance.p
+                    ));
+                }
+                p
+            }
+            None => Platform::uniform(instance.p, 1.0, 0.0),
+        };
+        if instance.comp.len() != instance.graph.num_tasks() * instance.p {
+            return Err(format!(
+                "comp has {} entries, expected {}",
+                instance.comp.len(),
+                instance.graph.num_tasks() * instance.p
+            ));
+        }
+        let graph_hash = hashing::hash_graph(&instance.graph);
+        let platform_hash = hashing::hash_platform(&platform);
+        let comp_hash = hashing::hash_comp(&instance.comp);
+        let id = hashing::combine(&[graph_hash, platform_hash, comp_hash]);
+        let mut st = self.state.lock().unwrap();
+        if let Some(existing) = st.instances.get(&id) {
+            // Handles are 64-bit non-cryptographic hashes shared by every
+            // client, so never trust a handle hit blindly: confirm the
+            // content actually matches before reusing cached results.
+            if existing.graph_hash == graph_hash
+                && existing.platform_hash == platform_hash
+                && existing.comp_hash == comp_hash
+                && existing.graph.num_tasks() == instance.graph.num_tasks()
+                && existing.graph.edges() == instance.graph.edges()
+                && *existing.comp == instance.comp
+                && platforms_equal(&existing.platform, &platform)
+            {
+                return Ok(existing.clone());
+            }
+            return Err(format!(
+                "instance hash collision on id {} — submit rejected to avoid serving another instance's results",
+                protocol::handle_to_hex(id)
+            ));
+        }
+        let interned = Arc::new(Interned {
+            id,
+            graph: Arc::new(instance.graph),
+            comp: Arc::new(instance.comp),
+            platform: Arc::new(platform),
+            graph_hash,
+            platform_hash,
+            comp_hash,
+        });
+        st.instances.put(id, interned.clone());
+        Ok(interned)
+    }
+
+    /// Resolve a protocol target to an interned instance.
+    fn resolve(&self, target: Target) -> Result<Arc<Interned>, String> {
+        match target {
+            Target::Handle(id) => self
+                .state
+                .lock()
+                .unwrap()
+                .instances
+                .get(&id)
+                .cloned()
+                .ok_or_else(|| {
+                    format!("unknown instance id {}", protocol::handle_to_hex(id))
+                }),
+            Target::Inline { instance, platform } => self.intern(instance, platform),
+        }
+    }
+
+    /// Memoized CEFT critical path. Returns `(result, was_cached)`.
+    fn critical_path_for(&self, inst: &Interned) -> (Arc<CriticalPath>, bool) {
+        let key = CacheKey {
+            graph: inst.graph_hash,
+            platform: inst.platform_hash,
+            comp: inst.comp_hash,
+            algorithm: CP_MARKER,
+        };
+        if let Some(hit) = self.state.lock().unwrap().cp_cache.get(&key) {
+            return (hit.clone(), true);
+        }
+        // compute outside the lock
+        let cp = Arc::new(find_critical_path(
+            inst.graph.as_ref(),
+            inst.platform.as_ref(),
+            inst.comp.as_slice(),
+        ));
+        self.state.lock().unwrap().cp_cache.put(key, cp.clone());
+        (cp, false)
+    }
+
+    /// Memoized schedule. Returns `(result, was_cached)`.
+    fn schedule_for(&self, inst: &Interned, algorithm: Algorithm) -> (Arc<Schedule>, bool) {
+        let key = CacheKey {
+            graph: inst.graph_hash,
+            platform: inst.platform_hash,
+            comp: inst.comp_hash,
+            algorithm: algorithm.id(),
+        };
+        if let Some(hit) = self.state.lock().unwrap().sched_cache.get(&key) {
+            return (hit.clone(), true);
+        }
+        let s = Arc::new(algorithm.schedule(
+            inst.graph.as_ref(),
+            inst.platform.as_ref(),
+            inst.comp.as_slice(),
+        ));
+        self.state.lock().unwrap().sched_cache.put(key, s.clone());
+        (s, false)
+    }
+
+    fn bump<F: FnOnce(&mut Counters)>(&self, f: F) {
+        f(&mut self.state.lock().unwrap().counters);
+    }
+
+    /// Execute one decoded request, producing the response body.
+    pub fn handle(&self, req: Request) -> Json {
+        self.bump(|c| c.requests += 1);
+        let result = match req {
+            Request::Ping => Ok(protocol::ok_response(vec![
+                ("pong", Json::Bool(true)),
+                ("version", Json::Num(protocol::PROTOCOL_VERSION as f64)),
+            ])),
+            Request::Submit { instance, platform } => {
+                self.bump(|c| c.submits += 1);
+                self.intern(instance, platform).map(|inst| {
+                    protocol::ok_response(vec![
+                        ("id", Json::Str(protocol::handle_to_hex(inst.id))),
+                        ("n", Json::Num(inst.graph.num_tasks() as f64)),
+                        ("p", Json::Num(inst.platform.num_classes() as f64)),
+                        ("edges", Json::Num(inst.graph.num_edges() as f64)),
+                    ])
+                })
+            }
+            Request::CriticalPath { target } => {
+                self.bump(|c| c.cp_requests += 1);
+                self.resolve(target).map(|inst| {
+                    let (cp, cached) = self.critical_path_for(&inst);
+                    protocol::ok_response(vec![
+                        ("id", Json::Str(protocol::handle_to_hex(inst.id))),
+                        ("length", Json::Num(cp.length)),
+                        (
+                            "path",
+                            Json::Arr(
+                                cp.path
+                                    .iter()
+                                    .map(|s| {
+                                        Json::Arr(vec![
+                                            Json::Num(s.task as f64),
+                                            Json::Num(s.class as f64),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        ("cached", Json::Bool(cached)),
+                    ])
+                })
+            }
+            Request::Schedule { algorithm, target } => {
+                self.bump(|c| c.schedule_requests += 1);
+                self.resolve(target).map(|inst| {
+                    let (s, cached) = self.schedule_for(&inst, algorithm);
+                    protocol::ok_response(vec![
+                        ("id", Json::Str(protocol::handle_to_hex(inst.id))),
+                        ("algorithm", Json::Str(algorithm.name().to_string())),
+                        ("makespan", Json::Num(s.makespan())),
+                        ("cached", Json::Bool(cached)),
+                        ("schedule", io::schedule_to_json(s.as_ref())),
+                    ])
+                })
+            }
+            Request::Stats => Ok(self.stats_json()),
+            Request::Evict { id } => {
+                let mut st = self.state.lock().unwrap();
+                match st.instances.remove(&id) {
+                    Some(inst) => {
+                        let (g, p, c) = (inst.graph_hash, inst.platform_hash, inst.comp_hash);
+                        let matches =
+                            |k: &CacheKey| k.graph == g && k.platform == p && k.comp == c;
+                        let dropped_cp = st.cp_cache.remove_matching(&matches);
+                        let dropped_sched = st.sched_cache.remove_matching(&matches);
+                        Ok(protocol::ok_response(vec![
+                            ("id", Json::Str(protocol::handle_to_hex(id))),
+                            ("dropped_cp", Json::Num(dropped_cp as f64)),
+                            ("dropped_schedules", Json::Num(dropped_sched as f64)),
+                        ]))
+                    }
+                    None => Err(format!(
+                        "unknown instance id {}",
+                        protocol::handle_to_hex(id)
+                    )),
+                }
+            }
+            Request::Clear => {
+                let mut st = self.state.lock().unwrap();
+                let dropped = st.instances.len() + st.cp_cache.len() + st.sched_cache.len();
+                st.instances.clear();
+                st.cp_cache.clear();
+                st.sched_cache.clear();
+                Ok(protocol::ok_response(vec![(
+                    "dropped",
+                    Json::Num(dropped as f64),
+                )]))
+            }
+            Request::Shutdown => Ok(protocol::ok_response(vec![(
+                "shutting_down",
+                Json::Bool(true),
+            )])),
+        };
+        match result {
+            Ok(resp) => resp,
+            Err(msg) => {
+                self.bump(|c| c.errors += 1);
+                protocol::error_response(&msg)
+            }
+        }
+    }
+
+    /// Parse + execute one request line. The second component is true when
+    /// the request asked the serving loop to shut down.
+    pub fn handle_line(&self, line: &str) -> (Json, bool) {
+        match protocol::parse_request(line) {
+            Ok(Request::Shutdown) => (self.handle(Request::Shutdown), true),
+            Ok(req) => (self.handle(req), false),
+            Err(msg) => {
+                self.bump(|c| {
+                    c.requests += 1;
+                    c.errors += 1;
+                });
+                (protocol::error_response(&msg), false)
+            }
+        }
+    }
+
+    /// Execute a batch of request lines across the worker pool, preserving
+    /// input order. This is the throughput path: independent requests run
+    /// concurrently and share the memo caches.
+    pub fn handle_batch(&self, lines: &[String]) -> Vec<(Json, bool)> {
+        pool::parallel_map(lines, self.threads, |_, line| self.handle_line(line))
+    }
+
+    /// Engine counters and cache occupancy as a stats response.
+    pub fn stats_json(&self) -> Json {
+        let st = self.state.lock().unwrap();
+        let cache_obj = |len: usize, cap: usize, s: CacheStats| {
+            Json::obj(vec![
+                ("len", Json::Num(len as f64)),
+                ("capacity", Json::Num(cap as f64)),
+                ("hits", Json::Num(s.hits as f64)),
+                ("misses", Json::Num(s.misses as f64)),
+                ("insertions", Json::Num(s.insertions as f64)),
+                ("evictions", Json::Num(s.evictions as f64)),
+            ])
+        };
+        let c = st.counters;
+        protocol::ok_response(vec![
+            ("requests", Json::Num(c.requests as f64)),
+            ("errors", Json::Num(c.errors as f64)),
+            ("submits", Json::Num(c.submits as f64)),
+            ("cp_requests", Json::Num(c.cp_requests as f64)),
+            ("schedule_requests", Json::Num(c.schedule_requests as f64)),
+            ("instances", Json::Num(st.instances.len() as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            (
+                "cp_cache",
+                cache_obj(
+                    st.cp_cache.len(),
+                    st.cp_cache.capacity(),
+                    st.cp_cache.stats(),
+                ),
+            ),
+            (
+                "sched_cache",
+                cache_obj(
+                    st.sched_cache.len(),
+                    st.sched_cache.capacity(),
+                    st.sched_cache.stats(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Serve the protocol on stdin/stdout until EOF or a `shutdown` request.
+///
+/// A reader thread feeds lines through a channel; the serving loop drains
+/// everything already queued (up to `4 × threads` lines) into one batch and
+/// fans it across the worker pool, so a client that pipelines requests gets
+/// multi-core throughput while an interactive client still sees one
+/// response per line.
+pub fn serve_stdio(engine: &Engine) -> std::io::Result<()> {
+    // Bounded: when the producer outruns the engine, send() blocks the
+    // reader thread, which propagates backpressure to the stdin pipe
+    // instead of buffering the backlog in memory.
+    let (tx, rx) = std::sync::mpsc::sync_channel::<String>(1024);
+    std::thread::spawn(move || {
+        let stdin = std::io::stdin();
+        for line in stdin.lock().lines() {
+            match line {
+                Ok(l) => {
+                    if tx.send(l).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    let batch_cap = engine.threads().saturating_mul(4).max(1);
+    'serve: loop {
+        let first = match rx.recv() {
+            Ok(l) => l,
+            Err(_) => break, // EOF
+        };
+        let mut lines = vec![first];
+        while lines.len() < batch_cap {
+            match rx.try_recv() {
+                Ok(l) => lines.push(l),
+                Err(_) => break,
+            }
+        }
+        lines.retain(|l| !l.trim().is_empty());
+        if lines.is_empty() {
+            continue;
+        }
+        // Write *every* response in the batch — the protocol promises one
+        // response per request line, in order, even when a shutdown request
+        // was pipelined in the middle of the batch.
+        let mut stop = false;
+        for (resp, shutdown) in engine.handle_batch(&lines) {
+            writeln!(out, "{}", resp.to_string())?;
+            stop |= shutdown;
+        }
+        out.flush()?;
+        if stop {
+            break 'serve;
+        }
+    }
+    Ok(())
+}
+
+/// A TCP front end over a shared engine: one handler thread per connection,
+/// newline-delimited protocol frames, graceful shutdown via the `shutdown`
+/// op from any client.
+pub struct Server {
+    engine: Arc<Engine>,
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. `"127.0.0.1:7077"`, port 0 for ephemeral).
+    pub fn bind(engine: Arc<Engine>, addr: &str) -> std::io::Result<Self> {
+        Ok(Self {
+            engine,
+            listener: TcpListener::bind(addr)?,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// The bound address (useful with an ephemeral port).
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Accept loop. Returns after a client sends `shutdown`.
+    pub fn run(self) -> std::io::Result<()> {
+        let addr = self.listener.local_addr()?;
+        let live = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        loop {
+            // Transient accept failures (ECONNABORTED from a client that
+            // reset while queued, EMFILE under fd pressure) must not kill a
+            // server meant to run forever — log, breathe, continue.
+            let stream = match self.listener.accept() {
+                Ok((stream, _)) => stream,
+                Err(e) => {
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    eprintln!("accept failed (continuing): {e}");
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    continue;
+                }
+            };
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            if live.load(Ordering::SeqCst) >= MAX_CONNECTIONS {
+                let mut s = stream;
+                let _ = writeln!(
+                    s,
+                    "{}",
+                    protocol::error_response("server at connection capacity").to_string()
+                );
+                continue;
+            }
+            live.fetch_add(1, Ordering::SeqCst);
+            let engine = self.engine.clone();
+            let shutdown = self.shutdown.clone();
+            let live = live.clone();
+            std::thread::spawn(move || {
+                let _ = handle_connection(&engine, stream, &shutdown, addr);
+                live.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(
+    engine: &Engine,
+    stream: TcpStream,
+    shutdown: &AtomicBool,
+    server_addr: SocketAddr,
+) -> std::io::Result<()> {
+    let reader_half = stream.try_clone()?;
+    // Cap the bytes one request line may occupy *before* parsing, so a
+    // newline-free stream cannot grow the buffer without bound.
+    let mut reader = BufReader::new(reader_half).take(MAX_REQUEST_BYTES);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break; // client closed (or the cap was consumed exactly at EOF)
+        }
+        if line.len() as u64 >= MAX_REQUEST_BYTES && !line.ends_with('\n') {
+            // oversized line: report and drop the connection (we cannot
+            // resynchronise mid-line)
+            let resp = protocol::error_response(&format!(
+                "request line exceeds {MAX_REQUEST_BYTES} bytes"
+            ));
+            writeln!(writer, "{}", resp.to_string())?;
+            writer.flush()?;
+            break;
+        }
+        reader.set_limit(MAX_REQUEST_BYTES);
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, is_shutdown) = engine.handle_line(&line);
+        writeln!(writer, "{}", resp.to_string())?;
+        writer.flush()?;
+        if is_shutdown {
+            shutdown.store(true, Ordering::SeqCst);
+            // Wake the acceptor so the accept loop observes the flag. The
+            // listener may be bound to a wildcard address, which is not
+            // connectable on every platform — wake via loopback instead.
+            let mut wake = server_addr;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(match wake.ip() {
+                    std::net::IpAddr::V4(_) => {
+                        std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                    }
+                    std::net::IpAddr::V6(_) => {
+                        std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                    }
+                });
+            }
+            let _ = TcpStream::connect(wake);
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator::{generate, RggParams};
+    use crate::platform::CostModel;
+
+    fn small_instance(seed: u64) -> (Platform, Instance) {
+        let plat = Platform::uniform(3, 1.0, 0.0);
+        let inst = generate(
+            &RggParams {
+                n: 40,
+                out_degree: 3,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 50.0,
+                gamma: 0.25,
+            },
+            &CostModel::Classic { beta: 0.5 },
+            &plat,
+            seed,
+        );
+        (plat, inst)
+    }
+
+    fn schedule_line(inst: &Instance, algo: &str) -> String {
+        format!(
+            r#"{{"op":"schedule","algorithm":"{algo}","instance":{}}}"#,
+            io::instance_to_json(inst).to_string()
+        )
+    }
+
+    #[test]
+    fn submit_is_idempotent_and_content_addressed() {
+        let engine = Engine::with_defaults();
+        let (_plat, inst) = small_instance(1);
+        let line = format!(
+            r#"{{"op":"submit","instance":{}}}"#,
+            io::instance_to_json(&inst).to_string()
+        );
+        let (a, _) = engine.handle_line(&line);
+        let (b, _) = engine.handle_line(&line);
+        assert_eq!(a.get("id"), b.get("id"));
+        assert_eq!(a.get("ok"), Some(&Json::Bool(true)));
+        // a different instance gets a different handle
+        let (_plat2, inst2) = small_instance(2);
+        let line2 = format!(
+            r#"{{"op":"submit","instance":{}}}"#,
+            io::instance_to_json(&inst2).to_string()
+        );
+        let (c, _) = engine.handle_line(&line2);
+        assert_ne!(a.get("id"), c.get("id"));
+        // only one interned copy of the duplicate
+        let stats = engine.stats_json();
+        assert_eq!(stats.get("instances").and_then(Json::as_f64), Some(2.0));
+    }
+
+    #[test]
+    fn repeat_request_hits_cache_with_identical_bits() {
+        let engine = Engine::with_defaults();
+        let (_plat, inst) = small_instance(3);
+        let line = schedule_line(&inst, "CEFT-CPOP");
+        let (a, _) = engine.handle_line(&line);
+        let (b, _) = engine.handle_line(&line);
+        assert_eq!(a.get("cached"), Some(&Json::Bool(false)));
+        assert_eq!(b.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(a.get("makespan"), b.get("makespan"));
+        assert_eq!(a.get("schedule"), b.get("schedule"));
+        let stats = engine.stats_json();
+        let sched = stats.get("sched_cache").unwrap();
+        assert_eq!(sched.get("hits").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn online_matches_batch_bit_for_bit() {
+        let engine = Engine::with_defaults();
+        let (plat, inst) = small_instance(4);
+        for algorithm in Algorithm::ALL {
+            let line = schedule_line(&inst, algorithm.name());
+            let (resp, _) = engine.handle_line(&line);
+            let batch = algorithm.schedule(&inst.graph, &plat, &inst.comp);
+            assert_eq!(
+                resp.get("makespan").and_then(Json::as_f64),
+                Some(batch.makespan()),
+                "{} diverged from batch",
+                algorithm.name()
+            );
+        }
+        let cp_line = format!(
+            r#"{{"op":"cp","instance":{}}}"#,
+            io::instance_to_json(&inst).to_string()
+        );
+        let (resp, _) = engine.handle_line(&cp_line);
+        let batch_cp = find_critical_path(&inst.graph, &plat, &inst.comp);
+        assert_eq!(
+            resp.get("length").and_then(Json::as_f64),
+            Some(batch_cp.length)
+        );
+        assert_eq!(
+            resp.get("path").and_then(Json::as_arr).unwrap().len(),
+            batch_cp.path.len()
+        );
+    }
+
+    #[test]
+    fn evict_forgets_instance_and_results() {
+        let engine = Engine::with_defaults();
+        let (_plat, inst) = small_instance(5);
+        let line = schedule_line(&inst, "HEFT");
+        let (first, _) = engine.handle_line(&line);
+        let id = first.get("id").and_then(Json::as_str).unwrap().to_string();
+        // by-handle request is served from cache
+        let (by_handle, _) = engine
+            .handle_line(&format!(r#"{{"op":"schedule","algorithm":"HEFT","id":"{id}"}}"#));
+        assert_eq!(by_handle.get("cached"), Some(&Json::Bool(true)));
+        // evict, then the handle is unknown
+        let (evicted, _) = engine.handle_line(&format!(r#"{{"op":"evict","id":"{id}"}}"#));
+        assert_eq!(evicted.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(
+            evicted.get("dropped_schedules").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        let (gone, _) =
+            engine.handle_line(&format!(r#"{{"op":"schedule","algorithm":"HEFT","id":"{id}"}}"#));
+        assert_eq!(gone.get("ok"), Some(&Json::Bool(false)));
+        // resubmitting recomputes (cache was purged)
+        let (again, _) = engine.handle_line(&line);
+        assert_eq!(again.get("cached"), Some(&Json::Bool(false)));
+        assert_eq!(again.get("makespan"), first.get("makespan"));
+    }
+
+    #[test]
+    fn lru_bound_evicts_under_churn() {
+        let engine = Engine::new(EngineConfig {
+            cache_capacity: 2,
+            threads: 1,
+            ..EngineConfig::default()
+        });
+        for seed in 0..5 {
+            let (_plat, inst) = small_instance(100 + seed);
+            engine.handle_line(&schedule_line(&inst, "HEFT"));
+        }
+        let stats = engine.stats_json();
+        let sched = stats.get("sched_cache").unwrap();
+        assert_eq!(sched.get("len").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(sched.get("evictions").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn batch_results_preserve_order_and_shutdown_flag() {
+        let engine = Engine::with_defaults();
+        let (_plat, inst) = small_instance(6);
+        let lines = vec![
+            r#"{"op":"ping"}"#.to_string(),
+            schedule_line(&inst, "CEFT-CPOP"),
+            "garbage".to_string(),
+            r#"{"op":"shutdown"}"#.to_string(),
+        ];
+        let out = engine.handle_batch(&lines);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].0.get("pong"), Some(&Json::Bool(true)));
+        assert!(out[1].0.get("makespan").is_some());
+        assert_eq!(out[2].0.get("ok"), Some(&Json::Bool(false)));
+        assert!(out[3].1, "shutdown flag must be set on the last response");
+        assert!(!out[0].1 && !out[1].1 && !out[2].1);
+    }
+
+    #[test]
+    fn errors_do_not_poison_the_engine() {
+        let engine = Engine::with_defaults();
+        let (errs, _): (Json, bool) = engine.handle_line(
+            r#"{"op":"cp","instance":{"n":2,"p":1,"edges":[[0,1,1.0],[1,0,1.0]],"comp":[1,2]}}"#,
+        );
+        assert_eq!(errs.get("ok"), Some(&Json::Bool(false)));
+        // engine still serves good requests afterwards
+        let (_plat, inst) = small_instance(7);
+        let (ok, _) = engine.handle_line(&schedule_line(&inst, "CPOP"));
+        assert_eq!(ok.get("ok"), Some(&Json::Bool(true)));
+        let stats = engine.stats_json();
+        assert!(stats.get("errors").and_then(Json::as_f64).unwrap() >= 1.0);
+    }
+}

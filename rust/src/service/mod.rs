@@ -1,0 +1,38 @@
+//! The online scheduling service: a persistent, memoizing CEFT engine
+//! behind a newline-delimited JSON protocol.
+//!
+//! The batch harness ([`crate::exp`]) answers "run this grid of instances
+//! once"; this layer answers "keep answering scheduling questions forever".
+//! A long-lived [`engine::Engine`] accepts streams of requests — submit an
+//! instance, find its CEFT critical path, schedule it with any registry
+//! algorithm, inspect or evict the caches — over stdin/stdout or TCP
+//! (`repro serve`), or embedded in-process (see
+//! `examples/online_service.rs`).
+//!
+//! Layers:
+//!
+//! * [`hashing`] — structural FNV-1a hashes of graphs, platforms and cost
+//!   matrices; the content addresses everything downstream.
+//! * [`cache`] — a bounded LRU keyed by
+//!   `(graph-hash, platform-hash, comp-hash, algorithm)` with hit/miss
+//!   accounting.
+//! * [`protocol`] — request/response codec over [`crate::util::json`].
+//! * [`engine`] — interning + memoization + dispatch through the unified
+//!   [`crate::sched::Algorithm`] registry, batched across
+//!   [`crate::util::pool`] workers; stdio and TCP serving loops.
+//!
+//! Determinism contract: every algorithm in the registry breaks ties
+//! deterministically, and the JSON codec round-trips `f64` bit-exactly, so
+//! a repeated request returns a byte-identical response body (modulo the
+//! `cached` flag) whether it was recomputed or served from cache. The
+//! service tests assert this, and the memoization correctness depends on
+//! it.
+
+pub mod cache;
+pub mod engine;
+pub mod hashing;
+pub mod protocol;
+
+pub use cache::{CacheKey, CacheStats, LruCache};
+pub use engine::{serve_stdio, Engine, EngineConfig, Server};
+pub use protocol::{parse_request, request_to_json, Request, Target, PROTOCOL_VERSION};

@@ -1,0 +1,375 @@
+//! The newline-delimited JSON request/response protocol.
+//!
+//! One request per line, one response per line, in order. Every response
+//! carries `"ok": true|false`; errors carry `"error": "<message>"` and never
+//! terminate the connection. The same frames flow over stdin/stdout
+//! (`repro serve`) and TCP (`repro serve --addr`).
+//!
+//! Operations (`"op"` field):
+//!
+//! | op         | request fields                                     | response |
+//! |------------|----------------------------------------------------|----------|
+//! | `ping`     | —                                                  | `pong`, `version` |
+//! | `submit`   | `instance`, optional `platform`                    | `id` (16-hex handle), `n`, `p`, `edges` |
+//! | `cp`       | `id` *or* `instance` (+ optional `platform`)       | `length`, `path` `[[task, class], …]`, `cached`, `id` |
+//! | `schedule` | `algorithm`, `id` *or* `instance` (+ `platform`)   | `makespan`, `schedule`, `algorithm`, `cached`, `id` |
+//! | `stats`    | —                                                  | counters + cache occupancy |
+//! | `evict`    | `id`                                               | entries dropped |
+//! | `clear`    | —                                                  | entries dropped |
+//! | `shutdown` | —                                                  | `shutting_down`; server stops accepting |
+//!
+//! `instance` is [`crate::graph::io::instance_to_json`] form; `platform`
+//! is [`crate::graph::io::platform_to_json`] form (omitted ⇒ a uniform
+//! platform with unit bandwidth and zero startup, matching the RGG-classic
+//! experiments). Submitting the same content twice returns the same handle:
+//! handles are structural hashes, not sequence numbers.
+
+use crate::graph::generator::Instance;
+use crate::graph::io;
+use crate::platform::Platform;
+use crate::sched::Algorithm;
+use crate::util::json::Json;
+
+/// Protocol version reported by `ping`.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// An instance reference: inline content or a handle from `submit`.
+#[derive(Clone, Debug)]
+pub enum Target {
+    /// the full instance (and optionally its platform) in the request body
+    Inline {
+        /// task graph + cost matrix
+        instance: Instance,
+        /// platform; `None` ⇒ uniform(p, 1.0, 0.0)
+        platform: Option<Platform>,
+    },
+    /// a handle previously returned by `submit`
+    Handle(u64),
+}
+
+/// A decoded request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// liveness / version check
+    Ping,
+    /// intern an instance, returning its handle
+    Submit {
+        /// task graph + cost matrix
+        instance: Instance,
+        /// platform; `None` ⇒ uniform(p, 1.0, 0.0)
+        platform: Option<Platform>,
+    },
+    /// CEFT critical path (with partial assignment)
+    CriticalPath {
+        /// which instance
+        target: Target,
+    },
+    /// full schedule with a registry algorithm
+    Schedule {
+        /// which scheduler
+        algorithm: Algorithm,
+        /// which instance
+        target: Target,
+    },
+    /// engine counters and cache occupancy
+    Stats,
+    /// drop one interned instance and its cached results
+    Evict {
+        /// the handle to drop
+        id: u64,
+    },
+    /// drop all cached results and interned instances
+    Clear,
+    /// stop the server after responding
+    Shutdown,
+}
+
+/// Render a handle as the wire format (16 lowercase hex digits).
+pub fn handle_to_hex(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+/// Parse a wire-format handle.
+pub fn parse_handle(s: &str) -> Result<u64, String> {
+    u64::from_str_radix(s, 16).map_err(|e| format!("bad handle {s:?}: {e}"))
+}
+
+fn instance_parts(j: &Json, op: &str) -> Result<(Instance, Option<Platform>), String> {
+    let inst_j = j
+        .get("instance")
+        .ok_or_else(|| format!("{op} requires \"instance\" (or \"id\")"))?;
+    let instance = io::instance_from_json(inst_j)?;
+    let platform = match j.get("platform") {
+        Some(pj) => {
+            let plat = io::platform_from_json(pj)?;
+            if plat.num_classes() != instance.p {
+                return Err(format!(
+                    "platform has {} classes but instance expects {}",
+                    plat.num_classes(),
+                    instance.p
+                ));
+            }
+            Some(plat)
+        }
+        None => None,
+    };
+    Ok((instance, platform))
+}
+
+fn parse_target(j: &Json, op: &str) -> Result<Target, String> {
+    if let Some(h) = j.get("id") {
+        let s = h.as_str().ok_or("\"id\" must be a hex string")?;
+        return Ok(Target::Handle(parse_handle(s)?));
+    }
+    let (instance, platform) = instance_parts(j, op)?;
+    Ok(Target::Inline { instance, platform })
+}
+
+/// Decode one request line. Errors are client errors (malformed JSON,
+/// unknown op, bad fields) suitable for an `"ok": false` response.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let j = Json::parse(line.trim()).map_err(|e| format!("bad json: {e}"))?;
+    let op = j
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or("missing \"op\" field")?;
+    match op {
+        "ping" => Ok(Request::Ping),
+        "submit" => {
+            let (instance, platform) = instance_parts(&j, "submit")?;
+            Ok(Request::Submit { instance, platform })
+        }
+        "cp" => Ok(Request::CriticalPath {
+            target: parse_target(&j, "cp")?,
+        }),
+        "schedule" => {
+            let name = j
+                .get("algorithm")
+                .and_then(Json::as_str)
+                .ok_or("schedule requires \"algorithm\"")?;
+            Ok(Request::Schedule {
+                algorithm: Algorithm::parse(name)?,
+                target: parse_target(&j, "schedule")?,
+            })
+        }
+        "stats" => Ok(Request::Stats),
+        "evict" => {
+            let s = j
+                .get("id")
+                .and_then(Json::as_str)
+                .ok_or("evict requires \"id\"")?;
+            Ok(Request::Evict {
+                id: parse_handle(s)?,
+            })
+        }
+        "clear" => Ok(Request::Clear),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(format!("unknown op {other:?}")),
+    }
+}
+
+fn push_instance(fields: &mut Vec<(&str, Json)>, instance: &Instance, platform: &Option<Platform>) {
+    fields.push(("instance", io::instance_to_json(instance)));
+    if let Some(p) = platform {
+        fields.push(("platform", io::platform_to_json(p)));
+    }
+}
+
+fn push_target(fields: &mut Vec<(&str, Json)>, target: &Target) {
+    match target {
+        Target::Handle(id) => fields.push(("id", Json::Str(handle_to_hex(*id)))),
+        Target::Inline { instance, platform } => push_instance(fields, instance, platform),
+    }
+}
+
+/// Encode a request as its wire JSON object — the inverse of
+/// [`parse_request`]. Clients (the `repro request`/`repro loadgen`
+/// commands, embedded users) should build [`Request`] values and encode
+/// them here rather than splicing strings, so field names, handle format
+/// and escaping have a single owner.
+pub fn request_to_json(req: &Request) -> Json {
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    match req {
+        Request::Ping => fields.push(("op", Json::Str("ping".to_string()))),
+        Request::Stats => fields.push(("op", Json::Str("stats".to_string()))),
+        Request::Clear => fields.push(("op", Json::Str("clear".to_string()))),
+        Request::Shutdown => fields.push(("op", Json::Str("shutdown".to_string()))),
+        Request::Evict { id } => {
+            fields.push(("op", Json::Str("evict".to_string())));
+            fields.push(("id", Json::Str(handle_to_hex(*id))));
+        }
+        Request::Submit { instance, platform } => {
+            fields.push(("op", Json::Str("submit".to_string())));
+            push_instance(&mut fields, instance, platform);
+        }
+        Request::CriticalPath { target } => {
+            fields.push(("op", Json::Str("cp".to_string())));
+            push_target(&mut fields, target);
+        }
+        Request::Schedule { algorithm, target } => {
+            fields.push(("op", Json::Str("schedule".to_string())));
+            fields.push(("algorithm", Json::Str(algorithm.name().to_string())));
+            push_target(&mut fields, target);
+        }
+    }
+    Json::obj(fields)
+}
+
+/// Build a success response (`"ok": true` plus the given fields).
+pub fn ok_response(mut fields: Vec<(&str, Json)>) -> Json {
+    fields.insert(0, ("ok", Json::Bool(true)));
+    Json::obj(fields)
+}
+
+/// Build an error response.
+pub fn error_response(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_instance_json() -> String {
+        // 2-task chain, p=1
+        r#"{"n":2,"p":1,"edges":[[0,1,1.0]],"comp":[1.0,2.0]}"#.to_string()
+    }
+
+    #[test]
+    fn parses_every_op() {
+        assert!(matches!(parse_request(r#"{"op":"ping"}"#), Ok(Request::Ping)));
+        assert!(matches!(parse_request(r#"{"op":"stats"}"#), Ok(Request::Stats)));
+        assert!(matches!(parse_request(r#"{"op":"clear"}"#), Ok(Request::Clear)));
+        assert!(matches!(
+            parse_request(r#"{"op":"shutdown"}"#),
+            Ok(Request::Shutdown)
+        ));
+        let submit = format!(r#"{{"op":"submit","instance":{}}}"#, sample_instance_json());
+        assert!(matches!(parse_request(&submit), Ok(Request::Submit { .. })));
+        let cp = format!(r#"{{"op":"cp","instance":{}}}"#, sample_instance_json());
+        assert!(matches!(
+            parse_request(&cp),
+            Ok(Request::CriticalPath {
+                target: Target::Inline { .. }
+            })
+        ));
+        let sched = format!(
+            r#"{{"op":"schedule","algorithm":"ceft-cpop","instance":{}}}"#,
+            sample_instance_json()
+        );
+        match parse_request(&sched).unwrap() {
+            Request::Schedule { algorithm, .. } => assert_eq!(algorithm, Algorithm::CeftCpop),
+            other => panic!("wrong request: {other:?}"),
+        }
+        let by_handle = r#"{"op":"cp","id":"00000000000000ff"}"#;
+        match parse_request(by_handle).unwrap() {
+            Request::CriticalPath {
+                target: Target::Handle(h),
+            } => assert_eq!(h, 0xff),
+            other => panic!("wrong request: {other:?}"),
+        }
+        match parse_request(r#"{"op":"evict","id":"0000000000000010"}"#).unwrap() {
+            Request::Evict { id } => assert_eq!(id, 16),
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_paths_are_reported_not_panicked() {
+        assert!(parse_request("not json").unwrap_err().contains("bad json"));
+        assert!(parse_request("{}").unwrap_err().contains("missing \"op\""));
+        assert!(parse_request(r#"{"op":"frobnicate"}"#)
+            .unwrap_err()
+            .contains("unknown op"));
+        assert!(parse_request(r#"{"op":"submit"}"#)
+            .unwrap_err()
+            .contains("requires \"instance\""));
+        assert!(parse_request(r#"{"op":"schedule","instance":{}}"#)
+            .unwrap_err()
+            .contains("requires \"algorithm\""));
+        let bad_algo = format!(
+            r#"{{"op":"schedule","algorithm":"nope","instance":{}}}"#,
+            sample_instance_json()
+        );
+        assert!(parse_request(&bad_algo)
+            .unwrap_err()
+            .contains("unknown algorithm"));
+        assert!(parse_request(r#"{"op":"cp","id":"zz"}"#)
+            .unwrap_err()
+            .contains("bad handle"));
+        assert!(parse_request(r#"{"op":"evict"}"#)
+            .unwrap_err()
+            .contains("requires \"id\""));
+        // malformed instance content surfaces io's message
+        let cyc = r#"{"op":"cp","instance":{"n":2,"p":1,"edges":[[0,1,1.0],[1,0,1.0]],"comp":[1,2]}}"#;
+        assert!(parse_request(cyc).unwrap_err().contains("cycle"));
+        // platform class-count mismatch
+        let mismatch = format!(
+            r#"{{"op":"cp","instance":{},"platform":{{"p":3,"startup":[0,0,0],"bandwidth":[1,1,1,1,1,1,1,1,1]}}}}"#,
+            sample_instance_json()
+        );
+        assert!(parse_request(&mismatch)
+            .unwrap_err()
+            .contains("classes"));
+    }
+
+    #[test]
+    fn handles_roundtrip_hex() {
+        for h in [0u64, 1, 0xdead_beef, u64::MAX] {
+            assert_eq!(parse_handle(&handle_to_hex(h)).unwrap(), h);
+        }
+    }
+
+    #[test]
+    fn request_encoder_roundtrips_through_parser() {
+        let inst = crate::graph::io::instance_from_json(
+            &Json::parse(&sample_instance_json()).unwrap(),
+        )
+        .unwrap();
+        let reqs = vec![
+            Request::Ping,
+            Request::Stats,
+            Request::Clear,
+            Request::Shutdown,
+            Request::Evict { id: 0xbeef },
+            Request::Submit {
+                instance: inst.clone(),
+                platform: Some(crate::platform::Platform::uniform(1, 2.0, 0.5)),
+            },
+            Request::CriticalPath {
+                target: Target::Handle(7),
+            },
+            Request::Schedule {
+                algorithm: Algorithm::CeftHeftUp,
+                target: Target::Inline {
+                    instance: inst,
+                    platform: None,
+                },
+            },
+        ];
+        for req in reqs {
+            let line = request_to_json(&req).to_string();
+            let back = parse_request(&line)
+                .unwrap_or_else(|e| panic!("encoded {req:?} failed to parse: {e} ({line})"));
+            // the re-encoded form is identical (field set and values agree)
+            assert_eq!(
+                request_to_json(&back).to_string(),
+                line,
+                "encode/parse/encode not a fixed point"
+            );
+        }
+    }
+
+    #[test]
+    fn response_builders_shape() {
+        let ok = ok_response(vec![("x", Json::Num(1.0))]);
+        assert_eq!(ok.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(ok.get("x").and_then(Json::as_f64), Some(1.0));
+        let err = error_response("boom");
+        assert_eq!(err.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(err.get("error").and_then(Json::as_str), Some("boom"));
+    }
+}

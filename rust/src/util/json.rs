@@ -79,7 +79,10 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 9e15 {
+                // -0.0 must take the float path ("-0") — the i64 path would
+                // print "0" and break the bit-exact round trip the service
+                // layer's hashing relies on.
+                if x.fract() == 0.0 && x.abs() < 9e15 && (*x != 0.0 || x.is_sign_positive()) {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -116,6 +119,7 @@ impl Json {
         let mut p = Parser {
             bytes: text.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -145,9 +149,16 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Nesting bound for the recursive-descent parser. Parsing runs on
+/// service-handler threads against untrusted input, so recursion must be
+/// bounded well below any thread's stack; legitimate payloads in this crate
+/// nest single digits deep.
+const MAX_DEPTH: usize = 256;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -264,12 +275,22 @@ impl<'a> Parser<'a> {
             .map_err(|e| format!("bad number {text:?}: {e}"))
     }
 
+    fn enter(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.pos));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, String> {
+        self.enter()?;
         self.expect(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -280,6 +301,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 other => return Err(format!("expected , or ] found {:?}", other)),
@@ -288,11 +310,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, String> {
+        self.enter()?;
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -308,6 +332,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 other => return Err(format!("expected , or }} found {:?}", other)),
@@ -353,10 +378,32 @@ mod tests {
     }
 
     #[test]
+    fn negative_zero_roundtrips_bit_exact() {
+        assert_eq!(Json::Num(-0.0).to_string(), "-0");
+        let back = Json::parse("-0").unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits());
+        // positive zero still uses the integer path
+        assert_eq!(Json::Num(0.0).to_string(), "0");
+    }
+
+    #[test]
     fn rejects_garbage() {
         assert!(Json::parse("{]").is_err());
         assert!(Json::parse("123 45").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn depth_limit_rejects_instead_of_overflowing() {
+        // far beyond any legitimate payload, far below any thread stack
+        let deep = "[".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+        // boundary: MAX_DEPTH levels parse fine
+        let ok = format!("{}{}", "[".repeat(256), "]".repeat(256));
+        assert!(Json::parse(&ok).is_ok());
+        let too_deep = format!("{}{}", "[".repeat(257), "]".repeat(257));
+        assert!(Json::parse(&too_deep).is_err());
     }
 
     #[test]

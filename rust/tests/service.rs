@@ -1,0 +1,232 @@
+//! Integration tests for the online scheduling service: protocol error
+//! paths end to end, cache hit-vs-miss determinism (bit-identical repeat
+//! responses, consistent with `cp::ceft`'s tie-breaking guarantees),
+//! equivalence with the batch harness, and a concurrent TCP smoke test.
+
+use ceft::exp::cells::{grid, Scale, Workload};
+use ceft::exp::run::{build_instance, run_cell, ALGOS};
+use ceft::graph::io;
+use ceft::sched::Algorithm;
+use ceft::service::{Engine, EngineConfig, Server};
+use ceft::util::json::Json;
+use std::io::{BufRead as _, BufReader, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+fn smoke_cell() -> ceft::exp::cells::Cell {
+    grid(Workload::RggClassic, Scale::Smoke)[0]
+}
+
+fn instance_line(op: &str, algo: Option<&str>, cell: &ceft::exp::cells::Cell) -> String {
+    let (platform, inst) = build_instance(cell);
+    let algo_field = algo
+        .map(|a| format!(r#""algorithm":"{a}","#))
+        .unwrap_or_default();
+    format!(
+        r#"{{"op":"{op}",{algo_field}"instance":{},"platform":{}}}"#,
+        io::instance_to_json(&inst).to_string(),
+        io::platform_to_json(&platform).to_string()
+    )
+}
+
+fn without_cached(j: &Json) -> Json {
+    match j.clone() {
+        Json::Obj(mut m) => {
+            m.remove("cached");
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+#[test]
+fn service_matches_batch_schedule_and_cp() {
+    let engine = Engine::with_defaults();
+    let cell = smoke_cell();
+    let row = run_cell(&cell);
+    // every registry algorithm returns exactly the batch makespan
+    for (i, name) in ALGOS.iter().enumerate() {
+        let (resp, _) = engine.handle_line(&instance_line("schedule", Some(name), &cell));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{name}: {resp:?}");
+        assert_eq!(
+            resp.get("makespan").and_then(Json::as_f64),
+            Some(row.algos[i].makespan),
+            "{name} makespan diverged from batch `repro schedule`"
+        );
+        // the embedded schedule round-trips into a legal schedule
+        let (platform, inst) = build_instance(&cell);
+        let s = io::schedule_from_json(resp.get("schedule").unwrap()).unwrap();
+        s.validate(&inst.graph, &platform, &inst.comp).unwrap();
+    }
+    // critical path matches batch `repro cp`
+    let (resp, _) = engine.handle_line(&instance_line("cp", None, &cell));
+    assert_eq!(
+        resp.get("length").and_then(Json::as_f64),
+        Some(row.cpl_ceft),
+        "CEFT CPL diverged from batch `repro cp`"
+    );
+}
+
+#[test]
+fn repeat_requests_are_cached_and_bit_identical() {
+    let engine = Engine::with_defaults();
+    let cell = smoke_cell();
+    let line = instance_line("schedule", Some("CEFT-CPOP"), &cell);
+    let (first, _) = engine.handle_line(&line);
+    let (second, _) = engine.handle_line(&line);
+    assert_eq!(first.get("cached"), Some(&Json::Bool(false)));
+    assert_eq!(second.get("cached"), Some(&Json::Bool(true)));
+    // bit-identical apart from the cached flag — serialized text included
+    assert_eq!(
+        without_cached(&first).to_string(),
+        without_cached(&second).to_string()
+    );
+    // the stats endpoint records exactly one hit and one miss
+    let (stats, _) = engine.handle_line(r#"{"op":"stats"}"#);
+    let sched = stats.get("sched_cache").unwrap();
+    assert_eq!(sched.get("hits").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(sched.get("misses").and_then(Json::as_f64), Some(1.0));
+
+    // a *fresh* engine recomputes the same bits (no hidden global state)
+    let other = Engine::with_defaults();
+    let (recomputed, _) = other.handle_line(&line);
+    assert_eq!(
+        without_cached(&first).to_string(),
+        without_cached(&recomputed).to_string()
+    );
+}
+
+#[test]
+fn protocol_error_paths_return_errors_and_keep_serving() {
+    let engine = Engine::with_defaults();
+    for bad in [
+        "definitely not json",
+        "{}",
+        r#"{"op":"wat"}"#,
+        r#"{"op":"schedule","instance":{"n":1,"p":1,"edges":[],"comp":[1]}}"#, // no algorithm
+        r#"{"op":"schedule","algorithm":"nope","instance":{"n":1,"p":1,"edges":[],"comp":[1]}}"#,
+        r#"{"op":"cp"}"#,                                   // no instance or id
+        r#"{"op":"cp","id":"not-hex"}"#,
+        r#"{"op":"cp","id":"00000000000000aa"}"#,           // unknown handle
+        r#"{"op":"cp","instance":{"n":2,"p":1,"edges":[[0,1,1.0],[1,0,1.0]],"comp":[1,2]}}"#, // cycle
+        r#"{"op":"cp","instance":{"n":0,"p":1,"edges":[],"comp":[]}}"#,
+        r#"{"op":"evict","id":"0000000000000001"}"#,        // nothing interned
+    ] {
+        let (resp, shutdown) = engine.handle_line(bad);
+        assert_eq!(
+            resp.get("ok"),
+            Some(&Json::Bool(false)),
+            "accepted bad request: {bad}"
+        );
+        assert!(resp.get("error").and_then(Json::as_str).is_some());
+        assert!(!shutdown);
+    }
+    // engine still healthy
+    let (ok, _) = engine.handle_line(&instance_line("cp", None, &smoke_cell()));
+    assert_eq!(ok.get("ok"), Some(&Json::Bool(true)));
+}
+
+#[test]
+fn submit_then_request_by_handle() {
+    let engine = Engine::with_defaults();
+    let cell = smoke_cell();
+    let (submitted, _) = engine.handle_line(&instance_line("submit", None, &cell));
+    let id = submitted
+        .get("id")
+        .and_then(Json::as_str)
+        .expect("submit returns a handle")
+        .to_string();
+    let (cp, _) = engine.handle_line(&format!(r#"{{"op":"cp","id":"{id}"}}"#));
+    assert_eq!(cp.get("ok"), Some(&Json::Bool(true)));
+    // the handle-based answer equals the inline answer
+    let (inline, _) = engine.handle_line(&instance_line("cp", None, &cell));
+    assert_eq!(
+        cp.get("length").and_then(Json::as_f64),
+        inline.get("length").and_then(Json::as_f64)
+    );
+    assert_eq!(inline.get("cached"), Some(&Json::Bool(true)));
+}
+
+fn roundtrip(stream: &mut TcpStream, line: &str) -> Json {
+    writeln!(stream, "{line}").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    Json::parse(resp.trim_end()).unwrap_or_else(|e| panic!("bad response {resp:?}: {e}"))
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    TcpStream::connect(addr).expect("connect to test server")
+}
+
+#[test]
+fn tcp_server_smoke_test_with_concurrent_clients() {
+    let engine = Arc::new(Engine::new(EngineConfig {
+        cache_capacity: 256,
+        threads: 2,
+        ..EngineConfig::default()
+    }));
+    let server = Server::bind(engine.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    // one client submits, everyone else hammers by handle and inline
+    let cell = smoke_cell();
+    let id = {
+        let mut stream = connect(addr);
+        let resp = roundtrip(&mut stream, &instance_line("submit", None, &cell));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        resp.get("id").and_then(Json::as_str).unwrap().to_string()
+    };
+
+    let mut clients = Vec::new();
+    for c in 0..4 {
+        let id = id.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut stream = connect(addr);
+            let algo = Algorithm::ALL[c % Algorithm::ALL.len()].name();
+            let mut expected: Option<f64> = None;
+            for round in 0..5 {
+                let resp = roundtrip(
+                    &mut stream,
+                    &format!(r#"{{"op":"schedule","algorithm":"{algo}","id":"{id}"}}"#),
+                );
+                assert_eq!(
+                    resp.get("ok"),
+                    Some(&Json::Bool(true)),
+                    "client {c} round {round}: {resp:?}"
+                );
+                let m = resp.get("makespan").and_then(Json::as_f64).unwrap();
+                match expected {
+                    None => expected = Some(m),
+                    Some(e) => assert_eq!(m, e, "client {c} saw a different makespan"),
+                }
+                let pong = roundtrip(&mut stream, r#"{"op":"ping"}"#);
+                assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+            }
+        }));
+    }
+    for c in clients {
+        c.join().expect("client thread");
+    }
+
+    // stats over TCP show cache activity from the clients
+    {
+        let mut stream = connect(addr);
+        let stats = roundtrip(&mut stream, r#"{"op":"stats"}"#);
+        let sched = stats.get("sched_cache").unwrap();
+        assert!(sched.get("hits").and_then(Json::as_f64).unwrap() >= 1.0);
+    }
+
+    // graceful shutdown unblocks the accept loop
+    {
+        let mut stream = connect(addr);
+        let resp = roundtrip(&mut stream, r#"{"op":"shutdown"}"#);
+        assert_eq!(resp.get("shutting_down"), Some(&Json::Bool(true)));
+    }
+    server_thread
+        .join()
+        .expect("server thread")
+        .expect("server run");
+}
