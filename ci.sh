@@ -1,11 +1,34 @@
 #!/usr/bin/env bash
-# CI entry point: build, test, run the quickstart + online-service examples,
-# and round-trip the serve/request protocol over TCP.
+# CI entry point: fmt + clippy gates, build, test, run the quickstart +
+# online-service examples, round-trip the serve/request protocol over TCP,
+# record loadgen perf to BENCH_service.json, and smoke the throughput bench.
 set -euo pipefail
 cd "$(dirname "$0")"
 
+echo "== fmt =="
+if cargo fmt --version >/dev/null 2>&1; then
+  cargo fmt --check
+else
+  echo "skipped: rustfmt component not installed"
+fi
+
 echo "== build =="
 cargo build --release
+
+echo "== clippy =="
+if cargo clippy --version >/dev/null 2>&1; then
+  # -D warnings gates correctness lints; the -A list covers style idioms
+  # this codebase uses deliberately (documented many-arg experiment rows,
+  # index-and-position loops in the DP kernels, the inherent Json
+  # serialiser named to_string).
+  cargo clippy --all-targets -- -D warnings \
+    -A clippy::too_many_arguments \
+    -A clippy::type_complexity \
+    -A clippy::needless_range_loop \
+    -A clippy::inherent_to_string
+else
+  echo "skipped: clippy component not installed"
+fi
 
 echo "== tests =="
 cargo test -q
@@ -42,7 +65,11 @@ done
 wait "$SERVER_PID"
 trap - EXIT
 
-echo "== loadgen smoke =="
+echo "== loadgen smoke (writes BENCH_service.json) =="
 ./target/release/repro loadgen --n 64 --p 4 --count 8 --rate 200 --duration 1
+grep -q '"achieved_rps"' BENCH_service.json
+
+echo "== service throughput bench (smoke) =="
+CEFT_BENCH_FAST=1 cargo bench --bench service_throughput
 
 echo "ci.sh: all green"

@@ -25,6 +25,7 @@
 //! wins the final sink selection. This makes the rust and PJRT backends,
 //! and re-runs, bit-identical.
 
+use crate::cp::workspace::Workspace;
 use crate::graph::TaskGraph;
 use crate::platform::{Costs, Platform};
 
@@ -48,9 +49,30 @@ pub struct CriticalPath {
 }
 
 impl CriticalPath {
-    /// The partial assignment as a `task -> class` map.
+    /// The partial assignment as a `task -> class` map. Prefer
+    /// [`CriticalPath::assignment_dense`] on hot paths — it avoids hashing
+    /// task ids entirely.
     pub fn assignment(&self) -> std::collections::HashMap<usize, usize> {
         self.path.iter().map(|s| (s.task, s.class)).collect()
+    }
+
+    /// The partial assignment as a dense pin table over `n` tasks:
+    /// `pins[t] = Some(class)` for every path task, `None` elsewhere. This
+    /// is the representation [`crate::sched::Placement::Pinned`] consumes.
+    pub fn assignment_dense(&self, n: usize) -> Vec<Option<usize>> {
+        let mut pins = vec![None; n];
+        self.fill_assignment_dense(n, &mut pins);
+        pins
+    }
+
+    /// Non-allocating variant of [`CriticalPath::assignment_dense`]: resize
+    /// and fill a caller-owned (typically workspace-owned) pin table.
+    pub fn fill_assignment_dense(&self, n: usize, pins: &mut Vec<Option<usize>>) {
+        pins.clear();
+        pins.resize(n, None);
+        for s in &self.path {
+            pins[s.task] = Some(s.class);
+        }
     }
 
     /// Task ids on the path, in order.
@@ -99,19 +121,72 @@ impl CeftTable {
 
 /// Compute the CEFT dynamic-programming table for all `(task, class)` cells.
 ///
-/// `comp` is the dense `v × P` execution-cost matrix.
+/// `comp` is the dense `v × P` execution-cost matrix. Convenience wrapper
+/// over [`ceft_table_into`] that allocates a one-shot [`Workspace`] and
+/// moves the filled buffers out as an owned [`CeftTable`].
 pub fn ceft_table(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> CeftTable {
+    let mut ws = Workspace::new();
+    ceft_table_into(&mut ws, graph, platform, comp);
+    CeftTable {
+        p: platform.num_classes(),
+        table: std::mem::take(&mut ws.table),
+        backptr: std::mem::take(&mut ws.backptr),
+    }
+}
+
+/// Fill `ws.table` / `ws.backptr` with the CEFT DP over `graph` — the
+/// allocation-free core of Algorithm 1. Buffers are sized at entry (no
+/// allocation once the workspace has served an instance this large).
+pub fn ceft_table_into(ws: &mut Workspace, graph: &TaskGraph, platform: &Platform, comp: &[f64]) {
+    ceft_dp_into(ws, graph, platform, comp, false)
+}
+
+/// The CEFT DP of the **transposed** DAG, computed without materialising
+/// the transpose: sweep reverse topological order and treat successors as
+/// parents. Communication is charged in the transposed direction
+/// (`comm_cost(succ_class, task_class, data)`), exactly as
+/// `ceft_table(&graph.transpose(), …)` would — bit-identical, including
+/// tie-breaking, because predecessor CSR order of the transpose equals
+/// successor CSR order of the original (both group edges in input order).
+/// Used by the CEFT upward rank (§8.2) to avoid rebuilding a graph per
+/// call.
+pub fn ceft_table_rev_into(
+    ws: &mut Workspace,
+    graph: &TaskGraph,
+    platform: &Platform,
+    comp: &[f64],
+) {
+    ceft_dp_into(ws, graph, platform, comp, true)
+}
+
+/// The one DP implementation behind both orientations. `rev` selects the
+/// sweep (forward topo over `preds` vs reverse topo over `succs`); every
+/// comparison — `NEG_INFINITY` init, strict `>` over parents, strict `<`
+/// with lowest-`l` tie-break over classes — is shared, so the two tables
+/// cannot drift apart.
+fn ceft_dp_into(
+    ws: &mut Workspace,
+    graph: &TaskGraph,
+    platform: &Platform,
+    comp: &[f64],
+    rev: bool,
+) {
     let v = graph.num_tasks();
     let p = platform.num_classes();
     assert_eq!(comp.len(), v * p, "comp must be v x P");
     let costs = Costs { comp, p };
-    let mut table = vec![0f64; v * p];
-    let mut backptr = vec![(usize::MAX, usize::MAX); v * p];
+    let table = &mut ws.table;
+    let backptr = &mut ws.backptr;
+    table.clear();
+    table.resize(v * p, 0.0);
+    backptr.clear();
+    backptr.resize(v * p, (usize::MAX, usize::MAX));
 
-    // Scratch row reused across tasks: min over l of CEFT(k,l)+comm for
-    // each destination class j (no allocation in the hot loop).
-    for &t in graph.topo_order() {
-        let preds = graph.preds(t);
+    let topo = graph.topo_order();
+    for i in 0..topo.len() {
+        let t = if rev { topo[topo.len() - 1 - i] } else { topo[i] };
+        // parents of `t` in the swept orientation
+        let preds = if rev { graph.succs(t) } else { graph.preds(t) };
         if preds.is_empty() {
             for j in 0..p {
                 table[t * p + j] = costs.get(t, j);
@@ -143,51 +218,88 @@ pub fn ceft_table(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> CeftT
             backptr[t * p + j] = best_ptr;
         }
     }
-    CeftTable { p, table, backptr }
 }
 
 /// Algorithm 1 in full: compute the CEFT table, select the critical sink
 /// (lines 21–26: per sink, minimise over classes; across sinks, maximise
 /// the minimised cost), and reconstruct the path with its assignment.
+/// Convenience wrapper over [`find_critical_path_with`] with a one-shot
+/// workspace.
 pub fn find_critical_path(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> CriticalPath {
-    let t = ceft_table(graph, platform, comp);
-    critical_path_from_table(graph, &t)
+    find_critical_path_with(&mut Workspace::new(), graph, platform, comp)
 }
 
-/// Path selection + reconstruction given a precomputed table (used by the
-/// PJRT backend, which fills the table on the accelerator).
-pub fn critical_path_from_table(graph: &TaskGraph, t: &CeftTable) -> CriticalPath {
-    let sinks = graph.sinks();
-    assert!(!sinks.is_empty(), "graph has no sinks");
-    let mut best_sink = sinks[0];
-    let mut best_class = t.argmin_class(sinks[0]);
-    let mut best_cost = t.get(sinks[0], best_class);
-    for &s in &sinks[1..] {
-        let c = t.argmin_class(s);
-        let cost = t.get(s, c);
-        if cost > best_cost {
-            best_cost = cost;
-            best_sink = s;
-            best_class = c;
+/// Workspace-backed Algorithm 1 — the hot path of the online service. All
+/// scratch (DP table, backpointers, backtracking stack) lives in `ws`; the
+/// only allocation is the returned path itself, sized exactly.
+pub fn find_critical_path_with(
+    ws: &mut Workspace,
+    graph: &TaskGraph,
+    platform: &Platform,
+    comp: &[f64],
+) -> CriticalPath {
+    ceft_table_into(ws, graph, platform, comp);
+    let p = platform.num_classes();
+    let Workspace { table, backptr, steps, .. } = ws;
+    critical_path_from_parts(graph, p, table, backptr, steps)
+}
+
+/// Sink selection + backtracking over borrowed DP buffers — the single
+/// implementation behind both [`find_critical_path_with`] (workspace
+/// buffers) and [`critical_path_from_table`] (owned table, e.g. filled on
+/// the PJRT accelerator), so the tie-break rules cannot desynchronise the
+/// backends. `steps` is backtracking scratch; the returned path is the
+/// only allocation.
+fn critical_path_from_parts(
+    graph: &TaskGraph,
+    p: usize,
+    table: &[f64],
+    backptr: &[(usize, usize)],
+    steps: &mut Vec<PathStep>,
+) -> CriticalPath {
+    // sink selection (lines 21-26), iterating sinks in ascending id order
+    // with strict-`>` comparison so the lowest-id sink wins ties; per sink
+    // the lowest-id minimising class wins via strict `<`.
+    let mut best: Option<(usize, usize, f64)> = None;
+    for t in 0..graph.num_tasks() {
+        if graph.out_degree(t) != 0 {
+            continue;
+        }
+        let row = &table[t * p..(t + 1) * p];
+        let mut c = 0usize;
+        for j in 1..p {
+            if row[j] < row[c] {
+                c = j;
+            }
+        }
+        let cost = row[c];
+        match best {
+            Some((_, _, best_cost)) if cost <= best_cost => {}
+            _ => best = Some((t, c, cost)),
         }
     }
-    // backtrack
-    let mut rev = Vec::new();
-    let (mut task, mut class) = (best_sink, best_class);
+    let (mut task, mut class, length) = best.expect("graph has no sinks");
+    // backtrack into the scratch buffer, then emit in forward order
+    steps.clear();
     loop {
-        rev.push(PathStep { task, class });
-        let (pk, pl) = t.backptr[task * t.p + class];
+        steps.push(PathStep { task, class });
+        let (pk, pl) = backptr[task * p + class];
         if pk == usize::MAX {
             break;
         }
         task = pk;
         class = pl;
     }
-    rev.reverse();
     CriticalPath {
-        length: best_cost,
-        path: rev,
+        length,
+        path: steps.iter().rev().copied().collect(),
     }
+}
+
+/// Path selection + reconstruction given a precomputed table (used by the
+/// PJRT backend, which fills the table on the accelerator).
+pub fn critical_path_from_table(graph: &TaskGraph, t: &CeftTable) -> CriticalPath {
+    critical_path_from_parts(graph, t.p, &t.table, &t.backptr, &mut Vec::new())
 }
 
 /// Evaluate the CEFT length of a *given* path (sequence of tasks connected
@@ -431,6 +543,74 @@ mod tests {
             "chain opt {chain_len} > ceft {}",
             cp.length
         );
+    }
+
+    #[test]
+    fn rev_table_matches_transposed_table_bit_for_bit() {
+        // `ceft_table_rev_into` must equal the DP over the materialised
+        // transpose exactly (values AND backpointers) — the CEFT upward
+        // rank's correctness rests on this.
+        let inst = crate::graph::generator::generate(
+            &crate::graph::generator::RggParams {
+                n: 150,
+                out_degree: 4,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 75.0,
+                gamma: 0.3,
+            },
+            &crate::platform::CostModel::Classic { beta: 0.75 },
+            &Platform::uniform(4, 1.0, 0.0),
+            29,
+        );
+        let mut rng = crate::util::rng::Xoshiro256::new(92);
+        // asymmetric links to exercise the comm direction too
+        let plat = Platform::random_links(4, &mut rng, 0.3, 3.0, 0.0, 0.5);
+        let via_transpose = ceft_table(&inst.graph.transpose(), &plat, &inst.comp);
+        let mut ws = crate::cp::workspace::Workspace::new();
+        ceft_table_rev_into(&mut ws, &inst.graph, &plat, &inst.comp);
+        assert_eq!(ws.table, via_transpose.table);
+        assert_eq!(ws.backptr, via_transpose.backptr);
+    }
+
+    #[test]
+    fn workspace_path_matches_owned_path() {
+        let inst = crate::graph::generator::generate(
+            &crate::graph::generator::RggParams {
+                n: 120,
+                out_degree: 3,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 50.0,
+                gamma: 0.2,
+            },
+            &crate::platform::CostModel::Classic { beta: 0.5 },
+            &Platform::uniform(3, 1.0, 0.0),
+            7,
+        );
+        let plat = Platform::uniform(3, 1.0, 0.0);
+        let owned = {
+            let t = ceft_table(&inst.graph, &plat, &inst.comp);
+            critical_path_from_table(&inst.graph, &t)
+        };
+        let mut ws = crate::cp::workspace::Workspace::new();
+        let a = find_critical_path_with(&mut ws, &inst.graph, &plat, &inst.comp);
+        let b = find_critical_path_with(&mut ws, &inst.graph, &plat, &inst.comp);
+        assert_eq!(owned, a);
+        assert_eq!(a, b, "workspace reuse must be bit-identical");
+    }
+
+    #[test]
+    fn assignment_dense_mirrors_hashmap_assignment() {
+        let g = TaskGraph::from_edges(3, &[(0, 1, 1.0), (1, 2, 1.0)]);
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let cp = find_critical_path(&g, &plat, &[1.0, 5.0, 5.0, 1.0, 2.0, 9.0]);
+        let dense = cp.assignment_dense(3);
+        let map = cp.assignment();
+        for t in 0..3 {
+            assert_eq!(dense[t], map.get(&t).copied(), "task {t}");
+        }
+        assert_eq!(dense.iter().filter(|c| c.is_some()).count(), cp.path.len());
     }
 
     #[test]

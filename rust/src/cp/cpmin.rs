@@ -5,15 +5,34 @@
 //! `min_p C_comp(t, p)` and communication is ignored. No valid schedule can
 //! beat this value, so `SLR >= 1` always.
 
+use crate::cp::workspace::Workspace;
 use crate::graph::TaskGraph;
 use crate::platform::Costs;
 
 /// Sum of minimum computation costs along the minimum-computation critical
 /// path — eq. 9's denominator.
 pub fn cp_min_cost(graph: &TaskGraph, comp: &[f64], p: usize) -> f64 {
+    cp_min_cost_with(&mut Workspace::new(), graph, comp, p)
+}
+
+/// [`cp_min_cost`] over workspace-owned distance scratch. The node weights
+/// (`min_p C_comp(t, p)`) are folded into the sweep instead of being
+/// materialised, so the whole computation is allocation-free.
+pub fn cp_min_cost_with(ws: &mut Workspace, graph: &TaskGraph, comp: &[f64], p: usize) -> f64 {
     let costs = Costs { comp, p };
-    let node_w: Vec<f64> = (0..graph.num_tasks()).map(|t| costs.min(t)).collect();
-    graph.longest_path(&node_w, |_, _, _| 0.0)
+    let dist = &mut ws.dist;
+    dist.clear();
+    dist.resize(graph.num_tasks(), 0.0);
+    let mut best: f64 = 0.0;
+    for &t in graph.topo_order() {
+        let mut d: f64 = 0.0;
+        for &(k, _) in graph.preds(t) {
+            d = d.max(dist[k]);
+        }
+        dist[t] = d + costs.min(t);
+        best = best.max(dist[t]);
+    }
+    best
 }
 
 /// The tasks on the minimum-computation critical path (for diagnostics).

@@ -7,6 +7,7 @@
 //! before. We implement it both as a baseline and as an ablation for the
 //! experiment harness.
 
+use crate::cp::workspace::Workspace;
 use crate::graph::TaskGraph;
 use crate::platform::{Costs, Platform};
 
@@ -31,11 +32,27 @@ pub fn min_exec_critical_path(
     comp: &[f64],
     include_mean_comm: bool,
 ) -> MinExecPath {
+    min_exec_critical_path_with(&mut Workspace::new(), graph, platform, comp, include_mean_comm)
+}
+
+/// [`min_exec_critical_path`] over workspace-owned distance/predecessor
+/// scratch; only the returned path vectors are allocated.
+pub fn min_exec_critical_path_with(
+    ws: &mut Workspace,
+    graph: &TaskGraph,
+    platform: &Platform,
+    comp: &[f64],
+    include_mean_comm: bool,
+) -> MinExecPath {
     let p = platform.num_classes();
     let costs = Costs { comp, p };
     let v = graph.num_tasks();
-    let mut dist = vec![0f64; v];
-    let mut pred: Vec<Option<usize>> = vec![None; v];
+    let dist = &mut ws.dist;
+    dist.clear();
+    dist.resize(v, 0.0);
+    let pred = &mut ws.pred;
+    pred.clear();
+    pred.resize(v, None);
     for &t in graph.topo_order() {
         let mut best = 0f64;
         let mut best_pred = None;

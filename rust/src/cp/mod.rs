@@ -12,9 +12,15 @@
 //!   the SLR denominator (eq. 9).
 //! * [`exact`] — exponential brute-force oracles for tiny graphs
 //!   (duplication-allowed vs no-duplication critical paths, §4.1).
+//! * [`workspace`] — the reusable scratch arena every algorithm above (and
+//!   the list schedulers in [`crate::sched`]) borrows its transient buffers
+//!   from, making the steady-state hot path allocation-free.
 
 pub mod ceft;
 pub mod exact;
 pub mod cpmin;
 pub mod minexec;
 pub mod ranks;
+pub mod workspace;
+
+pub use workspace::{Workspace, WorkspacePool};

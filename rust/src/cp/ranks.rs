@@ -8,6 +8,7 @@
 //! are misleading once heterogeneity is real; this module implements the
 //! averaging machinery faithfully so the comparison is fair.
 
+use crate::cp::workspace::Workspace;
 use crate::graph::TaskGraph;
 use crate::platform::{Costs, Platform};
 
@@ -27,12 +28,21 @@ pub struct MeanCosts {
 
 /// Upward rank: `rank_u(t) = w̄(t) + max_{s ∈ succ(t)} ( c̄(t,s) + rank_u(s) )`.
 pub fn rank_upward(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Vec<f64> {
+    let mut rank = Vec::new();
+    rank_upward_into(graph, platform, comp, &mut rank);
+    rank
+}
+
+/// [`rank_upward`] into a caller-owned (typically workspace-owned) buffer —
+/// no allocation once the buffer has reached the instance size.
+pub fn rank_upward_into(graph: &TaskGraph, platform: &Platform, comp: &[f64], rank: &mut Vec<f64>) {
     let costs = Costs {
         comp,
         p: platform.num_classes(),
     };
     let v = graph.num_tasks();
-    let mut rank = vec![0f64; v];
+    rank.clear();
+    rank.resize(v, 0.0);
     for &t in graph.topo_order().iter().rev() {
         let mut best = 0f64;
         for &(s, data) in graph.succs(t) {
@@ -40,18 +50,30 @@ pub fn rank_upward(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Vec<
         }
         rank[t] = costs.mean(t) + best;
     }
-    rank
 }
 
 /// Downward rank: `rank_d(t) = max_{k ∈ pred(t)} ( rank_d(k) + w̄(k) + c̄(k,t) )`,
 /// zero for entry tasks.
 pub fn rank_downward(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Vec<f64> {
+    let mut rank = Vec::new();
+    rank_downward_into(graph, platform, comp, &mut rank);
+    rank
+}
+
+/// [`rank_downward`] into a caller-owned buffer.
+pub fn rank_downward_into(
+    graph: &TaskGraph,
+    platform: &Platform,
+    comp: &[f64],
+    rank: &mut Vec<f64>,
+) {
     let costs = Costs {
         comp,
         p: platform.num_classes(),
     };
     let v = graph.num_tasks();
-    let mut rank = vec![0f64; v];
+    rank.clear();
+    rank.resize(v, 0.0);
     for &t in graph.topo_order() {
         let mut best = 0f64;
         let mut any = false;
@@ -61,7 +83,22 @@ pub fn rank_downward(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Ve
         }
         rank[t] = if any { best } else { 0.0 };
     }
-    rank
+}
+
+/// CPOP's scheduling priorities: fill `ws.up`, `ws.down` and
+/// `ws.prio = rank_u + rank_d` (Algorithm 2 lines 2–4). The single
+/// definition shared by the CPOP/CEFT-CPOP schedulers and the batch
+/// harness, so the priority formula cannot drift between them.
+pub fn cpop_priorities_into(
+    ws: &mut Workspace,
+    graph: &TaskGraph,
+    platform: &Platform,
+    comp: &[f64],
+) {
+    rank_upward_into(graph, platform, comp, &mut ws.up);
+    rank_downward_into(graph, platform, comp, &mut ws.down);
+    ws.prio.clear();
+    ws.prio.extend(ws.up.iter().zip(&ws.down).map(|(u, d)| u + d));
 }
 
 /// CPOP's critical path (Algorithm 2 lines 5–12): `priority = rank_u +
@@ -93,13 +130,34 @@ pub fn cpop_critical_path_from_ranks(
     down: &[f64],
 ) -> (Vec<usize>, f64) {
     let prio: Vec<f64> = up.iter().zip(down).map(|(u, d)| u + d).collect();
-    let entry = graph
-        .sources()
-        .into_iter()
-        .max_by(|&a, &b| prio[a].partial_cmp(&prio[b]).unwrap())
-        .expect("graph has sources");
+    let mut set = Vec::new();
+    let cp_len = cpop_cp_from_priorities(graph, &prio, &mut set);
+    (set, cp_len)
+}
+
+/// The Algorithm-2 critical-path walk over precomputed `rank_u + rank_d`
+/// priorities, written into a caller-owned buffer. Returns `|CP|` (the
+/// entry task's priority). Allocation-free: entry selection iterates the
+/// task range directly instead of collecting `graph.sources()`, taking the
+/// *last* max-priority source — the same element `Iterator::max_by`
+/// returned over the ascending sources list.
+pub fn cpop_cp_from_priorities(graph: &TaskGraph, prio: &[f64], out: &mut Vec<usize>) -> f64 {
+    let v = graph.num_tasks();
+    assert_eq!(prio.len(), v);
+    let mut entry: Option<usize> = None;
+    for t in 0..v {
+        if graph.in_degree(t) != 0 {
+            continue;
+        }
+        match entry {
+            Some(e) if prio[t] < prio[e] => {}
+            _ => entry = Some(t),
+        }
+    }
+    let entry = entry.expect("graph has sources");
     let cp_len = prio[entry];
-    let mut set = vec![entry];
+    out.clear();
+    out.push(entry);
     let mut t = entry;
     while graph.out_degree(t) > 0 {
         // successor with priority == |CP| (relative epsilon); fall back to
@@ -116,9 +174,9 @@ pub fn cpop_critical_path_from_ranks(
             }
         }
         t = chosen.unwrap_or(fallback);
-        set.push(t);
+        out.push(t);
     }
-    (set, cp_len)
+    cp_len
 }
 
 /// The processor that minimises the critical path's total execution time

@@ -1,0 +1,296 @@
+//! `Workspace` — the reusable scratch arena of the algorithm core.
+//!
+//! Every algorithm in [`crate::cp`] and [`crate::sched`] is a dense sweep
+//! over `O(v)` / `O(v × P)` arrays, yet the seed code re-allocated those
+//! arrays (DP tables, rank vectors, in-degree counters, ready heaps, busy
+//! lists, pin maps) on every invocation. For the batch harness that cost is
+//! noise; for the online service it is allocator traffic on *every request*,
+//! even a memo-cache miss for a graph shape seen thousands of times.
+//!
+//! A [`Workspace`] owns all of those transient buffers. The workspace-aware
+//! entry points (`cp::ceft::find_critical_path_with`,
+//! `sched::list_schedule_with`, `sched::Algorithm::run_with`, …) borrow one
+//! and size each buffer with `clear()` + `resize()` at entry:
+//!
+//! * capacity grows monotonically to the high-water mark of the largest
+//!   instance the workspace has served, so steady-state serving performs
+//!   **zero heap allocation** in the algorithm core — the only allocations
+//!   left on the hot path are the returned result objects themselves
+//!   ([`CriticalPath`](crate::cp::ceft::CriticalPath) /
+//!   [`Schedule`](crate::sched::Schedule)), which outlive the workspace;
+//! * every entry point fully re-initialises the prefix it reads, so a dirty
+//!   workspace from a larger instance can never leak state into a smaller
+//!   one (enforced by `rust/tests/workspace.rs`).
+//!
+//! Outputs are bit-identical whether a workspace is fresh, reused, or
+//! absent (the classic allocating signatures remain as one-shot wrappers):
+//! the deterministic tie-breaking of [`crate::cp::ceft`] is load-bearing
+//! for the service memo caches and the batch/online equivalence guarantee,
+//! and the equivalence property tests enforce it.
+//!
+//! Sharing model: a workspace is plain mutable state — one per worker, not
+//! one per engine. [`WorkspacePool`] hands long-lived workspaces to
+//! concurrent workers (the service engine keeps one pool for its request
+//! threads); warmed-up serving re-uses the same arenas forever, while the
+//! pool's idle cap keeps retained scratch bounded by
+//! `workers × high-water instance size` even under connection bursts.
+
+use crate::cp::ceft::PathStep;
+use std::collections::BinaryHeap;
+use std::sync::Mutex;
+
+/// Ready-queue entry of the list scheduler: max-heap by priority, ties
+/// broken toward the **lowest** task id (the determinism contract of
+/// [`crate::sched::list_schedule`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReadyEntry {
+    /// scheduling priority (higher pops first)
+    pub prio: f64,
+    /// task id (lower pops first among equal priorities)
+    pub task: usize,
+}
+
+impl Eq for ReadyEntry {}
+
+impl PartialOrd for ReadyEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ReadyEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.prio
+            .total_cmp(&other.prio)
+            .then_with(|| other.task.cmp(&self.task))
+    }
+}
+
+/// The reusable scratch arena. Fields are public scratch buffers with **no
+/// inter-call contract**: any entry point may overwrite any of them, and
+/// their contents between calls are unspecified. Callers that need two
+/// buffers alive at once borrow disjoint fields (the workspace-aware
+/// algorithms do exactly that internally).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// CEFT DP values, `v × P` row-major (`cp::ceft::ceft_table_into`)
+    pub table: Vec<f64>,
+    /// CEFT DP backpointers, aligned with `table`
+    pub backptr: Vec<(usize, usize)>,
+    /// upward-rank sweep output (`cp::ranks::rank_upward_into`)
+    pub up: Vec<f64>,
+    /// downward-rank sweep output (`cp::ranks::rank_downward_into`)
+    pub down: Vec<f64>,
+    /// per-task scheduling priorities consumed by `sched::list_schedule_with`
+    pub prio: Vec<f64>,
+    /// longest-path distances (`cp::cpmin`, `cp::minexec`)
+    pub dist: Vec<f64>,
+    /// longest-path predecessor links (`cp::minexec`)
+    pub pred: Vec<Option<usize>>,
+    /// remaining in-degree per task (list-scheduler ready tracking)
+    pub indeg: Vec<usize>,
+    /// the reusable ready heap of the list scheduler
+    pub heap: BinaryHeap<ReadyEntry>,
+    /// busy intervals per processor, each kept sorted by start time
+    pub busy: Vec<Vec<(f64, f64)>>,
+    /// actual finish time per scheduled task
+    pub aft: Vec<f64>,
+    /// processor per scheduled task
+    pub proc_of: Vec<usize>,
+    /// scheduled-yet flag per task
+    pub scheduled: Vec<bool>,
+    /// dense critical-path pin table: `pins[t] = Some(class)` pins task `t`
+    pub pins: Vec<Option<usize>>,
+    /// critical-path backtracking scratch (reverse order)
+    pub steps: Vec<PathStep>,
+    /// critical-path task-id scratch (`cp::ranks::cpop_cp_from_priorities`)
+    pub cp_tasks: Vec<usize>,
+}
+
+impl Workspace {
+    /// Fresh, empty workspace. Buffers allocate lazily on first use and
+    /// then grow monotonically to the high-water instance size.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset every buffer to length zero **without releasing capacity**.
+    ///
+    /// O(dirty): element types are `Copy` (truncation is a length store)
+    /// except the per-processor busy rows, which are cleared individually
+    /// so their capacities survive. Calling this between requests is
+    /// optional hygiene — every workspace-aware entry point re-initialises
+    /// the exact prefix it reads regardless.
+    pub fn clear(&mut self) {
+        self.table.clear();
+        self.backptr.clear();
+        self.up.clear();
+        self.down.clear();
+        self.prio.clear();
+        self.dist.clear();
+        self.pred.clear();
+        self.indeg.clear();
+        self.heap.clear();
+        for row in &mut self.busy {
+            row.clear();
+        }
+        self.aft.clear();
+        self.proc_of.clear();
+        self.scheduled.clear();
+        self.pins.clear();
+        self.steps.clear();
+        self.cp_tasks.clear();
+    }
+
+    /// Total `f64`-equivalent capacity across the major buffers — a rough
+    /// high-water-mark gauge for stats and tests.
+    pub fn capacity_hint(&self) -> usize {
+        self.table.capacity()
+            + self.backptr.capacity()
+            + self.prio.capacity()
+            + self.busy.iter().map(|r| r.capacity()).sum::<usize>()
+    }
+}
+
+/// A pool of long-lived workspaces for concurrent workers.
+///
+/// `with` checks a workspace out (creating one only when every existing
+/// workspace is in use), runs the closure, and returns it to the free
+/// list. At steady state the pool holds one warmed workspace per
+/// peak-concurrent worker and `with` allocates nothing.
+///
+/// The free list is capped at `max_idle` ([`WorkspacePool::bounded`]):
+/// a burst of concurrency beyond it still gets transient workspaces, but
+/// on check-in the extras are dropped instead of pinning their
+/// high-water-mark capacity for the process lifetime. Workers beyond
+/// `max_idle` cannot run concurrently on `max_idle` cores anyway, so the
+/// cap does not cost steady-state throughput.
+#[derive(Debug)]
+pub struct WorkspacePool {
+    free: Mutex<Vec<Workspace>>,
+    created: std::sync::atomic::AtomicUsize,
+    max_idle: usize,
+}
+
+impl Default for WorkspacePool {
+    fn default() -> Self {
+        Self {
+            free: Mutex::new(Vec::new()),
+            created: std::sync::atomic::AtomicUsize::new(0),
+            max_idle: usize::MAX,
+        }
+    }
+}
+
+impl WorkspacePool {
+    /// Empty pool with an unbounded free list (suitable when the caller
+    /// already bounds concurrency, e.g. a fixed worker pool).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Empty pool retaining at most `max_idle` idle workspaces; returned
+    /// workspaces beyond the cap are dropped.
+    pub fn bounded(max_idle: usize) -> Self {
+        Self {
+            max_idle: max_idle.max(1),
+            ..Self::default()
+        }
+    }
+
+    /// Run `f` with a pooled workspace. On return the workspace is
+    /// [`cleared`](Workspace::clear) — O(dirty), capacity kept — and
+    /// checked back in (or dropped, past the `max_idle` cap), so reuse is
+    /// allocation-free once the high-water mark is reached. (Entry points
+    /// re-initialise what they read regardless; clearing is hygiene, not
+    /// correctness.)
+    pub fn with<R>(&self, f: impl FnOnce(&mut Workspace) -> R) -> R {
+        let mut ws = self.free.lock().unwrap().pop().unwrap_or_else(|| {
+            self.created.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Workspace::new()
+        });
+        let out = f(&mut ws);
+        ws.clear(); // O(dirty), outside the lock
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max_idle {
+            free.push(ws);
+        }
+        out
+    }
+
+    /// Number of workspaces ever created — the concurrency high-water mark
+    /// (over-capacity bursts create transient workspaces that also count).
+    pub fn created(&self) -> usize {
+        self.created.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Number of workspaces currently checked in (idle).
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ready_entry_orders_by_priority_then_low_task() {
+        let mut heap = BinaryHeap::new();
+        heap.push(ReadyEntry { prio: 1.0, task: 7 });
+        heap.push(ReadyEntry { prio: 2.0, task: 9 });
+        heap.push(ReadyEntry { prio: 2.0, task: 3 });
+        heap.push(ReadyEntry { prio: 0.5, task: 0 });
+        let order: Vec<usize> = std::iter::from_fn(|| heap.pop().map(|e| e.task)).collect();
+        assert_eq!(order, vec![3, 9, 7, 0]);
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut ws = Workspace::new();
+        ws.table.resize(1024, 0.0);
+        ws.busy.push(Vec::with_capacity(64));
+        ws.heap.push(ReadyEntry { prio: 1.0, task: 0 });
+        let cap_before = ws.table.capacity();
+        ws.clear();
+        assert!(ws.table.is_empty());
+        assert!(ws.heap.is_empty());
+        assert_eq!(ws.table.capacity(), cap_before);
+        assert_eq!(ws.busy.len(), 1, "busy rows survive clear");
+        assert!(ws.busy[0].capacity() >= 64);
+    }
+
+    #[test]
+    fn pool_reuses_and_counts_high_water() {
+        let pool = WorkspacePool::new();
+        pool.with(|ws| ws.table.resize(100, 0.0));
+        assert_eq!(pool.created(), 1);
+        assert_eq!(pool.idle(), 1);
+        // sequential reuse does not create a second workspace
+        pool.with(|ws| assert!(ws.table.capacity() >= 100));
+        assert_eq!(pool.created(), 1);
+        // concurrent checkout does
+        pool.with(|_a| {
+            pool.with(|_b| {});
+        });
+        assert_eq!(pool.created(), 2);
+        assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    fn bounded_pool_drops_over_capacity_workspaces() {
+        let pool = WorkspacePool::bounded(1);
+        // nested checkouts force a second workspace into existence …
+        pool.with(|_a| {
+            pool.with(|_b| {
+                pool.with(|_c| {});
+            });
+        });
+        assert_eq!(pool.created(), 3);
+        // … but only max_idle survive check-in
+        assert_eq!(pool.idle(), 1);
+        pool.with(|_a| {});
+        assert_eq!(pool.created(), 3, "idle workspace is reused");
+        assert_eq!(pool.idle(), 1);
+    }
+}

@@ -2,10 +2,11 @@
 //! metric collection.
 
 use super::cells::{Cell, RealWorldCell};
-use crate::cp::ceft::find_critical_path;
-use crate::cp::cpmin::cp_min_cost;
-use crate::cp::minexec::min_exec_critical_path;
-use crate::cp::ranks::cpop_critical_path;
+use crate::cp::ceft::find_critical_path_with;
+use crate::cp::cpmin::cp_min_cost_with;
+use crate::cp::minexec::min_exec_critical_path_with;
+use crate::cp::ranks::{cpop_cp_from_priorities, cpop_priorities_into};
+use crate::cp::workspace::{Workspace, WorkspacePool};
 use crate::graph::generator::{generate, Instance, RggParams};
 use crate::graph::realworld;
 use crate::metrics;
@@ -105,8 +106,39 @@ pub fn build_instance(cell: &Cell) -> (Platform, Instance) {
     (platform, inst)
 }
 
-/// Run every algorithm and metric on one instance.
+/// Run every algorithm and metric on one instance (one-shot workspace).
+#[allow(clippy::too_many_arguments)]
 pub fn run_instance(
+    workload: &str,
+    n: usize,
+    out_degree: usize,
+    ccr: f64,
+    alpha: f64,
+    beta_pct: f64,
+    gamma: f64,
+    platform: &Platform,
+    inst: &Instance,
+) -> Row {
+    run_instance_with(
+        &mut Workspace::new(),
+        workload,
+        n,
+        out_degree,
+        ccr,
+        alpha,
+        beta_pct,
+        gamma,
+        platform,
+        inst,
+    )
+}
+
+/// Run every algorithm and metric on one instance, borrowing `ws` for all
+/// transient state — the sweep drivers below hand each worker a pooled
+/// workspace so a 10k-cell grid does not re-allocate DP tables per cell.
+#[allow(clippy::too_many_arguments)]
+pub fn run_instance_with(
+    ws: &mut Workspace,
     workload: &str,
     n: usize,
     out_degree: usize,
@@ -121,16 +153,17 @@ pub fn run_instance(
     let comp = &inst.comp;
     let p = platform.num_classes();
 
-    let ceft_cp = find_critical_path(g, platform, comp);
-    let (cpop_cp, cpl_cpop) = cpop_critical_path(g, platform, comp);
-    let cpl_cpop_realized =
-        crate::cp::ranks::cpop_realized_cp_length(&cpop_cp, comp, p);
-    let minexec = min_exec_critical_path(g, platform, comp, false);
-    let cp_min = cp_min_cost(g, comp, p);
+    let ceft_cp = find_critical_path_with(ws, g, platform, comp);
+    // CPOP's mean-value CP from ranks computed in workspace buffers
+    cpop_priorities_into(ws, g, platform, comp);
+    let cpl_cpop = cpop_cp_from_priorities(g, &ws.prio, &mut ws.cp_tasks);
+    let cpl_cpop_realized = crate::cp::ranks::cpop_realized_cp_length(&ws.cp_tasks, comp, p);
+    let minexec = min_exec_critical_path_with(ws, g, platform, comp, false);
+    let cp_min = cp_min_cost_with(ws, g, comp, p);
 
     let mut algos = [AlgoResult::default(); 6];
     for (i, a) in Algorithm::ALL.iter().enumerate() {
-        let schedule = a.schedule(g, platform, comp);
+        let schedule = a.run_with(ws, g, platform, comp);
         debug_assert!(schedule.validate(g, platform, comp).is_ok());
         let m = schedule.makespan();
         algos[i] = AlgoResult {
@@ -159,10 +192,16 @@ pub fn run_instance(
     }
 }
 
-/// Run one RGG cell end to end.
+/// Run one RGG cell end to end (one-shot workspace).
 pub fn run_cell(cell: &Cell) -> Row {
+    run_cell_with(&mut Workspace::new(), cell)
+}
+
+/// Run one RGG cell end to end with caller-provided scratch.
+pub fn run_cell_with(ws: &mut Workspace, cell: &Cell) -> Row {
     let (platform, inst) = build_instance(cell);
-    run_instance(
+    run_instance_with(
+        ws,
         cell.workload.name(),
         cell.n,
         cell.out_degree,
@@ -175,8 +214,13 @@ pub fn run_cell(cell: &Cell) -> Row {
     )
 }
 
-/// Run one real-world cell end to end.
+/// Run one real-world cell end to end (one-shot workspace).
 pub fn run_realworld_cell(cell: &RealWorldCell) -> Row {
+    run_realworld_cell_with(&mut Workspace::new(), cell)
+}
+
+/// Run one real-world cell end to end with caller-provided scratch.
+pub fn run_realworld_cell_with(ws: &mut Workspace, cell: &RealWorldCell) -> Row {
     let seed = SplitMix64::seed_for(&[cell.family.id(), cell.index]);
     let skel = match cell.family {
         super::cells::RealWorld::Fft => realworld::fft(cell.size),
@@ -200,7 +244,8 @@ pub fn run_realworld_cell(cell: &RealWorldCell) -> Row {
     let inst =
         realworld::weighted_instance(&skel, cell.ccr, cell.beta_pct, &model, &platform, seed);
     let variant = if cell.medium_variant { "medium" } else { "classic" };
-    run_instance(
+    run_instance_with(
+        ws,
         &format!("{}-{}", cell.family.name(), variant),
         inst.graph.num_tasks(),
         0,
@@ -214,10 +259,13 @@ pub fn run_realworld_cell(cell: &RealWorldCell) -> Row {
 }
 
 /// Run a sweep of RGG cells in parallel with optional progress output.
+/// Workers draw long-lived workspaces from a shared pool, so the sweep
+/// allocates `threads` scratch arenas total instead of one set per cell.
 pub fn run_sweep(cells: &[Cell], threads: usize, verbose: bool) -> Vec<Row> {
     let done = std::sync::atomic::AtomicUsize::new(0);
+    let workspaces = WorkspacePool::bounded(threads.max(1));
     pool::parallel_map(cells, threads, |_, cell| {
-        let row = run_cell(cell);
+        let row = workspaces.with(|ws| run_cell_with(ws, cell));
         let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
         if verbose && (d % 100 == 0 || d == cells.len()) {
             eprintln!("  [{d}/{}] cells done", cells.len());
@@ -226,11 +274,13 @@ pub fn run_sweep(cells: &[Cell], threads: usize, verbose: bool) -> Vec<Row> {
     })
 }
 
-/// Run a sweep of real-world cells in parallel.
+/// Run a sweep of real-world cells in parallel (pooled workspaces, as in
+/// [`run_sweep`]).
 pub fn run_realworld_sweep(cells: &[RealWorldCell], threads: usize, verbose: bool) -> Vec<Row> {
     let done = std::sync::atomic::AtomicUsize::new(0);
+    let workspaces = WorkspacePool::bounded(threads.max(1));
     pool::parallel_map(cells, threads, |_, cell| {
-        let row = run_realworld_cell(cell);
+        let row = workspaces.with(|ws| run_realworld_cell_with(ws, cell));
         let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
         if verbose && (d % 100 == 0 || d == cells.len()) {
             eprintln!("  [{d}/{}] real-world cells done", cells.len());
@@ -268,6 +318,25 @@ mod tests {
         assert_eq!(a.cpl_ceft, b.cpl_ceft);
         assert_eq!(a.algos[0].makespan, b.algos[0].makespan);
         assert_eq!(a.algos[2].slr, b.algos[2].slr);
+    }
+
+    #[test]
+    fn reused_workspace_matches_fresh_rows() {
+        // one workspace threaded through two different cells must produce
+        // the same rows as fresh one-shot workspaces
+        let cells = grid(Workload::RggHigh, Scale::Smoke);
+        let mut ws = Workspace::new();
+        let a1 = run_cell_with(&mut ws, &cells[0]);
+        let b1 = run_cell_with(&mut ws, &cells[1 % cells.len()]);
+        let a2 = run_cell(&cells[0]);
+        let b2 = run_cell(&cells[1 % cells.len()]);
+        assert_eq!(a1.cpl_ceft, a2.cpl_ceft);
+        assert_eq!(b1.cpl_ceft, b2.cpl_ceft);
+        assert_eq!(a1.cpl_cpop, a2.cpl_cpop);
+        for i in 0..6 {
+            assert_eq!(a1.algos[i].makespan, a2.algos[i].makespan);
+            assert_eq!(b1.algos[i].makespan, b2.algos[i].makespan);
+        }
     }
 
     #[test]

@@ -23,9 +23,13 @@
 //!   eq. 6 "two-weight").
 //! * [`cp`] — critical-path algorithms: CEFT (the paper's contribution),
 //!   CPOP's mean-value critical path, the min-execution-time critical path,
-//!   and `CP_MIN` (the SLR denominator).
+//!   and `CP_MIN` (the SLR denominator) — plus [`cp::workspace`], the
+//!   reusable scratch arena that makes the whole algorithm core
+//!   allocation-free at steady state (see EXPERIMENTS.md §Workspace).
 //! * [`sched`] — list schedulers: HEFT, CPOP, CEFT-CPOP, and the
 //!   CEFT-ranked HEFT variants, all over a shared insertion-based core.
+//!   Each has a `schedule_with(&mut Workspace, …)` hot path and a classic
+//!   allocating `schedule(…)` wrapper with bit-identical output.
 //! * [`metrics`] — makespan, speedup, SLR, slack, and pairwise
 //!   win/tie/loss comparison.
 //! * [`exp`] — the experiment harness that regenerates every table and
@@ -85,6 +89,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::cp::ceft::{find_critical_path, CriticalPath, PathStep};
     pub use crate::cp::cpmin::cp_min_cost;
+    pub use crate::cp::workspace::{Workspace, WorkspacePool};
     pub use crate::graph::{generator::RggParams, realworld, TaskGraph};
     pub use crate::metrics::{makespan, slack, slr, speedup};
     pub use crate::platform::{CostModel, Platform};

@@ -14,7 +14,9 @@
 //! * `repro serve` — run the online scheduling engine (stdin/stdout or TCP).
 //! * `repro request` — send one protocol request to a running server.
 //! * `repro loadgen` — replay generated instances against an in-process
-//!   engine at a target rate and report requests/sec.
+//!   engine at a target rate; reports requests/sec, p50/p95/p99 per-request
+//!   latency and cache hit rate, and writes `BENCH_service.json` so the
+//!   perf trajectory is tracked across PRs.
 
 use ceft::coordinator::{Coordinator, EXPERIMENT_IDS};
 use ceft::cp::ceft::find_critical_path;
@@ -445,7 +447,12 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
     .opt("duration", Some("3"), "seconds to run")
     .opt("algorithm", Some("CEFT-CPOP"), "scheduler to request")
     .opt("cache-capacity", Some("4096"), "LRU entries per result cache")
-    .opt("threads", None, "worker threads (default: all cores)");
+    .opt("threads", None, "worker threads (default: all cores)")
+    .opt(
+        "json-out",
+        Some("BENCH_service.json"),
+        "machine-readable report path (\"none\" to disable)",
+    );
     let parsed = parse_or_exit(args, tokens);
     let count: usize = num_or_exit::<usize>(&parsed, "count", None).max(1);
     let rate: f64 = num_or_exit(&parsed, "rate", None);
@@ -521,7 +528,11 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         .cloned()
         .collect();
     let deadline = std::time::Duration::from_secs_f64(duration_s);
-    let mut batch_lat = ceft::util::stats::Accumulator::new();
+    // True per-request latencies: each request is timed individually inside
+    // the worker that serves it (same fan-out as Engine::handle_batch), so
+    // the percentiles below are per-request, not per-tick averages.
+    let mut latencies: Vec<f64> = Vec::new();
+    let threads = engine.threads();
     let mut sent: u64 = 0;
     let mut failures: u64 = 0;
     let start = std::time::Instant::now();
@@ -529,14 +540,18 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         let tick_start = std::time::Instant::now();
         let offset = sent as usize % lines.len();
         let batch = &ring[offset..offset + per_tick];
-        let t0 = std::time::Instant::now();
-        let results = engine.handle_batch(batch);
-        batch_lat.push(t0.elapsed().as_secs_f64() / batch.len() as f64);
+        let results = pool::parallel_map(batch, threads, |_, line| {
+            let t0 = std::time::Instant::now();
+            let (resp, _) = engine.handle_line(line);
+            (resp, t0.elapsed().as_secs_f64())
+        });
         sent += batch.len() as u64;
-        failures += results
-            .iter()
-            .filter(|(r, _)| r.get("ok") != Some(&Json::Bool(true)))
-            .count() as u64;
+        for (resp, secs) in &results {
+            latencies.push(*secs);
+            if resp.get("ok") != Some(&Json::Bool(true)) {
+                failures += 1;
+            }
+        }
         if let Some(rest) = tick.checked_sub(tick_start.elapsed()) {
             std::thread::sleep(rest);
         }
@@ -547,13 +562,85 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         "loadgen: {} requests in {:.2}s -> {:.0} req/s (target {:.0}), {} failures",
         sent, elapsed, achieved, rate, failures
     );
+    // one sort, three percentile reads (latencies are dead after reporting)
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p95, p99, mean_lat, max_lat) = if latencies.is_empty() {
+        (0.0, 0.0, 0.0, 0.0, 0.0)
+    } else {
+        (
+            ceft::util::stats::percentile_sorted(&latencies, 50.0),
+            ceft::util::stats::percentile_sorted(&latencies, 95.0),
+            ceft::util::stats::percentile_sorted(&latencies, 99.0),
+            ceft::util::stats::mean(&latencies),
+            *latencies.last().unwrap(),
+        )
+    };
     println!(
-        "per-request engine time: mean {:.1} µs, min {:.1} µs, max {:.1} µs",
-        batch_lat.mean() * 1e6,
-        batch_lat.min() * 1e6,
-        batch_lat.max() * 1e6
+        "per-request latency (µs): p50 {:.1}, p95 {:.1}, p99 {:.1}, mean {:.1}, max {:.1}",
+        p50 * 1e6,
+        p95 * 1e6,
+        p99 * 1e6,
+        mean_lat * 1e6,
+        max_lat * 1e6
     );
-    println!("{}", engine.stats_json().to_string());
+    let stats = engine.stats_json();
+    let hit_rate = |cache: &str| -> f64 {
+        let c = stats.get(cache);
+        let hits = c
+            .and_then(|c| c.get("hits"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        let misses = c
+            .and_then(|c| c.get("misses"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        if hits + misses > 0.0 {
+            hits / (hits + misses)
+        } else {
+            0.0
+        }
+    };
+    let sched_hit_rate = hit_rate("sched_cache");
+    println!(
+        "cache hit rate: schedule {:.1}%, cp {:.1}%",
+        sched_hit_rate * 100.0,
+        hit_rate("cp_cache") * 100.0
+    );
+    println!("{}", stats.to_string());
+    // Machine-readable perf record, tracked across PRs (see EXPERIMENTS.md
+    // §Workspace for the before/after methodology).
+    let json_out = parsed.req("json-out");
+    if json_out != "none" {
+        let report = Json::obj(vec![
+            ("bench", Json::Str("repro loadgen".to_string())),
+            ("algorithm", Json::Str(algo.name().to_string())),
+            ("instances", Json::Num(count as f64)),
+            ("threads", Json::Num(threads as f64)),
+            ("target_rps", Json::Num(rate)),
+            ("duration_s", Json::Num(elapsed)),
+            ("requests", Json::Num(sent as f64)),
+            ("failures", Json::Num(failures as f64)),
+            ("achieved_rps", Json::Num(achieved)),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("p50", Json::Num(p50 * 1e6)),
+                    ("p95", Json::Num(p95 * 1e6)),
+                    ("p99", Json::Num(p99 * 1e6)),
+                    ("mean", Json::Num(mean_lat * 1e6)),
+                    ("max", Json::Num(max_lat * 1e6)),
+                ]),
+            ),
+            ("schedule_cache_hit_rate", Json::Num(sched_hit_rate)),
+        ]);
+        match std::fs::write(json_out, format!("{}\n", report.to_string())) {
+            Ok(()) => println!("wrote {json_out}"),
+            Err(e) => {
+                eprintln!("could not write {json_out}: {e}");
+                return 1;
+            }
+        }
+    }
     if failures > 0 {
         1
     } else {

@@ -32,8 +32,9 @@ pub struct Platform {
     weights: Vec<(f64, f64)>,
     /// Precomputed mean-comm factors (perf: `mean_comm_cost` is called once
     /// per edge by every rank computation; recomputing the O(P²) average
-    /// each time made CPOP/HEFT rank sweeps O(P²e) — see EXPERIMENTS.md
-    /// §Perf). `mean_comm_cost(d) = mean_startup + d * mean_inv_bw`.
+    /// each time would make CPOP/HEFT rank sweeps O(P²e) — see
+    /// EXPERIMENTS.md §Mean-comm precomputation).
+    /// `mean_comm_cost(d) = mean_startup + d * mean_inv_bw`.
     mean_startup: f64,
     /// mean reciprocal bandwidth over distinct ordered pairs
     mean_inv_bw: f64,
@@ -50,6 +51,17 @@ impl Platform {
     }
 
     /// Compute the cached mean-comm factors and assemble the platform.
+    ///
+    /// Invariant (the `P == 1` edge case): the mean communication cost is
+    /// an average over *distinct ordered class pairs*. A single-class
+    /// platform has no distinct pairs — all communication is co-located and
+    /// costs zero by Definition 3 — so both factors stay `0.0` and
+    /// [`Platform::mean_comm_cost`] returns exactly `0` for any payload.
+    /// This is deliberate, not a division-by-zero dodge: averaging-based
+    /// ranks (CPOP/HEFT) then degenerate to plain longest paths on task
+    /// weights, which makes every scheduler agree on single-class chains
+    /// (see `single_class_schedulers_agree_on_chain` below and
+    /// EXPERIMENTS.md §Determinism).
     fn finish(
         p: usize,
         startup: Vec<f64>,
@@ -70,6 +82,7 @@ impl Platform {
             }
             mib /= pairs;
         }
+        // else: no distinct pairs ⇒ zero mean comm (ms = mib = 0.0)
         Self {
             p,
             startup,
@@ -213,7 +226,9 @@ impl Platform {
 
     /// Mean communication cost over all *distinct* ordered class pairs —
     /// the scalarisation CPOP/HEFT use (they "set the comm costs of edges
-    /// with mean values", Algorithm 2 line 2). Zero when `P == 1`.
+    /// with mean values", Algorithm 2 line 2). Exactly zero when `P == 1`:
+    /// with a single class there are no distinct pairs and all transfers
+    /// are co-located (see [`Platform::finish`] for the invariant).
     /// O(1): the pair averages are precomputed at construction.
     #[inline]
     pub fn mean_comm_cost(&self, data: f64) -> f64 {
@@ -394,6 +409,31 @@ mod tests {
         assert_eq!(p.mean_comm_cost(10.0), 10.0);
         let p1 = Platform::uniform(1, 1.0, 0.0);
         assert_eq!(p1.mean_comm_cost(10.0), 0.0);
+    }
+
+    #[test]
+    fn single_class_schedulers_agree_on_chain() {
+        // The P == 1 invariant end to end: no distinct pairs ⇒ zero mean
+        // comm ⇒ averaging-based ranks are exact longest paths, and CPOP,
+        // HEFT and CEFT-CPOP all produce the same serial chain schedule
+        // with the same makespan as the CEFT critical-path length.
+        use crate::graph::TaskGraph;
+        use crate::sched::Scheduler as _;
+        let g = TaskGraph::from_edges(4, &[(0, 1, 7.0), (1, 2, 3.0), (2, 3, 11.0)]);
+        // nonzero startup + modest bandwidth: irrelevant when co-located
+        let plat = Platform::uniform(1, 0.5, 2.0);
+        let comp = vec![4.0, 6.0, 5.0, 2.0];
+        let serial: f64 = comp.iter().sum();
+        let cpop = crate::sched::cpop::Cpop.schedule(&g, &plat, &comp);
+        let heft = crate::sched::heft::Heft.schedule(&g, &plat, &comp);
+        let cc = crate::sched::ceft_cpop::CeftCpop.schedule(&g, &plat, &comp);
+        for s in [&cpop, &heft, &cc] {
+            s.validate(&g, &plat, &comp).unwrap();
+            assert!((s.makespan() - serial).abs() < 1e-12);
+        }
+        let cp = crate::cp::ceft::find_critical_path(&g, &plat, &comp);
+        assert!((cp.length - serial).abs() < 1e-12);
+        assert!(cp.path.iter().all(|s| s.class == 0));
     }
 
     #[test]

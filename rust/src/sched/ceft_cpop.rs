@@ -7,12 +7,12 @@
 //! critical *together with* its mapping, so the scheduler honours that
 //! mapping instead of collapsing the path onto one processor.
 
-use super::{list_schedule, Placement, Schedule, Scheduler};
-use crate::cp::ceft::find_critical_path;
-use crate::cp::ranks::{rank_downward, rank_upward};
+use super::{list_schedule_with, PlacementWs, Schedule, Scheduler};
+use crate::cp::ceft::find_critical_path_with;
+use crate::cp::ranks::cpop_priorities_into;
+use crate::cp::workspace::Workspace;
 use crate::graph::TaskGraph;
 use crate::platform::Platform;
-use std::collections::HashMap;
 
 /// CEFT-CPOP: CPOP with CEFT's critical path and partial assignment.
 #[derive(Clone, Copy, Debug, Default)]
@@ -23,22 +23,29 @@ impl Scheduler for CeftCpop {
         "CEFT-CPOP"
     }
 
-    fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule {
+    fn schedule_with(
+        &self,
+        ws: &mut Workspace,
+        graph: &TaskGraph,
+        platform: &Platform,
+        comp: &[f64],
+    ) -> Schedule {
+        // the CEFT path first: it uses ws.table/backptr, which the rank
+        // sweeps below do not touch
+        let cp = find_critical_path_with(ws, graph, platform, comp);
         // priorities stay mean-value rank_u + rank_d ("the rest of the
         // algorithm remains the same", §6)
-        let up = rank_upward(graph, platform, comp);
-        let down = rank_downward(graph, platform, comp);
-        let prio: Vec<f64> = up.iter().zip(&down).map(|(u, d)| u + d).collect();
-        let cp = find_critical_path(graph, platform, comp);
-        let pin: HashMap<usize, usize> =
-            cp.path.iter().map(|s| (s.task, s.class)).collect();
-        list_schedule(graph, platform, comp, &prio, &Placement::Pinned(pin))
+        cpop_priorities_into(ws, graph, platform, comp);
+        // pin every CP task to the class its partial assignment chose
+        cp.fill_assignment_dense(graph.num_tasks(), &mut ws.pins);
+        list_schedule_with(ws, graph, platform, comp, PlacementWs::Pinned)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cp::ceft::find_critical_path;
     use crate::graph::generator::{generate, RggParams};
     use crate::platform::CostModel;
     use crate::sched::cpop::Cpop;

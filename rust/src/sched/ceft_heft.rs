@@ -10,26 +10,63 @@
 //! so ascending order is the topologically consistent one, matching
 //! HEFT-DOWN). Placement stays min-EFT.
 
-use super::{list_schedule, Placement, Schedule, Scheduler};
-use crate::cp::ceft::ceft_table;
+use super::{list_schedule_with, PlacementWs, Schedule, Scheduler};
+use crate::cp::ceft::{ceft_table_into, ceft_table_rev_into};
+use crate::cp::workspace::Workspace;
 use crate::graph::TaskGraph;
 use crate::platform::Platform;
 
-/// `rank_ceft_down` for every task: `min_p CEFT(t, p)` on the original DAG.
-pub fn rank_ceft_down(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Vec<f64> {
-    let t = ceft_table(graph, platform, comp);
-    (0..graph.num_tasks())
-        .map(|i| t.min_over_classes(i))
-        .collect()
+/// Per-task row minimum of the `v × P` table in `ws.table`, appended to
+/// `out` (cleared first). Lowest value per task = the CEFT-based rank.
+fn min_rows_into(table: &[f64], v: usize, p: usize, out: &mut Vec<f64>) {
+    out.clear();
+    for t in 0..v {
+        let row = &table[t * p..(t + 1) * p];
+        out.push(row.iter().fold(f64::INFINITY, |a, &b| a.min(b)));
+    }
 }
 
-/// `rank_ceft_up` for every task: `min_p CEFT_T(t, p)` on the transposed DAG.
+/// `rank_ceft_down` for every task: `min_p CEFT(t, p)` on the original DAG.
+pub fn rank_ceft_down(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Vec<f64> {
+    let mut ws = Workspace::new();
+    let mut out = Vec::new();
+    rank_ceft_down_into(&mut ws, graph, platform, comp, &mut out);
+    out
+}
+
+/// [`rank_ceft_down`] with workspace scratch and a caller-owned output.
+pub fn rank_ceft_down_into(
+    ws: &mut Workspace,
+    graph: &TaskGraph,
+    platform: &Platform,
+    comp: &[f64],
+    out: &mut Vec<f64>,
+) {
+    ceft_table_into(ws, graph, platform, comp);
+    min_rows_into(&ws.table, graph.num_tasks(), platform.num_classes(), out);
+}
+
+/// `rank_ceft_up` for every task: `min_p CEFT_T(t, p)` on the transposed
+/// DAG — computed by the reverse sweep
+/// [`ceft_table_rev_into`], which is bit-identical to the DP over a
+/// materialised transpose without allocating one.
 pub fn rank_ceft_up(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Vec<f64> {
-    let gt = graph.transpose();
-    let t = ceft_table(&gt, platform, comp);
-    (0..graph.num_tasks())
-        .map(|i| t.min_over_classes(i))
-        .collect()
+    let mut ws = Workspace::new();
+    let mut out = Vec::new();
+    rank_ceft_up_into(&mut ws, graph, platform, comp, &mut out);
+    out
+}
+
+/// [`rank_ceft_up`] with workspace scratch and a caller-owned output.
+pub fn rank_ceft_up_into(
+    ws: &mut Workspace,
+    graph: &TaskGraph,
+    platform: &Platform,
+    comp: &[f64],
+    out: &mut Vec<f64>,
+) {
+    ceft_table_rev_into(ws, graph, platform, comp);
+    min_rows_into(&ws.table, graph.num_tasks(), platform.num_classes(), out);
 }
 
 /// HEFT with the CEFT upward rank.
@@ -41,9 +78,17 @@ impl Scheduler for CeftHeftUp {
         "CEFT-HEFT-UP"
     }
 
-    fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule {
-        let prio = rank_ceft_up(graph, platform, comp);
-        list_schedule(graph, platform, comp, &prio, &Placement::MinEft)
+    fn schedule_with(
+        &self,
+        ws: &mut Workspace,
+        graph: &TaskGraph,
+        platform: &Platform,
+        comp: &[f64],
+    ) -> Schedule {
+        ceft_table_rev_into(ws, graph, platform, comp);
+        let Workspace { table, prio, .. } = &mut *ws;
+        min_rows_into(table, graph.num_tasks(), platform.num_classes(), prio);
+        list_schedule_with(ws, graph, platform, comp, PlacementWs::MinEft)
     }
 }
 
@@ -56,10 +101,19 @@ impl Scheduler for CeftHeftDown {
         "CEFT-HEFT-DOWN"
     }
 
-    fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule {
-        let down = rank_ceft_down(graph, platform, comp);
-        let prio: Vec<f64> = down.iter().map(|d| -d).collect();
-        list_schedule(graph, platform, comp, &prio, &Placement::MinEft)
+    fn schedule_with(
+        &self,
+        ws: &mut Workspace,
+        graph: &TaskGraph,
+        platform: &Platform,
+        comp: &[f64],
+    ) -> Schedule {
+        ceft_table_into(ws, graph, platform, comp);
+        let Workspace { table, down, prio, .. } = &mut *ws;
+        min_rows_into(table, graph.num_tasks(), platform.num_classes(), down);
+        prio.clear();
+        prio.extend(down.iter().map(|d| -d));
+        list_schedule_with(ws, graph, platform, comp, PlacementWs::MinEft)
     }
 }
 

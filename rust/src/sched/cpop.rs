@@ -7,11 +7,11 @@
 //! argues this single-processor restriction is CPOP's central weakness once
 //! tasks on the path prefer different classes.
 
-use super::{list_schedule, Placement, Schedule, Scheduler};
-use crate::cp::ranks::{cpop_cp_processor, cpop_critical_path, rank_downward, rank_upward};
+use super::{list_schedule_with, PlacementWs, Schedule, Scheduler};
+use crate::cp::ranks::{cpop_cp_from_priorities, cpop_cp_processor, cpop_priorities_into};
+use crate::cp::workspace::Workspace;
 use crate::graph::TaskGraph;
 use crate::platform::Platform;
-use std::collections::HashMap;
 
 /// Classic CPOP.
 #[derive(Clone, Copy, Debug, Default)]
@@ -22,14 +22,24 @@ impl Scheduler for Cpop {
         "CPOP"
     }
 
-    fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule {
-        let up = rank_upward(graph, platform, comp);
-        let down = rank_downward(graph, platform, comp);
-        let prio: Vec<f64> = up.iter().zip(&down).map(|(u, d)| u + d).collect();
-        let (cp, _) = cpop_critical_path(graph, platform, comp);
-        let p_cp = cpop_cp_processor(&cp, comp, platform.num_classes());
-        let pin: HashMap<usize, usize> = cp.into_iter().map(|t| (t, p_cp)).collect();
-        list_schedule(graph, platform, comp, &prio, &Placement::Pinned(pin))
+    fn schedule_with(
+        &self,
+        ws: &mut Workspace,
+        graph: &TaskGraph,
+        platform: &Platform,
+        comp: &[f64],
+    ) -> Schedule {
+        cpop_priorities_into(ws, graph, platform, comp);
+        // Algorithm 2 lines 5-13 over the priorities just computed (the
+        // classic signature recomputed the ranks a second time here).
+        cpop_cp_from_priorities(graph, &ws.prio, &mut ws.cp_tasks);
+        let p_cp = cpop_cp_processor(&ws.cp_tasks, comp, platform.num_classes());
+        ws.pins.clear();
+        ws.pins.resize(graph.num_tasks(), None);
+        for &t in &ws.cp_tasks {
+            ws.pins[t] = Some(p_cp);
+        }
+        list_schedule_with(ws, graph, platform, comp, PlacementWs::Pinned)
     }
 }
 

@@ -5,8 +5,9 @@
 //! the paper's "state of the art" reference point (it is *not* critical-path
 //! based, so it only appears in makespan-derived comparisons).
 
-use super::{list_schedule, Placement, Schedule, Scheduler};
-use crate::cp::ranks::{rank_downward, rank_upward};
+use super::{list_schedule_with, PlacementWs, Schedule, Scheduler};
+use crate::cp::ranks::{rank_downward_into, rank_upward_into};
+use crate::cp::workspace::Workspace;
 use crate::graph::TaskGraph;
 use crate::platform::Platform;
 
@@ -19,9 +20,15 @@ impl Scheduler for Heft {
         "HEFT"
     }
 
-    fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule {
-        let prio = rank_upward(graph, platform, comp);
-        list_schedule(graph, platform, comp, &prio, &Placement::MinEft)
+    fn schedule_with(
+        &self,
+        ws: &mut Workspace,
+        graph: &TaskGraph,
+        platform: &Platform,
+        comp: &[f64],
+    ) -> Schedule {
+        rank_upward_into(graph, platform, comp, &mut ws.prio);
+        list_schedule_with(ws, graph, platform, comp, PlacementWs::MinEft)
     }
 }
 
@@ -36,10 +43,17 @@ impl Scheduler for HeftDown {
         "HEFT-DOWN"
     }
 
-    fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule {
-        let down = rank_downward(graph, platform, comp);
-        let prio: Vec<f64> = down.iter().map(|d| -d).collect();
-        list_schedule(graph, platform, comp, &prio, &Placement::MinEft)
+    fn schedule_with(
+        &self,
+        ws: &mut Workspace,
+        graph: &TaskGraph,
+        platform: &Platform,
+        comp: &[f64],
+    ) -> Schedule {
+        rank_downward_into(graph, platform, comp, &mut ws.down);
+        ws.prio.clear();
+        ws.prio.extend(ws.down.iter().map(|d| -d));
+        list_schedule_with(ws, graph, platform, comp, PlacementWs::MinEft)
     }
 }
 

@@ -11,6 +11,12 @@
 //! * [`ceft_cpop`] — the paper's CEFT-CPOP: CPOP with the critical path
 //!   *and its partial assignment* replaced by CEFT's (§6).
 //! * [`ceft_heft`] — HEFT with CEFT-based ranking functions (§8.2).
+//!
+//! Every scheduler has two entry points: [`Scheduler::schedule_with`]
+//! borrows a [`Workspace`] and allocates nothing but the returned
+//! [`Schedule`]; [`Scheduler::schedule`] is the classic convenience
+//! signature over a one-shot workspace. Outputs are bit-identical either
+//! way (see `rust/tests/workspace.rs`).
 
 pub mod ceft_cpop;
 pub mod ceft_heft;
@@ -18,9 +24,9 @@ pub mod cpop;
 pub mod gantt;
 pub mod heft;
 
+use crate::cp::workspace::{ReadyEntry, Workspace};
 use crate::graph::TaskGraph;
 use crate::platform::{Costs, Platform};
-use std::collections::HashMap;
 
 /// Where and when one task executes.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -114,8 +120,23 @@ impl Schedule {
 pub trait Scheduler {
     /// Short display name (used in result tables).
     fn name(&self) -> &'static str;
-    /// Produce a schedule for the instance.
-    fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule;
+
+    /// Produce a schedule using caller-provided scratch — the hot path.
+    /// All transient state lives in `ws`; the only allocation is the
+    /// returned [`Schedule`] itself.
+    fn schedule_with(
+        &self,
+        ws: &mut Workspace,
+        graph: &TaskGraph,
+        platform: &Platform,
+        comp: &[f64],
+    ) -> Schedule;
+
+    /// Convenience wrapper over [`Scheduler::schedule_with`] that allocates
+    /// a one-shot workspace. Bit-identical to the workspace path.
+    fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule {
+        self.schedule_with(&mut Workspace::new(), graph, platform, comp)
+    }
 }
 
 /// The unified algorithm registry: one name per scheduler, shared by the
@@ -201,7 +222,21 @@ impl Algorithm {
         }
     }
 
-    /// Schedule an instance with this algorithm.
+    /// Schedule an instance with this algorithm and caller-provided scratch
+    /// — the entry point of the online service's per-request dispatch and
+    /// the batch harness. Allocates nothing but the returned schedule once
+    /// `ws` has warmed to the instance size.
+    pub fn run_with(
+        &self,
+        ws: &mut Workspace,
+        graph: &TaskGraph,
+        platform: &Platform,
+        comp: &[f64],
+    ) -> Schedule {
+        self.scheduler().schedule_with(ws, graph, platform, comp)
+    }
+
+    /// Schedule an instance with this algorithm (one-shot workspace).
     pub fn schedule(&self, graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Schedule {
         self.scheduler().schedule(graph, platform, comp)
     }
@@ -211,36 +246,73 @@ impl Algorithm {
 pub enum Placement {
     /// choose the processor minimising the (insertion-based) EFT
     MinEft,
-    /// pinned tasks go to their mapped processor; everything else min-EFT
-    Pinned(HashMap<usize, usize>),
+    /// dense pin table (`pins[t] = Some(class)` pins task `t` to `class`,
+    /// `None` falls back to min-EFT) — one entry per task, no hashing on
+    /// the hot path. Build one with
+    /// [`CriticalPath::assignment_dense`](crate::cp::ceft::CriticalPath::assignment_dense).
+    Pinned(Vec<Option<usize>>),
 }
 
-/// Shared machinery: machine state + EFT computation.
+/// Placement selector for the workspace entry point: the pin table, when
+/// used, is read from `ws.pins` (sized by the caller) so no borrow of the
+/// workspace escapes into the argument list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementWs {
+    /// choose the processor minimising the (insertion-based) EFT
+    MinEft,
+    /// consult the dense `ws.pins` table, min-EFT for unpinned tasks
+    Pinned,
+}
+
+/// Shared machinery: machine state + EFT computation, over buffers borrowed
+/// from a [`Workspace`] (so repeated scheduling reuses their capacity).
 pub struct ListContext<'a> {
     graph: &'a TaskGraph,
     platform: &'a Platform,
     costs: Costs<'a>,
     /// busy intervals per processor, kept sorted by start time
-    busy: Vec<Vec<(f64, f64)>>,
+    busy: &'a mut [Vec<(f64, f64)>],
     /// actual finish time per scheduled task
-    aft: Vec<f64>,
+    aft: &'a mut [f64],
     /// processor per scheduled task
-    proc_of: Vec<usize>,
-    scheduled: Vec<bool>,
+    proc_of: &'a mut [usize],
+    scheduled: &'a mut [bool],
 }
 
 impl<'a> ListContext<'a> {
-    /// Fresh context over an instance.
-    pub fn new(graph: &'a TaskGraph, platform: &'a Platform, comp: &'a [f64]) -> Self {
+    /// Context over an instance, backed by the given scratch buffers
+    /// (resized and reset here; capacity is reused across calls).
+    fn from_parts(
+        graph: &'a TaskGraph,
+        platform: &'a Platform,
+        comp: &'a [f64],
+        busy: &'a mut Vec<Vec<(f64, f64)>>,
+        aft: &'a mut Vec<f64>,
+        proc_of: &'a mut Vec<usize>,
+        scheduled: &'a mut Vec<bool>,
+    ) -> Self {
+        let v = graph.num_tasks();
         let p = platform.num_classes();
+        while busy.len() < p {
+            busy.push(Vec::new());
+        }
+        for row in busy[..p].iter_mut() {
+            row.clear();
+        }
+        aft.clear();
+        aft.resize(v, 0.0);
+        proc_of.clear();
+        proc_of.resize(v, usize::MAX);
+        scheduled.clear();
+        scheduled.resize(v, false);
         Self {
             graph,
             platform,
             costs: Costs { comp, p },
-            busy: vec![Vec::new(); p],
-            aft: vec![0.0; graph.num_tasks()],
-            proc_of: vec![usize::MAX; graph.num_tasks()],
-            scheduled: vec![false; graph.num_tasks()],
+            busy: &mut busy[..p],
+            aft: &mut aft[..],
+            proc_of: &mut proc_of[..],
+            scheduled: &mut scheduled[..],
         }
     }
 
@@ -311,6 +383,10 @@ impl<'a> ListContext<'a> {
 /// Generic priority-driven list scheduler: repeatedly pop the
 /// highest-priority *ready* task and place it per the policy. Ties break
 /// toward the lower task id, making every scheduler deterministic.
+///
+/// Convenience wrapper over [`list_schedule_with`]: copies `priority` (and
+/// the pin table) into a one-shot workspace. Use the workspace entry point
+/// on hot paths.
 pub fn list_schedule(
     graph: &TaskGraph,
     platform: &Platform,
@@ -318,45 +394,61 @@ pub fn list_schedule(
     priority: &[f64],
     placement: &Placement,
 ) -> Schedule {
-    use std::cmp::Reverse;
-    use std::collections::BinaryHeap;
-
-    #[derive(PartialEq)]
-    struct Entry(f64, Reverse<usize>);
-    impl Eq for Entry {}
-    impl PartialOrd for Entry {
-        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-            Some(self.cmp(other))
+    let mut ws = Workspace::new();
+    ws.prio.extend_from_slice(priority);
+    let pw = match placement {
+        Placement::MinEft => PlacementWs::MinEft,
+        Placement::Pinned(pins) => {
+            assert_eq!(pins.len(), graph.num_tasks(), "pin table must be dense");
+            ws.pins.extend_from_slice(pins);
+            PlacementWs::Pinned
         }
-    }
-    impl Ord for Entry {
-        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-            self.0
-                .total_cmp(&other.0)
-                .then_with(|| self.1.cmp(&other.1))
-        }
-    }
+    };
+    list_schedule_with(&mut ws, graph, platform, comp, pw)
+}
 
+/// Workspace-backed list scheduler — the allocation-free core shared by
+/// every scheduler. Priorities are read from `ws.prio` (one per task) and,
+/// for [`PlacementWs::Pinned`], pins from `ws.pins`; callers fill those
+/// before the call. Everything else (ready heap, in-degree counters, busy
+/// lists, finish times) is workspace scratch re-initialised here, so a
+/// reused workspace produces bit-identical schedules with zero heap
+/// allocation beyond the returned [`Schedule`].
+pub fn list_schedule_with(
+    ws: &mut Workspace,
+    graph: &TaskGraph,
+    platform: &Platform,
+    comp: &[f64],
+    placement: PlacementWs,
+) -> Schedule {
     let v = graph.num_tasks();
-    assert_eq!(priority.len(), v);
-    let mut ctx = ListContext::new(graph, platform, comp);
-    let mut indeg: Vec<usize> = (0..v).map(|t| graph.in_degree(t)).collect();
-    let mut heap: BinaryHeap<(Entry, usize)> = (0..v)
-        .filter(|&t| indeg[t] == 0)
-        .map(|t| (Entry(priority[t], Reverse(t)), t))
-        .collect();
+    let Workspace { prio, pins, indeg, heap, busy, aft, proc_of, scheduled, .. } = ws;
+    assert_eq!(prio.len(), v, "ws.prio must hold one priority per task");
+    if placement == PlacementWs::Pinned {
+        assert_eq!(pins.len(), v, "ws.pins must hold one entry per task");
+    }
+    let mut ctx = ListContext::from_parts(graph, platform, comp, busy, aft, proc_of, scheduled);
+    indeg.clear();
+    indeg.extend((0..v).map(|t| graph.in_degree(t)));
+    heap.clear();
+    for t in 0..v {
+        if indeg[t] == 0 {
+            heap.push(ReadyEntry { prio: prio[t], task: t });
+        }
+    }
     let mut placed = 0usize;
-    while let Some((_, t)) = heap.pop() {
+    while let Some(e) = heap.pop() {
+        let t = e.task;
         let j = match placement {
-            Placement::MinEft => ctx.argmin_eft(t),
-            Placement::Pinned(map) => map.get(&t).copied().unwrap_or_else(|| ctx.argmin_eft(t)),
+            PlacementWs::MinEft => ctx.argmin_eft(t),
+            PlacementWs::Pinned => pins[t].unwrap_or_else(|| ctx.argmin_eft(t)),
         };
         ctx.place(t, j);
         placed += 1;
         for &(s, _) in graph.succs(t) {
             indeg[s] -= 1;
             if indeg[s] == 0 {
-                heap.push((Entry(priority[s], Reverse(s)), s));
+                heap.push(ReadyEntry { prio: prio[s], task: s });
             }
         }
     }
@@ -408,13 +500,27 @@ mod tests {
     fn pinned_placement_respected() {
         let (g, plat, comp) = tiny();
         let prio = vec![3.0, 2.0, 1.0, 0.0];
-        let mut pin = HashMap::new();
-        pin.insert(1usize, 1usize);
-        pin.insert(3usize, 1usize);
+        let pin = vec![None, Some(1usize), None, Some(1usize)];
         let s = list_schedule(&g, &plat, &comp, &prio, &Placement::Pinned(pin));
         s.validate(&g, &plat, &comp).unwrap();
         assert_eq!(s.assignments[1].proc, 1);
         assert_eq!(s.assignments[3].proc, 1);
+    }
+
+    #[test]
+    fn workspace_list_schedule_matches_wrapper_and_reuses() {
+        let (g, plat, comp) = tiny();
+        let prio = vec![3.0, 2.0, 1.0, 0.0];
+        let wrapped = list_schedule(&g, &plat, &comp, &prio, &Placement::MinEft);
+        let mut ws = Workspace::new();
+        ws.prio.extend_from_slice(&prio);
+        let a = list_schedule_with(&mut ws, &g, &plat, &comp, PlacementWs::MinEft);
+        // dirty reuse: refill priorities, schedule again
+        ws.prio.clear();
+        ws.prio.extend_from_slice(&prio);
+        let b = list_schedule_with(&mut ws, &g, &plat, &comp, PlacementWs::MinEft);
+        assert_eq!(wrapped.assignments, a.assignments);
+        assert_eq!(a.assignments, b.assignments);
     }
 
     #[test]

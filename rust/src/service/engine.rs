@@ -16,14 +16,20 @@
 //! bits, and the second `put` is an idempotent overwrite — accepted in
 //! exchange for never blocking the fast path. Batched entry points fan
 //! work across [`crate::util::pool`] workers so throughput scales with
-//! cores (see `benches/service_throughput.rs`).
+//! cores (see `benches/service_throughput.rs`). Cache misses borrow a
+//! long-lived [`crate::cp::workspace::Workspace`] from a pool whose idle
+//! list is capped at the worker count, so the algorithm core (CEFT DP,
+//! rank sweeps, the list scheduler's heap and busy lists) allocates
+//! nothing once warmed while retained scratch memory stays bounded — see
+//! EXPERIMENTS.md §Workspace for the benchmark methodology.
 //!
 //! Serving loops: [`serve_stdio`] speaks the protocol on stdin/stdout,
 //! greedily draining whatever lines are already buffered into one batch;
 //! [`Server`] accepts TCP connections (`std::net`) with one thread per
 //! connection. Both share one engine, hence one cache.
 
-use crate::cp::ceft::{find_critical_path, CriticalPath};
+use crate::cp::ceft::{find_critical_path_with, CriticalPath};
+use crate::cp::workspace::WorkspacePool;
 use crate::graph::generator::Instance;
 use crate::graph::io;
 use crate::graph::TaskGraph;
@@ -131,12 +137,23 @@ struct State {
 pub struct Engine {
     state: Mutex<State>,
     threads: usize,
+    /// Long-lived per-worker scratch arenas: a cache miss borrows one for
+    /// the CEFT DP / list-scheduler run instead of allocating fresh DP
+    /// tables, heaps and pin maps per request. The idle pool is capped at
+    /// the worker-thread count — TCP bursts beyond it (up to
+    /// `MAX_CONNECTIONS` handler threads) get transient workspaces that
+    /// are dropped on check-in rather than pinning their high-water-mark
+    /// capacity for the process lifetime — so warmed steady-state serving
+    /// does no heap allocation in the algorithm core while total retained
+    /// scratch stays bounded by `threads × high-water instance size`.
+    workspaces: WorkspacePool,
 }
 
 impl Engine {
     /// New engine with the given configuration.
     pub fn new(config: EngineConfig) -> Self {
         let cap = config.cache_capacity.max(1);
+        let threads = config.threads.max(1);
         Self {
             state: Mutex::new(State {
                 instances: LruCache::new(config.intern_capacity.max(1)),
@@ -144,7 +161,8 @@ impl Engine {
                 sched_cache: LruCache::new(cap),
                 counters: Counters::default(),
             }),
-            threads: config.threads.max(1),
+            threads,
+            workspaces: WorkspacePool::bounded(threads),
         }
     }
 
@@ -249,12 +267,15 @@ impl Engine {
         if let Some(hit) = self.state.lock().unwrap().cp_cache.get(&key) {
             return (hit.clone(), true);
         }
-        // compute outside the lock
-        let cp = Arc::new(find_critical_path(
-            inst.graph.as_ref(),
-            inst.platform.as_ref(),
-            inst.comp.as_slice(),
-        ));
+        // compute outside the lock, in a pooled per-worker workspace
+        let cp = Arc::new(self.workspaces.with(|ws| {
+            find_critical_path_with(
+                ws,
+                inst.graph.as_ref(),
+                inst.platform.as_ref(),
+                inst.comp.as_slice(),
+            )
+        }));
         self.state.lock().unwrap().cp_cache.put(key, cp.clone());
         (cp, false)
     }
@@ -270,11 +291,14 @@ impl Engine {
         if let Some(hit) = self.state.lock().unwrap().sched_cache.get(&key) {
             return (hit.clone(), true);
         }
-        let s = Arc::new(algorithm.schedule(
-            inst.graph.as_ref(),
-            inst.platform.as_ref(),
-            inst.comp.as_slice(),
-        ));
+        let s = Arc::new(self.workspaces.with(|ws| {
+            algorithm.run_with(
+                ws,
+                inst.graph.as_ref(),
+                inst.platform.as_ref(),
+                inst.comp.as_slice(),
+            )
+        }));
         self.state.lock().unwrap().sched_cache.put(key, s.clone());
         (s, false)
     }
@@ -432,6 +456,13 @@ impl Engine {
             ("schedule_requests", Json::Num(c.schedule_requests as f64)),
             ("instances", Json::Num(st.instances.len() as f64)),
             ("threads", Json::Num(self.threads as f64)),
+            (
+                "workspaces",
+                Json::obj(vec![
+                    ("created", Json::Num(self.workspaces.created() as f64)),
+                    ("idle", Json::Num(self.workspaces.idle() as f64)),
+                ]),
+            ),
             (
                 "cp_cache",
                 cache_obj(
@@ -640,6 +671,7 @@ fn handle_connection(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cp::ceft::find_critical_path;
     use crate::graph::generator::{generate, RggParams};
     use crate::platform::CostModel;
 

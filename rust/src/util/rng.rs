@@ -2,8 +2,9 @@
 //!
 //! Every experiment cell in the harness derives its own seed from the
 //! workload id and cell coordinates via [`SplitMix64`], then runs a
-//! [`Xoshiro256`] stream. This makes every number in EXPERIMENTS.md exactly
-//! reproducible, independent of thread scheduling.
+//! [`Xoshiro256`] stream. This makes every generated number exactly
+//! reproducible, independent of thread scheduling — the determinism
+//! contract recorded in EXPERIMENTS.md §Determinism at the repo root.
 
 /// SplitMix64 — used for seeding and for hashing experiment coordinates into
 /// independent seeds. Reference: Steele, Lea & Flood, "Fast splittable

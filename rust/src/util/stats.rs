@@ -105,18 +105,27 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile (0..=100) by linear interpolation on sorted copy.
+/// When taking several percentiles of one large sample, sort once and use
+/// [`percentile_sorted`] instead — this clones and sorts per call.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    percentile_sorted(&v, p)
+}
+
+/// p-th percentile of an **already ascending-sorted** slice (linear
+/// interpolation, same convention as [`percentile`]).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        v[lo]
+        sorted[lo]
     } else {
         let f = rank - lo as f64;
-        v[lo] * (1.0 - f) + v[hi] * f
+        sorted[lo] * (1.0 - f) + sorted[hi] * f
     }
 }
 
@@ -184,6 +193,16 @@ mod tests {
     fn percentile_interpolates() {
         let xs = [0.0, 10.0];
         assert!((percentile(&xs, 25.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_sorted_matches_percentile() {
+        let xs = [9.0, 1.0, 4.0, 7.0, 2.0];
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(percentile(&xs, p), percentile_sorted(&sorted, p));
+        }
     }
 
     #[test]

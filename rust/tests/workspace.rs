@@ -1,0 +1,240 @@
+//! Workspace-reuse equivalence tests: the tentpole guarantee of the
+//! allocation-free refactor is that results are **bit-identical** whether
+//! the algorithm core runs over a fresh workspace, a reused workspace, or
+//! the classic allocating signatures. CEFT's deterministic tie-breaking
+//! (lowest class, earliest parent, lowest sink id) is load-bearing for the
+//! service memo caches and the batch/online equivalence guarantee, so these
+//! properties compare full structures, not just lengths.
+
+use ceft::cp::ceft::{find_critical_path, find_critical_path_with};
+use ceft::cp::cpmin::{cp_min_cost, cp_min_cost_with};
+use ceft::cp::minexec::{min_exec_critical_path, min_exec_critical_path_with};
+use ceft::cp::workspace::{Workspace, WorkspacePool};
+use ceft::graph::generator::{generate, Instance, RggParams};
+use ceft::platform::{CostModel, Platform};
+use ceft::sched::{Algorithm, Schedule};
+use ceft::util::prop::{check_property, default_cases};
+use ceft::util::rng::Xoshiro256;
+
+/// Random instance generator spanning both cost models and platform comm
+/// heterogeneity (mirrors `properties.rs`).
+fn arb_instance(rng: &mut Xoshiro256) -> (Instance, Platform, u64) {
+    let n = rng.range_inclusive(2, 100);
+    let p = *rng.choose(&[1usize, 2, 3, 4, 8]);
+    let two_weight = rng.chance(0.4) && p >= 2;
+    let seed = rng.next_u64();
+    let plat = if two_weight {
+        Platform::two_weight(p, rng.uniform(0.1, 0.9), rng, 1.0, 0.0)
+    } else if rng.chance(0.5) {
+        Platform::uniform(p, rng.uniform(0.2, 5.0), rng.uniform(0.0, 2.0))
+    } else {
+        Platform::random_links(p, rng, 0.2, 5.0, 0.0, 2.0)
+    };
+    let model = if two_weight {
+        CostModel::two_weight_medium(0.5)
+    } else {
+        CostModel::Classic {
+            beta: rng.uniform(0.0, 1.0),
+        }
+    };
+    let params = RggParams {
+        n,
+        out_degree: rng.range_inclusive(1, 5),
+        ccr: *rng.choose(&[0.1, 1.0, 10.0]),
+        alpha: rng.uniform(0.1, 1.0),
+        beta_pct: rng.uniform(0.0, 100.0),
+        gamma: rng.uniform(0.0, 1.0),
+    };
+    let inst = generate(&params, &model, &plat, seed);
+    (inst, plat, seed)
+}
+
+fn schedules_equal(a: &Schedule, b: &Schedule) -> bool {
+    a.p == b.p && a.assignments == b.assignments
+}
+
+#[test]
+fn prop_reused_workspace_is_bit_identical_to_fresh() {
+    check_property(
+        "reused workspace == fresh allocations (CP + all schedules)",
+        default_cases(),
+        0xCEF7_0010,
+        |rng| arb_instance(rng),
+        |(inst, plat, seed)| {
+            let mut ws = Workspace::new();
+            // twice through ONE reused workspace …
+            let cp_a = find_critical_path_with(&mut ws, &inst.graph, plat, &inst.comp);
+            let cp_b = find_critical_path_with(&mut ws, &inst.graph, plat, &inst.comp);
+            // … once through fresh allocations (the classic signature)
+            let cp_fresh = find_critical_path(&inst.graph, plat, &inst.comp);
+            if cp_a != cp_fresh || cp_b != cp_fresh {
+                return Err(format!("critical path diverged (seed {seed})"));
+            }
+            for algo in Algorithm::ALL {
+                let a = algo.run_with(&mut ws, &inst.graph, plat, &inst.comp);
+                let b = algo.run_with(&mut ws, &inst.graph, plat, &inst.comp);
+                let fresh = algo.schedule(&inst.graph, plat, &inst.comp);
+                if !schedules_equal(&a, &fresh) || !schedules_equal(&b, &fresh) {
+                    return Err(format!("{} diverged (seed {seed})", algo.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cp_baselines_match_through_reused_workspace() {
+    check_property(
+        "cpmin/minexec workspace variants == allocating variants",
+        default_cases() / 2,
+        0xCEF7_0011,
+        |rng| arb_instance(rng),
+        |(inst, plat, seed)| {
+            let p = plat.num_classes();
+            let mut ws = Workspace::new();
+            for _ in 0..2 {
+                let a = cp_min_cost_with(&mut ws, &inst.graph, &inst.comp, p);
+                let b = cp_min_cost(&inst.graph, &inst.comp, p);
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("cp_min {a} != {b} (seed {seed})"));
+                }
+                for mean_comm in [false, true] {
+                    let me_a = min_exec_critical_path_with(
+                        &mut ws,
+                        &inst.graph,
+                        plat,
+                        &inst.comp,
+                        mean_comm,
+                    );
+                    let me_b = min_exec_critical_path(&inst.graph, plat, &inst.comp, mean_comm);
+                    if me_a != me_b {
+                        return Err(format!("minexec diverged (seed {seed})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Poisoning: a workspace dirtied by a *larger* instance (longer buffers,
+/// more processors, deeper heap) must not leak any state into a smaller
+/// instance scheduled right after.
+#[test]
+fn dirty_workspace_from_larger_instance_cannot_poison_smaller_one() {
+    let plat_big = Platform::uniform(8, 1.0, 0.1);
+    let big = generate(
+        &RggParams {
+            n: 400,
+            out_degree: 5,
+            ccr: 1.0,
+            alpha: 0.5,
+            beta_pct: 75.0,
+            gamma: 0.3,
+        },
+        &CostModel::Classic { beta: 0.75 },
+        &plat_big,
+        1,
+    );
+    let plat_small = Platform::uniform(2, 2.0, 0.0);
+    let small = generate(
+        &RggParams {
+            n: 12,
+            out_degree: 2,
+            ccr: 1.0,
+            alpha: 0.5,
+            beta_pct: 50.0,
+            gamma: 0.2,
+        },
+        &CostModel::Classic { beta: 0.5 },
+        &plat_small,
+        2,
+    );
+    let mut ws = Workspace::new();
+    // dirty every buffer with the big instance
+    let _ = find_critical_path_with(&mut ws, &big.graph, &plat_big, &big.comp);
+    for algo in Algorithm::ALL {
+        let _ = algo.run_with(&mut ws, &big.graph, &plat_big, &big.comp);
+    }
+    let cap_after_big = ws.capacity_hint();
+    // now the small instance, on the dirty workspace vs fresh
+    let cp_dirty = find_critical_path_with(&mut ws, &small.graph, &plat_small, &small.comp);
+    let cp_fresh = find_critical_path(&small.graph, &plat_small, &small.comp);
+    assert_eq!(cp_dirty, cp_fresh, "dirty workspace leaked into CEFT");
+    for algo in Algorithm::ALL {
+        let dirty = algo.run_with(&mut ws, &small.graph, &plat_small, &small.comp);
+        let fresh = algo.schedule(&small.graph, &plat_small, &small.comp);
+        assert!(
+            schedules_equal(&dirty, &fresh),
+            "dirty workspace leaked into {}",
+            algo.name()
+        );
+        dirty.validate(&small.graph, &plat_small, &small.comp).unwrap();
+    }
+    // and the high-water capacity was reused, not reallocated away
+    assert_eq!(
+        ws.capacity_hint(),
+        cap_after_big,
+        "small instance must not shrink or regrow the arena"
+    );
+}
+
+/// `Workspace::clear()` drops lengths but keeps capacity, and a cleared
+/// workspace behaves exactly like a dirty one (entry points re-initialise
+/// what they read either way).
+#[test]
+fn cleared_workspace_matches_dirty_and_keeps_capacity() {
+    let plat = Platform::uniform(4, 1.0, 0.0);
+    let inst = generate(
+        &RggParams {
+            n: 150,
+            out_degree: 3,
+            ccr: 1.0,
+            alpha: 0.5,
+            beta_pct: 50.0,
+            gamma: 0.2,
+        },
+        &CostModel::Classic { beta: 0.5 },
+        &plat,
+        3,
+    );
+    let mut ws = Workspace::new();
+    let first = Algorithm::CeftCpop.run_with(&mut ws, &inst.graph, &plat, &inst.comp);
+    let cap = ws.capacity_hint();
+    ws.clear();
+    assert_eq!(ws.capacity_hint(), cap, "clear must keep capacity");
+    let second = Algorithm::CeftCpop.run_with(&mut ws, &inst.graph, &plat, &inst.comp);
+    assert!(schedules_equal(&first, &second));
+}
+
+/// The engine-facing pool hands out warmed workspaces without growing once
+/// concurrency stabilises.
+#[test]
+fn workspace_pool_steady_state_does_not_grow() {
+    let plat = Platform::uniform(3, 1.0, 0.0);
+    let inst = generate(
+        &RggParams {
+            n: 60,
+            out_degree: 3,
+            ccr: 1.0,
+            alpha: 0.5,
+            beta_pct: 50.0,
+            gamma: 0.2,
+        },
+        &CostModel::Classic { beta: 0.5 },
+        &plat,
+        4,
+    );
+    let pool = WorkspacePool::new();
+    let mut results = Vec::new();
+    for _ in 0..32 {
+        results.push(pool.with(|ws| {
+            Algorithm::Heft
+                .run_with(ws, &inst.graph, &plat, &inst.comp)
+                .makespan()
+        }));
+    }
+    assert_eq!(pool.created(), 1, "sequential serving needs one workspace");
+    assert!(results.windows(2).all(|w| w[0] == w[1]));
+}
