@@ -43,9 +43,9 @@ fn main() {
                 &plat,
                 n as u64 * 31 + p as u64,
             );
-            let cpu = find_critical_path(&inst.graph, &plat, &inst.comp);
+            let cpu = find_critical_path(inst.bind(&plat));
             let accel = acc
-                .find_critical_path(&inst.graph, &plat, &inst.comp)
+                .find_critical_path(inst.bind(&plat))
                 .expect("accelerated CEFT");
             let rel = (cpu.length - accel.length).abs() / cpu.length;
             let paths_match = cpu.tasks() == accel.tasks();

@@ -38,7 +38,8 @@ fn main() {
         &platform,
         42,
     );
-    let (g, comp) = (&inst.graph, &inst.comp);
+    let iref = inst.bind(&platform);
+    let g = &inst.graph;
     println!(
         "instance: n={} e={} p={p} (two-weight 'high' heterogeneity)",
         g.num_tasks(),
@@ -46,11 +47,11 @@ fn main() {
     );
 
     // --- critical-path estimates -----------------------------------------
-    let ceft = find_critical_path(g, &platform, comp);
-    let (cpop_path, cpop_estimate) = cpop_critical_path(g, &platform, comp);
-    let cpop_realized = cpop_realized_cp_length(&cpop_path, comp, p);
-    let minexec = min_exec_critical_path(g, &platform, comp, false);
-    let lower = cp_min_cost(g, comp, p);
+    let ceft = find_critical_path(iref);
+    let (cpop_path, cpop_estimate) = cpop_critical_path(iref);
+    let cpop_realized = cpop_realized_cp_length(&cpop_path, &inst.comp);
+    let minexec = min_exec_critical_path(iref, false);
+    let lower = cp_min_cost(iref);
 
     println!("\n== critical-path estimates ==");
     println!("CP_MIN lower bound              : {lower:12.2}");
@@ -76,15 +77,15 @@ fn main() {
     println!("\n== schedules ==");
     let algos: [&dyn Scheduler; 3] = [&CeftCpop, &Cpop, &Heft];
     for a in algos {
-        let s = a.schedule(g, &platform, comp);
-        s.validate(g, &platform, comp).expect("valid");
+        let s = a.schedule(iref);
+        s.validate(iref).expect("valid");
         println!(
             "{:<10} makespan {:>12.2}  speedup {:>6.3}  slr {:>7.3}  slack {:>10.2}",
             a.name(),
             s.makespan(),
-            metrics::speedup(comp, p, s.makespan()),
-            metrics::slr(g, comp, p, s.makespan()),
-            metrics::slack(g, &platform, comp, &s),
+            metrics::speedup(&inst.comp, s.makespan()),
+            metrics::slr(iref, s.makespan()),
+            metrics::slack(iref, &s),
         );
     }
 }

@@ -7,6 +7,7 @@ use ceft::cp::ceft::find_critical_path;
 use ceft::cp::ranks::cpop_critical_path;
 use ceft::graph::TaskGraph;
 use ceft::metrics;
+use ceft::model::{CostMatrix, InstanceRef};
 use ceft::platform::Platform;
 use ceft::sched::{ceft_cpop::CeftCpop, cpop::Cpop, heft::Heft, Scheduler};
 
@@ -28,32 +29,33 @@ fn main() {
     // Two processor classes ("CPU", "GPU"), unit bandwidth, no startup cost.
     let platform = Platform::uniform(2, 1.0, 0.0);
 
-    // Execution costs (v x P, row-major): the array task is 10x faster on
-    // the GPU class, the scalar task is hopeless there — the §1 motivating
-    // shape.
+    // Execution costs (v x P, task-major SoA): the array task is 10x faster
+    // on the GPU class, the scalar task is hopeless there — the §1
+    // motivating shape.
     #[rustfmt::skip]
-    let comp = vec![
+    let comp = CostMatrix::new(2, vec![
         //  CPU    GPU
         5.0,   6.0,   // 0 preprocess
         80.0,  8.0,   // 1 array kernel: GPU 10x
         12.0,  90.0,  // 2 scalar kernel: CPU only
         6.0,   5.0,   // 3 reduce
         4.0,   4.0,   // 4 postprocess
-    ];
+    ]);
+    let inst = InstanceRef::new(&graph, &platform, &comp);
 
     println!("== CEFT critical path (paper Algorithm 1) ==");
-    let cp = find_critical_path(&graph, &platform, &comp);
+    let cp = find_critical_path(inst);
     println!("length = {:.2}", cp.length);
     for step in &cp.path {
         println!(
             "  task {} -> class {}  (exec {:.1})",
             step.task,
             step.class,
-            comp[step.task * 2 + step.class]
+            comp.get(step.task, step.class)
         );
     }
 
-    let (cpop_cp, cpop_len) = cpop_critical_path(&graph, &platform, &comp);
+    let (cpop_cp, cpop_len) = cpop_critical_path(inst);
     println!("\n== CPOP mean-value critical path ==");
     println!("tasks {:?}, estimated length {:.2}", cpop_cp, cpop_len);
     println!("(note how averaging distorts the path cost when tasks are specialised)");
@@ -61,19 +63,19 @@ fn main() {
     println!("\n== Schedules ==");
     let algos: [&dyn Scheduler; 3] = [&CeftCpop, &Cpop, &Heft];
     for a in algos {
-        let s = a.schedule(&graph, &platform, &comp);
-        s.validate(&graph, &platform, &comp).expect("valid schedule");
+        let s = a.schedule(inst);
+        s.validate(inst).expect("valid schedule");
         println!(
             "{:<10} makespan {:>7.2}  speedup {:.3}  slr {:.3}",
             a.name(),
             s.makespan(),
-            metrics::speedup(&comp, 2, s.makespan()),
-            metrics::slr(&graph, &comp, 2, s.makespan()),
+            metrics::speedup(&comp, s.makespan()),
+            metrics::slr(inst, s.makespan()),
         );
     }
 
     // Gantt view of the paper's scheduler
-    let s = CeftCpop.schedule(&graph, &platform, &comp);
+    let s = CeftCpop.schedule(inst);
     println!("\n== CEFT-CPOP Gantt (P0 = CPU class, P1 = GPU class) ==");
     print!("{}", ceft::sched::gantt::render(&s, 70));
 }

@@ -53,12 +53,12 @@ fn main() {
                     &platform,
                     seed,
                 );
+                let iref = inst.bind(&platform);
                 for (i, a) in algos.iter().enumerate() {
-                    let s = a.schedule(&inst.graph, &platform, &inst.comp);
-                    s.validate(&inst.graph, &platform, &inst.comp).unwrap();
-                    slrs[i] +=
-                        metrics::slr(&inst.graph, &inst.comp, p, s.makespan()) / reps as f64;
-                    sps[i] += metrics::speedup(&inst.comp, p, s.makespan()) / reps as f64;
+                    let s = a.schedule(iref);
+                    s.validate(iref).unwrap();
+                    slrs[i] += metrics::slr(iref, s.makespan()) / reps as f64;
+                    sps[i] += metrics::speedup(&inst.comp, s.makespan()) / reps as f64;
                 }
             }
             t.push_row(vec![

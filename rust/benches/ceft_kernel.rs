@@ -1,0 +1,64 @@
+//! Bench: the blocked min-plus CEFT kernel vs the scalar reference DP.
+//!
+//! Both paths fill the same workspace table over the same instance, so the
+//! per-case "Melem/s" column (relaxed `(j, l)` class-pair cells per second
+//! = `e · P²` per iteration) is directly comparable between `kernel/*` and
+//! `scalar/*` rows. Protocol and block-size rationale: EXPERIMENTS.md
+//! §Min-plus kernel. `CEFT_BENCH_FAST=1` is the CI smoke mode (`ci.sh`).
+
+use ceft::cp::ceft::{
+    ceft_table_into, ceft_table_rev_into, ceft_table_rev_scalar_into, ceft_table_scalar_into,
+};
+use ceft::cp::workspace::Workspace;
+use ceft::graph::generator::{generate, RggParams};
+use ceft::platform::{CostModel, Platform};
+use ceft::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("ceft_kernel");
+    // class counts span the panel-size regimes: tiny rows (P=2), the
+    // paper's common case (P=8), and panel footprints past L1-resident
+    // rows (P=64)
+    for &(n, p) in &[
+        (512usize, 2usize),
+        (1024, 8),
+        (4096, 8),
+        (1024, 16),
+        (512, 64),
+    ] {
+        let plat = Platform::uniform(p, 1.0, 0.0);
+        let inst = generate(
+            &RggParams {
+                n,
+                out_degree: 4,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 50.0,
+                gamma: 0.25,
+            },
+            &CostModel::Classic { beta: 0.5 },
+            &plat,
+            42,
+        );
+        let iref = inst.bind(&plat);
+        let cells = inst.graph.num_edges() as u64 * (p * p) as u64;
+        let mut ws = Workspace::new();
+        b.case_with_elements(&format!("kernel/n{n}_p{p}"), Some(cells), || {
+            ceft_table_into(&mut ws, iref);
+            black_box(ws.table.last().copied());
+        });
+        b.case_with_elements(&format!("scalar/n{n}_p{p}"), Some(cells), || {
+            ceft_table_scalar_into(&mut ws, iref);
+            black_box(ws.table.last().copied());
+        });
+        b.case_with_elements(&format!("kernel_rev/n{n}_p{p}"), Some(cells), || {
+            ceft_table_rev_into(&mut ws, iref);
+            black_box(ws.table.last().copied());
+        });
+        b.case_with_elements(&format!("scalar_rev/n{n}_p{p}"), Some(cells), || {
+            ceft_table_rev_scalar_into(&mut ws, iref);
+            black_box(ws.table.last().copied());
+        });
+    }
+    b.save_csv();
+}

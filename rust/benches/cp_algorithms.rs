@@ -28,19 +28,20 @@ fn main() {
             &plat,
             42,
         );
+        let iref = inst.bind(&plat);
         let e = inst.graph.num_edges() as u64;
         let cells = e * (p * p) as u64;
         b.case_with_elements(&format!("ceft/n{n}_p{p}"), Some(cells), || {
-            black_box(find_critical_path(&inst.graph, &plat, &inst.comp));
+            black_box(find_critical_path(iref));
         });
         b.case(&format!("cpop_cp/n{n}_p{p}"), || {
-            black_box(cpop_critical_path(&inst.graph, &plat, &inst.comp));
+            black_box(cpop_critical_path(iref));
         });
         b.case(&format!("minexec/n{n}_p{p}"), || {
-            black_box(min_exec_critical_path(&inst.graph, &plat, &inst.comp, false));
+            black_box(min_exec_critical_path(iref, false));
         });
         b.case(&format!("cp_min/n{n}_p{p}"), || {
-            black_box(cp_min_cost(&inst.graph, &inst.comp, p));
+            black_box(cp_min_cost(iref));
         });
     }
     b.save_csv();

@@ -61,10 +61,10 @@ fn main() {
         3,
     );
     b.case("accelerated_ceft/n512_p8", || {
-        black_box(acc.find_critical_path(&inst.graph, &plat, &inst.comp).unwrap());
+        black_box(acc.find_critical_path(inst.bind(&plat)).unwrap());
     });
     b.case("rust_ceft/n512_p8", || {
-        black_box(ceft::cp::ceft::find_critical_path(&inst.graph, &plat, &inst.comp));
+        black_box(ceft::cp::ceft::find_critical_path(inst.bind(&plat)));
     });
     b.save_csv();
 }

@@ -30,6 +30,7 @@ fn main() {
             &plat,
             7,
         );
+        let iref = inst.bind(&plat);
         let algos: [&dyn Scheduler; 6] = [
             &Cpop,
             &Heft,
@@ -43,7 +44,7 @@ fn main() {
                 &format!("{}/n{n}_p{p}", a.name()),
                 Some(n as u64),
                 || {
-                    black_box(a.schedule(&inst.graph, &plat, &inst.comp));
+                    black_box(a.schedule(iref));
                 },
             );
         }

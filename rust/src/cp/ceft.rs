@@ -20,6 +20,28 @@
 //! bounds the extra space; backpointers achieve the same effect more
 //! simply).
 //!
+//! ## The blocked min-plus kernel
+//!
+//! The hot inner loop — `min_l CEFT(k, l) + comm(l, j)` for every
+//! destination class `j` of every edge — is a dense **min-plus
+//! matrix-vector product** between the parent's CEFT row and a `P × P`
+//! communication panel. [`ceft_table_into`] runs it as such: two
+//! destination-major panels (`startup[l]` with a `0` diagonal, and
+//! `bandwidth[l → j]` with a `+inf` diagonal) are precomputed into the
+//! [`Workspace`] once per DP entry, turning the inner loop into a
+//! branch-free contiguous scan `krow[l] + (S[j][l] + data / B[j][l])` that
+//! the compiler can vectorise; destination classes are tiled in
+//! `KERNEL_BLOCK`-sized blocks with the task's edges iterated inside
+//! each block, so one parent-row load serves a whole block and the
+//! block's panel rows stay cache-resident across all of the task's
+//! edges. The `+inf` diagonal makes `data / bw`
+//! contribute exactly `+0.0` for co-located classes, so every cell is
+//! **bit-identical** to the scalar recurrence over
+//! [`Platform::comm_cost`] — including tie-breaking — which the
+//! `rust/tests/properties.rs` bit-identity properties and the
+//! [`ceft_table_scalar_into`] reference path enforce. See
+//! EXPERIMENTS.md §Min-plus kernel for layout and block-size rationale.
+//!
 //! Tie-breaking is deterministic: the lowest class id wins `min`s, the
 //! earliest-visited parent wins strict-`>` `max`es, and the lowest task id
 //! wins the final sink selection. This makes the rust and PJRT backends,
@@ -27,7 +49,21 @@
 
 use crate::cp::workspace::Workspace;
 use crate::graph::TaskGraph;
-use crate::platform::{Costs, Platform};
+use crate::model::InstanceRef;
+use crate::platform::Platform;
+
+/// Destination classes are tiled in blocks of this many rows, and the
+/// task's incoming edges iterate *inside* each block: one load of the
+/// parent's CEFT row then serves a whole block of destination rows
+/// (instead of being re-fetched once per `j`), while the block's
+/// `16 × KERNEL_BLOCK × P` bytes of panel rows stay L1-resident across
+/// every edge of the task (resident up to `P = 256` at the default 8 —
+/// far past the paper's `P ≤ 64` sweeps). Fold accumulators for a block
+/// live in fixed-size stack arrays, which is what bounds the block size.
+/// Purely a scheduling choice: each `(edge, j, l)` cell is computed
+/// exactly once with the same comparison sequence per `j`, so results
+/// are independent of the block size.
+const KERNEL_BLOCK: usize = 8;
 
 /// One step of a critical path: a task and the processor class the optimal
 /// partial assignment maps it to.
@@ -119,62 +155,177 @@ impl CeftTable {
     }
 }
 
-/// Compute the CEFT dynamic-programming table for all `(task, class)` cells.
-///
-/// `comp` is the dense `v × P` execution-cost matrix. Convenience wrapper
-/// over [`ceft_table_into`] that allocates a one-shot [`Workspace`] and
-/// moves the filled buffers out as an owned [`CeftTable`].
-pub fn ceft_table(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> CeftTable {
+/// Compute the CEFT dynamic-programming table for all `(task, class)`
+/// cells. Convenience wrapper over [`ceft_table_into`] that allocates a
+/// one-shot [`Workspace`] and moves the filled buffers out as an owned
+/// [`CeftTable`].
+pub fn ceft_table(inst: InstanceRef) -> CeftTable {
     let mut ws = Workspace::new();
-    ceft_table_into(&mut ws, graph, platform, comp);
+    ceft_table_into(&mut ws, inst);
     CeftTable {
-        p: platform.num_classes(),
+        p: inst.p(),
         table: std::mem::take(&mut ws.table),
         backptr: std::mem::take(&mut ws.backptr),
     }
 }
 
-/// Fill `ws.table` / `ws.backptr` with the CEFT DP over `graph` — the
-/// allocation-free core of Algorithm 1. Buffers are sized at entry (no
-/// allocation once the workspace has served an instance this large).
-pub fn ceft_table_into(ws: &mut Workspace, graph: &TaskGraph, platform: &Platform, comp: &[f64]) {
-    ceft_dp_into(ws, graph, platform, comp, false)
+/// Reference-path variant of [`ceft_table`] over the scalar recurrence
+/// ([`ceft_table_scalar_into`]); bit-identical to the kernel path.
+pub fn ceft_table_scalar(inst: InstanceRef) -> CeftTable {
+    let mut ws = Workspace::new();
+    ceft_table_scalar_into(&mut ws, inst);
+    CeftTable {
+        p: inst.p(),
+        table: std::mem::take(&mut ws.table),
+        backptr: std::mem::take(&mut ws.backptr),
+    }
+}
+
+/// Fill `ws.table` / `ws.backptr` with the CEFT DP over the instance — the
+/// allocation-free core of Algorithm 1, running the blocked min-plus
+/// kernel (see the module docs). Buffers are sized at entry (no allocation
+/// once the workspace has served an instance this large).
+pub fn ceft_table_into(ws: &mut Workspace, inst: InstanceRef) {
+    ceft_dp_kernel_into(ws, inst, false)
 }
 
 /// The CEFT DP of the **transposed** DAG, computed without materialising
 /// the transpose: sweep reverse topological order and treat successors as
 /// parents. Communication is charged in the transposed direction
 /// (`comm_cost(succ_class, task_class, data)`), exactly as
-/// `ceft_table(&graph.transpose(), …)` would — bit-identical, including
+/// `ceft_table(transposed instance)` would — bit-identical, including
 /// tie-breaking, because predecessor CSR order of the transpose equals
 /// successor CSR order of the original (both group edges in input order).
 /// Used by the CEFT upward rank (§8.2) to avoid rebuilding a graph per
 /// call.
-pub fn ceft_table_rev_into(
-    ws: &mut Workspace,
-    graph: &TaskGraph,
-    platform: &Platform,
-    comp: &[f64],
-) {
-    ceft_dp_into(ws, graph, platform, comp, true)
+pub fn ceft_table_rev_into(ws: &mut Workspace, inst: InstanceRef) {
+    ceft_dp_kernel_into(ws, inst, true)
 }
 
-/// The one DP implementation behind both orientations. `rev` selects the
-/// sweep (forward topo over `preds` vs reverse topo over `succs`); every
-/// comparison — `NEG_INFINITY` init, strict `>` over parents, strict `<`
-/// with lowest-`l` tie-break over classes — is shared, so the two tables
-/// cannot drift apart.
-fn ceft_dp_into(
-    ws: &mut Workspace,
-    graph: &TaskGraph,
-    platform: &Platform,
-    comp: &[f64],
-    rev: bool,
-) {
-    let v = graph.num_tasks();
+/// Scalar reference implementation of [`ceft_table_into`]: the plain
+/// nested-loop recurrence over [`Platform::comm_cost`], kept as the
+/// ground truth the blocked kernel is proven bit-identical against
+/// (property tests in `rust/tests/properties.rs`) and as the baseline of
+/// `benches/ceft_kernel.rs`.
+pub fn ceft_table_scalar_into(ws: &mut Workspace, inst: InstanceRef) {
+    ceft_dp_scalar_into(ws, inst, false)
+}
+
+/// Scalar reference implementation of [`ceft_table_rev_into`].
+pub fn ceft_table_rev_scalar_into(ws: &mut Workspace, inst: InstanceRef) {
+    ceft_dp_scalar_into(ws, inst, true)
+}
+
+/// Precompute the destination-major `P × P` communication panels into the
+/// workspace: for destination class `j` and sender class `l`,
+/// `panel_startup[j*P + l] = startup(l)` and
+/// `panel_bw[j*P + l] = bandwidth(l → j)`, with a `0` / `+inf` diagonal so
+/// the kernel's `S + data / B` evaluates to exactly `+0.0` for co-located
+/// classes — the same bits [`Platform::comm_cost`] produces.
+fn fill_comm_panels(platform: &Platform, sp: &mut Vec<f64>, bp: &mut Vec<f64>) {
     let p = platform.num_classes();
-    assert_eq!(comp.len(), v * p, "comp must be v x P");
-    let costs = Costs { comp, p };
+    sp.clear();
+    sp.resize(p * p, 0.0);
+    bp.clear();
+    bp.resize(p * p, 0.0);
+    for j in 0..p {
+        let srow = &mut sp[j * p..(j + 1) * p];
+        let brow = &mut bp[j * p..(j + 1) * p];
+        for l in 0..p {
+            if l == j {
+                srow[l] = 0.0;
+                brow[l] = f64::INFINITY;
+            } else {
+                srow[l] = platform.startup(l);
+                brow[l] = platform.bandwidth(l, j);
+            }
+        }
+    }
+}
+
+/// The kernel DP behind both orientations: panels once per entry, then per
+/// task a tiled min-plus sweep — destination classes in
+/// [`KERNEL_BLOCK`]-sized blocks, the task's incoming edges iterated
+/// *inside* each block so one parent-row load serves the whole block and
+/// the block's panel rows stay resident across every edge. Per destination
+/// class the comparison sequence (strict `<` lowest-`l` argmin per edge,
+/// strict-`>` earliest-parent max-fold in CSR order) is identical to the
+/// scalar path, so values *and* backpointers match bit for bit.
+fn ceft_dp_kernel_into(ws: &mut Workspace, inst: InstanceRef, rev: bool) {
+    let graph = inst.graph;
+    let costs = inst.costs;
+    let v = inst.n();
+    let p = inst.p();
+    let Workspace {
+        table,
+        backptr,
+        panel_startup,
+        panel_bw,
+        ..
+    } = ws;
+    fill_comm_panels(inst.platform, panel_startup, panel_bw);
+    table.clear();
+    table.resize(v * p, 0.0);
+    backptr.clear();
+    backptr.resize(v * p, (usize::MAX, usize::MAX));
+
+    let topo = graph.topo_order();
+    for i in 0..topo.len() {
+        let t = if rev { topo[topo.len() - 1 - i] } else { topo[i] };
+        // parents of `t` in the swept orientation
+        let preds = if rev { graph.succs(t) } else { graph.preds(t) };
+        if preds.is_empty() {
+            table[t * p..(t + 1) * p].copy_from_slice(costs.row(t));
+            continue;
+        }
+        let crow = costs.row(t);
+        let mut j0 = 0;
+        while j0 < p {
+            let j1 = (j0 + KERNEL_BLOCK).min(p);
+            // per-block max-fold accumulators on the stack
+            let mut best_total = [f64::NEG_INFINITY; KERNEL_BLOCK];
+            let mut best_ptr = [(usize::MAX, usize::MAX); KERNEL_BLOCK];
+            for &(k, data) in preds {
+                let krow = &table[k * p..(k + 1) * p];
+                for (bi, j) in (j0..j1).enumerate() {
+                    // min over sender classes l: branch-free contiguous scan
+                    let srow = &panel_startup[j * p..j * p + p];
+                    let brow = &panel_bw[j * p..j * p + p];
+                    let mut best = f64::INFINITY;
+                    let mut best_l = 0usize;
+                    for l in 0..p {
+                        let cand = krow[l] + (srow[l] + data / brow[l]);
+                        if cand < best {
+                            best = cand;
+                            best_l = l;
+                        }
+                    }
+                    if best > best_total[bi] {
+                        best_total[bi] = best;
+                        best_ptr[bi] = (k, best_l);
+                    }
+                }
+            }
+            for (bi, j) in (j0..j1).enumerate() {
+                table[t * p + j] = best_total[bi] + crow[j];
+                backptr[t * p + j] = best_ptr[bi];
+            }
+            j0 = j1;
+        }
+    }
+}
+
+/// The scalar DP behind both orientations — the pre-kernel reference.
+/// `rev` selects the sweep (forward topo over `preds` vs reverse topo over
+/// `succs`); every comparison — `NEG_INFINITY` init, strict `>` over
+/// parents, strict `<` with lowest-`l` tie-break over classes — matches
+/// the kernel path exactly.
+fn ceft_dp_scalar_into(ws: &mut Workspace, inst: InstanceRef, rev: bool) {
+    let graph = inst.graph;
+    let platform = inst.platform;
+    let costs = inst.costs;
+    let v = inst.n();
+    let p = inst.p();
     let table = &mut ws.table;
     let backptr = &mut ws.backptr;
     table.clear();
@@ -225,23 +376,31 @@ fn ceft_dp_into(
 /// the minimised cost), and reconstruct the path with its assignment.
 /// Convenience wrapper over [`find_critical_path_with`] with a one-shot
 /// workspace.
-pub fn find_critical_path(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> CriticalPath {
-    find_critical_path_with(&mut Workspace::new(), graph, platform, comp)
+pub fn find_critical_path(inst: InstanceRef) -> CriticalPath {
+    find_critical_path_with(&mut Workspace::new(), inst)
 }
 
-/// Workspace-backed Algorithm 1 — the hot path of the online service. All
-/// scratch (DP table, backpointers, backtracking stack) lives in `ws`; the
-/// only allocation is the returned path itself, sized exactly.
-pub fn find_critical_path_with(
-    ws: &mut Workspace,
+/// Deprecated raw-triple shim at the service/JSON boundary: copies `comp`
+/// into a fresh [`crate::model::CostMatrix`] and forwards to
+/// [`find_critical_path`].
+#[deprecated(note = "build a CostMatrix + InstanceRef and call find_critical_path")]
+pub fn find_critical_path_raw(
     graph: &TaskGraph,
     platform: &Platform,
     comp: &[f64],
 ) -> CriticalPath {
-    ceft_table_into(ws, graph, platform, comp);
-    let p = platform.num_classes();
+    let costs = crate::model::cost_matrix_from_raw(platform.num_classes(), comp);
+    find_critical_path(InstanceRef::new(graph, platform, &costs))
+}
+
+/// Workspace-backed Algorithm 1 — the hot path of the online service. All
+/// scratch (DP table, backpointers, comm panels, backtracking stack) lives
+/// in `ws`; the only allocation is the returned path itself, sized exactly.
+pub fn find_critical_path_with(ws: &mut Workspace, inst: InstanceRef) -> CriticalPath {
+    ceft_table_into(ws, inst);
+    let p = inst.p();
     let Workspace { table, backptr, steps, .. } = ws;
-    critical_path_from_parts(graph, p, table, backptr, steps)
+    critical_path_from_parts(inst.graph, p, table, backptr, steps)
 }
 
 /// Sink selection + backtracking over borrowed DP buffers — the single
@@ -306,16 +465,13 @@ pub fn critical_path_from_table(graph: &TaskGraph, t: &CeftTable) -> CriticalPat
 /// by edges) under its *optimal* assignment — a restricted CEFT DP over a
 /// chain. Used in tests and to score other algorithms' paths under the
 /// paper's Definition 7 measure.
-pub fn chain_optimal_length(
-    graph: &TaskGraph,
-    platform: &Platform,
-    comp: &[f64],
-    tasks: &[usize],
-) -> f64 {
-    let p = platform.num_classes();
-    let costs = Costs { comp, p };
+pub fn chain_optimal_length(inst: InstanceRef, tasks: &[usize]) -> f64 {
+    let graph = inst.graph;
+    let platform = inst.platform;
+    let costs = inst.costs;
+    let p = inst.p();
     assert!(!tasks.is_empty());
-    let mut cur: Vec<f64> = (0..p).map(|j| costs.get(tasks[0], j)).collect();
+    let mut cur: Vec<f64> = costs.row(tasks[0]).to_vec();
     for w in tasks.windows(2) {
         let (a, b) = (w[0], w[1]);
         let data = graph
@@ -342,6 +498,7 @@ pub fn chain_optimal_length(
 mod tests {
     use super::*;
     use crate::graph::TaskGraph;
+    use crate::model::CostMatrix;
     use crate::platform::Platform;
 
     /// Single chain 0 -> 1 -> 2: CEFT must pick per-task best classes when
@@ -351,12 +508,12 @@ mod tests {
         let g = TaskGraph::from_edges(3, &[(0, 1, 100.0), (1, 2, 100.0)]);
         let plat = Platform::uniform(2, 1e12, 0.0); // effectively free comm
         #[rustfmt::skip]
-        let comp = vec![
+        let comp = CostMatrix::new(2, vec![
             1.0, 10.0, // task 0 best on class 0
             10.0, 2.0, // task 1 best on class 1
             3.0, 10.0, // task 2 best on class 0
-        ];
-        let cp = find_critical_path(&g, &plat, &comp);
+        ]);
+        let cp = find_critical_path(InstanceRef::new(&g, &plat, &comp));
         assert!((cp.length - 6.0).abs() < 1e-6, "len={}", cp.length);
         assert_eq!(
             cp.path,
@@ -373,12 +530,12 @@ mod tests {
         let g = TaskGraph::from_edges(3, &[(0, 1, 1000.0), (1, 2, 1000.0)]);
         let plat = Platform::uniform(2, 1.0, 0.0); // comm cost = data = 1000
         #[rustfmt::skip]
-        let comp = vec![
+        let comp = CostMatrix::new(2, vec![
             1.0, 10.0,
             10.0, 2.0,
             3.0, 10.0,
-        ];
-        let cp = find_critical_path(&g, &plat, &comp);
+        ]);
+        let cp = find_critical_path(InstanceRef::new(&g, &plat, &comp));
         // staying on class 0: 1 + 10 + 3 = 14; class 1: 10+2+10=22; mixing
         // costs 1000 per hop. CEFT must stay on class 0.
         assert!((cp.length - 14.0).abs() < 1e-6, "len={}", cp.length);
@@ -396,14 +553,14 @@ mod tests {
         );
         let plat = Platform::uniform(2, 1.0, 0.0);
         #[rustfmt::skip]
-        let comp = vec![
+        let comp = CostMatrix::new(2, vec![
             // cpu,  gpu
             5.0,   5.0,   // 0: neutral
             100.0, 10.0,  // 1: array task, GPU 10x faster
             12.0,  120.0, // 2: scalar task, GPU hopeless
             5.0,   5.0,   // 3: neutral
-        ];
-        let cp = find_critical_path(&g, &plat, &comp);
+        ]);
+        let cp = find_critical_path(InstanceRef::new(&g, &plat, &comp));
         // optimal: through task 2 on cpu: 5+~1+12+~1+5 = 24ish vs through
         // task 1 on gpu: 5+1+10+1+5 = 22ish -> CP goes through task 2.
         assert!(cp.tasks().contains(&2), "path={:?}", cp.path);
@@ -418,12 +575,12 @@ mod tests {
         let g = TaskGraph::from_edges(3, &[(0, 1, 0.0), (0, 2, 0.0)]);
         let plat = Platform::uniform(2, 1.0, 0.0);
         #[rustfmt::skip]
-        let comp = vec![
+        let comp = CostMatrix::new(2, vec![
             1.0, 1.0,
             2.0, 2.0,
             50.0, 40.0,
-        ];
-        let cp = find_critical_path(&g, &plat, &comp);
+        ]);
+        let cp = find_critical_path(InstanceRef::new(&g, &plat, &comp));
         assert_eq!(cp.path.last().unwrap().task, 2);
         assert!((cp.length - 41.0).abs() < 1e-9);
         assert_eq!(cp.path.last().unwrap().class, 1);
@@ -445,9 +602,10 @@ mod tests {
         );
         let mut rng = crate::util::rng::Xoshiro256::new(5);
         for _ in 0..50 {
-            let comp: Vec<f64> = (0..8).map(|_| rng.uniform(1.0, 20.0)).collect();
+            let comp =
+                CostMatrix::new(2, (0..8).map(|_| rng.uniform(1.0, 20.0)).collect());
             let plat = Platform::uniform(2, rng.uniform(0.5, 2.0), rng.uniform(0.0, 1.0));
-            let cp = find_critical_path(&g, &plat, &comp);
+            let cp = find_critical_path(InstanceRef::new(&g, &plat, &comp));
             // brute force path cost with the sink's class fixed to `jfix`
             // (None = free)
             let brute = |path: &[usize], jfix: Option<usize>| {
@@ -472,7 +630,7 @@ mod tests {
                                 .1;
                             t += plat.comm_cost(classes[i - 1], classes[i], data);
                         }
-                        t += comp[task * 2 + classes[i]];
+                        t += comp.get(task, classes[i]);
                     }
                     best = best.min(t);
                 }
@@ -522,7 +680,8 @@ mod tests {
             17,
         );
         let plat = Platform::uniform(4, 1.0, 0.0);
-        let cp = find_critical_path(&g.graph, &plat, &g.comp);
+        let inst = g.bind(&plat);
+        let cp = find_critical_path(inst);
         // connected: consecutive tasks joined by an edge
         for w in cp.path.windows(2) {
             assert!(
@@ -536,13 +695,46 @@ mod tests {
         assert_eq!(g.graph.in_degree(cp.path[0].task), 0);
         assert_eq!(g.graph.out_degree(cp.path.last().unwrap().task), 0);
         // the chain evaluated under its optimal assignment equals length
-        let chain_len =
-            chain_optimal_length(&g.graph, &plat, &g.comp, &cp.tasks());
+        let chain_len = chain_optimal_length(inst, &cp.tasks());
         assert!(
             chain_len <= cp.length + 1e-9,
             "chain opt {chain_len} > ceft {}",
             cp.length
         );
+    }
+
+    #[test]
+    fn kernel_tables_bit_identical_to_scalar_reference() {
+        // The blocked min-plus kernel must reproduce the scalar recurrence
+        // bit for bit — values AND backpointers, both orientations — on a
+        // platform with asymmetric links and nonzero startup (the case
+        // where the panel diagonal trick could plausibly diverge).
+        let inst = crate::graph::generator::generate(
+            &crate::graph::generator::RggParams {
+                n: 160,
+                out_degree: 4,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 75.0,
+                gamma: 0.3,
+            },
+            &crate::platform::CostModel::Classic { beta: 0.75 },
+            &Platform::uniform(5, 1.0, 0.0),
+            31,
+        );
+        let mut rng = crate::util::rng::Xoshiro256::new(14);
+        let plat = Platform::random_links(5, &mut rng, 0.3, 3.0, 0.0, 0.7);
+        let iref = inst.bind(&plat);
+        let mut kw = Workspace::new();
+        let mut sw = Workspace::new();
+        ceft_table_into(&mut kw, iref);
+        ceft_table_scalar_into(&mut sw, iref);
+        assert_eq!(kw.table, sw.table);
+        assert_eq!(kw.backptr, sw.backptr);
+        ceft_table_rev_into(&mut kw, iref);
+        ceft_table_rev_scalar_into(&mut sw, iref);
+        assert_eq!(kw.table, sw.table);
+        assert_eq!(kw.backptr, sw.backptr);
     }
 
     #[test]
@@ -566,9 +758,11 @@ mod tests {
         let mut rng = crate::util::rng::Xoshiro256::new(92);
         // asymmetric links to exercise the comm direction too
         let plat = Platform::random_links(4, &mut rng, 0.3, 3.0, 0.0, 0.5);
-        let via_transpose = ceft_table(&inst.graph.transpose(), &plat, &inst.comp);
+        let transposed = inst.graph.transpose();
+        let via_transpose =
+            ceft_table(InstanceRef::new(&transposed, &plat, &inst.comp));
         let mut ws = crate::cp::workspace::Workspace::new();
-        ceft_table_rev_into(&mut ws, &inst.graph, &plat, &inst.comp);
+        ceft_table_rev_into(&mut ws, inst.bind(&plat));
         assert_eq!(ws.table, via_transpose.table);
         assert_eq!(ws.backptr, via_transpose.backptr);
     }
@@ -589,13 +783,14 @@ mod tests {
             7,
         );
         let plat = Platform::uniform(3, 1.0, 0.0);
+        let iref = inst.bind(&plat);
         let owned = {
-            let t = ceft_table(&inst.graph, &plat, &inst.comp);
+            let t = ceft_table(iref);
             critical_path_from_table(&inst.graph, &t)
         };
         let mut ws = crate::cp::workspace::Workspace::new();
-        let a = find_critical_path_with(&mut ws, &inst.graph, &plat, &inst.comp);
-        let b = find_critical_path_with(&mut ws, &inst.graph, &plat, &inst.comp);
+        let a = find_critical_path_with(&mut ws, iref);
+        let b = find_critical_path_with(&mut ws, iref);
         assert_eq!(owned, a);
         assert_eq!(a, b, "workspace reuse must be bit-identical");
     }
@@ -604,7 +799,8 @@ mod tests {
     fn assignment_dense_mirrors_hashmap_assignment() {
         let g = TaskGraph::from_edges(3, &[(0, 1, 1.0), (1, 2, 1.0)]);
         let plat = Platform::uniform(2, 1.0, 0.0);
-        let cp = find_critical_path(&g, &plat, &[1.0, 5.0, 5.0, 1.0, 2.0, 9.0]);
+        let comp = CostMatrix::new(2, vec![1.0, 5.0, 5.0, 1.0, 2.0, 9.0]);
+        let cp = find_critical_path(InstanceRef::new(&g, &plat, &comp));
         let dense = cp.assignment_dense(3);
         let map = cp.assignment();
         for t in 0..3 {
@@ -617,7 +813,8 @@ mod tests {
     fn single_task_graph() {
         let g = TaskGraph::from_edges(1, &[]);
         let plat = Platform::uniform(3, 1.0, 0.0);
-        let cp = find_critical_path(&g, &plat, &[5.0, 3.0, 4.0]);
+        let comp = CostMatrix::new(3, vec![5.0, 3.0, 4.0]);
+        let cp = find_critical_path(InstanceRef::new(&g, &plat, &comp));
         assert_eq!(cp.length, 3.0);
         assert_eq!(cp.path, vec![PathStep { task: 0, class: 1 }]);
     }
@@ -626,8 +823,8 @@ mod tests {
     fn ceft_length_at_least_min_comp_of_any_path_task() {
         let g = TaskGraph::from_edges(3, &[(0, 1, 1.0), (1, 2, 1.0)]);
         let plat = Platform::uniform(2, 1.0, 0.1);
-        let comp = vec![4.0, 6.0, 3.0, 9.0, 2.0, 8.0];
-        let cp = find_critical_path(&g, &plat, &comp);
+        let comp = CostMatrix::new(2, vec![4.0, 6.0, 3.0, 9.0, 2.0, 8.0]);
+        let cp = find_critical_path(InstanceRef::new(&g, &plat, &comp));
         // lower bound: sum of per-task minima (comm >= 0)
         assert!(cp.length >= 4.0 + 3.0 + 2.0 - 1e-9);
     }
@@ -650,7 +847,7 @@ mod tests {
             23,
         );
         let plat = Platform::uniform(3, 1.0, 0.0);
-        let t = ceft_table(&inst.graph, &plat, &inst.comp);
+        let t = ceft_table(inst.bind(&plat));
         for e in inst.graph.edges() {
             for j in 0..3 {
                 assert!(

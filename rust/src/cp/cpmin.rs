@@ -6,20 +6,20 @@
 //! beat this value, so `SLR >= 1` always.
 
 use crate::cp::workspace::Workspace;
-use crate::graph::TaskGraph;
-use crate::platform::Costs;
+use crate::model::InstanceRef;
 
 /// Sum of minimum computation costs along the minimum-computation critical
 /// path — eq. 9's denominator.
-pub fn cp_min_cost(graph: &TaskGraph, comp: &[f64], p: usize) -> f64 {
-    cp_min_cost_with(&mut Workspace::new(), graph, comp, p)
+pub fn cp_min_cost(inst: InstanceRef) -> f64 {
+    cp_min_cost_with(&mut Workspace::new(), inst)
 }
 
 /// [`cp_min_cost`] over workspace-owned distance scratch. The node weights
 /// (`min_p C_comp(t, p)`) are folded into the sweep instead of being
 /// materialised, so the whole computation is allocation-free.
-pub fn cp_min_cost_with(ws: &mut Workspace, graph: &TaskGraph, comp: &[f64], p: usize) -> f64 {
-    let costs = Costs { comp, p };
+pub fn cp_min_cost_with(ws: &mut Workspace, inst: InstanceRef) -> f64 {
+    let graph = inst.graph;
+    let costs = inst.costs;
     let dist = &mut ws.dist;
     dist.clear();
     dist.resize(graph.num_tasks(), 0.0);
@@ -36,8 +36,9 @@ pub fn cp_min_cost_with(ws: &mut Workspace, graph: &TaskGraph, comp: &[f64], p: 
 }
 
 /// The tasks on the minimum-computation critical path (for diagnostics).
-pub fn cp_min_tasks(graph: &TaskGraph, comp: &[f64], p: usize) -> Vec<usize> {
-    let costs = Costs { comp, p };
+pub fn cp_min_tasks(inst: InstanceRef) -> Vec<usize> {
+    let graph = inst.graph;
+    let costs = inst.costs;
     let v = graph.num_tasks();
     let mut dist = vec![0f64; v];
     let mut pred: Vec<Option<usize>> = vec![None; v];
@@ -68,13 +69,17 @@ pub fn cp_min_tasks(graph: &TaskGraph, comp: &[f64], p: usize) -> Vec<usize> {
 mod tests {
     use super::*;
     use crate::graph::TaskGraph;
+    use crate::model::CostMatrix;
+    use crate::platform::Platform;
 
     #[test]
     fn chain_sums_minima() {
         let g = TaskGraph::from_edges(3, &[(0, 1, 100.0), (1, 2, 100.0)]);
-        let comp = vec![5.0, 2.0, 4.0, 7.0, 1.0, 3.0];
-        assert_eq!(cp_min_cost(&g, &comp, 2), 2.0 + 4.0 + 1.0);
-        assert_eq!(cp_min_tasks(&g, &comp, 2), vec![0, 1, 2]);
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let comp = CostMatrix::new(2, vec![5.0, 2.0, 4.0, 7.0, 1.0, 3.0]);
+        let inst = InstanceRef::new(&g, &plat, &comp);
+        assert_eq!(cp_min_cost(inst), 2.0 + 4.0 + 1.0);
+        assert_eq!(cp_min_tasks(inst), vec![0, 1, 2]);
     }
 
     #[test]
@@ -83,9 +88,12 @@ mod tests {
             4,
             &[(0, 1, 1.0), (0, 2, 1.0), (1, 3, 1.0), (2, 3, 1.0)],
         );
-        let comp = vec![1.0, 1.0, 9.0, 9.0, 2.0, 2.0, 1.0, 1.0];
-        assert_eq!(cp_min_cost(&g, &comp, 2), 1.0 + 9.0 + 1.0);
-        assert_eq!(cp_min_tasks(&g, &comp, 2), vec![0, 1, 3]);
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let comp =
+            CostMatrix::new(2, vec![1.0, 1.0, 9.0, 9.0, 2.0, 2.0, 1.0, 1.0]);
+        let inst = InstanceRef::new(&g, &plat, &comp);
+        assert_eq!(cp_min_cost(inst), 1.0 + 9.0 + 1.0);
+        assert_eq!(cp_min_tasks(inst), vec![0, 1, 3]);
     }
 
     #[test]
@@ -104,8 +112,9 @@ mod tests {
             41,
         );
         let plat = crate::platform::Platform::uniform(4, 1.0, 0.0);
-        let ceft = crate::cp::ceft::find_critical_path(&inst.graph, &plat, &inst.comp);
-        let cpmin = cp_min_cost(&inst.graph, &inst.comp, 4);
+        let iref = inst.bind(&plat);
+        let ceft = crate::cp::ceft::find_critical_path(iref);
+        let cpmin = cp_min_cost(iref);
         assert!(cpmin <= ceft.length + 1e-9);
     }
 }

@@ -19,7 +19,7 @@
 //! tiny sizes; they exist for validation, not production.
 
 use crate::graph::TaskGraph;
-use crate::platform::{Costs, Platform};
+use crate::model::InstanceRef;
 
 /// Maximum tasks accepted by [`exact_no_duplication`].
 pub const MAX_EXACT_TASKS: usize = 16;
@@ -27,8 +27,8 @@ pub const MAX_EXACT_TASKS: usize = 16;
 /// Optimal assignment cost of one explicit path (min over per-task class
 /// choices of exec + comm along the chain). `O(len · P²)` by chain DP —
 /// exact because a chain has no shared structure.
-pub fn path_cost(graph: &TaskGraph, platform: &Platform, comp: &[f64], path: &[usize]) -> f64 {
-    crate::cp::ceft::chain_optimal_length(graph, platform, comp, path)
+pub fn path_cost(inst: InstanceRef, path: &[usize]) -> f64 {
+    crate::cp::ceft::chain_optimal_length(inst, path)
 }
 
 fn enumerate_paths(
@@ -66,24 +66,26 @@ pub fn all_paths(graph: &TaskGraph, cap: usize) -> Vec<Vec<usize>> {
 /// The per-path-isolated critical measure: `max` over paths of the path's
 /// own optimal assignment cost. Equals the duplication-allowed critical
 /// path of §4.1.
-pub fn exact_path_isolated(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> f64 {
-    all_paths(graph, 100_000)
+pub fn exact_path_isolated(inst: InstanceRef) -> f64 {
+    all_paths(inst.graph, 100_000)
         .iter()
-        .map(|p| path_cost(graph, platform, comp, p))
+        .map(|p| path_cost(inst, p))
         .fold(f64::NEG_INFINITY, f64::max)
 }
 
 /// The no-duplication exact critical path: `min` over global assignments of
 /// the longest realized path under that assignment. `O(P^v · e)` — only for
 /// `v <= MAX_EXACT_TASKS`.
-pub fn exact_no_duplication(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> f64 {
-    let v = graph.num_tasks();
-    let p = platform.num_classes();
+pub fn exact_no_duplication(inst: InstanceRef) -> f64 {
+    let graph = inst.graph;
+    let platform = inst.platform;
+    let costs = inst.costs;
+    let v = inst.n();
+    let p = inst.p();
     assert!(
         v <= MAX_EXACT_TASKS,
         "exact_no_duplication limited to {MAX_EXACT_TASKS} tasks"
     );
-    let costs = Costs { comp, p };
     let mut assign = vec![0usize; v];
     let mut best = f64::INFINITY;
     let mut dist = vec![0f64; v];
@@ -119,9 +121,15 @@ pub fn exact_no_duplication(graph: &TaskGraph, platform: &Platform, comp: &[f64]
 mod tests {
     use super::*;
     use crate::cp::ceft::find_critical_path;
+    use crate::model::CostMatrix;
+    use crate::platform::Platform;
     use crate::util::rng::Xoshiro256;
 
-    fn random_tiny(rng: &mut Xoshiro256, v: usize, p: usize) -> (TaskGraph, Platform, Vec<f64>) {
+    fn random_tiny(
+        rng: &mut Xoshiro256,
+        v: usize,
+        p: usize,
+    ) -> (TaskGraph, Platform, CostMatrix) {
         // random layered DAG on <= v tasks
         let mut edges = Vec::new();
         for t in 1..v {
@@ -136,7 +144,8 @@ mod tests {
         }
         let g = TaskGraph::from_edges(v, &edges);
         let plat = Platform::uniform(p, rng.uniform(0.5, 2.0), rng.uniform(0.0, 0.5));
-        let comp: Vec<f64> = (0..v * p).map(|_| rng.uniform(1.0, 20.0)).collect();
+        let comp =
+            CostMatrix::new(p, (0..v * p).map(|_| rng.uniform(1.0, 20.0)).collect());
         (g, plat, comp)
     }
 
@@ -148,9 +157,10 @@ mod tests {
         let mut rng = Xoshiro256::new(404);
         for _ in 0..30 {
             let (g, plat, comp) = random_tiny(&mut rng, 8, 2);
-            let iso = exact_path_isolated(&g, &plat, &comp);
-            let nodup = exact_no_duplication(&g, &plat, &comp);
-            let ceft = find_critical_path(&g, &plat, &comp).length;
+            let inst = InstanceRef::new(&g, &plat, &comp);
+            let iso = exact_path_isolated(inst);
+            let nodup = exact_no_duplication(inst);
+            let ceft = find_critical_path(inst).length;
             assert!(
                 iso <= nodup + 1e-9,
                 "isolated {iso} > no-dup {nodup} (duplication can only help)"
@@ -173,10 +183,12 @@ mod tests {
                 .collect();
             let g = TaskGraph::from_edges(v, &edges);
             let plat = Platform::uniform(3, 1.0, 0.0);
-            let comp: Vec<f64> = (0..v * 3).map(|_| rng.uniform(1.0, 20.0)).collect();
-            let iso = exact_path_isolated(&g, &plat, &comp);
-            let nodup = exact_no_duplication(&g, &plat, &comp);
-            let ceft = find_critical_path(&g, &plat, &comp).length;
+            let comp =
+                CostMatrix::new(3, (0..v * 3).map(|_| rng.uniform(1.0, 20.0)).collect());
+            let inst = InstanceRef::new(&g, &plat, &comp);
+            let iso = exact_path_isolated(inst);
+            let nodup = exact_no_duplication(inst);
+            let ceft = find_critical_path(inst).length;
             assert!((iso - nodup).abs() < 1e-9);
             assert!((iso - ceft).abs() < 1e-9);
         }
@@ -194,14 +206,15 @@ mod tests {
         );
         let plat = Platform::uniform(2, 1.0, 0.0);
         #[rustfmt::skip]
-        let comp = vec![
+        let comp = CostMatrix::new(2, vec![
             1.0, 1.0,   // shared parent: either class
             1.0, 500.0, // child 1 needs class 0
             500.0, 1.0, // child 2 needs class 1
             1.0, 1.0,
-        ];
-        let iso = exact_path_isolated(&g, &plat, &comp);
-        let nodup = exact_no_duplication(&g, &plat, &comp);
+        ]);
+        let inst = InstanceRef::new(&g, &plat, &comp);
+        let iso = exact_path_isolated(inst);
+        let nodup = exact_no_duplication(inst);
         // isolated: each chain co-locates parent with its child: ~1+1+1 per
         // chain -> max ~3ish + sink. no-dup: parent committed to ONE class,
         // so one chain pays the 1000 payload.
@@ -225,7 +238,7 @@ mod tests {
     fn exact_guard_trips() {
         let g = TaskGraph::from_edges(17, &(0..16).map(|i| (i, i + 1, 0.0)).collect::<Vec<_>>());
         let plat = Platform::uniform(2, 1.0, 0.0);
-        let comp = vec![1.0; 17 * 2];
-        exact_no_duplication(&g, &plat, &comp);
+        let comp = CostMatrix::new(2, vec![1.0; 17 * 2]);
+        exact_no_duplication(InstanceRef::new(&g, &plat, &comp));
     }
 }

@@ -8,8 +8,7 @@
 //! experiment harness.
 
 use crate::cp::workspace::Workspace;
-use crate::graph::TaskGraph;
-use crate::platform::{Costs, Platform};
+use crate::model::InstanceRef;
 
 /// Result of the min-exec critical path.
 #[derive(Clone, Debug, PartialEq)]
@@ -26,27 +25,21 @@ pub struct MinExecPath {
 /// cost. `include_mean_comm` selects whether edges are charged the mean
 /// communication cost (the Topcuoglu-style variant) or zero (the pure
 /// zero-comm variant from §3).
-pub fn min_exec_critical_path(
-    graph: &TaskGraph,
-    platform: &Platform,
-    comp: &[f64],
-    include_mean_comm: bool,
-) -> MinExecPath {
-    min_exec_critical_path_with(&mut Workspace::new(), graph, platform, comp, include_mean_comm)
+pub fn min_exec_critical_path(inst: InstanceRef, include_mean_comm: bool) -> MinExecPath {
+    min_exec_critical_path_with(&mut Workspace::new(), inst, include_mean_comm)
 }
 
 /// [`min_exec_critical_path`] over workspace-owned distance/predecessor
 /// scratch; only the returned path vectors are allocated.
 pub fn min_exec_critical_path_with(
     ws: &mut Workspace,
-    graph: &TaskGraph,
-    platform: &Platform,
-    comp: &[f64],
+    inst: InstanceRef,
     include_mean_comm: bool,
 ) -> MinExecPath {
-    let p = platform.num_classes();
-    let costs = Costs { comp, p };
-    let v = graph.num_tasks();
+    let graph = inst.graph;
+    let platform = inst.platform;
+    let costs = inst.costs;
+    let v = inst.n();
     let dist = &mut ws.dist;
     dist.clear();
     dist.resize(v, 0.0);
@@ -96,14 +89,15 @@ pub fn min_exec_critical_path_with(
 mod tests {
     use super::*;
     use crate::graph::TaskGraph;
+    use crate::model::CostMatrix;
     use crate::platform::Platform;
 
     #[test]
     fn picks_fastest_class_per_task() {
         let g = TaskGraph::from_edges(2, &[(0, 1, 10.0)]);
         let plat = Platform::uniform(2, 1.0, 0.0);
-        let comp = vec![5.0, 2.0, 3.0, 9.0];
-        let r = min_exec_critical_path(&g, &plat, &comp, false);
+        let comp = CostMatrix::new(2, vec![5.0, 2.0, 3.0, 9.0]);
+        let r = min_exec_critical_path(InstanceRef::new(&g, &plat, &comp), false);
         assert_eq!(r.length, 2.0 + 3.0);
         assert_eq!(r.classes, vec![1, 0]);
         assert_eq!(r.tasks, vec![0, 1]);
@@ -113,8 +107,8 @@ mod tests {
     fn mean_comm_variant_adds_edges() {
         let g = TaskGraph::from_edges(2, &[(0, 1, 10.0)]);
         let plat = Platform::uniform(2, 1.0, 0.0);
-        let comp = vec![5.0, 2.0, 3.0, 9.0];
-        let r = min_exec_critical_path(&g, &plat, &comp, true);
+        let comp = CostMatrix::new(2, vec![5.0, 2.0, 3.0, 9.0]);
+        let r = min_exec_critical_path(InstanceRef::new(&g, &plat, &comp), true);
         assert_eq!(r.length, 2.0 + 10.0 + 3.0);
     }
 
@@ -125,8 +119,8 @@ mod tests {
             &[(0, 1, 0.0), (0, 2, 0.0), (1, 3, 0.0), (2, 3, 0.0)],
         );
         let plat = Platform::uniform(1, 1.0, 0.0);
-        let comp = vec![1.0, 10.0, 2.0, 1.0];
-        let r = min_exec_critical_path(&g, &plat, &comp, false);
+        let comp = CostMatrix::new(1, vec![1.0, 10.0, 2.0, 1.0]);
+        let r = min_exec_critical_path(InstanceRef::new(&g, &plat, &comp), false);
         assert_eq!(r.tasks, vec![0, 1, 3]);
         assert_eq!(r.length, 12.0);
     }
@@ -148,8 +142,9 @@ mod tests {
             31,
         );
         let plat = Platform::uniform(4, 1.0, 0.0);
-        let me = min_exec_critical_path(&inst.graph, &plat, &inst.comp, false);
-        let ceft = crate::cp::ceft::find_critical_path(&inst.graph, &plat, &inst.comp);
+        let iref = inst.bind(&plat);
+        let me = min_exec_critical_path(iref, false);
+        let ceft = crate::cp::ceft::find_critical_path(iref);
         assert!(
             me.length <= ceft.length + 1e-9,
             "minexec {} > ceft {}",

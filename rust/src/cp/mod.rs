@@ -2,7 +2,14 @@
 //!
 //! * [`ceft`] — the paper's contribution: the Critical Earliest Finish Time
 //!   dynamic program (Algorithm 1) that finds the critical path *together
-//!   with* the partial assignment of its tasks to processor classes.
+//!   with* the partial assignment of its tasks to processor classes. Its
+//!   `O(P²e)` inner loop runs as a blocked class-pair min-plus kernel over
+//!   communication panels precomputed into the workspace (bit-identical to
+//!   the retained scalar reference path).
+//!
+//! Every entry point takes a [`crate::model::InstanceRef`] — the
+//! shape-checked `&TaskGraph + &Platform + &CostMatrix` view — instead of a
+//! loose `(graph, platform, comp)` triple.
 //! * [`ranks`] — the mean-value upward/downward ranks of HEFT/CPOP and
 //!   CPOP's critical-path extraction (Algorithm 2 lines 2–13).
 //! * [`minexec`] — the "every task on its fastest processor, zero comm"

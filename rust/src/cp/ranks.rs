@@ -10,37 +10,26 @@
 
 use crate::cp::workspace::Workspace;
 use crate::graph::TaskGraph;
-use crate::platform::{Costs, Platform};
+use crate::model::{CostMatrix, InstanceRef};
 
 /// Relative epsilon used when testing `priority(t) == |CP|` (floating-point
 /// equality of sums of identical terms — exact in theory, guarded anyway).
 const PRIO_EPS: f64 = 1e-9;
 
-/// Mean-value view of an instance: scalar task and edge costs.
-#[derive(Clone, Debug)]
-pub struct MeanCosts {
-    /// mean execution cost per task
-    pub wbar: Vec<f64>,
-    /// mean communication cost per edge, aligned with `graph.edges()` order;
-    /// accessed through pred/succ adjacency instead in the sweeps below
-    pub p: usize,
-}
-
 /// Upward rank: `rank_u(t) = w̄(t) + max_{s ∈ succ(t)} ( c̄(t,s) + rank_u(s) )`.
-pub fn rank_upward(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Vec<f64> {
+pub fn rank_upward(inst: InstanceRef) -> Vec<f64> {
     let mut rank = Vec::new();
-    rank_upward_into(graph, platform, comp, &mut rank);
+    rank_upward_into(inst, &mut rank);
     rank
 }
 
 /// [`rank_upward`] into a caller-owned (typically workspace-owned) buffer —
 /// no allocation once the buffer has reached the instance size.
-pub fn rank_upward_into(graph: &TaskGraph, platform: &Platform, comp: &[f64], rank: &mut Vec<f64>) {
-    let costs = Costs {
-        comp,
-        p: platform.num_classes(),
-    };
-    let v = graph.num_tasks();
+pub fn rank_upward_into(inst: InstanceRef, rank: &mut Vec<f64>) {
+    let graph = inst.graph;
+    let platform = inst.platform;
+    let costs = inst.costs;
+    let v = inst.n();
     rank.clear();
     rank.resize(v, 0.0);
     for &t in graph.topo_order().iter().rev() {
@@ -54,24 +43,18 @@ pub fn rank_upward_into(graph: &TaskGraph, platform: &Platform, comp: &[f64], ra
 
 /// Downward rank: `rank_d(t) = max_{k ∈ pred(t)} ( rank_d(k) + w̄(k) + c̄(k,t) )`,
 /// zero for entry tasks.
-pub fn rank_downward(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Vec<f64> {
+pub fn rank_downward(inst: InstanceRef) -> Vec<f64> {
     let mut rank = Vec::new();
-    rank_downward_into(graph, platform, comp, &mut rank);
+    rank_downward_into(inst, &mut rank);
     rank
 }
 
 /// [`rank_downward`] into a caller-owned buffer.
-pub fn rank_downward_into(
-    graph: &TaskGraph,
-    platform: &Platform,
-    comp: &[f64],
-    rank: &mut Vec<f64>,
-) {
-    let costs = Costs {
-        comp,
-        p: platform.num_classes(),
-    };
-    let v = graph.num_tasks();
+pub fn rank_downward_into(inst: InstanceRef, rank: &mut Vec<f64>) {
+    let graph = inst.graph;
+    let platform = inst.platform;
+    let costs = inst.costs;
+    let v = inst.n();
     rank.clear();
     rank.resize(v, 0.0);
     for &t in graph.topo_order() {
@@ -89,14 +72,9 @@ pub fn rank_downward_into(
 /// `ws.prio = rank_u + rank_d` (Algorithm 2 lines 2–4). The single
 /// definition shared by the CPOP/CEFT-CPOP schedulers and the batch
 /// harness, so the priority formula cannot drift between them.
-pub fn cpop_priorities_into(
-    ws: &mut Workspace,
-    graph: &TaskGraph,
-    platform: &Platform,
-    comp: &[f64],
-) {
-    rank_upward_into(graph, platform, comp, &mut ws.up);
-    rank_downward_into(graph, platform, comp, &mut ws.down);
+pub fn cpop_priorities_into(ws: &mut Workspace, inst: InstanceRef) {
+    rank_upward_into(inst, &mut ws.up);
+    rank_downward_into(inst, &mut ws.down);
     ws.prio.clear();
     ws.prio.extend(ws.up.iter().zip(&ws.down).map(|(u, d)| u + d));
 }
@@ -112,14 +90,10 @@ pub fn cpop_priorities_into(
 /// Graphs with multiple entries take the max-priority entry (the paper's
 /// generators produce single-entry graphs; MD does not, so we generalise the
 /// same way `rank_d` does).
-pub fn cpop_critical_path(
-    graph: &TaskGraph,
-    platform: &Platform,
-    comp: &[f64],
-) -> (Vec<usize>, f64) {
-    let up = rank_upward(graph, platform, comp);
-    let down = rank_downward(graph, platform, comp);
-    cpop_critical_path_from_ranks(graph, &up, &down)
+pub fn cpop_critical_path(inst: InstanceRef) -> (Vec<usize>, f64) {
+    let up = rank_upward(inst);
+    let down = rank_downward(inst);
+    cpop_critical_path_from_ranks(inst.graph, &up, &down)
 }
 
 /// CP extraction from precomputed ranks (shared with the CEFT-ranked
@@ -181,8 +155,8 @@ pub fn cpop_cp_from_priorities(graph: &TaskGraph, prio: &[f64], out: &mut Vec<us
 
 /// The processor that minimises the critical path's total execution time
 /// when the whole path is placed on it (Algorithm 2 line 13).
-pub fn cpop_cp_processor(cp: &[usize], comp: &[f64], p: usize) -> usize {
-    let costs = Costs { comp, p };
+pub fn cpop_cp_processor(cp: &[usize], costs: &CostMatrix) -> usize {
+    let p = costs.p();
     let mut best = 0usize;
     let mut best_sum = f64::INFINITY;
     for j in 0..p {
@@ -197,9 +171,8 @@ pub fn cpop_cp_processor(cp: &[usize], comp: &[f64], p: usize) -> usize {
 
 /// Realised length of CPOP's critical path: the path's tasks executed
 /// back-to-back on the single chosen processor (zero internal comm).
-pub fn cpop_realized_cp_length(cp: &[usize], comp: &[f64], p: usize) -> f64 {
-    let costs = Costs { comp, p };
-    let j = cpop_cp_processor(cp, comp, p);
+pub fn cpop_realized_cp_length(cp: &[usize], costs: &CostMatrix) -> f64 {
+    let j = cpop_cp_processor(cp, costs);
     cp.iter().map(|&t| costs.get(t, j)).sum()
 }
 
@@ -207,20 +180,21 @@ pub fn cpop_realized_cp_length(cp: &[usize], comp: &[f64], p: usize) -> f64 {
 mod tests {
     use super::*;
     use crate::graph::TaskGraph;
+    use crate::model::CostMatrix;
     use crate::platform::Platform;
 
-    fn chain3() -> (TaskGraph, Platform, Vec<f64>) {
+    fn chain3() -> (TaskGraph, Platform, CostMatrix) {
         let g = TaskGraph::from_edges(3, &[(0, 1, 10.0), (1, 2, 20.0)]);
         let plat = Platform::uniform(2, 1.0, 0.0);
         // means: 2, 4, 6
-        let comp = vec![1.0, 3.0, 3.0, 5.0, 5.0, 7.0];
+        let comp = CostMatrix::new(2, vec![1.0, 3.0, 3.0, 5.0, 5.0, 7.0]);
         (g, plat, comp)
     }
 
     #[test]
     fn rank_u_on_chain() {
         let (g, plat, comp) = chain3();
-        let up = rank_upward(&g, &plat, &comp);
+        let up = rank_upward(InstanceRef::new(&g, &plat, &comp));
         // rank_u(2)=6; rank_u(1)=4+20+6=30; rank_u(0)=2+10+30=42
         assert_eq!(up, vec![42.0, 30.0, 6.0]);
     }
@@ -228,7 +202,7 @@ mod tests {
     #[test]
     fn rank_d_on_chain() {
         let (g, plat, comp) = chain3();
-        let down = rank_downward(&g, &plat, &comp);
+        let down = rank_downward(InstanceRef::new(&g, &plat, &comp));
         // rank_d(0)=0; rank_d(1)=0+2+10=12; rank_d(2)=12+4+20=36
         assert_eq!(down, vec![0.0, 12.0, 36.0]);
     }
@@ -236,7 +210,7 @@ mod tests {
     #[test]
     fn priority_constant_along_cp() {
         let (g, plat, comp) = chain3();
-        let (cp, len) = cpop_critical_path(&g, &plat, &comp);
+        let (cp, len) = cpop_critical_path(InstanceRef::new(&g, &plat, &comp));
         assert_eq!(cp, vec![0, 1, 2]);
         assert_eq!(len, 42.0);
     }
@@ -250,25 +224,25 @@ mod tests {
         );
         let plat = Platform::uniform(2, 1.0, 0.0);
         #[rustfmt::skip]
-        let comp = vec![
+        let comp = CostMatrix::new(2, vec![
             2.0, 2.0,
             1.0, 1.0,
             50.0, 50.0,
             2.0, 2.0,
-        ];
-        let (cp, _) = cpop_critical_path(&g, &plat, &comp);
+        ]);
+        let (cp, _) = cpop_critical_path(InstanceRef::new(&g, &plat, &comp));
         assert_eq!(cp, vec![0, 2, 3]);
     }
 
     #[test]
     fn cp_processor_minimises_sum() {
-        let comp = vec![
+        let comp = CostMatrix::new(2, vec![
             1.0, 10.0, //
             1.0, 10.0, //
             1.0, 10.0,
-        ];
-        assert_eq!(cpop_cp_processor(&[0, 1, 2], &comp, 2), 0);
-        assert_eq!(cpop_realized_cp_length(&[0, 1, 2], &comp, 2), 3.0);
+        ]);
+        assert_eq!(cpop_cp_processor(&[0, 1, 2], &comp), 0);
+        assert_eq!(cpop_realized_cp_length(&[0, 1, 2], &comp), 3.0);
     }
 
     #[test]
@@ -276,8 +250,8 @@ mod tests {
         // two entries: 0 (light) and 1 (heavy) both -> 2
         let g = TaskGraph::from_edges(3, &[(0, 2, 1.0), (1, 2, 1.0)]);
         let plat = Platform::uniform(1, 1.0, 0.0);
-        let comp = vec![1.0, 50.0, 2.0];
-        let (cp, len) = cpop_critical_path(&g, &plat, &comp);
+        let comp = CostMatrix::new(1, vec![1.0, 50.0, 2.0]);
+        let (cp, len) = cpop_critical_path(InstanceRef::new(&g, &plat, &comp));
         assert_eq!(cp, vec![1, 2]);
         assert_eq!(len, 52.0);
     }
@@ -290,8 +264,8 @@ mod tests {
             &[(0, 1, 5.0), (0, 2, 1.0), (1, 3, 5.0), (2, 3, 1.0)],
         );
         let plat = Platform::uniform(1, 1.0, 0.0);
-        let comp = vec![1.0, 2.0, 3.0, 4.0];
-        let up = rank_upward(&g, &plat, &comp);
+        let comp = CostMatrix::new(1, vec![1.0, 2.0, 3.0, 4.0]);
+        let up = rank_upward(InstanceRef::new(&g, &plat, &comp));
         // P=1 => mean comm = 0 (co-located), path = node weights only
         assert_eq!(up[0], 1.0 + 3.0 + 4.0);
     }

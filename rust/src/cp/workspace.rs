@@ -105,6 +105,18 @@ pub struct Workspace {
     pub steps: Vec<PathStep>,
     /// critical-path task-id scratch (`cp::ranks::cpop_cp_from_priorities`)
     pub cp_tasks: Vec<usize>,
+    /// destination-major `P × P` startup panel of the CEFT min-plus kernel:
+    /// row `j` holds `startup[l]` for every sender class `l != j` and `0.0`
+    /// on the diagonal (co-located communication is free, Definition 3).
+    /// Rebuilt from the platform at every DP entry — see
+    /// EXPERIMENTS.md §Min-plus kernel.
+    pub panel_startup: Vec<f64>,
+    /// destination-major `P × P` bandwidth panel, aligned with
+    /// `panel_startup`: row `j` holds `bandwidth[l → j]` for `l != j` and
+    /// `+inf` on the diagonal so `data / bw` contributes exactly `0.0` —
+    /// keeping the kernel branch-free yet bit-identical to
+    /// `Platform::comm_cost`.
+    pub panel_bw: Vec<f64>,
 }
 
 impl Workspace {
@@ -140,6 +152,8 @@ impl Workspace {
         self.pins.clear();
         self.steps.clear();
         self.cp_tasks.clear();
+        self.panel_startup.clear();
+        self.panel_bw.clear();
     }
 
     /// Total `f64`-equivalent capacity across the major buffers — a rough
@@ -204,18 +218,42 @@ impl WorkspacePool {
     /// allocation-free once the high-water mark is reached. (Entry points
     /// re-initialise what they read regardless; clearing is hygiene, not
     /// correctness.)
+    ///
+    /// Unwind-safe: check-in happens in a drop guard, so a panicking `f`
+    /// (the service engine deliberately routes algorithm panics through
+    /// here and rethrows them) still returns the warm workspace to the
+    /// pool instead of leaking it and skewing the `created()` high-water
+    /// stat.
     pub fn with<R>(&self, f: impl FnOnce(&mut Workspace) -> R) -> R {
-        let mut ws = self.free.lock().unwrap().pop().unwrap_or_else(|| {
+        /// Returns the workspace to the pool on drop — normal return and
+        /// unwind alike.
+        struct CheckIn<'a> {
+            pool: &'a WorkspacePool,
+            ws: Option<Workspace>,
+        }
+        impl Drop for CheckIn<'_> {
+            fn drop(&mut self) {
+                if let Some(mut ws) = self.ws.take() {
+                    ws.clear(); // O(dirty), outside the lock
+                    // `if let Ok` instead of unwrap: never double-panic in
+                    // a drop that may already be running during an unwind
+                    if let Ok(mut free) = self.pool.free.lock() {
+                        if free.len() < self.pool.max_idle {
+                            free.push(ws);
+                        }
+                    }
+                }
+            }
+        }
+        let ws = self.free.lock().unwrap().pop().unwrap_or_else(|| {
             self.created.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             Workspace::new()
         });
-        let out = f(&mut ws);
-        ws.clear(); // O(dirty), outside the lock
-        let mut free = self.free.lock().unwrap();
-        if free.len() < self.max_idle {
-            free.push(ws);
-        }
-        out
+        let mut guard = CheckIn {
+            pool: self,
+            ws: Some(ws),
+        };
+        f(guard.ws.as_mut().expect("workspace checked out above"))
     }
 
     /// Number of workspaces ever created — the concurrency high-water mark
@@ -275,6 +313,27 @@ mod tests {
         });
         assert_eq!(pool.created(), 2);
         assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    fn panicking_closure_still_checks_workspace_back_in() {
+        let pool = WorkspacePool::new();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.with(|ws| {
+                ws.table.resize(64, 0.0);
+                // conditional so the closure's return type stays `()`
+                // without tripping the unreachable-code lint
+                if ws.table.len() == 64 {
+                    panic!("boom");
+                }
+            })
+        }));
+        assert!(result.is_err(), "the panic must propagate");
+        assert_eq!(pool.created(), 1);
+        assert_eq!(pool.idle(), 1, "workspace must survive a panicking closure");
+        // the survivor was cleared and is reused, not replaced
+        pool.with(|ws| assert!(ws.table.is_empty()));
+        assert_eq!(pool.created(), 1);
     }
 
     #[test]

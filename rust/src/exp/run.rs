@@ -149,28 +149,27 @@ pub fn run_instance_with(
     platform: &Platform,
     inst: &Instance,
 ) -> Row {
-    let g = &inst.graph;
-    let comp = &inst.comp;
+    let iref = inst.bind(platform);
     let p = platform.num_classes();
 
-    let ceft_cp = find_critical_path_with(ws, g, platform, comp);
+    let ceft_cp = find_critical_path_with(ws, iref);
     // CPOP's mean-value CP from ranks computed in workspace buffers
-    cpop_priorities_into(ws, g, platform, comp);
-    let cpl_cpop = cpop_cp_from_priorities(g, &ws.prio, &mut ws.cp_tasks);
-    let cpl_cpop_realized = crate::cp::ranks::cpop_realized_cp_length(&ws.cp_tasks, comp, p);
-    let minexec = min_exec_critical_path_with(ws, g, platform, comp, false);
-    let cp_min = cp_min_cost_with(ws, g, comp, p);
+    cpop_priorities_into(ws, iref);
+    let cpl_cpop = cpop_cp_from_priorities(iref.graph, &ws.prio, &mut ws.cp_tasks);
+    let cpl_cpop_realized = crate::cp::ranks::cpop_realized_cp_length(&ws.cp_tasks, iref.costs);
+    let minexec = min_exec_critical_path_with(ws, iref, false);
+    let cp_min = cp_min_cost_with(ws, iref);
 
     let mut algos = [AlgoResult::default(); 6];
     for (i, a) in Algorithm::ALL.iter().enumerate() {
-        let schedule = a.run_with(ws, g, platform, comp);
-        debug_assert!(schedule.validate(g, platform, comp).is_ok());
+        let schedule = a.run_with(ws, iref);
+        debug_assert!(schedule.validate(iref).is_ok());
         let m = schedule.makespan();
         algos[i] = AlgoResult {
             makespan: m,
-            speedup: metrics::speedup(comp, p, m),
-            slr: metrics::slr(g, comp, p, m),
-            slack: metrics::slack(g, platform, comp, &schedule),
+            speedup: metrics::speedup(iref.costs, m),
+            slr: metrics::slr(iref, m),
+            slack: metrics::slack(iref, &schedule),
         };
     }
 

@@ -15,6 +15,7 @@
 //! structural properties CPOP's critical-path extraction needs.
 
 use super::TaskGraph;
+use crate::model::{CostMatrix, InstanceRef};
 use crate::platform::{CostModel, Platform};
 use crate::util::rng::Xoshiro256;
 
@@ -43,14 +44,29 @@ impl RggParams {
 }
 
 /// A generated problem instance: structure + payloads + execution costs.
+/// The processor-class count lives in the cost matrix ([`Instance::p`]
+/// reads it) — there is deliberately no separate field that could
+/// disagree with the matrix stride.
 #[derive(Clone, Debug)]
 pub struct Instance {
     /// the task DAG (edge `data` fields are the communication volumes)
     pub graph: TaskGraph,
-    /// dense `v × P` execution-cost matrix
-    pub comp: Vec<f64>,
-    /// number of processor classes (row stride of `comp`)
-    pub p: usize,
+    /// dense `v × P` execution-cost matrix (task-major SoA)
+    pub comp: CostMatrix,
+}
+
+impl Instance {
+    /// Number of processor classes (the cost matrix's row stride).
+    pub fn p(&self) -> usize {
+        self.comp.p()
+    }
+
+    /// Borrow this instance together with a platform as the
+    /// [`InstanceRef`] view every algorithm entry point consumes. Panics
+    /// when the platform's class count disagrees with the cost matrix.
+    pub fn bind<'a>(&'a self, platform: &'a Platform) -> InstanceRef<'a> {
+        InstanceRef::new(&self.graph, platform, &self.comp)
+    }
 }
 
 /// Generate the *structure* of a layered DAG: returns `(edges, level_of)`.
@@ -212,8 +228,7 @@ pub fn generate(
         .collect();
     Instance {
         graph: TaskGraph::from_edges(params.n, &edges),
-        comp,
-        p: platform.num_classes(),
+        comp: CostMatrix::new(platform.num_classes(), comp),
     }
 }
 

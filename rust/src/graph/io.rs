@@ -36,7 +36,7 @@ pub fn instance_to_json(inst: &Instance) -> Json {
         .collect();
     Json::obj(vec![
         ("n", Json::Num(inst.graph.num_tasks() as f64)),
-        ("p", Json::Num(inst.p as f64)),
+        ("p", Json::Num(inst.p() as f64)),
         ("edges", Json::Arr(edges)),
         (
             "comp",
@@ -94,10 +94,11 @@ pub fn instance_from_json(j: &Json) -> Result<Instance, String> {
             comp[i]
         ));
     }
+    // the thin raw-slice shim at the JSON boundary: the wire carries a flat
+    // row-major array; everything past this point works on the SoA matrix
     Ok(Instance {
         graph: TaskGraph::try_from_edges(n, &edges)?,
-        comp,
-        p,
+        comp: crate::model::CostMatrix::try_new(p, comp)?,
     })
 }
 
@@ -274,7 +275,7 @@ mod tests {
         assert_eq!(back.graph.num_tasks(), inst.graph.num_tasks());
         assert_eq!(back.graph.num_edges(), inst.graph.num_edges());
         assert_eq!(back.comp, inst.comp);
-        assert_eq!(back.p, inst.p);
+        assert_eq!(back.p(), inst.p());
     }
 
     #[test]
@@ -350,14 +351,15 @@ mod tests {
     fn schedule_json_roundtrip_is_bit_exact() {
         let g = TaskGraph::from_edges(3, &[(0, 1, 2.0), (0, 2, 3.0)]);
         let plat = Platform::uniform(2, 1.0, 0.1);
-        let comp = vec![1.5, 2.5, 3.25, 0.75, 2.0, 4.0];
-        let s = crate::sched::Algorithm::CeftCpop.schedule(&g, &plat, &comp);
+        let comp = crate::model::CostMatrix::new(2, vec![1.5, 2.5, 3.25, 0.75, 2.0, 4.0]);
+        let inst = crate::model::InstanceRef::new(&g, &plat, &comp);
+        let s = crate::sched::Algorithm::CeftCpop.schedule(inst);
         let text = schedule_to_json(&s).to_string();
         let back = schedule_from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.p, s.p);
         assert_eq!(back.assignments, s.assignments);
         // still a legal schedule after the round trip
-        back.validate(&g, &plat, &comp).unwrap();
+        back.validate(inst).unwrap();
     }
 
     #[test]

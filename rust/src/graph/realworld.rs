@@ -257,8 +257,7 @@ pub fn weighted_instance(
         .collect();
     Instance {
         graph: TaskGraph::from_edges(skel.n, &edges),
-        comp,
-        p: platform.num_classes(),
+        comp: crate::model::CostMatrix::new(platform.num_classes(), comp),
     }
 }
 

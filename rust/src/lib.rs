@@ -21,6 +21,12 @@
 //! * [`platform`] — heterogeneous processor graphs, communication model,
 //!   and the two execution-cost models from the paper (eq. 5 "classic",
 //!   eq. 6 "two-weight").
+//! * [`model`] — the instance model layer: [`model::CostMatrix`] (the dense
+//!   task-major `v × P` execution-cost matrix as a first-class SoA value)
+//!   and [`model::InstanceRef`] (the shape-checked borrowed
+//!   `&TaskGraph + &Platform + &CostMatrix` view every algorithm entry
+//!   point consumes — the raw `(graph, platform, comp)` triple survives
+//!   only at the JSON/service boundary).
 //! * [`cp`] — critical-path algorithms: CEFT (the paper's contribution),
 //!   CPOP's mean-value critical path, the min-execution-time critical path,
 //!   and `CP_MIN` (the SLR denominator) — plus [`cp::workspace`], the
@@ -54,6 +60,7 @@
 //!
 //! ```
 //! use ceft::graph::TaskGraph;
+//! use ceft::model::{CostMatrix, InstanceRef};
 //! use ceft::platform::Platform;
 //! use ceft::cp::ceft::find_critical_path;
 //!
@@ -61,14 +68,14 @@
 //! let g = TaskGraph::from_edges(4, &[(0, 1, 10.0), (0, 2, 10.0), (1, 3, 10.0), (2, 3, 10.0)]);
 //! // two processor classes, uniform comm
 //! let plat = Platform::uniform(2, 1.0, 0.0);
-//! // explicit v x P execution-cost matrix (row-major, task-major)
-//! let comp = vec![
+//! // dense v x P execution-cost matrix (task-major SoA)
+//! let comp = CostMatrix::new(2, vec![
 //!     1.0, 8.0, // task 0: fast on class 0
 //!     9.0, 2.0, // task 1: fast on class 1
 //!     4.0, 4.0, // task 2
 //!     1.0, 9.0, // task 3: fast on class 0
-//! ];
-//! let cp = find_critical_path(&g, &plat, &comp);
+//! ]);
+//! let cp = find_critical_path(InstanceRef::new(&g, &plat, &comp));
 //! assert!(cp.length > 0.0);
 //! assert_eq!(cp.path.first().unwrap().task, 0);
 //! assert_eq!(cp.path.last().unwrap().task, 3);
@@ -79,6 +86,7 @@ pub mod cp;
 pub mod exp;
 pub mod graph;
 pub mod metrics;
+pub mod model;
 pub mod platform;
 pub mod runtime;
 pub mod sched;
@@ -92,6 +100,7 @@ pub mod prelude {
     pub use crate::cp::workspace::{Workspace, WorkspacePool};
     pub use crate::graph::{generator::RggParams, realworld, TaskGraph};
     pub use crate::metrics::{makespan, slack, slr, speedup};
+    pub use crate::model::{CostMatrix, InstanceRef};
     pub use crate::platform::{CostModel, Platform};
     pub use crate::sched::{
         ceft_cpop::CeftCpop, cpop::Cpop, heft::Heft, Algorithm, Schedule, Scheduler,

@@ -229,7 +229,7 @@ fn cmd_schedule(tokens: &[String]) -> i32 {
     print!("{}", t.to_ascii());
     if parsed.is_set("gantt") {
         let (platform, inst) = build_instance(&cell);
-        let s = ceft::sched::ceft_cpop::CeftCpop.schedule(&inst.graph, &platform, &inst.comp);
+        let s = ceft::sched::ceft_cpop::CeftCpop.schedule(inst.bind(&platform));
         println!("\nCEFT-CPOP Gantt:");
         print!("{}", ceft::sched::gantt::render(&s, 100));
     }
@@ -241,8 +241,8 @@ fn cmd_cp(tokens: &[String]) -> i32 {
     let parsed = parse_or_exit(args, tokens);
     let cell = cell_from(&parsed);
     let (platform, inst) = build_instance(&cell);
-    let ceft_cp = find_critical_path(&inst.graph, &platform, &inst.comp);
-    let (cpop_cp, cpop_len) = cpop_critical_path(&inst.graph, &platform, &inst.comp);
+    let ceft_cp = find_critical_path(inst.bind(&platform));
+    let (cpop_cp, cpop_len) = cpop_critical_path(inst.bind(&platform));
     println!("CEFT critical path (length {:.2}):", ceft_cp.length);
     for s in &ceft_cp.path {
         println!("  task {:>5} -> class {}", s.task, s.class);
@@ -264,7 +264,7 @@ fn cmd_gengraph(tokens: &[String]) -> i32 {
     match parsed.req("format") {
         "json" => println!("{}", io::instance_to_json(&inst).to_string()),
         "dot" => {
-            let cp = find_critical_path(&inst.graph, &platform, &inst.comp);
+            let cp = find_critical_path(inst.bind(&platform));
             print!("{}", io::to_dot(&inst.graph, &cp.tasks()));
         }
         other => {
@@ -557,6 +557,13 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         }
     }
     let elapsed = start.elapsed().as_secs_f64();
+    if sent == 0 {
+        // refuse BEFORE touching the report file: a zero-send run must
+        // neither report success nor clobber the previous real measurement
+        // with a placeholder-shaped requests:0 record
+        eprintln!("loadgen: no requests were sent — refusing to report");
+        return 1;
+    }
     let achieved = sent as f64 / elapsed;
     println!(
         "loadgen: {} requests in {:.2}s -> {:.0} req/s (target {:.0}), {} failures",
@@ -679,8 +686,8 @@ fn cmd_runtime_check(tokens: &[String]) -> i32 {
     cell.n = n;
     cell.p = p;
     let (platform, inst) = build_instance(&cell);
-    let cpu = find_critical_path(&inst.graph, &platform, &inst.comp);
-    match acc.find_critical_path(&inst.graph, &platform, &inst.comp) {
+    let cpu = find_critical_path(inst.bind(&platform));
+    match acc.find_critical_path(inst.bind(&platform)) {
         Ok(accel) => {
             let rel = (cpu.length - accel.length).abs() / cpu.length.max(1e-12);
             println!(

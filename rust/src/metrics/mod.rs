@@ -1,9 +1,10 @@
 //! Comparison metrics (§7.3 of the paper): makespan, speedup, SLR, slack,
-//! and pairwise longer/equal/shorter tallies.
+//! and pairwise longer/equal/shorter tallies. Instance-derived metrics
+//! consume the [`InstanceRef`] view; cost-only metrics take the
+//! [`CostMatrix`] directly.
 
 use crate::cp::cpmin::cp_min_cost;
-use crate::graph::TaskGraph;
-use crate::platform::{Costs, Platform};
+use crate::model::{CostMatrix, InstanceRef};
 use crate::sched::Schedule;
 
 /// Makespan of a schedule (§7.3.3 context).
@@ -14,34 +15,32 @@ pub fn makespan(s: &Schedule) -> f64 {
 /// Best sequential execution time: all tasks on the single processor
 /// minimising the total (the numerator of eq. 8). Independent of the
 /// scheduling algorithm.
-pub fn serial_time(comp: &[f64], p: usize) -> f64 {
-    let v = comp.len() / p;
-    let costs = Costs { comp, p };
-    (0..p)
+pub fn serial_time(costs: &CostMatrix) -> f64 {
+    let v = costs.n();
+    (0..costs.p())
         .map(|j| (0..v).map(|t| costs.get(t, j)).sum::<f64>())
         .fold(f64::INFINITY, f64::min)
 }
 
 /// Speedup (eq. 8): best sequential time / makespan.
-pub fn speedup(comp: &[f64], p: usize, makespan: f64) -> f64 {
-    serial_time(comp, p) / makespan
+pub fn speedup(costs: &CostMatrix, makespan: f64) -> f64 {
+    serial_time(costs) / makespan
 }
 
 /// Schedule length ratio (eq. 9): makespan normalised by the
 /// minimum-computation critical path. `>= 1` for every valid schedule.
-pub fn slr(graph: &TaskGraph, comp: &[f64], p: usize, makespan: f64) -> f64 {
-    makespan / cp_min_cost(graph, comp, p)
+pub fn slr(inst: InstanceRef, makespan: f64) -> f64 {
+    makespan / cp_min_cost(inst)
 }
 
 /// Slack (eq. 10): mean over tasks of `M − b_level(t) − t_level(t)`,
 /// computed on the *scheduled* DAG — each task weighted by its realised
 /// execution cost on its assigned processor, each edge by the realised
 /// communication cost between the assigned processors.
-pub fn slack(graph: &TaskGraph, platform: &Platform, comp: &[f64], s: &Schedule) -> f64 {
-    let costs = Costs {
-        comp,
-        p: platform.num_classes(),
-    };
+pub fn slack(inst: InstanceRef, s: &Schedule) -> f64 {
+    let graph = inst.graph;
+    let platform = inst.platform;
+    let costs = inst.costs;
     let v = graph.num_tasks();
     let m = s.makespan();
     let w = |t: usize| costs.get(t, s.assignments[t].proc);
@@ -142,48 +141,46 @@ impl WinTally {
 mod tests {
     use super::*;
     use crate::graph::TaskGraph;
+    use crate::platform::Platform;
     use crate::sched::{Placement, Scheduler};
 
-    fn chain() -> (TaskGraph, Platform, Vec<f64>) {
+    fn chain() -> (TaskGraph, Platform, CostMatrix) {
         let g = TaskGraph::from_edges(3, &[(0, 1, 10.0), (1, 2, 10.0)]);
         let plat = Platform::uniform(2, 1.0, 0.0);
-        let comp = vec![2.0, 4.0, 2.0, 4.0, 2.0, 4.0];
+        let comp = CostMatrix::new(2, vec![2.0, 4.0, 2.0, 4.0, 2.0, 4.0]);
         (g, plat, comp)
     }
 
     #[test]
     fn serial_time_picks_best_processor() {
         let (_, _, comp) = chain();
-        assert_eq!(serial_time(&comp, 2), 6.0);
+        assert_eq!(serial_time(&comp), 6.0);
     }
 
     #[test]
     fn speedup_of_serial_schedule_is_one() {
         let (g, plat, comp) = chain();
-        let s = crate::sched::list_schedule(
-            &g,
-            &plat,
-            &comp,
-            &[2.0, 1.0, 0.0],
-            &Placement::MinEft,
-        );
+        let inst = InstanceRef::new(&g, &plat, &comp);
+        let s = crate::sched::list_schedule(inst, &[2.0, 1.0, 0.0], &Placement::MinEft);
         // chain on one proc: makespan 6 == best serial
-        assert!((speedup(&comp, 2, s.makespan()) - 1.0).abs() < 1e-9);
+        assert!((speedup(&comp, s.makespan()) - 1.0).abs() < 1e-9);
     }
 
     #[test]
     fn slr_at_least_one() {
         let (g, plat, comp) = chain();
-        let s = crate::sched::heft::Heft.schedule(&g, &plat, &comp);
-        assert!(slr(&g, &comp, 2, s.makespan()) >= 1.0 - 1e-12);
+        let inst = InstanceRef::new(&g, &plat, &comp);
+        let s = crate::sched::heft::Heft.schedule(inst);
+        assert!(slr(inst, s.makespan()) >= 1.0 - 1e-12);
     }
 
     #[test]
     fn slack_zero_on_linear_dag() {
         // the paper: a linear DAG's schedule has zero slack
         let (g, plat, comp) = chain();
-        let s = crate::sched::heft::Heft.schedule(&g, &plat, &comp);
-        let sl = slack(&g, &plat, &comp, &s);
+        let inst = InstanceRef::new(&g, &plat, &comp);
+        let s = crate::sched::heft::Heft.schedule(inst);
+        let sl = slack(inst, &s);
         assert!(sl.abs() < 1e-9, "slack={sl}");
     }
 
@@ -195,9 +192,11 @@ mod tests {
         );
         let plat = Platform::uniform(2, 1.0, 0.0);
         // branch 2 much shorter than branch 1 -> it has slack
-        let comp = vec![1.0, 1.0, 50.0, 50.0, 1.0, 1.0, 1.0, 1.0];
-        let s = crate::sched::heft::Heft.schedule(&g, &plat, &comp);
-        assert!(slack(&g, &plat, &comp, &s) > 0.0);
+        let comp =
+            CostMatrix::new(2, vec![1.0, 1.0, 50.0, 50.0, 1.0, 1.0, 1.0, 1.0]);
+        let inst = InstanceRef::new(&g, &plat, &comp);
+        let s = crate::sched::heft::Heft.schedule(inst);
+        assert!(slack(inst, &s) > 0.0);
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! The instance model layer: SoA cost storage and the borrowed instance
+//! view every algorithm entry point consumes.
+//!
+//! Before this layer existed, every algorithm took a loose
+//! `(graph: &TaskGraph, platform: &Platform, comp: &[f64])` triple that each
+//! caller re-threaded by hand, and nothing guaranteed the three parts
+//! agreed on task or class counts until an index blew up deep inside a DP.
+//! The model layer replaces that with two types:
+//!
+//! * [`CostMatrix`] — the dense task-major `v × P` execution-cost matrix as
+//!   a first-class structure-of-arrays value. Row-slice accessors
+//!   ([`CostMatrix::row`]) hand the DP kernels contiguous per-task cost
+//!   rows, and the per-task scalarisations CPOP/HEFT use
+//!   ([`CostMatrix::mean`], [`CostMatrix::min`], [`CostMatrix::argmin`])
+//!   live next to the data they read.
+//! * [`InstanceRef`] — a `Copy` borrowed view bundling
+//!   `&TaskGraph + &Platform + &CostMatrix` with the shape invariants
+//!   checked **once** at construction ([`InstanceRef::new`] /
+//!   [`InstanceRef::try_new`]). Every public algorithm entry point in
+//!   [`crate::cp`], [`crate::sched`], [`crate::metrics`] and
+//!   [`crate::runtime`] takes an `InstanceRef` by value.
+//!
+//! The raw `&[f64]` representation survives only at the JSON/service
+//! boundary (wire decoding in [`crate::graph::io`], structural hashing in
+//! [`crate::service::hashing`]) and as the deprecated one-line shims below.
+//!
+//! `CostMatrix` derefs to its flat `[f64]` storage, so boundary code that
+//! needs the raw row-major buffer (serialisation, hashing, the f32 PJRT
+//! marshalling) reads it without a copy.
+
+use crate::graph::TaskGraph;
+use crate::platform::Platform;
+
+/// Dense task-major `v × P` execution-cost matrix (`C_comp(t, j)` of the
+/// paper): row `t` holds task `t`'s cost on every processor class,
+/// contiguously. The SoA layout is what the blocked CEFT kernel and the
+/// rank sweeps iterate over.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostMatrix {
+    /// number of classes (row stride)
+    p: usize,
+    /// row-major `v × P` costs
+    data: Vec<f64>,
+}
+
+impl CostMatrix {
+    /// Build from the row stride and the flat row-major data. Panics when
+    /// `data.len()` is not a multiple of `p` (a programming error, not a
+    /// runtime condition — untrusted input goes through
+    /// [`CostMatrix::try_new`]).
+    pub fn new(p: usize, data: Vec<f64>) -> Self {
+        Self::try_new(p, data).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible constructor for untrusted input (the JSON/service
+    /// boundary): validates the shape instead of panicking.
+    pub fn try_new(p: usize, data: Vec<f64>) -> Result<Self, String> {
+        if p == 0 {
+            return Err("cost matrix needs at least one class".to_string());
+        }
+        if data.len() % p != 0 {
+            return Err(format!(
+                "cost data has {} entries, not a multiple of P = {p}",
+                data.len()
+            ));
+        }
+        Ok(Self { p, data })
+    }
+
+    /// Number of tasks (rows).
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.data.len() / self.p
+    }
+
+    /// Number of processor classes (row stride).
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// `C_comp(t, j)`.
+    #[inline]
+    pub fn get(&self, t: usize, j: usize) -> f64 {
+        self.data[t * self.p + j]
+    }
+
+    /// Task `t`'s contiguous cost row over all classes.
+    #[inline]
+    pub fn row(&self, t: usize) -> &[f64] {
+        &self.data[t * self.p..(t + 1) * self.p]
+    }
+
+    /// Mean execution cost of task `t` over classes — the CPOP/HEFT
+    /// scalarisation.
+    pub fn mean(&self, t: usize) -> f64 {
+        self.row(t).iter().sum::<f64>() / self.p as f64
+    }
+
+    /// Minimum execution cost of task `t`.
+    pub fn min(&self, t: usize) -> f64 {
+        self.row(t).iter().fold(f64::INFINITY, |a, &b| a.min(b))
+    }
+
+    /// Fastest class for task `t` (lowest cost; ties at lowest id).
+    pub fn argmin(&self, t: usize) -> usize {
+        let row = self.row(t);
+        let mut best = 0;
+        for j in 1..self.p {
+            if row[j] < row[best] {
+                best = j;
+            }
+        }
+        best
+    }
+
+    /// The flat row-major storage (also available through `Deref`).
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Consume the matrix, returning the flat storage.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+}
+
+impl std::ops::Deref for CostMatrix {
+    type Target = [f64];
+
+    /// Deref to the flat row-major storage, so boundary code (hashing,
+    /// serialisation, f32 marshalling) reads the raw buffer without a copy.
+    fn deref(&self) -> &[f64] {
+        &self.data
+    }
+}
+
+/// A borrowed, shape-checked view of one scheduling instance:
+/// `&TaskGraph + &Platform + &CostMatrix`. `Copy`, so it is passed by value
+/// through every layer instead of re-threading three loose references.
+#[derive(Clone, Copy, Debug)]
+pub struct InstanceRef<'a> {
+    /// the task DAG
+    pub graph: &'a TaskGraph,
+    /// the processor classes and communication model
+    pub platform: &'a Platform,
+    /// the dense execution-cost matrix
+    pub costs: &'a CostMatrix,
+}
+
+impl<'a> InstanceRef<'a> {
+    /// Bundle the three parts, asserting the shape invariants
+    /// (`costs.n() == graph.num_tasks()`, `costs.p() ==
+    /// platform.num_classes()`). Panics on mismatch — internal callers
+    /// construct from already-validated parts; untrusted input goes through
+    /// [`InstanceRef::try_new`].
+    pub fn new(graph: &'a TaskGraph, platform: &'a Platform, costs: &'a CostMatrix) -> Self {
+        Self::try_new(graph, platform, costs).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible constructor for the service boundary: reports shape
+    /// mismatches instead of panicking.
+    pub fn try_new(
+        graph: &'a TaskGraph,
+        platform: &'a Platform,
+        costs: &'a CostMatrix,
+    ) -> Result<Self, String> {
+        if costs.p() != platform.num_classes() {
+            return Err(format!(
+                "cost matrix has {} classes but platform has {}",
+                costs.p(),
+                platform.num_classes()
+            ));
+        }
+        if costs.n() != graph.num_tasks() {
+            return Err(format!(
+                "cost matrix has {} rows but graph has {} tasks",
+                costs.n(),
+                graph.num_tasks()
+            ));
+        }
+        Ok(Self {
+            graph,
+            platform,
+            costs,
+        })
+    }
+
+    /// Number of tasks `v`.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.graph.num_tasks()
+    }
+
+    /// Number of processor classes `P`.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.platform.num_classes()
+    }
+}
+
+/// Deprecated raw-triple shim for the service/JSON boundary: copy a
+/// borrowed row-major `v × P` slice into an owned [`CostMatrix`].
+#[deprecated(
+    note = "build a CostMatrix once (CostMatrix::new) and pass InstanceRef; this shim copies the slice"
+)]
+pub fn cost_matrix_from_raw(p: usize, comp: &[f64]) -> CostMatrix {
+    CostMatrix::new(p, comp.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors_match_layout() {
+        let m = CostMatrix::new(3, vec![3.0, 1.0, 2.0, 5.0, 5.0, 5.0]);
+        assert_eq!(m.n(), 2);
+        assert_eq!(m.p(), 3);
+        assert_eq!(m.get(0, 1), 1.0);
+        assert_eq!(m.row(1), &[5.0, 5.0, 5.0]);
+        assert_eq!(m.argmin(0), 1);
+        assert_eq!(m.min(0), 1.0);
+        assert!((m.mean(0) - 2.0).abs() < 1e-12);
+        assert_eq!(m.argmin(1), 0, "ties break to the lowest class id");
+        // deref exposes the flat storage
+        assert_eq!(m.len(), 6);
+        assert_eq!(&m[..2], &[3.0, 1.0]);
+        assert_eq!(m.as_slice(), &m[..]);
+    }
+
+    #[test]
+    fn try_new_rejects_bad_shapes() {
+        assert!(CostMatrix::try_new(0, vec![]).is_err());
+        assert!(CostMatrix::try_new(2, vec![1.0, 2.0, 3.0]).is_err());
+        assert!(CostMatrix::try_new(2, vec![1.0, 2.0]).is_ok());
+    }
+
+    #[test]
+    fn instance_ref_checks_shapes() {
+        let g = TaskGraph::from_edges(2, &[(0, 1, 1.0)]);
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let good = CostMatrix::new(2, vec![1.0; 4]);
+        let inst = InstanceRef::new(&g, &plat, &good);
+        assert_eq!(inst.n(), 2);
+        assert_eq!(inst.p(), 2);
+        // wrong class count
+        let bad_p = CostMatrix::new(3, vec![1.0; 6]);
+        assert!(InstanceRef::try_new(&g, &plat, &bad_p)
+            .unwrap_err()
+            .contains("classes"));
+        // wrong task count
+        let bad_n = CostMatrix::new(2, vec![1.0; 6]);
+        assert!(InstanceRef::try_new(&g, &plat, &bad_n)
+            .unwrap_err()
+            .contains("rows"));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn raw_shim_copies() {
+        let raw = [1.0, 2.0, 3.0, 4.0];
+        let m = cost_matrix_from_raw(2, &raw);
+        assert_eq!(m.n(), 2);
+        assert_eq!(m.as_slice(), &raw);
+    }
+}

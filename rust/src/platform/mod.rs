@@ -348,48 +348,6 @@ impl CostModel {
     }
 }
 
-/// Dense execution-cost matrix accessor helpers (row-major `v × P`).
-#[derive(Clone, Debug)]
-pub struct Costs<'a> {
-    /// the matrix
-    pub comp: &'a [f64],
-    /// number of classes
-    pub p: usize,
-}
-
-impl<'a> Costs<'a> {
-    /// `C_comp(t, j)`.
-    #[inline]
-    pub fn get(&self, t: usize, j: usize) -> f64 {
-        self.comp[t * self.p + j]
-    }
-
-    /// Mean execution cost of task `t` over classes — the CPOP/HEFT
-    /// scalarisation.
-    pub fn mean(&self, t: usize) -> f64 {
-        let row = &self.comp[t * self.p..(t + 1) * self.p];
-        row.iter().sum::<f64>() / self.p as f64
-    }
-
-    /// Fastest class for task `t` (lowest cost; ties at lowest id).
-    pub fn argmin(&self, t: usize) -> usize {
-        let row = &self.comp[t * self.p..(t + 1) * self.p];
-        let mut best = 0;
-        for j in 1..self.p {
-            if row[j] < row[best] {
-                best = j;
-            }
-        }
-        best
-    }
-
-    /// Minimum execution cost of task `t`.
-    pub fn min(&self, t: usize) -> f64 {
-        let row = &self.comp[t * self.p..(t + 1) * self.p];
-        row.iter().fold(f64::INFINITY, |a, &b| a.min(b))
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -418,20 +376,22 @@ mod tests {
         // HEFT and CEFT-CPOP all produce the same serial chain schedule
         // with the same makespan as the CEFT critical-path length.
         use crate::graph::TaskGraph;
+        use crate::model::{CostMatrix, InstanceRef};
         use crate::sched::Scheduler as _;
         let g = TaskGraph::from_edges(4, &[(0, 1, 7.0), (1, 2, 3.0), (2, 3, 11.0)]);
         // nonzero startup + modest bandwidth: irrelevant when co-located
         let plat = Platform::uniform(1, 0.5, 2.0);
-        let comp = vec![4.0, 6.0, 5.0, 2.0];
-        let serial: f64 = comp.iter().sum();
-        let cpop = crate::sched::cpop::Cpop.schedule(&g, &plat, &comp);
-        let heft = crate::sched::heft::Heft.schedule(&g, &plat, &comp);
-        let cc = crate::sched::ceft_cpop::CeftCpop.schedule(&g, &plat, &comp);
+        let comp = CostMatrix::new(1, vec![4.0, 6.0, 5.0, 2.0]);
+        let serial: f64 = comp.as_slice().iter().sum();
+        let inst = InstanceRef::new(&g, &plat, &comp);
+        let cpop = crate::sched::cpop::Cpop.schedule(inst);
+        let heft = crate::sched::heft::Heft.schedule(inst);
+        let cc = crate::sched::ceft_cpop::CeftCpop.schedule(inst);
         for s in [&cpop, &heft, &cc] {
-            s.validate(&g, &plat, &comp).unwrap();
+            s.validate(inst).unwrap();
             assert!((s.makespan() - serial).abs() < 1e-12);
         }
-        let cp = crate::cp::ceft::find_critical_path(&g, &plat, &comp);
+        let cp = crate::cp::ceft::find_critical_path(inst);
         assert!((cp.length - serial).abs() < 1e-12);
         assert!(cp.path.iter().all(|s| s.class == 0));
     }
@@ -468,7 +428,7 @@ mod tests {
         let w = vec![1.0; 200]; // base weights unused by two-weight
         let (comp, scalar) =
             CostModel::two_weight_high(0.5).generate(&w, &plat, &mut rng);
-        let costs = Costs { comp: &comp, p: 8 };
+        let costs = crate::model::CostMatrix::new(8, comp);
         // expect large best/worst ratios for at least some tasks
         let mut max_ratio: f64 = 0.0;
         for t in 0..200 {
@@ -484,17 +444,6 @@ mod tests {
         );
         // scalar weight is the best-case execution time (CCR anchor)
         assert!((scalar[0] - costs.min(0)).abs() < 1e-12);
-    }
-
-    #[test]
-    fn costs_accessors() {
-        let comp = vec![3.0, 1.0, 2.0, 5.0, 5.0, 5.0];
-        let c = Costs { comp: &comp, p: 3 };
-        assert_eq!(c.get(0, 1), 1.0);
-        assert_eq!(c.argmin(0), 1);
-        assert_eq!(c.min(0), 1.0);
-        assert!((c.mean(0) - 2.0).abs() < 1e-12);
-        assert_eq!(c.argmin(1), 0); // ties -> lowest id
     }
 
     #[test]

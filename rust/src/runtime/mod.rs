@@ -19,8 +19,7 @@
 //! public API is identical in both configurations.
 
 use crate::cp::ceft::{CeftTable, CriticalPath};
-use crate::graph::TaskGraph;
-use crate::platform::{Costs, Platform};
+use crate::model::InstanceRef;
 use std::path::PathBuf;
 
 #[cfg(feature = "pjrt")]
@@ -139,18 +138,15 @@ impl AcceleratedCeft {
     }
 
     /// Compute the CEFT table on the accelerator.
-    pub fn ceft_table(
-        &self,
-        graph: &TaskGraph,
-        platform: &Platform,
-        comp: &[f64],
-    ) -> Result<CeftTable> {
+    pub fn ceft_table(&self, inst: InstanceRef) -> Result<CeftTable> {
+        let graph = inst.graph;
+        let platform = inst.platform;
+        let costs = inst.costs;
         let p = platform.num_classes();
         if !CLASS_SIZES.contains(&p) {
             return Err(RuntimeError(format!("no artifact for p={p}")));
         }
         let v = graph.num_tasks();
-        let costs = Costs { comp, p };
         let l: Vec<f32> = (0..p).map(|j| platform.startup(j) as f32).collect();
         let mut invbw = vec![0f32; p * p];
         for a in 0..p {
@@ -219,7 +215,7 @@ impl AcceleratedCeft {
         }
         // Backpointers are not produced by the kernel; reconstruct them in
         // rust (cheap second pass, same recurrence, f64).
-        let bt = crate::cp::ceft::ceft_table(graph, platform, comp);
+        let bt = crate::cp::ceft::ceft_table(inst);
         Ok(CeftTable {
             p,
             table,
@@ -229,14 +225,9 @@ impl AcceleratedCeft {
 
     /// Full critical path via the accelerator table (path structure from the
     /// f64 backpointer pass, length from the accelerated table).
-    pub fn find_critical_path(
-        &self,
-        graph: &TaskGraph,
-        platform: &Platform,
-        comp: &[f64],
-    ) -> Result<CriticalPath> {
-        let t = self.ceft_table(graph, platform, comp)?;
-        Ok(crate::cp::ceft::critical_path_from_table(graph, &t))
+    pub fn find_critical_path(&self, inst: InstanceRef) -> Result<CriticalPath> {
+        let t = self.ceft_table(inst)?;
+        Ok(crate::cp::ceft::critical_path_from_table(inst.graph, &t))
     }
 }
 
@@ -276,6 +267,7 @@ pub fn relax_batch_reference(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::Platform;
 
     #[test]
     fn artifact_names_are_stable() {

@@ -11,8 +11,7 @@ use super::{list_schedule_with, PlacementWs, Schedule, Scheduler};
 use crate::cp::ceft::find_critical_path_with;
 use crate::cp::ranks::cpop_priorities_into;
 use crate::cp::workspace::Workspace;
-use crate::graph::TaskGraph;
-use crate::platform::Platform;
+use crate::model::InstanceRef;
 
 /// CEFT-CPOP: CPOP with CEFT's critical path and partial assignment.
 #[derive(Clone, Copy, Debug, Default)]
@@ -23,22 +22,16 @@ impl Scheduler for CeftCpop {
         "CEFT-CPOP"
     }
 
-    fn schedule_with(
-        &self,
-        ws: &mut Workspace,
-        graph: &TaskGraph,
-        platform: &Platform,
-        comp: &[f64],
-    ) -> Schedule {
+    fn schedule_with(&self, ws: &mut Workspace, inst: InstanceRef) -> Schedule {
         // the CEFT path first: it uses ws.table/backptr, which the rank
         // sweeps below do not touch
-        let cp = find_critical_path_with(ws, graph, platform, comp);
+        let cp = find_critical_path_with(ws, inst);
         // priorities stay mean-value rank_u + rank_d ("the rest of the
         // algorithm remains the same", §6)
-        cpop_priorities_into(ws, graph, platform, comp);
+        cpop_priorities_into(ws, inst);
         // pin every CP task to the class its partial assignment chose
-        cp.fill_assignment_dense(graph.num_tasks(), &mut ws.pins);
-        list_schedule_with(ws, graph, platform, comp, PlacementWs::Pinned)
+        cp.fill_assignment_dense(inst.n(), &mut ws.pins);
+        list_schedule_with(ws, inst, PlacementWs::Pinned)
     }
 }
 
@@ -46,13 +39,13 @@ impl Scheduler for CeftCpop {
 mod tests {
     use super::*;
     use crate::cp::ceft::find_critical_path;
-    use crate::graph::generator::{generate, RggParams};
-    use crate::platform::CostModel;
+    use crate::graph::generator::{generate, Instance, RggParams};
+    use crate::platform::{CostModel, Platform};
     use crate::sched::cpop::Cpop;
     use crate::util::rng::Xoshiro256;
 
-    fn rgg(seed: u64, plat: &Platform, model: &CostModel, n: usize) -> (TaskGraph, Vec<f64>) {
-        let inst = generate(
+    fn rgg(seed: u64, plat: &Platform, model: &CostModel, n: usize) -> Instance {
+        generate(
             &RggParams {
                 n,
                 out_degree: 3,
@@ -64,26 +57,27 @@ mod tests {
             model,
             plat,
             seed,
-        );
-        (inst.graph, inst.comp)
+        )
     }
 
     #[test]
     fn ceft_cpop_schedules_are_valid() {
         let plat = Platform::uniform(4, 1.0, 0.0);
         for seed in 0..5 {
-            let (g, comp) = rgg(seed, &plat, &CostModel::Classic { beta: 0.5 }, 100);
-            let s = CeftCpop.schedule(&g, &plat, &comp);
-            s.validate(&g, &plat, &comp).unwrap();
+            let inst = rgg(seed, &plat, &CostModel::Classic { beta: 0.5 }, 100);
+            let iref = inst.bind(&plat);
+            let s = CeftCpop.schedule(iref);
+            s.validate(iref).unwrap();
         }
     }
 
     #[test]
     fn cp_tasks_follow_ceft_assignment() {
         let plat = Platform::uniform(4, 1.0, 0.0);
-        let (g, comp) = rgg(21, &plat, &CostModel::Classic { beta: 0.5 }, 80);
-        let cp = find_critical_path(&g, &plat, &comp);
-        let s = CeftCpop.schedule(&g, &plat, &comp);
+        let inst = rgg(21, &plat, &CostModel::Classic { beta: 0.5 }, 80);
+        let iref = inst.bind(&plat);
+        let cp = find_critical_path(iref);
+        let s = CeftCpop.schedule(iref);
         for step in &cp.path {
             assert_eq!(
                 s.assignments[step.task].proc, step.class,
@@ -117,8 +111,9 @@ mod tests {
                 &plat,
                 seed,
             );
-            let m_ceft = CeftCpop.schedule(&inst.graph, &plat, &inst.comp).makespan();
-            let m_cpop = Cpop.schedule(&inst.graph, &plat, &inst.comp).makespan();
+            let iref = inst.bind(&plat);
+            let m_ceft = CeftCpop.schedule(iref).makespan();
+            let m_cpop = Cpop.schedule(iref).makespan();
             if m_ceft < m_cpop * (1.0 - 1e-9) {
                 wins += 1;
             } else if m_cpop < m_ceft * (1.0 - 1e-9) {
@@ -135,9 +130,10 @@ mod tests {
     fn identical_when_single_class() {
         // with P=1 both algorithms degenerate to the same serial schedule
         let plat = Platform::uniform(1, 1.0, 0.0);
-        let (g, comp) = rgg(4, &plat, &CostModel::Classic { beta: 0.0 }, 60);
-        let a = CeftCpop.schedule(&g, &plat, &comp).makespan();
-        let b = Cpop.schedule(&g, &plat, &comp).makespan();
+        let inst = rgg(4, &plat, &CostModel::Classic { beta: 0.0 }, 60);
+        let iref = inst.bind(&plat);
+        let a = CeftCpop.schedule(iref).makespan();
+        let b = Cpop.schedule(iref).makespan();
         assert!((a - b).abs() < 1e-9);
     }
 }

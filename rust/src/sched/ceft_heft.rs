@@ -13,8 +13,7 @@
 use super::{list_schedule_with, PlacementWs, Schedule, Scheduler};
 use crate::cp::ceft::{ceft_table_into, ceft_table_rev_into};
 use crate::cp::workspace::Workspace;
-use crate::graph::TaskGraph;
-use crate::platform::Platform;
+use crate::model::InstanceRef;
 
 /// Per-task row minimum of the `v × P` table in `ws.table`, appended to
 /// `out` (cleared first). Lowest value per task = the CEFT-based rank.
@@ -27,46 +26,34 @@ fn min_rows_into(table: &[f64], v: usize, p: usize, out: &mut Vec<f64>) {
 }
 
 /// `rank_ceft_down` for every task: `min_p CEFT(t, p)` on the original DAG.
-pub fn rank_ceft_down(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Vec<f64> {
+pub fn rank_ceft_down(inst: InstanceRef) -> Vec<f64> {
     let mut ws = Workspace::new();
     let mut out = Vec::new();
-    rank_ceft_down_into(&mut ws, graph, platform, comp, &mut out);
+    rank_ceft_down_into(&mut ws, inst, &mut out);
     out
 }
 
 /// [`rank_ceft_down`] with workspace scratch and a caller-owned output.
-pub fn rank_ceft_down_into(
-    ws: &mut Workspace,
-    graph: &TaskGraph,
-    platform: &Platform,
-    comp: &[f64],
-    out: &mut Vec<f64>,
-) {
-    ceft_table_into(ws, graph, platform, comp);
-    min_rows_into(&ws.table, graph.num_tasks(), platform.num_classes(), out);
+pub fn rank_ceft_down_into(ws: &mut Workspace, inst: InstanceRef, out: &mut Vec<f64>) {
+    ceft_table_into(ws, inst);
+    min_rows_into(&ws.table, inst.n(), inst.p(), out);
 }
 
 /// `rank_ceft_up` for every task: `min_p CEFT_T(t, p)` on the transposed
 /// DAG — computed by the reverse sweep
 /// [`ceft_table_rev_into`], which is bit-identical to the DP over a
 /// materialised transpose without allocating one.
-pub fn rank_ceft_up(graph: &TaskGraph, platform: &Platform, comp: &[f64]) -> Vec<f64> {
+pub fn rank_ceft_up(inst: InstanceRef) -> Vec<f64> {
     let mut ws = Workspace::new();
     let mut out = Vec::new();
-    rank_ceft_up_into(&mut ws, graph, platform, comp, &mut out);
+    rank_ceft_up_into(&mut ws, inst, &mut out);
     out
 }
 
 /// [`rank_ceft_up`] with workspace scratch and a caller-owned output.
-pub fn rank_ceft_up_into(
-    ws: &mut Workspace,
-    graph: &TaskGraph,
-    platform: &Platform,
-    comp: &[f64],
-    out: &mut Vec<f64>,
-) {
-    ceft_table_rev_into(ws, graph, platform, comp);
-    min_rows_into(&ws.table, graph.num_tasks(), platform.num_classes(), out);
+pub fn rank_ceft_up_into(ws: &mut Workspace, inst: InstanceRef, out: &mut Vec<f64>) {
+    ceft_table_rev_into(ws, inst);
+    min_rows_into(&ws.table, inst.n(), inst.p(), out);
 }
 
 /// HEFT with the CEFT upward rank.
@@ -78,17 +65,11 @@ impl Scheduler for CeftHeftUp {
         "CEFT-HEFT-UP"
     }
 
-    fn schedule_with(
-        &self,
-        ws: &mut Workspace,
-        graph: &TaskGraph,
-        platform: &Platform,
-        comp: &[f64],
-    ) -> Schedule {
-        ceft_table_rev_into(ws, graph, platform, comp);
+    fn schedule_with(&self, ws: &mut Workspace, inst: InstanceRef) -> Schedule {
+        ceft_table_rev_into(ws, inst);
         let Workspace { table, prio, .. } = &mut *ws;
-        min_rows_into(table, graph.num_tasks(), platform.num_classes(), prio);
-        list_schedule_with(ws, graph, platform, comp, PlacementWs::MinEft)
+        min_rows_into(table, inst.n(), inst.p(), prio);
+        list_schedule_with(ws, inst, PlacementWs::MinEft)
     }
 }
 
@@ -101,29 +82,23 @@ impl Scheduler for CeftHeftDown {
         "CEFT-HEFT-DOWN"
     }
 
-    fn schedule_with(
-        &self,
-        ws: &mut Workspace,
-        graph: &TaskGraph,
-        platform: &Platform,
-        comp: &[f64],
-    ) -> Schedule {
-        ceft_table_into(ws, graph, platform, comp);
+    fn schedule_with(&self, ws: &mut Workspace, inst: InstanceRef) -> Schedule {
+        ceft_table_into(ws, inst);
         let Workspace { table, down, prio, .. } = &mut *ws;
-        min_rows_into(table, graph.num_tasks(), platform.num_classes(), down);
+        min_rows_into(table, inst.n(), inst.p(), down);
         prio.clear();
         prio.extend(down.iter().map(|d| -d));
-        list_schedule_with(ws, graph, platform, comp, PlacementWs::MinEft)
+        list_schedule_with(ws, inst, PlacementWs::MinEft)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::generator::{generate, RggParams};
-    use crate::platform::CostModel;
+    use crate::graph::generator::{generate, Instance, RggParams};
+    use crate::platform::{CostModel, Platform};
 
-    fn instance(seed: u64) -> (TaskGraph, Platform, Vec<f64>) {
+    fn instance(seed: u64) -> (Instance, Platform) {
         let plat = Platform::uniform(4, 1.0, 0.0);
         let inst = generate(
             &RggParams {
@@ -138,29 +113,24 @@ mod tests {
             &plat,
             seed,
         );
-        (inst.graph, plat, inst.comp)
+        (inst, plat)
     }
 
     #[test]
     fn both_variants_produce_valid_schedules() {
         for seed in 0..5 {
-            let (g, plat, comp) = instance(seed);
-            CeftHeftUp
-                .schedule(&g, &plat, &comp)
-                .validate(&g, &plat, &comp)
-                .unwrap();
-            CeftHeftDown
-                .schedule(&g, &plat, &comp)
-                .validate(&g, &plat, &comp)
-                .unwrap();
+            let (inst, plat) = instance(seed);
+            let iref = inst.bind(&plat);
+            CeftHeftUp.schedule(iref).validate(iref).unwrap();
+            CeftHeftDown.schedule(iref).validate(iref).unwrap();
         }
     }
 
     #[test]
     fn ceft_up_rank_decreases_along_edges() {
-        let (g, plat, comp) = instance(3);
-        let up = rank_ceft_up(&g, &plat, &comp);
-        for e in g.edges() {
+        let (inst, plat) = instance(3);
+        let up = rank_ceft_up(inst.bind(&plat));
+        for e in inst.graph.edges() {
             assert!(
                 up[e.src] > up[e.dst],
                 "upward rank must strictly decrease along {} -> {}",
@@ -172,9 +142,9 @@ mod tests {
 
     #[test]
     fn ceft_down_rank_increases_along_edges() {
-        let (g, plat, comp) = instance(3);
-        let down = rank_ceft_down(&g, &plat, &comp);
-        for e in g.edges() {
+        let (inst, plat) = instance(3);
+        let down = rank_ceft_down(inst.bind(&plat));
+        for e in inst.graph.edges() {
             assert!(
                 down[e.src] < down[e.dst],
                 "downward rank must strictly increase along {} -> {}",
@@ -191,10 +161,11 @@ mod tests {
         // to the source — not exactly equal on multi-path DAGs, but it must
         // be the same order of magnitude and upper-bounded by neither side
         // diverging (regression check on a fixed instance).
-        let (g, plat, comp) = instance(8);
-        let up = rank_ceft_up(&g, &plat, &comp);
-        let cp = crate::cp::ceft::find_critical_path(&g, &plat, &comp);
-        let entry = g.sources()[0];
+        let (inst, plat) = instance(8);
+        let iref = inst.bind(&plat);
+        let up = rank_ceft_up(iref);
+        let cp = crate::cp::ceft::find_critical_path(iref);
+        let entry = inst.graph.sources()[0];
         let rel = (up[entry] - cp.length).abs() / cp.length;
         assert!(
             rel < 0.05,

@@ -10,8 +10,7 @@
 use super::{list_schedule_with, PlacementWs, Schedule, Scheduler};
 use crate::cp::ranks::{cpop_cp_from_priorities, cpop_cp_processor, cpop_priorities_into};
 use crate::cp::workspace::Workspace;
-use crate::graph::TaskGraph;
-use crate::platform::Platform;
+use crate::model::InstanceRef;
 
 /// Classic CPOP.
 #[derive(Clone, Copy, Debug, Default)]
@@ -22,24 +21,18 @@ impl Scheduler for Cpop {
         "CPOP"
     }
 
-    fn schedule_with(
-        &self,
-        ws: &mut Workspace,
-        graph: &TaskGraph,
-        platform: &Platform,
-        comp: &[f64],
-    ) -> Schedule {
-        cpop_priorities_into(ws, graph, platform, comp);
+    fn schedule_with(&self, ws: &mut Workspace, inst: InstanceRef) -> Schedule {
+        cpop_priorities_into(ws, inst);
         // Algorithm 2 lines 5-13 over the priorities just computed (the
         // classic signature recomputed the ranks a second time here).
-        cpop_cp_from_priorities(graph, &ws.prio, &mut ws.cp_tasks);
-        let p_cp = cpop_cp_processor(&ws.cp_tasks, comp, platform.num_classes());
+        cpop_cp_from_priorities(inst.graph, &ws.prio, &mut ws.cp_tasks);
+        let p_cp = cpop_cp_processor(&ws.cp_tasks, inst.costs);
         ws.pins.clear();
-        ws.pins.resize(graph.num_tasks(), None);
+        ws.pins.resize(inst.n(), None);
         for &t in &ws.cp_tasks {
             ws.pins[t] = Some(p_cp);
         }
-        list_schedule_with(ws, graph, platform, comp, PlacementWs::Pinned)
+        list_schedule_with(ws, inst, PlacementWs::Pinned)
     }
 }
 
@@ -47,10 +40,10 @@ impl Scheduler for Cpop {
 mod tests {
     use super::*;
     use crate::cp::ranks::cpop_critical_path;
-    use crate::graph::generator::{generate, RggParams};
-    use crate::platform::CostModel;
+    use crate::graph::generator::{generate, Instance, RggParams};
+    use crate::platform::{CostModel, Platform};
 
-    fn instance(seed: u64, p: usize) -> (TaskGraph, Platform, Vec<f64>) {
+    fn instance(seed: u64, p: usize) -> (Instance, Platform) {
         let plat = Platform::uniform(p, 1.0, 0.0);
         let inst = generate(
             &RggParams {
@@ -65,23 +58,25 @@ mod tests {
             &plat,
             seed,
         );
-        (inst.graph, plat, inst.comp)
+        (inst, plat)
     }
 
     #[test]
     fn cpop_schedules_are_valid() {
         for seed in 0..5 {
-            let (g, plat, comp) = instance(seed, 4);
-            let s = Cpop.schedule(&g, &plat, &comp);
-            s.validate(&g, &plat, &comp).unwrap();
+            let (inst, plat) = instance(seed, 4);
+            let iref = inst.bind(&plat);
+            let s = Cpop.schedule(iref);
+            s.validate(iref).unwrap();
         }
     }
 
     #[test]
     fn critical_path_tasks_share_one_processor() {
-        let (g, plat, comp) = instance(3, 4);
-        let (cp, _) = cpop_critical_path(&g, &plat, &comp);
-        let s = Cpop.schedule(&g, &plat, &comp);
+        let (inst, plat) = instance(3, 4);
+        let iref = inst.bind(&plat);
+        let (cp, _) = cpop_critical_path(iref);
+        let s = Cpop.schedule(iref);
         let procs: std::collections::HashSet<usize> =
             cp.iter().map(|&t| s.assignments[t].proc).collect();
         assert_eq!(procs.len(), 1, "CPOP must pin the whole CP to one proc");
@@ -89,8 +84,10 @@ mod tests {
 
     #[test]
     fn cp_is_entry_to_exit_connected() {
-        let (g, plat, comp) = instance(9, 4);
-        let (cp, _) = cpop_critical_path(&g, &plat, &comp);
+        let (inst, plat) = instance(9, 4);
+        let iref = inst.bind(&plat);
+        let (cp, _) = cpop_critical_path(iref);
+        let g = &inst.graph;
         assert_eq!(g.in_degree(cp[0]), 0);
         assert_eq!(g.out_degree(*cp.last().unwrap()), 0);
         for w in cp.windows(2) {
@@ -100,10 +97,11 @@ mod tests {
 
     #[test]
     fn single_proc_cpop_is_serial() {
-        let (g, plat, comp) = instance(5, 1);
-        let s = Cpop.schedule(&g, &plat, &comp);
-        s.validate(&g, &plat, &comp).unwrap();
-        let serial: f64 = comp.iter().sum();
+        let (inst, plat) = instance(5, 1);
+        let iref = inst.bind(&plat);
+        let s = Cpop.schedule(iref);
+        s.validate(iref).unwrap();
+        let serial: f64 = inst.comp.as_slice().iter().sum();
         assert!((s.makespan() - serial).abs() < 1e-6);
     }
 }

@@ -49,6 +49,7 @@ pub fn render(s: &Schedule, width: usize) -> String {
 mod tests {
     use super::*;
     use crate::graph::TaskGraph;
+    use crate::model::{CostMatrix, InstanceRef};
     use crate::platform::Platform;
     use crate::sched::{heft::Heft, Scheduler};
 
@@ -56,8 +57,8 @@ mod tests {
     fn renders_all_processors_and_tasks() {
         let g = TaskGraph::from_edges(3, &[(0, 1, 1.0), (0, 2, 1.0)]);
         let plat = Platform::uniform(2, 1.0, 0.0);
-        let comp = vec![5.0, 5.0, 10.0, 10.0, 10.0, 10.0];
-        let s = Heft.schedule(&g, &plat, &comp);
+        let comp = CostMatrix::new(2, vec![5.0, 5.0, 10.0, 10.0, 10.0, 10.0]);
+        let s = Heft.schedule(InstanceRef::new(&g, &plat, &comp));
         let text = render(&s, 60);
         assert!(text.contains("P0"));
         assert!(text.contains("P1"));
@@ -70,8 +71,8 @@ mod tests {
     fn tiny_width_degrades_to_hashes() {
         let g = TaskGraph::from_edges(2, &[(0, 1, 1.0)]);
         let plat = Platform::uniform(1, 1.0, 0.0);
-        let comp = vec![1.0, 1.0];
-        let s = Heft.schedule(&g, &plat, &comp);
+        let comp = CostMatrix::new(1, vec![1.0, 1.0]);
+        let s = Heft.schedule(InstanceRef::new(&g, &plat, &comp));
         let text = render(&s, 4);
         assert!(text.contains('#') || text.contains('['));
     }

@@ -8,8 +8,7 @@
 use super::{list_schedule_with, PlacementWs, Schedule, Scheduler};
 use crate::cp::ranks::{rank_downward_into, rank_upward_into};
 use crate::cp::workspace::Workspace;
-use crate::graph::TaskGraph;
-use crate::platform::Platform;
+use crate::model::InstanceRef;
 
 /// Classic HEFT: descending `rank_u` priority, min-EFT placement.
 #[derive(Clone, Copy, Debug, Default)]
@@ -20,15 +19,9 @@ impl Scheduler for Heft {
         "HEFT"
     }
 
-    fn schedule_with(
-        &self,
-        ws: &mut Workspace,
-        graph: &TaskGraph,
-        platform: &Platform,
-        comp: &[f64],
-    ) -> Schedule {
-        rank_upward_into(graph, platform, comp, &mut ws.prio);
-        list_schedule_with(ws, graph, platform, comp, PlacementWs::MinEft)
+    fn schedule_with(&self, ws: &mut Workspace, inst: InstanceRef) -> Schedule {
+        rank_upward_into(inst, &mut ws.prio);
+        list_schedule_with(ws, inst, PlacementWs::MinEft)
     }
 }
 
@@ -43,17 +36,11 @@ impl Scheduler for HeftDown {
         "HEFT-DOWN"
     }
 
-    fn schedule_with(
-        &self,
-        ws: &mut Workspace,
-        graph: &TaskGraph,
-        platform: &Platform,
-        comp: &[f64],
-    ) -> Schedule {
-        rank_downward_into(graph, platform, comp, &mut ws.down);
+    fn schedule_with(&self, ws: &mut Workspace, inst: InstanceRef) -> Schedule {
+        rank_downward_into(inst, &mut ws.down);
         ws.prio.clear();
         ws.prio.extend(ws.down.iter().map(|d| -d));
-        list_schedule_with(ws, graph, platform, comp, PlacementWs::MinEft)
+        list_schedule_with(ws, inst, PlacementWs::MinEft)
     }
 }
 
@@ -61,10 +48,12 @@ impl Scheduler for HeftDown {
 mod tests {
     use super::*;
     use crate::graph::generator::{generate, RggParams};
+    use crate::graph::TaskGraph;
     use crate::metrics;
-    use crate::platform::CostModel;
+    use crate::model::CostMatrix;
+    use crate::platform::{CostModel, Platform};
 
-    fn instance(seed: u64) -> (TaskGraph, Platform, Vec<f64>) {
+    fn instance(seed: u64) -> (crate::graph::generator::Instance, Platform) {
         let plat = Platform::uniform(4, 1.0, 0.0);
         let inst = generate(
             &RggParams {
@@ -79,40 +68,44 @@ mod tests {
             &plat,
             seed,
         );
-        (inst.graph, plat, inst.comp)
+        (inst, plat)
     }
 
     #[test]
     fn heft_produces_valid_schedules() {
         for seed in 0..5 {
-            let (g, plat, comp) = instance(seed);
-            let s = Heft.schedule(&g, &plat, &comp);
-            s.validate(&g, &plat, &comp).unwrap();
+            let (inst, plat) = instance(seed);
+            let iref = inst.bind(&plat);
+            let s = Heft.schedule(iref);
+            s.validate(iref).unwrap();
         }
     }
 
     #[test]
     fn heft_down_produces_valid_schedules() {
         for seed in 0..5 {
-            let (g, plat, comp) = instance(seed);
-            let s = HeftDown.schedule(&g, &plat, &comp);
-            s.validate(&g, &plat, &comp).unwrap();
+            let (inst, plat) = instance(seed);
+            let iref = inst.bind(&plat);
+            let s = HeftDown.schedule(iref);
+            s.validate(iref).unwrap();
         }
     }
 
     #[test]
     fn heft_beats_serial_execution() {
-        let (g, plat, comp) = instance(7);
-        let s = Heft.schedule(&g, &plat, &comp);
-        let serial = metrics::serial_time(&comp, 4);
+        let (inst, plat) = instance(7);
+        let iref = inst.bind(&plat);
+        let s = Heft.schedule(iref);
+        let serial = metrics::serial_time(&inst.comp);
         assert!(s.makespan() < serial, "heft should beat best serial");
     }
 
     #[test]
     fn heft_respects_cpmin_lower_bound() {
-        let (g, plat, comp) = instance(11);
-        let s = Heft.schedule(&g, &plat, &comp);
-        let lb = crate::cp::cpmin::cp_min_cost(&g, &comp, 4);
+        let (inst, plat) = instance(11);
+        let iref = inst.bind(&plat);
+        let s = Heft.schedule(iref);
+        let lb = crate::cp::cpmin::cp_min_cost(iref);
         assert!(s.makespan() + 1e-9 >= lb);
     }
 
@@ -125,14 +118,15 @@ mod tests {
         );
         let plat = Platform::uniform(2, 1.0, 0.0);
         #[rustfmt::skip]
-        let comp = vec![
+        let comp = CostMatrix::new(2, vec![
             1.0, 9.0,
             8.0, 1.0,
             1.0, 8.0,
             1.0, 9.0,
-        ];
-        let s = Heft.schedule(&g, &plat, &comp);
-        s.validate(&g, &plat, &comp).unwrap();
+        ]);
+        let inst = InstanceRef::new(&g, &plat, &comp);
+        let s = Heft.schedule(inst);
+        s.validate(inst).unwrap();
         // the specialised tasks should land on their fast classes
         assert_eq!(s.assignments[1].proc, 1);
         assert_eq!(s.assignments[2].proc, 0);

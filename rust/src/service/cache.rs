@@ -35,6 +35,12 @@ pub struct CacheStats {
     pub insertions: u64,
     /// entries displaced by the capacity bound
     pub evictions: u64,
+    /// misses that piggybacked on another request's in-flight computation
+    /// instead of running the DP themselves (the engine's single-flight
+    /// dedup; every dedup hit is also counted in `misses` — the lookup did
+    /// miss the cache — so `misses - dedup_hits` is the number of actual
+    /// computations)
+    pub dedup_hits: u64,
 }
 
 /// A bounded least-recently-used map.
@@ -140,6 +146,13 @@ impl<K: Eq + Hash + Copy, V> LruCache<K, V> {
     /// Capacity bound.
     pub fn capacity(&self) -> usize {
         self.cap
+    }
+
+    /// Record one single-flight dedup hit: a lookup that missed but was
+    /// satisfied by waiting on another request's in-flight computation
+    /// (counted by the engine, which owns the in-flight table).
+    pub fn record_dedup_hit(&mut self) {
+        self.stats.dedup_hits += 1;
     }
 
     /// Counter snapshot.

@@ -11,10 +11,12 @@
 //!
 //! Concurrency model: the engine state sits behind one mutex, but all
 //! algorithm work (the `O(P²e)` CEFT DP, the list schedulers) runs outside
-//! it, so the lock is only held for hash-map lookups. Two racing clients
-//! may compute the same uncached result twice; both arrive at the same
-//! bits, and the second `put` is an idempotent overwrite — accepted in
-//! exchange for never blocking the fast path. Batched entry points fan
+//! it, so the lock is only held for hash-map lookups. Uncached keys are
+//! **single-flight**: the first requester becomes the leader and runs the
+//! DP; concurrent requests for the same key park on the leader's in-flight
+//! cell (a `Condvar`) and receive its result the moment it lands, counted
+//! as `dedup_hits` in the cache stats. Cache hits never touch the
+//! in-flight table, so the fast path is unchanged. Batched entry points fan
 //! work across [`crate::util::pool`] workers so throughput scales with
 //! cores (see `benches/service_throughput.rs`). Cache misses borrow a
 //! long-lived [`crate::cp::workspace::Workspace`] from a pool whose idle
@@ -33,6 +35,7 @@ use crate::cp::workspace::WorkspacePool;
 use crate::graph::generator::Instance;
 use crate::graph::io;
 use crate::graph::TaskGraph;
+use crate::model::{CostMatrix, InstanceRef};
 use crate::platform::Platform;
 use crate::sched::{Algorithm, Schedule};
 use crate::service::cache::{CacheKey, CacheStats, LruCache};
@@ -40,10 +43,11 @@ use crate::service::hashing;
 use crate::service::protocol::{self, Request, Target};
 use crate::util::json::Json;
 use crate::util::pool;
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Algorithm-slot marker for critical-path cache entries. Real algorithm
 /// ids ([`Algorithm::id`]) are small; this can never collide.
@@ -108,11 +112,87 @@ fn platforms_equal(a: &Platform, b: &Platform) -> bool {
 struct Interned {
     id: u64,
     graph: Arc<TaskGraph>,
-    comp: Arc<Vec<f64>>,
+    comp: Arc<CostMatrix>,
     platform: Arc<Platform>,
     graph_hash: u64,
     platform_hash: u64,
     comp_hash: u64,
+}
+
+impl Interned {
+    /// The [`InstanceRef`] view of this interned instance — what the
+    /// algorithm layer consumes.
+    fn inst(&self) -> InstanceRef<'_> {
+        InstanceRef::new(self.graph.as_ref(), self.platform.as_ref(), self.comp.as_ref())
+    }
+}
+
+/// One in-flight computation cell: the leader deposits the outcome and
+/// wakes every parked follower. The compute runs *outside* the engine's
+/// state mutex, so a panicking leader does not take the engine down —
+/// which is exactly why the leader path must still resolve the cell on
+/// unwind: it completes with `None` (and removes the in-flight entry)
+/// before re-raising, and followers that observe `None` re-enter
+/// admission instead of hanging forever.
+struct Inflight<T> {
+    /// `None` = still computing; `Some(Some(v))` = completed;
+    /// `Some(None)` = the leader unwound without a result (retry)
+    result: Mutex<Option<Option<Arc<T>>>>,
+    ready: Condvar,
+}
+
+impl<T> Inflight<T> {
+    fn new() -> Self {
+        Self {
+            result: Mutex::new(None),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Park until the leader resolves the cell; `None` means the leader
+    /// unwound and the caller should retry admission.
+    fn wait(&self) -> Option<Arc<T>> {
+        let mut guard = self.result.lock().unwrap();
+        while guard.is_none() {
+            guard = self.ready.wait(guard).unwrap();
+        }
+        guard.as_ref().unwrap().clone()
+    }
+
+    /// Deposit the outcome and wake all followers.
+    fn complete(&self, value: Option<Arc<T>>) {
+        *self.result.lock().unwrap() = Some(value);
+        self.ready.notify_all();
+    }
+}
+
+/// Outcome of the single admission pass over the engine state: a cache
+/// hit, a follower parked on someone else's computation, or leadership of
+/// a fresh one.
+enum Flight<T> {
+    Hit(Arc<T>),
+    Follower(Arc<Inflight<T>>),
+    Leader(Arc<Inflight<T>>),
+}
+
+/// The (result cache, in-flight table) pair [`Engine::single_flight`]
+/// operates on — projected out of [`State`] by a plain fn pointer so the
+/// one generic implementation serves both the critical-path and the
+/// schedule caches (a concurrency-protocol fix can never apply to one and
+/// miss the other).
+type Slots<'a, T> = (
+    &'a mut LruCache<CacheKey, Arc<T>>,
+    &'a mut HashMap<CacheKey, Arc<Inflight<T>>>,
+);
+
+/// [`Slots`] projection for the critical-path cache.
+fn cp_slots(st: &mut State) -> Slots<'_, CriticalPath> {
+    (&mut st.cp_cache, &mut st.cp_inflight)
+}
+
+/// [`Slots`] projection for the schedule cache.
+fn sched_slots(st: &mut State) -> Slots<'_, Schedule> {
+    (&mut st.sched_cache, &mut st.sched_inflight)
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -130,6 +210,11 @@ struct State {
     instances: LruCache<u64, Arc<Interned>>,
     cp_cache: LruCache<CacheKey, Arc<CriticalPath>>,
     sched_cache: LruCache<CacheKey, Arc<Schedule>>,
+    /// single-flight tables: uncached keys currently being computed; the
+    /// entry is inserted by the leader under this same mutex and removed
+    /// when its result lands in the cache, so membership here is exact
+    cp_inflight: HashMap<CacheKey, Arc<Inflight<CriticalPath>>>,
+    sched_inflight: HashMap<CacheKey, Arc<Inflight<Schedule>>>,
     counters: Counters,
 }
 
@@ -159,6 +244,8 @@ impl Engine {
                 instances: LruCache::new(config.intern_capacity.max(1)),
                 cp_cache: LruCache::new(cap),
                 sched_cache: LruCache::new(cap),
+                cp_inflight: HashMap::new(),
+                sched_inflight: HashMap::new(),
                 counters: Counters::default(),
             }),
             threads,
@@ -184,27 +271,29 @@ impl Engine {
     ) -> Result<Arc<Interned>, String> {
         let platform = match platform {
             Some(p) => {
-                if p.num_classes() != instance.p {
+                if p.num_classes() != instance.p() {
                     return Err(format!(
                         "platform has {} classes but instance expects {}",
                         p.num_classes(),
-                        instance.p
+                        instance.p()
                     ));
                 }
                 p
             }
-            None => Platform::uniform(instance.p, 1.0, 0.0),
+            None => Platform::uniform(instance.p(), 1.0, 0.0),
         };
-        if instance.comp.len() != instance.graph.num_tasks() * instance.p {
+        // `Instance::p` is the cost-matrix stride, so stride consistency is
+        // structural; only the task count vs the graph still needs a check
+        if instance.comp.n() != instance.graph.num_tasks() {
             return Err(format!(
-                "comp has {} entries, expected {}",
-                instance.comp.len(),
-                instance.graph.num_tasks() * instance.p
+                "comp has {} rows, expected {}",
+                instance.comp.n(),
+                instance.graph.num_tasks()
             ));
         }
         let graph_hash = hashing::hash_graph(&instance.graph);
         let platform_hash = hashing::hash_platform(&platform);
-        let comp_hash = hashing::hash_comp(&instance.comp);
+        let comp_hash = hashing::hash_comp(instance.comp.as_slice());
         let id = hashing::combine(&[graph_hash, platform_hash, comp_hash]);
         let mut st = self.state.lock().unwrap();
         if let Some(existing) = st.instances.get(&id) {
@@ -256,7 +345,79 @@ impl Engine {
         }
     }
 
-    /// Memoized CEFT critical path. Returns `(result, was_cached)`.
+    /// The single-flight memoization protocol, shared by both result
+    /// caches. Admission runs atomically under the state lock: a cache hit
+    /// returns immediately; an uncached key with an in-flight leader parks
+    /// this request on the leader's cell (a dedup hit); otherwise this
+    /// request leads and runs `compute` **outside** the lock. A leader
+    /// that unwinds resolves its cell with `None` and removes the
+    /// in-flight entry before re-raising, so followers loop back into
+    /// admission instead of parking forever. Returns
+    /// `(result, was_cached)`; followers report `cached = true` (the
+    /// answer came from another request's computation).
+    fn single_flight<T>(
+        &self,
+        key: CacheKey,
+        slots: for<'a> fn(&'a mut State) -> Slots<'a, T>,
+        compute: impl Fn() -> T,
+    ) -> (Arc<T>, bool) {
+        loop {
+            // one admission pass under the lock: cache hit, follower, leader
+            let flight = {
+                let mut st = self.state.lock().unwrap();
+                let (cache, inflight) = slots(&mut st);
+                if let Some(hit) = cache.get(&key) {
+                    Flight::Hit(hit.clone())
+                } else if let Some(f) = inflight.get(&key) {
+                    Flight::Follower(f.clone())
+                } else {
+                    let f = Arc::new(Inflight::new());
+                    inflight.insert(key, f.clone());
+                    Flight::Leader(f)
+                }
+            };
+            match flight {
+                Flight::Hit(v) => return (v, true),
+                Flight::Follower(f) => {
+                    if let Some(v) = f.wait() {
+                        let mut st = self.state.lock().unwrap();
+                        slots(&mut st).0.record_dedup_hit();
+                        return (v, true);
+                    }
+                    // the leader unwound without producing a result and its
+                    // in-flight entry is gone — re-enter admission (this
+                    // request may become the new leader)
+                }
+                Flight::Leader(f) => {
+                    let computed =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| compute()));
+                    match computed {
+                        Ok(v) => {
+                            let v = Arc::new(v);
+                            {
+                                let mut st = self.state.lock().unwrap();
+                                let (cache, inflight) = slots(&mut st);
+                                cache.put(key, v.clone());
+                                inflight.remove(&key);
+                            }
+                            f.complete(Some(v.clone()));
+                            return (v, false);
+                        }
+                        Err(payload) => {
+                            {
+                                let mut st = self.state.lock().unwrap();
+                                slots(&mut st).1.remove(&key);
+                            }
+                            f.complete(None);
+                            std::panic::resume_unwind(payload);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Memoized CEFT critical path with single-flight dedup.
     fn critical_path_for(&self, inst: &Interned) -> (Arc<CriticalPath>, bool) {
         let key = CacheKey {
             graph: inst.graph_hash,
@@ -264,23 +425,14 @@ impl Engine {
             comp: inst.comp_hash,
             algorithm: CP_MARKER,
         };
-        if let Some(hit) = self.state.lock().unwrap().cp_cache.get(&key) {
-            return (hit.clone(), true);
-        }
-        // compute outside the lock, in a pooled per-worker workspace
-        let cp = Arc::new(self.workspaces.with(|ws| {
-            find_critical_path_with(
-                ws,
-                inst.graph.as_ref(),
-                inst.platform.as_ref(),
-                inst.comp.as_slice(),
-            )
-        }));
-        self.state.lock().unwrap().cp_cache.put(key, cp.clone());
-        (cp, false)
+        self.single_flight(key, cp_slots, || {
+            // compute in a pooled per-worker workspace
+            self.workspaces
+                .with(|ws| find_critical_path_with(ws, inst.inst()))
+        })
     }
 
-    /// Memoized schedule. Returns `(result, was_cached)`.
+    /// Memoized schedule with single-flight dedup.
     fn schedule_for(&self, inst: &Interned, algorithm: Algorithm) -> (Arc<Schedule>, bool) {
         let key = CacheKey {
             graph: inst.graph_hash,
@@ -288,19 +440,9 @@ impl Engine {
             comp: inst.comp_hash,
             algorithm: algorithm.id(),
         };
-        if let Some(hit) = self.state.lock().unwrap().sched_cache.get(&key) {
-            return (hit.clone(), true);
-        }
-        let s = Arc::new(self.workspaces.with(|ws| {
-            algorithm.run_with(
-                ws,
-                inst.graph.as_ref(),
-                inst.platform.as_ref(),
-                inst.comp.as_slice(),
-            )
-        }));
-        self.state.lock().unwrap().sched_cache.put(key, s.clone());
-        (s, false)
+        self.single_flight(key, sched_slots, || {
+            self.workspaces.with(|ws| algorithm.run_with(ws, inst.inst()))
+        })
     }
 
     fn bump<F: FnOnce(&mut Counters)>(&self, f: F) {
@@ -445,6 +587,7 @@ impl Engine {
                 ("misses", Json::Num(s.misses as f64)),
                 ("insertions", Json::Num(s.insertions as f64)),
                 ("evictions", Json::Num(s.evictions as f64)),
+                ("dedup_hits", Json::Num(s.dedup_hits as f64)),
             ])
         };
         let c = st.counters;
@@ -748,7 +891,7 @@ mod tests {
         for algorithm in Algorithm::ALL {
             let line = schedule_line(&inst, algorithm.name());
             let (resp, _) = engine.handle_line(&line);
-            let batch = algorithm.schedule(&inst.graph, &plat, &inst.comp);
+            let batch = algorithm.schedule(inst.bind(&plat));
             assert_eq!(
                 resp.get("makespan").and_then(Json::as_f64),
                 Some(batch.makespan()),
@@ -761,7 +904,7 @@ mod tests {
             io::instance_to_json(&inst).to_string()
         );
         let (resp, _) = engine.handle_line(&cp_line);
-        let batch_cp = find_critical_path(&inst.graph, &plat, &inst.comp);
+        let batch_cp = find_critical_path(inst.bind(&plat));
         assert_eq!(
             resp.get("length").and_then(Json::as_f64),
             Some(batch_cp.length)
@@ -833,6 +976,44 @@ mod tests {
         assert_eq!(out[2].0.get("ok"), Some(&Json::Bool(false)));
         assert!(out[3].1, "shutdown flag must be set on the last response");
         assert!(!out[0].1 && !out[1].1 && !out[2].1);
+    }
+
+    #[test]
+    fn racing_identical_requests_are_single_flight() {
+        // Eight threads fire the same uncached schedule request at once.
+        // The admission pass is atomic under the state lock, so exactly one
+        // thread can lead the computation: the cache records exactly one
+        // insertion, and the other seven are either plain cache hits
+        // (arrived after the leader finished) or dedup hits (parked on the
+        // in-flight cell) — in every interleaving hits + dedup_hits == 7.
+        let engine = Arc::new(Engine::with_defaults());
+        let (_plat, inst) = small_instance(42);
+        let line = Arc::new(schedule_line(&inst, "CEFT-CPOP"));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let engine = engine.clone();
+            let line = line.clone();
+            handles.push(std::thread::spawn(move || {
+                let (resp, _) = engine.handle_line(&line);
+                resp.get("makespan").and_then(Json::as_f64).unwrap()
+            }));
+        }
+        let makespans: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(
+            makespans.windows(2).all(|w| w[0] == w[1]),
+            "all clients must see identical bits"
+        );
+        let stats = engine.stats_json();
+        let sched = stats.get("sched_cache").unwrap();
+        let get = |k: &str| sched.get(k).and_then(Json::as_f64).unwrap();
+        assert_eq!(get("insertions"), 1.0, "only the leader may compute");
+        assert_eq!(
+            get("hits") + get("dedup_hits"),
+            7.0,
+            "every non-leader is a cache hit or a dedup hit (hits {}, dedup {})",
+            get("hits"),
+            get("dedup_hits")
+        );
     }
 
     #[test]

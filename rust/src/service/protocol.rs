@@ -102,11 +102,11 @@ fn instance_parts(j: &Json, op: &str) -> Result<(Instance, Option<Platform>), St
     let platform = match j.get("platform") {
         Some(pj) => {
             let plat = io::platform_from_json(pj)?;
-            if plat.num_classes() != instance.p {
+            if plat.num_classes() != instance.p() {
                 return Err(format!(
                     "platform has {} classes but instance expects {}",
                     plat.num_classes(),
-                    instance.p
+                    instance.p()
                 ));
             }
             Some(plat)

@@ -8,10 +8,11 @@ use ceft::cp::minexec::min_exec_critical_path;
 use ceft::cp::ranks::{cpop_critical_path, cpop_realized_cp_length, rank_upward};
 use ceft::exp::cells::{grid, realworld_grid, RealWorld, Scale, Workload};
 use ceft::exp::run::{run_cell, run_realworld_cell};
-use ceft::graph::generator::{generate, RggParams};
+use ceft::graph::generator::{generate, Instance, RggParams};
 use ceft::graph::realworld;
 use ceft::graph::TaskGraph;
 use ceft::metrics;
+use ceft::model::{CostMatrix, InstanceRef};
 use ceft::platform::{CostModel, Platform};
 use ceft::sched::{
     ceft_cpop::CeftCpop,
@@ -22,7 +23,7 @@ use ceft::sched::{
 };
 use ceft::util::rng::Xoshiro256;
 
-fn rgg(seed: u64, n: usize, p: usize, ccr: f64) -> (TaskGraph, Platform, Vec<f64>) {
+fn rgg(seed: u64, n: usize, p: usize, ccr: f64) -> (Instance, Platform) {
     let plat = Platform::uniform(p, 1.0, 0.0);
     let inst = generate(
         &RggParams {
@@ -37,7 +38,7 @@ fn rgg(seed: u64, n: usize, p: usize, ccr: f64) -> (TaskGraph, Platform, Vec<f64
         &plat,
         seed,
     );
-    (inst.graph, plat, inst.comp)
+    (inst, plat)
 }
 
 /// Every scheduler produces a valid schedule on every workload family and
@@ -73,10 +74,11 @@ fn all_schedulers_valid_on_all_workloads() {
                 &plat,
                 seed as u64,
             );
+            let iref = inst.bind(&plat);
             for s in schedulers {
-                let sched = s.schedule(&inst.graph, &plat, &inst.comp);
+                let sched = s.schedule(iref);
                 sched
-                    .validate(&inst.graph, &plat, &inst.comp)
+                    .validate(iref)
                     .unwrap_or_else(|e| panic!("{} on {} n={n} p={p}: {e}", s.name(), wl.name()));
             }
         }
@@ -90,16 +92,17 @@ fn all_schedulers_valid_on_all_workloads() {
 #[test]
 fn bound_ordering_holds() {
     for seed in 0..20 {
-        let (g, plat, comp) = rgg(seed, 150, 8, 1.0);
-        let cpmin = cp_min_cost(&g, &comp, 8);
-        let me = min_exec_critical_path(&g, &plat, &comp, false);
-        let ceft = find_critical_path(&g, &plat, &comp);
+        let (inst, plat) = rgg(seed, 150, 8, 1.0);
+        let iref = inst.bind(&plat);
+        let cpmin = cp_min_cost(iref);
+        let me = min_exec_critical_path(iref, false);
+        let ceft = find_critical_path(iref);
         assert!(cpmin <= me.length + 1e-9, "seed {seed}");
         assert!(me.length <= ceft.length + 1e-9, "seed {seed}");
         for s in [
-            Cpop.schedule(&g, &plat, &comp),
-            Heft.schedule(&g, &plat, &comp),
-            CeftCpop.schedule(&g, &plat, &comp),
+            Cpop.schedule(iref),
+            Heft.schedule(iref),
+            CeftCpop.schedule(iref),
         ] {
             assert!(s.makespan() + 1e-9 >= cpmin, "makespan below CP_MIN, seed {seed}");
         }
@@ -110,17 +113,18 @@ fn bound_ordering_holds() {
 /// serial makespan and CEFT equals the classical longest path.
 #[test]
 fn single_class_degeneracy() {
-    let (g, plat, comp) = rgg(3, 100, 1, 1.0);
-    let serial: f64 = comp.iter().sum();
+    let (inst, plat) = rgg(3, 100, 1, 1.0);
+    let iref = inst.bind(&plat);
+    let serial: f64 = inst.comp.as_slice().iter().sum();
     for s in [
-        Cpop.schedule(&g, &plat, &comp),
-        Heft.schedule(&g, &plat, &comp),
-        CeftCpop.schedule(&g, &plat, &comp),
+        Cpop.schedule(iref),
+        Heft.schedule(iref),
+        CeftCpop.schedule(iref),
     ] {
         assert!((s.makespan() - serial).abs() < 1e-6);
     }
-    let ceft = find_critical_path(&g, &plat, &comp);
-    let classic = g.longest_path(&comp, |_, _, _| 0.0);
+    let ceft = find_critical_path(iref);
+    let classic = inst.graph.longest_path(inst.comp.as_slice(), |_, _, _| 0.0);
     assert!((ceft.length - classic).abs() < 1e-9);
 }
 
@@ -131,9 +135,10 @@ fn single_class_degeneracy() {
 #[test]
 fn ceft_path_self_consistency() {
     for seed in 0..10 {
-        let (g, plat, comp) = rgg(seed + 50, 120, 4, 2.0);
-        let cp = find_critical_path(&g, &plat, &comp);
-        let chain = chain_optimal_length(&g, &plat, &comp, &cp.tasks());
+        let (inst, plat) = rgg(seed + 50, 120, 4, 2.0);
+        let iref = inst.bind(&plat);
+        let cp = find_critical_path(iref);
+        let chain = chain_optimal_length(iref, &cp.tasks());
         assert!(
             chain <= cp.length + 1e-9,
             "chain optimum {chain} exceeds DP length {}",
@@ -144,7 +149,8 @@ fn ceft_path_self_consistency() {
         for (i, step) in cp.path.iter().enumerate() {
             if i > 0 {
                 let prev = &cp.path[i - 1];
-                let data = g
+                let data = inst
+                    .graph
                     .succs(prev.task)
                     .iter()
                     .find(|&&(d, _)| d == step.task)
@@ -152,7 +158,7 @@ fn ceft_path_self_consistency() {
                     .1;
                 realized += plat.comm_cost(prev.class, step.class, data);
             }
-            realized += comp[step.task * 4 + step.class];
+            realized += inst.comp.get(step.task, step.class);
         }
         assert!(
             realized <= cp.length + 1e-9,
@@ -167,17 +173,11 @@ fn ceft_path_self_consistency() {
 #[test]
 fn cpop_realized_bounds() {
     for seed in 0..10 {
-        let (g, plat, comp) = rgg(seed + 80, 100, 8, 0.5);
-        let (cp, estimate) = cpop_critical_path(&g, &plat, &comp);
-        let realized = cpop_realized_cp_length(&cp, &comp, 8);
-        let per_task_min: f64 = cp
-            .iter()
-            .map(|&t| {
-                (0..8)
-                    .map(|j| comp[t * 8 + j])
-                    .fold(f64::INFINITY, f64::min)
-            })
-            .sum();
+        let (inst, plat) = rgg(seed + 80, 100, 8, 0.5);
+        let iref = inst.bind(&plat);
+        let (cp, estimate) = cpop_critical_path(iref);
+        let realized = cpop_realized_cp_length(&cp, &inst.comp);
+        let per_task_min: f64 = cp.iter().map(|&t| inst.comp.min(t)).sum();
         assert!(realized + 1e-9 >= per_task_min, "seed {seed}");
         assert!(estimate > 0.0 && realized > 0.0);
     }
@@ -187,9 +187,9 @@ fn cpop_realized_bounds() {
 /// parents strictly precede children.
 #[test]
 fn heft_rank_topological_consistency() {
-    let (g, plat, comp) = rgg(7, 200, 8, 1.0);
-    let rank = rank_upward(&g, &plat, &comp);
-    for e in g.edges() {
+    let (inst, plat) = rgg(7, 200, 8, 1.0);
+    let rank = rank_upward(inst.bind(&plat));
+    for e in inst.graph.edges() {
         assert!(
             rank[e.src] > rank[e.dst],
             "rank_u({}) = {} !> rank_u({}) = {}",
@@ -241,8 +241,8 @@ fn fft_all_paths_critical_under_uniform_costs() {
         skel.edges.iter().map(|&(s, d)| (s, d, 1.0)).collect();
     let g = TaskGraph::from_edges(skel.n, &edges);
     let plat = Platform::uniform(2, 1.0, 0.0);
-    let comp = vec![1.0; skel.n * 2];
-    let table = ceft_table(&g, &plat, &comp);
+    let comp = CostMatrix::new(2, vec![1.0; skel.n * 2]);
+    let table = ceft_table(InstanceRef::new(&g, &plat, &comp));
     let sink_mins: Vec<f64> = g
         .sinks()
         .iter()
@@ -258,10 +258,11 @@ fn fft_all_paths_critical_under_uniform_costs() {
 /// schedule achieves exactly speedup 1 on its own best processor.
 #[test]
 fn speedup_semantics() {
-    let (g, plat, comp) = rgg(11, 150, 8, 0.1);
-    let s = Heft.schedule(&g, &plat, &comp);
-    let sp = metrics::speedup(&comp, 8, s.makespan());
+    let (inst, plat) = rgg(11, 150, 8, 0.1);
+    let iref = inst.bind(&plat);
+    let s = Heft.schedule(iref);
+    let sp = metrics::speedup(&inst.comp, s.makespan());
     assert!(sp > 1.0, "HEFT at low CCR should parallelise, speedup={sp}");
-    let serial = metrics::serial_time(&comp, 8);
-    assert!((metrics::speedup(&comp, 8, serial) - 1.0).abs() < 1e-12);
+    let serial = metrics::serial_time(&inst.comp);
+    assert!((metrics::speedup(&inst.comp, serial) - 1.0).abs() < 1e-12);
 }

@@ -80,10 +80,8 @@ fn accelerated_ceft_agrees_with_pure_rust() {
             &plat,
             n as u64,
         );
-        let cpu = find_critical_path(&inst.graph, &plat, &inst.comp);
-        let accel = acc
-            .find_critical_path(&inst.graph, &plat, &inst.comp)
-            .unwrap();
+        let cpu = find_critical_path(inst.bind(&plat));
+        let accel = acc.find_critical_path(inst.bind(&plat)).unwrap();
         let rel = (cpu.length - accel.length).abs() / cpu.length;
         assert!(rel < 1e-4, "n={n} p={p}: rel diff {rel}");
         assert_eq!(cpu.tasks(), accel.tasks(), "paths diverged n={n} p={p}");
@@ -112,8 +110,8 @@ fn accelerated_table_matches_f64_table_everywhere() {
         &plat,
         9,
     );
-    let accel = acc.ceft_table(&inst.graph, &plat, &inst.comp).unwrap();
-    let exact = ceft::cp::ceft::ceft_table(&inst.graph, &plat, &inst.comp);
+    let accel = acc.ceft_table(inst.bind(&plat)).unwrap();
+    let exact = ceft::cp::ceft::ceft_table(inst.bind(&plat));
     for t in 0..200 {
         for j in 0..p {
             let a = accel.get(t, j);

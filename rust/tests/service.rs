@@ -56,7 +56,7 @@ fn service_matches_batch_schedule_and_cp() {
         // the embedded schedule round-trips into a legal schedule
         let (platform, inst) = build_instance(&cell);
         let s = io::schedule_from_json(resp.get("schedule").unwrap()).unwrap();
-        s.validate(&inst.graph, &platform, &inst.comp).unwrap();
+        s.validate(inst.bind(&platform)).unwrap();
     }
     // critical path matches batch `repro cp`
     let (resp, _) = engine.handle_line(&instance_line("cp", None, &cell));

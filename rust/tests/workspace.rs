@@ -61,19 +61,20 @@ fn prop_reused_workspace_is_bit_identical_to_fresh() {
         0xCEF7_0010,
         |rng| arb_instance(rng),
         |(inst, plat, seed)| {
+            let iref = inst.bind(plat);
             let mut ws = Workspace::new();
             // twice through ONE reused workspace …
-            let cp_a = find_critical_path_with(&mut ws, &inst.graph, plat, &inst.comp);
-            let cp_b = find_critical_path_with(&mut ws, &inst.graph, plat, &inst.comp);
+            let cp_a = find_critical_path_with(&mut ws, iref);
+            let cp_b = find_critical_path_with(&mut ws, iref);
             // … once through fresh allocations (the classic signature)
-            let cp_fresh = find_critical_path(&inst.graph, plat, &inst.comp);
+            let cp_fresh = find_critical_path(iref);
             if cp_a != cp_fresh || cp_b != cp_fresh {
                 return Err(format!("critical path diverged (seed {seed})"));
             }
             for algo in Algorithm::ALL {
-                let a = algo.run_with(&mut ws, &inst.graph, plat, &inst.comp);
-                let b = algo.run_with(&mut ws, &inst.graph, plat, &inst.comp);
-                let fresh = algo.schedule(&inst.graph, plat, &inst.comp);
+                let a = algo.run_with(&mut ws, iref);
+                let b = algo.run_with(&mut ws, iref);
+                let fresh = algo.schedule(iref);
                 if !schedules_equal(&a, &fresh) || !schedules_equal(&b, &fresh) {
                     return Err(format!("{} diverged (seed {seed})", algo.name()));
                 }
@@ -91,23 +92,17 @@ fn prop_cp_baselines_match_through_reused_workspace() {
         0xCEF7_0011,
         |rng| arb_instance(rng),
         |(inst, plat, seed)| {
-            let p = plat.num_classes();
+            let iref = inst.bind(plat);
             let mut ws = Workspace::new();
             for _ in 0..2 {
-                let a = cp_min_cost_with(&mut ws, &inst.graph, &inst.comp, p);
-                let b = cp_min_cost(&inst.graph, &inst.comp, p);
+                let a = cp_min_cost_with(&mut ws, iref);
+                let b = cp_min_cost(iref);
                 if a.to_bits() != b.to_bits() {
                     return Err(format!("cp_min {a} != {b} (seed {seed})"));
                 }
                 for mean_comm in [false, true] {
-                    let me_a = min_exec_critical_path_with(
-                        &mut ws,
-                        &inst.graph,
-                        plat,
-                        &inst.comp,
-                        mean_comm,
-                    );
-                    let me_b = min_exec_critical_path(&inst.graph, plat, &inst.comp, mean_comm);
+                    let me_a = min_exec_critical_path_with(&mut ws, iref, mean_comm);
+                    let me_b = min_exec_critical_path(iref, mean_comm);
                     if me_a != me_b {
                         return Err(format!("minexec diverged (seed {seed})"));
                     }
@@ -119,8 +114,8 @@ fn prop_cp_baselines_match_through_reused_workspace() {
 }
 
 /// Poisoning: a workspace dirtied by a *larger* instance (longer buffers,
-/// more processors, deeper heap) must not leak any state into a smaller
-/// instance scheduled right after.
+/// more processors, deeper heap, larger comm panels) must not leak any
+/// state into a smaller instance scheduled right after.
 #[test]
 fn dirty_workspace_from_larger_instance_cannot_poison_smaller_one() {
     let plat_big = Platform::uniform(8, 1.0, 0.1);
@@ -151,26 +146,28 @@ fn dirty_workspace_from_larger_instance_cannot_poison_smaller_one() {
         &plat_small,
         2,
     );
+    let big_ref = big.bind(&plat_big);
+    let small_ref = small.bind(&plat_small);
     let mut ws = Workspace::new();
     // dirty every buffer with the big instance
-    let _ = find_critical_path_with(&mut ws, &big.graph, &plat_big, &big.comp);
+    let _ = find_critical_path_with(&mut ws, big_ref);
     for algo in Algorithm::ALL {
-        let _ = algo.run_with(&mut ws, &big.graph, &plat_big, &big.comp);
+        let _ = algo.run_with(&mut ws, big_ref);
     }
     let cap_after_big = ws.capacity_hint();
     // now the small instance, on the dirty workspace vs fresh
-    let cp_dirty = find_critical_path_with(&mut ws, &small.graph, &plat_small, &small.comp);
-    let cp_fresh = find_critical_path(&small.graph, &plat_small, &small.comp);
+    let cp_dirty = find_critical_path_with(&mut ws, small_ref);
+    let cp_fresh = find_critical_path(small_ref);
     assert_eq!(cp_dirty, cp_fresh, "dirty workspace leaked into CEFT");
     for algo in Algorithm::ALL {
-        let dirty = algo.run_with(&mut ws, &small.graph, &plat_small, &small.comp);
-        let fresh = algo.schedule(&small.graph, &plat_small, &small.comp);
+        let dirty = algo.run_with(&mut ws, small_ref);
+        let fresh = algo.schedule(small_ref);
         assert!(
             schedules_equal(&dirty, &fresh),
             "dirty workspace leaked into {}",
             algo.name()
         );
-        dirty.validate(&small.graph, &plat_small, &small.comp).unwrap();
+        dirty.validate(small_ref).unwrap();
     }
     // and the high-water capacity was reused, not reallocated away
     assert_eq!(
@@ -199,12 +196,13 @@ fn cleared_workspace_matches_dirty_and_keeps_capacity() {
         &plat,
         3,
     );
+    let iref = inst.bind(&plat);
     let mut ws = Workspace::new();
-    let first = Algorithm::CeftCpop.run_with(&mut ws, &inst.graph, &plat, &inst.comp);
+    let first = Algorithm::CeftCpop.run_with(&mut ws, iref);
     let cap = ws.capacity_hint();
     ws.clear();
     assert_eq!(ws.capacity_hint(), cap, "clear must keep capacity");
-    let second = Algorithm::CeftCpop.run_with(&mut ws, &inst.graph, &plat, &inst.comp);
+    let second = Algorithm::CeftCpop.run_with(&mut ws, iref);
     assert!(schedules_equal(&first, &second));
 }
 
@@ -230,9 +228,7 @@ fn workspace_pool_steady_state_does_not_grow() {
     let mut results = Vec::new();
     for _ in 0..32 {
         results.push(pool.with(|ws| {
-            Algorithm::Heft
-                .run_with(ws, &inst.graph, &plat, &inst.comp)
-                .makespan()
+            Algorithm::Heft.run_with(ws, inst.bind(&plat)).makespan()
         }));
     }
     assert_eq!(pool.created(), 1, "sequential serving needs one workspace");
