@@ -22,13 +22,17 @@ fi
 echo "== build =="
 cargo build --release
 
-echo "== clippy =="
+echo "== clippy (incl. deprecated-shim gate) =="
 if cargo clippy --version >/dev/null 2>&1; then
   # -D warnings gates correctness lints; the -A list covers style idioms
   # this codebase uses deliberately (documented many-arg experiment rows,
   # index-and-position loops in the DP kernels, the inherent Json
-  # serialiser named to_string).
-  cargo clippy --all-targets -- -D warnings \
+  # serialiser named to_string). The explicit -D deprecated keeps new code
+  # from routing through the #[deprecated] raw-triple shims
+  # (cost_matrix_from_raw, find_critical_path_raw, schedule_raw) even if
+  # the -A list ever grows a blanket allow; the shims' own tests opt back
+  # in with #[allow(deprecated)].
+  cargo clippy --all-targets -- -D warnings -D deprecated \
     -A clippy::too_many_arguments \
     -A clippy::type_complexity \
     -A clippy::needless_range_loop \
@@ -73,12 +77,20 @@ wait "$SERVER_PID"
 trap - EXIT
 
 echo "== loadgen smoke (writes BENCH_service.json) =="
-./target/release/repro loadgen --n 64 --p 4 --count 8 --rate 200 --duration 1
+# --platform-mix 3 exercises the per-platform panel cache: loadgen itself
+# fails unless panel_ctx_misses == 3 (panels built once per platform).
+./target/release/repro loadgen --n 64 --p 4 --count 8 --platform-mix 3 --rate 200 --duration 1
 grep -q '"achieved_rps"' BENCH_service.json
 # The committed schema placeholder has requests == 0; a regenerated report
 # must never look like that, or the perf trajectory tracks a non-run.
 if grep -q '"requests":0[,}]' BENCH_service.json; then
   echo "BENCH_service.json still reports requests == 0 — loadgen produced no measurement"
+  exit 1
+fi
+# The report must carry the panel-cache section, or the panel-residency
+# regression the counters exist to catch would go unmeasured.
+if ! grep -q '"panel_ctx_hits"' BENCH_service.json; then
+  echo "BENCH_service.json lacks the panel-cache counters (panel_ctx_hits/panel_ctx_misses)"
   exit 1
 fi
 

@@ -1,16 +1,21 @@
 //! Bench: the blocked min-plus CEFT kernel vs the scalar reference DP.
 //!
-//! Both paths fill the same workspace table over the same instance, so the
-//! per-case "Melem/s" column (relaxed `(j, l)` class-pair cells per second
-//! = `e · P²` per iteration) is directly comparable between `kernel/*` and
-//! `scalar/*` rows. Protocol and block-size rationale: EXPERIMENTS.md
-//! §Min-plus kernel. `CEFT_BENCH_FAST=1` is the CI smoke mode (`ci.sh`).
+//! Every path fills the same workspace table over the same instance, so
+//! the per-case "Melem/s" column (relaxed `(j, l)` class-pair cells per
+//! second = `e · P²` per iteration) is directly comparable across
+//! `kernel/*`, `kernel_ctx/*` (fused kernel over resident `PlatformCtx`
+//! panels — no per-entry panel fill), `batched_b8/*` (the min-plus
+//! matrix-matrix DP, chunk size 8) and `scalar/*` rows. Protocol and
+//! block-size rationale: EXPERIMENTS.md §Min-plus kernel and §Platform
+//! contexts. `CEFT_BENCH_FAST=1` is the CI smoke mode (`ci.sh`).
 
 use ceft::cp::ceft::{
-    ceft_table_into, ceft_table_rev_into, ceft_table_rev_scalar_into, ceft_table_scalar_into,
+    ceft_table_batched_into, ceft_table_into, ceft_table_rev_into, ceft_table_rev_scalar_into,
+    ceft_table_scalar_into,
 };
 use ceft::cp::workspace::Workspace;
 use ceft::graph::generator::{generate, RggParams};
+use ceft::model::PlatformCtx;
 use ceft::platform::{CostModel, Platform};
 use ceft::util::bench::{black_box, Bench};
 
@@ -41,10 +46,20 @@ fn main() {
             42,
         );
         let iref = inst.bind(&plat);
+        let ctx = PlatformCtx::new(plat.clone());
+        let cref = inst.bind_ctx(&ctx);
         let cells = inst.graph.num_edges() as u64 * (p * p) as u64;
         let mut ws = Workspace::new();
         b.case_with_elements(&format!("kernel/n{n}_p{p}"), Some(cells), || {
             ceft_table_into(&mut ws, iref);
+            black_box(ws.table.last().copied());
+        });
+        b.case_with_elements(&format!("kernel_ctx/n{n}_p{p}"), Some(cells), || {
+            ceft_table_into(&mut ws, cref);
+            black_box(ws.table.last().copied());
+        });
+        b.case_with_elements(&format!("batched_b8/n{n}_p{p}"), Some(cells), || {
+            ceft_table_batched_into(&mut ws, cref, 8);
             black_box(ws.table.last().copied());
         });
         b.case_with_elements(&format!("scalar/n{n}_p{p}"), Some(cells), || {

@@ -27,8 +27,7 @@
 //! matrix-vector product** between the parent's CEFT row and a `P × P`
 //! communication panel. [`ceft_table_into`] runs it as such: two
 //! destination-major panels (`startup[l]` with a `0` diagonal, and
-//! `bandwidth[l → j]` with a `+inf` diagonal) are precomputed into the
-//! [`Workspace`] once per DP entry, turning the inner loop into a
+//! `bandwidth[l → j]` with a `+inf` diagonal) turn the inner loop into a
 //! branch-free contiguous scan `krow[l] + (S[j][l] + data / B[j][l])` that
 //! the compiler can vectorise; destination classes are tiled in
 //! `KERNEL_BLOCK`-sized blocks with the task's edges iterated inside
@@ -42,6 +41,25 @@
 //! [`ceft_table_scalar_into`] reference path enforce. See
 //! EXPERIMENTS.md §Min-plus kernel for layout and block-size rationale.
 //!
+//! **Panel residency.** The panels are a pure function of the platform.
+//! An instance bound through a [`crate::model::PlatformCtx`]
+//! ([`crate::model::PlatformCtx::bind`]) makes the kernel read the
+//! context's **resident** panels — computed once per distinct platform
+//! per process — and skip the `O(P²)` per-entry fill entirely; an unbound
+//! instance falls back to filling workspace-local panels exactly as
+//! before. Same panel values either way, so outputs are bit-identical.
+//!
+//! **Batched multi-row kernel.** [`ceft_dp_kernel_batch_into`] lifts the
+//! matrix-vector product to a min-plus **matrix-matrix** product: `B`
+//! parent rows (with per-row payloads) are evaluated against one shared
+//! panel pair in one blocked sweep — the same shape the PJRT backend's
+//! `relax_batch` artifact computes in f32, so the CPU and accelerator
+//! backends share one batching layer. [`ceft_table_batched_into`] drives
+//! the full DP through it (gather a task's parent rows, one batched
+//! relaxation per chunk, max-fold in CSR order) and is proven
+//! bit-identical to the scalar recurrence by
+//! `prop_batched_kernel_bit_identical_to_scalar`.
+//!
 //! Tie-breaking is deterministic: the lowest class id wins `min`s, the
 //! earliest-visited parent wins strict-`>` `max`es, and the lowest task id
 //! wins the final sink selection. This makes the rust and PJRT backends,
@@ -49,7 +67,7 @@
 
 use crate::cp::workspace::Workspace;
 use crate::graph::TaskGraph;
-use crate::model::InstanceRef;
+use crate::model::{fill_comm_panels, InstanceRef, PlatformCtx};
 use crate::platform::Platform;
 
 /// Destination classes are tiled in blocks of this many rows, and the
@@ -216,41 +234,17 @@ pub fn ceft_table_rev_scalar_into(ws: &mut Workspace, inst: InstanceRef) {
     ceft_dp_scalar_into(ws, inst, true)
 }
 
-/// Precompute the destination-major `P × P` communication panels into the
-/// workspace: for destination class `j` and sender class `l`,
-/// `panel_startup[j*P + l] = startup(l)` and
-/// `panel_bw[j*P + l] = bandwidth(l → j)`, with a `0` / `+inf` diagonal so
-/// the kernel's `S + data / B` evaluates to exactly `+0.0` for co-located
-/// classes — the same bits [`Platform::comm_cost`] produces.
-fn fill_comm_panels(platform: &Platform, sp: &mut Vec<f64>, bp: &mut Vec<f64>) {
-    let p = platform.num_classes();
-    sp.clear();
-    sp.resize(p * p, 0.0);
-    bp.clear();
-    bp.resize(p * p, 0.0);
-    for j in 0..p {
-        let srow = &mut sp[j * p..(j + 1) * p];
-        let brow = &mut bp[j * p..(j + 1) * p];
-        for l in 0..p {
-            if l == j {
-                srow[l] = 0.0;
-                brow[l] = f64::INFINITY;
-            } else {
-                srow[l] = platform.startup(l);
-                brow[l] = platform.bandwidth(l, j);
-            }
-        }
-    }
-}
-
-/// The kernel DP behind both orientations: panels once per entry, then per
-/// task a tiled min-plus sweep — destination classes in
-/// [`KERNEL_BLOCK`]-sized blocks, the task's incoming edges iterated
-/// *inside* each block so one parent-row load serves the whole block and
-/// the block's panel rows stay resident across every edge. Per destination
-/// class the comparison sequence (strict `<` lowest-`l` argmin per edge,
-/// strict-`>` earliest-parent max-fold in CSR order) is identical to the
-/// scalar path, so values *and* backpointers match bit for bit.
+/// The kernel DP behind both orientations: resident [`PlatformCtx`] panels
+/// when the instance carries a context, workspace-local panels filled here
+/// otherwise ([`crate::model`]'s `fill_comm_panels` — one implementation
+/// behind both sources), then per task a tiled min-plus sweep —
+/// destination classes in [`KERNEL_BLOCK`]-sized blocks, the task's
+/// incoming edges iterated *inside* each block so one parent-row load
+/// serves the whole block and the block's panel rows stay resident across
+/// every edge. Per destination class the comparison sequence (strict `<`
+/// lowest-`l` argmin per edge, strict-`>` earliest-parent max-fold in CSR
+/// order) is identical to the scalar path, so values *and* backpointers
+/// match bit for bit.
 fn ceft_dp_kernel_into(ws: &mut Workspace, inst: InstanceRef, rev: bool) {
     let graph = inst.graph;
     let costs = inst.costs;
@@ -263,7 +257,16 @@ fn ceft_dp_kernel_into(ws: &mut Workspace, inst: InstanceRef, rev: bool) {
         panel_bw,
         ..
     } = ws;
-    fill_comm_panels(inst.platform, panel_startup, panel_bw);
+    let (panel_startup, panel_bw): (&[f64], &[f64]) = match inst.ctx() {
+        Some(ctx) => {
+            debug_assert_eq!(ctx.p(), p, "ctx/platform class count mismatch");
+            (ctx.panel_startup(), ctx.panel_bw())
+        }
+        None => {
+            fill_comm_panels(inst.platform, panel_startup, panel_bw);
+            (panel_startup.as_slice(), panel_bw.as_slice())
+        }
+    };
     table.clear();
     table.resize(v * p, 0.0);
     backptr.clear();
@@ -311,6 +314,164 @@ fn ceft_dp_kernel_into(ws: &mut Workspace, inst: InstanceRef, rev: bool) {
                 backptr[t * p + j] = best_ptr[bi];
             }
             j0 = j1;
+        }
+    }
+}
+
+/// The blocked min-plus matrix-matrix core shared by
+/// [`ceft_dp_kernel_batch_into`] and [`ceft_table_batched_into`]: for each
+/// batch row `i` (a parent CEFT row with payload `data[i]`) and each
+/// destination class `j`,
+/// `vals[i*P + j] = min_l rows[i*P + l] + (S[j][l] + data[i] / B[j][l])`
+/// with the argmin sender class in `args` (strict `<`, lowest `l` wins —
+/// the tie-break of the scalar recurrence). Destination classes are tiled
+/// in [`KERNEL_BLOCK`]-sized blocks with the batch rows iterated inside
+/// each block, so the block's panel rows stay resident across the whole
+/// batch — the same loop interchange as the fused kernel, lifted from
+/// matrix-vector to matrix-matrix.
+fn batch_minplus_core(
+    sp: &[f64],
+    bp: &[f64],
+    p: usize,
+    rows: &[f64],
+    data: &[f64],
+    vals: &mut [f64],
+    args: &mut [usize],
+) {
+    let b = data.len();
+    debug_assert_eq!(rows.len(), b * p);
+    debug_assert_eq!(vals.len(), b * p);
+    debug_assert_eq!(args.len(), b * p);
+    let mut j0 = 0;
+    while j0 < p {
+        let j1 = (j0 + KERNEL_BLOCK).min(p);
+        for i in 0..b {
+            let krow = &rows[i * p..(i + 1) * p];
+            let d = data[i];
+            for j in j0..j1 {
+                let srow = &sp[j * p..j * p + p];
+                let brow = &bp[j * p..j * p + p];
+                let mut best = f64::INFINITY;
+                let mut best_l = 0usize;
+                for l in 0..p {
+                    let cand = krow[l] + (srow[l] + d / brow[l]);
+                    if cand < best {
+                        best = cand;
+                        best_l = l;
+                    }
+                }
+                vals[i * p + j] = best;
+                args[i * p + j] = best_l;
+            }
+        }
+        j0 = j1;
+    }
+}
+
+/// The batched min-plus relaxation: evaluate `B` parent CEFT rows (with
+/// per-row edge payloads) against one shared resident panel pair in a
+/// single blocked min-plus matrix-matrix product. `rows` is `B × P`
+/// row-major, `data` holds `B` payloads; `vals`/`args` are resized to
+/// `B × P` and receive the per-(row, destination) minima and their argmin
+/// sender classes.
+///
+/// This is the CPU side of the batching layer the PJRT backend's
+/// `relax_batch` artifact implements in f32 (same operands modulo
+/// precision: rows ↔ `f`, panels ↔ `l`/`invbw` — both marshalled from the
+/// same [`PlatformCtx`]), which is what lets the engine amortise panel
+/// loads across many relaxations of one platform — per-task today
+/// ([`ceft_table_batched_into`]), across queued same-platform instances
+/// next (see ROADMAP).
+pub fn ceft_dp_kernel_batch_into(
+    ctx: &PlatformCtx,
+    rows: &[f64],
+    data: &[f64],
+    vals: &mut Vec<f64>,
+    args: &mut Vec<usize>,
+) {
+    let p = ctx.p();
+    let b = data.len();
+    assert_eq!(rows.len(), b * p, "rows must be B x P for B = data.len()");
+    vals.clear();
+    vals.resize(b * p, 0.0);
+    args.clear();
+    args.resize(b * p, 0);
+    batch_minplus_core(ctx.panel_startup(), ctx.panel_bw(), p, rows, data, vals, args);
+}
+
+/// The CEFT DP driven through the batched kernel: per task, gather its
+/// parent rows in chunks of `batch`, run one
+/// [`ceft_dp_kernel_batch_into`]-shaped relaxation per chunk against the
+/// context's resident panels, and max-fold the per-edge minima in CSR
+/// order (strict `>`, earliest parent wins — the scalar recurrence's
+/// tie-break). Requires a [`PlatformCtx`]-bound instance
+/// ([`PlatformCtx::bind`]); forward orientation.
+///
+/// Bit-identical to [`ceft_table_scalar_into`] (values *and* backpointers)
+/// for every `batch >= 1`: chunking changes neither the per-edge `min_l`
+/// comparison sequence nor the CSR fold order — enforced by
+/// `prop_batched_kernel_bit_identical_to_scalar` across
+/// `batch ∈ {1, 2, 7, 8, 9}`.
+pub fn ceft_table_batched_into(ws: &mut Workspace, inst: InstanceRef, batch: usize) {
+    assert!(batch >= 1, "batch size must be at least 1");
+    let ctx = inst
+        .ctx()
+        .expect("batched DP requires a PlatformCtx-bound instance");
+    let graph = inst.graph;
+    let costs = inst.costs;
+    let v = inst.n();
+    let p = inst.p();
+    let (sp, bp) = (ctx.panel_startup(), ctx.panel_bw());
+    let Workspace {
+        table,
+        backptr,
+        batch_rows,
+        batch_data,
+        batch_vals,
+        batch_args,
+        ..
+    } = ws;
+    table.clear();
+    table.resize(v * p, 0.0);
+    backptr.clear();
+    backptr.resize(v * p, (usize::MAX, usize::MAX));
+
+    for &t in graph.topo_order() {
+        let preds = graph.preds(t);
+        if preds.is_empty() {
+            table[t * p..(t + 1) * p].copy_from_slice(costs.row(t));
+            continue;
+        }
+        // the task's table row doubles as the max-fold accumulator
+        table[t * p..(t + 1) * p].fill(f64::NEG_INFINITY);
+        for chunk in preds.chunks(batch) {
+            // gather parent rows + payloads into contiguous batch buffers
+            batch_rows.clear();
+            batch_data.clear();
+            for &(k, data) in chunk {
+                batch_rows.extend_from_slice(&table[k * p..(k + 1) * p]);
+                batch_data.push(data);
+            }
+            batch_vals.clear();
+            batch_vals.resize(chunk.len() * p, 0.0);
+            batch_args.clear();
+            batch_args.resize(chunk.len() * p, 0);
+            batch_minplus_core(sp, bp, p, batch_rows, batch_data, batch_vals, batch_args);
+            // max-fold in CSR order — the scalar recurrence's comparison
+            // sequence, so backpointer ties resolve identically
+            for (i, &(k, _)) in chunk.iter().enumerate() {
+                for j in 0..p {
+                    let arrival = batch_vals[i * p + j];
+                    if arrival > table[t * p + j] {
+                        table[t * p + j] = arrival;
+                        backptr[t * p + j] = (k, batch_args[i * p + j]);
+                    }
+                }
+            }
+        }
+        let crow = costs.row(t);
+        for j in 0..p {
+            table[t * p + j] += crow[j];
         }
     }
 }
@@ -827,6 +988,111 @@ mod tests {
         let cp = find_critical_path(InstanceRef::new(&g, &plat, &comp));
         // lower bound: sum of per-task minima (comm >= 0)
         assert!(cp.length >= 4.0 + 3.0 + 2.0 - 1e-9);
+    }
+
+    #[test]
+    fn ctx_bound_kernel_is_bit_identical_and_skips_panel_fill() {
+        // Same instance through a PlatformCtx-bound view and a plain view:
+        // identical tables/backpointers, and the bound run must leave the
+        // workspace's fallback panel buffers untouched — the proof that
+        // the hot loop reads the resident panels instead of refilling.
+        let inst = crate::graph::generator::generate(
+            &crate::graph::generator::RggParams {
+                n: 140,
+                out_degree: 4,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 75.0,
+                gamma: 0.3,
+            },
+            &crate::platform::CostModel::Classic { beta: 0.75 },
+            &Platform::uniform(5, 1.0, 0.0),
+            61,
+        );
+        let mut rng = crate::util::rng::Xoshiro256::new(62);
+        let plat = Platform::random_links(5, &mut rng, 0.3, 3.0, 0.1, 0.7);
+        let ctx = crate::model::PlatformCtx::new(plat.clone());
+        let mut plain_ws = Workspace::new();
+        let mut ctx_ws = Workspace::new();
+        for rev in [false, true] {
+            let run: fn(&mut Workspace, InstanceRef) = if rev {
+                ceft_table_rev_into
+            } else {
+                ceft_table_into
+            };
+            run(&mut plain_ws, inst.bind(&plat));
+            run(&mut ctx_ws, inst.bind_ctx(&ctx));
+            assert_eq!(plain_ws.table, ctx_ws.table, "rev={rev}");
+            assert_eq!(plain_ws.backptr, ctx_ws.backptr, "rev={rev}");
+            assert!(!plain_ws.panel_startup.is_empty(), "fallback fills panels");
+            assert!(
+                ctx_ws.panel_startup.is_empty() && ctx_ws.panel_bw.is_empty(),
+                "ctx-bound run must not fill workspace panels (rev={rev})"
+            );
+        }
+        // the full critical path agrees too
+        assert_eq!(
+            find_critical_path(inst.bind(&plat)),
+            find_critical_path_with(&mut ctx_ws, inst.bind_ctx(&ctx))
+        );
+    }
+
+    #[test]
+    fn batched_table_matches_scalar_for_every_chunk_size() {
+        let inst = crate::graph::generator::generate(
+            &crate::graph::generator::RggParams {
+                n: 130,
+                out_degree: 5,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 75.0,
+                gamma: 0.3,
+            },
+            &crate::platform::CostModel::Classic { beta: 0.75 },
+            &Platform::uniform(4, 1.0, 0.0),
+            77,
+        );
+        let mut rng = crate::util::rng::Xoshiro256::new(78);
+        let plat = Platform::random_links(4, &mut rng, 0.3, 3.0, 0.0, 0.6);
+        let ctx = crate::model::PlatformCtx::new(plat.clone());
+        let mut sw = Workspace::new();
+        ceft_table_scalar_into(&mut sw, inst.bind(&plat));
+        let mut bw = Workspace::new();
+        for batch in [1usize, 3, 8, 64] {
+            ceft_table_batched_into(&mut bw, inst.bind_ctx(&ctx), batch);
+            assert_eq!(bw.table, sw.table, "batch={batch}");
+            assert_eq!(bw.backptr, sw.backptr, "batch={batch}");
+        }
+    }
+
+    #[test]
+    fn batch_primitive_matches_scalar_relaxation() {
+        // standalone B x P relaxation against hand-rolled scalar minima
+        let mut rng = crate::util::rng::Xoshiro256::new(91);
+        let p = 3;
+        let plat = Platform::random_links(p, &mut rng, 0.4, 2.5, 0.0, 1.0);
+        let ctx = crate::model::PlatformCtx::new(plat.clone());
+        let b = 5;
+        let rows: Vec<f64> = (0..b * p).map(|_| rng.uniform(0.0, 40.0)).collect();
+        let data: Vec<f64> = (0..b).map(|_| rng.uniform(0.0, 20.0)).collect();
+        let mut vals = Vec::new();
+        let mut args = Vec::new();
+        ceft_dp_kernel_batch_into(&ctx, &rows, &data, &mut vals, &mut args);
+        for i in 0..b {
+            for j in 0..p {
+                let mut best = f64::INFINITY;
+                let mut best_l = 0;
+                for l in 0..p {
+                    let cand = rows[i * p + l] + plat.comm_cost(l, j, data[i]);
+                    if cand < best {
+                        best = cand;
+                        best_l = l;
+                    }
+                }
+                assert_eq!(vals[i * p + j].to_bits(), best.to_bits(), "({i},{j})");
+                assert_eq!(args[i * p + j], best_l, "({i},{j})");
+            }
+        }
     }
 
     #[test]

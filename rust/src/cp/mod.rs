@@ -4,8 +4,11 @@
 //!   dynamic program (Algorithm 1) that finds the critical path *together
 //!   with* the partial assignment of its tasks to processor classes. Its
 //!   `O(P²e)` inner loop runs as a blocked class-pair min-plus kernel over
-//!   communication panels precomputed into the workspace (bit-identical to
-//!   the retained scalar reference path).
+//!   communication panels — resident in a
+//!   [`crate::model::PlatformCtx`] when the instance is bound through one,
+//!   filled into the workspace otherwise — and a batched matrix-matrix
+//!   variant relaxes many parent rows against one shared panel pair
+//!   (bit-identical to the retained scalar reference path either way).
 //!
 //! Every entry point takes a [`crate::model::InstanceRef`] — the
 //! shape-checked `&TaskGraph + &Platform + &CostMatrix` view — instead of a

@@ -108,15 +108,27 @@ pub struct Workspace {
     /// destination-major `P × P` startup panel of the CEFT min-plus kernel:
     /// row `j` holds `startup[l]` for every sender class `l != j` and `0.0`
     /// on the diagonal (co-located communication is free, Definition 3).
-    /// Rebuilt from the platform at every DP entry — see
-    /// EXPERIMENTS.md §Min-plus kernel.
+    /// Only the **fallback** path fills this: instances bound through a
+    /// [`crate::model::PlatformCtx`] read the context's resident panels
+    /// instead — see EXPERIMENTS.md §Platform contexts.
     pub panel_startup: Vec<f64>,
     /// destination-major `P × P` bandwidth panel, aligned with
     /// `panel_startup`: row `j` holds `bandwidth[l → j]` for `l != j` and
     /// `+inf` on the diagonal so `data / bw` contributes exactly `0.0` —
     /// keeping the kernel branch-free yet bit-identical to
-    /// `Platform::comm_cost`.
+    /// `Platform::comm_cost`. Fallback-only, like `panel_startup`.
     pub panel_bw: Vec<f64>,
+    /// batched min-plus kernel scratch: gathered parent CEFT rows,
+    /// `B × P` row-major (`cp::ceft::ceft_table_batched_into`)
+    pub batch_rows: Vec<f64>,
+    /// batched kernel scratch: per-row edge payloads, aligned with
+    /// `batch_rows`
+    pub batch_data: Vec<f64>,
+    /// batched kernel output scratch: `B × P` per-(row, destination) minima
+    pub batch_vals: Vec<f64>,
+    /// batched kernel output scratch: argmin sender class per cell,
+    /// aligned with `batch_vals`
+    pub batch_args: Vec<usize>,
 }
 
 impl Workspace {
@@ -154,6 +166,10 @@ impl Workspace {
         self.cp_tasks.clear();
         self.panel_startup.clear();
         self.panel_bw.clear();
+        self.batch_rows.clear();
+        self.batch_data.clear();
+        self.batch_vals.clear();
+        self.batch_args.clear();
     }
 
     /// Total `f64`-equivalent capacity across the major buffers — a rough

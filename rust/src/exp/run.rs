@@ -1,5 +1,16 @@
 //! Running experiment cells: instance generation, algorithm execution,
 //! metric collection.
+//!
+//! Every cell runs through a [`PlatformCtx`] — the platform's resident
+//! communication panels — and the sweep drivers intern one context per
+//! **distinct platform per run** ([`SweepCtxCache`], bounded): workloads
+//! whose platform is shared across cells (the uniform-platform families)
+//! price thousands of cells against one set of panels, while workloads
+//! that draw a fresh platform per cell (the two-weight families) bypass
+//! the intern table past its cap, so sweep memory stays bounded either
+//! way. Scratch arenas stay in one pool per sweep, shared across workers
+//! as before — per-platform arena pooling is the long-lived service's
+//! concern ([`crate::service`]), not a bounded batch run's.
 
 use super::cells::{Cell, RealWorldCell};
 use crate::cp::ceft::find_critical_path_with;
@@ -10,10 +21,14 @@ use crate::cp::workspace::{Workspace, WorkspacePool};
 use crate::graph::generator::{generate, Instance, RggParams};
 use crate::graph::realworld;
 use crate::metrics;
+use crate::model::PlatformCtx;
 use crate::platform::{CostModel, Platform};
 use crate::sched::Algorithm;
+use crate::util::hashing;
 use crate::util::pool;
 use crate::util::rng::SplitMix64;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Salt XORed into cell seeds to derive the independent platform RNG stream.
 const PLATFORM_SEED_SALT: u64 = 0x504C_4154_504C_4154; // "PLATPLAT"
@@ -84,6 +99,86 @@ impl Row {
     }
 }
 
+/// Interned contexts per sweep are capped here: legitimate sharing needs
+/// a handful of entries (one per distinct `(p, platform kind)` the grid
+/// sweeps), while per-cell-platform workloads would otherwise intern one
+/// context per cell and grow without bound. Past the cap, `get` hands out
+/// correct unshared contexts that die with their cell.
+const MAX_INTERNED_PLATFORMS: usize = 32;
+
+/// One [`PlatformCtx`] per distinct platform for a sweep, bounded at
+/// [`MAX_INTERNED_PLATFORMS`]: cells whose platforms hash equal (and
+/// match content — hash collisions fall back to a fresh unshared context
+/// rather than mispricing) share resident panels; platforms beyond the
+/// cap get unshared contexts, so a sweep whose workload draws a fresh
+/// platform per cell retains `O(cap)` contexts, not `O(cells)`. `Sync`,
+/// so parallel sweep workers intern through one cache; the `O(P²)`
+/// context build always runs outside the map lock.
+pub struct SweepCtxCache {
+    map: Mutex<HashMap<u64, Arc<PlatformCtx>>>,
+}
+
+impl Default for SweepCtxCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SweepCtxCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self {
+            map: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The context for `platform`, building (and interning, below the
+    /// cap) it on first sight. Panels are computed at most once per
+    /// distinct platform per sweep while the intern table has room; a
+    /// racing build of the same platform is resolved by re-checking after
+    /// the (lock-free) build, like the engine's intern path.
+    pub fn get(&self, platform: Platform) -> Arc<PlatformCtx> {
+        let hash = hashing::hash_platform(&platform);
+        {
+            let map = self.map.lock().unwrap();
+            if let Some(ctx) = map.get(&hash) {
+                if ctx.platform().content_eq(&platform) {
+                    return ctx.clone();
+                }
+                // 64-bit hash collision between different platforms: fall
+                // through and serve a correct unshared context instead of
+                // another platform's panels
+            }
+        }
+        // O(P²) build with the lock released; ctx pools are unused by the
+        // sweep drivers (they share one sweep-wide workspace pool), so the
+        // idle cap is minimal
+        let built = Arc::new(PlatformCtx::bounded_prehashed(Arc::new(platform), 1, hash));
+        let mut map = self.map.lock().unwrap();
+        match map.get(&hash).cloned() {
+            Some(raced) if raced.platform().content_eq(built.platform()) => raced,
+            Some(_) => built, // collision: unshared, never interned
+            None => {
+                if map.len() < MAX_INTERNED_PLATFORMS {
+                    map.insert(hash, built.clone());
+                }
+                built
+            }
+        }
+    }
+
+    /// Distinct platforms interned so far (bounded by
+    /// [`MAX_INTERNED_PLATFORMS`]).
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// Whether no platform has been interned yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Build the platform + instance for an RGG cell (deterministic in the cell).
 pub fn build_instance(cell: &Cell) -> (Platform, Instance) {
     let seed = SplitMix64::seed_for(&[cell.workload.id(), cell.index]);
@@ -106,7 +201,8 @@ pub fn build_instance(cell: &Cell) -> (Platform, Instance) {
     (platform, inst)
 }
 
-/// Run every algorithm and metric on one instance (one-shot workspace).
+/// Run every algorithm and metric on one instance (one-shot workspace and
+/// context).
 #[allow(clippy::too_many_arguments)]
 pub fn run_instance(
     workload: &str,
@@ -119,6 +215,7 @@ pub fn run_instance(
     platform: &Platform,
     inst: &Instance,
 ) -> Row {
+    let ctx = PlatformCtx::new(platform.clone());
     run_instance_with(
         &mut Workspace::new(),
         workload,
@@ -128,14 +225,16 @@ pub fn run_instance(
         alpha,
         beta_pct,
         gamma,
-        platform,
+        &ctx,
         inst,
     )
 }
 
 /// Run every algorithm and metric on one instance, borrowing `ws` for all
-/// transient state — the sweep drivers below hand each worker a pooled
-/// workspace so a 10k-cell grid does not re-allocate DP tables per cell.
+/// transient state and `ctx` for the platform's resident panels — the
+/// sweep drivers below hand each worker a pooled workspace and an
+/// interned context so a 10k-cell grid neither re-allocates DP tables nor
+/// refills shared platforms' communication panels per cell.
 #[allow(clippy::too_many_arguments)]
 pub fn run_instance_with(
     ws: &mut Workspace,
@@ -146,11 +245,11 @@ pub fn run_instance_with(
     alpha: f64,
     beta_pct: f64,
     gamma: f64,
-    platform: &Platform,
+    ctx: &PlatformCtx,
     inst: &Instance,
 ) -> Row {
-    let iref = inst.bind(platform);
-    let p = platform.num_classes();
+    let iref = inst.bind_ctx(ctx);
+    let p = ctx.p();
 
     let ceft_cp = find_critical_path_with(ws, iref);
     // CPOP's mean-value CP from ranks computed in workspace buffers
@@ -191,14 +290,30 @@ pub fn run_instance_with(
     }
 }
 
-/// Run one RGG cell end to end (one-shot workspace).
+/// Run one RGG cell end to end (one-shot workspace and context).
 pub fn run_cell(cell: &Cell) -> Row {
     run_cell_with(&mut Workspace::new(), cell)
 }
 
-/// Run one RGG cell end to end with caller-provided scratch.
+/// Run one RGG cell end to end with caller-provided scratch (one-shot
+/// context).
 pub fn run_cell_with(ws: &mut Workspace, cell: &Cell) -> Row {
     let (platform, inst) = build_instance(cell);
+    let ctx = PlatformCtx::new(platform);
+    run_cell_parts(ws, cell, &ctx, &inst)
+}
+
+/// Run one RGG cell through an interned sweep context: same-platform
+/// cells share one set of resident panels, and the caller supplies the
+/// scratch (the sweep drivers reuse one pool of arenas across workers).
+pub fn run_cell_ctx(ctxs: &SweepCtxCache, ws: &mut Workspace, cell: &Cell) -> Row {
+    let (platform, inst) = build_instance(cell);
+    let ctx = ctxs.get(platform);
+    run_cell_parts(ws, cell, &ctx, &inst)
+}
+
+/// The shared tail of the RGG cell drivers.
+fn run_cell_parts(ws: &mut Workspace, cell: &Cell, ctx: &PlatformCtx, inst: &Instance) -> Row {
     run_instance_with(
         ws,
         cell.workload.name(),
@@ -208,18 +323,14 @@ pub fn run_cell_with(ws: &mut Workspace, cell: &Cell) -> Row {
         cell.alpha,
         cell.beta_pct,
         cell.gamma,
-        &platform,
-        &inst,
+        ctx,
+        inst,
     )
 }
 
-/// Run one real-world cell end to end (one-shot workspace).
-pub fn run_realworld_cell(cell: &RealWorldCell) -> Row {
-    run_realworld_cell_with(&mut Workspace::new(), cell)
-}
-
-/// Run one real-world cell end to end with caller-provided scratch.
-pub fn run_realworld_cell_with(ws: &mut Workspace, cell: &RealWorldCell) -> Row {
+/// Deterministically build one real-world cell's workload name, platform
+/// and weighted instance — shared by the one-shot and sweep drivers.
+fn realworld_parts(cell: &RealWorldCell) -> (String, Platform, Instance) {
     let seed = SplitMix64::seed_for(&[cell.family.id(), cell.index]);
     let skel = match cell.family {
         super::cells::RealWorld::Fft => realworld::fft(cell.size),
@@ -243,28 +354,72 @@ pub fn run_realworld_cell_with(ws: &mut Workspace, cell: &RealWorldCell) -> Row 
     let inst =
         realworld::weighted_instance(&skel, cell.ccr, cell.beta_pct, &model, &platform, seed);
     let variant = if cell.medium_variant { "medium" } else { "classic" };
+    (
+        format!("{}-{}", cell.family.name(), variant),
+        platform,
+        inst,
+    )
+}
+
+/// Run one real-world cell end to end (one-shot workspace and context).
+pub fn run_realworld_cell(cell: &RealWorldCell) -> Row {
+    run_realworld_cell_with(&mut Workspace::new(), cell)
+}
+
+/// Run one real-world cell end to end with caller-provided scratch
+/// (one-shot context).
+pub fn run_realworld_cell_with(ws: &mut Workspace, cell: &RealWorldCell) -> Row {
+    let (workload, platform, inst) = realworld_parts(cell);
+    let ctx = PlatformCtx::new(platform);
+    run_realworld_tail(ws, cell, &workload, &ctx, &inst)
+}
+
+/// Run one real-world cell through an interned sweep context (scratch
+/// supplied by the caller, as in [`run_cell_ctx`]).
+pub fn run_realworld_cell_ctx(
+    ctxs: &SweepCtxCache,
+    ws: &mut Workspace,
+    cell: &RealWorldCell,
+) -> Row {
+    let (workload, platform, inst) = realworld_parts(cell);
+    let ctx = ctxs.get(platform);
+    run_realworld_tail(ws, cell, &workload, &ctx, &inst)
+}
+
+/// The shared tail of the real-world cell drivers.
+fn run_realworld_tail(
+    ws: &mut Workspace,
+    cell: &RealWorldCell,
+    workload: &str,
+    ctx: &PlatformCtx,
+    inst: &Instance,
+) -> Row {
     run_instance_with(
         ws,
-        &format!("{}-{}", cell.family.name(), variant),
+        workload,
         inst.graph.num_tasks(),
         0,
         cell.ccr,
         0.0,
         cell.beta_pct,
         0.0,
-        &platform,
-        &inst,
+        ctx,
+        inst,
     )
 }
 
 /// Run a sweep of RGG cells in parallel with optional progress output.
-/// Workers draw long-lived workspaces from a shared pool, so the sweep
-/// allocates `threads` scratch arenas total instead of one set per cell.
+/// Workers intern one [`PlatformCtx`] per distinct platform
+/// ([`SweepCtxCache`], bounded) so shared platforms compute their
+/// communication panels once per run, and draw long-lived workspaces from
+/// one shared pool, so the sweep allocates `threads` scratch arenas total
+/// instead of one set per cell.
 pub fn run_sweep(cells: &[Cell], threads: usize, verbose: bool) -> Vec<Row> {
     let done = std::sync::atomic::AtomicUsize::new(0);
+    let ctxs = SweepCtxCache::new();
     let workspaces = WorkspacePool::bounded(threads.max(1));
     pool::parallel_map(cells, threads, |_, cell| {
-        let row = workspaces.with(|ws| run_cell_with(ws, cell));
+        let row = workspaces.with(|ws| run_cell_ctx(&ctxs, ws, cell));
         let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
         if verbose && (d % 100 == 0 || d == cells.len()) {
             eprintln!("  [{d}/{}] cells done", cells.len());
@@ -273,13 +428,14 @@ pub fn run_sweep(cells: &[Cell], threads: usize, verbose: bool) -> Vec<Row> {
     })
 }
 
-/// Run a sweep of real-world cells in parallel (pooled workspaces, as in
-/// [`run_sweep`]).
+/// Run a sweep of real-world cells in parallel (interned contexts +
+/// pooled workspaces, as in [`run_sweep`]).
 pub fn run_realworld_sweep(cells: &[RealWorldCell], threads: usize, verbose: bool) -> Vec<Row> {
     let done = std::sync::atomic::AtomicUsize::new(0);
+    let ctxs = SweepCtxCache::new();
     let workspaces = WorkspacePool::bounded(threads.max(1));
     pool::parallel_map(cells, threads, |_, cell| {
-        let row = workspaces.with(|ws| run_realworld_cell_with(ws, cell));
+        let row = workspaces.with(|ws| run_realworld_cell_ctx(&ctxs, ws, cell));
         let d = done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
         if verbose && (d % 100 == 0 || d == cells.len()) {
             eprintln!("  [{d}/{}] real-world cells done", cells.len());
@@ -350,6 +506,59 @@ mod tests {
             assert_eq!(a.cpl_ceft, b.cpl_ceft);
             assert_eq!(a.algos[2].makespan, b.algos[2].makespan);
         }
+    }
+
+    #[test]
+    fn sweep_ctx_cache_interns_once_per_platform() {
+        let ctxs = SweepCtxCache::new();
+        let a = ctxs.get(Platform::uniform(4, 1.0, 0.0));
+        let b = ctxs.get(Platform::uniform(4, 1.0, 0.0));
+        assert!(Arc::ptr_eq(&a, &b), "identical platforms share one ctx");
+        assert_eq!(ctxs.len(), 1);
+        let c = ctxs.get(Platform::uniform(4, 2.0, 0.0));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(ctxs.len(), 2);
+    }
+
+    #[test]
+    fn sweep_ctx_cache_caps_interned_platforms() {
+        // per-cell-platform workloads must not grow the intern table (and
+        // its retained panels) without bound: past the cap, every fresh
+        // platform gets a correct unshared ctx while interned platforms
+        // keep sharing
+        let ctxs = SweepCtxCache::new();
+        let first = ctxs.get(Platform::uniform(2, 1.0, 0.0));
+        for i in 0..(2 * MAX_INTERNED_PLATFORMS) {
+            ctxs.get(Platform::uniform(2, 2.0 + i as f64, 0.0));
+        }
+        assert_eq!(ctxs.len(), MAX_INTERNED_PLATFORMS, "intern table is capped");
+        // over-cap platforms still serve correct contexts
+        let over = ctxs.get(Platform::uniform(2, 1e6, 0.0));
+        assert_eq!(over.p(), 2);
+        assert_eq!(over.panel_bw()[1], 1e6);
+        // interned platforms still share
+        let again = ctxs.get(Platform::uniform(2, 1.0, 0.0));
+        assert!(Arc::ptr_eq(&first, &again));
+    }
+
+    #[test]
+    fn ctx_driven_cell_matches_one_shot_cell() {
+        // the interned-context sweep path must be bit-identical to the
+        // one-shot path (ctx sharing changes where panels live, not what
+        // they hold)
+        let cells = grid(Workload::RggClassic, Scale::Smoke);
+        let ctxs = SweepCtxCache::new();
+        let mut ws = Workspace::new();
+        for cell in cells.iter().take(3) {
+            let via_ctx = run_cell_ctx(&ctxs, &mut ws, cell);
+            let one_shot = run_cell(cell);
+            assert_eq!(via_ctx.cpl_ceft, one_shot.cpl_ceft);
+            for i in 0..6 {
+                assert_eq!(via_ctx.algos[i].makespan, one_shot.algos[i].makespan);
+            }
+        }
+        // the classic workload's uniform platform is shared across cells
+        assert_eq!(ctxs.len(), 1, "uniform-platform cells share one ctx");
     }
 
     #[test]

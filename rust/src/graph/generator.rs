@@ -15,7 +15,7 @@
 //! structural properties CPOP's critical-path extraction needs.
 
 use super::TaskGraph;
-use crate::model::{CostMatrix, InstanceRef};
+use crate::model::{CostMatrix, InstanceRef, PlatformCtx};
 use crate::platform::{CostModel, Platform};
 use crate::util::rng::Xoshiro256;
 
@@ -66,6 +66,14 @@ impl Instance {
     /// when the platform's class count disagrees with the cost matrix.
     pub fn bind<'a>(&'a self, platform: &'a Platform) -> InstanceRef<'a> {
         InstanceRef::new(&self.graph, platform, &self.comp)
+    }
+
+    /// Borrow this instance through a [`PlatformCtx`]: the returned view
+    /// carries the context, so the CEFT kernels read its resident
+    /// communication panels instead of refilling workspace copies. Panics
+    /// when the context's class count disagrees with the cost matrix.
+    pub fn bind_ctx<'a>(&'a self, ctx: &'a PlatformCtx) -> InstanceRef<'a> {
+        ctx.bind(&self.graph, &self.comp)
     }
 }
 

@@ -22,11 +22,15 @@
 //!   and the two execution-cost models from the paper (eq. 5 "classic",
 //!   eq. 6 "two-weight").
 //! * [`model`] — the instance model layer: [`model::CostMatrix`] (the dense
-//!   task-major `v × P` execution-cost matrix as a first-class SoA value)
-//!   and [`model::InstanceRef`] (the shape-checked borrowed
+//!   task-major `v × P` execution-cost matrix as a first-class SoA value),
+//!   [`model::InstanceRef`] (the shape-checked borrowed
 //!   `&TaskGraph + &Platform + &CostMatrix` view every algorithm entry
 //!   point consumes — the raw `(graph, platform, comp)` triple survives
-//!   only at the JSON/service boundary).
+//!   only at the JSON/service boundary), and [`model::PlatformCtx`] (the
+//!   platform-scoped execution context: interned hash, resident CEFT
+//!   communication panels, per-class mean-comm scalars, PJRT f32 marshals
+//!   and a platform-sized workspace pool — computed once per distinct
+//!   platform and borrowed by every layer).
 //! * [`cp`] — critical-path algorithms: CEFT (the paper's contribution),
 //!   CPOP's mean-value critical path, the min-execution-time critical path,
 //!   and `CP_MIN` (the SLR denominator) — plus [`cp::workspace`], the
@@ -100,7 +104,7 @@ pub mod prelude {
     pub use crate::cp::workspace::{Workspace, WorkspacePool};
     pub use crate::graph::{generator::RggParams, realworld, TaskGraph};
     pub use crate::metrics::{makespan, slack, slr, speedup};
-    pub use crate::model::{CostMatrix, InstanceRef};
+    pub use crate::model::{CostMatrix, InstanceRef, PlatformCtx};
     pub use crate::platform::{CostModel, Platform};
     pub use crate::sched::{
         ceft_cpop::CeftCpop, cpop::Cpop, heft::Heft, Algorithm, Schedule, Scheduler,

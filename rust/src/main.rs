@@ -15,8 +15,10 @@
 //! * `repro request` — send one protocol request to a running server.
 //! * `repro loadgen` — replay generated instances against an in-process
 //!   engine at a target rate; reports requests/sec, p50/p95/p99 per-request
-//!   latency and cache hit rate, and writes `BENCH_service.json` so the
-//!   perf trajectory is tracked across PRs.
+//!   latency, cache hit rate and panel-context counters
+//!   (`--platform-mix K` round-robins K distinct platforms across the mix
+//!   to exercise the per-platform panel cache), and writes
+//!   `BENCH_service.json` so the perf trajectory is tracked across PRs.
 
 use ceft::coordinator::{Coordinator, EXPERIMENT_IDS};
 use ceft::cp::ceft::find_critical_path;
@@ -241,8 +243,10 @@ fn cmd_cp(tokens: &[String]) -> i32 {
     let parsed = parse_or_exit(args, tokens);
     let cell = cell_from(&parsed);
     let (platform, inst) = build_instance(&cell);
-    let ceft_cp = find_critical_path(inst.bind(&platform));
-    let (cpop_cp, cpop_len) = cpop_critical_path(inst.bind(&platform));
+    // one ctx for both queries: panels computed once, arenas pooled
+    let ctx = ceft::model::PlatformCtx::new(platform);
+    let ceft_cp = find_critical_path(inst.bind_ctx(&ctx));
+    let (cpop_cp, cpop_len) = cpop_critical_path(inst.bind_ctx(&ctx));
     println!("CEFT critical path (length {:.2}):", ceft_cp.length);
     for s in &ceft_cp.path {
         println!("  task {:>5} -> class {}", s.task, s.class);
@@ -443,6 +447,11 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         "replay generated instances against an in-process engine",
     )
     .opt("count", Some("16"), "distinct instances in the replay mix")
+    .opt(
+        "platform-mix",
+        Some("1"),
+        "distinct platforms round-robined across the instance mix",
+    )
     .opt("rate", Some("1000"), "target requests/sec")
     .opt("duration", Some("3"), "seconds to run")
     .opt("algorithm", Some("CEFT-CPOP"), "scheduler to request")
@@ -455,6 +464,7 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
     );
     let parsed = parse_or_exit(args, tokens);
     let count: usize = num_or_exit::<usize>(&parsed, "count", None).max(1);
+    let platform_mix: usize = num_or_exit::<usize>(&parsed, "platform-mix", None).max(1);
     let rate: f64 = num_or_exit(&parsed, "rate", None);
     let duration_s: f64 = num_or_exit(&parsed, "duration", None);
     let algo = match Algorithm::parse(parsed.req("algorithm")) {
@@ -476,13 +486,24 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
     });
 
     // Submit `count` distinct instances (same grid coordinates, different
-    // seeds) and keep their handles for the replay mix.
+    // seeds) and keep their handles for the replay mix. With
+    // --platform-mix K, instance i runs on platform i mod K (distinct
+    // uniform-link platforms, deterministic in K), so the engine's
+    // platform-context cache sees exactly K distinct platforms: its
+    // panel_ctx_misses must be min(K, count) and every other submit a
+    // panel_ctx_hit.
     let base = cell_from(&parsed);
     let mut ids = Vec::with_capacity(count);
     for i in 0..count {
         let mut cell = base;
         cell.index = base.index + i as u64;
         let (platform, inst) = build_instance(&cell);
+        let platform = if platform_mix > 1 {
+            // distinct bandwidth per mix slot -> distinct platform hash
+            ceft::platform::Platform::uniform(inst.p(), 1.0 + (i % platform_mix) as f64, 0.0)
+        } else {
+            platform
+        };
         let line = ceft::service::request_to_json(&Request::Submit {
             instance: inst,
             platform: Some(platform),
@@ -613,6 +634,38 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         sched_hit_rate * 100.0,
         hit_rate("cp_cache") * 100.0
     );
+    // Panel-context counters: panels must be computed once per distinct
+    // platform (misses == the number of distinct platforms submitted),
+    // never per request.
+    let panel_counter = |k: &str| -> f64 {
+        stats
+            .get("panel_cache")
+            .and_then(|c| c.get(k))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    let (panel_hits, panel_misses) = (panel_counter("hits"), panel_counter("misses"));
+    // `misses - dedup_hits` = panel builds that got interned (raced
+    // duplicate builds count as dedup hits) — exactly the distinct
+    // platforms the engine has priced.
+    let panel_builds = panel_misses - panel_counter("dedup_hits");
+    println!(
+        "panel ctx cache: {panel_hits} hits, {panel_misses} misses, \
+         {panel_builds} interned panel builds"
+    );
+    // With an explicit --platform-mix the distinct-platform count is under
+    // our control, so enforce the residency invariant: panels built once
+    // per platform, never per request. (Without it, the workload's own
+    // platform stream decides — e.g. two-weight families draw a fresh
+    // platform per seed — so only the counters are reported.)
+    if platform_mix > 1 && panel_builds as usize != platform_mix.min(count) {
+        eprintln!(
+            "loadgen: {} interned panel builds != distinct platforms {} — panels were rebuilt",
+            panel_builds,
+            platform_mix.min(count)
+        );
+        return 1;
+    }
     println!("{}", stats.to_string());
     // Machine-readable perf record, tracked across PRs (see EXPERIMENTS.md
     // §Workspace for the before/after methodology).
@@ -622,6 +675,9 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
             ("bench", Json::Str("repro loadgen".to_string())),
             ("algorithm", Json::Str(algo.name().to_string())),
             ("instances", Json::Num(count as f64)),
+            ("platform_mix", Json::Num(platform_mix as f64)),
+            ("panel_ctx_hits", Json::Num(panel_hits)),
+            ("panel_ctx_misses", Json::Num(panel_misses)),
             ("threads", Json::Num(threads as f64)),
             ("target_rps", Json::Num(rate)),
             ("duration_s", Json::Num(elapsed)),
@@ -686,8 +742,11 @@ fn cmd_runtime_check(tokens: &[String]) -> i32 {
     cell.n = n;
     cell.p = p;
     let (platform, inst) = build_instance(&cell);
-    let cpu = find_critical_path(inst.bind(&platform));
-    match acc.find_critical_path(inst.bind(&platform)) {
+    // both backends share one PlatformCtx: the CPU kernel reads its
+    // resident panels, the accelerator its f32 marshals
+    let ctx = ceft::model::PlatformCtx::new(platform);
+    let cpu = find_critical_path(inst.bind_ctx(&ctx));
+    match acc.find_critical_path(inst.bind_ctx(&ctx)) {
         Ok(accel) => {
             let rel = (cpu.length - accel.length).abs() / cpu.length.max(1e-12);
             println!(

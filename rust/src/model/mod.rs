@@ -1,11 +1,12 @@
-//! The instance model layer: SoA cost storage and the borrowed instance
-//! view every algorithm entry point consumes.
+//! The instance model layer: SoA cost storage, the borrowed instance view
+//! every algorithm entry point consumes, and the platform-scoped execution
+//! context that owns everything derivable from a platform alone.
 //!
 //! Before this layer existed, every algorithm took a loose
 //! `(graph: &TaskGraph, platform: &Platform, comp: &[f64])` triple that each
 //! caller re-threaded by hand, and nothing guaranteed the three parts
 //! agreed on task or class counts until an index blew up deep inside a DP.
-//! The model layer replaces that with two types:
+//! The model layer replaces that with three types:
 //!
 //! * [`CostMatrix`] — the dense task-major `v × P` execution-cost matrix as
 //!   a first-class structure-of-arrays value. Row-slice accessors
@@ -18,7 +19,18 @@
 //!   checked **once** at construction ([`InstanceRef::new`] /
 //!   [`InstanceRef::try_new`]). Every public algorithm entry point in
 //!   [`crate::cp`], [`crate::sched`], [`crate::metrics`] and
-//!   [`crate::runtime`] takes an `InstanceRef` by value.
+//!   [`crate::runtime`] takes an `InstanceRef` by value. An `InstanceRef`
+//!   may additionally carry a borrowed [`PlatformCtx`]
+//!   ([`PlatformCtx::bind`]), in which case the CEFT kernels read the
+//!   context's resident communication panels instead of refilling them.
+//! * [`PlatformCtx`] — everything that is a pure function of the platform,
+//!   computed **once** and shared by every request/cell/backend that uses
+//!   that platform: the interned structural hash, the destination-major
+//!   `P × P` startup/bandwidth panels of the min-plus kernel (`0` / `+inf`
+//!   diagonals preserved — see EXPERIMENTS.md §Platform contexts), the
+//!   per-sender-class mean-comm scalars, the f32 marshals the PJRT backend
+//!   feeds to `relax_batch`, and a platform-sized [`WorkspacePool`] so
+//!   scratch arenas are pooled per platform shape rather than globally.
 //!
 //! The raw `&[f64]` representation survives only at the JSON/service
 //! boundary (wire decoding in [`crate::graph::io`], structural hashing in
@@ -28,8 +40,10 @@
 //! needs the raw row-major buffer (serialisation, hashing, the f32 PJRT
 //! marshalling) reads it without a copy.
 
+use crate::cp::workspace::{Workspace, WorkspacePool};
 use crate::graph::TaskGraph;
 use crate::platform::Platform;
+use std::sync::Arc;
 
 /// Dense task-major `v × P` execution-cost matrix (`C_comp(t, j)` of the
 /// paper): row `t` holds task `t`'s cost on every processor class,
@@ -139,6 +153,12 @@ impl std::ops::Deref for CostMatrix {
 /// A borrowed, shape-checked view of one scheduling instance:
 /// `&TaskGraph + &Platform + &CostMatrix`. `Copy`, so it is passed by value
 /// through every layer instead of re-threading three loose references.
+///
+/// When constructed through [`PlatformCtx::bind`] the view additionally
+/// carries the platform's execution context ([`InstanceRef::ctx`]), and
+/// the CEFT kernels read the context's resident communication panels
+/// instead of refilling workspace-local copies — same bits, no `O(P²)`
+/// per-call setup.
 #[derive(Clone, Copy, Debug)]
 pub struct InstanceRef<'a> {
     /// the task DAG
@@ -147,6 +167,11 @@ pub struct InstanceRef<'a> {
     pub platform: &'a Platform,
     /// the dense execution-cost matrix
     pub costs: &'a CostMatrix,
+    /// the platform execution context, when bound through
+    /// [`PlatformCtx::bind`] (private so `platform` and `ctx` can never
+    /// disagree — the only constructor that sets it borrows `platform`
+    /// from the context itself)
+    ctx: Option<&'a PlatformCtx>,
 }
 
 impl<'a> InstanceRef<'a> {
@@ -184,6 +209,7 @@ impl<'a> InstanceRef<'a> {
             graph,
             platform,
             costs,
+            ctx: None,
         })
     }
 
@@ -197,6 +223,314 @@ impl<'a> InstanceRef<'a> {
     #[inline]
     pub fn p(&self) -> usize {
         self.platform.num_classes()
+    }
+
+    /// The platform execution context this view was bound through, if any
+    /// ([`PlatformCtx::bind`]). The CEFT kernels use it to read resident
+    /// communication panels; `None` means they fill workspace-local panels
+    /// as before — outputs are bit-identical either way.
+    #[inline]
+    pub fn ctx(&self) -> Option<&'a PlatformCtx> {
+        self.ctx
+    }
+}
+
+/// Fill the destination-major `P × P` communication panels for `platform`:
+/// for destination class `j` and sender class `l`,
+/// `startup_panel[j*P + l] = startup(l)` and
+/// `bw_panel[j*P + l] = bandwidth(l → j)`, with a `0` / `+inf` diagonal so
+/// the min-plus kernel's `S + data / B` evaluates to exactly `+0.0` for
+/// co-located classes — the same bits [`Platform::comm_cost`] produces.
+/// Single implementation behind both the resident [`PlatformCtx`] panels
+/// and the workspace-local fallback in [`crate::cp::ceft`].
+pub(crate) fn fill_comm_panels(platform: &Platform, sp: &mut Vec<f64>, bp: &mut Vec<f64>) {
+    let p = platform.num_classes();
+    sp.clear();
+    sp.resize(p * p, 0.0);
+    bp.clear();
+    bp.resize(p * p, 0.0);
+    for j in 0..p {
+        let srow = &mut sp[j * p..(j + 1) * p];
+        let brow = &mut bp[j * p..(j + 1) * p];
+        for l in 0..p {
+            if l == j {
+                srow[l] = 0.0;
+                brow[l] = f64::INFINITY;
+            } else {
+                srow[l] = platform.startup(l);
+                brow[l] = platform.bandwidth(l, j);
+            }
+        }
+    }
+}
+
+/// Fill the f32 marshals the PJRT `relax_batch` artifact consumes:
+/// `l[j] = startup(j) as f32`, and the sender-major reciprocal-bandwidth
+/// matrix `invbw[l*P + j] = (1 / bandwidth(l → j)) as f32` with a `0`
+/// diagonal (the artifact's co-located branch). Single implementation
+/// behind the resident [`PlatformCtx`] marshals and the unbound fallback
+/// in [`crate::runtime`], so the two accelerator paths cannot diverge.
+pub(crate) fn fill_f32_marshals(platform: &Platform, l: &mut Vec<f32>, invbw: &mut Vec<f32>) {
+    let p = platform.num_classes();
+    l.clear();
+    l.extend((0..p).map(|j| platform.startup(j) as f32));
+    invbw.clear();
+    invbw.resize(p * p, 0.0);
+    for a in 0..p {
+        for b in 0..p {
+            if a != b {
+                invbw[a * p + b] = (1.0 / platform.bandwidth(a, b)) as f32;
+            }
+        }
+    }
+}
+
+/// A platform-scoped execution context: everything that depends only on
+/// the platform, computed once and borrowed by every instance that runs
+/// on it.
+///
+/// The CEFT min-plus kernel prices every edge against the platform's
+/// `P × P` startup/bandwidth panels. Those panels are a pure function of
+/// the platform, yet before this type existed every DP entry refilled them
+/// into the [`Workspace`] — `O(P²)` per call, repeated thousands of times
+/// by the online service for a handful of distinct platforms. A
+/// `PlatformCtx` makes the platform's derived state **resident**:
+///
+/// * the interned structural hash ([`PlatformCtx::hash`], the same
+///   [`crate::util::hashing::hash_platform`] the service keys its
+///   caches on);
+/// * the destination-major communication panels
+///   ([`PlatformCtx::panel_startup`] / [`PlatformCtx::panel_bw`]) with the
+///   `0` / `+inf` diagonal contract of the kernel preserved;
+/// * per-sender-class mean-comm scalars ([`PlatformCtx::mean_comm_from`]),
+///   the class-resolved refinement of [`Platform::mean_comm_cost`];
+/// * the f32 marshals ([`PlatformCtx::startup_f32`] /
+///   [`PlatformCtx::invbw_f32`]) the PJRT `relax_batch` artifact consumes,
+///   filled by the same routine as the runtime's unbound fallback so both
+///   backends share one batching layer;
+/// * a platform-sized [`WorkspacePool`] ([`PlatformCtx::with_workspace`]):
+///   scratch arenas are pooled per platform shape, so a large-`P`
+///   platform's high-water arenas are never handed to (and retained for)
+///   small-`P` requests.
+///
+/// Bind a graph + cost matrix with [`PlatformCtx::bind`] to obtain an
+/// [`InstanceRef`] that carries the context through every layer; the CEFT
+/// kernels then skip the per-call panel fill entirely. Construction is
+/// `O(P²)`; everything after is read-only and `Sync`, so one `Arc<PlatformCtx>`
+/// serves concurrent workers (the service engine interns one per distinct
+/// platform hash, the sweep harness one per distinct platform per run).
+pub struct PlatformCtx {
+    platform: Arc<Platform>,
+    /// structural platform hash (`crate::util::hashing::hash_platform`)
+    hash: u64,
+    /// destination-major `P × P` startup panel (`0` diagonal)
+    panel_startup: Vec<f64>,
+    /// destination-major `P × P` bandwidth panel (`+inf` diagonal)
+    panel_bw: Vec<f64>,
+    /// per-sender-class mean reciprocal bandwidth over the `P - 1` distinct
+    /// destinations (all zeros when `P == 1` — no distinct pairs)
+    mean_inv_bw_from: Vec<f64>,
+    /// f32 marshal of per-class startup latencies (PJRT `relax_batch` `l`)
+    startup_f32: Vec<f32>,
+    /// f32 marshal of the reciprocal-bandwidth matrix, sender-major with a
+    /// `0` diagonal (PJRT `relax_batch` `invbw`)
+    invbw_f32: Vec<f32>,
+    /// platform-sized workspace pool (arenas shaped by this platform's `P`)
+    pool: WorkspacePool,
+}
+
+impl PlatformCtx {
+    /// Context over an owned platform with an unbounded workspace pool —
+    /// the one-shot constructor for CLI commands, tests and benches.
+    pub fn new(platform: Platform) -> Self {
+        Self::from_arc(Arc::new(platform))
+    }
+
+    /// Context over a shared platform with an unbounded workspace pool.
+    pub fn from_arc(platform: Arc<Platform>) -> Self {
+        Self::build(platform, usize::MAX, None)
+    }
+
+    /// Context whose workspace pool retains at most `max_idle` idle arenas
+    /// — what the service engine and the sweep harness use (bounded at
+    /// their worker-thread count, like the former global pools).
+    pub fn bounded(platform: Arc<Platform>, max_idle: usize) -> Self {
+        Self::build(platform, max_idle, None)
+    }
+
+    /// [`PlatformCtx::bounded`] for interning callers that already computed
+    /// the structural platform hash — skips rehashing the `O(P²)` platform
+    /// encoding (debug builds assert the supplied hash matches).
+    pub(crate) fn bounded_prehashed(platform: Arc<Platform>, max_idle: usize, hash: u64) -> Self {
+        Self::build(platform, max_idle, Some(hash))
+    }
+
+    fn build(platform: Arc<Platform>, max_idle: usize, prehash: Option<u64>) -> Self {
+        let p = platform.num_classes();
+        let hash =
+            prehash.unwrap_or_else(|| crate::util::hashing::hash_platform(&platform));
+        debug_assert_eq!(hash, crate::util::hashing::hash_platform(&platform));
+        let mut panel_startup = Vec::new();
+        let mut panel_bw = Vec::new();
+        fill_comm_panels(&platform, &mut panel_startup, &mut panel_bw);
+        // per-sender mean reciprocal bandwidth over distinct destinations;
+        // panel_bw is destination-major, so sender l's reciprocals live at
+        // stride P — the +inf diagonal contributes exactly 0.0
+        let mut mean_inv_bw_from = vec![0.0; p];
+        if p > 1 {
+            for (l, m) in mean_inv_bw_from.iter_mut().enumerate() {
+                let mut sum = 0.0;
+                for j in 0..p {
+                    sum += 1.0 / panel_bw[j * p + l];
+                }
+                *m = sum / (p - 1) as f64;
+            }
+        }
+        // f32 marshals for the PJRT backend — one shared routine with the
+        // runtime's unbound fallback, so the two paths cannot diverge
+        let mut startup_f32 = Vec::new();
+        let mut invbw_f32 = Vec::new();
+        fill_f32_marshals(&platform, &mut startup_f32, &mut invbw_f32);
+        Self {
+            platform,
+            hash,
+            panel_startup,
+            panel_bw,
+            mean_inv_bw_from,
+            startup_f32,
+            invbw_f32,
+            pool: if max_idle == usize::MAX {
+                WorkspacePool::new()
+            } else {
+                WorkspacePool::bounded(max_idle)
+            },
+        }
+    }
+
+    /// The platform this context was derived from.
+    #[inline]
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    /// The shared platform handle (for callers that intern the context).
+    pub fn platform_arc(&self) -> &Arc<Platform> {
+        &self.platform
+    }
+
+    /// Interned structural platform hash
+    /// ([`crate::util::hashing::hash_platform`]).
+    #[inline]
+    pub fn hash(&self) -> u64 {
+        self.hash
+    }
+
+    /// Number of processor classes `P`.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.platform.num_classes()
+    }
+
+    /// The resident destination-major `P × P` startup panel: row `j` holds
+    /// `startup(l)` for every sender class `l != j` and `0.0` on the
+    /// diagonal.
+    #[inline]
+    pub fn panel_startup(&self) -> &[f64] {
+        &self.panel_startup
+    }
+
+    /// The resident destination-major `P × P` bandwidth panel, aligned
+    /// with [`PlatformCtx::panel_startup`]: row `j` holds
+    /// `bandwidth(l → j)` for `l != j` and `+inf` on the diagonal (so
+    /// `data / bw` contributes exactly `+0.0` when co-located).
+    #[inline]
+    pub fn panel_bw(&self) -> &[f64] {
+        &self.panel_bw
+    }
+
+    /// Mean communication cost of moving `data` units *from* class `l` to
+    /// a uniformly random *other* class — the per-sender-class refinement
+    /// of [`Platform::mean_comm_cost`]. Exactly `0` when `P == 1` (no
+    /// distinct destinations, all transfers co-located).
+    ///
+    /// Not yet consumed by the rank sweeps: CPOP/HEFT deliberately keep
+    /// the paper's global scalarisation (`Platform::mean_comm_cost`), and
+    /// changing that would break the bit-identity contract with the
+    /// published algorithms. This is the ctx surface for the class-aware
+    /// rank refinements the ROADMAP sketches.
+    #[inline]
+    pub fn mean_comm_from(&self, l: usize, data: f64) -> f64 {
+        if self.p() == 1 {
+            0.0
+        } else {
+            self.platform.startup(l) + data * self.mean_inv_bw_from[l]
+        }
+    }
+
+    /// f32 marshal of the per-class startup latencies — the `l` operand of
+    /// the PJRT `relax_batch` artifact.
+    #[inline]
+    pub fn startup_f32(&self) -> &[f32] {
+        &self.startup_f32
+    }
+
+    /// f32 marshal of the sender-major reciprocal-bandwidth matrix with a
+    /// `0` diagonal — the `invbw` operand of the PJRT `relax_batch`
+    /// artifact, filled by the same routine as the runtime's unbound
+    /// fallback.
+    #[inline]
+    pub fn invbw_f32(&self) -> &[f32] {
+        &self.invbw_f32
+    }
+
+    /// Run `f` with a workspace from this context's platform-sized pool.
+    /// Arenas checked out here only ever serve instances of this
+    /// platform's `P`, so their high-water capacity tracks this platform's
+    /// shape instead of the largest platform the whole process has seen.
+    pub fn with_workspace<R>(&self, f: impl FnOnce(&mut Workspace) -> R) -> R {
+        self.pool.with(f)
+    }
+
+    /// Workspaces ever created by this context's pool (concurrency
+    /// high-water mark).
+    pub fn pool_created(&self) -> usize {
+        self.pool.created()
+    }
+
+    /// Workspaces currently idle in this context's pool.
+    pub fn pool_idle(&self) -> usize {
+        self.pool.idle()
+    }
+
+    /// Bind a graph and cost matrix to this platform as a ctx-carrying
+    /// [`InstanceRef`]: the CEFT kernels will read this context's resident
+    /// panels instead of refilling workspace copies. Panics on shape
+    /// mismatch (see [`PlatformCtx::try_bind`]).
+    pub fn bind<'a>(&'a self, graph: &'a TaskGraph, costs: &'a CostMatrix) -> InstanceRef<'a> {
+        self.try_bind(graph, costs).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible [`PlatformCtx::bind`] for untrusted shapes.
+    pub fn try_bind<'a>(
+        &'a self,
+        graph: &'a TaskGraph,
+        costs: &'a CostMatrix,
+    ) -> Result<InstanceRef<'a>, String> {
+        let mut inst = InstanceRef::try_new(graph, &self.platform, costs)?;
+        inst.ctx = Some(self);
+        Ok(inst)
+    }
+}
+
+impl std::fmt::Debug for PlatformCtx {
+    /// Concise form: the panels are `P²` floats and would drown test
+    /// failure output.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlatformCtx")
+            .field("p", &self.p())
+            .field("hash", &format_args!("{:016x}", self.hash))
+            .field("pool_created", &self.pool.created())
+            .finish()
     }
 }
 
@@ -264,5 +598,108 @@ mod tests {
         let m = cost_matrix_from_raw(2, &raw);
         assert_eq!(m.n(), 2);
         assert_eq!(m.as_slice(), &raw);
+    }
+
+    #[test]
+    fn platform_ctx_panels_match_comm_cost_contract() {
+        let mut rng = crate::util::rng::Xoshiro256::new(11);
+        let plat = Platform::random_links(4, &mut rng, 0.3, 3.0, 0.1, 0.8);
+        let ctx = PlatformCtx::new(plat.clone());
+        let p = ctx.p();
+        assert_eq!(p, 4);
+        let (sp, bp) = (ctx.panel_startup(), ctx.panel_bw());
+        for j in 0..p {
+            for l in 0..p {
+                if l == j {
+                    assert_eq!(sp[j * p + l], 0.0);
+                    assert_eq!(bp[j * p + l], f64::INFINITY);
+                    // the kernel's branch-free form reproduces co-location
+                    assert_eq!(sp[j * p + l] + 7.0 / bp[j * p + l], 0.0);
+                } else {
+                    assert_eq!(sp[j * p + l], plat.startup(l));
+                    assert_eq!(bp[j * p + l], plat.bandwidth(l, j));
+                    // panel form == Platform::comm_cost, bit for bit
+                    let data = 13.5;
+                    assert_eq!(
+                        sp[j * p + l] + data / bp[j * p + l],
+                        plat.comm_cost(l, j, data)
+                    );
+                }
+            }
+        }
+        // the interned hash is the service's structural platform hash
+        assert_eq!(ctx.hash(), crate::util::hashing::hash_platform(&plat));
+    }
+
+    #[test]
+    fn platform_ctx_mean_comm_scalars() {
+        // uniform platform: every sender sees the same mean as the global
+        // scalarisation
+        let plat = Platform::uniform(3, 2.0, 0.5);
+        let ctx = PlatformCtx::new(plat.clone());
+        for l in 0..3 {
+            assert!(
+                (ctx.mean_comm_from(l, 10.0) - (0.5 + 10.0 / 2.0)).abs() < 1e-12,
+                "sender {l}"
+            );
+        }
+        // heterogeneous links: the per-class means average back to the
+        // platform's global mean_comm_cost (both average the same
+        // P(P-1) distinct ordered pairs)
+        let mut rng = crate::util::rng::Xoshiro256::new(23);
+        let het = Platform::random_links(5, &mut rng, 0.2, 4.0, 0.0, 1.0);
+        let hctx = PlatformCtx::new(het.clone());
+        let data = 6.25;
+        let avg: f64 = (0..5).map(|l| hctx.mean_comm_from(l, data)).sum::<f64>() / 5.0;
+        assert!((avg - het.mean_comm_cost(data)).abs() < 1e-9);
+        // P == 1: no distinct pairs, exactly zero (Definition 3)
+        let one = PlatformCtx::new(Platform::uniform(1, 1.0, 5.0));
+        assert_eq!(one.mean_comm_from(0, 100.0), 0.0);
+    }
+
+    #[test]
+    fn platform_ctx_f32_marshals_match_runtime_layout() {
+        let mut rng = crate::util::rng::Xoshiro256::new(41);
+        let plat = Platform::random_links(3, &mut rng, 0.5, 2.0, 0.0, 1.0);
+        let ctx = PlatformCtx::new(plat.clone());
+        for a in 0..3 {
+            assert_eq!(ctx.startup_f32()[a], plat.startup(a) as f32);
+            for b in 0..3 {
+                let expect = if a == b {
+                    0.0
+                } else {
+                    (1.0 / plat.bandwidth(a, b)) as f32
+                };
+                assert_eq!(ctx.invbw_f32()[a * 3 + b], expect, "({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn platform_ctx_bind_carries_ctx_and_checks_shapes() {
+        let g = TaskGraph::from_edges(2, &[(0, 1, 1.0)]);
+        let ctx = PlatformCtx::new(Platform::uniform(2, 1.0, 0.0));
+        let good = CostMatrix::new(2, vec![1.0; 4]);
+        let inst = ctx.bind(&g, &good);
+        assert!(inst.ctx().is_some());
+        assert!(std::ptr::eq(inst.platform, ctx.platform()));
+        // the plain constructor carries no context
+        let plain = InstanceRef::new(&g, ctx.platform(), &good);
+        assert!(plain.ctx().is_none());
+        // shape mismatches are still rejected
+        let bad = CostMatrix::new(3, vec![1.0; 6]);
+        assert!(ctx.try_bind(&g, &bad).is_err());
+    }
+
+    #[test]
+    fn platform_ctx_pool_is_platform_scoped() {
+        let ctx = PlatformCtx::bounded(Arc::new(Platform::uniform(2, 1.0, 0.0)), 2);
+        assert_eq!(ctx.pool_created(), 0);
+        ctx.with_workspace(|ws| ws.table.resize(64, 0.0));
+        assert_eq!(ctx.pool_created(), 1);
+        assert_eq!(ctx.pool_idle(), 1);
+        // reuse, not regrowth
+        ctx.with_workspace(|ws| assert!(ws.table.capacity() >= 64));
+        assert_eq!(ctx.pool_created(), 1);
     }
 }

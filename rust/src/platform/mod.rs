@@ -234,6 +234,18 @@ impl Platform {
     pub fn mean_comm_cost(&self, data: f64) -> f64 {
         self.mean_startup + data * self.mean_inv_bw
     }
+
+    /// Field-by-field content equality over exactly what the algorithms
+    /// read (class count, startups, bandwidths, two-weight capacities).
+    /// `Platform` deliberately has no `PartialEq` — content equality is a
+    /// deliberate act at interning boundaries (the service's hash-collision
+    /// guard, sweep-level context sharing), not an incidental comparison.
+    pub fn content_eq(&self, other: &Platform) -> bool {
+        self.p == other.p
+            && self.startup == other.startup
+            && self.bandwidth == other.bandwidth
+            && self.weights == other.weights
+    }
 }
 
 /// How execution costs `C_comp(t, p)` are generated.
@@ -473,6 +485,27 @@ mod tests {
         assert!(Platform::from_parts(2, vec![0.0; 2], vec![1.0; 3], vec![]).is_err());
         assert!(Platform::from_parts(2, vec![0.0; 2], vec![0.0; 4], vec![]).is_err());
         assert!(Platform::from_parts(2, vec![0.0; 2], vec![1.0; 4], vec![(1.0, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn content_eq_compares_all_algorithm_visible_fields() {
+        let mut rng = Xoshiro256::new(8);
+        let a = Platform::random_links(3, &mut rng, 0.5, 1.5, 0.0, 0.2);
+        let same = Platform::from_parts(
+            3,
+            (0..3).map(|j| a.startup(j)).collect(),
+            (0..9).map(|i| a.bandwidth(i / 3, i % 3)).collect(),
+            Vec::new(),
+        )
+        .unwrap();
+        assert!(a.content_eq(&same));
+        assert!(!a.content_eq(&Platform::uniform(3, 1.0, 0.0)));
+        assert!(!a.content_eq(&Platform::uniform(2, 1.0, 0.0)));
+        // two-weight capacities participate
+        let mut rng2 = Xoshiro256::new(9);
+        let tw = Platform::two_weight(3, 0.5, &mut rng2, 1.0, 0.0);
+        assert!(!tw.content_eq(&Platform::uniform(3, 1.0, 0.0)));
+        assert!(tw.content_eq(&tw.clone()));
     }
 
     #[test]

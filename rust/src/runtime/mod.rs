@@ -138,6 +138,12 @@ impl AcceleratedCeft {
     }
 
     /// Compute the CEFT table on the accelerator.
+    ///
+    /// Instances bound through a [`crate::model::PlatformCtx`] reuse the
+    /// context's resident f32 marshals (`startup_f32` / `invbw_f32`,
+    /// derived from the same panels the CPU kernel reads) instead of
+    /// re-deriving them per call — the two backends consume one batching
+    /// layer. Unbound instances marshal locally, bit-identically.
     pub fn ceft_table(&self, inst: InstanceRef) -> Result<CeftTable> {
         let graph = inst.graph;
         let platform = inst.platform;
@@ -147,17 +153,15 @@ impl AcceleratedCeft {
             return Err(RuntimeError(format!("no artifact for p={p}")));
         }
         let v = graph.num_tasks();
-        let l: Vec<f32> = (0..p).map(|j| platform.startup(j) as f32).collect();
-        let mut invbw = vec![0f32; p * p];
-        for a in 0..p {
-            for b in 0..p {
-                invbw[a * p + b] = if a == b {
-                    0.0
-                } else {
-                    (1.0 / platform.bandwidth(a, b)) as f32
-                };
+        let mut local_l = Vec::new();
+        let mut local_invbw = Vec::new();
+        let (l, invbw): (&[f32], &[f32]) = match inst.ctx() {
+            Some(ctx) => (ctx.startup_f32(), ctx.invbw_f32()),
+            None => {
+                crate::model::fill_f32_marshals(platform, &mut local_l, &mut local_invbw);
+                (&local_l, &local_invbw)
             }
-        }
+        };
         let mut table = vec![0f64; v * p];
         // process tasks level by level; batch the edge relaxations
         let levels = graph.levels();
@@ -201,7 +205,7 @@ impl AcceleratedCeft {
                     }
                     dbuf[i] = 0.0;
                 }
-                let out = self.rt.relax_batch(p, &fbuf, &dbuf, &l, &invbw, &cbuf)?;
+                let out = self.rt.relax_batch(p, &fbuf, &dbuf, l, invbw, &cbuf)?;
                 for (i, &(t, _, _)) in chunk.iter().enumerate() {
                     for j in 0..p {
                         let cand = out[i * p + j] as f64;
@@ -337,5 +341,69 @@ mod tests {
     fn stub_runtime_reports_unavailable() {
         let err = PjrtRuntime::new().err().expect("stub must not construct");
         assert!(err.to_string().contains("not compiled in"));
+    }
+
+    #[test]
+    fn ctx_marshals_match_local_marshalling() {
+        // the PlatformCtx f32 marshals must be bit-identical to the local
+        // per-call marshalling the unbound path performs, so binding an
+        // instance through a ctx cannot change accelerator numerics
+        let mut rng = crate::util::rng::Xoshiro256::new(55);
+        let p = 4;
+        let plat = Platform::random_links(p, &mut rng, 0.5, 2.0, 0.0, 1.0);
+        let ctx = crate::model::PlatformCtx::new(plat.clone());
+        for j in 0..p {
+            assert_eq!(ctx.startup_f32()[j], plat.startup(j) as f32);
+        }
+        for a in 0..p {
+            for b in 0..p {
+                let local = if a == b {
+                    0.0
+                } else {
+                    (1.0 / plat.bandwidth(a, b)) as f32
+                };
+                assert_eq!(ctx.invbw_f32()[a * p + b].to_bits(), local.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_batch_kernel_agrees_with_relax_batch_reference() {
+        // The CPU batched min-plus kernel (ceft_dp_kernel_batch_into) and
+        // the artifact's relaxation reference implement the same batching
+        // layer: B rows against one shared panel pair. With comp = 0 the
+        // f32 reference must match the f64 kernel to f32 tolerance.
+        let mut rng = crate::util::rng::Xoshiro256::new(56);
+        let p = 4;
+        let plat = Platform::random_links(p, &mut rng, 0.5, 2.0, 0.0, 1.0);
+        let ctx = crate::model::PlatformCtx::new(plat.clone());
+        let b = 8;
+        let rows: Vec<f64> = (0..b * p).map(|_| rng.uniform(0.0, 50.0)).collect();
+        let data: Vec<f64> = (0..b).map(|_| rng.uniform(0.0, 20.0)).collect();
+        let mut vals = Vec::new();
+        let mut args = Vec::new();
+        crate::cp::ceft::ceft_dp_kernel_batch_into(&ctx, &rows, &data, &mut vals, &mut args);
+        let rows32: Vec<f32> = rows.iter().map(|&x| x as f32).collect();
+        let data32: Vec<f32> = data.iter().map(|&x| x as f32).collect();
+        let comp32 = vec![0f32; b * p];
+        let out = relax_batch_reference(
+            p,
+            &rows32,
+            &data32,
+            ctx.startup_f32(),
+            ctx.invbw_f32(),
+            &comp32,
+        );
+        for i in 0..b {
+            for j in 0..p {
+                let diff = (out[i * p + j] as f64 - vals[i * p + j]).abs();
+                assert!(
+                    diff < 1e-3 * vals[i * p + j].abs().max(1.0),
+                    "({i},{j}): f32 {} vs f64 {}",
+                    out[i * p + j],
+                    vals[i * p + j]
+                );
+            }
+        }
     }
 }

@@ -90,6 +90,13 @@ impl<K: Eq + Hash + Copy, V> LruCache<K, V> {
         self.map.get(k).map(|(_, v)| v)
     }
 
+    /// Visit every live entry without touching recency or stats
+    /// (arbitrary order — callers that need determinism sort). Used by the
+    /// engine's stats endpoint to report per-platform-context pool gauges.
+    pub fn iter(&self) -> impl Iterator<Item = (&K, &V)> {
+        self.map.iter().map(|(k, (_, v))| (k, v))
+    }
+
     /// Insert (or overwrite) `k`, evicting the least-recently-used entry
     /// when over capacity.
     pub fn put(&mut self, k: K, v: V) {

@@ -1,13 +1,25 @@
 //! The persistent scheduling engine and its serving loops.
 //!
 //! [`Engine`] is the long-lived heart of the service: it interns platforms
-//! and task graphs by structural hash, memoizes CEFT critical paths and
-//! schedules in LRU caches keyed by
+//! (as [`PlatformCtx`] execution contexts) and task graphs by structural
+//! hash, memoizes CEFT critical paths and schedules in LRU caches keyed by
 //! `(graph-hash, platform-hash, comp-hash, algorithm)`, and dispatches
 //! every computation through the unified [`Algorithm`] registry — the same
 //! code paths as the batch `repro schedule` / `repro cp` commands, so an
 //! online answer is bit-identical to the offline one (both inherit
 //! [`crate::cp::ceft`]'s deterministic tie-breaking).
+//!
+//! Platform contexts: the `P × P` communication panels the CEFT kernel
+//! prices every edge against depend only on the platform, so the engine
+//! interns one `Arc<PlatformCtx>` per distinct platform hash and every
+//! instance on that platform borrows it — panels are computed exactly once
+//! per distinct platform per process, not per request (the
+//! `panel_cache` hit/miss counters in the stats endpoint measure this;
+//! `repro loadgen --platform-mix K` exercises it). The context also owns a
+//! platform-sized workspace pool: scratch arenas are pooled **per platform
+//! shape**, so a large-`P` platform's high-water arenas are never retained
+//! for and handed to small-`P` requests (per-context created/idle gauges
+//! are in the stats endpoint too).
 //!
 //! Concurrency model: the engine state sits behind one mutex, but all
 //! algorithm work (the `O(P²e)` CEFT DP, the list schedulers) runs outside
@@ -19,11 +31,12 @@
 //! in-flight table, so the fast path is unchanged. Batched entry points fan
 //! work across [`crate::util::pool`] workers so throughput scales with
 //! cores (see `benches/service_throughput.rs`). Cache misses borrow a
-//! long-lived [`crate::cp::workspace::Workspace`] from a pool whose idle
-//! list is capped at the worker count, so the algorithm core (CEFT DP,
-//! rank sweeps, the list scheduler's heap and busy lists) allocates
-//! nothing once warmed while retained scratch memory stays bounded — see
-//! EXPERIMENTS.md §Workspace for the benchmark methodology.
+//! long-lived [`crate::cp::workspace::Workspace`] from the instance's
+//! platform-context pool (idle list capped at the worker count), so the
+//! algorithm core (CEFT DP, rank sweeps, the list scheduler's heap and
+//! busy lists) allocates nothing once warmed while retained scratch memory
+//! stays bounded — see EXPERIMENTS.md §Workspace and §Platform contexts
+//! for the benchmark methodology.
 //!
 //! Serving loops: [`serve_stdio`] speaks the protocol on stdin/stdout,
 //! greedily draining whatever lines are already buffered into one batch;
@@ -31,11 +44,10 @@
 //! connection. Both share one engine, hence one cache.
 
 use crate::cp::ceft::{find_critical_path_with, CriticalPath};
-use crate::cp::workspace::WorkspacePool;
 use crate::graph::generator::Instance;
 use crate::graph::io;
 use crate::graph::TaskGraph;
-use crate::model::{CostMatrix, InstanceRef};
+use crate::model::{CostMatrix, InstanceRef, PlatformCtx};
 use crate::platform::Platform;
 use crate::sched::{Algorithm, Schedule};
 use crate::service::cache::{CacheKey, CacheStats, LruCache};
@@ -88,42 +100,26 @@ impl Default for EngineConfig {
     }
 }
 
-/// Field-by-field platform equality (Platform deliberately has no
-/// `PartialEq`; this compares exactly what the algorithms read).
-fn platforms_equal(a: &Platform, b: &Platform) -> bool {
-    let p = a.num_classes();
-    if p != b.num_classes() || a.class_weight_table() != b.class_weight_table() {
-        return false;
-    }
-    for i in 0..p {
-        if a.startup(i) != b.startup(i) {
-            return false;
-        }
-        for j in 0..p {
-            if a.bandwidth(i, j) != b.bandwidth(i, j) {
-                return false;
-            }
-        }
-    }
-    true
-}
-
-/// An interned instance: shared, hash-addressed, immutable.
+/// An interned instance: shared, hash-addressed, immutable. The platform
+/// lives inside the shared [`PlatformCtx`], so every instance on the same
+/// platform borrows one set of resident communication panels and one
+/// platform-sized workspace pool.
 struct Interned {
     id: u64,
     graph: Arc<TaskGraph>,
     comp: Arc<CostMatrix>,
-    platform: Arc<Platform>,
+    ctx: Arc<PlatformCtx>,
     graph_hash: u64,
     platform_hash: u64,
     comp_hash: u64,
 }
 
 impl Interned {
-    /// The [`InstanceRef`] view of this interned instance — what the
-    /// algorithm layer consumes.
+    /// The ctx-carrying [`InstanceRef`] view of this interned instance —
+    /// what the algorithm layer consumes (the CEFT kernels read the
+    /// context's resident panels through it).
     fn inst(&self) -> InstanceRef<'_> {
-        InstanceRef::new(self.graph.as_ref(), self.platform.as_ref(), self.comp.as_ref())
+        self.ctx.bind(self.graph.as_ref(), self.comp.as_ref())
     }
 }
 
@@ -208,6 +204,13 @@ struct State {
     /// interned instances, LRU-bounded: stale handles expire instead of
     /// letting a stream of distinct instances grow memory without bound
     instances: LruCache<u64, Arc<Interned>>,
+    /// interned platform execution contexts keyed by structural platform
+    /// hash — the panel cache. One entry per distinct platform; its LRU
+    /// hit/miss stats are the `panel_ctx_hits`/`panel_ctx_misses` counters
+    /// loadgen records. Instances hold `Arc`s, so eviction here never
+    /// invalidates a live instance — it only means a future submit of that
+    /// platform recomputes the panels once.
+    ctxs: LruCache<u64, Arc<PlatformCtx>>,
     cp_cache: LruCache<CacheKey, Arc<CriticalPath>>,
     sched_cache: LruCache<CacheKey, Arc<Schedule>>,
     /// single-flight tables: uncached keys currently being computed; the
@@ -219,19 +222,22 @@ struct State {
 }
 
 /// The persistent, memoizing scheduling engine.
+///
+/// Long-lived scratch arenas live in per-platform-context pools
+/// ([`PlatformCtx::with_workspace`]): a cache miss borrows one for the
+/// CEFT DP / list-scheduler run instead of allocating fresh DP tables,
+/// heaps and pin maps per request. Each context's idle pool is capped at
+/// the worker-thread count — TCP bursts beyond it (up to
+/// `MAX_CONNECTIONS` handler threads) get transient workspaces that are
+/// dropped on check-in rather than pinning their high-water-mark capacity
+/// for the process lifetime — and because pools are platform-scoped, a
+/// large-`P` platform's arenas are never retained for small-`P` requests:
+/// retained scratch is bounded by
+/// `threads × high-water instance size` **per live platform**, and a
+/// context evicted from the panel cache releases its arenas with it.
 pub struct Engine {
     state: Mutex<State>,
     threads: usize,
-    /// Long-lived per-worker scratch arenas: a cache miss borrows one for
-    /// the CEFT DP / list-scheduler run instead of allocating fresh DP
-    /// tables, heaps and pin maps per request. The idle pool is capped at
-    /// the worker-thread count — TCP bursts beyond it (up to
-    /// `MAX_CONNECTIONS` handler threads) get transient workspaces that
-    /// are dropped on check-in rather than pinning their high-water-mark
-    /// capacity for the process lifetime — so warmed steady-state serving
-    /// does no heap allocation in the algorithm core while total retained
-    /// scratch stays bounded by `threads × high-water instance size`.
-    workspaces: WorkspacePool,
 }
 
 impl Engine {
@@ -242,6 +248,7 @@ impl Engine {
         Self {
             state: Mutex::new(State {
                 instances: LruCache::new(config.intern_capacity.max(1)),
+                ctxs: LruCache::new(config.intern_capacity.max(1)),
                 cp_cache: LruCache::new(cap),
                 sched_cache: LruCache::new(cap),
                 cp_inflight: HashMap::new(),
@@ -249,7 +256,6 @@ impl Engine {
                 counters: Counters::default(),
             }),
             threads,
-            workspaces: WorkspacePool::bounded(threads),
         }
     }
 
@@ -306,7 +312,7 @@ impl Engine {
                 && existing.graph.num_tasks() == instance.graph.num_tasks()
                 && existing.graph.edges() == instance.graph.edges()
                 && *existing.comp == instance.comp
-                && platforms_equal(&existing.platform, &platform)
+                && existing.ctx.platform().content_eq(&platform)
             {
                 return Ok(existing.clone());
             }
@@ -315,15 +321,70 @@ impl Engine {
                 protocol::handle_to_hex(id)
             ));
         }
+        // Intern the platform execution context: panels (and the
+        // platform-sized workspace pool) are built exactly once per
+        // distinct platform hash and shared by every instance on it. The
+        // ctx cache's own LRU hit/miss stats are the panel counters the
+        // stats endpoint (and loadgen) report. The O(P²) context build
+        // runs with the state mutex RELEASED — the lock is only ever held
+        // for hash-map lookups (the module's concurrency contract); a
+        // racing submit of the same platform is resolved by re-checking
+        // after relocking, exactly like the single-flight result caches.
+        let platform_collision = || {
+            format!(
+                "platform hash collision on {} — submit rejected to avoid pricing against another platform's links",
+                protocol::handle_to_hex(platform_hash)
+            )
+        };
+        let ctx = match st.ctxs.get(&platform_hash).cloned() {
+            Some(ctx) => {
+                if !ctx.platform().content_eq(&platform) {
+                    return Err(platform_collision());
+                }
+                ctx
+            }
+            None => {
+                drop(st);
+                let built = Arc::new(PlatformCtx::bounded_prehashed(
+                    Arc::new(platform),
+                    self.threads,
+                    platform_hash,
+                ));
+                st = self.state.lock().unwrap();
+                // `peek`: a leader losing this race must not inflate the
+                // hit counter (misses already counted the first lookup);
+                // the raced build is recorded as a dedup hit instead, so
+                // `misses - dedup_hits` is always the exact number of
+                // panel builds that got interned — the invariant loadgen
+                // and EXPERIMENTS.md check
+                match st.ctxs.peek(&platform_hash).cloned() {
+                    Some(raced) => {
+                        if !raced.platform().content_eq(built.platform()) {
+                            return Err(platform_collision());
+                        }
+                        st.ctxs.record_dedup_hit();
+                        raced
+                    }
+                    None => {
+                        st.ctxs.put(platform_hash, built.clone());
+                        built
+                    }
+                }
+            }
+        };
         let interned = Arc::new(Interned {
             id,
             graph: Arc::new(instance.graph),
             comp: Arc::new(instance.comp),
-            platform: Arc::new(platform),
+            ctx,
             graph_hash,
             platform_hash,
             comp_hash,
         });
+        // A racing identical submit that slipped in while the lock was
+        // released for the ctx build may already have inserted `id`; this
+        // put overwrites it with identical content (handles are
+        // content-addressed), so either Arc serves the same answers.
         st.instances.put(id, interned.clone());
         Ok(interned)
     }
@@ -426,9 +487,10 @@ impl Engine {
             algorithm: CP_MARKER,
         };
         self.single_flight(key, cp_slots, || {
-            // compute in a pooled per-worker workspace
-            self.workspaces
-                .with(|ws| find_critical_path_with(ws, inst.inst()))
+            // compute in a workspace from the instance's platform-scoped
+            // pool — arenas sized by this platform, panels resident in ctx
+            inst.ctx
+                .with_workspace(|ws| find_critical_path_with(ws, inst.inst()))
         })
     }
 
@@ -441,7 +503,8 @@ impl Engine {
             algorithm: algorithm.id(),
         };
         self.single_flight(key, sched_slots, || {
-            self.workspaces.with(|ws| algorithm.run_with(ws, inst.inst()))
+            inst.ctx
+                .with_workspace(|ws| algorithm.run_with(ws, inst.inst()))
         })
     }
 
@@ -463,7 +526,7 @@ impl Engine {
                     protocol::ok_response(vec![
                         ("id", Json::Str(protocol::handle_to_hex(inst.id))),
                         ("n", Json::Num(inst.graph.num_tasks() as f64)),
-                        ("p", Json::Num(inst.platform.num_classes() as f64)),
+                        ("p", Json::Num(inst.ctx.p() as f64)),
                         ("edges", Json::Num(inst.graph.num_edges() as f64)),
                     ])
                 })
@@ -530,8 +593,12 @@ impl Engine {
             }
             Request::Clear => {
                 let mut st = self.state.lock().unwrap();
-                let dropped = st.instances.len() + st.cp_cache.len() + st.sched_cache.len();
+                let dropped = st.instances.len()
+                    + st.ctxs.len()
+                    + st.cp_cache.len()
+                    + st.sched_cache.len();
                 st.instances.clear();
+                st.ctxs.clear();
                 st.cp_cache.clear();
                 st.sched_cache.clear();
                 Ok(protocol::ok_response(vec![(
@@ -576,7 +643,12 @@ impl Engine {
         pool::parallel_map(lines, self.threads, |_, line| self.handle_line(line))
     }
 
-    /// Engine counters and cache occupancy as a stats response.
+    /// Engine counters and cache occupancy as a stats response. The
+    /// `panel_cache` section is the platform-context intern table (one
+    /// entry per distinct platform; its hits/misses are the
+    /// `panel_ctx_hits`/`panel_ctx_misses` counters loadgen records), and
+    /// `workspaces` aggregates the per-context pools with a deterministic
+    /// per-context breakdown (sorted by platform hash).
     pub fn stats_json(&self) -> Json {
         let st = self.state.lock().unwrap();
         let cache_obj = |len: usize, cap: usize, s: CacheStats| {
@@ -590,6 +662,22 @@ impl Engine {
                 ("dedup_hits", Json::Num(s.dedup_hits as f64)),
             ])
         };
+        let mut per_ctx: Vec<(u64, &Arc<PlatformCtx>)> =
+            st.ctxs.iter().map(|(h, ctx)| (*h, ctx)).collect();
+        per_ctx.sort_by_key(|&(h, _)| h);
+        let created: usize = per_ctx.iter().map(|(_, c)| c.pool_created()).sum();
+        let idle: usize = per_ctx.iter().map(|(_, c)| c.pool_idle()).sum();
+        let per_ctx_json: Vec<Json> = per_ctx
+            .iter()
+            .map(|&(h, ctx)| {
+                Json::obj(vec![
+                    ("platform", Json::Str(protocol::handle_to_hex(h))),
+                    ("p", Json::Num(ctx.p() as f64)),
+                    ("created", Json::Num(ctx.pool_created() as f64)),
+                    ("idle", Json::Num(ctx.pool_idle() as f64)),
+                ])
+            })
+            .collect();
         let c = st.counters;
         protocol::ok_response(vec![
             ("requests", Json::Num(c.requests as f64)),
@@ -602,9 +690,14 @@ impl Engine {
             (
                 "workspaces",
                 Json::obj(vec![
-                    ("created", Json::Num(self.workspaces.created() as f64)),
-                    ("idle", Json::Num(self.workspaces.idle() as f64)),
+                    ("created", Json::Num(created as f64)),
+                    ("idle", Json::Num(idle as f64)),
+                    ("per_ctx", Json::Arr(per_ctx_json)),
                 ]),
+            ),
+            (
+                "panel_cache",
+                cache_obj(st.ctxs.len(), st.ctxs.capacity(), st.ctxs.stats()),
             ),
             (
                 "cp_cache",
@@ -1014,6 +1107,96 @@ mod tests {
             get("hits"),
             get("dedup_hits")
         );
+    }
+
+    #[test]
+    fn platform_ctx_interned_once_per_distinct_platform() {
+        let engine = Engine::with_defaults();
+        // three distinct instances with no explicit platform all share the
+        // default uniform platform -> one ctx, panels built exactly once
+        for seed in 0..3 {
+            let (_plat, inst) = small_instance(200 + seed);
+            let (resp, _) = engine.handle_line(&schedule_line(&inst, "CEFT-CPOP"));
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        }
+        let stats = engine.stats_json();
+        let panel = stats.get("panel_cache").unwrap();
+        let get = |k: &str| panel.get(k).and_then(Json::as_f64).unwrap();
+        assert_eq!(get("len"), 1.0, "one ctx for the shared platform");
+        assert_eq!(get("misses"), 1.0, "panels computed once, not per submit");
+        assert_eq!(get("hits"), 2.0, "later submits reuse the interned ctx");
+        // an explicitly different platform interns a second ctx
+        let (_plat, inst) = small_instance(300);
+        let plat2 = Platform::uniform(3, 2.0, 0.0);
+        let line = format!(
+            r#"{{"op":"schedule","algorithm":"HEFT","instance":{},"platform":{}}}"#,
+            io::instance_to_json(&inst).to_string(),
+            io::platform_to_json(&plat2).to_string()
+        );
+        let (resp, _) = engine.handle_line(&line);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let stats = engine.stats_json();
+        let panel = stats.get("panel_cache").unwrap();
+        assert_eq!(panel.get("len").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(panel.get("misses").and_then(Json::as_f64), Some(2.0));
+    }
+
+    #[test]
+    fn workspace_pools_are_platform_scoped() {
+        // instances on two different-P platforms draw arenas from two
+        // separate pools, reported per context in the stats breakdown
+        let engine = Engine::new(EngineConfig {
+            threads: 1,
+            ..EngineConfig::default()
+        });
+        let (_plat3, inst3) = small_instance(10);
+        engine.handle_line(&schedule_line(&inst3, "CEFT-CPOP"));
+        let plat4 = Platform::uniform(4, 1.0, 0.0);
+        let inst4 = generate(
+            &RggParams {
+                n: 30,
+                out_degree: 3,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 50.0,
+                gamma: 0.25,
+            },
+            &CostModel::Classic { beta: 0.5 },
+            &plat4,
+            11,
+        );
+        let line = format!(
+            r#"{{"op":"schedule","algorithm":"CEFT-CPOP","instance":{},"platform":{}}}"#,
+            io::instance_to_json(&inst4).to_string(),
+            io::platform_to_json(&plat4).to_string()
+        );
+        let (resp, _) = engine.handle_line(&line);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        let stats = engine.stats_json();
+        let ws = stats.get("workspaces").unwrap();
+        let per_ctx = ws.get("per_ctx").and_then(Json::as_arr).unwrap();
+        assert_eq!(per_ctx.len(), 2, "one pool per platform context");
+        let mut ps: Vec<f64> = per_ctx
+            .iter()
+            .map(|e| e.get("p").and_then(Json::as_f64).unwrap())
+            .collect();
+        ps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(ps, vec![3.0, 4.0]);
+        let created_sum: f64 = per_ctx
+            .iter()
+            .map(|e| e.get("created").and_then(Json::as_f64).unwrap())
+            .sum();
+        assert_eq!(
+            ws.get("created").and_then(Json::as_f64),
+            Some(created_sum),
+            "aggregate equals the per-ctx sum"
+        );
+        for e in per_ctx {
+            assert!(
+                e.get("created").and_then(Json::as_f64).unwrap() >= 1.0,
+                "each platform computed at least once on its own pool"
+            );
+        }
     }
 
     #[test]

@@ -1,203 +1,10 @@
-//! Structural hashing of problem objects for interning and memoization.
+//! Structural hashing, re-exported from [`crate::util::hashing`].
 //!
-//! The service keys its caches on *content*, not identity: two clients
-//! submitting the same instance (or one client resubmitting) must land on
-//! the same cache line. Graphs, platforms and cost matrices are hashed over
-//! a canonical byte encoding (FNV-1a, 64-bit) that covers every field the
-//! algorithms read:
-//!
-//! * graph — task count + every edge `(src, dst, data-bits)` in stored
-//!   order ([`crate::graph::TaskGraph`] preserves construction order, and
-//!   [`crate::graph::io::instance_from_json`] rebuilds it in the serialized
-//!   order, so a JSON round trip is hash-stable);
-//! * platform — class count, startup latencies, the bandwidth matrix, and
-//!   the two-weight capacities when present;
-//! * comp — the dense `v × P` execution-cost matrix, bit-exact.
-//!
-//! f64 values are hashed by their IEEE bit pattern, matching the bit-exact
-//! round-trip guarantee of [`crate::util::json`]'s shortest-decimal writer.
+//! The implementation lives in the `util` substrate layer because the
+//! content addresses it produces are consumed below the service too:
+//! [`crate::model::PlatformCtx`] stores the interned platform hash and the
+//! sweep harness keys its context cache on it. This module preserves the
+//! service-side path (`service::hashing::hash_graph` & co.) that the
+//! engine and the protocol tests address.
 
-use crate::graph::TaskGraph;
-use crate::platform::Platform;
-
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-
-/// Incremental FNV-1a 64-bit hasher.
-#[derive(Clone, Debug)]
-pub struct Fnv64 {
-    state: u64,
-}
-
-impl Fnv64 {
-    /// Fresh hasher.
-    pub fn new() -> Self {
-        Self { state: FNV_OFFSET }
-    }
-
-    /// Absorb raw bytes.
-    pub fn write_bytes(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.state ^= b as u64;
-            self.state = self.state.wrapping_mul(FNV_PRIME);
-        }
-    }
-
-    /// Absorb a `u64` (little-endian bytes).
-    pub fn write_u64(&mut self, x: u64) {
-        self.write_bytes(&x.to_le_bytes());
-    }
-
-    /// Absorb a `usize` (widened to `u64` for cross-platform stability).
-    pub fn write_usize(&mut self, x: usize) {
-        self.write_u64(x as u64);
-    }
-
-    /// Absorb an `f64` by IEEE-754 bit pattern.
-    pub fn write_f64(&mut self, x: f64) {
-        self.write_u64(x.to_bits());
-    }
-
-    /// Final digest.
-    pub fn finish(&self) -> u64 {
-        self.state
-    }
-}
-
-impl Default for Fnv64 {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-// Domain-separation tags so a graph and a platform that happen to encode to
-// the same byte stream still hash differently.
-const TAG_GRAPH: u64 = 0x4752_4150_4800_0001; // "GRAPH"
-const TAG_PLATFORM: u64 = 0x504c_4154_4600_0002; // "PLATF"
-const TAG_COMP: u64 = 0x434f_4d50_0000_0003; // "COMP"
-
-/// Structural hash of a task graph (task count + ordered edge list).
-pub fn hash_graph(g: &TaskGraph) -> u64 {
-    let mut h = Fnv64::new();
-    h.write_u64(TAG_GRAPH);
-    h.write_usize(g.num_tasks());
-    h.write_usize(g.num_edges());
-    for e in g.edges() {
-        h.write_usize(e.src);
-        h.write_usize(e.dst);
-        h.write_f64(e.data);
-    }
-    h.finish()
-}
-
-/// Structural hash of a platform (classes, startups, bandwidths, weights).
-pub fn hash_platform(plat: &Platform) -> u64 {
-    let p = plat.num_classes();
-    let mut h = Fnv64::new();
-    h.write_u64(TAG_PLATFORM);
-    h.write_usize(p);
-    for j in 0..p {
-        h.write_f64(plat.startup(j));
-    }
-    for a in 0..p {
-        for b in 0..p {
-            h.write_f64(plat.bandwidth(a, b));
-        }
-    }
-    let weights = plat.class_weight_table();
-    h.write_usize(weights.len());
-    for &(w0, w1) in weights {
-        h.write_f64(w0);
-        h.write_f64(w1);
-    }
-    h.finish()
-}
-
-/// Hash of a dense execution-cost matrix.
-pub fn hash_comp(comp: &[f64]) -> u64 {
-    let mut h = Fnv64::new();
-    h.write_u64(TAG_COMP);
-    h.write_usize(comp.len());
-    for &c in comp {
-        h.write_f64(c);
-    }
-    h.finish()
-}
-
-/// Combine component hashes into one (order-sensitive).
-pub fn combine(parts: &[u64]) -> u64 {
-    let mut h = Fnv64::new();
-    for &p in parts {
-        h.write_u64(p);
-    }
-    h.finish()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::graph::io;
-    use crate::util::json::Json;
-    use crate::util::rng::Xoshiro256;
-
-    fn sample_graph() -> TaskGraph {
-        TaskGraph::from_edges(4, &[(0, 1, 1.5), (0, 2, 2.5), (1, 3, 3.5), (2, 3, 4.5)])
-    }
-
-    #[test]
-    fn equal_structures_hash_equal() {
-        assert_eq!(hash_graph(&sample_graph()), hash_graph(&sample_graph()));
-        let a = Platform::uniform(3, 1.0, 0.5);
-        let b = Platform::uniform(3, 1.0, 0.5);
-        assert_eq!(hash_platform(&a), hash_platform(&b));
-        assert_eq!(hash_comp(&[1.0, 2.0]), hash_comp(&[1.0, 2.0]));
-    }
-
-    #[test]
-    fn perturbation_changes_hash() {
-        let base = hash_graph(&sample_graph());
-        let other =
-            TaskGraph::from_edges(4, &[(0, 1, 1.5), (0, 2, 2.5), (1, 3, 3.5), (2, 3, 4.6)]);
-        assert_ne!(base, hash_graph(&other));
-        assert_ne!(
-            hash_platform(&Platform::uniform(3, 1.0, 0.5)),
-            hash_platform(&Platform::uniform(3, 1.0, 0.6))
-        );
-        assert_ne!(hash_comp(&[1.0, 2.0]), hash_comp(&[2.0, 1.0]));
-        assert_ne!(combine(&[1, 2]), combine(&[2, 1]));
-    }
-
-    #[test]
-    fn tags_separate_domains() {
-        // an empty comp matrix must not collide with an empty-ish graph
-        let empty_graph = TaskGraph::from_edges(1, &[]);
-        assert_ne!(hash_graph(&empty_graph), hash_comp(&[]));
-    }
-
-    #[test]
-    fn json_roundtrip_is_hash_stable() {
-        let mut rng = Xoshiro256::new(31);
-        let plat = Platform::two_weight(4, 0.5, &mut rng, 1.0, 0.0);
-        let inst = crate::graph::generator::generate(
-            &crate::graph::generator::RggParams {
-                n: 48,
-                out_degree: 3,
-                ccr: 1.0,
-                alpha: 0.5,
-                beta_pct: 50.0,
-                gamma: 0.25,
-            },
-            &crate::platform::CostModel::two_weight_low(0.5),
-            &plat,
-            7,
-        );
-        let text = io::instance_to_json(&inst).to_string();
-        let back = io::instance_from_json(&Json::parse(&text).unwrap()).unwrap();
-        assert_eq!(hash_graph(&inst.graph), hash_graph(&back.graph));
-        assert_eq!(hash_comp(&inst.comp), hash_comp(&back.comp));
-
-        let ptext = io::platform_to_json(&plat).to_string();
-        let pback = io::platform_from_json(&Json::parse(&ptext).unwrap()).unwrap();
-        assert_eq!(hash_platform(&plat), hash_platform(&pback));
-    }
-}
+pub use crate::util::hashing::{combine, hash_comp, hash_graph, hash_platform, Fnv64};

@@ -19,7 +19,11 @@
 //! * [`protocol`] — request/response codec over [`crate::util::json`].
 //! * [`engine`] — interning + memoization + dispatch through the unified
 //!   [`crate::sched::Algorithm`] registry, batched across
-//!   [`crate::util::pool`] workers; stdio and TCP serving loops.
+//!   [`crate::util::pool`] workers; stdio and TCP serving loops. Platforms
+//!   intern as shared [`crate::model::PlatformCtx`] execution contexts, so
+//!   the CEFT kernel's `P × P` communication panels are computed once per
+//!   distinct platform (the stats endpoint's `panel_cache` section) and
+//!   scratch arenas pool per platform shape.
 //!
 //! Determinism contract: every algorithm in the registry breaks ties
 //! deterministically, and the JSON codec round-trips `f64` bit-exactly, so

@@ -17,10 +17,15 @@
 //! * [`prop`] — a property-test harness (proptest substitute): random input
 //!   generation + shrinking-free counterexample reporting with fixed seeds.
 //! * [`cli`] — a small declarative argument parser (clap substitute).
+//! * [`hashing`] — FNV-1a structural hashing of graphs, platforms and cost
+//!   matrices; the content addresses used by the service's intern tables
+//!   and by [`crate::model::PlatformCtx`] (it lives here, below the model
+//!   layer, so `model` never depends upward on `service`).
 
 pub mod bench;
 pub mod cli;
 pub mod csv;
+pub mod hashing;
 pub mod json;
 pub mod pool;
 pub mod prop;

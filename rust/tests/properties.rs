@@ -10,8 +10,9 @@
 //! the scalar DP and the public rank/list primitives.
 
 use ceft::cp::ceft::{
-    ceft_table, ceft_table_into, ceft_table_rev_into, ceft_table_rev_scalar_into,
-    ceft_table_scalar, ceft_table_scalar_into, critical_path_from_table, find_critical_path,
+    ceft_table, ceft_table_batched_into, ceft_table_into, ceft_table_rev_into,
+    ceft_table_rev_scalar_into, ceft_table_scalar, ceft_table_scalar_into,
+    critical_path_from_table, find_critical_path, find_critical_path_with,
 };
 use ceft::cp::cpmin::cp_min_cost;
 use ceft::cp::minexec::min_exec_critical_path;
@@ -22,7 +23,7 @@ use ceft::cp::ranks::{
 use ceft::cp::workspace::Workspace;
 use ceft::graph::generator::{generate, Instance, RggParams};
 use ceft::graph::TaskGraph;
-use ceft::model::{CostMatrix, InstanceRef};
+use ceft::model::{CostMatrix, InstanceRef, PlatformCtx};
 use ceft::platform::{CostModel, Platform};
 use ceft::sched::{
     ceft_cpop::CeftCpop, ceft_heft::CeftHeftUp, cpop::Cpop, heft::Heft, list_schedule_with,
@@ -435,6 +436,116 @@ fn prop_all_algorithms_bit_identical_to_scalar_reference() {
                         "{} diverged from the scalar reference (seed {seed})",
                         algo.name()
                     ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batched_kernel_bit_identical_to_scalar() {
+    // The batched min-plus matrix-matrix DP must reproduce the scalar
+    // recurrence bit for bit — values, backpointers, tie-breaking — for
+    // every chunk size, including B == 1 (degenerate matrix-vector), sizes
+    // straddling KERNEL_BLOCK (7, 8, 9), and P == 1 platforms
+    // (arb_instance draws them). The ctx-resident fused kernel is held to
+    // the same bar, and one reused workspace across all runs doubles as a
+    // no-state-leak check.
+    check_property(
+        "batched kernel == scalar DP for B in {1,2,7,8,9}",
+        default_cases() / 2,
+        0xCEF7_0023,
+        |rng| arb_instance(rng),
+        |(inst, plat, seed)| {
+            let mut sw = Workspace::new();
+            ceft_table_scalar_into(&mut sw, inst.bind(plat));
+            let ctx = PlatformCtx::new(plat.clone());
+            let bound = inst.bind_ctx(&ctx);
+            let mut bw = Workspace::new();
+            for &b in &[1usize, 2, 7, 8, 9] {
+                ceft_table_batched_into(&mut bw, bound, b);
+                if bw.table != sw.table {
+                    return Err(format!("batched values diverged at B={b} (seed {seed})"));
+                }
+                if bw.backptr != sw.backptr {
+                    return Err(format!(
+                        "batched backpointers diverged at B={b} (seed {seed})"
+                    ));
+                }
+            }
+            ceft_table_into(&mut bw, bound);
+            if bw.table != sw.table || bw.backptr != sw.backptr {
+                return Err(format!(
+                    "ctx-resident fused kernel diverged from scalar (seed {seed})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shared_ctx_two_instances_no_state_leak() {
+    // One PlatformCtx serving two different instances (interleaved, one
+    // reused workspace) must give each instance exactly the bits a fresh
+    // unshared computation gives — ctx reuse shares panels, never DP
+    // state. This is the engine's platform-interning contract in miniature.
+    check_property(
+        "shared ctx serves two instances without leaking state",
+        default_cases() / 2,
+        0xCEF7_0024,
+        |rng| {
+            let p = *rng.choose(&[1usize, 2, 4, 8]);
+            let plat = if rng.chance(0.5) {
+                Platform::uniform(p, rng.uniform(0.2, 5.0), rng.uniform(0.0, 2.0))
+            } else {
+                Platform::random_links(p, rng, 0.2, 5.0, 0.0, 2.0)
+            };
+            let params = |n| RggParams {
+                n,
+                out_degree: 3,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 50.0,
+                gamma: 0.25,
+            };
+            let big = generate(
+                &params(rng.range_inclusive(40, 120)),
+                &CostModel::Classic { beta: 0.5 },
+                &plat,
+                rng.next_u64(),
+            );
+            let small = generate(
+                &params(rng.range_inclusive(2, 30)),
+                &CostModel::Classic { beta: 0.5 },
+                &plat,
+                rng.next_u64(),
+            );
+            (plat, big, small)
+        },
+        |(plat, big, small)| {
+            let ctx = PlatformCtx::new(plat.clone());
+            let mut ws = Workspace::new();
+            // interleave big / small / big through one ctx + one workspace
+            let big_1 = find_critical_path_with(&mut ws, big.bind_ctx(&ctx));
+            let small_shared = find_critical_path_with(&mut ws, small.bind_ctx(&ctx));
+            let big_2 = find_critical_path_with(&mut ws, big.bind_ctx(&ctx));
+            let big_fresh = find_critical_path(big.bind(plat));
+            let small_fresh = find_critical_path(small.bind(plat));
+            if big_1 != big_fresh || big_2 != big_fresh {
+                return Err("shared ctx changed the big instance's path".into());
+            }
+            if small_shared != small_fresh {
+                return Err("big instance leaked into the small one via the ctx".into());
+            }
+            // the batched DP through the same shared ctx + workspace too
+            let mut sw = Workspace::new();
+            for inst in [big, small] {
+                ceft_table_batched_into(&mut ws, inst.bind_ctx(&ctx), 7);
+                ceft_table_scalar_into(&mut sw, inst.bind(plat));
+                if ws.table != sw.table || ws.backptr != sw.backptr {
+                    return Err("batched DP diverged under ctx sharing".into());
                 }
             }
             Ok(())

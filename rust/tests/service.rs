@@ -6,6 +6,7 @@
 use ceft::exp::cells::{grid, Scale, Workload};
 use ceft::exp::run::{build_instance, run_cell, ALGOS};
 use ceft::graph::io;
+use ceft::platform::Platform;
 use ceft::sched::Algorithm;
 use ceft::service::{Engine, EngineConfig, Server};
 use ceft::util::json::Json;
@@ -145,6 +146,61 @@ fn submit_then_request_by_handle() {
         inline.get("length").and_then(Json::as_f64)
     );
     assert_eq!(inline.get("cached"), Some(&Json::Bool(true)));
+}
+
+#[test]
+fn platform_mix_interns_one_ctx_per_platform() {
+    // Six instances round-robined over two platforms (the loadgen
+    // --platform-mix shape): the engine must build communication panels
+    // exactly twice — once per distinct platform — and serve every other
+    // submit from the interned context. Schedule-by-handle traffic never
+    // touches the panel cache at all.
+    let engine = Engine::with_defaults();
+    let mut ids = Vec::new();
+    for i in 0..6u64 {
+        let mut cell = smoke_cell();
+        cell.index = i;
+        let (_default_plat, inst) = build_instance(&cell);
+        let platform = Platform::uniform(inst.p(), 1.0 + (i % 2) as f64, 0.0);
+        let line = format!(
+            r#"{{"op":"submit","instance":{},"platform":{}}}"#,
+            io::instance_to_json(&inst).to_string(),
+            io::platform_to_json(&platform).to_string()
+        );
+        let (resp, _) = engine.handle_line(&line);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "submit {i}");
+        ids.push(resp.get("id").and_then(Json::as_str).unwrap().to_string());
+    }
+    for id in &ids {
+        let (resp, _) = engine
+            .handle_line(&format!(r#"{{"op":"schedule","algorithm":"CEFT-CPOP","id":"{id}"}}"#));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    }
+    let (stats, _) = engine.handle_line(r#"{"op":"stats"}"#);
+    let panel = stats.get("panel_cache").expect("stats carry a panel_cache section");
+    let get = |k: &str| panel.get(k).and_then(Json::as_f64).unwrap();
+    assert_eq!(get("len"), 2.0, "one live ctx per distinct platform");
+    assert_eq!(get("misses"), 2.0, "panels computed once per platform");
+    assert_eq!(get("hits"), 4.0, "remaining submits reuse interned panels");
+    assert_eq!(get("insertions"), 2.0);
+    // per-platform workspace pools are reported, one entry per ctx
+    let per_ctx = stats
+        .get("workspaces")
+        .and_then(|w| w.get("per_ctx"))
+        .and_then(Json::as_arr)
+        .expect("workspaces carry a per_ctx breakdown");
+    assert_eq!(per_ctx.len(), 2);
+    // clear drops the contexts too; the next submit re-interns
+    let (cleared, _) = engine.handle_line(r#"{"op":"clear"}"#);
+    assert_eq!(cleared.get("ok"), Some(&Json::Bool(true)));
+    let (stats, _) = engine.handle_line(r#"{"op":"stats"}"#);
+    assert_eq!(
+        stats
+            .get("panel_cache")
+            .and_then(|p| p.get("len"))
+            .and_then(Json::as_f64),
+        Some(0.0)
+    );
 }
 
 fn roundtrip(stream: &mut TcpStream, line: &str) -> Json {
