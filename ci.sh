@@ -93,12 +93,37 @@ if ! grep -q '"panel_ctx_hits"' BENCH_service.json; then
   echo "BENCH_service.json lacks the panel-cache counters (panel_ctx_hits/panel_ctx_misses)"
   exit 1
 fi
+# ... and the cross-request batching section: the platform-mix run replays
+# a cp-share (default 0.25), so the engine's batched_requests/batch_width
+# counters are live and batch-efficiency must be recorded.
+if ! grep -q '"batch_efficiency"' BENCH_service.json; then
+  echo "BENCH_service.json lacks the batch-efficiency field (cross-request batching unmeasured)"
+  exit 1
+fi
 
 echo "== service throughput bench (smoke) =="
 CEFT_BENCH_FAST=1 cargo bench --bench service_throughput
 
-echo "== ceft kernel bench (smoke) =="
+echo "== ceft kernel bench (smoke, both dispatch paths) =="
+# forced-scalar first, default (SIMD) second: both env dispatch paths get
+# exercised end to end, and the BENCH_kernel.json left behind records the
+# default-dispatch run
+CEFT_FORCE_SCALAR=1 CEFT_BENCH_FAST=1 cargo bench --bench ceft_kernel
 CEFT_BENCH_FAST=1 cargo bench --bench ceft_kernel
+# the kernel perf record seeds the throughput trajectory — gate on it
+# existing and carrying real per-case rows
+if [ ! -s BENCH_kernel.json ]; then
+  echo "BENCH_kernel.json missing or empty — kernel bench produced no record"
+  exit 1
+fi
+if ! grep -q '"cells_per_s"' BENCH_kernel.json; then
+  echo "BENCH_kernel.json lacks the per-case cells_per_s rows"
+  exit 1
+fi
+if grep -q '"n":0' BENCH_kernel.json; then
+  echo "BENCH_kernel.json still carries the schema placeholder — bench produced no measurement"
+  exit 1
+fi
 
 echo "== doc gate (rustdoc warnings are errors) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet

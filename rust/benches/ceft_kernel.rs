@@ -3,24 +3,36 @@
 //! Every path fills the same workspace table over the same instance, so
 //! the per-case "Melem/s" column (relaxed `(j, l)` class-pair cells per
 //! second = `e · P²` per iteration) is directly comparable across
-//! `kernel/*`, `kernel_ctx/*` (fused kernel over resident `PlatformCtx`
-//! panels — no per-entry panel fill), `batched_b8/*` (the min-plus
-//! matrix-matrix DP, chunk size 8) and `scalar/*` rows. Protocol and
-//! block-size rationale: EXPERIMENTS.md §Min-plus kernel and §Platform
-//! contexts. `CEFT_BENCH_FAST=1` is the CI smoke mode (`ci.sh`).
+//! `kernel/*` (env-dispatched, workspace panels), `kernel_ctx/*`
+//! (env-dispatched over resident `PlatformCtx` panels), `simd/*` /
+//! `forced_scalar_lanes/*` (lane implementation pinned explicitly,
+//! resident panels — the pair the SIMD speedup is read from),
+//! `batched_b8/*` (the min-plus matrix-matrix DP, chunk size 8) and
+//! `scalar/*` (the scalar-recurrence oracle) rows. Protocol and block-size
+//! rationale: EXPERIMENTS.md §Min-plus kernel, §Platform contexts and
+//! §SIMD dispatch. `CEFT_BENCH_FAST=1` is the CI smoke mode (`ci.sh`,
+//! which runs it under both `CEFT_FORCE_SCALAR` settings).
+//!
+//! Besides the CSV every bench appends, this bench writes the repo-root
+//! `BENCH_kernel.json` — per-case cells/s for the `scalar`, `simd` and
+//! `batched_b8` rows — seeding the kernel-throughput trajectory across
+//! PRs (the acceptance gauge is `simd >= scalar` at `P >= 8`).
 
+use ceft::cp::ceft::simd::KernelDispatch;
 use ceft::cp::ceft::{
-    ceft_table_batched_into, ceft_table_into, ceft_table_rev_into, ceft_table_rev_scalar_into,
-    ceft_table_scalar_into,
+    ceft_table_batched_into, ceft_table_into, ceft_table_into_dispatched, ceft_table_rev_into,
+    ceft_table_rev_scalar_into, ceft_table_scalar_into,
 };
 use ceft::cp::workspace::Workspace;
 use ceft::graph::generator::{generate, RggParams};
 use ceft::model::PlatformCtx;
 use ceft::platform::{CostModel, Platform};
 use ceft::util::bench::{black_box, Bench};
+use ceft::util::json::Json;
 
 fn main() {
     let mut b = Bench::new("ceft_kernel");
+    let mut report_cases: Vec<Json> = Vec::new();
     // class counts span the panel-size regimes: tiny rows (P=2), the
     // paper's common case (P=8), and panel footprints past L1-resident
     // rows (P=64)
@@ -58,11 +70,21 @@ fn main() {
             ceft_table_into(&mut ws, cref);
             black_box(ws.table.last().copied());
         });
-        b.case_with_elements(&format!("batched_b8/n{n}_p{p}"), Some(cells), || {
+        // the SIMD-vs-scalar pair the speedup gauge reads: lane choice
+        // pinned explicitly, both over the same resident panels
+        let simd_row = b.case_with_elements(&format!("simd/n{n}_p{p}"), Some(cells), || {
+            ceft_table_into_dispatched(&mut ws, cref, KernelDispatch::Simd);
+            black_box(ws.table.last().copied());
+        });
+        b.case_with_elements(&format!("forced_scalar_lanes/n{n}_p{p}"), Some(cells), || {
+            ceft_table_into_dispatched(&mut ws, cref, KernelDispatch::Scalar);
+            black_box(ws.table.last().copied());
+        });
+        let batched_row = b.case_with_elements(&format!("batched_b8/n{n}_p{p}"), Some(cells), || {
             ceft_table_batched_into(&mut ws, cref, 8);
             black_box(ws.table.last().copied());
         });
-        b.case_with_elements(&format!("scalar/n{n}_p{p}"), Some(cells), || {
+        let scalar_row = b.case_with_elements(&format!("scalar/n{n}_p{p}"), Some(cells), || {
             ceft_table_scalar_into(&mut ws, iref);
             black_box(ws.table.last().copied());
         });
@@ -74,6 +96,37 @@ fn main() {
             ceft_table_rev_scalar_into(&mut ws, iref);
             black_box(ws.table.last().copied());
         });
+        report_cases.push(Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("p", Json::Num(p as f64)),
+            (
+                "cells_per_s",
+                Json::obj(vec![
+                    ("scalar", Json::Num(scalar_row.throughput().unwrap_or(0.0))),
+                    ("simd", Json::Num(simd_row.throughput().unwrap_or(0.0))),
+                    (
+                        "batched_b8",
+                        Json::Num(batched_row.throughput().unwrap_or(0.0)),
+                    ),
+                ]),
+            ),
+        ]));
     }
     b.save_csv();
+    // machine-readable kernel-throughput record, tracked across PRs
+    // (EXPERIMENTS.md §SIMD dispatch); "scalar" is the scalar-recurrence
+    // oracle, "simd" the pinned-lane fused kernel over resident panels
+    let report = Json::obj(vec![
+        ("bench", Json::Str("ceft_kernel".to_string())),
+        (
+            "force_scalar_env",
+            Json::Bool(std::env::var("CEFT_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false)),
+        ),
+        ("cases", Json::Arr(report_cases)),
+    ]);
+    let path = "BENCH_kernel.json";
+    match std::fs::write(path, format!("{}\n", report.to_string())) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

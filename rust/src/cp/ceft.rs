@@ -60,15 +60,38 @@
 //! bit-identical to the scalar recurrence by
 //! `prop_batched_kernel_bit_identical_to_scalar`.
 //!
+//! **SIMD lanes.** The per-edge min-plus scan is hand-vectorised in
+//! [`simd`]: portable 4-wide `f64` lanes with a lane-wise running-min +
+//! argmin whose cross-lane reduction restores the scalar lowest-`l`
+//! tie-break exactly (`P % 4` tails run a scalar epilogue). Dispatch is
+//! selected once per [`PlatformCtx`] ([`simd::KernelDispatch`],
+//! `CEFT_FORCE_SCALAR=1` forces the scalar lanes), and the
+//! `*_dispatched` entry points pin a path explicitly for tests and
+//! benches. The scalar recurrence ([`ceft_table_scalar_into`]) never
+//! routes through the lanes and remains the bit-identity oracle.
+//!
+//! **Gathered multi-instance DP.** [`find_critical_paths_gathered`] runs
+//! the CEFT DP for several instances **of one platform** in lock-step:
+//! each topo round gathers every instance's frontier task's parent rows
+//! into one [`ceft_dp_kernel_batch_into`]-shaped sweep against the shared
+//! resident panels, then scatters the per-edge minima back into each
+//! instance's max-fold. Per instance the per-edge comparison sequence and
+//! CSR fold order are unchanged, so every table is bit-identical to the
+//! scalar recurrence — this is the compute core of the service engine's
+//! cross-request batching (`service::engine`).
+//!
 //! Tie-breaking is deterministic: the lowest class id wins `min`s, the
 //! earliest-visited parent wins strict-`>` `max`es, and the lowest task id
 //! wins the final sink selection. This makes the rust and PJRT backends,
 //! and re-runs, bit-identical.
 
+pub mod simd;
+
 use crate::cp::workspace::Workspace;
 use crate::graph::TaskGraph;
 use crate::model::{fill_comm_panels, InstanceRef, PlatformCtx};
 use crate::platform::Platform;
+use simd::{KernelDispatch, LaneKernel, ScalarLanes, SimdLanes};
 
 /// Destination classes are tiled in blocks of this many rows, and the
 /// task's incoming edges iterate *inside* each block: one load of the
@@ -182,7 +205,7 @@ pub fn ceft_table(inst: InstanceRef) -> CeftTable {
     ceft_table_into(&mut ws, inst);
     CeftTable {
         p: inst.p(),
-        table: std::mem::take(&mut ws.table),
+        table: ws.table.to_vec(),
         backptr: std::mem::take(&mut ws.backptr),
     }
 }
@@ -194,7 +217,7 @@ pub fn ceft_table_scalar(inst: InstanceRef) -> CeftTable {
     ceft_table_scalar_into(&mut ws, inst);
     CeftTable {
         p: inst.p(),
-        table: std::mem::take(&mut ws.table),
+        table: ws.table.to_vec(),
         backptr: std::mem::take(&mut ws.backptr),
     }
 }
@@ -234,18 +257,63 @@ pub fn ceft_table_rev_scalar_into(ws: &mut Workspace, inst: InstanceRef) {
     ceft_dp_scalar_into(ws, inst, true)
 }
 
-/// The kernel DP behind both orientations: resident [`PlatformCtx`] panels
-/// when the instance carries a context, workspace-local panels filled here
-/// otherwise ([`crate::model`]'s `fill_comm_panels` — one implementation
-/// behind both sources), then per task a tiled min-plus sweep —
-/// destination classes in [`KERNEL_BLOCK`]-sized blocks, the task's
-/// incoming edges iterated *inside* each block so one parent-row load
-/// serves the whole block and the block's panel rows stay resident across
-/// every edge. Per destination class the comparison sequence (strict `<`
-/// lowest-`l` argmin per edge, strict-`>` earliest-parent max-fold in CSR
-/// order) is identical to the scalar path, so values *and* backpointers
-/// match bit for bit.
+/// [`ceft_table_into`] with the lane implementation pinned explicitly —
+/// the hook the SIMD bit-identity property tests and `benches/ceft_kernel`
+/// use to exercise both dispatch paths in one process, independent of the
+/// `CEFT_FORCE_SCALAR` environment.
+pub fn ceft_table_into_dispatched(ws: &mut Workspace, inst: InstanceRef, dispatch: KernelDispatch) {
+    match dispatch {
+        KernelDispatch::Simd => ceft_dp_kernel_lanes::<SimdLanes>(ws, inst, false),
+        KernelDispatch::Scalar => ceft_dp_kernel_lanes::<ScalarLanes>(ws, inst, false),
+    }
+}
+
+/// [`ceft_table_rev_into`] with the lane implementation pinned explicitly.
+pub fn ceft_table_rev_into_dispatched(
+    ws: &mut Workspace,
+    inst: InstanceRef,
+    dispatch: KernelDispatch,
+) {
+    match dispatch {
+        KernelDispatch::Simd => ceft_dp_kernel_lanes::<SimdLanes>(ws, inst, true),
+        KernelDispatch::Scalar => ceft_dp_kernel_lanes::<ScalarLanes>(ws, inst, true),
+    }
+}
+
+/// The dispatch the kernels run an instance under: the context's
+/// once-selected choice when the instance is bound through a
+/// [`PlatformCtx`], else a fresh environment lookup
+/// ([`KernelDispatch::select`]).
+fn dispatch_for(inst: &InstanceRef) -> KernelDispatch {
+    match inst.ctx() {
+        Some(ctx) => ctx.dispatch(),
+        None => KernelDispatch::select(),
+    }
+}
+
+/// The kernel DP behind both orientations: selects the lane
+/// implementation ([`dispatch_for`]) and runs [`ceft_dp_kernel_lanes`].
 fn ceft_dp_kernel_into(ws: &mut Workspace, inst: InstanceRef, rev: bool) {
+    match dispatch_for(&inst) {
+        KernelDispatch::Simd => ceft_dp_kernel_lanes::<SimdLanes>(ws, inst, rev),
+        KernelDispatch::Scalar => ceft_dp_kernel_lanes::<ScalarLanes>(ws, inst, rev),
+    }
+}
+
+/// The fused kernel DP, monomorphised per lane implementation: resident
+/// [`PlatformCtx`] panels when the instance carries a context,
+/// workspace-local panels filled here otherwise ([`crate::model`]'s
+/// `fill_comm_panels` — one implementation behind both sources), then per
+/// task a tiled min-plus sweep — destination classes in
+/// [`KERNEL_BLOCK`]-sized blocks, the task's incoming edges iterated
+/// *inside* each block so one parent-row load serves the whole block and
+/// the block's panel rows stay resident across every edge. Per destination
+/// class the comparison sequence (strict `<` lowest-`l` argmin per edge —
+/// scalar or 4-wide lanes, both reproduce it exactly, see
+/// [`simd`] — and a strict-`>` earliest-parent max-fold in CSR order) is
+/// identical to the scalar path, so values *and* backpointers match bit
+/// for bit.
+fn ceft_dp_kernel_lanes<K: LaneKernel>(ws: &mut Workspace, inst: InstanceRef, rev: bool) {
     let graph = inst.graph;
     let costs = inst.costs;
     let v = inst.n();
@@ -294,15 +362,7 @@ fn ceft_dp_kernel_into(ws: &mut Workspace, inst: InstanceRef, rev: bool) {
                     // min over sender classes l: branch-free contiguous scan
                     let srow = &panel_startup[j * p..j * p + p];
                     let brow = &panel_bw[j * p..j * p + p];
-                    let mut best = f64::INFINITY;
-                    let mut best_l = 0usize;
-                    for l in 0..p {
-                        let cand = krow[l] + (srow[l] + data / brow[l]);
-                        if cand < best {
-                            best = cand;
-                            best_l = l;
-                        }
-                    }
+                    let (best, best_l) = K::min_plus_row(krow, srow, brow, data);
                     if best > best_total[bi] {
                         best_total[bi] = best;
                         best_ptr[bi] = (k, best_l);
@@ -329,7 +389,7 @@ fn ceft_dp_kernel_into(ws: &mut Workspace, inst: InstanceRef, rev: bool) {
 /// each block, so the block's panel rows stay resident across the whole
 /// batch — the same loop interchange as the fused kernel, lifted from
 /// matrix-vector to matrix-matrix.
-fn batch_minplus_core(
+fn batch_minplus_core<K: LaneKernel>(
     sp: &[f64],
     bp: &[f64],
     p: usize,
@@ -351,15 +411,7 @@ fn batch_minplus_core(
             for j in j0..j1 {
                 let srow = &sp[j * p..j * p + p];
                 let brow = &bp[j * p..j * p + p];
-                let mut best = f64::INFINITY;
-                let mut best_l = 0usize;
-                for l in 0..p {
-                    let cand = krow[l] + (srow[l] + d / brow[l]);
-                    if cand < best {
-                        best = cand;
-                        best_l = l;
-                    }
-                }
+                let (best, best_l) = K::min_plus_row(krow, srow, brow, d);
                 vals[i * p + j] = best;
                 args[i * p + j] = best_l;
             }
@@ -389,6 +441,20 @@ pub fn ceft_dp_kernel_batch_into(
     vals: &mut Vec<f64>,
     args: &mut Vec<usize>,
 ) {
+    ceft_dp_kernel_batch_into_dispatched(ctx, rows, data, vals, args, ctx.dispatch())
+}
+
+/// [`ceft_dp_kernel_batch_into`] with the lane implementation pinned
+/// explicitly (the SIMD bit-identity tests compare both paths in one
+/// process).
+pub fn ceft_dp_kernel_batch_into_dispatched(
+    ctx: &PlatformCtx,
+    rows: &[f64],
+    data: &[f64],
+    vals: &mut Vec<f64>,
+    args: &mut Vec<usize>,
+    dispatch: KernelDispatch,
+) {
     let p = ctx.p();
     let b = data.len();
     assert_eq!(rows.len(), b * p, "rows must be B x P for B = data.len()");
@@ -396,7 +462,13 @@ pub fn ceft_dp_kernel_batch_into(
     vals.resize(b * p, 0.0);
     args.clear();
     args.resize(b * p, 0);
-    batch_minplus_core(ctx.panel_startup(), ctx.panel_bw(), p, rows, data, vals, args);
+    let (sp, bp) = (ctx.panel_startup(), ctx.panel_bw());
+    match dispatch {
+        KernelDispatch::Simd => batch_minplus_core::<SimdLanes>(sp, bp, p, rows, data, vals, args),
+        KernelDispatch::Scalar => {
+            batch_minplus_core::<ScalarLanes>(sp, bp, p, rows, data, vals, args)
+        }
+    }
 }
 
 /// The CEFT DP driven through the batched kernel: per task, gather its
@@ -413,6 +485,26 @@ pub fn ceft_dp_kernel_batch_into(
 /// `prop_batched_kernel_bit_identical_to_scalar` across
 /// `batch ∈ {1, 2, 7, 8, 9}`.
 pub fn ceft_table_batched_into(ws: &mut Workspace, inst: InstanceRef, batch: usize) {
+    ceft_table_batched_into_dispatched(ws, inst, batch, dispatch_for(&inst))
+}
+
+/// [`ceft_table_batched_into`] with the lane implementation pinned
+/// explicitly.
+pub fn ceft_table_batched_into_dispatched(
+    ws: &mut Workspace,
+    inst: InstanceRef,
+    batch: usize,
+    dispatch: KernelDispatch,
+) {
+    match dispatch {
+        KernelDispatch::Simd => ceft_table_batched_lanes::<SimdLanes>(ws, inst, batch),
+        KernelDispatch::Scalar => ceft_table_batched_lanes::<ScalarLanes>(ws, inst, batch),
+    }
+}
+
+/// The batched DP, monomorphised per lane implementation (see
+/// [`ceft_table_batched_into`] for the contract).
+fn ceft_table_batched_lanes<K: LaneKernel>(ws: &mut Workspace, inst: InstanceRef, batch: usize) {
     assert!(batch >= 1, "batch size must be at least 1");
     let ctx = inst
         .ctx()
@@ -456,7 +548,7 @@ pub fn ceft_table_batched_into(ws: &mut Workspace, inst: InstanceRef, batch: usi
             batch_vals.resize(chunk.len() * p, 0.0);
             batch_args.clear();
             batch_args.resize(chunk.len() * p, 0);
-            batch_minplus_core(sp, bp, p, batch_rows, batch_data, batch_vals, batch_args);
+            batch_minplus_core::<K>(sp, bp, p, batch_rows, batch_data, batch_vals, batch_args);
             // max-fold in CSR order — the scalar recurrence's comparison
             // sequence, so backpointer ties resolve identically
             for (i, &(k, _)) in chunk.iter().enumerate() {
@@ -474,6 +566,173 @@ pub fn ceft_table_batched_into(ws: &mut Workspace, inst: InstanceRef, batch: usi
             table[t * p + j] += crow[j];
         }
     }
+}
+
+/// The gathered multi-instance CEFT DP: run Algorithm 1 for several
+/// instances **of one platform** in lock-step, so every topo round's
+/// frontier relaxations across all instances share a single blocked
+/// min-plus sweep against the context's resident panels.
+///
+/// Round `r` gathers, for each instance whose topological order still has
+/// an `r`-th task, that task's parent CEFT rows and edge payloads into one
+/// contiguous batch (instances are mutually independent, so cross-instance
+/// gathering never violates a dependence), runs one
+/// [`ceft_dp_kernel_batch_into`]-shaped relaxation, and scatters the
+/// per-edge minima back into each instance's CSR-ordered max-fold. Per
+/// instance the per-edge `min_l` comparison sequence and the fold order
+/// are exactly the scalar recurrence's, so every returned path — and the
+/// full table behind it — is **bit-identical** to a serial
+/// [`find_critical_path`] of that instance
+/// (`engine_gathered_batch_matches_serial_dispatch` and the service-layer
+/// tests enforce this).
+///
+/// This is the compute core of the service engine's cross-request
+/// batching: queued same-platform requests are fanned into one call and
+/// their results fanned back to the per-request single-flight cells
+/// (`service::engine::BatchCollector`). Panel and table traffic amortise
+/// across the whole window the same way `relax_batch` amortises them
+/// across edges on the PJRT side.
+pub fn find_critical_paths_gathered(
+    ctx: &PlatformCtx,
+    insts: &[InstanceRef],
+) -> Vec<CriticalPath> {
+    find_critical_paths_gathered_dispatched(ctx, insts, ctx.dispatch())
+}
+
+/// [`find_critical_paths_gathered`] with the lane implementation pinned
+/// explicitly.
+pub fn find_critical_paths_gathered_dispatched(
+    ctx: &PlatformCtx,
+    insts: &[InstanceRef],
+    dispatch: KernelDispatch,
+) -> Vec<CriticalPath> {
+    match dispatch {
+        KernelDispatch::Simd => gathered_lanes::<SimdLanes>(ctx, insts),
+        KernelDispatch::Scalar => gathered_lanes::<ScalarLanes>(ctx, insts),
+    }
+}
+
+/// The gathered DP, monomorphised per lane implementation (see
+/// [`find_critical_paths_gathered`]). All DP state lives in one pooled
+/// [`Workspace`]: the instances' tables (and backpointers) are
+/// concatenated into `ws.table` / `ws.backptr` at per-instance row
+/// offsets, so steady-state gathers allocate nothing beyond the returned
+/// paths and two window-sized bookkeeping vectors — the workspace
+/// contract of every other kernel, with capacity's high-water mark at
+/// `window × instance size`.
+fn gathered_lanes<K: LaneKernel>(ctx: &PlatformCtx, insts: &[InstanceRef]) -> Vec<CriticalPath> {
+    let p = ctx.p();
+    for inst in insts {
+        assert_eq!(
+            inst.p(),
+            p,
+            "gathered instances must share the context's platform"
+        );
+    }
+    if insts.is_empty() {
+        return Vec::new();
+    }
+    let (sp, bp) = (ctx.panel_startup(), ctx.panel_bw());
+    // task-row offset of each instance inside the concatenated DP buffers
+    let mut offs = Vec::with_capacity(insts.len());
+    let mut total = 0usize;
+    for inst in insts {
+        offs.push(total);
+        total += inst.n();
+    }
+    let rounds = insts
+        .iter()
+        .map(|i| i.graph.topo_order().len())
+        .max()
+        .unwrap_or(0);
+    ctx.with_workspace(|ws| {
+        let Workspace {
+            table,
+            backptr,
+            batch_rows,
+            batch_data,
+            batch_vals,
+            batch_args,
+            steps,
+            ..
+        } = ws;
+        table.clear();
+        table.resize(total * p, 0.0);
+        backptr.clear();
+        backptr.resize(total * p, (usize::MAX, usize::MAX));
+        // (instance, task, predecessor count) per gathered frontier entry
+        let mut seg: Vec<(usize, usize, usize)> = Vec::new();
+        for r in 0..rounds {
+            batch_rows.clear();
+            batch_data.clear();
+            seg.clear();
+            for (i, inst) in insts.iter().enumerate() {
+                let topo = inst.graph.topo_order();
+                if r >= topo.len() {
+                    continue;
+                }
+                let t = topo[r];
+                let base = (offs[i] + t) * p;
+                let preds = inst.graph.preds(t);
+                if preds.is_empty() {
+                    table[base..base + p].copy_from_slice(inst.costs.row(t));
+                    continue;
+                }
+                for &(k, data) in preds {
+                    let krow = (offs[i] + k) * p;
+                    batch_rows.extend_from_slice(&table[krow..krow + p]);
+                    batch_data.push(data);
+                }
+                seg.push((i, t, preds.len()));
+            }
+            if batch_data.is_empty() {
+                continue;
+            }
+            batch_vals.clear();
+            batch_vals.resize(batch_data.len() * p, 0.0);
+            batch_args.clear();
+            batch_args.resize(batch_data.len() * p, 0);
+            batch_minplus_core::<K>(sp, bp, p, batch_rows, batch_data, batch_vals, batch_args);
+            // scatter: per (instance, task) max-fold in CSR order — the
+            // scalar recurrence's comparison sequence, so backpointer ties
+            // resolve identically
+            let mut off = 0;
+            for &(i, t, cnt) in &seg {
+                let inst = &insts[i];
+                let base = (offs[i] + t) * p;
+                table[base..base + p].fill(f64::NEG_INFINITY);
+                for (e, &(k, _)) in inst.graph.preds(t).iter().enumerate() {
+                    let row = off + e;
+                    for j in 0..p {
+                        let arrival = batch_vals[row * p + j];
+                        if arrival > table[base + j] {
+                            table[base + j] = arrival;
+                            backptr[base + j] = (k, batch_args[row * p + j]);
+                        }
+                    }
+                }
+                let crow = inst.costs.row(t);
+                for j in 0..p {
+                    table[base + j] += crow[j];
+                }
+                off += cnt;
+            }
+        }
+        insts
+            .iter()
+            .enumerate()
+            .map(|(i, inst)| {
+                let range = offs[i] * p..(offs[i] + inst.n()) * p;
+                critical_path_from_parts(
+                    inst.graph,
+                    p,
+                    &table[range.clone()],
+                    &backptr[range],
+                    steps,
+                )
+            })
+            .collect()
+    })
 }
 
 /// The scalar DP behind both orientations — the pre-kernel reference.
@@ -1092,6 +1351,91 @@ mod tests {
                 assert_eq!(vals[i * p + j].to_bits(), best.to_bits(), "({i},{j})");
                 assert_eq!(args[i * p + j], best_l, "({i},{j})");
             }
+        }
+    }
+
+    #[test]
+    fn gathered_paths_match_serial_for_every_width() {
+        // K instances of different sizes on one platform, run through the
+        // gathered lock-step DP under both dispatches: every path must be
+        // bit-identical to its serial computation.
+        let mut rng = crate::util::rng::Xoshiro256::new(55);
+        let plat = Platform::random_links(5, &mut rng, 0.3, 3.0, 0.1, 0.7);
+        let ctx = crate::model::PlatformCtx::new(plat.clone());
+        let insts: Vec<_> = [30usize, 90, 2, 61]
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| {
+                crate::graph::generator::generate(
+                    &crate::graph::generator::RggParams {
+                        n,
+                        out_degree: 3,
+                        ccr: 1.0,
+                        alpha: 0.5,
+                        beta_pct: 50.0,
+                        gamma: 0.25,
+                    },
+                    &crate::platform::CostModel::Classic { beta: 0.5 },
+                    &plat,
+                    100 + i as u64,
+                )
+            })
+            .collect();
+        let serial: Vec<CriticalPath> =
+            insts.iter().map(|i| find_critical_path(i.bind(&plat))).collect();
+        for width in 1..=insts.len() {
+            let bound: Vec<InstanceRef> =
+                insts[..width].iter().map(|i| i.bind_ctx(&ctx)).collect();
+            for dispatch in [simd::KernelDispatch::Simd, simd::KernelDispatch::Scalar] {
+                let gathered =
+                    find_critical_paths_gathered_dispatched(&ctx, &bound, dispatch);
+                assert_eq!(gathered.len(), width);
+                for (g, s) in gathered.iter().zip(&serial[..width]) {
+                    assert_eq!(g, s, "width={width} dispatch={dispatch:?}");
+                }
+            }
+        }
+        assert!(find_critical_paths_gathered(&ctx, &[]).is_empty());
+    }
+
+    #[test]
+    fn dispatched_tables_bit_identical_across_lanes() {
+        // fused + batched kernels under pinned Simd and pinned Scalar
+        // dispatch all equal the scalar-recurrence oracle
+        let inst = crate::graph::generator::generate(
+            &crate::graph::generator::RggParams {
+                n: 120,
+                out_degree: 4,
+                ccr: 1.0,
+                alpha: 0.5,
+                beta_pct: 75.0,
+                gamma: 0.3,
+            },
+            &crate::platform::CostModel::Classic { beta: 0.75 },
+            &Platform::uniform(6, 1.0, 0.0),
+            87,
+        );
+        let mut rng = crate::util::rng::Xoshiro256::new(88);
+        let plat = Platform::random_links(6, &mut rng, 0.3, 3.0, 0.1, 0.7);
+        let ctx = crate::model::PlatformCtx::new(plat.clone());
+        let mut oracle = Workspace::new();
+        ceft_table_scalar_into(&mut oracle, inst.bind(&plat));
+        let mut ws = Workspace::new();
+        for dispatch in [simd::KernelDispatch::Simd, simd::KernelDispatch::Scalar] {
+            ceft_table_into_dispatched(&mut ws, inst.bind_ctx(&ctx), dispatch);
+            assert_eq!(ws.table, oracle.table, "fused {dispatch:?}");
+            assert_eq!(ws.backptr, oracle.backptr, "fused {dispatch:?}");
+            ceft_table_batched_into_dispatched(&mut ws, inst.bind_ctx(&ctx), 8, dispatch);
+            assert_eq!(ws.table, oracle.table, "batched {dispatch:?}");
+            assert_eq!(ws.backptr, oracle.backptr, "batched {dispatch:?}");
+        }
+        // the reverse orientation too
+        let mut rev_oracle = Workspace::new();
+        ceft_table_rev_scalar_into(&mut rev_oracle, inst.bind(&plat));
+        for dispatch in [simd::KernelDispatch::Simd, simd::KernelDispatch::Scalar] {
+            ceft_table_rev_into_dispatched(&mut ws, inst.bind_ctx(&ctx), dispatch);
+            assert_eq!(ws.table, rev_oracle.table, "rev {dispatch:?}");
+            assert_eq!(ws.backptr, rev_oracle.backptr, "rev {dispatch:?}");
         }
     }
 

@@ -1,0 +1,236 @@
+//! Hand-vectorised min-plus lanes and the kernel dispatch switch.
+//!
+//! The CEFT kernels' hot inner loop is the min-plus scan
+//! `min_l krow[l] + (S[l] + data / B[l])` with a lowest-`l` argmin — a
+//! contiguous, branch-free sweep the blocked kernel set up precisely so it
+//! *could* vectorise, but whose argmin the autovectoriser routinely fails
+//! to turn into lane-wise selects. This module vectorises it by hand with
+//! **portable 4-wide `f64` lanes**: fixed-size `[f64; 4]` chunks with
+//! explicit per-lane compare/select, which LLVM lowers to `f64x4`
+//! vector instructions on every target with 256-bit lanes (and to clean
+//! 2×128-bit code elsewhere) — no nightly `std::simd`, no intrinsics, no
+//! `unsafe`.
+//!
+//! ## Bit-identity contract
+//!
+//! Every candidate value is computed with exactly the scalar path's
+//! operations in the same order (`krow[l] + (S[l] + data / B[l])` — one
+//! add, one div, one add per cell), so **values** are bit-identical by
+//! construction, including the `±inf` panel cells from the `0`/`+inf`
+//! diagonal contract (`data / +inf == +0.0`). Only the *reduction order*
+//! of the argmin differs: each lane keeps the running minimum of its own
+//! residue class `l ≡ i (mod 4)` (strict `<`, so the lowest index in the
+//! lane wins lane-internal ties), and the cross-lane reduction restores
+//! the scalar tie-break exactly with
+//! `v < best || (v == best && idx < best_idx)` — the minimum *value bits*
+//! and the **lowest sender class attaining them**, which is precisely what
+//! the scalar strict-`<` scan produces. `P % 4` tail elements run the
+//! scalar epilogue against the already-reduced `(best, best_l)`; tail
+//! indices are larger than every lane index, so plain strict `<` preserves
+//! the tie-break. `prop_simd_kernel_bit_identical_to_scalar`
+//! (`rust/tests/properties.rs`) enforces all of this over
+//! `P ∈ {1, 2, 3, 4, 5, 7, 8, 9, 16}`.
+//!
+//! ## Dispatch
+//!
+//! [`KernelDispatch`] picks the lane implementation once per
+//! [`crate::model::PlatformCtx`] (construction time), or per call for
+//! ctx-less fallback instances. `CEFT_FORCE_SCALAR=1` in the environment
+//! forces the scalar lanes everywhere — the knob `ci.sh` uses to run the
+//! kernel bench under both paths, and the escape hatch if a target's
+//! vector unit misbehaves. The scalar-recurrence oracle
+//! (`ceft_table_scalar_into`) is independent of this switch: it never
+//! routes through the lane kernels at all.
+
+/// Lane width: 4 × `f64` = one 32-byte (256-bit) vector register.
+pub const LANES: usize = 4;
+
+/// Which lane implementation the min-plus kernels run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelDispatch {
+    /// One class per iteration — the pre-SIMD kernel loop, kept as the
+    /// in-kernel reference and the `CEFT_FORCE_SCALAR=1` path.
+    Scalar,
+    /// Portable 4-wide `f64` lanes with lane-wise running-min + argmin.
+    Simd,
+}
+
+impl KernelDispatch {
+    /// Select the dispatch from the environment: [`KernelDispatch::Simd`]
+    /// unless `CEFT_FORCE_SCALAR=1` is set. Called once per
+    /// [`crate::model::PlatformCtx`] construction; ctx-less kernel entry
+    /// points call it per invocation (one env lookup, noise next to the
+    /// `O(P²e)` sweep it configures).
+    pub fn select() -> Self {
+        match std::env::var("CEFT_FORCE_SCALAR") {
+            Ok(v) if v == "1" => KernelDispatch::Scalar,
+            _ => KernelDispatch::Simd,
+        }
+    }
+}
+
+/// The min-plus row scan both kernel families are generic over: given a
+/// parent CEFT row and one destination class's panel rows, return
+/// `(min_l krow[l] + (S[l] + data / B[l]), argmin_l)` with the scalar
+/// path's lowest-`l` tie-break.
+pub(crate) trait LaneKernel {
+    fn min_plus_row(krow: &[f64], srow: &[f64], brow: &[f64], data: f64) -> (f64, usize);
+}
+
+/// The scalar lane implementation — the pre-SIMD kernel inner loop,
+/// verbatim.
+pub(crate) struct ScalarLanes;
+
+impl LaneKernel for ScalarLanes {
+    #[inline(always)]
+    fn min_plus_row(krow: &[f64], srow: &[f64], brow: &[f64], data: f64) -> (f64, usize) {
+        let mut best = f64::INFINITY;
+        let mut best_l = 0usize;
+        for l in 0..krow.len() {
+            let cand = krow[l] + (srow[l] + data / brow[l]);
+            if cand < best {
+                best = cand;
+                best_l = l;
+            }
+        }
+        (best, best_l)
+    }
+}
+
+/// The 4-wide lane implementation (see the module docs for the reduction
+/// argument).
+pub(crate) struct SimdLanes;
+
+impl LaneKernel for SimdLanes {
+    #[inline(always)]
+    fn min_plus_row(krow: &[f64], srow: &[f64], brow: &[f64], data: f64) -> (f64, usize) {
+        let p = krow.len();
+        debug_assert_eq!(srow.len(), p);
+        debug_assert_eq!(brow.len(), p);
+        let body = p - p % LANES;
+        let mut best = f64::INFINITY;
+        let mut best_l = 0usize;
+        if body > 0 {
+            // lane-wise running minima over residue classes l ≡ i (mod 4);
+            // fixed-size arrays + branchless selects lower to vector
+            // compare/blend
+            let mut vbest = [f64::INFINITY; LANES];
+            let mut vidx = [0usize; LANES];
+            let mut base = 0;
+            while base < body {
+                let k: &[f64] = &krow[base..base + LANES];
+                let s: &[f64] = &srow[base..base + LANES];
+                let b: &[f64] = &brow[base..base + LANES];
+                let mut cand = [0.0f64; LANES];
+                for i in 0..LANES {
+                    // same three ops in the same order as the scalar path:
+                    // values are bit-identical per cell
+                    cand[i] = k[i] + (s[i] + data / b[i]);
+                }
+                for i in 0..LANES {
+                    let lt = cand[i] < vbest[i];
+                    vbest[i] = if lt { cand[i] } else { vbest[i] };
+                    vidx[i] = if lt { base + i } else { vidx[i] };
+                }
+                base += LANES;
+            }
+            // cross-lane reduction restoring the scalar lowest-l tie-break:
+            // equal value bits resolve to the smaller sender class
+            for i in 0..LANES {
+                if vbest[i] < best || (vbest[i] == best && vidx[i] < best_l) {
+                    best = vbest[i];
+                    best_l = vidx[i];
+                }
+            }
+        }
+        // scalar epilogue for the P % 4 tail; tail indices exceed every
+        // lane index, so strict `<` alone preserves the tie-break
+        for l in body..p {
+            let cand = krow[l] + (srow[l] + data / brow[l]);
+            if cand < best {
+                best = cand;
+                best_l = l;
+            }
+        }
+        (best, best_l)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn both(krow: &[f64], srow: &[f64], brow: &[f64], data: f64) -> ((f64, usize), (f64, usize)) {
+        (
+            ScalarLanes::min_plus_row(krow, srow, brow, data),
+            SimdLanes::min_plus_row(krow, srow, brow, data),
+        )
+    }
+
+    #[test]
+    fn lane_scan_matches_scalar_across_widths_and_ties() {
+        let mut rng = crate::util::rng::Xoshiro256::new(7);
+        for p in [1usize, 2, 3, 4, 5, 7, 8, 9, 16, 33] {
+            for case in 0..200 {
+                let mut krow: Vec<f64> = (0..p).map(|_| rng.uniform(0.0, 50.0)).collect();
+                let srow: Vec<f64> = (0..p).map(|_| rng.uniform(0.0, 2.0)).collect();
+                let mut brow: Vec<f64> = (0..p).map(|_| rng.uniform(0.2, 4.0)).collect();
+                // panel diagonal contract: some +inf bandwidth cells
+                if p > 1 {
+                    brow[rng.below(p)] = f64::INFINITY;
+                }
+                // force value ties so the lowest-l rule is actually exercised
+                if p > 2 && case % 3 == 0 {
+                    let a = rng.below(p);
+                    let b = rng.below(p);
+                    krow[b] = krow[a];
+                }
+                let data = if case % 5 == 0 { 0.0 } else { rng.uniform(0.0, 30.0) };
+                let (s, v) = both(&krow, &srow, &brow, data);
+                assert_eq!(s.0.to_bits(), v.0.to_bits(), "value bits (p={p})");
+                assert_eq!(s.1, v.1, "argmin (p={p})");
+            }
+        }
+    }
+
+    #[test]
+    fn cross_lane_tie_resolves_to_lowest_class() {
+        // identical candidate value in lane 1 (l = 1) and lane 0 of the
+        // second chunk (l = 4): the scalar scan picks l = 1, and the
+        // cross-lane reduction must too — a plain lane-order `<` reduce
+        // would wrongly return l = 4
+        let krow = [9.0, 2.0, 9.0, 9.0, 2.0, 9.0, 9.0, 9.0];
+        let srow = [0.0; 8];
+        let brow = [f64::INFINITY; 8];
+        let (s, v) = both(&krow, &srow, &brow, 5.0);
+        assert_eq!(s, (2.0, 1));
+        assert_eq!(v, (2.0, 1));
+    }
+
+    #[test]
+    fn exhaustive_tie_patterns_small_p() {
+        // every 0/1 value pattern over P = 6 (two chunks' worth of lanes
+        // plus tail when narrowed): ties in all positions
+        for p in [4usize, 5, 6] {
+            for mask in 0..(1u32 << p) {
+                let krow: Vec<f64> = (0..p)
+                    .map(|l| if (mask >> l) & 1 == 1 { 1.0 } else { 2.0 })
+                    .collect();
+                let srow = vec![0.0; p];
+                let brow = vec![f64::INFINITY; p];
+                let (s, v) = both(&krow, &srow, &brow, 3.0);
+                assert_eq!(s, v, "p={p} mask={mask:b}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_select_honours_force_scalar() {
+        // NB: reads the real process environment; the default environment
+        // of `cargo test` has the variable unset
+        match std::env::var("CEFT_FORCE_SCALAR") {
+            Ok(v) if v == "1" => assert_eq!(KernelDispatch::select(), KernelDispatch::Scalar),
+            _ => assert_eq!(KernelDispatch::select(), KernelDispatch::Simd),
+        }
+    }
+}

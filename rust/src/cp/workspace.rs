@@ -36,6 +36,7 @@
 //! `workers × high-water instance size` even under connection bursts.
 
 use crate::cp::ceft::PathStep;
+use crate::util::aligned::AlignedVec;
 use std::collections::BinaryHeap;
 use std::sync::Mutex;
 
@@ -73,8 +74,10 @@ impl Ord for ReadyEntry {
 /// algorithms do exactly that internally).
 #[derive(Debug, Default)]
 pub struct Workspace {
-    /// CEFT DP values, `v × P` row-major (`cp::ceft::ceft_table_into`)
-    pub table: Vec<f64>,
+    /// CEFT DP values, `v × P` row-major (`cp::ceft::ceft_table_into`).
+    /// 32-byte aligned ([`AlignedVec`]) so the SIMD lanes' parent-row loads
+    /// never straddle a cache line.
+    pub table: AlignedVec,
     /// CEFT DP backpointers, aligned with `table`
     pub backptr: Vec<(usize, usize)>,
     /// upward-rank sweep output (`cp::ranks::rank_upward_into`)
@@ -110,22 +113,23 @@ pub struct Workspace {
     /// on the diagonal (co-located communication is free, Definition 3).
     /// Only the **fallback** path fills this: instances bound through a
     /// [`crate::model::PlatformCtx`] read the context's resident panels
-    /// instead — see EXPERIMENTS.md §Platform contexts.
-    pub panel_startup: Vec<f64>,
+    /// instead — see EXPERIMENTS.md §Platform contexts. Aligned like the
+    /// resident panels so both sources feed the SIMD lanes identically.
+    pub panel_startup: AlignedVec,
     /// destination-major `P × P` bandwidth panel, aligned with
     /// `panel_startup`: row `j` holds `bandwidth[l → j]` for `l != j` and
     /// `+inf` on the diagonal so `data / bw` contributes exactly `0.0` —
     /// keeping the kernel branch-free yet bit-identical to
     /// `Platform::comm_cost`. Fallback-only, like `panel_startup`.
-    pub panel_bw: Vec<f64>,
+    pub panel_bw: AlignedVec,
     /// batched min-plus kernel scratch: gathered parent CEFT rows,
     /// `B × P` row-major (`cp::ceft::ceft_table_batched_into`)
-    pub batch_rows: Vec<f64>,
+    pub batch_rows: AlignedVec,
     /// batched kernel scratch: per-row edge payloads, aligned with
     /// `batch_rows`
     pub batch_data: Vec<f64>,
     /// batched kernel output scratch: `B × P` per-(row, destination) minima
-    pub batch_vals: Vec<f64>,
+    pub batch_vals: AlignedVec,
     /// batched kernel output scratch: argmin sender class per cell,
     /// aligned with `batch_vals`
     pub batch_args: Vec<usize>,

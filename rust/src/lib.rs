@@ -35,7 +35,11 @@
 //!   CPOP's mean-value critical path, the min-execution-time critical path,
 //!   and `CP_MIN` (the SLR denominator) — plus [`cp::workspace`], the
 //!   reusable scratch arena that makes the whole algorithm core
-//!   allocation-free at steady state (see EXPERIMENTS.md §Workspace).
+//!   allocation-free at steady state (see EXPERIMENTS.md §Workspace), and
+//!   [`cp::ceft::simd`], the hand-vectorised 4-wide min-plus lanes behind
+//!   the CEFT kernels (bit-identical to the scalar oracle;
+//!   `CEFT_FORCE_SCALAR=1` forces the scalar path — EXPERIMENTS.md §SIMD
+//!   dispatch).
 //! * [`sched`] — list schedulers: HEFT, CPOP, CEFT-CPOP, and the
 //!   CEFT-ranked HEFT variants, all over a shared insertion-based core.
 //!   Each has a `schedule_with(&mut Workspace, …)` hot path and a classic

@@ -15,9 +15,11 @@
 //! * `repro request` — send one protocol request to a running server.
 //! * `repro loadgen` — replay generated instances against an in-process
 //!   engine at a target rate; reports requests/sec, p50/p95/p99 per-request
-//!   latency, cache hit rate and panel-context counters
+//!   latency, cache hit rate, panel-context counters
 //!   (`--platform-mix K` round-robins K distinct platforms across the mix
-//!   to exercise the per-platform panel cache), and writes
+//!   to exercise the per-platform panel cache) and cross-request
+//!   batch-efficiency (`--cp-share` controls how much of the mix is
+//!   critical-path traffic, the op the engine gathers), and writes
 //!   `BENCH_service.json` so the perf trajectory is tracked across PRs.
 
 use ceft::coordinator::{Coordinator, EXPERIMENT_IDS};
@@ -291,13 +293,19 @@ fn cmd_serve(tokens: &[String]) -> i32 {
             Some("1024"),
             "LRU entries per result cache (also bounds interned instances)",
         )
-        .opt("threads", None, "worker threads (default: all cores)");
+        .opt("threads", None, "worker threads (default: all cores)")
+        .opt(
+            "batch-window",
+            Some("8"),
+            "max critical-path requests per gathered cross-request sweep (1 disables)",
+        );
     let p = parse_or_exit(args, tokens);
     let cache_capacity: usize = num_or_exit(&p, "cache-capacity", None);
     let config = EngineConfig {
         cache_capacity,
         intern_capacity: cache_capacity,
         threads: num_or_exit(&p, "threads", Some(pool::default_threads())),
+        batch_window: num_or_exit(&p, "batch-window", None),
     };
     let engine = Engine::new(config);
     match p.get("addr") {
@@ -455,8 +463,18 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
     .opt("rate", Some("1000"), "target requests/sec")
     .opt("duration", Some("3"), "seconds to run")
     .opt("algorithm", Some("CEFT-CPOP"), "scheduler to request")
+    .opt(
+        "cp-share",
+        Some("0.25"),
+        "fraction of the instance mix replayed as critical-path requests (0 disables)",
+    )
     .opt("cache-capacity", Some("4096"), "LRU entries per result cache")
     .opt("threads", None, "worker threads (default: all cores)")
+    .opt(
+        "batch-window",
+        Some("8"),
+        "max critical-path requests per gathered cross-request sweep (1 disables)",
+    )
     .opt(
         "json-out",
         Some("BENCH_service.json"),
@@ -467,6 +485,7 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
     let platform_mix: usize = num_or_exit::<usize>(&parsed, "platform-mix", None).max(1);
     let rate: f64 = num_or_exit(&parsed, "rate", None);
     let duration_s: f64 = num_or_exit(&parsed, "duration", None);
+    let cp_share: f64 = num_or_exit(&parsed, "cp-share", None);
     let algo = match Algorithm::parse(parsed.req("algorithm")) {
         Ok(a) => a,
         Err(e) => {
@@ -478,11 +497,16 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         eprintln!("--rate and --duration must be positive");
         return 2;
     }
+    if !(0.0..=1.0).contains(&cp_share) {
+        eprintln!("--cp-share must be in [0, 1]");
+        return 2;
+    }
     let cache_capacity: usize = num_or_exit(&parsed, "cache-capacity", None);
     let engine = Engine::new(EngineConfig {
         cache_capacity,
         intern_capacity: cache_capacity.max(count),
         threads: num_or_exit(&parsed, "threads", Some(pool::default_threads())),
+        batch_window: num_or_exit(&parsed, "batch-window", None),
     });
 
     // Submit `count` distinct instances (same grid coordinates, different
@@ -524,14 +548,26 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
             }
         }
     }
+    // Replay mix: the first ceil(cp_share * count) instances are requested
+    // as critical paths (the op the engine's cross-request batcher
+    // gathers), the rest as schedules. Deterministic striping, so a given
+    // flag set always produces the same request stream.
+    let cp_count = ((count as f64) * cp_share).ceil() as usize;
     let lines: Vec<String> = ids
         .iter()
-        .map(|&id| {
-            ceft::service::request_to_json(&Request::Schedule {
-                algorithm: algo,
-                target: Target::Handle(id),
-            })
-            .to_string()
+        .enumerate()
+        .map(|(i, &id)| {
+            let req = if i < cp_count {
+                Request::CriticalPath {
+                    target: Target::Handle(id),
+                }
+            } else {
+                Request::Schedule {
+                    algorithm: algo,
+                    target: Target::Handle(id),
+                }
+            };
+            ceft::service::request_to_json(&req).to_string()
         })
         .collect();
 
@@ -653,6 +689,25 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         "panel ctx cache: {panel_hits} hits, {panel_misses} misses, \
          {panel_builds} interned panel builds"
     );
+    // Cross-request batching: distinct-key critical-path misses the engine
+    // gathered into shared min-plus sweeps. `batch_efficiency` is the
+    // fraction of all replayed requests served inside such a gather — 0.0
+    // on a fully cached or schedule-only mix, rising with concurrent
+    // same-platform cp misses (see EXPERIMENTS.md §SIMD dispatch).
+    let cp_counter = |k: &str| -> f64 {
+        stats
+            .get("cp_cache")
+            .and_then(|c| c.get(k))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    let batched_requests = cp_counter("batched_requests");
+    let batch_width = cp_counter("batch_width");
+    let batch_efficiency = batched_requests / sent as f64;
+    println!(
+        "cross-request batching: {batched_requests} gathered requests \
+         (max width {batch_width}), efficiency {batch_efficiency:.4}"
+    );
     // With an explicit --platform-mix the distinct-platform count is under
     // our control, so enforce the residency invariant: panels built once
     // per platform, never per request. (Without it, the workload's own
@@ -676,8 +731,12 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
             ("algorithm", Json::Str(algo.name().to_string())),
             ("instances", Json::Num(count as f64)),
             ("platform_mix", Json::Num(platform_mix as f64)),
+            ("cp_share", Json::Num(cp_share)),
             ("panel_ctx_hits", Json::Num(panel_hits)),
             ("panel_ctx_misses", Json::Num(panel_misses)),
+            ("batched_requests", Json::Num(batched_requests)),
+            ("batch_width", Json::Num(batch_width)),
+            ("batch_efficiency", Json::Num(batch_efficiency)),
             ("threads", Json::Num(threads as f64)),
             ("target_rps", Json::Num(rate)),
             ("duration_s", Json::Num(elapsed)),

@@ -40,9 +40,11 @@
 //! needs the raw row-major buffer (serialisation, hashing, the f32 PJRT
 //! marshalling) reads it without a copy.
 
+use crate::cp::ceft::simd::KernelDispatch;
 use crate::cp::workspace::{Workspace, WorkspacePool};
 use crate::graph::TaskGraph;
 use crate::platform::Platform;
+use crate::util::aligned::AlignedVec;
 use std::sync::Arc;
 
 /// Dense task-major `v × P` execution-cost matrix (`C_comp(t, j)` of the
@@ -243,7 +245,7 @@ impl<'a> InstanceRef<'a> {
 /// co-located classes — the same bits [`Platform::comm_cost`] produces.
 /// Single implementation behind both the resident [`PlatformCtx`] panels
 /// and the workspace-local fallback in [`crate::cp::ceft`].
-pub(crate) fn fill_comm_panels(platform: &Platform, sp: &mut Vec<f64>, bp: &mut Vec<f64>) {
+pub(crate) fn fill_comm_panels(platform: &Platform, sp: &mut AlignedVec, bp: &mut AlignedVec) {
     let p = platform.num_classes();
     sp.clear();
     sp.resize(p * p, 0.0);
@@ -323,10 +325,16 @@ pub struct PlatformCtx {
     platform: Arc<Platform>,
     /// structural platform hash (`crate::util::hashing::hash_platform`)
     hash: u64,
-    /// destination-major `P × P` startup panel (`0` diagonal)
-    panel_startup: Vec<f64>,
-    /// destination-major `P × P` bandwidth panel (`+inf` diagonal)
-    panel_bw: Vec<f64>,
+    /// destination-major `P × P` startup panel (`0` diagonal), 32-byte
+    /// aligned so the SIMD lanes' panel loads never straddle a cache line
+    panel_startup: AlignedVec,
+    /// destination-major `P × P` bandwidth panel (`+inf` diagonal), aligned
+    /// like `panel_startup`
+    panel_bw: AlignedVec,
+    /// lane implementation the CEFT kernels run for this platform —
+    /// selected once at construction ([`KernelDispatch::select`];
+    /// `CEFT_FORCE_SCALAR=1` forces the scalar lanes)
+    dispatch: KernelDispatch,
     /// per-sender-class mean reciprocal bandwidth over the `P - 1` distinct
     /// destinations (all zeros when `P == 1` — no distinct pairs)
     mean_inv_bw_from: Vec<f64>,
@@ -370,9 +378,11 @@ impl PlatformCtx {
         let hash =
             prehash.unwrap_or_else(|| crate::util::hashing::hash_platform(&platform));
         debug_assert_eq!(hash, crate::util::hashing::hash_platform(&platform));
-        let mut panel_startup = Vec::new();
-        let mut panel_bw = Vec::new();
+        let mut panel_startup = AlignedVec::new();
+        let mut panel_bw = AlignedVec::new();
         fill_comm_panels(&platform, &mut panel_startup, &mut panel_bw);
+        panel_startup.assert_aligned();
+        panel_bw.assert_aligned();
         // per-sender mean reciprocal bandwidth over distinct destinations;
         // panel_bw is destination-major, so sender l's reciprocals live at
         // stride P — the +inf diagonal contributes exactly 0.0
@@ -396,6 +406,7 @@ impl PlatformCtx {
             hash,
             panel_startup,
             panel_bw,
+            dispatch: KernelDispatch::select(),
             mean_inv_bw_from,
             startup_f32,
             invbw_f32,
@@ -436,7 +447,7 @@ impl PlatformCtx {
     /// diagonal.
     #[inline]
     pub fn panel_startup(&self) -> &[f64] {
-        &self.panel_startup
+        self.panel_startup.as_slice()
     }
 
     /// The resident destination-major `P × P` bandwidth panel, aligned
@@ -445,7 +456,16 @@ impl PlatformCtx {
     /// `data / bw` contributes exactly `+0.0` when co-located).
     #[inline]
     pub fn panel_bw(&self) -> &[f64] {
-        &self.panel_bw
+        self.panel_bw.as_slice()
+    }
+
+    /// The lane implementation the CEFT kernels run for instances bound
+    /// through this context — selected once at construction
+    /// ([`KernelDispatch::select`]), so thousands of requests on one
+    /// platform never re-read the environment.
+    #[inline]
+    pub fn dispatch(&self) -> KernelDispatch {
+        self.dispatch
     }
 
     /// Mean communication cost of moving `data` units *from* class `l` to
@@ -689,6 +709,16 @@ mod tests {
         // shape mismatches are still rejected
         let bad = CostMatrix::new(3, vec![1.0; 6]);
         assert!(ctx.try_bind(&g, &bad).is_err());
+    }
+
+    #[test]
+    fn platform_ctx_panels_are_lane_aligned_and_dispatch_pinned() {
+        let ctx = PlatformCtx::new(Platform::uniform(5, 1.0, 0.5));
+        let align = crate::util::aligned::ALIGN;
+        assert_eq!(ctx.panel_startup().as_ptr() as usize % align, 0);
+        assert_eq!(ctx.panel_bw().as_ptr() as usize % align, 0);
+        // selected once at construction from the same environment rule
+        assert_eq!(ctx.dispatch(), KernelDispatch::select());
     }
 
     #[test]

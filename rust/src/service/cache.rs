@@ -41,6 +41,28 @@ pub struct CacheStats {
     /// miss the cache — so `misses - dedup_hits` is the number of actual
     /// computations)
     pub dedup_hits: u64,
+    /// distinct-key computations served by a **gathered** multi-request
+    /// sweep (the engine's cross-request batching): every request whose DP
+    /// ran inside a batch of width ≥ 2 counts once, so
+    /// `batched_requests / requests` is the loadgen batch-efficiency ratio
+    pub batched_requests: u64,
+    /// high-water gather width: the widest multi-request sweep observed
+    /// (0 until the first batch of width ≥ 2 forms)
+    pub batch_width: u64,
+}
+
+impl CacheStats {
+    /// Accumulate another shard's counters into this one — how the engine
+    /// reports aggregate stats over its per-platform cache shards.
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.insertions += other.insertions;
+        self.evictions += other.evictions;
+        self.dedup_hits += other.dedup_hits;
+        self.batched_requests += other.batched_requests;
+        self.batch_width = self.batch_width.max(other.batch_width);
+    }
 }
 
 /// A bounded least-recently-used map.
@@ -98,20 +120,24 @@ impl<K: Eq + Hash + Copy, V> LruCache<K, V> {
     }
 
     /// Insert (or overwrite) `k`, evicting the least-recently-used entry
-    /// when over capacity.
-    pub fn put(&mut self, k: K, v: V) {
+    /// when over capacity. Returns the evicted `(key, value)` when the
+    /// capacity bound displaced one — the engine uses it to retire the
+    /// cache shard of an evicted platform context alongside the context.
+    pub fn put(&mut self, k: K, v: V) -> Option<(K, V)> {
         let tick = self.next_tick();
+        let mut evicted = None;
         if let Some((old_tick, _)) = self.map.insert(k, (tick, v)) {
             self.order.remove(&old_tick);
         } else if self.map.len() > self.cap {
             // the new key has no order entry yet, so it can't be the victim
             if let Some((_, victim)) = self.order.pop_first() {
-                self.map.remove(&victim);
+                evicted = self.map.remove(&victim).map(|(_, v)| (victim, v));
                 self.stats.evictions += 1;
             }
         }
         self.order.insert(tick, k);
         self.stats.insertions += 1;
+        evicted
     }
 
     /// Remove one key; returns its value when present.
@@ -160,6 +186,15 @@ impl<K: Eq + Hash + Copy, V> LruCache<K, V> {
     /// (counted by the engine, which owns the in-flight table).
     pub fn record_dedup_hit(&mut self) {
         self.stats.dedup_hits += 1;
+    }
+
+    /// Record one gathered multi-request sweep of `width` distinct keys
+    /// (the engine's cross-request batching; only widths ≥ 2 are batches).
+    pub fn record_batch(&mut self, width: u64) {
+        if width >= 2 {
+            self.stats.batched_requests += width;
+            self.stats.batch_width = self.stats.batch_width.max(width);
+        }
     }
 
     /// Counter snapshot.
@@ -241,6 +276,42 @@ mod tests {
         c.clear();
         assert!(c.is_empty());
         assert_eq!(c.stats().hits, 1);
+    }
+
+    #[test]
+    fn put_returns_the_evicted_entry() {
+        let mut c: LruCache<CacheKey, u32> = LruCache::new(2);
+        assert_eq!(c.put(key(1), 1), None);
+        assert_eq!(c.put(key(2), 2), None);
+        // overwrite never evicts
+        assert_eq!(c.put(key(2), 20), None);
+        // capacity displacement returns the LRU victim
+        assert_eq!(c.put(key(3), 3), Some((key(1), 1)));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn batch_counters_accumulate_and_merge() {
+        let mut c: LruCache<CacheKey, u32> = LruCache::new(2);
+        c.record_batch(1); // width 1 is not a batch
+        assert_eq!(c.stats().batched_requests, 0);
+        c.record_batch(3);
+        c.record_batch(2);
+        let s = c.stats();
+        assert_eq!(s.batched_requests, 5);
+        assert_eq!(s.batch_width, 3);
+        let mut agg = CacheStats::default();
+        agg.merge(&s);
+        let other = CacheStats {
+            batched_requests: 7,
+            batch_width: 2,
+            hits: 4,
+            ..CacheStats::default()
+        };
+        agg.merge(&other);
+        assert_eq!(agg.batched_requests, 12);
+        assert_eq!(agg.batch_width, 3, "width merges as a high-water mark");
+        assert_eq!(agg.hits, 4);
     }
 
     #[test]

@@ -21,9 +21,13 @@
 //! for and handed to small-`P` requests (per-context created/idle gauges
 //! are in the stats endpoint too).
 //!
-//! Concurrency model: the engine state sits behind one mutex, but all
-//! algorithm work (the `O(P²e)` CEFT DP, the list schedulers) runs outside
-//! it, so the lock is only held for hash-map lookups. Uncached keys are
+//! Concurrency model: the memo caches are **sharded per platform
+//! context** — each interned platform hash owns a `CacheShard` holding
+//! its own result caches and single-flight tables behind its own mutex, so
+//! the hit path of a resolved instance never touches the global intern
+//! lock (request counters are plain atomics) and platform-heavy mixes
+//! scale past one lock. All algorithm work (the `O(P²e)` CEFT DP, the
+//! list schedulers) runs outside every lock. Uncached keys are
 //! **single-flight**: the first requester becomes the leader and runs the
 //! DP; concurrent requests for the same key park on the leader's in-flight
 //! cell (a `Condvar`) and receive its result the moment it lands, counted
@@ -38,12 +42,29 @@
 //! stays bounded — see EXPERIMENTS.md §Workspace and §Platform contexts
 //! for the benchmark methodology.
 //!
+//! Cross-request batching: distinct-key critical-path misses on **one
+//! platform** are gathered into a single lock-step
+//! [`crate::cp::ceft::find_critical_paths_gathered`] sweep by the shard's
+//! `BatchCollector` (group commit, saturation-gated, no added wait: below
+//! `threads` in-flight gathers every distinct miss computes on its own
+//! core exactly as before; a key leader that arrives once the worker
+//! budget is saturated queues instead of oversubscribing, and each
+//! finishing gather promotes the queue's head, which drains up to
+//! [`EngineConfig::batch_window`] queued requests into one sweep and fans
+//! each result back to its single-flight cell). Results are bit-identical
+//! to serial dispatch — the gathered DP preserves the per-instance
+//! comparison sequence exactly — and the `batched_requests` /
+//! `batch_width` counters in the cp-cache stats (and
+//! `repro loadgen`'s batch-efficiency line) measure how often it engages.
+//! A gather leader that unwinds resolves every gathered cell with a retry
+//! signal and re-raises, exactly like a single-flight leader.
+//!
 //! Serving loops: [`serve_stdio`] speaks the protocol on stdin/stdout,
 //! greedily draining whatever lines are already buffered into one batch;
 //! [`Server`] accepts TCP connections (`std::net`) with one thread per
 //! connection. Both share one engine, hence one cache.
 
-use crate::cp::ceft::{find_critical_path_with, CriticalPath};
+use crate::cp::ceft::{find_critical_path_with, find_critical_paths_gathered, CriticalPath};
 use crate::graph::generator::Instance;
 use crate::graph::io;
 use crate::graph::TaskGraph;
@@ -55,10 +76,10 @@ use crate::service::hashing;
 use crate::service::protocol::{self, Request, Target};
 use crate::util::json::Json;
 use crate::util::pool;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Algorithm-slot marker for critical-path cache entries. Real algorithm
@@ -81,13 +102,18 @@ const MAX_CONNECTIONS: usize = 256;
 /// Engine tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
-    /// LRU bound per result cache (critical paths and schedules each)
+    /// LRU bound per result cache (critical paths and schedules each, per
+    /// platform-context shard)
     pub cache_capacity: usize,
     /// LRU bound on interned instances; least-recently-used handles expire
     /// (subsequent by-handle requests get "unknown instance id")
     pub intern_capacity: usize,
     /// worker threads for batched entry points
     pub threads: usize,
+    /// most critical-path requests one gathered cross-request sweep may
+    /// serve (`<= 1` disables gathering; misses then compute one instance
+    /// per thread exactly as before)
+    pub batch_window: usize,
 }
 
 impl Default for EngineConfig {
@@ -96,6 +122,7 @@ impl Default for EngineConfig {
             cache_capacity: 1024,
             intern_capacity: 1024,
             threads: pool::default_threads(),
+            batch_window: 8,
         }
     }
 }
@@ -103,12 +130,15 @@ impl Default for EngineConfig {
 /// An interned instance: shared, hash-addressed, immutable. The platform
 /// lives inside the shared [`PlatformCtx`], so every instance on the same
 /// platform borrows one set of resident communication panels and one
-/// platform-sized workspace pool.
+/// platform-sized workspace pool — and its memo caches live in the
+/// platform's [`CacheShard`], carried here so the hit path resolves
+/// straight to the right shard without touching the global intern lock.
 struct Interned {
     id: u64,
     graph: Arc<TaskGraph>,
     comp: Arc<CostMatrix>,
     ctx: Arc<PlatformCtx>,
+    shard: Arc<CacheShard>,
     graph_hash: u64,
     platform_hash: u64,
     comp_hash: u64,
@@ -172,32 +202,113 @@ enum Flight<T> {
 }
 
 /// The (result cache, in-flight table) pair [`Engine::single_flight`]
-/// operates on — projected out of [`State`] by a plain fn pointer so the
-/// one generic implementation serves both the critical-path and the
-/// schedule caches (a concurrency-protocol fix can never apply to one and
-/// miss the other).
+/// operates on, projected out of [`ShardState`] by a plain fn pointer.
+/// NOTE: since the cross-request batcher landed, only the **schedule**
+/// cache routes through the generic `single_flight`; the critical-path
+/// cache runs the same admission/follower/leader-unwind protocol inline
+/// in `Engine::critical_path_for` (it needs the gather queue between
+/// admission and compute). A concurrency-protocol fix in one place must
+/// be mirrored in the other — `racing_identical_requests_are_single_flight`
+/// and `concurrent_distinct_cp_requests_match_serial_and_count_sanely`
+/// cover both sides.
 type Slots<'a, T> = (
     &'a mut LruCache<CacheKey, Arc<T>>,
     &'a mut HashMap<CacheKey, Arc<Inflight<T>>>,
 );
 
-/// [`Slots`] projection for the critical-path cache.
-fn cp_slots(st: &mut State) -> Slots<'_, CriticalPath> {
-    (&mut st.cp_cache, &mut st.cp_inflight)
-}
-
-/// [`Slots`] projection for the schedule cache.
-fn sched_slots(st: &mut State) -> Slots<'_, Schedule> {
+/// [`Slots`] projection for the schedule cache. (The critical-path cache
+/// runs its own admission loop in `Engine::critical_path_for` — same
+/// protocol, extended with the cross-request gather queue.)
+fn sched_slots(st: &mut ShardState) -> Slots<'_, Schedule> {
     (&mut st.sched_cache, &mut st.sched_inflight)
 }
 
-#[derive(Clone, Copy, Debug, Default)]
+/// One critical-path request parked in (or drained from) a shard's
+/// [`BatchCollector`]: the interned instance to relax, its cache key, and
+/// the single-flight cell its result (or retry signal) fans back to.
+struct PendingCp {
+    inst: Arc<Interned>,
+    key: CacheKey,
+    cell: Arc<Inflight<CriticalPath>>,
+}
+
+/// The cross-request gather queue of one shard. Group-commit shaped and
+/// **saturation-gated**: a critical-path key leader computes immediately
+/// while the shard has fewer than `Engine::threads` gathers in flight
+/// (below saturation every distinct miss still gets its own core, exactly
+/// like pre-batching dispatch — zero added latency, and a width-1
+/// "gather" runs the plain fused kernel); only once the worker budget is
+/// saturated do further leaders park here instead of oversubscribing the
+/// CPU. Each finishing gather promotes the queue head, which drains up to
+/// `batch_window` parked requests into one
+/// [`find_critical_paths_gathered`] sweep — batches form exactly when
+/// load exceeds the cores, which is when amortising panel/table traffic
+/// pays instead of costing parallelism.
+#[derive(Default)]
+struct BatchCollector {
+    /// gathers (width ≥ 1) for this shard currently computing
+    active: usize,
+    /// key leaders parked while the shard is at its gather budget, FIFO
+    pending: VecDeque<PendingCp>,
+}
+
+/// Per-platform-context cache shard: the memo caches, single-flight
+/// tables and gather queue of one interned platform, behind their own
+/// mutex. The platform hash already partitions the key space (it is part
+/// of every [`CacheKey`]), so sharding by it is invisible to lookups while
+/// removing the global lock from the hit path.
+///
+/// Lock order: the engine's intern state lock may be held while taking a
+/// shard lock (stats, evict); **never** the reverse.
+struct CacheShard {
+    state: Mutex<ShardState>,
+}
+
+struct ShardState {
+    cp_cache: LruCache<CacheKey, Arc<CriticalPath>>,
+    sched_cache: LruCache<CacheKey, Arc<Schedule>>,
+    /// single-flight tables: uncached keys currently being computed; the
+    /// entry is inserted by the leader under this same mutex and removed
+    /// when its result lands in the cache, so membership here is exact
+    cp_inflight: HashMap<CacheKey, Arc<Inflight<CriticalPath>>>,
+    sched_inflight: HashMap<CacheKey, Arc<Inflight<Schedule>>>,
+    /// the shard's cross-request critical-path gather queue
+    collector: BatchCollector,
+}
+
+impl CacheShard {
+    fn new(cache_capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(ShardState {
+                cp_cache: LruCache::new(cache_capacity),
+                sched_cache: LruCache::new(cache_capacity),
+                cp_inflight: HashMap::new(),
+                sched_inflight: HashMap::new(),
+                collector: BatchCollector::default(),
+            }),
+        }
+    }
+}
+
+/// Request counters — plain atomics so the hit path bumps them without
+/// any lock.
+#[derive(Default)]
 struct Counters {
-    requests: u64,
-    errors: u64,
-    submits: u64,
-    cp_requests: u64,
-    schedule_requests: u64,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    submits: AtomicU64,
+    cp_requests: AtomicU64,
+    schedule_requests: AtomicU64,
+}
+
+impl Counters {
+    fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn read(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
 }
 
 struct State {
@@ -211,14 +322,11 @@ struct State {
     /// invalidates a live instance — it only means a future submit of that
     /// platform recomputes the panels once.
     ctxs: LruCache<u64, Arc<PlatformCtx>>,
-    cp_cache: LruCache<CacheKey, Arc<CriticalPath>>,
-    sched_cache: LruCache<CacheKey, Arc<Schedule>>,
-    /// single-flight tables: uncached keys currently being computed; the
-    /// entry is inserted by the leader under this same mutex and removed
-    /// when its result lands in the cache, so membership here is exact
-    cp_inflight: HashMap<CacheKey, Arc<Inflight<CriticalPath>>>,
-    sched_inflight: HashMap<CacheKey, Arc<Inflight<Schedule>>>,
-    counters: Counters,
+    /// one cache shard per interned platform hash, created with the ctx
+    /// and retired when the ctx is evicted (instances keep their shard
+    /// alive through an `Arc`, so by-handle traffic on an evicted
+    /// platform's instances still serves cached results)
+    shards: HashMap<u64, Arc<CacheShard>>,
 }
 
 /// The persistent, memoizing scheduling engine.
@@ -237,7 +345,12 @@ struct State {
 /// context evicted from the panel cache releases its arenas with it.
 pub struct Engine {
     state: Mutex<State>,
+    counters: Counters,
     threads: usize,
+    /// per-shard LRU bound for the result caches
+    cache_capacity: usize,
+    /// gather-window bound of the cross-request batcher
+    batch_window: usize,
 }
 
 impl Engine {
@@ -249,13 +362,12 @@ impl Engine {
             state: Mutex::new(State {
                 instances: LruCache::new(config.intern_capacity.max(1)),
                 ctxs: LruCache::new(config.intern_capacity.max(1)),
-                cp_cache: LruCache::new(cap),
-                sched_cache: LruCache::new(cap),
-                cp_inflight: HashMap::new(),
-                sched_inflight: HashMap::new(),
-                counters: Counters::default(),
+                shards: HashMap::new(),
             }),
+            counters: Counters::default(),
             threads,
+            cache_capacity: cap,
+            batch_window: config.batch_window.max(1),
         }
     }
 
@@ -366,17 +478,32 @@ impl Engine {
                         raced
                     }
                     None => {
-                        st.ctxs.put(platform_hash, built.clone());
+                        // a ctx evicted by the intern bound retires its
+                        // cache shard with it (instances still alive keep
+                        // the shard reachable through their own Arc)
+                        if let Some((evicted_hash, _)) =
+                            st.ctxs.put(platform_hash, built.clone())
+                        {
+                            st.shards.remove(&evicted_hash);
+                        }
                         built
                     }
                 }
             }
         };
+        // the platform's cache shard is created with (and keyed like) the
+        // ctx; idempotent for the raced-build path
+        let shard = st
+            .shards
+            .entry(platform_hash)
+            .or_insert_with(|| Arc::new(CacheShard::new(self.cache_capacity)))
+            .clone();
         let interned = Arc::new(Interned {
             id,
             graph: Arc::new(instance.graph),
             comp: Arc::new(instance.comp),
             ctx,
+            shard,
             graph_hash,
             platform_hash,
             comp_hash,
@@ -407,25 +534,26 @@ impl Engine {
     }
 
     /// The single-flight memoization protocol, shared by both result
-    /// caches. Admission runs atomically under the state lock: a cache hit
-    /// returns immediately; an uncached key with an in-flight leader parks
-    /// this request on the leader's cell (a dedup hit); otherwise this
-    /// request leads and runs `compute` **outside** the lock. A leader
-    /// that unwinds resolves its cell with `None` and removes the
-    /// in-flight entry before re-raising, so followers loop back into
-    /// admission instead of parking forever. Returns
+    /// caches. Admission runs atomically under the instance's **shard**
+    /// lock: a cache hit returns immediately; an uncached key with an
+    /// in-flight leader parks this request on the leader's cell (a dedup
+    /// hit); otherwise this request leads and runs `compute` **outside**
+    /// the lock. A leader that unwinds resolves its cell with `None` and
+    /// removes the in-flight entry before re-raising, so followers loop
+    /// back into admission instead of parking forever. Returns
     /// `(result, was_cached)`; followers report `cached = true` (the
     /// answer came from another request's computation).
     fn single_flight<T>(
         &self,
+        shard: &CacheShard,
         key: CacheKey,
-        slots: for<'a> fn(&'a mut State) -> Slots<'a, T>,
+        slots: for<'a> fn(&'a mut ShardState) -> Slots<'a, T>,
         compute: impl Fn() -> T,
     ) -> (Arc<T>, bool) {
         loop {
             // one admission pass under the lock: cache hit, follower, leader
             let flight = {
-                let mut st = self.state.lock().unwrap();
+                let mut st = shard.state.lock().unwrap();
                 let (cache, inflight) = slots(&mut st);
                 if let Some(hit) = cache.get(&key) {
                     Flight::Hit(hit.clone())
@@ -441,7 +569,7 @@ impl Engine {
                 Flight::Hit(v) => return (v, true),
                 Flight::Follower(f) => {
                     if let Some(v) = f.wait() {
-                        let mut st = self.state.lock().unwrap();
+                        let mut st = shard.state.lock().unwrap();
                         slots(&mut st).0.record_dedup_hit();
                         return (v, true);
                     }
@@ -456,7 +584,7 @@ impl Engine {
                         Ok(v) => {
                             let v = Arc::new(v);
                             {
-                                let mut st = self.state.lock().unwrap();
+                                let mut st = shard.state.lock().unwrap();
                                 let (cache, inflight) = slots(&mut st);
                                 cache.put(key, v.clone());
                                 inflight.remove(&key);
@@ -466,7 +594,7 @@ impl Engine {
                         }
                         Err(payload) => {
                             {
-                                let mut st = self.state.lock().unwrap();
+                                let mut st = shard.state.lock().unwrap();
                                 slots(&mut st).1.remove(&key);
                             }
                             f.complete(None);
@@ -478,20 +606,169 @@ impl Engine {
         }
     }
 
-    /// Memoized CEFT critical path with single-flight dedup.
-    fn critical_path_for(&self, inst: &Interned) -> (Arc<CriticalPath>, bool) {
-        let key = CacheKey {
+    /// The critical-path memoization key of one interned instance.
+    fn cp_key(inst: &Interned) -> CacheKey {
+        CacheKey {
             graph: inst.graph_hash,
             platform: inst.platform_hash,
             comp: inst.comp_hash,
             algorithm: CP_MARKER,
-        };
-        self.single_flight(key, cp_slots, || {
-            // compute in a workspace from the instance's platform-scoped
-            // pool — arenas sized by this platform, panels resident in ctx
-            inst.ctx
-                .with_workspace(|ws| find_critical_path_with(ws, inst.inst()))
-        })
+        }
+    }
+
+    /// Memoized CEFT critical path with single-flight dedup and
+    /// cross-request batching. Admission (hit / key follower / key leader)
+    /// is the single-flight protocol over the shard's cp slots; a key
+    /// leader then enters the shard's [`BatchCollector`]: it computes
+    /// immediately while a gather slot is free (draining any
+    /// already-queued same-platform requests into one sweep), or — once
+    /// the shard has `threads` gathers in flight — parks on its own cell
+    /// until a running gather finishes, whose completion either served it
+    /// (it was drained into that gather's window) or promoted it to lead
+    /// the next gather.
+    fn critical_path_for(&self, inst: &Arc<Interned>) -> (Arc<CriticalPath>, bool) {
+        let key = Self::cp_key(inst);
+        let shard = inst.shard.clone();
+        loop {
+            let flight = {
+                let mut st = shard.state.lock().unwrap();
+                if let Some(hit) = st.cp_cache.get(&key) {
+                    Flight::Hit(hit.clone())
+                } else if let Some(f) = st.cp_inflight.get(&key) {
+                    Flight::Follower(f.clone())
+                } else {
+                    let f = Arc::new(Inflight::new());
+                    st.cp_inflight.insert(key, f.clone());
+                    Flight::Leader(f)
+                }
+            };
+            match flight {
+                Flight::Hit(v) => return (v, true),
+                Flight::Follower(f) => {
+                    if let Some(v) = f.wait() {
+                        shard.state.lock().unwrap().cp_cache.record_dedup_hit();
+                        return (v, true);
+                    }
+                    // leader unwound; retry admission
+                }
+                Flight::Leader(cell) => {
+                    let me = PendingCp {
+                        inst: inst.clone(),
+                        key,
+                        cell: cell.clone(),
+                    };
+                    let queued = {
+                        let mut st = shard.state.lock().unwrap();
+                        // queue only past saturation: below `threads`
+                        // in-flight gathers a distinct miss still gets its
+                        // own core, as before this batcher existed
+                        if self.batch_window > 1 && st.collector.active >= self.threads {
+                            st.collector.pending.push_back(me);
+                            true
+                        } else {
+                            st.collector.active += 1;
+                            false
+                        }
+                    };
+                    if !queued {
+                        return self.run_gather(&shard, me);
+                    }
+                    match cell.wait() {
+                        // computed inside the gather that drained us
+                        Some(v) => return (v, false),
+                        // promoted to lead the next gather (our in-flight
+                        // entry was removed with the retry signal), or the
+                        // gather leader unwound — re-enter admission
+                        None => continue,
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run one gather as its leader: drain up to `batch_window - 1` queued
+    /// same-shard requests, compute all critical paths in one
+    /// [`find_critical_paths_gathered`] sweep (width 1 degenerates to the
+    /// plain fused kernel in a pooled workspace), deposit every result in
+    /// the cp cache, fan each to its single-flight cell, and hand the
+    /// collector to the next queued leader. On unwind every drained cell
+    /// (and one promoted successor) gets the retry signal before the panic
+    /// re-raises — the single-flight leader contract, extended to the
+    /// whole window.
+    fn run_gather(&self, shard: &Arc<CacheShard>, first: PendingCp) -> (Arc<CriticalPath>, bool) {
+        let mut jobs = vec![first];
+        {
+            let mut st = shard.state.lock().unwrap();
+            let extra = (self.batch_window - 1).min(st.collector.pending.len());
+            jobs.extend(st.collector.pending.drain(..extra));
+        }
+        let computed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if jobs.len() == 1 {
+                let only = &jobs[0].inst;
+                vec![only
+                    .ctx
+                    .with_workspace(|ws| find_critical_path_with(ws, only.inst()))]
+            } else {
+                let ctx = jobs[0].inst.ctx.clone();
+                let insts: Vec<InstanceRef> = jobs.iter().map(|j| j.inst.inst()).collect();
+                find_critical_paths_gathered(&ctx, &insts)
+            }
+        }));
+        match computed {
+            Ok(paths) => {
+                debug_assert_eq!(paths.len(), jobs.len());
+                let results: Vec<Arc<CriticalPath>> = paths.into_iter().map(Arc::new).collect();
+                let promoted = {
+                    let mut st = shard.state.lock().unwrap();
+                    for (job, res) in jobs.iter().zip(&results) {
+                        st.cp_cache.put(job.key, res.clone());
+                        st.cp_inflight.remove(&job.key);
+                    }
+                    st.cp_cache.record_batch(jobs.len() as u64);
+                    Self::finish_gather(&mut st)
+                };
+                for (job, res) in jobs.iter().zip(&results) {
+                    job.cell.complete(Some(res.clone()));
+                }
+                if let Some(next) = promoted {
+                    next.cell.complete(None);
+                }
+                (results[0].clone(), false)
+            }
+            Err(payload) => {
+                let promoted = {
+                    let mut st = shard.state.lock().unwrap();
+                    for job in &jobs {
+                        st.cp_inflight.remove(&job.key);
+                    }
+                    Self::finish_gather(&mut st)
+                };
+                for job in &jobs {
+                    job.cell.complete(None);
+                }
+                if let Some(next) = promoted {
+                    next.cell.complete(None);
+                }
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+
+    /// End one of the shard's running gathers: release its slot and pop
+    /// the queue head for promotion. The promoted request's in-flight
+    /// entry is removed here (under the lock) and its cell completed with
+    /// the retry signal by the caller (outside the lock); it then
+    /// re-enters admission, becomes a key leader again, finds a free
+    /// gather slot and leads the next gather — so a backlog always drains
+    /// and no parked request is stranded (every completing gather either
+    /// drained from the queue front or promotes it).
+    fn finish_gather(st: &mut ShardState) -> Option<PendingCp> {
+        st.collector.active = st.collector.active.saturating_sub(1);
+        let next = st.collector.pending.pop_front();
+        if let Some(ref n) = next {
+            st.cp_inflight.remove(&n.key);
+        }
+        next
     }
 
     /// Memoized schedule with single-flight dedup.
@@ -502,26 +779,22 @@ impl Engine {
             comp: inst.comp_hash,
             algorithm: algorithm.id(),
         };
-        self.single_flight(key, sched_slots, || {
+        self.single_flight(&inst.shard, key, sched_slots, || {
             inst.ctx
                 .with_workspace(|ws| algorithm.run_with(ws, inst.inst()))
         })
     }
 
-    fn bump<F: FnOnce(&mut Counters)>(&self, f: F) {
-        f(&mut self.state.lock().unwrap().counters);
-    }
-
     /// Execute one decoded request, producing the response body.
     pub fn handle(&self, req: Request) -> Json {
-        self.bump(|c| c.requests += 1);
+        Counters::bump(&self.counters.requests);
         let result = match req {
             Request::Ping => Ok(protocol::ok_response(vec![
                 ("pong", Json::Bool(true)),
                 ("version", Json::Num(protocol::PROTOCOL_VERSION as f64)),
             ])),
             Request::Submit { instance, platform } => {
-                self.bump(|c| c.submits += 1);
+                Counters::bump(&self.counters.submits);
                 self.intern(instance, platform).map(|inst| {
                     protocol::ok_response(vec![
                         ("id", Json::Str(protocol::handle_to_hex(inst.id))),
@@ -532,7 +805,7 @@ impl Engine {
                 })
             }
             Request::CriticalPath { target } => {
-                self.bump(|c| c.cp_requests += 1);
+                Counters::bump(&self.counters.cp_requests);
                 self.resolve(target).map(|inst| {
                     let (cp, cached) = self.critical_path_for(&inst);
                     protocol::ok_response(vec![
@@ -557,7 +830,7 @@ impl Engine {
                 })
             }
             Request::Schedule { algorithm, target } => {
-                self.bump(|c| c.schedule_requests += 1);
+                Counters::bump(&self.counters.schedule_requests);
                 self.resolve(target).map(|inst| {
                     let (s, cached) = self.schedule_for(&inst, algorithm);
                     protocol::ok_response(vec![
@@ -577,8 +850,12 @@ impl Engine {
                         let (g, p, c) = (inst.graph_hash, inst.platform_hash, inst.comp_hash);
                         let matches =
                             |k: &CacheKey| k.graph == g && k.platform == p && k.comp == c;
-                        let dropped_cp = st.cp_cache.remove_matching(&matches);
-                        let dropped_sched = st.sched_cache.remove_matching(&matches);
+                        // results live in the instance's platform shard
+                        // (state-lock-then-shard-lock is the sanctioned
+                        // order)
+                        let mut shard = inst.shard.state.lock().unwrap();
+                        let dropped_cp = shard.cp_cache.remove_matching(&matches);
+                        let dropped_sched = shard.sched_cache.remove_matching(&matches);
                         Ok(protocol::ok_response(vec![
                             ("id", Json::Str(protocol::handle_to_hex(id))),
                             ("dropped_cp", Json::Num(dropped_cp as f64)),
@@ -593,14 +870,16 @@ impl Engine {
             }
             Request::Clear => {
                 let mut st = self.state.lock().unwrap();
-                let dropped = st.instances.len()
-                    + st.ctxs.len()
-                    + st.cp_cache.len()
-                    + st.sched_cache.len();
+                let mut dropped = st.instances.len() + st.ctxs.len();
+                for shard in st.shards.values() {
+                    let s = shard.state.lock().unwrap();
+                    dropped += s.cp_cache.len() + s.sched_cache.len();
+                }
                 st.instances.clear();
                 st.ctxs.clear();
-                st.cp_cache.clear();
-                st.sched_cache.clear();
+                // dropping the shard map retires every shard's results;
+                // in-flight computations finish against their own Arcs
+                st.shards.clear();
                 Ok(protocol::ok_response(vec![(
                     "dropped",
                     Json::Num(dropped as f64),
@@ -614,7 +893,7 @@ impl Engine {
         match result {
             Ok(resp) => resp,
             Err(msg) => {
-                self.bump(|c| c.errors += 1);
+                Counters::bump(&self.counters.errors);
                 protocol::error_response(&msg)
             }
         }
@@ -627,10 +906,8 @@ impl Engine {
             Ok(Request::Shutdown) => (self.handle(Request::Shutdown), true),
             Ok(req) => (self.handle(req), false),
             Err(msg) => {
-                self.bump(|c| {
-                    c.requests += 1;
-                    c.errors += 1;
-                });
+                Counters::bump(&self.counters.requests);
+                Counters::bump(&self.counters.errors);
                 (protocol::error_response(&msg), false)
             }
         }
@@ -648,20 +925,42 @@ impl Engine {
     /// entry per distinct platform; its hits/misses are the
     /// `panel_ctx_hits`/`panel_ctx_misses` counters loadgen records), and
     /// `workspaces` aggregates the per-context pools with a deterministic
-    /// per-context breakdown (sorted by platform hash).
+    /// per-context breakdown (sorted by platform hash). The `cp_cache` /
+    /// `sched_cache` sections aggregate over the per-platform shards
+    /// (lengths and counters sum; `batch_width` is a high-water max;
+    /// `capacity` is the per-shard bound and `shards` the live shard
+    /// count), so their totals read exactly as the pre-sharding globals
+    /// did.
     pub fn stats_json(&self) -> Json {
         let st = self.state.lock().unwrap();
-        let cache_obj = |len: usize, cap: usize, s: CacheStats| {
+        let cache_obj = |len: usize, cap: usize, shards: usize, s: CacheStats| {
             Json::obj(vec![
                 ("len", Json::Num(len as f64)),
                 ("capacity", Json::Num(cap as f64)),
+                ("shards", Json::Num(shards as f64)),
                 ("hits", Json::Num(s.hits as f64)),
                 ("misses", Json::Num(s.misses as f64)),
                 ("insertions", Json::Num(s.insertions as f64)),
                 ("evictions", Json::Num(s.evictions as f64)),
                 ("dedup_hits", Json::Num(s.dedup_hits as f64)),
+                ("batched_requests", Json::Num(s.batched_requests as f64)),
+                ("batch_width", Json::Num(s.batch_width as f64)),
             ])
         };
+        // aggregate the per-platform shards (state lock before shard lock —
+        // the sanctioned order; one shard at a time)
+        let mut cp_len = 0;
+        let mut sched_len = 0;
+        let mut cp_stats = CacheStats::default();
+        let mut sched_stats = CacheStats::default();
+        let shard_count = st.shards.len();
+        for shard in st.shards.values() {
+            let s = shard.state.lock().unwrap();
+            cp_len += s.cp_cache.len();
+            sched_len += s.sched_cache.len();
+            cp_stats.merge(&s.cp_cache.stats());
+            sched_stats.merge(&s.sched_cache.stats());
+        }
         let mut per_ctx: Vec<(u64, &Arc<PlatformCtx>)> =
             st.ctxs.iter().map(|(h, ctx)| (*h, ctx)).collect();
         per_ctx.sort_by_key(|&(h, _)| h);
@@ -678,15 +977,30 @@ impl Engine {
                 ])
             })
             .collect();
-        let c = st.counters;
         protocol::ok_response(vec![
-            ("requests", Json::Num(c.requests as f64)),
-            ("errors", Json::Num(c.errors as f64)),
-            ("submits", Json::Num(c.submits as f64)),
-            ("cp_requests", Json::Num(c.cp_requests as f64)),
-            ("schedule_requests", Json::Num(c.schedule_requests as f64)),
+            (
+                "requests",
+                Json::Num(Counters::read(&self.counters.requests) as f64),
+            ),
+            (
+                "errors",
+                Json::Num(Counters::read(&self.counters.errors) as f64),
+            ),
+            (
+                "submits",
+                Json::Num(Counters::read(&self.counters.submits) as f64),
+            ),
+            (
+                "cp_requests",
+                Json::Num(Counters::read(&self.counters.cp_requests) as f64),
+            ),
+            (
+                "schedule_requests",
+                Json::Num(Counters::read(&self.counters.schedule_requests) as f64),
+            ),
             ("instances", Json::Num(st.instances.len() as f64)),
             ("threads", Json::Num(self.threads as f64)),
+            ("batch_window", Json::Num(self.batch_window as f64)),
             (
                 "workspaces",
                 Json::obj(vec![
@@ -697,23 +1011,15 @@ impl Engine {
             ),
             (
                 "panel_cache",
-                cache_obj(st.ctxs.len(), st.ctxs.capacity(), st.ctxs.stats()),
+                cache_obj(st.ctxs.len(), st.ctxs.capacity(), 1, st.ctxs.stats()),
             ),
             (
                 "cp_cache",
-                cache_obj(
-                    st.cp_cache.len(),
-                    st.cp_cache.capacity(),
-                    st.cp_cache.stats(),
-                ),
+                cache_obj(cp_len, self.cache_capacity, shard_count, cp_stats),
             ),
             (
                 "sched_cache",
-                cache_obj(
-                    st.sched_cache.len(),
-                    st.sched_cache.capacity(),
-                    st.sched_cache.stats(),
-                ),
+                cache_obj(sched_len, self.cache_capacity, shard_count, sched_stats),
             ),
         ])
     }
@@ -1197,6 +1503,141 @@ mod tests {
                 "each platform computed at least once on its own pool"
             );
         }
+    }
+
+    #[test]
+    fn engine_gathered_batch_matches_serial_dispatch() {
+        // Deterministic batching test: stage a window of parked key
+        // leaders in the shard's collector exactly as concurrent requests
+        // would, run one gather, and check every fanned-back result —
+        // values, paths, cache state, counters — against serial dispatch.
+        let engine = Engine::with_defaults();
+        let mut interned = Vec::new();
+        let mut serial = Vec::new();
+        for seed in 0..5u64 {
+            let (plat, inst) = small_instance(700 + seed);
+            serial.push(find_critical_path(inst.bind(&plat)));
+            interned.push(
+                engine
+                    .resolve(Target::Inline {
+                        instance: inst,
+                        platform: None,
+                    })
+                    .expect("inline resolve"),
+            );
+        }
+        // all five share the default platform, hence one shard
+        let shard = interned[0].shard.clone();
+        for inst in &interned[1..] {
+            assert!(Arc::ptr_eq(&inst.shard, &shard), "one shard per platform");
+        }
+        // park jobs 1.. as queued key leaders behind a saturated shard
+        // (one gather slot, held by job 0 below)
+        let mut cells = Vec::new();
+        {
+            let mut st = shard.state.lock().unwrap();
+            st.collector.active = 1;
+            for inst in &interned[1..] {
+                let key = Engine::cp_key(inst);
+                let cell = Arc::new(Inflight::new());
+                st.cp_inflight.insert(key, cell.clone());
+                st.collector.pending.push_back(PendingCp {
+                    inst: inst.clone(),
+                    key,
+                    cell: cell.clone(),
+                });
+                cells.push(cell);
+            }
+        }
+        // job 0 is the gather leader
+        let first_key = Engine::cp_key(&interned[0]);
+        let first_cell = Arc::new(Inflight::new());
+        shard
+            .state
+            .lock()
+            .unwrap()
+            .cp_inflight
+            .insert(first_key, first_cell.clone());
+        let (first, cached) = engine.run_gather(
+            &shard,
+            PendingCp {
+                inst: interned[0].clone(),
+                key: first_key,
+                cell: first_cell,
+            },
+        );
+        assert!(!cached, "a gathered computation is not a cache hit");
+        assert_eq!(*first, serial[0], "leader result == serial dispatch");
+        for (i, cell) in cells.iter().enumerate() {
+            let got = cell.wait().expect("gathered cell resolves with a result");
+            assert_eq!(*got, serial[i + 1], "queued request {i} == serial");
+        }
+        // counters: one gather of width 5, five insertions, no leftovers
+        {
+            let st = shard.state.lock().unwrap();
+            assert!(st.cp_inflight.is_empty());
+            assert!(st.collector.pending.is_empty());
+            assert_eq!(st.collector.active, 0, "the staged gather slot was released");
+            let s = st.cp_cache.stats();
+            assert_eq!(s.batched_requests, 5);
+            assert_eq!(s.batch_width, 5);
+            assert_eq!(s.insertions, 5);
+        }
+        // every result is now served from cache, bit-identically
+        for (inst, want) in interned.iter().zip(&serial) {
+            let resp = engine.handle(Request::CriticalPath {
+                target: Target::Handle(inst.id),
+            });
+            assert_eq!(resp.get("cached"), Some(&Json::Bool(true)));
+            assert_eq!(resp.get("length").and_then(Json::as_f64), Some(want.length));
+        }
+    }
+
+    #[test]
+    fn concurrent_distinct_cp_requests_match_serial_and_count_sanely() {
+        // Six threads fire six *distinct* uncached cp requests on one
+        // platform simultaneously. Whatever gather widths the race
+        // produces, every response must equal serial dispatch and the
+        // batching counters must stay coherent.
+        let engine = Arc::new(Engine::with_defaults());
+        let mut lines = Vec::new();
+        let mut expected = Vec::new();
+        for seed in 0..6u64 {
+            let (plat, inst) = small_instance(900 + seed);
+            expected.push(find_critical_path(inst.bind(&plat)).length);
+            lines.push(format!(
+                r#"{{"op":"cp","instance":{}}}"#,
+                io::instance_to_json(&inst).to_string()
+            ));
+        }
+        let barrier = Arc::new(std::sync::Barrier::new(lines.len()));
+        let handles: Vec<_> = lines
+            .into_iter()
+            .map(|line| {
+                let engine = engine.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    let (resp, _) = engine.handle_line(&line);
+                    resp.get("length").and_then(Json::as_f64).unwrap()
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), expected[i], "request {i}");
+        }
+        let stats = engine.stats_json();
+        let cp = stats.get("cp_cache").unwrap();
+        let get = |k: &str| cp.get(k).and_then(Json::as_f64).unwrap();
+        assert_eq!(get("insertions"), 6.0, "each distinct key computed once");
+        assert!(get("batched_requests") <= 6.0);
+        assert!(get("batch_width") <= 6.0);
+        assert!(
+            get("batched_requests") == 0.0 || get("batched_requests") >= get("batch_width"),
+            "batched_requests {} vs batch_width {}",
+            get("batched_requests"),
+            get("batch_width")
+        );
     }
 
     #[test]

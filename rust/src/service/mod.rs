@@ -23,7 +23,10 @@
 //!   intern as shared [`crate::model::PlatformCtx`] execution contexts, so
 //!   the CEFT kernel's `P × P` communication panels are computed once per
 //!   distinct platform (the stats endpoint's `panel_cache` section) and
-//!   scratch arenas pool per platform shape.
+//!   scratch arenas pool per platform shape. The memo caches are sharded
+//!   per platform context (no global lock on the hit path), and
+//!   same-platform critical-path misses gather into one multi-instance
+//!   min-plus sweep (the `batched_requests` / `batch_width` counters).
 //!
 //! Determinism contract: every algorithm in the registry breaks ties
 //! deterministically, and the JSON codec round-trips `f64` bit-exactly, so

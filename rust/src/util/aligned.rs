@@ -1,0 +1,278 @@
+//! 32-byte-aligned `f64` buffers for the SIMD min-plus lanes.
+//!
+//! The hand-vectorised CEFT kernel ([`crate::cp::ceft::simd`]) streams
+//! 4-wide `f64` lanes over the resident communication panels and the DP
+//! table. `Vec<f64>` only guarantees 8-byte alignment, so a lane load can
+//! straddle a cache-line boundary and split into two transfers. An
+//! [`AlignedVec`] is a growable `f64` buffer whose data pointer is always
+//! aligned to [`ALIGN`] (32 bytes — one AVX lane, half a cache line), so
+//! lane loads that start at the buffer base never straddle a line.
+//!
+//! The implementation is entirely safe code: the buffer over-allocates a
+//! plain `Vec<f64>` by up to [`ALIGN`]`/8 - 1` lead-in elements and exposes
+//! the aligned window `buf[off..off + len]` through `Deref<Target = [f64]>`.
+//! When the backing `Vec` reallocates (and may land at a different
+//! alignment), the window is re-based and live elements are shifted with
+//! `copy_within` — `O(len)` on growth only, exactly like `Vec`'s own
+//! realloc copy. Alignment is re-asserted after every resize in debug
+//! builds ([`AlignedVec::assert_aligned`]).
+//!
+//! Semantics mirror the `Vec` subset the workspace buffers use:
+//! `clear` / `resize` / `extend_from_slice` keep capacity, lengths grow
+//! monotonically to the high-water mark, and equality compares the live
+//! window (so tests can diff an `AlignedVec` table against a `Vec` table).
+
+use std::ops::{Deref, DerefMut};
+
+/// Alignment of the live window, in bytes: one 4-lane `f64` SIMD register.
+pub const ALIGN: usize = 32;
+
+/// Maximum lead-in elements needed to realign an 8-byte-aligned base:
+/// `ALIGN / size_of::<f64>() - 1`.
+const LEAD: usize = ALIGN / std::mem::size_of::<f64>() - 1;
+
+/// A growable `f64` buffer whose live window is always 32-byte aligned.
+/// See the module docs for the layout and the safety-free realignment
+/// strategy.
+#[derive(Default)]
+pub struct AlignedVec {
+    /// backing storage; the live window is `buf[off..off + len]`
+    buf: Vec<f64>,
+    /// lead-in elements skipped so the window base is [`ALIGN`]-aligned
+    off: usize,
+    /// live elements
+    len: usize,
+}
+
+impl AlignedVec {
+    /// New empty buffer (no allocation until first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Buffer of `len` copies of `value`, aligned.
+    pub fn with_len(len: usize, value: f64) -> Self {
+        let mut v = Self::new();
+        v.resize(len, value);
+        v
+    }
+
+    /// Lead-in offset (elements) that aligns `buf[off..]` to [`ALIGN`].
+    fn aligned_off(buf: &[f64]) -> usize {
+        let addr = buf.as_ptr() as usize;
+        // Vec<f64> is always 8-byte aligned, so the remainder is a whole
+        // number of elements in 0..=LEAD
+        (ALIGN - addr % ALIGN) % ALIGN / std::mem::size_of::<f64>()
+    }
+
+    /// Grow the backing store to hold `total` live elements, re-basing the
+    /// window (and moving the live prefix) if reallocation changed the
+    /// base alignment.
+    fn reserve_total(&mut self, total: usize) {
+        if self.buf.len() < total + LEAD {
+            self.buf.resize(total + LEAD, 0.0);
+            let off = Self::aligned_off(&self.buf);
+            if off != self.off {
+                if self.len > 0 {
+                    self.buf.copy_within(self.off..self.off + self.len, off);
+                }
+                self.off = off;
+            }
+        }
+    }
+
+    /// Drop every element, keeping capacity (like `Vec::clear`).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Resize the live window to `new_len`, filling new elements with
+    /// `value` (like `Vec::resize`).
+    pub fn resize(&mut self, new_len: usize, value: f64) {
+        self.reserve_total(new_len);
+        if new_len > self.len {
+            self.buf[self.off + self.len..self.off + new_len].fill(value);
+        }
+        self.len = new_len;
+        self.assert_aligned();
+    }
+
+    /// Append a slice (like `Vec::extend_from_slice`).
+    pub fn extend_from_slice(&mut self, xs: &[f64]) {
+        let old = self.len;
+        self.reserve_total(old + xs.len());
+        self.buf[self.off + old..self.off + old + xs.len()].copy_from_slice(xs);
+        self.len = old + xs.len();
+        self.assert_aligned();
+    }
+
+    /// Live elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the window is empty.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Elements the buffer can hold without reallocating — the capacity
+    /// gauge `Workspace::capacity_hint` and the reuse tests read.
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity().saturating_sub(LEAD)
+    }
+
+    /// The live window as a slice (also available through `Deref`).
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    /// The live window as a mutable slice.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.buf[self.off..self.off + self.len]
+    }
+
+    /// Debug-build check of the alignment invariant: a non-empty window
+    /// always starts on an [`ALIGN`]-byte boundary.
+    #[inline]
+    pub fn assert_aligned(&self) {
+        debug_assert!(
+            self.len == 0 || self.as_slice().as_ptr() as usize % ALIGN == 0,
+            "AlignedVec window lost its {ALIGN}-byte alignment"
+        );
+    }
+}
+
+impl Clone for AlignedVec {
+    /// Clone by re-aligning against the new allocation's base — a derived
+    /// clone would reuse the old offset on a differently-aligned buffer.
+    fn clone(&self) -> Self {
+        let mut v = Self::new();
+        v.extend_from_slice(self.as_slice());
+        v
+    }
+}
+
+impl Deref for AlignedVec {
+    type Target = [f64];
+
+    #[inline]
+    fn deref(&self) -> &[f64] {
+        self.as_slice()
+    }
+}
+
+impl DerefMut for AlignedVec {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [f64] {
+        self.as_mut_slice()
+    }
+}
+
+impl PartialEq for AlignedVec {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<f64>> for AlignedVec {
+    fn eq(&self, other: &Vec<f64>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<AlignedVec> for Vec<f64> {
+    fn eq(&self, other: &AlignedVec) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for AlignedVec {
+    /// Print the live window only (the lead-in is uninitialised noise).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.as_slice()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_is_aligned_across_growth() {
+        let mut v = AlignedVec::new();
+        for n in [1usize, 3, 4, 5, 31, 32, 1000, 4096] {
+            v.resize(n, 1.5);
+            assert_eq!(v.len(), n);
+            assert_eq!(v.as_slice().as_ptr() as usize % ALIGN, 0, "len {n}");
+            assert!(v.iter().all(|&x| x == 1.5 || x == 0.0));
+        }
+    }
+
+    #[test]
+    fn resize_preserves_prefix_and_fills_suffix() {
+        let mut v = AlignedVec::new();
+        v.resize(4, 2.0);
+        v[0] = 9.0;
+        // grow far enough to force reallocation (and possibly re-basing)
+        v.resize(10_000, 7.0);
+        assert_eq!(v[0], 9.0);
+        assert_eq!(&v[1..4], &[2.0, 2.0, 2.0]);
+        assert!(v[4..].iter().all(|&x| x == 7.0));
+        assert_eq!(v.as_slice().as_ptr() as usize % ALIGN, 0);
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut v = AlignedVec::new();
+        v.resize(1024, 0.0);
+        let cap = v.capacity();
+        assert!(cap >= 1024);
+        v.clear();
+        assert!(v.is_empty());
+        assert_eq!(v.capacity(), cap);
+        // refilling after clear is still aligned
+        v.resize(8, 3.0);
+        assert_eq!(v.as_slice().as_ptr() as usize % ALIGN, 0);
+    }
+
+    #[test]
+    fn extend_from_slice_appends_aligned() {
+        let mut v = AlignedVec::new();
+        let mut expect = Vec::new();
+        for chunk in 0..50 {
+            let xs: Vec<f64> = (0..7).map(|i| (chunk * 7 + i) as f64).collect();
+            v.extend_from_slice(&xs);
+            expect.extend_from_slice(&xs);
+            assert_eq!(v.as_slice().as_ptr() as usize % ALIGN, 0, "chunk {chunk}");
+        }
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn clone_realigns_on_the_new_allocation() {
+        let mut a = AlignedVec::new();
+        a.extend_from_slice(&[5.0, 6.0, 7.0, 8.0, 9.0]);
+        let b = a.clone();
+        assert_eq!(a, b);
+        assert_eq!(b.as_slice().as_ptr() as usize % ALIGN, 0);
+    }
+
+    #[test]
+    fn equality_against_vec_and_self() {
+        let mut a = AlignedVec::new();
+        a.extend_from_slice(&[1.0, 2.0, 3.0]);
+        let mut b = AlignedVec::new();
+        b.resize(3, 0.0);
+        b.copy_from_slice(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, b);
+        assert_eq!(a, vec![1.0, 2.0, 3.0]);
+        assert_eq!(vec![1.0, 2.0, 3.0], a);
+        b[2] = 4.0;
+        assert!(a != b);
+    }
+}

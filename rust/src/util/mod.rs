@@ -21,7 +21,11 @@
 //!   matrices; the content addresses used by the service's intern tables
 //!   and by [`crate::model::PlatformCtx`] (it lives here, below the model
 //!   layer, so `model` never depends upward on `service`).
+//! * [`aligned`] — 32-byte-aligned `f64` buffers for the SIMD min-plus
+//!   lanes: the resident communication panels and the workspace DP tables
+//!   allocate through it so lane loads never straddle a cache line.
 
+pub mod aligned;
 pub mod bench;
 pub mod cli;
 pub mod csv;

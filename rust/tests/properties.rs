@@ -9,10 +9,13 @@
 //! bit-identical to the pre-refactor compositional pipeline rebuilt from
 //! the scalar DP and the public rank/list primitives.
 
+use ceft::cp::ceft::simd::KernelDispatch;
 use ceft::cp::ceft::{
-    ceft_table, ceft_table_batched_into, ceft_table_into, ceft_table_rev_into,
+    ceft_table, ceft_table_batched_into, ceft_table_batched_into_dispatched, ceft_table_into,
+    ceft_table_into_dispatched, ceft_table_rev_into, ceft_table_rev_into_dispatched,
     ceft_table_rev_scalar_into, ceft_table_scalar, ceft_table_scalar_into,
     critical_path_from_table, find_critical_path, find_critical_path_with,
+    find_critical_paths_gathered_dispatched,
 };
 use ceft::cp::cpmin::cp_min_cost;
 use ceft::cp::minexec::min_exec_critical_path;
@@ -479,6 +482,96 @@ fn prop_batched_kernel_bit_identical_to_scalar() {
                 return Err(format!(
                     "ctx-resident fused kernel diverged from scalar (seed {seed})"
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simd_kernel_bit_identical_to_scalar() {
+    // The hand-vectorised lanes must reproduce the scalar-recurrence
+    // oracle bit for bit — values, backpointers, tie-breaking — across the
+    // class counts the lane structure cares about: below one lane (1, 2,
+    // 3), exactly one lane (4), lane + tail (5, 7, 9), whole lanes (8,
+    // 16). Platforms include nonzero startup and heterogeneous links, and
+    // the ctx-bound runs exercise the resident panels' 0/+inf diagonal
+    // (`data / +inf == +0.0`) through both the fused and the batched
+    // matrix-matrix kernel, plus the gathered multi-instance sweep.
+    check_property(
+        "SIMD lanes == scalar oracle over P in {1,2,3,4,5,7,8,9,16}",
+        default_cases(),
+        0xCEF7_0025,
+        |rng| {
+            let p = *rng.choose(&[1usize, 2, 3, 4, 5, 7, 8, 9, 16]);
+            let plat = if rng.chance(0.5) {
+                Platform::uniform(p, rng.uniform(0.2, 5.0), rng.uniform(0.0, 2.0))
+            } else {
+                Platform::random_links(p, rng, 0.2, 5.0, 0.0, 2.0)
+            };
+            let params = RggParams {
+                n: rng.range_inclusive(2, 100),
+                out_degree: rng.range_inclusive(1, 5),
+                ccr: *rng.choose(&[0.001, 1.0, 10.0]),
+                alpha: rng.uniform(0.1, 1.0),
+                beta_pct: rng.uniform(0.0, 100.0),
+                gamma: rng.uniform(0.0, 1.0),
+            };
+            let inst = generate(
+                &params,
+                &CostModel::Classic { beta: 0.5 },
+                &plat,
+                rng.next_u64(),
+            );
+            (inst, plat)
+        },
+        |(inst, plat)| {
+            let mut sw = Workspace::new();
+            let mut vw = Workspace::new();
+            // fused kernel, workspace-local panels, both orientations
+            ceft_table_scalar_into(&mut sw, inst.bind(plat));
+            ceft_table_into_dispatched(&mut vw, inst.bind(plat), KernelDispatch::Simd);
+            if vw.table != sw.table {
+                return Err("forward SIMD values diverged".into());
+            }
+            if vw.backptr != sw.backptr {
+                return Err("forward SIMD backpointers diverged".into());
+            }
+            ceft_table_rev_scalar_into(&mut sw, inst.bind(plat));
+            ceft_table_rev_into_dispatched(&mut vw, inst.bind(plat), KernelDispatch::Simd);
+            if vw.table != sw.table {
+                return Err("reverse SIMD values diverged".into());
+            }
+            if vw.backptr != sw.backptr {
+                return Err("reverse SIMD backpointers diverged".into());
+            }
+            // ctx-resident panels: fused + batched under pinned SIMD
+            let ctx = PlatformCtx::new(plat.clone());
+            ceft_table_scalar_into(&mut sw, inst.bind(plat));
+            ceft_table_into_dispatched(&mut vw, inst.bind_ctx(&ctx), KernelDispatch::Simd);
+            if vw.table != sw.table || vw.backptr != sw.backptr {
+                return Err("ctx-resident SIMD kernel diverged".into());
+            }
+            for &b in &[1usize, 5, 8] {
+                ceft_table_batched_into_dispatched(
+                    &mut vw,
+                    inst.bind_ctx(&ctx),
+                    b,
+                    KernelDispatch::Simd,
+                );
+                if vw.table != sw.table || vw.backptr != sw.backptr {
+                    return Err(format!("batched SIMD kernel diverged at B={b}"));
+                }
+            }
+            // the gathered multi-instance sweep (instance twice in one
+            // window exercises cross-instance row gathering)
+            let bound = [inst.bind_ctx(&ctx), inst.bind_ctx(&ctx)];
+            let serial = find_critical_path(inst.bind(plat));
+            for dispatch in [KernelDispatch::Simd, KernelDispatch::Scalar] {
+                let gathered = find_critical_paths_gathered_dispatched(&ctx, &bound, dispatch);
+                if gathered.len() != 2 || gathered[0] != serial || gathered[1] != serial {
+                    return Err(format!("gathered sweep diverged under {dispatch:?}"));
+                }
             }
             Ok(())
         },

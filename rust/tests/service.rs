@@ -190,6 +190,17 @@ fn platform_mix_interns_one_ctx_per_platform() {
         .and_then(Json::as_arr)
         .expect("workspaces carry a per_ctx breakdown");
     assert_eq!(per_ctx.len(), 2);
+    // the memo caches are sharded per platform ctx: two live shards, and
+    // the cross-request batching counters are present (zero on this
+    // schedule-only, serially-driven mix)
+    let sched_cache = stats.get("sched_cache").expect("sched_cache section");
+    assert_eq!(sched_cache.get("shards").and_then(Json::as_f64), Some(2.0));
+    let cp_cache = stats.get("cp_cache").expect("cp_cache section");
+    assert_eq!(
+        cp_cache.get("batched_requests").and_then(Json::as_f64),
+        Some(0.0)
+    );
+    assert_eq!(cp_cache.get("batch_width").and_then(Json::as_f64), Some(0.0));
     // clear drops the contexts too; the next submit re-interns
     let (cleared, _) = engine.handle_line(r#"{"op":"clear"}"#);
     assert_eq!(cleared.get("ok"), Some(&Json::Bool(true)));
