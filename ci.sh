@@ -72,6 +72,10 @@ done
 ./target/release/repro request --addr "$ADDR" --op schedule --algorithm CEFT-CPOP --n 64 --p 4 \
   | grep -q '"cached":true'
 ./target/release/repro request --addr "$ADDR" --op stats
+# telemetry surfacing: the trace op must render the full 8-stage table,
+# and the metrics op the Prometheus-style exposition
+./target/release/repro request --addr "$ADDR" --op trace --limit 4 | grep -q 'queue_wait'
+./target/release/repro request --addr "$ADDR" --op metrics | grep -q 'ceft_stage_latency_seconds'
 ./target/release/repro request --addr "$ADDR" --op shutdown
 wait "$SERVER_PID"
 trap - EXIT
@@ -100,6 +104,30 @@ if ! grep -q '"batch_efficiency"' BENCH_service.json; then
   echo "BENCH_service.json lacks the batch-efficiency field (cross-request batching unmeasured)"
   exit 1
 fi
+# Telemetry fields: the regenerated report must carry the per-stage
+# percentiles (loadgen itself already fails if any always-on stage
+# recorded no samples) and the telemetry on/off A/B overhead number.
+if ! grep -q '"stages"' BENCH_service.json; then
+  echo "BENCH_service.json lacks the per-stage latency section"
+  exit 1
+fi
+if ! grep -q '"telemetry_overhead_pct"' BENCH_service.json; then
+  echo "BENCH_service.json lacks the telemetry A/B overhead field"
+  exit 1
+fi
+if ! grep -q '"p99_us"' BENCH_service.json; then
+  echo "BENCH_service.json stage histograms carry no percentile fields"
+  exit 1
+fi
+
+echo "== loadgen smoke with telemetry disabled =="
+# CEFT_TELEMETRY=off must leave every hook a no-op end to end: the replay
+# still succeeds, and the report (kept out of BENCH_service.json — this is
+# a functional check, not the tracked measurement) says telemetry off.
+CEFT_TELEMETRY=off ./target/release/repro loadgen --n 64 --p 4 --count 8 \
+  --rate 200 --duration 1 --json-out BENCH_telemetry_off.json
+grep -q '"telemetry":"off"' BENCH_telemetry_off.json
+rm -f BENCH_telemetry_off.json
 
 echo "== service throughput bench (smoke) =="
 CEFT_BENCH_FAST=1 cargo bench --bench service_throughput
@@ -122,6 +150,12 @@ if ! grep -q '"cells_per_s"' BENCH_kernel.json; then
 fi
 if grep -q '"n":0' BENCH_kernel.json; then
   echo "BENCH_kernel.json still carries the schema placeholder — bench produced no measurement"
+  exit 1
+fi
+# the telemetry on/off kernel rows must be present: the per-dispatch
+# KernelTimer cost is tracked alongside the throughput trajectory
+if ! grep -q '"telemetry"' BENCH_kernel.json; then
+  echo "BENCH_kernel.json lacks the telemetry on/off A/B section"
   exit 1
 fi
 

@@ -7,16 +7,19 @@
 //! (env-dispatched over resident `PlatformCtx` panels), `simd/*` /
 //! `forced_scalar_lanes/*` (lane implementation pinned explicitly,
 //! resident panels — the pair the SIMD speedup is read from),
-//! `batched_b8/*` (the min-plus matrix-matrix DP, chunk size 8) and
-//! `scalar/*` (the scalar-recurrence oracle) rows. Protocol and block-size
-//! rationale: EXPERIMENTS.md §Min-plus kernel, §Platform contexts and
-//! §SIMD dispatch. `CEFT_BENCH_FAST=1` is the CI smoke mode (`ci.sh`,
+//! `batched_b8/*` (the min-plus matrix-matrix DP, chunk size 8),
+//! `scalar/*` (the scalar-recurrence oracle) and `telemetry_overhead/*`
+//! (fused kernel with the `crate::obs` KernelTimer forced on vs off — the
+//! per-dispatch hook cost) rows. Protocol and block-size rationale:
+//! EXPERIMENTS.md §Min-plus kernel, §Platform contexts, §SIMD dispatch
+//! and §Telemetry. `CEFT_BENCH_FAST=1` is the CI smoke mode (`ci.sh`,
 //! which runs it under both `CEFT_FORCE_SCALAR` settings).
 //!
 //! Besides the CSV every bench appends, this bench writes the repo-root
 //! `BENCH_kernel.json` — per-case cells/s for the `scalar`, `simd` and
-//! `batched_b8` rows — seeding the kernel-throughput trajectory across
-//! PRs (the acceptance gauge is `simd >= scalar` at `P >= 8`).
+//! `batched_b8` rows plus the `telemetry` on/off pair — seeding the
+//! kernel-throughput trajectory across PRs (the acceptance gauge is
+//! `simd >= scalar` at `P >= 8`).
 
 use ceft::cp::ceft::simd::KernelDispatch;
 use ceft::cp::ceft::{
@@ -96,6 +99,35 @@ fn main() {
             ceft_table_rev_scalar_into(&mut ws, iref);
             black_box(ws.table.last().copied());
         });
+        // telemetry on/off A/B around the fused kernel: the KernelTimer
+        // (two clock reads + three relaxed atomics per dispatch) is the
+        // only per-call telemetry hook on this path, so the pair bounds
+        // its cost; the process switch is restored afterwards so the
+        // remaining rows keep the environment's setting
+        let prev_telemetry = ceft::obs::enabled();
+        ceft::obs::set_enabled(true);
+        let tel_on = b.case_with_elements(
+            &format!("telemetry_overhead/on_n{n}_p{p}"),
+            Some(cells),
+            || {
+                ceft_table_into(&mut ws, cref);
+                black_box(ws.table.last().copied());
+            },
+        );
+        ceft::obs::set_enabled(false);
+        let tel_off = b.case_with_elements(
+            &format!("telemetry_overhead/off_n{n}_p{p}"),
+            Some(cells),
+            || {
+                ceft_table_into(&mut ws, cref);
+                black_box(ws.table.last().copied());
+            },
+        );
+        ceft::obs::set_enabled(prev_telemetry);
+        let (tel_on_rate, tel_off_rate) = (
+            tel_on.throughput().unwrap_or(0.0),
+            tel_off.throughput().unwrap_or(0.0),
+        );
         report_cases.push(Json::obj(vec![
             ("n", Json::Num(n as f64)),
             ("p", Json::Num(p as f64)),
@@ -107,6 +139,21 @@ fn main() {
                     (
                         "batched_b8",
                         Json::Num(batched_row.throughput().unwrap_or(0.0)),
+                    ),
+                ]),
+            ),
+            (
+                "telemetry",
+                Json::obj(vec![
+                    ("cells_per_s_on", Json::Num(tel_on_rate)),
+                    ("cells_per_s_off", Json::Num(tel_off_rate)),
+                    (
+                        "overhead_pct",
+                        Json::Num(if tel_on_rate > 0.0 {
+                            (tel_off_rate / tel_on_rate - 1.0) * 100.0
+                        } else {
+                            0.0
+                        }),
                     ),
                 ]),
             ),

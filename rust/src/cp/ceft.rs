@@ -318,6 +318,8 @@ fn ceft_dp_kernel_lanes<K: LaneKernel>(ws: &mut Workspace, inst: InstanceRef, re
     let costs = inst.costs;
     let v = inst.n();
     let p = inst.p();
+    // cells/s attribution per dispatch path (no-op unless telemetry is on)
+    let _obs = crate::obs::kernel_timer(K::PATH, (graph.num_edges() * p * p) as u64);
     let Workspace {
         table,
         backptr,
@@ -513,6 +515,10 @@ fn ceft_table_batched_lanes<K: LaneKernel>(ws: &mut Workspace, inst: InstanceRef
     let costs = inst.costs;
     let v = inst.n();
     let p = inst.p();
+    let _obs = crate::obs::kernel_timer(
+        crate::obs::KernelPath::Batched,
+        (graph.num_edges() * p * p) as u64,
+    );
     let (sp, bp) = (ctx.panel_startup(), ctx.panel_bw());
     let Workspace {
         table,
@@ -632,6 +638,8 @@ fn gathered_lanes<K: LaneKernel>(ctx: &PlatformCtx, insts: &[InstanceRef]) -> Ve
     if insts.is_empty() {
         return Vec::new();
     }
+    let gathered_cells: usize = insts.iter().map(|i| i.graph.num_edges() * p * p).sum();
+    let _obs = crate::obs::kernel_timer(crate::obs::KernelPath::Gathered, gathered_cells as u64);
     let (sp, bp) = (ctx.panel_startup(), ctx.panel_bw());
     // task-row offset of each instance inside the concatenated DP buffers
     let mut offs = Vec::with_capacity(insts.len());

@@ -74,6 +74,11 @@ impl KernelDispatch {
 /// `(min_l krow[l] + (S[l] + data / B[l]), argmin_l)` with the scalar
 /// path's lowest-`l` tie-break.
 pub(crate) trait LaneKernel {
+    /// Telemetry attribution for the fused per-instance kernel driver
+    /// (`crate::obs` cells/s counters); the batched and gathered drivers
+    /// attribute to their own paths regardless of lane choice.
+    const PATH: crate::obs::KernelPath;
+
     fn min_plus_row(krow: &[f64], srow: &[f64], brow: &[f64], data: f64) -> (f64, usize);
 }
 
@@ -82,6 +87,8 @@ pub(crate) trait LaneKernel {
 pub(crate) struct ScalarLanes;
 
 impl LaneKernel for ScalarLanes {
+    const PATH: crate::obs::KernelPath = crate::obs::KernelPath::Scalar;
+
     #[inline(always)]
     fn min_plus_row(krow: &[f64], srow: &[f64], brow: &[f64], data: f64) -> (f64, usize) {
         let mut best = f64::INFINITY;
@@ -102,6 +109,8 @@ impl LaneKernel for ScalarLanes {
 pub(crate) struct SimdLanes;
 
 impl LaneKernel for SimdLanes {
+    const PATH: crate::obs::KernelPath = crate::obs::KernelPath::Simd;
+
     #[inline(always)]
     fn min_plus_row(krow: &[f64], srow: &[f64], brow: &[f64], data: f64) -> (f64, usize) {
         let p = krow.len();

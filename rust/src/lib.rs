@@ -60,6 +60,12 @@
 //!   over stdin/stdout or TCP (`repro serve` / `repro request` /
 //!   `repro loadgen`). This is the seam the batch algorithms plug into to
 //!   serve streams of small online requests instead of one offline sweep.
+//! * [`obs`] — zero-dependency telemetry: the request-lifecycle stage
+//!   taxonomy, per-thread lock-free trace recorders, log-linear latency
+//!   histograms with exact percentile extraction, and kernel-path cells/s
+//!   attribution. Surfaced through the service's `trace` / `metrics` ops
+//!   and `repro loadgen`; `CEFT_TELEMETRY=off` turns every hook into a
+//!   branch-predictable no-op (EXPERIMENTS.md §Telemetry).
 //! * [`util`] — substrates built from scratch for this offline image:
 //!   deterministic RNG, statistics, a thread pool, CSV / JSON writers, a
 //!   micro-benchmark harness and a property-test harness.
@@ -95,6 +101,7 @@ pub mod exp;
 pub mod graph;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod platform;
 pub mod runtime;
 pub mod sched;

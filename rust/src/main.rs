@@ -11,16 +11,22 @@
 //! * `repro gengraph` — emit a generated instance as JSON or DOT.
 //! * `repro runtime-check` — load the PJRT artifacts and cross-validate the
 //!   accelerated CEFT backend against the pure-rust one.
-//! * `repro serve` — run the online scheduling engine (stdin/stdout or TCP).
-//! * `repro request` — send one protocol request to a running server.
+//! * `repro serve` — run the online scheduling engine (stdin/stdout or TCP);
+//!   `--metrics-addr` adds a Prometheus-style HTTP metrics endpoint.
+//! * `repro request` — send one protocol request to a running server
+//!   (`--op trace` pretty-prints the per-stage latency tables, `--op
+//!   metrics` dumps the text exposition).
 //! * `repro loadgen` — replay generated instances against an in-process
 //!   engine at a target rate; reports requests/sec, p50/p95/p99 per-request
 //!   latency, cache hit rate, panel-context counters
 //!   (`--platform-mix K` round-robins K distinct platforms across the mix
 //!   to exercise the per-platform panel cache) and cross-request
 //!   batch-efficiency (`--cp-share` controls how much of the mix is
-//!   critical-path traffic, the op the engine gathers), and writes
-//!   `BENCH_service.json` so the perf trajectory is tracked across PRs.
+//!   critical-path traffic, the op the engine gathers), validates the
+//!   telemetry stage taxonomy, runs a telemetry on/off A/B throughput
+//!   pass, and writes `BENCH_service.json` (including the per-stage
+//!   latency percentiles and `telemetry_overhead_pct`) so the perf
+//!   trajectory is tracked across PRs.
 
 use ceft::coordinator::{Coordinator, EXPERIMENT_IDS};
 use ceft::cp::ceft::find_critical_path;
@@ -33,7 +39,7 @@ use ceft::service::{serve_stdio, Engine, EngineConfig, Request, Server, Target};
 use ceft::util::cli::Args;
 use ceft::util::json::Json;
 use ceft::util::pool;
-use std::io::{BufRead as _, BufReader, Write as _};
+use std::io::{BufRead as _, BufReader, Read as _, Write as _};
 use std::sync::Arc;
 
 fn main() {
@@ -298,6 +304,11 @@ fn cmd_serve(tokens: &[String]) -> i32 {
             "batch-window",
             Some("8"),
             "max critical-path requests per gathered cross-request sweep (1 disables)",
+        )
+        .opt(
+            "metrics-addr",
+            None,
+            "HTTP listen address for Prometheus-style metrics (e.g. 127.0.0.1:9077)",
         );
     let p = parse_or_exit(args, tokens);
     let cache_capacity: usize = num_or_exit(&p, "cache-capacity", None);
@@ -306,11 +317,21 @@ fn cmd_serve(tokens: &[String]) -> i32 {
         intern_capacity: cache_capacity,
         threads: num_or_exit(&p, "threads", Some(pool::default_threads())),
         batch_window: num_or_exit(&p, "batch-window", None),
+        telemetry: None,
     };
-    let engine = Engine::new(config);
+    let engine = Arc::new(Engine::new(config));
+    if let Some(maddr) = p.get("metrics-addr") {
+        match serve_metrics(engine.clone(), maddr) {
+            Ok(a) => eprintln!("repro serve: metrics on http://{a}/metrics"),
+            Err(e) => {
+                eprintln!("metrics bind {maddr}: {e}");
+                return 1;
+            }
+        }
+    }
     match p.get("addr") {
         Some(addr) => {
-            let server = match Server::bind(Arc::new(engine), addr) {
+            let server = match Server::bind(engine, addr) {
                 Ok(s) => s,
                 Err(e) => {
                     eprintln!("bind {addr}: {e}");
@@ -339,6 +360,33 @@ fn cmd_serve(tokens: &[String]) -> i32 {
     }
 }
 
+/// Minimal HTTP/1.0 metrics endpoint on its own listener thread: every
+/// request, whatever the path, gets the engine's current Prometheus-style
+/// exposition. One short-lived connection per scrape — the protocol both
+/// Prometheus' scraper and `curl` speak — so there is no keep-alive state
+/// to manage, and a stuck client can at worst hold one accept slot.
+fn serve_metrics(engine: Arc<Engine>, addr: &str) -> std::io::Result<std::net::SocketAddr> {
+    let listener = std::net::TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { continue };
+            // best-effort drain of the request head; the response does not
+            // depend on it
+            let mut head = [0u8; 1024];
+            let _ = stream.read(&mut head);
+            let body = engine.prometheus_text();
+            let resp = format!(
+                "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                 Content-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            let _ = stream.write_all(resp.as_bytes());
+        }
+    });
+    Ok(local)
+}
+
 /// Send one line to a TCP server and read one response line.
 fn send_request(addr: &str, line: &str) -> Result<String, String> {
     let mut stream = std::net::TcpStream::connect(addr)
@@ -362,9 +410,14 @@ fn cmd_request(tokens: &[String]) -> i32 {
         .opt(
             "op",
             Some("schedule"),
-            "ping | submit | cp | schedule | stats | evict | clear | shutdown",
+            "ping | submit | cp | schedule | stats | trace | metrics | evict | clear | shutdown",
         )
         .opt("algorithm", Some("CEFT-CPOP"), "scheduler for --op schedule")
+        .opt(
+            "limit",
+            Some("8"),
+            "slowest/most-recent traces to return for --op trace",
+        )
         .opt(
             "id",
             None,
@@ -394,6 +447,10 @@ fn cmd_request(tokens: &[String]) -> i32 {
     let req = match op.as_str() {
         "ping" => Request::Ping,
         "stats" => Request::Stats,
+        "trace" => Request::Trace {
+            limit: num_or_exit(&parsed, "limit", None),
+        },
+        "metrics" => Request::Metrics,
         "clear" => Request::Clear,
         "shutdown" => Request::Shutdown,
         "evict" => match parsed.get("id") {
@@ -435,16 +492,89 @@ fn cmd_request(tokens: &[String]) -> i32 {
     };
     let line = ceft::service::request_to_json(&req).to_string();
     match send_request(parsed.req("addr"), &line) {
-        Ok(resp) => {
-            println!("{resp}");
-            match Json::parse(&resp) {
-                Ok(j) if j.get("ok") == Some(&Json::Bool(true)) => 0,
-                _ => 1,
+        Ok(resp) => match Json::parse(&resp) {
+            Ok(j) if j.get("ok") == Some(&Json::Bool(true)) => {
+                // human-oriented renderings for the observability ops;
+                // every other response is already a one-line summary
+                match op.as_str() {
+                    "trace" => print_trace(&j),
+                    "metrics" => match j.get("text").and_then(Json::as_str) {
+                        Some(text) => print!("{text}"),
+                        None => println!("{resp}"),
+                    },
+                    _ => println!("{resp}"),
+                }
+                0
             }
-        }
+            _ => {
+                println!("{resp}");
+                1
+            }
+        },
         Err(e) => {
             eprintln!("{e}");
             1
+        }
+    }
+}
+
+/// Render a `trace` response as stage-latency and kernel-path tables plus
+/// the slowest request breakdowns (the raw JSON is a `stats`-sized blob;
+/// the table is what a human scanning for a regression wants).
+fn print_trace(resp: &Json) {
+    let field = |j: &Json, k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    println!(
+        "telemetry: {}",
+        resp.get("telemetry").and_then(Json::as_str).unwrap_or("?")
+    );
+    let mut stage_table = ceft::util::csv::Table::new(vec![
+        "stage", "count", "p50_us", "p95_us", "p99_us", "max_us", "mean_us",
+    ]);
+    if let Some(stages) = resp.get("stages") {
+        for stage in ceft::obs::Stage::ALL {
+            let Some(h) = stages.get(stage.name()) else {
+                continue;
+            };
+            stage_table.push_row(vec![
+                stage.name().to_string(),
+                format!("{}", field(h, "count")),
+                format!("{:.1}", field(h, "p50_us")),
+                format!("{:.1}", field(h, "p95_us")),
+                format!("{:.1}", field(h, "p99_us")),
+                format!("{:.1}", field(h, "max_us")),
+                format!("{:.1}", field(h, "mean_us")),
+            ]);
+        }
+    }
+    print!("{}", stage_table.to_ascii());
+    if let Some(paths) = resp.get("kernel_paths") {
+        let mut path_table =
+            ceft::util::csv::Table::new(vec!["kernel_path", "calls", "cells", "cells_per_s"]);
+        for p in ceft::obs::KernelPath::ALL {
+            let Some(k) = paths.get(p.name()) else {
+                continue;
+            };
+            path_table.push_row(vec![
+                p.name().to_string(),
+                format!("{}", field(k, "calls")),
+                format!("{}", field(k, "cells")),
+                format!("{:.3e}", field(k, "cells_per_s")),
+            ]);
+        }
+        print!("{}", path_table.to_ascii());
+    }
+    if let Some(slowest) = resp.get("slowest").and_then(Json::as_arr) {
+        println!("slowest requests:");
+        for r in slowest {
+            println!(
+                "  {op:>9} {total:>10.1} µs  {stages}",
+                op = r.get("op").and_then(Json::as_str).unwrap_or("?"),
+                total = field(r, "total_us"),
+                stages = r
+                    .get("stages_us")
+                    .map(|s| s.to_string())
+                    .unwrap_or_default()
+            );
         }
     }
 }
@@ -502,11 +632,16 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         return 2;
     }
     let cache_capacity: usize = num_or_exit(&parsed, "cache-capacity", None);
+    let threads_cfg: usize = num_or_exit(&parsed, "threads", Some(pool::default_threads()));
+    let batch_window: usize = num_or_exit(&parsed, "batch-window", None);
     let engine = Engine::new(EngineConfig {
         cache_capacity,
         intern_capacity: cache_capacity.max(count),
-        threads: num_or_exit(&parsed, "threads", Some(pool::default_threads())),
-        batch_window: num_or_exit(&parsed, "batch-window", None),
+        threads: threads_cfg,
+        batch_window,
+        // inherit CEFT_TELEMETRY: the same binary serves as both the
+        // telemetry smoke (env on) and the zero-overhead check (env off)
+        telemetry: None,
     });
 
     // Submit `count` distinct instances (same grid coordinates, different
@@ -518,6 +653,10 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
     // panel_ctx_hit.
     let base = cell_from(&parsed);
     let mut ids = Vec::with_capacity(count);
+    // kept for the telemetry A/B pass below: handles are structural
+    // hashes, so replaying these submits against a fresh engine yields
+    // the same ids and the replay lines work verbatim
+    let mut submit_lines = Vec::with_capacity(count);
     for i in 0..count {
         let mut cell = base;
         cell.index = base.index + i as u64;
@@ -534,6 +673,7 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         })
         .to_string();
         let (resp, _) = engine.handle_line(&line);
+        submit_lines.push(line);
         match resp.get("id").and_then(Json::as_str) {
             Some(id) => match ceft::service::protocol::parse_handle(id) {
                 Ok(h) => ids.push(h),
@@ -721,6 +861,84 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         );
         return 1;
     }
+    // Telemetry self-check (only when recording): a replay that parsed,
+    // interned, resolved, computed and responded must have samples in
+    // every always-on stage, and the batching stages must agree with the
+    // batching counters — `queue_wait`/`batch_drain` appear iff requests
+    // were actually served through a width ≥ 2 gather.
+    let telemetry_on = stats.get("telemetry").and_then(Json::as_str) == Some("on");
+    let stage_count = |name: &str| -> f64 {
+        stats
+            .get("stages")
+            .and_then(|s| s.get(name))
+            .and_then(|h| h.get("count"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    if telemetry_on {
+        for required in ["parse", "intern", "ctx_build", "cache_probe", "respond"] {
+            if stage_count(required) == 0.0 {
+                eprintln!("loadgen: stage {required:?} recorded no samples — a telemetry hook is dead");
+                return 1;
+            }
+        }
+        if stage_count("kernel") + stage_count("batch_drain") == 0.0 {
+            eprintln!("loadgen: no kernel or batch_drain samples — compute was never attributed");
+            return 1;
+        }
+        let queued = stage_count("queue_wait") > 0.0 || stage_count("batch_drain") > 0.0;
+        if queued != (batched_requests > 0.0) {
+            eprintln!(
+                "loadgen: queue_wait/batch_drain samples disagree with \
+                 batched_requests = {batched_requests}"
+            );
+            return 1;
+        }
+    }
+    // Telemetry overhead A/B: replay the same mix, hot-cache, against two
+    // fresh engines — every hook forced on vs forced off — and compare
+    // fixed-work throughput. A serial handle_line loop: no thread-pool
+    // scheduling noise, so the delta isolates the hooks themselves (see
+    // EXPERIMENTS.md §Telemetry for the protocol and the ≤2% budget).
+    let ab_pass = |telemetry: bool| -> Result<f64, String> {
+        let eng = Engine::new(EngineConfig {
+            cache_capacity,
+            intern_capacity: cache_capacity.max(count),
+            threads: threads_cfg,
+            batch_window,
+            telemetry: Some(telemetry),
+        });
+        for line in &submit_lines {
+            let (resp, _) = eng.handle_line(line);
+            if resp.get("ok") != Some(&Json::Bool(true)) {
+                return Err(format!("A/B submit failed: {}", resp.to_string()));
+            }
+        }
+        // one warm pass computes every miss; the timed rounds then measure
+        // the steady state the overhead budget is defined over
+        for line in &lines {
+            let _ = eng.handle_line(line);
+        }
+        let rounds = (4000 / lines.len()).max(3);
+        let t0 = std::time::Instant::now();
+        for _ in 0..rounds {
+            for line in &lines {
+                let _ = eng.handle_line(line);
+            }
+        }
+        Ok((rounds * lines.len()) as f64 / t0.elapsed().as_secs_f64())
+    };
+    let (ab_rps_on, ab_rps_off, overhead_pct) = match (ab_pass(true), ab_pass(false)) {
+        (Ok(on), Ok(off)) => (on, off, (off / on - 1.0) * 100.0),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("loadgen: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "telemetry A/B (hot cache, serial): on {ab_rps_on:.0} req/s, \
+         off {ab_rps_off:.0} req/s, overhead {overhead_pct:+.2}%"
+    );
     println!("{}", stats.to_string());
     // Machine-readable perf record, tracked across PRs (see EXPERIMENTS.md
     // §Workspace for the before/after methodology).
@@ -754,6 +972,19 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
                 ]),
             ),
             ("schedule_cache_hit_rate", Json::Num(sched_hit_rate)),
+            (
+                "telemetry",
+                Json::Str(if telemetry_on { "on" } else { "off" }.to_string()),
+            ),
+            // per-stage latency percentiles from the engine's recorder
+            // (µs; empty histograms when the env switch is off)
+            (
+                "stages",
+                stats.get("stages").cloned().unwrap_or_else(|| Json::obj(vec![])),
+            ),
+            ("ab_rps_on", Json::Num(ab_rps_on)),
+            ("ab_rps_off", Json::Num(ab_rps_off)),
+            ("telemetry_overhead_pct", Json::Num(overhead_pct)),
         ]);
         match std::fs::write(json_out, format!("{}\n", report.to_string())) {
             Ok(()) => println!("wrote {json_out}"),

@@ -1,0 +1,383 @@
+//! Log-linear latency histograms (HDR-style) with lock-free recording.
+//!
+//! The recorder needs a fixed-footprint structure that many threads can
+//! write concurrently without coordination and that still yields tight
+//! percentiles across nine orders of magnitude (tens of nanoseconds for a
+//! cache probe up to minutes for a pathological gathered sweep). The
+//! classic answer is a log-linear bucket grid: each power-of-two octave is
+//! split into [`SUBBUCKETS`] linear sub-buckets, so the relative
+//! quantization error is bounded by `1/SUBBUCKETS` (6.25%) everywhere
+//! while the whole grid is only [`BUCKETS`] counters (~5 KiB).
+//!
+//! Bucket scheme (values are nanoseconds, `S = SUBBUCKETS = 16`):
+//!
+//! * `v < S` — one bucket per value (exact).
+//! * `S <= v < 2^MAX_OCTAVE` — with `k = floor(log2 v)`, the bucket is
+//!   `S + (k - 4)*S + ((v >> (k - 4)) - S)`: octave `k` holds 16 linear
+//!   sub-buckets of width `2^(k-4)`.
+//! * `v >= 2^MAX_OCTAVE` (≈ 73 minutes) — a single overflow bucket.
+//!
+//! Recording is a relaxed `fetch_add` on one counter plus relaxed
+//! `sum`/`min`/`max` updates — no locks, no allocation, wait-free on
+//! x86/ARM. Reading takes an inconsistent-but-complete snapshot (counters
+//! may lag each other by in-flight records; each individual counter is
+//! exact), which is the standard and documented trade for a wait-free
+//! write path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Linear sub-buckets per power-of-two octave (16 → ≤6.25% quantization).
+pub const SUBBUCKETS: usize = 16;
+
+const SUB_BITS: u32 = 4; // log2(SUBBUCKETS)
+
+/// Highest precisely-bucketed octave: values at or above `2^MAX_OCTAVE`
+/// nanoseconds (~73 min) land in the single overflow bucket.
+const MAX_OCTAVE: u32 = 42;
+
+/// Total bucket count: 16 exact small-value buckets, 38 octaves × 16
+/// sub-buckets, plus the overflow bucket.
+pub const BUCKETS: usize = SUBBUCKETS + (MAX_OCTAVE - SUB_BITS) as usize * SUBBUCKETS + 1;
+
+/// Map a nanosecond value to its bucket index.
+#[inline]
+pub fn bucket_index(ns: u64) -> usize {
+    if ns < SUBBUCKETS as u64 {
+        return ns as usize;
+    }
+    let k = 63 - ns.leading_zeros();
+    if k >= MAX_OCTAVE {
+        return BUCKETS - 1;
+    }
+    let sub = (ns >> (k - SUB_BITS)) as usize & (SUBBUCKETS - 1);
+    SUBBUCKETS + (k - SUB_BITS) as usize * SUBBUCKETS + sub
+}
+
+/// Lower bound (inclusive) of a bucket — the value percentiles report.
+///
+/// Exact inverse of [`bucket_index`] on bucket floors:
+/// `bucket_index(bucket_floor(i)) == i` for every valid `i`.
+#[inline]
+pub fn bucket_floor(idx: usize) -> u64 {
+    if idx < SUBBUCKETS {
+        return idx as u64;
+    }
+    if idx >= BUCKETS - 1 {
+        return 1u64 << MAX_OCTAVE;
+    }
+    let rel = idx - SUBBUCKETS;
+    let k = (rel / SUBBUCKETS) as u32 + SUB_BITS;
+    let sub = (rel % SUBBUCKETS) as u64;
+    (1u64 << k) + (sub << (k - SUB_BITS))
+}
+
+/// Concurrent log-linear histogram. All methods take `&self`; recording is
+/// wait-free (relaxed atomics only).
+pub struct Hist {
+    counts: Vec<AtomicU64>,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Hist {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation (nanoseconds).
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.counts[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(ns, Ordering::Relaxed);
+        self.min.fetch_min(ns, Ordering::Relaxed);
+        self.max.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Copy the current contents into an owned snapshot.
+    ///
+    /// Concurrent recorders may land between individual counter reads, so
+    /// a snapshot taken mid-traffic can be "torn" across buckets by the
+    /// handful of in-flight records; every counter value itself is exact
+    /// and monotone, and a quiescent snapshot is exact.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let count = counts.iter().sum();
+        HistSnapshot {
+            counts,
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Owned, mergeable copy of a [`Hist`] with percentile extraction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    counts: Vec<u64>,
+    /// Total number of observations.
+    pub count: u64,
+    /// Sum of all observed values (ns).
+    pub sum: u64,
+    /// Smallest observation (`u64::MAX` when empty).
+    pub min: u64,
+    /// Largest observation (0 when empty).
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    /// Snapshot with no observations.
+    pub fn empty() -> Self {
+        Self {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Merge another snapshot into this one. Merging is commutative and
+    /// associative (bucket-wise addition), which the unit tests assert.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// q-th percentile (`0 < q <= 100`) as a bucket lower bound.
+    ///
+    /// The reported value is exact for observations below [`SUBBUCKETS`] ns
+    /// and for exact powers of two; otherwise it underestimates the true
+    /// order statistic by at most `1/SUBBUCKETS` (6.25%) relative.
+    /// `q = 100` returns the exact tracked maximum. Empty histograms
+    /// report 0.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        if q >= 100.0 {
+            return self.max;
+        }
+        let rank = ((q / 100.0 * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_floor(i);
+            }
+        }
+        self.max
+    }
+
+    /// Median (bucket floor).
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    /// 95th percentile (bucket floor).
+    pub fn p95(&self) -> u64 {
+        self.percentile(95.0)
+    }
+
+    /// 99th percentile (bucket floor).
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+
+    /// Arithmetic mean in nanoseconds (0.0 when empty) — exact, computed
+    /// from the tracked sum rather than bucket floors.
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Render the summary used by the `trace`/`stats` endpoints:
+    /// `{count, p50_us, p95_us, p99_us, max_us, mean_us}` (microseconds).
+    pub fn to_json(&self) -> Json {
+        let us = |ns: u64| Json::Num(ns as f64 / 1e3);
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("p50_us", us(self.p50())),
+            ("p95_us", us(self.p95())),
+            ("p99_us", us(self.p99())),
+            ("max_us", us(if self.count == 0 { 0 } else { self.max })),
+            ("mean_us", Json::Num(self.mean_ns() / 1e3)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_bucket_exactly() {
+        for v in 0..SUBBUCKETS as u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_floor(v as usize), v);
+        }
+    }
+
+    #[test]
+    fn bucket_boundaries_roundtrip() {
+        // every bucket floor maps back to its own bucket, and the last
+        // value before the next floor still maps to the same bucket
+        for idx in 0..BUCKETS - 1 {
+            let floor = bucket_floor(idx);
+            assert_eq!(bucket_index(floor), idx, "floor of bucket {idx}");
+            let next = bucket_floor(idx + 1);
+            assert_eq!(bucket_index(next - 1), idx, "ceiling of bucket {idx}");
+        }
+    }
+
+    #[test]
+    fn octave_boundaries() {
+        assert_eq!(bucket_index(15), 15);
+        assert_eq!(bucket_index(16), 16);
+        assert_eq!(bucket_index(31), 31);
+        assert_eq!(bucket_index(32), 32);
+        assert_eq!(bucket_index(63), 47);
+        assert_eq!(bucket_index(64), 48);
+    }
+
+    #[test]
+    fn overflow_bucket() {
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        assert_eq!(bucket_index(1u64 << MAX_OCTAVE), BUCKETS - 1);
+        assert_eq!(bucket_index((1u64 << MAX_OCTAVE) - 1), BUCKETS - 2);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut v: u64 = 1;
+        while v < 1u64 << 41 {
+            for off in [0u64, 1, v / 3, v / 2, v - 1] {
+                let x = v + off;
+                let floor = bucket_floor(bucket_index(x));
+                assert!(floor <= x, "floor {floor} above value {x}");
+                let err = (x - floor) as f64 / x as f64;
+                assert!(err <= 1.0 / SUBBUCKETS as f64 + 1e-12, "error {err} at {x}");
+            }
+            v <<= 1;
+        }
+    }
+
+    #[test]
+    fn exact_percentiles_for_small_values() {
+        let h = Hist::new();
+        for v in 1..=10u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 10);
+        assert_eq!(s.percentile(50.0), 5);
+        assert_eq!(s.percentile(10.0), 1);
+        assert_eq!(s.percentile(95.0), 10);
+        assert_eq!(s.percentile(100.0), 10);
+        assert_eq!(s.min, 1);
+        assert_eq!(s.max, 10);
+        assert!((s.mean_ns() - 5.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_of_powers_of_two_is_exact() {
+        let h = Hist::new();
+        for k in 0..20u32 {
+            h.record(1u64 << k);
+        }
+        let s = h.snapshot();
+        // rank ceil(0.5*20) = 10 → the 10th smallest = 2^9
+        assert_eq!(s.percentile(50.0), 1 << 9);
+        assert_eq!(s.percentile(100.0), 1 << 19);
+    }
+
+    #[test]
+    fn empty_snapshot_reports_zero() {
+        let s = Hist::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.percentile(50.0), 0);
+        assert_eq!(s.percentile(100.0), 0);
+        assert_eq!(s.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn merge_matches_combined_recording() {
+        let a = Hist::new();
+        let b = Hist::new();
+        let whole = Hist::new();
+        for i in 0..1000u64 {
+            let v = i * 37 % 100_000;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            whole.record(v);
+        }
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged, whole.snapshot());
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mk = |seed: u64, n: u64| {
+            let h = Hist::new();
+            for i in 0..n {
+                h.record(seed.wrapping_mul(i).wrapping_add(i * i) % 1_000_000);
+            }
+            h.snapshot()
+        };
+        let (a, b, c) = (mk(17, 100), mk(5231, 57), mk(999, 211));
+        // (a ⊕ b) ⊕ c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+        // b ⊕ a == a ⊕ b
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+    }
+
+    #[test]
+    fn snapshot_json_has_summary_fields() {
+        let h = Hist::new();
+        h.record(1500);
+        let j = h.snapshot().to_json();
+        assert_eq!(j.get("count").and_then(Json::as_f64), Some(1.0));
+        assert!(j.get("p50_us").is_some());
+        assert!(j.get("max_us").is_some());
+    }
+}

@@ -1,0 +1,332 @@
+//! Zero-dependency telemetry: request-lifecycle tracing, stage-latency
+//! histograms, and kernel throughput attribution.
+//!
+//! The service engine (`crate::service::engine`) needs to answer "where
+//! does a request's time go?" before any batching or scheduling knob can
+//! be tuned — the `batched_requests` / `batch_width` counters say *that*
+//! cross-request gathering happens, not whether the queueing it introduces
+//! is paid back by the sweep. This module is the measurement layer:
+//!
+//! * [`hist`] — log-linear HDR-style histograms (wait-free recording,
+//!   ≤6.25% relative quantization, exact p50/p95/p99/max extraction).
+//! * [`recorder`] — per-thread lock-free sinks behind a [`Recorder`];
+//!   each request carries a stack-local [`RequestTrace`] that spans are
+//!   charged to and that publishes on completion.
+//! * [`Stage`] — the fixed eight-stage request-lifecycle taxonomy.
+//! * kernel-path counters ([`kernel_timer`] / [`kernel_snapshot`]) —
+//!   process-wide cells/s attribution per min-plus dispatch path.
+//!
+//! # Stage taxonomy
+//!
+//! | stage         | meaning                                                       |
+//! |---------------|---------------------------------------------------------------|
+//! | `parse`       | request line → [`crate::service::Request`]                    |
+//! | `intern`      | structural hashing + instance/graph interning (submit path)   |
+//! | `ctx_build`   | building a new [`crate::model::PlatformCtx`] (comm panels)    |
+//! | `cache_probe` | shard lock + LRU probe + single-flight admission, including a |
+//! |               | follower's park time behind an in-flight leader               |
+//! | `queue_wait`  | time parked in the [`BatchCollector`] pending queue before a  |
+//! |               | gathered sweep drained the request                            |
+//! | `batch_drain` | the gathered multi-instance sweep the request was served by   |
+//! | `kernel`      | a single-instance DP / scheduler compute (ungathered miss)    |
+//! | `respond`     | response JSON construction                                    |
+//!
+//! [`BatchCollector`]: crate::service::engine
+//!
+//! Invariant (asserted by the engine tests and the loadgen validator):
+//! `queue_wait` and `batch_drain` are recorded **only** for requests served
+//! through a width ≥ 2 gathered sweep, i.e. they are nonzero iff the
+//! `batched_requests` counter is. A promoted gather leader that parked but
+//! then computed its own sweep charges the park to `cache_probe`.
+//!
+//! # Runtime toggle
+//!
+//! `CEFT_TELEMETRY=off|0|false` disables the process-default switch read
+//! by [`enabled`]; engines built with `telemetry: None` inherit it, and
+//! the kernel-path counters consult it per dispatch. Disabled hooks cost
+//! one relaxed load + predictable branch — no clock reads, no atomic RMW
+//! (the loadgen A/B in `BENCH_service.json` tracks the measured overhead).
+
+pub mod hist;
+pub mod recorder;
+
+pub use hist::{Hist, HistSnapshot};
+pub use recorder::{Recorder, RequestTrace, StageSpan, TelemetrySnapshot, TraceRecord};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Number of lifecycle stages in the fixed taxonomy.
+pub const NUM_STAGES: usize = 8;
+
+/// Request-lifecycle stage (see the module docs for the taxonomy table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Stage {
+    /// Request line → parsed `Request`.
+    Parse = 0,
+    /// Structural hashing + interning on the submit path.
+    Intern = 1,
+    /// Building a new platform execution context (comm panels).
+    CtxBuild = 2,
+    /// Shard lock + LRU probe + single-flight admission/park.
+    CacheProbe = 3,
+    /// Parked in the batch collector before a gathered sweep drained us.
+    QueueWait = 4,
+    /// The gathered multi-instance sweep this request was served by.
+    BatchDrain = 5,
+    /// Single-instance DP / scheduler compute on an ungathered miss.
+    Kernel = 6,
+    /// Response JSON construction.
+    Respond = 7,
+}
+
+impl Stage {
+    /// All stages in taxonomy order (histogram index order).
+    pub const ALL: [Stage; NUM_STAGES] = [
+        Stage::Parse,
+        Stage::Intern,
+        Stage::CtxBuild,
+        Stage::CacheProbe,
+        Stage::QueueWait,
+        Stage::BatchDrain,
+        Stage::Kernel,
+        Stage::Respond,
+    ];
+
+    /// Histogram index of this stage.
+    #[inline]
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// Wire/display name (snake_case, stable — part of the protocol).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::Intern => "intern",
+            Stage::CtxBuild => "ctx_build",
+            Stage::CacheProbe => "cache_probe",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchDrain => "batch_drain",
+            Stage::Kernel => "kernel",
+            Stage::Respond => "respond",
+        }
+    }
+}
+
+fn env_default() -> bool {
+    match std::env::var("CEFT_TELEMETRY") {
+        Ok(v) => !matches!(v.as_str(), "off" | "0" | "false"),
+        Err(_) => true,
+    }
+}
+
+fn flag() -> &'static AtomicBool {
+    static FLAG: OnceLock<AtomicBool> = OnceLock::new();
+    FLAG.get_or_init(|| AtomicBool::new(env_default()))
+}
+
+/// Process-default telemetry switch: `true` unless `CEFT_TELEMETRY` is
+/// `off`/`0`/`false` (or [`set_enabled`] overrode it). Engines consult it
+/// when their config leaves telemetry unset; kernel-path counters consult
+/// it on every dispatch.
+pub fn enabled() -> bool {
+    flag().load(Ordering::Relaxed)
+}
+
+/// Override the process-default switch (used by the loadgen A/B overhead
+/// measurement and the `telemetry_overhead` bench rows).
+pub fn set_enabled(on: bool) {
+    flag().store(on, Ordering::Relaxed)
+}
+
+/// Number of min-plus dispatch paths attributed separately.
+pub const NUM_KERNEL_PATHS: usize = 4;
+
+/// Which min-plus implementation served a DP sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum KernelPath {
+    /// Fused per-instance kernel with scalar lanes (`CEFT_FORCE_SCALAR`).
+    Scalar = 0,
+    /// Fused per-instance kernel with 4-wide SIMD lanes.
+    Simd = 1,
+    /// Blocked matrix-batched kernel (`ceft_table_batched`).
+    Batched = 2,
+    /// Cross-request gathered multi-instance sweep.
+    Gathered = 3,
+}
+
+impl KernelPath {
+    /// All paths in counter-index order.
+    pub const ALL: [KernelPath; NUM_KERNEL_PATHS] = [
+        KernelPath::Scalar,
+        KernelPath::Simd,
+        KernelPath::Batched,
+        KernelPath::Gathered,
+    ];
+
+    /// Wire/display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Simd => "simd",
+            KernelPath::Batched => "batched",
+            KernelPath::Gathered => "gathered",
+        }
+    }
+}
+
+struct PathCell {
+    calls: AtomicU64,
+    cells: AtomicU64,
+    nanos: AtomicU64,
+}
+
+impl PathCell {
+    const fn new() -> Self {
+        Self {
+            calls: AtomicU64::new(0),
+            cells: AtomicU64::new(0),
+            nanos: AtomicU64::new(0),
+        }
+    }
+}
+
+static KERNEL_PATHS: [PathCell; NUM_KERNEL_PATHS] =
+    [PathCell::new(), PathCell::new(), PathCell::new(), PathCell::new()];
+
+/// RAII guard from [`kernel_timer`]; records on drop. Bind it to a named
+/// `_timer` variable — `let _ = ...` drops immediately.
+#[must_use = "the kernel span is measured from creation to drop"]
+pub struct KernelTimer {
+    armed: Option<(KernelPath, u64, Instant)>,
+}
+
+impl Drop for KernelTimer {
+    fn drop(&mut self) {
+        if let Some((path, cells, t0)) = self.armed.take() {
+            let cell = &KERNEL_PATHS[path as usize];
+            cell.calls.fetch_add(1, Ordering::Relaxed);
+            cell.cells.fetch_add(cells, Ordering::Relaxed);
+            cell.nanos
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Time one DP sweep on `path` covering `cells` min-plus cells
+/// (edges × P²). No-op (no clock read) when telemetry is [`enabled`]-off.
+#[inline]
+pub fn kernel_timer(path: KernelPath, cells: u64) -> KernelTimer {
+    KernelTimer {
+        armed: if enabled() {
+            Some((path, cells, Instant::now()))
+        } else {
+            None
+        },
+    }
+}
+
+/// Accumulated totals for one dispatch path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelPathSnapshot {
+    /// DP sweeps served by this path.
+    pub calls: u64,
+    /// Min-plus cells processed (edges × P², summed over instances).
+    pub cells: u64,
+    /// Total nanoseconds inside the kernel on this path.
+    pub nanos: u64,
+}
+
+impl KernelPathSnapshot {
+    /// Throughput in min-plus cells per second (0.0 when unused).
+    pub fn cells_per_s(&self) -> f64 {
+        if self.nanos == 0 {
+            0.0
+        } else {
+            self.cells as f64 / (self.nanos as f64 / 1e9)
+        }
+    }
+}
+
+/// Read the process-wide kernel-path counters, indexed like
+/// [`KernelPath::ALL`].
+pub fn kernel_snapshot() -> [KernelPathSnapshot; NUM_KERNEL_PATHS] {
+    std::array::from_fn(|i| KernelPathSnapshot {
+        calls: KERNEL_PATHS[i].calls.load(Ordering::Relaxed),
+        cells: KERNEL_PATHS[i].cells.load(Ordering::Relaxed),
+        nanos: KERNEL_PATHS[i].nanos.load(Ordering::Relaxed),
+    })
+}
+
+/// Zero the kernel-path counters (bench isolation; counters are
+/// process-global, so concurrent engines share them).
+pub fn kernel_reset() {
+    for cell in &KERNEL_PATHS {
+        cell.calls.store(0, Ordering::Relaxed);
+        cell.cells.store(0, Ordering::Relaxed);
+        cell.nanos.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_are_stable_and_indexed() {
+        let names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "parse",
+                "intern",
+                "ctx_build",
+                "cache_probe",
+                "queue_wait",
+                "batch_drain",
+                "kernel",
+                "respond"
+            ]
+        );
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.idx(), i);
+        }
+    }
+
+    // the process-default flag is shared by every test in this binary, so
+    // tests that toggle it serialize here and restore it before releasing
+    static FLAG_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn kernel_timer_attributes_cells() {
+        let _g = FLAG_LOCK.lock().unwrap();
+        let prev = enabled();
+        set_enabled(true);
+        let before = kernel_snapshot()[KernelPath::Batched as usize];
+        {
+            let timer = kernel_timer(KernelPath::Batched, 12_345);
+            assert!(timer.armed.is_some());
+        }
+        let after = kernel_snapshot()[KernelPath::Batched as usize];
+        set_enabled(prev);
+        // other tests may record concurrently, hence >= on the deltas
+        assert!(after.calls >= before.calls + 1);
+        assert!(after.cells >= before.cells + 12_345);
+        assert!(after.cells_per_s() >= 0.0);
+    }
+
+    #[test]
+    fn disabled_timer_is_disarmed_at_creation() {
+        let _g = FLAG_LOCK.lock().unwrap();
+        let prev = enabled();
+        set_enabled(false);
+        let timer = kernel_timer(KernelPath::Scalar, 999);
+        set_enabled(prev);
+        // armed-ness is latched at creation; drop will record nothing
+        assert!(timer.armed.is_none());
+    }
+}

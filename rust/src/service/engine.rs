@@ -63,12 +63,29 @@
 //! greedily draining whatever lines are already buffered into one batch;
 //! [`Server`] accepts TCP connections (`std::net`) with one thread per
 //! connection. Both share one engine, hence one cache.
+//!
+//! Telemetry: every request carries a stack-local
+//! [`crate::obs::RequestTrace`] through
+//! parse → intern → ctx build → cache probe → (queue wait → batch drain |
+//! kernel) → respond; stage durations land in the engine's [`Recorder`]
+//! histograms, surfaced by the `stats` / `trace` / `metrics` ops and the
+//! `repro serve --metrics-addr` exposition endpoint. `queue_wait` and
+//! `batch_drain` are charged **only** to requests actually served by a
+//! width ≥ 2 gathered sweep — the gather leader stamps each drained
+//! request's park and sweep durations into its [`PendingCp`]'s
+//! [`BatchTiming`] cell, and the parked thread records them after its
+//! single-flight cell resolves. A follower parked behind an identical-key
+//! leader, and a promoted gather leader's own park, charge `cache_probe`
+//! instead (they were not served by a sweep). With telemetry disabled
+//! (`CEFT_TELEMETRY=off`, or `EngineConfig::telemetry = Some(false)`)
+//! every hook degrades to a branch-predictable no-op with no clock reads.
 
 use crate::cp::ceft::{find_critical_path_with, find_critical_paths_gathered, CriticalPath};
 use crate::graph::generator::Instance;
 use crate::graph::io;
 use crate::graph::TaskGraph;
 use crate::model::{CostMatrix, InstanceRef, PlatformCtx};
+use crate::obs::{self, Recorder, RequestTrace, Stage};
 use crate::platform::Platform;
 use crate::sched::{Algorithm, Schedule};
 use crate::service::cache::{CacheKey, CacheStats, LruCache};
@@ -81,6 +98,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 /// Algorithm-slot marker for critical-path cache entries. Real algorithm
 /// ids ([`Algorithm::id`]) are small; this can never collide.
@@ -114,6 +132,11 @@ pub struct EngineConfig {
     /// serve (`<= 1` disables gathering; misses then compute one instance
     /// per thread exactly as before)
     pub batch_window: usize,
+    /// request-lifecycle telemetry: `None` inherits the process-wide
+    /// `CEFT_TELEMETRY` switch ([`crate::obs::enabled`]) at engine
+    /// construction; `Some(false)` forces every tracing hook in this
+    /// engine to a no-op, `Some(true)` records regardless of the switch
+    pub telemetry: Option<bool>,
 }
 
 impl Default for EngineConfig {
@@ -123,6 +146,7 @@ impl Default for EngineConfig {
             intern_capacity: 1024,
             threads: pool::default_threads(),
             batch_window: 8,
+            telemetry: None,
         }
     }
 }
@@ -223,6 +247,19 @@ fn sched_slots(st: &mut ShardState) -> Slots<'_, Schedule> {
     (&mut st.sched_cache, &mut st.sched_inflight)
 }
 
+/// Park/sweep durations a gather leader stamps into each drained
+/// request's [`PendingCp`] so the *requester's* trace can charge its own
+/// `queue_wait` / `batch_drain` stages: the leader thread does the timing
+/// (the parked thread is inside `Condvar::wait`), the parked thread does
+/// the recording after its cell resolves — the cell's mutex provides the
+/// happens-before. Durations are floored to 1 ns at the stamp site so a
+/// sub-resolution wait still registers as having occurred.
+#[derive(Default)]
+struct BatchTiming {
+    queue_ns: AtomicU64,
+    drain_ns: AtomicU64,
+}
+
 /// One critical-path request parked in (or drained from) a shard's
 /// [`BatchCollector`]: the interned instance to relax, its cache key, and
 /// the single-flight cell its result (or retry signal) fans back to.
@@ -230,6 +267,11 @@ struct PendingCp {
     inst: Arc<Interned>,
     key: CacheKey,
     cell: Arc<Inflight<CriticalPath>>,
+    /// when this request entered the collector (the drain leader measures
+    /// park time against it)
+    queued_at: Instant,
+    /// where the drain leader deposits this request's telemetry durations
+    timing: Arc<BatchTiming>,
 }
 
 /// The cross-request gather queue of one shard. Group-commit shaped and
@@ -288,6 +330,33 @@ impl CacheShard {
             }),
         }
     }
+
+    /// One coherent point-in-time copy of this shard's occupancy and
+    /// counters, captured under a **single** acquisition of the shard
+    /// lock. This is the stats aggregation's consistency contract made
+    /// structural: within a shard, lengths and counters are mutually
+    /// consistent (`insertions - evictions - explicit removals == len`
+    /// holds exactly); across shards, snapshots are taken sequentially,
+    /// so requests completing mid-aggregation may make one shard's
+    /// counters "newer" than another's — cross-shard totals are coherent
+    /// per shard and monotone overall, not a global atomic cut.
+    fn snapshot(&self) -> ShardSnapshot {
+        let st = self.state.lock().unwrap();
+        ShardSnapshot {
+            cp_len: st.cp_cache.len(),
+            sched_len: st.sched_cache.len(),
+            cp: st.cp_cache.stats(),
+            sched: st.sched_cache.stats(),
+        }
+    }
+}
+
+/// See [`CacheShard::snapshot`] for the consistency contract.
+struct ShardSnapshot {
+    cp_len: usize,
+    sched_len: usize,
+    cp: CacheStats,
+    sched: CacheStats,
 }
 
 /// Request counters — plain atomics so the hit path bumps them without
@@ -346,6 +415,8 @@ struct State {
 pub struct Engine {
     state: Mutex<State>,
     counters: Counters,
+    /// stage-latency telemetry: per-thread sinks + trace logs
+    recorder: Recorder,
     threads: usize,
     /// per-shard LRU bound for the result caches
     cache_capacity: usize,
@@ -365,10 +436,18 @@ impl Engine {
                 shards: HashMap::new(),
             }),
             counters: Counters::default(),
+            recorder: Recorder::new(config.telemetry.unwrap_or_else(obs::enabled)),
             threads,
             cache_capacity: cap,
             batch_window: config.batch_window.max(1),
         }
+    }
+
+    /// The engine's telemetry recorder (stage histograms + trace logs);
+    /// loadgen and the integration tests read snapshots from it directly
+    /// instead of re-parsing the `trace` response.
+    pub fn recorder(&self) -> &Recorder {
+        &self.recorder
     }
 
     /// New engine with default configuration.
@@ -381,11 +460,33 @@ impl Engine {
         self.threads
     }
 
-    /// Intern an instance (idempotent: same content ⇒ same handle).
+    /// Intern an instance (idempotent: same content ⇒ same handle),
+    /// charging the `intern` stage (hashing + table work) and — when this
+    /// submit is the first sighting of its platform — the `ctx_build`
+    /// stage (the O(P²) panel construction) separately, so a ctx-build
+    /// spike never masquerades as slow hashing.
     fn intern(
         &self,
         instance: Instance,
         platform: Option<Platform>,
+        trace: &mut RequestTrace,
+    ) -> Result<Arc<Interned>, String> {
+        let t0 = trace.clock();
+        let ctx_before = trace.stage_ns(Stage::CtxBuild);
+        let out = self.intern_inner(instance, platform, trace);
+        if let Some(t0) = t0 {
+            let total = t0.elapsed().as_nanos() as u64;
+            let ctx_ns = trace.stage_ns(Stage::CtxBuild) - ctx_before;
+            trace.add(Stage::Intern, total.saturating_sub(ctx_ns));
+        }
+        out
+    }
+
+    fn intern_inner(
+        &self,
+        instance: Instance,
+        platform: Option<Platform>,
+        trace: &mut RequestTrace,
     ) -> Result<Arc<Interned>, String> {
         let platform = match platform {
             Some(p) => {
@@ -457,11 +558,14 @@ impl Engine {
             }
             None => {
                 drop(st);
-                let built = Arc::new(PlatformCtx::bounded_prehashed(
-                    Arc::new(platform),
-                    self.threads,
-                    platform_hash,
-                ));
+                let built = {
+                    let _build = trace.span(Stage::CtxBuild);
+                    Arc::new(PlatformCtx::bounded_prehashed(
+                        Arc::new(platform),
+                        self.threads,
+                        platform_hash,
+                    ))
+                };
                 st = self.state.lock().unwrap();
                 // `peek`: a leader losing this race must not inflate the
                 // hit counter (misses already counted the first lookup);
@@ -516,20 +620,29 @@ impl Engine {
         Ok(interned)
     }
 
-    /// Resolve a protocol target to an interned instance.
-    fn resolve(&self, target: Target) -> Result<Arc<Interned>, String> {
+    /// Resolve a protocol target to an interned instance. A by-handle
+    /// lookup charges `cache_probe` (it is an intern-table probe); an
+    /// inline body goes through [`Engine::intern`] and charges
+    /// `intern` / `ctx_build`.
+    fn resolve(
+        &self,
+        target: Target,
+        trace: &mut RequestTrace,
+    ) -> Result<Arc<Interned>, String> {
         match target {
-            Target::Handle(id) => self
-                .state
-                .lock()
-                .unwrap()
-                .instances
-                .get(&id)
-                .cloned()
-                .ok_or_else(|| {
-                    format!("unknown instance id {}", protocol::handle_to_hex(id))
-                }),
-            Target::Inline { instance, platform } => self.intern(instance, platform),
+            Target::Handle(id) => {
+                let _probe = trace.span(Stage::CacheProbe);
+                self.state
+                    .lock()
+                    .unwrap()
+                    .instances
+                    .get(&id)
+                    .cloned()
+                    .ok_or_else(|| {
+                        format!("unknown instance id {}", protocol::handle_to_hex(id))
+                    })
+            }
+            Target::Inline { instance, platform } => self.intern(instance, platform, trace),
         }
     }
 
@@ -549,10 +662,12 @@ impl Engine {
         key: CacheKey,
         slots: for<'a> fn(&'a mut ShardState) -> Slots<'a, T>,
         compute: impl Fn() -> T,
+        trace: &mut RequestTrace,
     ) -> (Arc<T>, bool) {
         loop {
             // one admission pass under the lock: cache hit, follower, leader
             let flight = {
+                let _probe = trace.span(Stage::CacheProbe);
                 let mut st = shard.state.lock().unwrap();
                 let (cache, inflight) = slots(&mut st);
                 if let Some(hit) = cache.get(&key) {
@@ -568,7 +683,14 @@ impl Engine {
             match flight {
                 Flight::Hit(v) => return (v, true),
                 Flight::Follower(f) => {
-                    if let Some(v) = f.wait() {
+                    // park time behind the identical-key leader is dedup
+                    // wait — cache_probe, not queue_wait (which is reserved
+                    // for the cross-request batcher)
+                    let waited = {
+                        let _park = trace.span(Stage::CacheProbe);
+                        f.wait()
+                    };
+                    if let Some(v) = waited {
                         let mut st = shard.state.lock().unwrap();
                         slots(&mut st).0.record_dedup_hit();
                         return (v, true);
@@ -578,8 +700,12 @@ impl Engine {
                     // request may become the new leader)
                 }
                 Flight::Leader(f) => {
+                    let t_compute = trace.clock();
                     let computed =
                         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| compute()));
+                    if let Some(t0) = t_compute {
+                        trace.add(Stage::Kernel, t0.elapsed().as_nanos() as u64);
+                    }
                     match computed {
                         Ok(v) => {
                             let v = Arc::new(v);
@@ -626,11 +752,16 @@ impl Engine {
     /// until a running gather finishes, whose completion either served it
     /// (it was drained into that gather's window) or promoted it to lead
     /// the next gather.
-    fn critical_path_for(&self, inst: &Arc<Interned>) -> (Arc<CriticalPath>, bool) {
+    fn critical_path_for(
+        &self,
+        inst: &Arc<Interned>,
+        trace: &mut RequestTrace,
+    ) -> (Arc<CriticalPath>, bool) {
         let key = Self::cp_key(inst);
         let shard = inst.shard.clone();
         loop {
             let flight = {
+                let _probe = trace.span(Stage::CacheProbe);
                 let mut st = shard.state.lock().unwrap();
                 if let Some(hit) = st.cp_cache.get(&key) {
                     Flight::Hit(hit.clone())
@@ -645,7 +776,13 @@ impl Engine {
             match flight {
                 Flight::Hit(v) => return (v, true),
                 Flight::Follower(f) => {
-                    if let Some(v) = f.wait() {
+                    // identical-key dedup wait is cache_probe (see the
+                    // single_flight follower arm)
+                    let waited = {
+                        let _park = trace.span(Stage::CacheProbe);
+                        f.wait()
+                    };
+                    if let Some(v) = waited {
                         shard.state.lock().unwrap().cp_cache.record_dedup_hit();
                         return (v, true);
                     }
@@ -656,7 +793,11 @@ impl Engine {
                         inst: inst.clone(),
                         key,
                         cell: cell.clone(),
+                        queued_at: Instant::now(),
+                        timing: Arc::new(BatchTiming::default()),
                     };
+                    let queued_at = me.queued_at;
+                    let timing = me.timing.clone();
                     let queued = {
                         let mut st = shard.state.lock().unwrap();
                         // queue only past saturation: below `threads`
@@ -671,15 +812,39 @@ impl Engine {
                         }
                     };
                     if !queued {
-                        return self.run_gather(&shard, me);
+                        return self.run_gather(&shard, me, trace);
                     }
                     match cell.wait() {
-                        // computed inside the gather that drained us
-                        Some(v) => return (v, false),
+                        // computed inside the gather that drained us: the
+                        // drain leader stamped our park and sweep durations
+                        // into the shared timing cell before completing it
+                        Some(v) => {
+                            if trace.is_enabled() {
+                                trace.add(
+                                    Stage::QueueWait,
+                                    timing.queue_ns.load(Ordering::Relaxed),
+                                );
+                                trace.add(
+                                    Stage::BatchDrain,
+                                    timing.drain_ns.load(Ordering::Relaxed),
+                                );
+                            }
+                            return (v, false);
+                        }
                         // promoted to lead the next gather (our in-flight
                         // entry was removed with the retry signal), or the
-                        // gather leader unwound — re-enter admission
-                        None => continue,
+                        // gather leader unwound — re-enter admission. The
+                        // queue_wait stage is reserved for requests actually
+                        // served by a sweep, so this park is cache_probe.
+                        None => {
+                            if trace.is_enabled() {
+                                trace.add(
+                                    Stage::CacheProbe,
+                                    queued_at.elapsed().as_nanos() as u64,
+                                );
+                            }
+                            continue;
+                        }
                     }
                 }
             }
@@ -695,13 +860,32 @@ impl Engine {
     /// (and one promoted successor) gets the retry signal before the panic
     /// re-raises — the single-flight leader contract, extended to the
     /// whole window.
-    fn run_gather(&self, shard: &Arc<CacheShard>, first: PendingCp) -> (Arc<CriticalPath>, bool) {
+    fn run_gather(
+        &self,
+        shard: &Arc<CacheShard>,
+        first: PendingCp,
+        trace: &mut RequestTrace,
+    ) -> (Arc<CriticalPath>, bool) {
         let mut jobs = vec![first];
         {
             let mut st = shard.state.lock().unwrap();
             let extra = (self.batch_window - 1).min(st.collector.pending.len());
             jobs.extend(st.collector.pending.drain(..extra));
         }
+        // Sweep timing has two consumers: this leader's own trace, and the
+        // drained requests' timing cells (their threads are parked inside
+        // `Inflight::wait`, so the leader measures on their behalf — a
+        // drained requester may be tracing even when this leader is not).
+        let t_sweep = if trace.is_enabled() || jobs.len() > 1 {
+            let now = Instant::now();
+            for job in &jobs[1..] {
+                let park = now.duration_since(job.queued_at).as_nanos() as u64;
+                job.timing.queue_ns.store(park.max(1), Ordering::Relaxed);
+            }
+            Some(now)
+        } else {
+            None
+        };
         let computed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             if jobs.len() == 1 {
                 let only = &jobs[0].inst;
@@ -714,10 +898,29 @@ impl Engine {
                 find_critical_paths_gathered(&ctx, &insts)
             }
         }));
+        let sweep_ns = t_sweep.map(|t| t.elapsed().as_nanos() as u64);
         match computed {
             Ok(paths) => {
                 debug_assert_eq!(paths.len(), jobs.len());
                 let results: Vec<Arc<CriticalPath>> = paths.into_iter().map(Arc::new).collect();
+                if let Some(sweep_ns) = sweep_ns {
+                    if jobs.len() == 1 {
+                        // a width-1 "gather" is the plain fused kernel — an
+                        // ungathered miss, charged to `kernel`
+                        trace.add(Stage::Kernel, sweep_ns);
+                    } else {
+                        // the leader was itself served by the gathered
+                        // sweep; drained requests read the same duration
+                        // from their timing cells once their cells resolve
+                        // (stores precede `complete`, which publishes them)
+                        trace.add(Stage::BatchDrain, sweep_ns);
+                        for job in &jobs[1..] {
+                            job.timing
+                                .drain_ns
+                                .store(sweep_ns.max(1), Ordering::Relaxed);
+                        }
+                    }
+                }
                 let promoted = {
                     let mut st = shard.state.lock().unwrap();
                     for (job, res) in jobs.iter().zip(&results) {
@@ -772,21 +975,40 @@ impl Engine {
     }
 
     /// Memoized schedule with single-flight dedup.
-    fn schedule_for(&self, inst: &Interned, algorithm: Algorithm) -> (Arc<Schedule>, bool) {
+    fn schedule_for(
+        &self,
+        inst: &Interned,
+        algorithm: Algorithm,
+        trace: &mut RequestTrace,
+    ) -> (Arc<Schedule>, bool) {
         let key = CacheKey {
             graph: inst.graph_hash,
             platform: inst.platform_hash,
             comp: inst.comp_hash,
             algorithm: algorithm.id(),
         };
-        self.single_flight(&inst.shard, key, sched_slots, || {
-            inst.ctx
-                .with_workspace(|ws| algorithm.run_with(ws, inst.inst()))
-        })
+        self.single_flight(
+            &inst.shard,
+            key,
+            sched_slots,
+            || {
+                inst.ctx
+                    .with_workspace(|ws| algorithm.run_with(ws, inst.inst()))
+            },
+            trace,
+        )
     }
 
     /// Execute one decoded request, producing the response body.
     pub fn handle(&self, req: Request) -> Json {
+        let mut trace = self.recorder.begin(protocol::op_code(&req));
+        let resp = self.dispatch(req, &mut trace);
+        trace.finish();
+        resp
+    }
+
+    /// Execute one decoded request, charging lifecycle stages to `trace`.
+    fn dispatch(&self, req: Request, trace: &mut RequestTrace) -> Json {
         Counters::bump(&self.counters.requests);
         let result = match req {
             Request::Ping => Ok(protocol::ok_response(vec![
@@ -795,7 +1017,8 @@ impl Engine {
             ])),
             Request::Submit { instance, platform } => {
                 Counters::bump(&self.counters.submits);
-                self.intern(instance, platform).map(|inst| {
+                self.intern(instance, platform, trace).map(|inst| {
+                    let _respond = trace.span(Stage::Respond);
                     protocol::ok_response(vec![
                         ("id", Json::Str(protocol::handle_to_hex(inst.id))),
                         ("n", Json::Num(inst.graph.num_tasks() as f64)),
@@ -806,8 +1029,9 @@ impl Engine {
             }
             Request::CriticalPath { target } => {
                 Counters::bump(&self.counters.cp_requests);
-                self.resolve(target).map(|inst| {
-                    let (cp, cached) = self.critical_path_for(&inst);
+                self.resolve(target, trace).map(|inst| {
+                    let (cp, cached) = self.critical_path_for(&inst, trace);
+                    let _respond = trace.span(Stage::Respond);
                     protocol::ok_response(vec![
                         ("id", Json::Str(protocol::handle_to_hex(inst.id))),
                         ("length", Json::Num(cp.length)),
@@ -831,8 +1055,9 @@ impl Engine {
             }
             Request::Schedule { algorithm, target } => {
                 Counters::bump(&self.counters.schedule_requests);
-                self.resolve(target).map(|inst| {
-                    let (s, cached) = self.schedule_for(&inst, algorithm);
+                self.resolve(target, trace).map(|inst| {
+                    let (s, cached) = self.schedule_for(&inst, algorithm, trace);
+                    let _respond = trace.span(Stage::Respond);
                     protocol::ok_response(vec![
                         ("id", Json::Str(protocol::handle_to_hex(inst.id))),
                         ("algorithm", Json::Str(algorithm.name().to_string())),
@@ -842,7 +1067,21 @@ impl Engine {
                     ])
                 })
             }
-            Request::Stats => Ok(self.stats_json()),
+            Request::Stats => {
+                let _respond = trace.span(Stage::Respond);
+                Ok(self.stats_json())
+            }
+            Request::Trace { limit } => {
+                let _respond = trace.span(Stage::Respond);
+                Ok(self.trace_json(limit))
+            }
+            Request::Metrics => {
+                let _respond = trace.span(Stage::Respond);
+                Ok(protocol::ok_response(vec![(
+                    "text",
+                    Json::Str(self.prometheus_text()),
+                )]))
+            }
             Request::Evict { id } => {
                 let mut st = self.state.lock().unwrap();
                 match st.instances.remove(&id) {
@@ -902,12 +1141,23 @@ impl Engine {
     /// Parse + execute one request line. The second component is true when
     /// the request asked the serving loop to shut down.
     pub fn handle_line(&self, line: &str) -> (Json, bool) {
-        match protocol::parse_request(line) {
-            Ok(Request::Shutdown) => (self.handle(Request::Shutdown), true),
-            Ok(req) => (self.handle(req), false),
+        let mut trace = self.recorder.begin(protocol::OP_INVALID);
+        let parsed = {
+            let _parse = trace.span(Stage::Parse);
+            protocol::parse_request(line)
+        };
+        match parsed {
+            Ok(req) => {
+                trace.set_op(protocol::op_code(&req));
+                let stop = matches!(req, Request::Shutdown);
+                let resp = self.dispatch(req, &mut trace);
+                trace.finish();
+                (resp, stop)
+            }
             Err(msg) => {
                 Counters::bump(&self.counters.requests);
                 Counters::bump(&self.counters.errors);
+                trace.finish();
                 (protocol::error_response(&msg), false)
             }
         }
@@ -930,8 +1180,17 @@ impl Engine {
     /// (lengths and counters sum; `batch_width` is a high-water max;
     /// `capacity` is the per-shard bound and `shards` the live shard
     /// count), so their totals read exactly as the pre-sharding globals
-    /// did.
+    /// did. Shard aggregation goes through [`CacheShard::snapshot`] — one
+    /// coherent copy per shard under a single lock acquisition; see its
+    /// docs for the exact cross-shard consistency contract. The `stages`
+    /// section carries the per-stage latency percentiles from the
+    /// telemetry recorder (all zero when telemetry is off).
     pub fn stats_json(&self) -> Json {
+        // recorder snapshot before the state lock: the two locks nest fine
+        // in this order too, but never holding them together is simpler
+        let stages = Self::stages_json(&self.recorder.snapshot());
+        let telemetry =
+            Json::Str(if self.recorder.enabled() { "on" } else { "off" }.to_string());
         let st = self.state.lock().unwrap();
         let cache_obj = |len: usize, cap: usize, shards: usize, s: CacheStats| {
             Json::obj(vec![
@@ -955,11 +1214,11 @@ impl Engine {
         let mut sched_stats = CacheStats::default();
         let shard_count = st.shards.len();
         for shard in st.shards.values() {
-            let s = shard.state.lock().unwrap();
-            cp_len += s.cp_cache.len();
-            sched_len += s.sched_cache.len();
-            cp_stats.merge(&s.cp_cache.stats());
-            sched_stats.merge(&s.sched_cache.stats());
+            let snap = shard.snapshot();
+            cp_len += snap.cp_len;
+            sched_len += snap.sched_len;
+            cp_stats.merge(&snap.cp);
+            sched_stats.merge(&snap.sched);
         }
         let mut per_ctx: Vec<(u64, &Arc<PlatformCtx>)> =
             st.ctxs.iter().map(|(h, ctx)| (*h, ctx)).collect();
@@ -1001,6 +1260,8 @@ impl Engine {
             ("instances", Json::Num(st.instances.len() as f64)),
             ("threads", Json::Num(self.threads as f64)),
             ("batch_window", Json::Num(self.batch_window as f64)),
+            ("telemetry", telemetry),
+            ("stages", stages),
             (
                 "workspaces",
                 Json::obj(vec![
@@ -1022,6 +1283,202 @@ impl Engine {
                 cache_obj(sched_len, self.cache_capacity, shard_count, sched_stats),
             ),
         ])
+    }
+
+    /// One `{stage: {count, p50_us, p95_us, p99_us, max_us, mean_us}}`
+    /// entry per taxonomy stage, in [`Stage::ALL`] order.
+    fn stages_json(snap: &obs::TelemetrySnapshot) -> Json {
+        Json::obj(
+            Stage::ALL
+                .iter()
+                .map(|s| (s.name(), snap.stages[s.idx()].to_json()))
+                .collect(),
+        )
+    }
+
+    /// The `trace` response: per-stage latency histograms, kernel-path
+    /// throughput attribution, and the slowest / most recent completed
+    /// request traces (each with its per-stage breakdown). `limit` bounds
+    /// the two trace lists; it is clamped to the recorder's retention.
+    pub fn trace_json(&self, limit: usize) -> Json {
+        let limit = limit.clamp(1, crate::obs::recorder::SNAPSHOT_TRACES);
+        let snap = self.recorder.snapshot();
+        let kernel = obs::kernel_snapshot();
+        let kernel_json: Vec<(&str, Json)> = obs::KernelPath::ALL
+            .iter()
+            .map(|&p| {
+                let k = &kernel[p as usize];
+                (
+                    p.name(),
+                    Json::obj(vec![
+                        ("calls", Json::Num(k.calls as f64)),
+                        ("cells", Json::Num(k.cells as f64)),
+                        ("time_s", Json::Num(k.nanos as f64 / 1e9)),
+                        ("cells_per_s", Json::Num(k.cells_per_s())),
+                    ]),
+                )
+            })
+            .collect();
+        let rec_json = |r: &obs::TraceRecord| {
+            Json::obj(vec![
+                ("op", Json::Str(protocol::op_name(r.op).to_string())),
+                ("total_us", Json::Num(r.total_ns as f64 / 1e3)),
+                (
+                    "stages_us",
+                    Json::obj(
+                        Stage::ALL
+                            .iter()
+                            .copied()
+                            .filter(|s| r.stages[s.idx()] > 0)
+                            .map(|s| (s.name(), Json::Num(r.stages[s.idx()] as f64 / 1e3)))
+                            .collect(),
+                    ),
+                ),
+            ])
+        };
+        protocol::ok_response(vec![
+            (
+                "telemetry",
+                Json::Str(if self.recorder.enabled() { "on" } else { "off" }.to_string()),
+            ),
+            ("stages", Self::stages_json(&snap)),
+            ("kernel_paths", Json::obj(kernel_json)),
+            (
+                "slowest",
+                Json::Arr(snap.slowest.iter().take(limit).map(rec_json).collect()),
+            ),
+            (
+                "recent",
+                Json::Arr(snap.recent.iter().take(limit).map(rec_json).collect()),
+            ),
+        ])
+    }
+
+    /// Prometheus-style text exposition: request/cache counters, stage
+    /// latency quantiles, kernel-path throughput. Served in a JSON
+    /// envelope by the `metrics` op and raw over HTTP by
+    /// `repro serve --metrics-addr`. Quantiles come from the same
+    /// log-linear histograms as the `trace` op, so exposition cost is
+    /// `O(buckets)` — never a scan of recorded values.
+    pub fn prometheus_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, v) in [
+            ("ceft_requests_total", Counters::read(&self.counters.requests)),
+            ("ceft_errors_total", Counters::read(&self.counters.errors)),
+            ("ceft_submits_total", Counters::read(&self.counters.submits)),
+            (
+                "ceft_cp_requests_total",
+                Counters::read(&self.counters.cp_requests),
+            ),
+            (
+                "ceft_schedule_requests_total",
+                Counters::read(&self.counters.schedule_requests),
+            ),
+        ] {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        // cache counters: one coherent snapshot per shard (see
+        // `CacheShard::snapshot` for the cross-shard contract)
+        let (cp_stats, sched_stats, panel_stats) = {
+            let st = self.state.lock().unwrap();
+            let mut cp = CacheStats::default();
+            let mut sched = CacheStats::default();
+            for shard in st.shards.values() {
+                let snap = shard.snapshot();
+                cp.merge(&snap.cp);
+                sched.merge(&snap.sched);
+            }
+            (cp, sched, st.ctxs.stats())
+        };
+        for family in [
+            "ceft_cache_hits_total",
+            "ceft_cache_misses_total",
+            "ceft_cache_dedup_hits_total",
+        ] {
+            let _ = writeln!(out, "# TYPE {family} counter");
+        }
+        for (cache, s) in [
+            ("cp", &cp_stats),
+            ("sched", &sched_stats),
+            ("panel", &panel_stats),
+        ] {
+            let _ = writeln!(out, "ceft_cache_hits_total{{cache=\"{cache}\"}} {}", s.hits);
+            let _ = writeln!(
+                out,
+                "ceft_cache_misses_total{{cache=\"{cache}\"}} {}",
+                s.misses
+            );
+            let _ = writeln!(
+                out,
+                "ceft_cache_dedup_hits_total{{cache=\"{cache}\"}} {}",
+                s.dedup_hits
+            );
+        }
+        let _ = writeln!(out, "# TYPE ceft_batched_requests_total counter");
+        let _ = writeln!(
+            out,
+            "ceft_batched_requests_total {}",
+            cp_stats.batched_requests
+        );
+        // per-stage latency summaries
+        let snap = self.recorder.snapshot();
+        let _ = writeln!(out, "# TYPE ceft_stage_latency_seconds summary");
+        for s in Stage::ALL {
+            let h = &snap.stages[s.idx()];
+            for (q, v) in [("0.5", h.p50()), ("0.95", h.p95()), ("0.99", h.p99())] {
+                let _ = writeln!(
+                    out,
+                    "ceft_stage_latency_seconds{{stage=\"{}\",quantile=\"{q}\"}} {}",
+                    s.name(),
+                    v as f64 / 1e9
+                );
+            }
+            let _ = writeln!(
+                out,
+                "ceft_stage_latency_seconds_count{{stage=\"{}\"}} {}",
+                s.name(),
+                h.count
+            );
+            let _ = writeln!(
+                out,
+                "ceft_stage_latency_seconds_sum{{stage=\"{}\"}} {}",
+                s.name(),
+                h.sum as f64 / 1e9
+            );
+        }
+        // kernel-path throughput
+        let kernel = obs::kernel_snapshot();
+        for family in [
+            "ceft_kernel_calls_total",
+            "ceft_kernel_cells_total",
+            "ceft_kernel_seconds_total",
+        ] {
+            let _ = writeln!(out, "# TYPE {family} counter");
+        }
+        for p in obs::KernelPath::ALL {
+            let k = &kernel[p as usize];
+            let _ = writeln!(
+                out,
+                "ceft_kernel_calls_total{{path=\"{}\"}} {}",
+                p.name(),
+                k.calls
+            );
+            let _ = writeln!(
+                out,
+                "ceft_kernel_cells_total{{path=\"{}\"}} {}",
+                p.name(),
+                k.cells
+            );
+            let _ = writeln!(
+                out,
+                "ceft_kernel_seconds_total{{path=\"{}\"}} {}",
+                p.name(),
+                k.nanos as f64 / 1e9
+            );
+        }
+        out
     }
 }
 
@@ -1519,10 +1976,13 @@ mod tests {
             serial.push(find_critical_path(inst.bind(&plat)));
             interned.push(
                 engine
-                    .resolve(Target::Inline {
-                        instance: inst,
-                        platform: None,
-                    })
+                    .resolve(
+                        Target::Inline {
+                            instance: inst,
+                            platform: None,
+                        },
+                        &mut RequestTrace::disabled(),
+                    )
                     .expect("inline resolve"),
             );
         }
@@ -1534,22 +1994,30 @@ mod tests {
         // park jobs 1.. as queued key leaders behind a saturated shard
         // (one gather slot, held by job 0 below)
         let mut cells = Vec::new();
+        let mut timings = Vec::new();
         {
             let mut st = shard.state.lock().unwrap();
             st.collector.active = 1;
             for inst in &interned[1..] {
                 let key = Engine::cp_key(inst);
                 let cell = Arc::new(Inflight::new());
+                let timing = Arc::new(BatchTiming::default());
                 st.cp_inflight.insert(key, cell.clone());
                 st.collector.pending.push_back(PendingCp {
                     inst: inst.clone(),
                     key,
                     cell: cell.clone(),
+                    queued_at: Instant::now(),
+                    timing: timing.clone(),
                 });
                 cells.push(cell);
+                timings.push(timing);
             }
         }
-        // job 0 is the gather leader
+        // job 0 is the gather leader; give it a live trace so the leader's
+        // own stage attribution is checked too
+        let leader_recorder = Recorder::new(true);
+        let mut leader_trace = leader_recorder.begin(2); // "cp"
         let first_key = Engine::cp_key(&interned[0]);
         let first_cell = Arc::new(Inflight::new());
         shard
@@ -1564,13 +2032,26 @@ mod tests {
                 inst: interned[0].clone(),
                 key: first_key,
                 cell: first_cell,
+                queued_at: Instant::now(),
+                timing: Arc::new(BatchTiming::default()),
             },
+            &mut leader_trace,
         );
         assert!(!cached, "a gathered computation is not a cache hit");
         assert_eq!(*first, serial[0], "leader result == serial dispatch");
+        // the leader was served by a width-5 sweep: batch_drain, not kernel
+        assert!(leader_trace.stage_ns(Stage::BatchDrain) > 0);
+        assert_eq!(leader_trace.stage_ns(Stage::Kernel), 0);
+        assert_eq!(leader_trace.stage_ns(Stage::QueueWait), 0);
         for (i, cell) in cells.iter().enumerate() {
             let got = cell.wait().expect("gathered cell resolves with a result");
             assert_eq!(*got, serial[i + 1], "queued request {i} == serial");
+        }
+        // every drained request got park + sweep durations stamped (1 ns
+        // floor: "occurred" even below clock resolution)
+        for timing in &timings {
+            assert!(timing.queue_ns.load(Ordering::Relaxed) >= 1);
+            assert!(timing.drain_ns.load(Ordering::Relaxed) >= 1);
         }
         // counters: one gather of width 5, five insertions, no leftovers
         {
@@ -1653,5 +2134,202 @@ mod tests {
         assert_eq!(ok.get("ok"), Some(&Json::Bool(true)));
         let stats = engine.stats_json();
         assert!(stats.get("errors").and_then(Json::as_f64).unwrap() >= 1.0);
+    }
+
+    /// Count of a stage's histogram entries in a recorder snapshot.
+    fn stage_count(engine: &Engine, stage: Stage) -> u64 {
+        engine.recorder().snapshot().stages[stage.idx()].count
+    }
+
+    #[test]
+    fn queue_wait_and_batch_drain_appear_only_for_batched_requests() {
+        // Deterministic saturation: a 1-thread engine with a wide batch
+        // window, its single gather slot held by the test. Every cp
+        // request then parks in the collector; releasing the slot promotes
+        // one request to lead a width-N gather over all of them. The
+        // taxonomy invariant under test: exactly the N-1 *drained*
+        // requests record queue_wait, all N record batch_drain, and the
+        // promoted leader's park is cache_probe — matching
+        // `batched_requests > 0 ⟺ queue_wait/batch_drain nonzero`.
+        const N: usize = 4;
+        let engine = Arc::new(Engine::new(EngineConfig {
+            threads: 1,
+            batch_window: 8,
+            telemetry: Some(true),
+            ..EngineConfig::default()
+        }));
+        let mut ids = Vec::new();
+        let mut expected = Vec::new();
+        let mut shard = None;
+        for seed in 0..N as u64 {
+            let (plat, inst) = small_instance(1100 + seed);
+            expected.push(find_critical_path(inst.bind(&plat)).length);
+            let interned = engine
+                .resolve(
+                    Target::Inline {
+                        instance: inst,
+                        platform: None,
+                    },
+                    &mut RequestTrace::disabled(),
+                )
+                .expect("inline resolve");
+            ids.push(interned.id);
+            shard.get_or_insert_with(|| interned.shard.clone());
+        }
+        let shard = shard.unwrap();
+        // hold the engine's only gather slot
+        shard.state.lock().unwrap().collector.active = 1;
+        let handles: Vec<_> = ids
+            .iter()
+            .map(|&id| {
+                let engine = engine.clone();
+                std::thread::spawn(move || {
+                    let resp = engine.handle(Request::CriticalPath {
+                        target: Target::Handle(id),
+                    });
+                    resp.get("length").and_then(Json::as_f64).unwrap()
+                })
+            })
+            .collect();
+        // wait until all N key leaders parked in the collector
+        for _ in 0..2000 {
+            if shard.state.lock().unwrap().collector.pending.len() == N {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(
+            shard.state.lock().unwrap().collector.pending.len(),
+            N,
+            "all requests must queue behind the held gather slot"
+        );
+        // release the slot as a finishing gather would: promote the head
+        let promoted = {
+            let mut st = shard.state.lock().unwrap();
+            Engine::finish_gather(&mut st)
+        }
+        .expect("a queued leader to promote");
+        promoted.cell.complete(None);
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), expected[i], "request {i}");
+        }
+        // one width-N gather served everything
+        let stats = engine.stats_json();
+        let cp = stats.get("cp_cache").unwrap();
+        assert_eq!(
+            cp.get("batched_requests").and_then(Json::as_f64),
+            Some(N as f64)
+        );
+        assert_eq!(cp.get("batch_width").and_then(Json::as_f64), Some(N as f64));
+        // stage attribution: drained requests (N-1) recorded queue_wait,
+        // all N recorded batch_drain, nobody recorded kernel (no width-1
+        // compute happened), and every request probed the caches
+        assert_eq!(stage_count(&engine, Stage::QueueWait), (N - 1) as u64);
+        assert_eq!(stage_count(&engine, Stage::BatchDrain), N as u64);
+        assert_eq!(stage_count(&engine, Stage::Kernel), 0);
+        assert_eq!(stage_count(&engine, Stage::Respond), N as u64);
+        assert!(stage_count(&engine, Stage::CacheProbe) >= N as u64);
+    }
+
+    #[test]
+    fn serial_requests_record_kernel_but_never_queue_stages() {
+        // batch_window 1 disables gathering entirely: misses run the plain
+        // fused kernel, so kernel/cache_probe/respond populate while the
+        // batching stages stay silent — the other half of the invariant.
+        let engine = Engine::new(EngineConfig {
+            threads: 1,
+            batch_window: 1,
+            telemetry: Some(true),
+            ..EngineConfig::default()
+        });
+        let (_plat, inst) = small_instance(1200);
+        let cp_line = format!(
+            r#"{{"op":"cp","instance":{}}}"#,
+            io::instance_to_json(&inst).to_string()
+        );
+        engine.handle_line(&cp_line);
+        engine.handle_line(&cp_line); // cache hit
+        engine.handle_line(&schedule_line(&inst, "CEFT-CPOP"));
+        let snap = engine.recorder().snapshot();
+        let count = |s: Stage| snap.stages[s.idx()].count;
+        assert_eq!(count(Stage::Parse), 3, "every line parsed under a span");
+        assert_eq!(count(Stage::Intern), 3, "inline targets intern");
+        assert_eq!(count(Stage::CtxBuild), 1, "panels built exactly once");
+        assert_eq!(count(Stage::Kernel), 2, "cp miss + schedule miss");
+        assert_eq!(count(Stage::QueueWait), 0, "no gathering at window 1");
+        assert_eq!(count(Stage::BatchDrain), 0, "no gathering at window 1");
+        assert_eq!(count(Stage::Respond), 3);
+        assert!(count(Stage::CacheProbe) >= 3);
+        // traces carry the op label end-to-end
+        let ops: Vec<&str> = snap
+            .recent
+            .iter()
+            .map(|r| protocol::op_name(r.op))
+            .collect();
+        assert!(ops.contains(&"cp") && ops.contains(&"schedule"));
+    }
+
+    #[test]
+    fn disabled_telemetry_records_nothing() {
+        let engine = Engine::new(EngineConfig {
+            telemetry: Some(false),
+            ..EngineConfig::default()
+        });
+        let (_plat, inst) = small_instance(1300);
+        engine.handle_line(&schedule_line(&inst, "HEFT"));
+        let snap = engine.recorder().snapshot();
+        for s in Stage::ALL {
+            assert_eq!(snap.stages[s.idx()].count, 0, "{} recorded", s.name());
+        }
+        assert!(snap.recent.is_empty());
+        // the trace endpoint reports the toggle instead of stale data
+        let resp = engine.trace_json(8);
+        assert_eq!(resp.get("telemetry").and_then(Json::as_str), Some("off"));
+        let stats = engine.stats_json();
+        assert_eq!(stats.get("telemetry").and_then(Json::as_str), Some("off"));
+    }
+
+    #[test]
+    fn trace_and_metrics_ops_expose_stage_latencies() {
+        let engine = Engine::new(EngineConfig {
+            telemetry: Some(true),
+            ..EngineConfig::default()
+        });
+        let (_plat, inst) = small_instance(1400);
+        engine.handle_line(&schedule_line(&inst, "CEFT-CPOP"));
+        let (resp, _) = engine.handle_line(r#"{"op":"trace","limit":4}"#);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("telemetry").and_then(Json::as_str), Some("on"));
+        let stages = resp.get("stages").expect("stages section");
+        for s in Stage::ALL {
+            assert!(stages.get(s.name()).is_some(), "missing stage {}", s.name());
+        }
+        let kernel_count = stages
+            .get("kernel")
+            .and_then(|k| k.get("count"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(kernel_count >= 1.0, "schedule miss must record kernel time");
+        let slowest = resp.get("slowest").and_then(Json::as_arr).unwrap();
+        assert!(!slowest.is_empty() && slowest.len() <= 4);
+        assert!(slowest[0].get("total_us").and_then(Json::as_f64).unwrap() > 0.0);
+        // kernel-path attribution is present for all four dispatch paths
+        let paths = resp.get("kernel_paths").expect("kernel_paths section");
+        for p in obs::KernelPath::ALL {
+            assert!(paths.get(p.name()).is_some(), "missing path {}", p.name());
+        }
+        // metrics op returns the text exposition with the stage family
+        let (m, _) = engine.handle_line(r#"{"op":"metrics"}"#);
+        let text = m.get("text").and_then(Json::as_str).unwrap();
+        assert!(text.contains("ceft_stage_latency_seconds"));
+        assert!(text.contains("ceft_requests_total"));
+        assert!(text.contains("quantile=\"0.99\""));
+        // stats carries the same percentile fields
+        let stats = engine.stats_json();
+        let st_stages = stats.get("stages").expect("stats stages section");
+        assert!(st_stages
+            .get("respond")
+            .and_then(|s| s.get("p50_us"))
+            .is_some());
     }
 }

@@ -27,6 +27,14 @@
 //!   per platform context (no global lock on the hit path), and
 //!   same-platform critical-path misses gather into one multi-instance
 //!   min-plus sweep (the `batched_requests` / `batch_width` counters).
+//!   Every request is traced through the [`crate::obs`] stage taxonomy
+//!   (`parse` → … → `respond`); the `trace` op returns per-stage latency
+//!   histograms plus the slowest/most-recent request breakdowns, the
+//!   `metrics` op (and `repro serve --metrics-addr`) serves a
+//!   Prometheus-style text exposition, and `stats` carries per-stage
+//!   percentiles. `CEFT_TELEMETRY=off` (or
+//!   `EngineConfig::telemetry = Some(false)`) turns every hook into a
+//!   branch-predictable no-op.
 //!
 //! Determinism contract: every algorithm in the registry breaks ties
 //! deterministically, and the JSON codec round-trips `f64` bit-exactly, so

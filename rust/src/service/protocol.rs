@@ -13,7 +13,9 @@
 //! | `submit`   | `instance`, optional `platform`                    | `id` (16-hex handle), `n`, `p`, `edges` |
 //! | `cp`       | `id` *or* `instance` (+ optional `platform`)       | `length`, `path` `[[task, class], …]`, `cached`, `id` |
 //! | `schedule` | `algorithm`, `id` *or* `instance` (+ `platform`)   | `makespan`, `schedule`, `algorithm`, `cached`, `id` |
-//! | `stats`    | —                                                  | counters + cache occupancy |
+//! | `stats`    | —                                                  | counters + cache occupancy + per-stage latency percentiles |
+//! | `trace`    | optional `limit` (slowest/recent rows, default 8)  | per-stage histograms, kernel-path throughput, slowest/recent traces |
+//! | `metrics`  | —                                                  | `text`: Prometheus-style exposition (same body `--metrics-addr` serves) |
 //! | `evict`    | `id`                                               | entries dropped |
 //! | `clear`    | —                                                  | entries dropped |
 //! | `shutdown` | —                                                  | `shutting_down`; server stops accepting |
@@ -32,6 +34,9 @@ use crate::util::json::Json;
 
 /// Protocol version reported by `ping`.
 pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Default `limit` for the `trace` op when the request omits it.
+pub const DEFAULT_TRACE_LIMIT: usize = 8;
 
 /// An instance reference: inline content or a handle from `submit`.
 #[derive(Clone, Debug)]
@@ -73,6 +78,13 @@ pub enum Request {
     },
     /// engine counters and cache occupancy
     Stats,
+    /// per-stage latency histograms + slowest/most-recent request traces
+    Trace {
+        /// how many slowest/recent rows to return (default 8, capped)
+        limit: usize,
+    },
+    /// Prometheus-style text exposition of counters and stage latencies
+    Metrics,
     /// drop one interned instance and its cached results
     Evict {
         /// the handle to drop
@@ -82,6 +94,46 @@ pub enum Request {
     Clear,
     /// stop the server after responding
     Shutdown,
+}
+
+/// Op code for a line that never parsed into a [`Request`] — what the
+/// telemetry layer labels a trace before (or instead of) identification.
+pub const OP_INVALID: u8 = 255;
+
+/// Compact op code for telemetry trace records ([`crate::obs`] stores one
+/// `u8` per completed trace, not an op string). Stable: codes are part of
+/// the `trace` response via [`op_name`].
+pub fn op_code(req: &Request) -> u8 {
+    match req {
+        Request::Ping => 0,
+        Request::Submit { .. } => 1,
+        Request::CriticalPath { .. } => 2,
+        Request::Schedule { .. } => 3,
+        Request::Stats => 4,
+        Request::Evict { .. } => 5,
+        Request::Clear => 6,
+        Request::Shutdown => 7,
+        Request::Trace { .. } => 8,
+        Request::Metrics => 9,
+    }
+}
+
+/// Wire name for an [`op_code`] (the `"op"` strings clients send);
+/// unknown codes and [`OP_INVALID`] render as `"invalid"`.
+pub fn op_name(code: u8) -> &'static str {
+    match code {
+        0 => "ping",
+        1 => "submit",
+        2 => "cp",
+        3 => "schedule",
+        4 => "stats",
+        5 => "evict",
+        6 => "clear",
+        7 => "shutdown",
+        8 => "trace",
+        9 => "metrics",
+        _ => "invalid",
+    }
 }
 
 /// Render a handle as the wire format (16 lowercase hex digits).
@@ -153,6 +205,16 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             })
         }
         "stats" => Ok(Request::Stats),
+        "trace" => {
+            let limit = match j.get("limit") {
+                Some(v) => v
+                    .as_usize()
+                    .ok_or("\"limit\" must be a non-negative integer")?,
+                None => DEFAULT_TRACE_LIMIT,
+            };
+            Ok(Request::Trace { limit })
+        }
+        "metrics" => Ok(Request::Metrics),
         "evict" => {
             let s = j
                 .get("id")
@@ -192,6 +254,11 @@ pub fn request_to_json(req: &Request) -> Json {
     match req {
         Request::Ping => fields.push(("op", Json::Str("ping".to_string()))),
         Request::Stats => fields.push(("op", Json::Str("stats".to_string()))),
+        Request::Metrics => fields.push(("op", Json::Str("metrics".to_string()))),
+        Request::Trace { limit } => {
+            fields.push(("op", Json::Str("trace".to_string())));
+            fields.push(("limit", Json::Num(*limit as f64)));
+        }
         Request::Clear => fields.push(("op", Json::Str("clear".to_string()))),
         Request::Shutdown => fields.push(("op", Json::Str("shutdown".to_string()))),
         Request::Evict { id } => {
@@ -275,6 +342,60 @@ mod tests {
             Request::Evict { id } => assert_eq!(id, 16),
             other => panic!("wrong request: {other:?}"),
         }
+        assert!(matches!(
+            parse_request(r#"{"op":"metrics"}"#),
+            Ok(Request::Metrics)
+        ));
+        match parse_request(r#"{"op":"trace"}"#).unwrap() {
+            Request::Trace { limit } => assert_eq!(limit, DEFAULT_TRACE_LIMIT),
+            other => panic!("wrong request: {other:?}"),
+        }
+        match parse_request(r#"{"op":"trace","limit":3}"#).unwrap() {
+            Request::Trace { limit } => assert_eq!(limit, 3),
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn op_codes_roundtrip_to_wire_names() {
+        let inst = crate::graph::io::instance_from_json(
+            &Json::parse(&sample_instance_json()).unwrap(),
+        )
+        .unwrap();
+        let reqs = vec![
+            Request::Ping,
+            Request::Submit {
+                instance: inst.clone(),
+                platform: None,
+            },
+            Request::CriticalPath {
+                target: Target::Handle(1),
+            },
+            Request::Schedule {
+                algorithm: Algorithm::CeftCpop,
+                target: Target::Handle(1),
+            },
+            Request::Stats,
+            Request::Evict { id: 1 },
+            Request::Clear,
+            Request::Shutdown,
+            Request::Trace { limit: 4 },
+            Request::Metrics,
+        ];
+        let mut codes = std::collections::HashSet::new();
+        for req in &reqs {
+            let code = op_code(req);
+            assert!(codes.insert(code), "duplicate op code {code}");
+            // every op's trace label parses back to the same variant
+            let name = op_name(code);
+            let back = parse_request(&format!(r#"{{"op":"{name}","instance":{},"algorithm":"ceft-cpop","id":"01"}}"#, sample_instance_json()));
+            // `id` + `instance` coexisting is fine (id wins for targets);
+            // the point is the name is a real wire op
+            assert!(back.is_ok(), "op_name({code}) = {name:?} not parseable");
+            assert_eq!(op_code(&back.unwrap()), code);
+        }
+        assert_eq!(op_name(OP_INVALID), "invalid");
+        assert_eq!(op_name(200), "invalid");
     }
 
     #[test]
@@ -334,6 +455,8 @@ mod tests {
             Request::Stats,
             Request::Clear,
             Request::Shutdown,
+            Request::Trace { limit: 12 },
+            Request::Metrics,
             Request::Evict { id: 0xbeef },
             Request::Submit {
                 instance: inst.clone(),

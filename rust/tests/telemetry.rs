@@ -1,0 +1,201 @@
+//! Telemetry integration tests over the public API: recorder conservation
+//! under concurrent recording, engine stage attribution end-to-end through
+//! the JSON protocol, and the `trace` / `metrics` surfacing ops. The
+//! histogram bucket/percentile/merge unit tests live in `obs::hist`; the
+//! deterministic batched-attribution test lives in `service::engine` —
+//! this file exercises the same taxonomy from outside the crate.
+
+use ceft::exp::cells::{grid, Scale, Workload};
+use ceft::exp::run::build_instance;
+use ceft::graph::io;
+use ceft::obs::{Recorder, Stage};
+use ceft::service::{Engine, EngineConfig};
+use ceft::util::json::Json;
+use std::sync::Arc;
+
+fn instance_line(op: &str, algo: Option<&str>, index: u64) -> String {
+    let mut cell = grid(Workload::RggClassic, Scale::Smoke)[0];
+    cell.index += index;
+    let (platform, inst) = build_instance(&cell);
+    let algo_field = algo
+        .map(|a| format!(r#""algorithm":"{a}","#))
+        .unwrap_or_default();
+    format!(
+        r#"{{"op":"{op}",{algo_field}"instance":{},"platform":{}}}"#,
+        io::instance_to_json(&inst).to_string(),
+        io::platform_to_json(&platform).to_string()
+    )
+}
+
+fn telemetry_engine() -> Engine {
+    Engine::new(EngineConfig {
+        telemetry: Some(true),
+        ..EngineConfig::default()
+    })
+}
+
+#[test]
+fn concurrent_recording_conserves_totals() {
+    // N threads × M traces, each adding a known arithmetic series to
+    // `kernel` and a constant to `parse`: after the dust settles the
+    // merged histograms must hold exactly every sample — counts and sums
+    // conserved, nothing dropped or double-counted by the per-thread
+    // sinks or the seqlocked snapshot.
+    const THREADS: u64 = 8;
+    const TRACES: u64 = 200;
+    let rec = Arc::new(Recorder::new(true));
+    let workers: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let rec = rec.clone();
+            std::thread::spawn(move || {
+                for i in 1..=TRACES {
+                    let mut t = rec.begin(2);
+                    t.add(Stage::Kernel, i);
+                    t.add(Stage::Parse, 7);
+                    t.finish();
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    let snap = rec.snapshot();
+    let kernel = &snap.stages[Stage::Kernel.idx()];
+    assert_eq!(kernel.count, THREADS * TRACES);
+    assert_eq!(kernel.sum, THREADS * TRACES * (TRACES + 1) / 2);
+    assert_eq!(kernel.max, TRACES);
+    let parse = &snap.stages[Stage::Parse.idx()];
+    assert_eq!(parse.count, THREADS * TRACES);
+    assert_eq!(parse.sum, 7 * THREADS * TRACES);
+    // untouched stages stay empty
+    assert_eq!(snap.stages[Stage::QueueWait.idx()].count, 0);
+    // retention bounds hold and the slow log is sorted slowest-first
+    assert!(snap.recent.len() <= ceft::obs::recorder::SNAPSHOT_TRACES);
+    assert!(!snap.slowest.is_empty());
+    for pair in snap.slowest.windows(2) {
+        assert!(pair[0].total_ns >= pair[1].total_ns, "slow log unsorted");
+    }
+}
+
+#[test]
+fn disabled_recorder_records_nothing() {
+    let rec = Recorder::new(false);
+    for _ in 0..50 {
+        let mut t = rec.begin(3);
+        t.add(Stage::Kernel, 1000);
+        {
+            let _span = t.span(Stage::Respond);
+        }
+        t.finish();
+    }
+    let snap = rec.snapshot();
+    for s in Stage::ALL {
+        assert_eq!(snap.stages[s.idx()].count, 0, "{} leaked", s.name());
+    }
+    assert!(snap.slowest.is_empty() && snap.recent.is_empty());
+}
+
+#[test]
+fn serial_protocol_requests_attribute_stages() {
+    // One schedule miss, its cached repeat, and a cp miss through the
+    // wire protocol: compute stages populate, batching stages must not —
+    // sequential requests never enter a width ≥ 2 gather.
+    let engine = telemetry_engine();
+    let sched = instance_line("schedule", Some("CEFT-CPOP"), 0);
+    for line in [&sched, &sched, &instance_line("cp", None, 0)] {
+        let (resp, _) = engine.handle_line(line);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+    }
+    let stats = engine.stats_json();
+    assert_eq!(stats.get("telemetry").and_then(Json::as_str), Some("on"));
+    let count = |name: &str| {
+        stats
+            .get("stages")
+            .and_then(|s| s.get(name))
+            .and_then(|h| h.get("count"))
+            .and_then(Json::as_f64)
+            .unwrap_or(f64::NAN)
+    };
+    assert_eq!(count("parse"), 3.0);
+    assert_eq!(count("intern"), 3.0, "every inline target interns");
+    assert_eq!(count("ctx_build"), 1.0, "panels built exactly once");
+    assert_eq!(count("kernel"), 2.0, "schedule miss + cp miss");
+    assert_eq!(count("respond"), 3.0);
+    assert!(count("cache_probe") >= 3.0);
+    assert_eq!(count("queue_wait"), 0.0, "no gather on a serial stream");
+    assert_eq!(count("batch_drain"), 0.0, "no gather on a serial stream");
+    // batching counters agree with the stage taxonomy
+    let batched = stats
+        .get("cp_cache")
+        .and_then(|c| c.get("batched_requests"))
+        .and_then(Json::as_f64);
+    assert_eq!(batched, Some(0.0));
+}
+
+#[test]
+fn trace_op_returns_all_stages_and_respects_limit() {
+    let engine = telemetry_engine();
+    for i in 0..4 {
+        let (resp, _) = engine.handle_line(&instance_line("schedule", Some("HEFT"), i));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    }
+    let (resp, _) = engine.handle_line(r#"{"op":"trace","limit":2}"#);
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    let stages = resp.get("stages").expect("stages section");
+    for s in Stage::ALL {
+        let h = stages.get(s.name()).expect("every stage always present");
+        assert!(h.get("p99_us").is_some(), "{} lacks percentiles", s.name());
+    }
+    for list in ["slowest", "recent"] {
+        let arr = resp.get(list).and_then(Json::as_arr).expect(list);
+        assert!(!arr.is_empty() && arr.len() <= 2, "{list} ignores limit");
+        for r in arr {
+            assert_eq!(r.get("op").and_then(Json::as_str), Some("schedule"));
+            assert!(r.get("total_us").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn metrics_op_serves_prometheus_exposition() {
+    let engine = telemetry_engine();
+    let (resp, _) = engine.handle_line(&instance_line("schedule", Some("CPOP"), 0));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    let (m, _) = engine.handle_line(r#"{"op":"metrics"}"#);
+    assert_eq!(m.get("ok"), Some(&Json::Bool(true)));
+    let text = m.get("text").and_then(Json::as_str).expect("text body");
+    for family in [
+        "ceft_requests_total",
+        "ceft_schedule_requests_total",
+        "ceft_batched_requests_total",
+        "ceft_stage_latency_seconds",
+        "ceft_kernel_calls_total",
+    ] {
+        assert!(text.contains(family), "missing metric family {family}");
+    }
+    // the summary carries per-stage labelled quantiles
+    assert!(text.contains(r#"stage="kernel",quantile="0.5""#));
+    assert!(text.contains("ceft_stage_latency_seconds_count"));
+}
+
+#[test]
+fn engine_toggle_overrides_process_switch() {
+    // `telemetry: Some(false)` must silence an engine even when the
+    // process switch is on: the stats report says "off" and no stage
+    // records a sample.
+    let engine = Engine::new(EngineConfig {
+        telemetry: Some(false),
+        ..EngineConfig::default()
+    });
+    let (resp, _) = engine.handle_line(&instance_line("cp", None, 0));
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    let stats = engine.stats_json();
+    assert_eq!(stats.get("telemetry").and_then(Json::as_str), Some("off"));
+    let respond_count = stats
+        .get("stages")
+        .and_then(|s| s.get("respond"))
+        .and_then(|h| h.get("count"))
+        .and_then(Json::as_f64);
+    assert_eq!(respond_count, Some(0.0));
+}
