@@ -129,6 +129,35 @@ CEFT_TELEMETRY=off ./target/release/repro loadgen --n 64 --p 4 --count 8 \
 grep -q '"telemetry":"off"' BENCH_telemetry_off.json
 rm -f BENCH_telemetry_off.json
 
+echo "== loadgen cp-share sweep (schedule batching, writes BENCH_service.json) =="
+# Sweep the cp/schedule mix from schedule-only (0.0) to cp-only (1.0).
+# --threads 2 --clients 8 oversubscribes the workers so concurrent misses
+# pile past the saturation gate; 48 distinct instances give every point a
+# real miss storm. loadgen itself exits nonzero if a schedule-heavy point
+# gathers zero requests or the 0.0-endpoint batch efficiency falls below
+# half the cp-only baseline; the greps pin the report schema the gates
+# read. This sweep is the tracked BENCH_service.json record.
+./target/release/repro loadgen --n 128 --p 8 --count 48 --rate 2000 --duration 1 \
+  --threads 2 --clients 8 --batch-window 8 --cp-share 0.0,0.25,0.5,1.0
+grep -q '"sweep":"cp_share"' BENCH_service.json
+# every point must carry the table-cache counters: the memoized CEFT-table
+# layer is what both cp and schedule traffic now batch through
+if ! grep -q '"table_cache_hits"' BENCH_service.json; then
+  echo "BENCH_service.json lacks the table_cache counters (table memo unmeasured)"
+  exit 1
+fi
+if ! grep -q '"cp_schedule_shares"' BENCH_service.json; then
+  echo "BENCH_service.json lacks the cp_schedule_shares counter (cross-workload reuse unmeasured)"
+  exit 1
+fi
+# the schedule-only endpoint must hold the batch-efficiency floor vs the
+# cp-only baseline — false here means schedule traffic fell off the
+# gathered sweeps
+if ! grep -q '"sweep_batch_floor_ok":true' BENCH_service.json; then
+  echo "BENCH_service.json reports sweep_batch_floor_ok != true — schedule batching regressed"
+  exit 1
+fi
+
 echo "== service throughput bench (smoke) =="
 CEFT_BENCH_FAST=1 cargo bench --bench service_throughput
 
@@ -156,6 +185,12 @@ fi
 # KernelTimer cost is tracked alongside the throughput trajectory
 if ! grep -q '"telemetry"' BENCH_kernel.json; then
   echo "BENCH_kernel.json lacks the telemetry on/off A/B section"
+  exit 1
+fi
+# ... and the gathered-tables row: the multi-instance table sweep is the
+# engine's batch-drain shape, so its cells/s sits in the tracked record
+if ! grep -q '"gathered_tables"' BENCH_kernel.json; then
+  echo "BENCH_kernel.json lacks the gathered_tables throughput row"
   exit 1
 fi
 

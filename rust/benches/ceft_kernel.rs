@@ -8,7 +8,10 @@
 //! `forced_scalar_lanes/*` (lane implementation pinned explicitly,
 //! resident panels — the pair the SIMD speedup is read from),
 //! `batched_b8/*` (the min-plus matrix-matrix DP, chunk size 8),
-//! `scalar/*` (the scalar-recurrence oracle) and `telemetry_overhead/*`
+//! `gathered_tables/*` (the multi-instance table sweep the service
+//! engine's cross-request batcher drains — four same-platform instances
+//! per dispatch, cells summed across the window), `scalar/*` (the
+//! scalar-recurrence oracle) and `telemetry_overhead/*`
 //! (fused kernel with the `crate::obs` KernelTimer forced on vs off — the
 //! per-dispatch hook cost) rows. Protocol and block-size rationale:
 //! EXPERIMENTS.md §Min-plus kernel, §Platform contexts, §SIMD dispatch
@@ -16,15 +19,16 @@
 //! which runs it under both `CEFT_FORCE_SCALAR` settings).
 //!
 //! Besides the CSV every bench appends, this bench writes the repo-root
-//! `BENCH_kernel.json` — per-case cells/s for the `scalar`, `simd` and
-//! `batched_b8` rows plus the `telemetry` on/off pair — seeding the
+//! `BENCH_kernel.json` — per-case cells/s for the `scalar`, `simd`,
+//! `batched_b8` and `gathered_tables` rows plus the `telemetry` on/off
+//! pair — seeding the
 //! kernel-throughput trajectory across PRs (the acceptance gauge is
 //! `simd >= scalar` at `P >= 8`).
 
 use ceft::cp::ceft::simd::KernelDispatch;
 use ceft::cp::ceft::{
     ceft_table_batched_into, ceft_table_into, ceft_table_into_dispatched, ceft_table_rev_into,
-    ceft_table_rev_scalar_into, ceft_table_scalar_into,
+    ceft_table_rev_scalar_into, ceft_table_scalar_into, find_ceft_tables_gathered,
 };
 use ceft::cp::workspace::Workspace;
 use ceft::graph::generator::{generate, RggParams};
@@ -87,6 +91,37 @@ fn main() {
             ceft_table_batched_into(&mut ws, cref, 8);
             black_box(ws.table.last().copied());
         });
+        // the engine's batch-drain shape: one gathered sweep producing a
+        // full table per instance for a window of four same-platform
+        // instances (distinct seeds); throughput is summed window cells,
+        // so the row is directly comparable to the single-instance ones
+        let ginsts: Vec<_> = (0..4u64)
+            .map(|s| {
+                generate(
+                    &RggParams {
+                        n,
+                        out_degree: 4,
+                        ccr: 1.0,
+                        alpha: 0.5,
+                        beta_pct: 50.0,
+                        gamma: 0.25,
+                    },
+                    &CostModel::Classic { beta: 0.5 },
+                    &plat,
+                    42 + s,
+                )
+            })
+            .collect();
+        let grefs: Vec<_> = ginsts.iter().map(|i| i.bind_ctx(&ctx)).collect();
+        let gcells: u64 = ginsts
+            .iter()
+            .map(|i| i.graph.num_edges() as u64 * (p * p) as u64)
+            .sum();
+        let gathered_row =
+            b.case_with_elements(&format!("gathered_tables/n{n}_p{p}"), Some(gcells), || {
+                let tables = find_ceft_tables_gathered(&ctx, &grefs, false);
+                black_box(tables.last().and_then(|t| t.table.last().copied()));
+            });
         let scalar_row = b.case_with_elements(&format!("scalar/n{n}_p{p}"), Some(cells), || {
             ceft_table_scalar_into(&mut ws, iref);
             black_box(ws.table.last().copied());
@@ -139,6 +174,10 @@ fn main() {
                     (
                         "batched_b8",
                         Json::Num(batched_row.throughput().unwrap_or(0.0)),
+                    ),
+                    (
+                        "gathered_tables",
+                        Json::Num(gathered_row.throughput().unwrap_or(0.0)),
                     ),
                 ]),
             ),

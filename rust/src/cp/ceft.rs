@@ -80,6 +80,16 @@
 //! scalar recurrence — this is the compute core of the service engine's
 //! cross-request batching (`service::engine`).
 //!
+//! **Gathered table production.** [`find_ceft_tables_gathered`] runs the
+//! same lock-step sweep but returns each instance's full [`CeftTable`]
+//! (forward or reverse orientation) instead of just a path — the entry
+//! point behind the service engine's table memo, where one gathered sweep
+//! feeds critical-path *and* scheduler requests alike
+//! (`sched::Algorithm::run_with_tables`). Bit-identity to the serial
+//! producers ([`ceft_table_with`] / [`ceft_table_rev_with`]) — values and
+//! backpointers — is part of the contract; see EXPERIMENTS.md §Gathered
+//! schedule tables.
+//!
 //! Tie-breaking is deterministic: the lowest class id wins `min`s, the
 //! earliest-visited parent wins strict-`>` `max`es, and the lowest task id
 //! wins the final sink selection. This makes the rust and PJRT backends,
@@ -228,6 +238,34 @@ pub fn ceft_table_scalar(inst: InstanceRef) -> CeftTable {
 /// once the workspace has served an instance this large).
 pub fn ceft_table_into(ws: &mut Workspace, inst: InstanceRef) {
     ceft_dp_kernel_into(ws, inst, false)
+}
+
+/// Workspace-backed variant of [`ceft_table`]: run the forward DP in `ws`
+/// and copy the filled buffers out as an owned [`CeftTable`]. The copy is
+/// what lets a *pooled* workspace return to its pool while the table
+/// outlives it — the service engine's table memo stores exactly this
+/// (`service::engine`), and the batch harness reuses one table across every
+/// forward-table consumer of an instance (`exp::run`).
+pub fn ceft_table_with(ws: &mut Workspace, inst: InstanceRef) -> CeftTable {
+    ceft_table_into(ws, inst);
+    CeftTable {
+        p: inst.p(),
+        table: ws.table.to_vec(),
+        backptr: ws.backptr.clone(),
+    }
+}
+
+/// Workspace-backed **reverse-orientation** table producer: the transpose
+/// DP of [`ceft_table_rev_into`], copied out as an owned [`CeftTable`].
+/// Consumed by the CEFT upward rank (`sched::ceft_heft::CeftHeftUp`) via
+/// [`crate::sched::Algorithm::run_with_tables`].
+pub fn ceft_table_rev_with(ws: &mut Workspace, inst: InstanceRef) -> CeftTable {
+    ceft_table_rev_into(ws, inst);
+    CeftTable {
+        p: inst.p(),
+        table: ws.table.to_vec(),
+        backptr: ws.backptr.clone(),
+    }
 }
 
 /// The CEFT DP of the **transposed** DAG, computed without materialising
@@ -618,114 +656,198 @@ pub fn find_critical_paths_gathered_dispatched(
     }
 }
 
-/// The gathered DP, monomorphised per lane implementation (see
-/// [`find_critical_paths_gathered`]). All DP state lives in one pooled
-/// [`Workspace`]: the instances' tables (and backpointers) are
-/// concatenated into `ws.table` / `ws.backptr` at per-instance row
-/// offsets, so steady-state gathers allocate nothing beyond the returned
-/// paths and two window-sized bookkeeping vectors — the workspace
-/// contract of every other kernel, with capacity's high-water mark at
-/// `window × instance size`.
-fn gathered_lanes<K: LaneKernel>(ctx: &PlatformCtx, insts: &[InstanceRef]) -> Vec<CriticalPath> {
+/// The gathered multi-instance **table** producer: the same lock-step
+/// sweep as [`find_critical_paths_gathered`], but returning each
+/// instance's full [`CeftTable`] (values + backpointers) instead of just
+/// its critical path. `rev` selects the orientation: `false` is the
+/// forward DP of [`ceft_table_with`], `true` the transpose DP of
+/// [`ceft_table_rev_with`] — each instance's own topological order is
+/// swept back-to-front with successors as parents, which stays safe in
+/// lock-step because instances are mutually independent and a task's
+/// transposed dependences all occupy earlier reverse rounds of its own
+/// order.
+///
+/// Every returned table is **bit-identical** to its serial producer for
+/// any window width and either dispatch (enforced by
+/// `gathered_tables_match_serial_for_every_width`). This is the compute
+/// core behind the service engine's table memo: one gathered sweep serves
+/// critical-path *and* scheduler misses of a platform's queue
+/// (`service::engine`).
+pub fn find_ceft_tables_gathered(
+    ctx: &PlatformCtx,
+    insts: &[InstanceRef],
+    rev: bool,
+) -> Vec<CeftTable> {
+    find_ceft_tables_gathered_dispatched(ctx, insts, rev, ctx.dispatch())
+}
+
+/// [`find_ceft_tables_gathered`] with the lane implementation pinned
+/// explicitly.
+pub fn find_ceft_tables_gathered_dispatched(
+    ctx: &PlatformCtx,
+    insts: &[InstanceRef],
+    rev: bool,
+    dispatch: KernelDispatch,
+) -> Vec<CeftTable> {
+    match dispatch {
+        KernelDispatch::Simd => gathered_tables_lanes::<SimdLanes>(ctx, insts, rev),
+        KernelDispatch::Scalar => gathered_tables_lanes::<ScalarLanes>(ctx, insts, rev),
+    }
+}
+
+/// Per-instance task-row offsets inside the concatenated gathered DP
+/// buffers, plus the total row count. Asserts every instance shares the
+/// context's platform width.
+fn gathered_offsets(ctx: &PlatformCtx, insts: &[InstanceRef]) -> (Vec<usize>, usize) {
     let p = ctx.p();
+    let mut offs = Vec::with_capacity(insts.len());
+    let mut total = 0usize;
     for inst in insts {
         assert_eq!(
             inst.p(),
             p,
             "gathered instances must share the context's platform"
         );
-    }
-    if insts.is_empty() {
-        return Vec::new();
-    }
-    let gathered_cells: usize = insts.iter().map(|i| i.graph.num_edges() * p * p).sum();
-    let _obs = crate::obs::kernel_timer(crate::obs::KernelPath::Gathered, gathered_cells as u64);
-    let (sp, bp) = (ctx.panel_startup(), ctx.panel_bw());
-    // task-row offset of each instance inside the concatenated DP buffers
-    let mut offs = Vec::with_capacity(insts.len());
-    let mut total = 0usize;
-    for inst in insts {
         offs.push(total);
         total += inst.n();
     }
+    (offs, total)
+}
+
+/// The lock-step round sweep shared by the path-producing
+/// ([`find_critical_paths_gathered`]) and table-producing
+/// ([`find_ceft_tables_gathered`]) gathered entry points: fill the
+/// concatenated `ws.table` / `ws.backptr` for every instance at the row
+/// offsets in `offs`. All DP state lives in the one workspace, so
+/// steady-state gathers allocate nothing beyond the caller's returned
+/// results — the workspace contract of every other kernel, with
+/// capacity's high-water mark at `window × instance size`.
+///
+/// Round `r` gathers, for each instance whose topological order still has
+/// an `r`-th task in the swept orientation (`topo[r]` forward,
+/// `topo[len-1-r]` reverse), that task's parent rows and edge payloads
+/// into one contiguous batch, runs one [`batch_minplus_core`] relaxation
+/// against the shared resident panels, and scatters the per-edge minima
+/// back into each instance's CSR-ordered strict-`>` max-fold. Per
+/// instance the per-edge `min_l` comparison sequence and the fold order
+/// are exactly the scalar recurrence's, so values *and* backpointers are
+/// bit-identical to the serial DP of the same orientation.
+fn gathered_dp_fill<K: LaneKernel>(
+    ctx: &PlatformCtx,
+    insts: &[InstanceRef],
+    rev: bool,
+    offs: &[usize],
+    total: usize,
+    ws: &mut Workspace,
+) {
+    let p = ctx.p();
+    let gathered_cells: usize = insts.iter().map(|i| i.graph.num_edges() * p * p).sum();
+    let _obs = crate::obs::kernel_timer(crate::obs::KernelPath::Gathered, gathered_cells as u64);
+    let (sp, bp) = (ctx.panel_startup(), ctx.panel_bw());
     let rounds = insts
         .iter()
         .map(|i| i.graph.topo_order().len())
         .max()
         .unwrap_or(0);
+    let Workspace {
+        table,
+        backptr,
+        batch_rows,
+        batch_data,
+        batch_vals,
+        batch_args,
+        gather_seg,
+        ..
+    } = ws;
+    table.clear();
+    table.resize(total * p, 0.0);
+    backptr.clear();
+    backptr.resize(total * p, (usize::MAX, usize::MAX));
+    for r in 0..rounds {
+        batch_rows.clear();
+        batch_data.clear();
+        gather_seg.clear();
+        for (i, inst) in insts.iter().enumerate() {
+            let topo = inst.graph.topo_order();
+            if r >= topo.len() {
+                continue;
+            }
+            let t = if rev { topo[topo.len() - 1 - r] } else { topo[r] };
+            let base = (offs[i] + t) * p;
+            // parents of `t` in the swept orientation
+            let preds = if rev {
+                inst.graph.succs(t)
+            } else {
+                inst.graph.preds(t)
+            };
+            if preds.is_empty() {
+                table[base..base + p].copy_from_slice(inst.costs.row(t));
+                continue;
+            }
+            for &(k, data) in preds {
+                let krow = (offs[i] + k) * p;
+                batch_rows.extend_from_slice(&table[krow..krow + p]);
+                batch_data.push(data);
+            }
+            gather_seg.push((i, t, preds.len()));
+        }
+        if batch_data.is_empty() {
+            continue;
+        }
+        batch_vals.clear();
+        batch_vals.resize(batch_data.len() * p, 0.0);
+        batch_args.clear();
+        batch_args.resize(batch_data.len() * p, 0);
+        batch_minplus_core::<K>(sp, bp, p, batch_rows, batch_data, batch_vals, batch_args);
+        // scatter: per (instance, task) max-fold in CSR order — the
+        // scalar recurrence's comparison sequence, so backpointer ties
+        // resolve identically
+        let mut off = 0;
+        for &(i, t, cnt) in gather_seg.iter() {
+            let inst = &insts[i];
+            let base = (offs[i] + t) * p;
+            table[base..base + p].fill(f64::NEG_INFINITY);
+            let preds = if rev {
+                inst.graph.succs(t)
+            } else {
+                inst.graph.preds(t)
+            };
+            for (e, &(k, _)) in preds.iter().enumerate() {
+                let row = off + e;
+                for j in 0..p {
+                    let arrival = batch_vals[row * p + j];
+                    if arrival > table[base + j] {
+                        table[base + j] = arrival;
+                        backptr[base + j] = (k, batch_args[row * p + j]);
+                    }
+                }
+            }
+            let crow = inst.costs.row(t);
+            for j in 0..p {
+                table[base + j] += crow[j];
+            }
+            off += cnt;
+        }
+    }
+}
+
+/// The gathered path DP, monomorphised per lane implementation (see
+/// [`find_critical_paths_gathered`]): one [`gathered_dp_fill`] forward
+/// sweep, then per-instance sink selection over the concatenated buffers.
+fn gathered_lanes<K: LaneKernel>(ctx: &PlatformCtx, insts: &[InstanceRef]) -> Vec<CriticalPath> {
+    if insts.is_empty() {
+        return Vec::new();
+    }
+    let p = ctx.p();
+    let (offs, total) = gathered_offsets(ctx, insts);
     ctx.with_workspace(|ws| {
+        gathered_dp_fill::<K>(ctx, insts, false, &offs, total, ws);
         let Workspace {
             table,
             backptr,
-            batch_rows,
-            batch_data,
-            batch_vals,
-            batch_args,
             steps,
             ..
         } = ws;
-        table.clear();
-        table.resize(total * p, 0.0);
-        backptr.clear();
-        backptr.resize(total * p, (usize::MAX, usize::MAX));
-        // (instance, task, predecessor count) per gathered frontier entry
-        let mut seg: Vec<(usize, usize, usize)> = Vec::new();
-        for r in 0..rounds {
-            batch_rows.clear();
-            batch_data.clear();
-            seg.clear();
-            for (i, inst) in insts.iter().enumerate() {
-                let topo = inst.graph.topo_order();
-                if r >= topo.len() {
-                    continue;
-                }
-                let t = topo[r];
-                let base = (offs[i] + t) * p;
-                let preds = inst.graph.preds(t);
-                if preds.is_empty() {
-                    table[base..base + p].copy_from_slice(inst.costs.row(t));
-                    continue;
-                }
-                for &(k, data) in preds {
-                    let krow = (offs[i] + k) * p;
-                    batch_rows.extend_from_slice(&table[krow..krow + p]);
-                    batch_data.push(data);
-                }
-                seg.push((i, t, preds.len()));
-            }
-            if batch_data.is_empty() {
-                continue;
-            }
-            batch_vals.clear();
-            batch_vals.resize(batch_data.len() * p, 0.0);
-            batch_args.clear();
-            batch_args.resize(batch_data.len() * p, 0);
-            batch_minplus_core::<K>(sp, bp, p, batch_rows, batch_data, batch_vals, batch_args);
-            // scatter: per (instance, task) max-fold in CSR order — the
-            // scalar recurrence's comparison sequence, so backpointer ties
-            // resolve identically
-            let mut off = 0;
-            for &(i, t, cnt) in &seg {
-                let inst = &insts[i];
-                let base = (offs[i] + t) * p;
-                table[base..base + p].fill(f64::NEG_INFINITY);
-                for (e, &(k, _)) in inst.graph.preds(t).iter().enumerate() {
-                    let row = off + e;
-                    for j in 0..p {
-                        let arrival = batch_vals[row * p + j];
-                        if arrival > table[base + j] {
-                            table[base + j] = arrival;
-                            backptr[base + j] = (k, batch_args[row * p + j]);
-                        }
-                    }
-                }
-                let crow = inst.costs.row(t);
-                for j in 0..p {
-                    table[base + j] += crow[j];
-                }
-                off += cnt;
-            }
-        }
         insts
             .iter()
             .enumerate()
@@ -738,6 +860,38 @@ fn gathered_lanes<K: LaneKernel>(ctx: &PlatformCtx, insts: &[InstanceRef]) -> Ve
                     &backptr[range],
                     steps,
                 )
+            })
+            .collect()
+    })
+}
+
+/// The gathered table DP, monomorphised per lane implementation (see
+/// [`find_ceft_tables_gathered`]): one [`gathered_dp_fill`] sweep in the
+/// requested orientation, then per-instance ranges copied out as owned
+/// tables (the copies outlive the pooled workspace, exactly like
+/// [`ceft_table_with`]).
+fn gathered_tables_lanes<K: LaneKernel>(
+    ctx: &PlatformCtx,
+    insts: &[InstanceRef],
+    rev: bool,
+) -> Vec<CeftTable> {
+    if insts.is_empty() {
+        return Vec::new();
+    }
+    let p = ctx.p();
+    let (offs, total) = gathered_offsets(ctx, insts);
+    ctx.with_workspace(|ws| {
+        gathered_dp_fill::<K>(ctx, insts, rev, &offs, total, ws);
+        insts
+            .iter()
+            .enumerate()
+            .map(|(i, inst)| {
+                let range = offs[i] * p..(offs[i] + inst.n()) * p;
+                CeftTable {
+                    p,
+                    table: ws.table[range.clone()].to_vec(),
+                    backptr: ws.backptr[range].to_vec(),
+                }
             })
             .collect()
     })
@@ -1404,6 +1558,66 @@ mod tests {
             }
         }
         assert!(find_critical_paths_gathered(&ctx, &[]).is_empty());
+    }
+
+    #[test]
+    fn gathered_tables_match_serial_for_every_width() {
+        // Both orientations, both dispatches, every window width: each
+        // gathered table must be bit-identical — values *and*
+        // backpointers — to its serial workspace producer.
+        let mut rng = crate::util::rng::Xoshiro256::new(57);
+        let plat = Platform::random_links(5, &mut rng, 0.3, 3.0, 0.1, 0.7);
+        let ctx = crate::model::PlatformCtx::new(plat.clone());
+        let insts: Vec<_> = [34usize, 80, 3, 55]
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| {
+                crate::graph::generator::generate(
+                    &crate::graph::generator::RggParams {
+                        n,
+                        out_degree: 3,
+                        ccr: 1.0,
+                        alpha: 0.5,
+                        beta_pct: 50.0,
+                        gamma: 0.25,
+                    },
+                    &crate::platform::CostModel::Classic { beta: 0.5 },
+                    &plat,
+                    200 + i as u64,
+                )
+            })
+            .collect();
+        let mut ws = Workspace::new();
+        for rev in [false, true] {
+            let serial: Vec<CeftTable> = insts
+                .iter()
+                .map(|i| {
+                    if rev {
+                        ceft_table_rev_with(&mut ws, i.bind(&plat))
+                    } else {
+                        ceft_table_with(&mut ws, i.bind(&plat))
+                    }
+                })
+                .collect();
+            for width in 1..=insts.len() {
+                let bound: Vec<InstanceRef> =
+                    insts[..width].iter().map(|i| i.bind_ctx(&ctx)).collect();
+                for dispatch in [simd::KernelDispatch::Simd, simd::KernelDispatch::Scalar] {
+                    let gathered =
+                        find_ceft_tables_gathered_dispatched(&ctx, &bound, rev, dispatch);
+                    assert_eq!(gathered.len(), width);
+                    for (g, s) in gathered.iter().zip(&serial[..width]) {
+                        assert_eq!(g.p, s.p);
+                        assert_eq!(g.table, s.table, "width={width} rev={rev} {dispatch:?}");
+                        assert_eq!(
+                            g.backptr, s.backptr,
+                            "width={width} rev={rev} {dispatch:?}"
+                        );
+                    }
+                }
+            }
+            assert!(find_ceft_tables_gathered(&ctx, &[], rev).is_empty());
+        }
     }
 
     #[test]

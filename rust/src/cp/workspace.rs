@@ -133,6 +133,11 @@ pub struct Workspace {
     /// batched kernel output scratch: argmin sender class per cell,
     /// aligned with `batch_vals`
     pub batch_args: Vec<usize>,
+    /// gathered multi-instance DP scratch: per-round segment bookkeeping
+    /// `(instance, task, pred_count)` for the scatter pass
+    /// (`cp::ceft::find_critical_paths_gathered`,
+    /// `cp::ceft::find_ceft_tables_gathered`)
+    pub gather_seg: Vec<(usize, usize, usize)>,
 }
 
 impl Workspace {
@@ -174,6 +179,7 @@ impl Workspace {
         self.batch_data.clear();
         self.batch_vals.clear();
         self.batch_args.clear();
+        self.gather_seg.clear();
     }
 
     /// Total `f64`-equivalent capacity across the major buffers — a rough

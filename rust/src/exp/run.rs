@@ -13,7 +13,7 @@
 //! concern ([`crate::service`]), not a bounded batch run's.
 
 use super::cells::{Cell, RealWorldCell};
-use crate::cp::ceft::find_critical_path_with;
+use crate::cp::ceft::{ceft_table_with, critical_path_from_table};
 use crate::cp::cpmin::cp_min_cost_with;
 use crate::cp::minexec::min_exec_critical_path_with;
 use crate::cp::ranks::{cpop_cp_from_priorities, cpop_priorities_into};
@@ -251,7 +251,13 @@ pub fn run_instance_with(
     let iref = inst.bind_ctx(ctx);
     let p = ctx.p();
 
-    let ceft_cp = find_critical_path_with(ws, iref);
+    // One forward CEFT DP serves the whole row: the critical path is
+    // derived from the table instead of a second sweep, and the
+    // forward-table consumers below (CEFT-CPOP, CEFT-HEFT-DOWN) borrow it
+    // through `run_with_tables` — bit-identical to each running its own DP
+    // (`prop_run_with_tables_bit_identical`), one DP instead of three.
+    let fwd_table = ceft_table_with(ws, iref);
+    let ceft_cp = critical_path_from_table(iref.graph, &fwd_table);
     // CPOP's mean-value CP from ranks computed in workspace buffers
     cpop_priorities_into(ws, iref);
     let cpl_cpop = cpop_cp_from_priorities(iref.graph, &ws.prio, &mut ws.cp_tasks);
@@ -261,7 +267,11 @@ pub fn run_instance_with(
 
     let mut algos = [AlgoResult::default(); 6];
     for (i, a) in Algorithm::ALL.iter().enumerate() {
-        let schedule = a.run_with(ws, iref);
+        let table = match a.table_use() {
+            Some(crate::sched::TableDir::Forward) => Some(&fwd_table),
+            _ => None,
+        };
+        let schedule = a.run_with_tables(ws, iref, table);
         debug_assert!(schedule.validate(iref).is_ok());
         let m = schedule.makespan();
         algos[i] = AlgoResult {

@@ -21,12 +21,16 @@
 //!   latency, cache hit rate, panel-context counters
 //!   (`--platform-mix K` round-robins K distinct platforms across the mix
 //!   to exercise the per-platform panel cache) and cross-request
-//!   batch-efficiency (`--cp-share` controls how much of the mix is
-//!   critical-path traffic, the op the engine gathers), validates the
+//!   batch-efficiency (`--cp-share` sets how much of the mix is
+//!   critical-path traffic; both cp and schedule misses gather into the
+//!   shared table sweeps, so a comma list like `0.0,0.25,1.0` sweeps the
+//!   workload mix and reports one point per value), validates the
 //!   telemetry stage taxonomy, runs a telemetry on/off A/B throughput
 //!   pass, and writes `BENCH_service.json` (including the per-stage
 //!   latency percentiles and `telemetry_overhead_pct`) so the perf
-//!   trajectory is tracked across PRs.
+//!   trajectory is tracked across PRs. `--clients` sets dispatch
+//!   concurrency; the default (2× worker threads) oversubscribes the
+//!   pool so the engine's saturation gate actually opens.
 
 use ceft::coordinator::{Coordinator, EXPERIMENT_IDS};
 use ceft::cp::ceft::find_critical_path;
@@ -579,6 +583,32 @@ fn print_trace(resp: &Json) {
     }
 }
 
+/// Shared configuration for one `repro loadgen` invocation — everything
+/// except the `--cp-share` value, which varies per sweep point.
+struct LoadgenCfg {
+    count: usize,
+    platform_mix: usize,
+    rate: f64,
+    duration_s: f64,
+    algo: Algorithm,
+    cache_capacity: usize,
+    threads_cfg: usize,
+    batch_window: usize,
+    /// concurrent dispatchers driving `Engine::handle_line`. Batching only
+    /// opens when in-flight misses reach the worker-thread count, so this
+    /// must exceed `threads_cfg` for the gather path to be reachable.
+    clients: usize,
+}
+
+/// What one replay point hands back to [`cmd_loadgen`] for the sweep-level
+/// gates and the report file.
+struct LoadgenPoint {
+    entry: Json,
+    batched_requests: f64,
+    batch_efficiency: f64,
+    failures: u64,
+}
+
 fn cmd_loadgen(tokens: &[String]) -> i32 {
     let args = instance_args(
         "repro loadgen",
@@ -591,19 +621,25 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         "distinct platforms round-robined across the instance mix",
     )
     .opt("rate", Some("1000"), "target requests/sec")
-    .opt("duration", Some("3"), "seconds to run")
+    .opt("duration", Some("3"), "seconds to run (per sweep point)")
     .opt("algorithm", Some("CEFT-CPOP"), "scheduler to request")
     .opt(
         "cp-share",
         Some("0.25"),
-        "fraction of the instance mix replayed as critical-path requests (0 disables)",
+        "fraction of the mix replayed as critical-path requests; a comma \
+         list (e.g. 0.0,0.25,1.0) sweeps the mix, one report point each",
     )
     .opt("cache-capacity", Some("4096"), "LRU entries per result cache")
     .opt("threads", None, "worker threads (default: all cores)")
     .opt(
         "batch-window",
         Some("8"),
-        "max critical-path requests per gathered cross-request sweep (1 disables)",
+        "max table requests per gathered cross-request sweep (1 disables)",
+    )
+    .opt(
+        "clients",
+        Some("0"),
+        "concurrent request dispatchers (0 = 2x worker threads)",
     )
     .opt(
         "json-out",
@@ -615,7 +651,6 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
     let platform_mix: usize = num_or_exit::<usize>(&parsed, "platform-mix", None).max(1);
     let rate: f64 = num_or_exit(&parsed, "rate", None);
     let duration_s: f64 = num_or_exit(&parsed, "duration", None);
-    let cp_share: f64 = num_or_exit(&parsed, "cp-share", None);
     let algo = match Algorithm::parse(parsed.req("algorithm")) {
         Ok(a) => a,
         Err(e) => {
@@ -627,35 +662,47 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         eprintln!("--rate and --duration must be positive");
         return 2;
     }
-    if !(0.0..=1.0).contains(&cp_share) {
-        eprintln!("--cp-share must be in [0, 1]");
-        return 2;
-    }
+    let cp_shares: Vec<f64> = match parsed
+        .req("cp-share")
+        .split(',')
+        .map(|s| s.trim().parse::<f64>())
+        .collect::<Result<Vec<_>, _>>()
+    {
+        Ok(v) if !v.is_empty() && v.iter().all(|s| (0.0..=1.0).contains(s)) => v,
+        _ => {
+            eprintln!("--cp-share must be a comma list of fractions in [0, 1]");
+            return 2;
+        }
+    };
     let cache_capacity: usize = num_or_exit(&parsed, "cache-capacity", None);
     let threads_cfg: usize = num_or_exit(&parsed, "threads", Some(pool::default_threads()));
     let batch_window: usize = num_or_exit(&parsed, "batch-window", None);
-    let engine = Engine::new(EngineConfig {
+    let clients_cfg: usize = num_or_exit(&parsed, "clients", None);
+    let cfg = LoadgenCfg {
+        count,
+        platform_mix,
+        rate,
+        duration_s,
+        algo,
         cache_capacity,
-        intern_capacity: cache_capacity.max(count),
-        threads: threads_cfg,
+        threads_cfg,
         batch_window,
-        // inherit CEFT_TELEMETRY: the same binary serves as both the
-        // telemetry smoke (env on) and the zero-overhead check (env off)
-        telemetry: None,
-    });
+        clients: if clients_cfg == 0 {
+            2 * threads_cfg.max(1)
+        } else {
+            clients_cfg
+        },
+    };
 
-    // Submit `count` distinct instances (same grid coordinates, different
-    // seeds) and keep their handles for the replay mix. With
-    // --platform-mix K, instance i runs on platform i mod K (distinct
-    // uniform-link platforms, deterministic in K), so the engine's
-    // platform-context cache sees exactly K distinct platforms: its
-    // panel_ctx_misses must be min(K, count) and every other submit a
-    // panel_ctx_hit.
+    // Build the submit stream once: `count` distinct instances (same grid
+    // coordinates, different seeds). With --platform-mix K, instance i runs
+    // on platform i mod K (distinct uniform-link platforms, deterministic
+    // in K), so each engine's platform-context cache sees exactly K
+    // distinct platforms: its panel_ctx_misses must be min(K, count) and
+    // every other submit a panel_ctx_hit. Handles are structural hashes, so
+    // every sweep point (and the telemetry A/B engines) replays these
+    // submits verbatim and gets the same ids back.
     let base = cell_from(&parsed);
-    let mut ids = Vec::with_capacity(count);
-    // kept for the telemetry A/B pass below: handles are structural
-    // hashes, so replaying these submits against a fresh engine yields
-    // the same ids and the replay lines work verbatim
     let mut submit_lines = Vec::with_capacity(count);
     for i in 0..count {
         let mut cell = base;
@@ -672,27 +719,143 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
             platform: Some(platform),
         })
         .to_string();
-        let (resp, _) = engine.handle_line(&line);
         submit_lines.push(line);
+    }
+
+    let sweep = cp_shares.len() > 1;
+    let mut points: Vec<(f64, LoadgenPoint)> = Vec::with_capacity(cp_shares.len());
+    for &share in &cp_shares {
+        if sweep {
+            println!("--- cp-share {share} ---");
+        }
+        match loadgen_point(&cfg, &submit_lines, share) {
+            Ok(pt) => points.push((share, pt)),
+            Err(code) => return code,
+        }
+    }
+
+    // Sweep gates. Both request kinds now feed the same table-level
+    // batcher, so a schedule-heavy point that never gathers means the
+    // schedule path fell off the batched sweep — exactly the regression
+    // this sweep exists to catch. Only enforced when the configuration can
+    // batch at all (window open, dispatchers oversubscribe the workers).
+    let batching_possible = cfg.batch_window > 1 && cfg.clients > cfg.threads_cfg.max(1);
+    if sweep && batching_possible {
+        for (share, pt) in &points {
+            if *share <= 0.5 && pt.batched_requests == 0.0 {
+                eprintln!(
+                    "loadgen: cp-share {share} gathered zero requests — \
+                     schedule traffic is not reaching the batcher"
+                );
+                return 1;
+            }
+        }
+    }
+    // Batch-efficiency floor: a schedule-only mix (cp-share 0.0) must hold
+    // at least half the efficiency of the cp-only baseline (1.0) — both
+    // are the same DP sweeps under the hood. Only judged when the sweep
+    // includes both endpoints.
+    let eff_at = |s: f64| {
+        points
+            .iter()
+            .find(|(x, _)| *x == s)
+            .map(|(_, p)| p.batch_efficiency)
+    };
+    let floor_ok = match (eff_at(0.0), eff_at(1.0)) {
+        (Some(e0), Some(e1)) => e0 >= 0.5 * e1,
+        _ => true,
+    };
+    if sweep {
+        for (share, pt) in &points {
+            println!(
+                "cp-share {share}: efficiency {:.4}, {} gathered, {} table hits",
+                pt.batch_efficiency,
+                pt.batched_requests,
+                pt.entry
+                    .get("table_cache_hits")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0)
+            );
+        }
+        if !floor_ok && batching_possible {
+            eprintln!(
+                "loadgen: batch efficiency at cp-share 0.0 fell below half \
+                 the cp-only baseline — schedule batching regressed"
+            );
+            // the report is still written below so the failure is inspectable
+        }
+    }
+
+    let json_out = parsed.req("json-out");
+    if json_out != "none" {
+        let report = if sweep {
+            Json::obj(vec![
+                ("bench", Json::Str("repro loadgen".to_string())),
+                ("sweep", Json::Str("cp_share".to_string())),
+                ("algorithm", Json::Str(cfg.algo.name().to_string())),
+                (
+                    "points",
+                    Json::Arr(points.iter().map(|(_, p)| p.entry.clone()).collect()),
+                ),
+                ("sweep_batch_floor_ok", Json::Bool(floor_ok)),
+            ])
+        } else {
+            points[0].1.entry.clone()
+        };
+        match std::fs::write(json_out, format!("{}\n", report.to_string())) {
+            Ok(()) => println!("wrote {json_out}"),
+            Err(e) => {
+                eprintln!("could not write {json_out}: {e}");
+                return 1;
+            }
+        }
+    }
+    if points.iter().any(|(_, p)| p.failures > 0) || (sweep && batching_possible && !floor_ok) {
+        1
+    } else {
+        0
+    }
+}
+
+/// Run one replay point of `repro loadgen` against a fresh engine (fresh
+/// caches, so per-point batching counters are not polluted by the previous
+/// mix) and return its report entry plus the values the sweep gates need.
+fn loadgen_point(
+    cfg: &LoadgenCfg,
+    submit_lines: &[String],
+    cp_share: f64,
+) -> Result<LoadgenPoint, i32> {
+    let engine = Engine::new(EngineConfig {
+        cache_capacity: cfg.cache_capacity,
+        intern_capacity: cfg.cache_capacity.max(cfg.count),
+        threads: cfg.threads_cfg,
+        batch_window: cfg.batch_window,
+        // inherit CEFT_TELEMETRY: the same binary serves as both the
+        // telemetry smoke (env on) and the zero-overhead check (env off)
+        telemetry: None,
+    });
+    let mut ids = Vec::with_capacity(cfg.count);
+    for line in submit_lines {
+        let (resp, _) = engine.handle_line(line);
         match resp.get("id").and_then(Json::as_str) {
             Some(id) => match ceft::service::protocol::parse_handle(id) {
                 Ok(h) => ids.push(h),
                 Err(e) => {
                     eprintln!("submit returned a bad handle: {e}");
-                    return 1;
+                    return Err(1);
                 }
             },
             None => {
                 eprintln!("submit failed: {}", resp.to_string());
-                return 1;
+                return Err(1);
             }
         }
     }
     // Replay mix: the first ceil(cp_share * count) instances are requested
-    // as critical paths (the op the engine's cross-request batcher
-    // gathers), the rest as schedules. Deterministic striping, so a given
-    // flag set always produces the same request stream.
-    let cp_count = ((count as f64) * cp_share).ceil() as usize;
+    // as critical paths, the rest as schedules — both route their CEFT
+    // table misses through the engine's cross-request batcher. Deterministic
+    // striping, so a given flag set always produces the same request stream.
+    let cp_count = ((cfg.count as f64) * cp_share).ceil() as usize;
     let lines: Vec<String> = ids
         .iter()
         .enumerate()
@@ -703,7 +866,7 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
                 }
             } else {
                 Request::Schedule {
-                    algorithm: algo,
+                    algorithm: cfg.algo,
                     target: Target::Handle(id),
                 }
             };
@@ -714,7 +877,7 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
     // Fire in 50ms ticks at the target rate; measure what the engine
     // actually sustains.
     let tick = std::time::Duration::from_millis(50);
-    let per_tick = ((rate * tick.as_secs_f64()).ceil() as usize).max(1);
+    let per_tick = ((cfg.rate * tick.as_secs_f64()).ceil() as usize).max(1);
     // Pre-expanded ring: any window of `per_tick` consecutive requests is a
     // contiguous slice, so the hot loop passes borrowed slices instead of
     // cloning multi-KB strings every tick.
@@ -724,10 +887,12 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         .take(lines.len() + per_tick)
         .cloned()
         .collect();
-    let deadline = std::time::Duration::from_secs_f64(duration_s);
+    let deadline = std::time::Duration::from_secs_f64(cfg.duration_s);
     // True per-request latencies: each request is timed individually inside
-    // the worker that serves it (same fan-out as Engine::handle_batch), so
-    // the percentiles below are per-request, not per-tick averages.
+    // the dispatcher that serves it (dispatch width = cfg.clients, which
+    // deliberately oversubscribes the engine's workers so concurrent misses
+    // can pile up past the saturation gate), so the percentiles below are
+    // per-request, not per-tick averages.
     let mut latencies: Vec<f64> = Vec::new();
     let threads = engine.threads();
     let mut sent: u64 = 0;
@@ -737,7 +902,7 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         let tick_start = std::time::Instant::now();
         let offset = sent as usize % lines.len();
         let batch = &ring[offset..offset + per_tick];
-        let results = pool::parallel_map(batch, threads, |_, line| {
+        let results = pool::parallel_map(batch, cfg.clients, |_, line| {
             let t0 = std::time::Instant::now();
             let (resp, _) = engine.handle_line(line);
             (resp, t0.elapsed().as_secs_f64())
@@ -759,12 +924,12 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         // neither report success nor clobber the previous real measurement
         // with a placeholder-shaped requests:0 record
         eprintln!("loadgen: no requests were sent — refusing to report");
-        return 1;
+        return Err(1);
     }
     let achieved = sent as f64 / elapsed;
     println!(
         "loadgen: {} requests in {:.2}s -> {:.0} req/s (target {:.0}), {} failures",
-        sent, elapsed, achieved, rate, failures
+        sent, elapsed, achieved, cfg.rate, failures
     );
     // one sort, three percentile reads (latencies are dead after reporting)
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -806,9 +971,10 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
     };
     let sched_hit_rate = hit_rate("sched_cache");
     println!(
-        "cache hit rate: schedule {:.1}%, cp {:.1}%",
+        "cache hit rate: schedule {:.1}%, cp {:.1}%, table {:.1}%",
         sched_hit_rate * 100.0,
-        hit_rate("cp_cache") * 100.0
+        hit_rate("cp_cache") * 100.0,
+        hit_rate("table_cache") * 100.0
     );
     // Panel-context counters: panels must be computed once per distinct
     // platform (misses == the number of distinct platforms submitted),
@@ -829,37 +995,41 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         "panel ctx cache: {panel_hits} hits, {panel_misses} misses, \
          {panel_builds} interned panel builds"
     );
-    // Cross-request batching: distinct-key critical-path misses the engine
-    // gathered into shared min-plus sweeps. `batch_efficiency` is the
-    // fraction of all replayed requests served inside such a gather — 0.0
-    // on a fully cached or schedule-only mix, rising with concurrent
-    // same-platform cp misses (see EXPERIMENTS.md §SIMD dispatch).
-    let cp_counter = |k: &str| -> f64 {
+    // Cross-request batching: distinct-key CEFT-table misses — whether
+    // raised by a critical-path request or a table-consuming scheduler —
+    // the engine gathered into shared min-plus sweeps. `batch_efficiency`
+    // is the fraction of all replayed requests served inside such a gather
+    // — 0.0 on a fully cached mix, rising with concurrent same-platform
+    // misses of either kind (see EXPERIMENTS.md §Gathered schedule tables).
+    let table_counter = |k: &str| -> f64 {
         stats
-            .get("cp_cache")
+            .get("table_cache")
             .and_then(|c| c.get(k))
             .and_then(Json::as_f64)
             .unwrap_or(0.0)
     };
-    let batched_requests = cp_counter("batched_requests");
-    let batch_width = cp_counter("batch_width");
+    let batched_requests = table_counter("batched_requests");
+    let batch_width = table_counter("batch_width");
+    let (table_hits, table_misses) = (table_counter("hits"), table_counter("misses"));
+    let cp_schedule_shares = table_counter("cp_schedule_shares");
     let batch_efficiency = batched_requests / sent as f64;
     println!(
         "cross-request batching: {batched_requests} gathered requests \
-         (max width {batch_width}), efficiency {batch_efficiency:.4}"
+         (max width {batch_width}), efficiency {batch_efficiency:.4}, \
+         {cp_schedule_shares} cp<->schedule table shares"
     );
     // With an explicit --platform-mix the distinct-platform count is under
     // our control, so enforce the residency invariant: panels built once
     // per platform, never per request. (Without it, the workload's own
     // platform stream decides — e.g. two-weight families draw a fresh
     // platform per seed — so only the counters are reported.)
-    if platform_mix > 1 && panel_builds as usize != platform_mix.min(count) {
+    if cfg.platform_mix > 1 && panel_builds as usize != cfg.platform_mix.min(cfg.count) {
         eprintln!(
             "loadgen: {} interned panel builds != distinct platforms {} — panels were rebuilt",
             panel_builds,
-            platform_mix.min(count)
+            cfg.platform_mix.min(cfg.count)
         );
-        return 1;
+        return Err(1);
     }
     // Telemetry self-check (only when recording): a replay that parsed,
     // interned, resolved, computed and responded must have samples in
@@ -879,12 +1049,12 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         for required in ["parse", "intern", "ctx_build", "cache_probe", "respond"] {
             if stage_count(required) == 0.0 {
                 eprintln!("loadgen: stage {required:?} recorded no samples — a telemetry hook is dead");
-                return 1;
+                return Err(1);
             }
         }
         if stage_count("kernel") + stage_count("batch_drain") == 0.0 {
             eprintln!("loadgen: no kernel or batch_drain samples — compute was never attributed");
-            return 1;
+            return Err(1);
         }
         let queued = stage_count("queue_wait") > 0.0 || stage_count("batch_drain") > 0.0;
         if queued != (batched_requests > 0.0) {
@@ -892,7 +1062,7 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
                 "loadgen: queue_wait/batch_drain samples disagree with \
                  batched_requests = {batched_requests}"
             );
-            return 1;
+            return Err(1);
         }
     }
     // Telemetry overhead A/B: replay the same mix, hot-cache, against two
@@ -902,13 +1072,13 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
     // EXPERIMENTS.md §Telemetry for the protocol and the ≤2% budget).
     let ab_pass = |telemetry: bool| -> Result<f64, String> {
         let eng = Engine::new(EngineConfig {
-            cache_capacity,
-            intern_capacity: cache_capacity.max(count),
-            threads: threads_cfg,
-            batch_window,
+            cache_capacity: cfg.cache_capacity,
+            intern_capacity: cfg.cache_capacity.max(cfg.count),
+            threads: cfg.threads_cfg,
+            batch_window: cfg.batch_window,
             telemetry: Some(telemetry),
         });
-        for line in &submit_lines {
+        for line in submit_lines {
             let (resp, _) = eng.handle_line(line);
             if resp.get("ok") != Some(&Json::Bool(true)) {
                 return Err(format!("A/B submit failed: {}", resp.to_string()));
@@ -932,7 +1102,7 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         (Ok(on), Ok(off)) => (on, off, (off / on - 1.0) * 100.0),
         (Err(e), _) | (_, Err(e)) => {
             eprintln!("loadgen: {e}");
-            return 1;
+            return Err(1);
         }
     };
     println!(
@@ -941,64 +1111,60 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
     );
     println!("{}", stats.to_string());
     // Machine-readable perf record, tracked across PRs (see EXPERIMENTS.md
-    // §Workspace for the before/after methodology).
-    let json_out = parsed.req("json-out");
-    if json_out != "none" {
-        let report = Json::obj(vec![
-            ("bench", Json::Str("repro loadgen".to_string())),
-            ("algorithm", Json::Str(algo.name().to_string())),
-            ("instances", Json::Num(count as f64)),
-            ("platform_mix", Json::Num(platform_mix as f64)),
-            ("cp_share", Json::Num(cp_share)),
-            ("panel_ctx_hits", Json::Num(panel_hits)),
-            ("panel_ctx_misses", Json::Num(panel_misses)),
-            ("batched_requests", Json::Num(batched_requests)),
-            ("batch_width", Json::Num(batch_width)),
-            ("batch_efficiency", Json::Num(batch_efficiency)),
-            ("threads", Json::Num(threads as f64)),
-            ("target_rps", Json::Num(rate)),
-            ("duration_s", Json::Num(elapsed)),
-            ("requests", Json::Num(sent as f64)),
-            ("failures", Json::Num(failures as f64)),
-            ("achieved_rps", Json::Num(achieved)),
-            (
-                "latency_us",
-                Json::obj(vec![
-                    ("p50", Json::Num(p50 * 1e6)),
-                    ("p95", Json::Num(p95 * 1e6)),
-                    ("p99", Json::Num(p99 * 1e6)),
-                    ("mean", Json::Num(mean_lat * 1e6)),
-                    ("max", Json::Num(max_lat * 1e6)),
-                ]),
-            ),
-            ("schedule_cache_hit_rate", Json::Num(sched_hit_rate)),
-            (
-                "telemetry",
-                Json::Str(if telemetry_on { "on" } else { "off" }.to_string()),
-            ),
-            // per-stage latency percentiles from the engine's recorder
-            // (µs; empty histograms when the env switch is off)
-            (
-                "stages",
-                stats.get("stages").cloned().unwrap_or_else(|| Json::obj(vec![])),
-            ),
-            ("ab_rps_on", Json::Num(ab_rps_on)),
-            ("ab_rps_off", Json::Num(ab_rps_off)),
-            ("telemetry_overhead_pct", Json::Num(overhead_pct)),
-        ]);
-        match std::fs::write(json_out, format!("{}\n", report.to_string())) {
-            Ok(()) => println!("wrote {json_out}"),
-            Err(e) => {
-                eprintln!("could not write {json_out}: {e}");
-                return 1;
-            }
-        }
-    }
-    if failures > 0 {
-        1
-    } else {
-        0
-    }
+    // §Workspace for the before/after methodology). In sweep mode this
+    // entry becomes one element of the report's `points` array.
+    let entry = Json::obj(vec![
+        ("bench", Json::Str("repro loadgen".to_string())),
+        ("algorithm", Json::Str(cfg.algo.name().to_string())),
+        ("instances", Json::Num(cfg.count as f64)),
+        ("platform_mix", Json::Num(cfg.platform_mix as f64)),
+        ("cp_share", Json::Num(cp_share)),
+        ("panel_ctx_hits", Json::Num(panel_hits)),
+        ("panel_ctx_misses", Json::Num(panel_misses)),
+        ("batched_requests", Json::Num(batched_requests)),
+        ("batch_width", Json::Num(batch_width)),
+        ("batch_efficiency", Json::Num(batch_efficiency)),
+        ("table_cache_hits", Json::Num(table_hits)),
+        ("table_cache_misses", Json::Num(table_misses)),
+        ("cp_schedule_shares", Json::Num(cp_schedule_shares)),
+        ("threads", Json::Num(threads as f64)),
+        ("clients", Json::Num(cfg.clients as f64)),
+        ("target_rps", Json::Num(cfg.rate)),
+        ("duration_s", Json::Num(elapsed)),
+        ("requests", Json::Num(sent as f64)),
+        ("failures", Json::Num(failures as f64)),
+        ("achieved_rps", Json::Num(achieved)),
+        (
+            "latency_us",
+            Json::obj(vec![
+                ("p50", Json::Num(p50 * 1e6)),
+                ("p95", Json::Num(p95 * 1e6)),
+                ("p99", Json::Num(p99 * 1e6)),
+                ("mean", Json::Num(mean_lat * 1e6)),
+                ("max", Json::Num(max_lat * 1e6)),
+            ]),
+        ),
+        ("schedule_cache_hit_rate", Json::Num(sched_hit_rate)),
+        (
+            "telemetry",
+            Json::Str(if telemetry_on { "on" } else { "off" }.to_string()),
+        ),
+        // per-stage latency percentiles from the engine's recorder
+        // (µs; empty histograms when the env switch is off)
+        (
+            "stages",
+            stats.get("stages").cloned().unwrap_or_else(|| Json::obj(vec![])),
+        ),
+        ("ab_rps_on", Json::Num(ab_rps_on)),
+        ("ab_rps_off", Json::Num(ab_rps_off)),
+        ("telemetry_overhead_pct", Json::Num(overhead_pct)),
+    ]);
+    Ok(LoadgenPoint {
+        entry,
+        batched_requests,
+        batch_efficiency,
+        failures,
+    })
 }
 
 fn cmd_runtime_check(tokens: &[String]) -> i32 {

@@ -8,7 +8,7 @@
 //! mapping instead of collapsing the path onto one processor.
 
 use super::{list_schedule_with, PlacementWs, Schedule, Scheduler};
-use crate::cp::ceft::find_critical_path_with;
+use crate::cp::ceft::{critical_path_from_table, find_critical_path_with, CeftTable};
 use crate::cp::ranks::cpop_priorities_into;
 use crate::cp::workspace::Workspace;
 use crate::model::InstanceRef;
@@ -30,6 +30,23 @@ impl Scheduler for CeftCpop {
         // algorithm remains the same", §6)
         cpop_priorities_into(ws, inst);
         // pin every CP task to the class its partial assignment chose
+        cp.fill_assignment_dense(inst.n(), &mut ws.pins);
+        list_schedule_with(ws, inst, PlacementWs::Pinned)
+    }
+
+    fn schedule_with_table(
+        &self,
+        ws: &mut Workspace,
+        inst: InstanceRef,
+        table: &CeftTable,
+    ) -> Schedule {
+        assert_eq!(table.p, inst.p(), "table/platform class count mismatch");
+        // the caller's forward table replaces the DP; sink selection and
+        // backtracking are the same code path schedule_with runs over the
+        // workspace buffers, so the pins — and the schedule — match bit
+        // for bit
+        let cp = critical_path_from_table(inst.graph, table);
+        cpop_priorities_into(ws, inst);
         cp.fill_assignment_dense(inst.n(), &mut ws.pins);
         list_schedule_with(ws, inst, PlacementWs::Pinned)
     }

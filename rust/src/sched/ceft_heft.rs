@@ -11,7 +11,7 @@
 //! HEFT-DOWN). Placement stays min-EFT.
 
 use super::{list_schedule_with, PlacementWs, Schedule, Scheduler};
-use crate::cp::ceft::{ceft_table_into, ceft_table_rev_into};
+use crate::cp::ceft::{ceft_table_into, ceft_table_rev_into, CeftTable};
 use crate::cp::workspace::Workspace;
 use crate::model::InstanceRef;
 
@@ -71,6 +71,20 @@ impl Scheduler for CeftHeftUp {
         min_rows_into(table, inst.n(), inst.p(), prio);
         list_schedule_with(ws, inst, PlacementWs::MinEft)
     }
+
+    fn schedule_with_table(
+        &self,
+        ws: &mut Workspace,
+        inst: InstanceRef,
+        table: &CeftTable,
+    ) -> Schedule {
+        // the caller's *reverse*-orientation table replaces the transpose
+        // DP; row minima and placement are unchanged, so the schedule is
+        // bit-identical to schedule_with
+        assert_eq!(table.p, inst.p(), "table/platform class count mismatch");
+        min_rows_into(&table.table, inst.n(), inst.p(), &mut ws.prio);
+        list_schedule_with(ws, inst, PlacementWs::MinEft)
+    }
 }
 
 /// HEFT with the CEFT downward rank.
@@ -86,6 +100,22 @@ impl Scheduler for CeftHeftDown {
         ceft_table_into(ws, inst);
         let Workspace { table, down, prio, .. } = &mut *ws;
         min_rows_into(table, inst.n(), inst.p(), down);
+        prio.clear();
+        prio.extend(down.iter().map(|d| -d));
+        list_schedule_with(ws, inst, PlacementWs::MinEft)
+    }
+
+    fn schedule_with_table(
+        &self,
+        ws: &mut Workspace,
+        inst: InstanceRef,
+        table: &CeftTable,
+    ) -> Schedule {
+        // the caller's *forward* table replaces the DP; the negated-rank
+        // priority build matches schedule_with exactly
+        assert_eq!(table.p, inst.p(), "table/platform class count mismatch");
+        let Workspace { down, prio, .. } = &mut *ws;
+        min_rows_into(&table.table, inst.n(), inst.p(), down);
         prio.clear();
         prio.extend(down.iter().map(|d| -d));
         list_schedule_with(ws, inst, PlacementWs::MinEft)

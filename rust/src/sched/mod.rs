@@ -19,6 +19,35 @@
 //! nothing but the returned [`Schedule`]; [`Scheduler::schedule`] is the
 //! classic convenience signature over a one-shot workspace. Outputs are
 //! bit-identical either way (see `rust/tests/workspace.rs`).
+//!
+//! ## The `run_with_tables` contract
+//!
+//! The CEFT-based schedulers spend most of their time filling the same
+//! `v × P` CEFT table the critical-path answer is derived from — the
+//! paper's mutual-inclusivity observation. [`Algorithm::run_with_tables`]
+//! lets a caller that already holds that table (the service engine's
+//! table memo, the batch harness's per-instance reuse) hand it in as a
+//! borrowed [`CeftTable`] and skip the DP entirely:
+//!
+//! * [`Algorithm::table_use`] declares which orientation an algorithm
+//!   consumes — [`TableDir::Forward`] ([`Algorithm::CeftCpop`],
+//!   [`Algorithm::CeftHeftDown`]), [`TableDir::Reverse`]
+//!   ([`Algorithm::CeftHeftUp`]), or `None` for the mean-value schedulers,
+//!   which never touch a CEFT table.
+//! * The **caller** is responsible for passing a table of the declared
+//!   orientation computed over *exactly* the instance being scheduled
+//!   (same graph, platform, and cost matrix). Passing `None` — or any
+//!   table to a `table_use() == None` algorithm — falls back to
+//!   [`Algorithm::run_with`], recomputing in the workspace.
+//! * Bit-identity is guaranteed: for a correctly-oriented table, the
+//!   schedule equals [`Algorithm::run_with`]'s bit for bit (placements
+//!   *and* times), because the table-accepting paths
+//!   ([`Scheduler::schedule_with_table`]) consume the table through the
+//!   same rank/pin machinery the recomputing paths feed from workspace
+//!   buffers. `prop_run_with_tables_bit_identical` in
+//!   `rust/tests/properties.rs` enforces this for every registry entry,
+//!   with tables from both the serial producers and the gathered sweep
+//!   ([`crate::cp::ceft::find_ceft_tables_gathered`]).
 
 pub mod ceft_cpop;
 pub mod ceft_heft;
@@ -26,6 +55,7 @@ pub mod cpop;
 pub mod gantt;
 pub mod heft;
 
+use crate::cp::ceft::CeftTable;
 use crate::cp::workspace::{ReadyEntry, Workspace};
 use crate::graph::TaskGraph;
 use crate::model::{CostMatrix, InstanceRef};
@@ -128,6 +158,33 @@ pub trait Scheduler {
     fn schedule(&self, inst: InstanceRef) -> Schedule {
         self.schedule_with(&mut Workspace::new(), inst)
     }
+
+    /// Produce a schedule reusing a caller-held CEFT table of this
+    /// scheduler's orientation (see the module docs' `run_with_tables`
+    /// contract) instead of recomputing the DP. The default ignores the
+    /// table and recomputes — correct for every scheduler, which is what
+    /// keeps the mean-value schedulers untouched; the CEFT-based
+    /// schedulers override it to skip their dominant cost. Bit-identical
+    /// to [`Scheduler::schedule_with`] for a correctly-oriented table.
+    fn schedule_with_table(
+        &self,
+        ws: &mut Workspace,
+        inst: InstanceRef,
+        table: &CeftTable,
+    ) -> Schedule {
+        let _ = table;
+        self.schedule_with(ws, inst)
+    }
+}
+
+/// Which CEFT-table orientation an algorithm consumes through
+/// [`Algorithm::run_with_tables`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TableDir {
+    /// the forward DP of [`crate::cp::ceft::ceft_table_with`]
+    Forward,
+    /// the transpose DP of [`crate::cp::ceft::ceft_table_rev_with`]
+    Reverse,
 }
 
 /// The unified algorithm registry: one name per scheduler, shared by the
@@ -213,12 +270,42 @@ impl Algorithm {
         }
     }
 
+    /// The CEFT-table orientation this algorithm can reuse through
+    /// [`Algorithm::run_with_tables`], or `None` for the mean-value
+    /// schedulers (which never compute a CEFT table and so have nothing
+    /// to skip).
+    pub const fn table_use(&self) -> Option<TableDir> {
+        match self {
+            Algorithm::CeftCpop | Algorithm::CeftHeftDown => Some(TableDir::Forward),
+            Algorithm::CeftHeftUp => Some(TableDir::Reverse),
+            Algorithm::Cpop | Algorithm::Heft | Algorithm::HeftDown => None,
+        }
+    }
+
     /// Schedule an instance with this algorithm and caller-provided scratch
     /// — the entry point of the online service's per-request dispatch and
     /// the batch harness. Allocates nothing but the returned schedule once
     /// `ws` has warmed to the instance size.
     pub fn run_with(&self, ws: &mut Workspace, inst: InstanceRef) -> Schedule {
         self.scheduler().schedule_with(ws, inst)
+    }
+
+    /// Schedule an instance reusing a caller-held CEFT table when one is
+    /// offered *and* this algorithm consumes one
+    /// ([`Algorithm::table_use`]); falls back to [`Algorithm::run_with`]
+    /// otherwise. The caller must pass a table of the declared orientation
+    /// computed over exactly this instance — see the module docs for the
+    /// full contract. Bit-identical to [`Algorithm::run_with`] either way.
+    pub fn run_with_tables(
+        &self,
+        ws: &mut Workspace,
+        inst: InstanceRef,
+        table: Option<&CeftTable>,
+    ) -> Schedule {
+        match (self.table_use(), table) {
+            (Some(_), Some(t)) => self.scheduler().schedule_with_table(ws, inst, t),
+            _ => self.run_with(ws, inst),
+        }
     }
 
     /// Schedule an instance with this algorithm (one-shot workspace).
@@ -619,6 +706,32 @@ mod tests {
         let via_registry = Algorithm::CeftCpop.schedule(inst);
         let direct = crate::sched::ceft_cpop::CeftCpop.schedule(inst);
         assert_eq!(via_registry.assignments, direct.assignments);
+    }
+
+    #[test]
+    fn run_with_tables_matches_run_with_for_every_algorithm() {
+        // the declared-orientation table path and the recomputing path
+        // must agree bit for bit; None always falls back to run_with
+        let (g, plat, comp) = tiny();
+        let inst = InstanceRef::new(&g, &plat, &comp);
+        let mut ws = Workspace::new();
+        let mut ws2 = Workspace::new();
+        for a in Algorithm::ALL {
+            let direct = a.run_with(&mut ws, inst);
+            let table = match a.table_use() {
+                Some(TableDir::Forward) => {
+                    Some(crate::cp::ceft::ceft_table_with(&mut ws2, inst))
+                }
+                Some(TableDir::Reverse) => {
+                    Some(crate::cp::ceft::ceft_table_rev_with(&mut ws2, inst))
+                }
+                None => None,
+            };
+            let via_table = a.run_with_tables(&mut ws2, inst, table.as_ref());
+            assert_eq!(direct.assignments, via_table.assignments, "{}", a.name());
+            let fallback = a.run_with_tables(&mut ws2, inst, None);
+            assert_eq!(direct.assignments, fallback.assignments, "{}", a.name());
+        }
     }
 
     #[test]

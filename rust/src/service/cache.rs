@@ -49,6 +49,11 @@ pub struct CacheStats {
     /// high-water gather width: the widest multi-request sweep observed
     /// (0 until the first batch of width ≥ 2 forms)
     pub batch_width: u64,
+    /// cp↔schedule table shares: lookups of one request kind (critical
+    /// path vs schedule) served by a memoized CEFT table the *other* kind
+    /// computed — each is a whole `O(P²e)` DP the mutual-inclusivity memo
+    /// eliminated (only meaningful on the engine's table cache)
+    pub cp_schedule_shares: u64,
 }
 
 impl CacheStats {
@@ -62,6 +67,7 @@ impl CacheStats {
         self.dedup_hits += other.dedup_hits;
         self.batched_requests += other.batched_requests;
         self.batch_width = self.batch_width.max(other.batch_width);
+        self.cp_schedule_shares += other.cp_schedule_shares;
     }
 }
 
@@ -197,6 +203,13 @@ impl<K: Eq + Hash + Copy, V> LruCache<K, V> {
         }
     }
 
+    /// Record one cp↔schedule table share: a lookup of one request kind
+    /// served by a table the other kind computed (the engine's table memo
+    /// — one eliminated `O(P²e)` DP per call).
+    pub fn record_share(&mut self) {
+        self.stats.cp_schedule_shares += 1;
+    }
+
     /// Counter snapshot.
     pub fn stats(&self) -> CacheStats {
         self.stats
@@ -312,6 +325,20 @@ mod tests {
         assert_eq!(agg.batched_requests, 12);
         assert_eq!(agg.batch_width, 3, "width merges as a high-water mark");
         assert_eq!(agg.hits, 4);
+    }
+
+    #[test]
+    fn share_counter_accumulates_and_merges() {
+        let mut c: LruCache<CacheKey, u32> = LruCache::new(2);
+        c.record_share();
+        c.record_share();
+        assert_eq!(c.stats().cp_schedule_shares, 2);
+        let mut agg = CacheStats {
+            cp_schedule_shares: 3,
+            ..CacheStats::default()
+        };
+        agg.merge(&c.stats());
+        assert_eq!(agg.cp_schedule_shares, 5, "shares merge additively");
     }
 
     #[test]

@@ -42,22 +42,35 @@
 //! stays bounded — see EXPERIMENTS.md §Workspace and §Platform contexts
 //! for the benchmark methodology.
 //!
-//! Cross-request batching: distinct-key critical-path misses on **one
-//! platform** are gathered into a single lock-step
-//! [`crate::cp::ceft::find_critical_paths_gathered`] sweep by the shard's
+//! Cross-request batching: the CEFT **table** is the shared
+//! sub-computation of critical-path requests *and* the CEFT-family
+//! schedulers, so the engine memoizes it in its own per-shard cache
+//! (`table_cache`, keyed like the result caches with a direction marker in
+//! the algorithm slot — `TABLE_FWD_MARKER` / `TABLE_REV_MARKER`) and
+//! gathers distinct-key table misses on **one platform** into lock-step
+//! [`crate::cp::ceft::find_ceft_tables_gathered`] sweeps via the shard's
 //! `BatchCollector` (group commit, saturation-gated, no added wait: below
 //! `threads` in-flight gathers every distinct miss computes on its own
 //! core exactly as before; a key leader that arrives once the worker
 //! budget is saturated queues instead of oversubscribing, and each
 //! finishing gather promotes the queue's head, which drains up to
-//! [`EngineConfig::batch_window`] queued requests into one sweep and fans
-//! each result back to its single-flight cell). Results are bit-identical
-//! to serial dispatch — the gathered DP preserves the per-instance
-//! comparison sequence exactly — and the `batched_requests` /
-//! `batch_width` counters in the cp-cache stats (and
-//! `repro loadgen`'s batch-efficiency line) measure how often it engages.
-//! A gather leader that unwinds resolves every gathered cell with a retry
-//! signal and re-raises, exactly like a single-flight leader.
+//! [`EngineConfig::batch_window`] queued requests into one sweep — one
+//! sweep per table direction present in the window — and fans each result
+//! back to its single-flight cell). A critical-path miss derives its path
+//! from the memoized table ([`crate::cp::ceft::critical_path_from_table`]);
+//! a CEFT-based schedule miss borrows the same table through
+//! [`crate::sched::Algorithm::run_with_tables`] — so schedule traffic
+//! joins the same gathered sweeps as cp misses, and a mixed cp+schedule
+//! workload computes each instance's table exactly once (the
+//! `cp_schedule_shares` counter in the table-cache stats counts those
+//! cross-workload reuses). Results are bit-identical to serial dispatch —
+//! the gathered DP preserves the per-instance comparison sequence exactly,
+//! and the table-borrowing schedulers run the same priority/placement code
+//! over the same bits — and the `batched_requests` / `batch_width`
+//! counters in the table-cache stats (and `repro loadgen`'s
+//! batch-efficiency line) measure how often it engages. A gather leader
+//! that unwinds resolves every gathered cell with a retry signal and
+//! re-raises, exactly like a single-flight leader.
 //!
 //! Serving loops: [`serve_stdio`] speaks the protocol on stdin/stdout,
 //! greedily draining whatever lines are already buffered into one batch;
@@ -72,7 +85,7 @@
 //! `repro serve --metrics-addr` exposition endpoint. `queue_wait` and
 //! `batch_drain` are charged **only** to requests actually served by a
 //! width ≥ 2 gathered sweep — the gather leader stamps each drained
-//! request's park and sweep durations into its [`PendingCp`]'s
+//! request's park and sweep durations into its [`PendingTable`]'s
 //! [`BatchTiming`] cell, and the parked thread records them after its
 //! single-flight cell resolves. A follower parked behind an identical-key
 //! leader, and a promoted gather leader's own park, charge `cache_probe`
@@ -80,14 +93,17 @@
 //! (`CEFT_TELEMETRY=off`, or `EngineConfig::telemetry = Some(false)`)
 //! every hook degrades to a branch-predictable no-op with no clock reads.
 
-use crate::cp::ceft::{find_critical_path_with, find_critical_paths_gathered, CriticalPath};
+use crate::cp::ceft::{
+    ceft_table_rev_with, ceft_table_with, critical_path_from_table, find_ceft_tables_gathered,
+    CeftTable, CriticalPath,
+};
 use crate::graph::generator::Instance;
 use crate::graph::io;
 use crate::graph::TaskGraph;
 use crate::model::{CostMatrix, InstanceRef, PlatformCtx};
 use crate::obs::{self, Recorder, RequestTrace, Stage};
 use crate::platform::Platform;
-use crate::sched::{Algorithm, Schedule};
+use crate::sched::{Algorithm, Schedule, TableDir};
 use crate::service::cache::{CacheKey, CacheStats, LruCache};
 use crate::service::hashing;
 use crate::service::protocol::{self, Request, Target};
@@ -103,6 +119,17 @@ use std::time::Instant;
 /// Algorithm-slot marker for critical-path cache entries. Real algorithm
 /// ids ([`Algorithm::id`]) are small; this can never collide.
 const CP_MARKER: u64 = u64::MAX;
+
+/// Algorithm-slot marker for **forward** CEFT-table cache entries: the
+/// memoized `(graph, platform, comp)` table shared by critical-path
+/// requests and the forward-table schedulers (CEFT-CPOP, CEFT-HEFT-DOWN).
+const TABLE_FWD_MARKER: u64 = u64::MAX - 1;
+
+/// Algorithm-slot marker for **reverse** (transposed-DAG) CEFT-table cache
+/// entries, consumed by CEFT-HEFT-UP. A separate slot from
+/// [`TABLE_FWD_MARKER`] because the two orientations are distinct DPs over
+/// the same instance.
+const TABLE_REV_MARKER: u64 = u64::MAX - 2;
 
 /// Cap on one protocol line over TCP, enforced *before* the line is parsed
 /// (the JSON-level `MAX_TASKS` guard only runs after a full line is
@@ -227,28 +254,54 @@ enum Flight<T> {
 
 /// The (result cache, in-flight table) pair [`Engine::single_flight`]
 /// operates on, projected out of [`ShardState`] by a plain fn pointer.
-/// NOTE: since the cross-request batcher landed, only the **schedule**
-/// cache routes through the generic `single_flight`; the critical-path
-/// cache runs the same admission/follower/leader-unwind protocol inline
-/// in `Engine::critical_path_for` (it needs the gather queue between
-/// admission and compute). A concurrency-protocol fix in one place must
-/// be mirrored in the other — `racing_identical_requests_are_single_flight`
-/// and `concurrent_distinct_cp_requests_match_serial_and_count_sanely`
+/// NOTE: since the table memo layer landed, both **result** caches
+/// (critical paths and schedules) route through the generic
+/// `single_flight` — their compute closures delegate the heavy DP to
+/// `Engine::table_for`. The **table** cache runs the same
+/// admission/follower/leader-unwind protocol inline in `table_for` (it
+/// needs the gather queue between admission and compute). A
+/// concurrency-protocol fix in one place must be mirrored in the other —
+/// `racing_identical_requests_are_single_flight` and
+/// `concurrent_distinct_cp_requests_match_serial_and_count_sanely`
 /// cover both sides.
 type Slots<'a, T> = (
     &'a mut LruCache<CacheKey, Arc<T>>,
     &'a mut HashMap<CacheKey, Arc<Inflight<T>>>,
 );
 
-/// [`Slots`] projection for the schedule cache. (The critical-path cache
-/// runs its own admission loop in `Engine::critical_path_for` — same
-/// protocol, extended with the cross-request gather queue.)
+/// [`Slots`] projection for the schedule cache.
 fn sched_slots(st: &mut ShardState) -> Slots<'_, Schedule> {
     (&mut st.sched_cache, &mut st.sched_inflight)
 }
 
+/// [`Slots`] projection for the critical-path cache. (The table cache
+/// runs its own admission loop in `Engine::table_for` — same protocol,
+/// extended with the cross-request gather queue.)
+fn cp_slots(st: &mut ShardState) -> Slots<'_, CriticalPath> {
+    (&mut st.cp_cache, &mut st.cp_inflight)
+}
+
+/// Which kind of request first computed (or is computing) a memoized CEFT
+/// table. When a request of the *other* kind later consumes the entry, the
+/// table cache records a `cp_schedule_shares` event — the cross-workload
+/// reuse the table memo layer exists for (one instance's table serves its
+/// critical path *and* its CEFT-family schedules).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TableOrigin {
+    Cp,
+    Schedule,
+}
+
+/// A memoized CEFT table plus the kind of request that computed it (for
+/// the `cp_schedule_shares` counter; the bits of `table` are independent
+/// of origin).
+struct MemoTable {
+    table: CeftTable,
+    origin: TableOrigin,
+}
+
 /// Park/sweep durations a gather leader stamps into each drained
-/// request's [`PendingCp`] so the *requester's* trace can charge its own
+/// request's [`PendingTable`] so the *requester's* trace can charge its own
 /// `queue_wait` / `batch_drain` stages: the leader thread does the timing
 /// (the parked thread is inside `Condvar::wait`), the parked thread does
 /// the recording after its cell resolves — the cell's mutex provides the
@@ -260,13 +313,18 @@ struct BatchTiming {
     drain_ns: AtomicU64,
 }
 
-/// One critical-path request parked in (or drained from) a shard's
-/// [`BatchCollector`]: the interned instance to relax, its cache key, and
-/// the single-flight cell its result (or retry signal) fans back to.
-struct PendingCp {
+/// One CEFT-table request parked in (or drained from) a shard's
+/// [`BatchCollector`]: the interned instance to relax, its cache key, the
+/// table orientation, who asked (for share accounting), and the
+/// single-flight cell its result (or retry signal) fans back to.
+struct PendingTable {
     inst: Arc<Interned>,
     key: CacheKey,
-    cell: Arc<Inflight<CriticalPath>>,
+    /// `true` = reverse (transposed-DAG) orientation
+    rev: bool,
+    /// the kind of request leading this table computation
+    origin: TableOrigin,
+    cell: Arc<Inflight<MemoTable>>,
     /// when this request entered the collector (the drain leader measures
     /// park time against it)
     queued_at: Instant,
@@ -275,23 +333,25 @@ struct PendingCp {
 }
 
 /// The cross-request gather queue of one shard. Group-commit shaped and
-/// **saturation-gated**: a critical-path key leader computes immediately
-/// while the shard has fewer than `Engine::threads` gathers in flight
-/// (below saturation every distinct miss still gets its own core, exactly
-/// like pre-batching dispatch — zero added latency, and a width-1
-/// "gather" runs the plain fused kernel); only once the worker budget is
-/// saturated do further leaders park here instead of oversubscribing the
-/// CPU. Each finishing gather promotes the queue head, which drains up to
-/// `batch_window` parked requests into one
-/// [`find_critical_paths_gathered`] sweep — batches form exactly when
-/// load exceeds the cores, which is when amortising panel/table traffic
-/// pays instead of costing parallelism.
+/// **saturation-gated**: a table key leader computes immediately while
+/// the shard has fewer than `Engine::threads` gathers in flight (below
+/// saturation every distinct miss still gets its own core, exactly like
+/// pre-batching dispatch — zero added latency, and a width-1 "gather"
+/// runs the plain fused kernel); only once the worker budget is saturated
+/// do further leaders park here instead of oversubscribing the CPU. Each
+/// finishing gather promotes the queue head, which drains up to
+/// `batch_window` parked requests into one drain — one
+/// [`find_ceft_tables_gathered`] sweep per table direction present in the
+/// window — batches form exactly when load exceeds the cores, which is
+/// when amortising panel/table traffic pays instead of costing
+/// parallelism. Because the queue holds *table* requests, critical-path
+/// and CEFT-schedule misses gather together.
 #[derive(Default)]
 struct BatchCollector {
     /// gathers (width ≥ 1) for this shard currently computing
     active: usize,
     /// key leaders parked while the shard is at its gather budget, FIFO
-    pending: VecDeque<PendingCp>,
+    pending: VecDeque<PendingTable>,
 }
 
 /// Per-platform-context cache shard: the memo caches, single-flight
@@ -309,12 +369,16 @@ struct CacheShard {
 struct ShardState {
     cp_cache: LruCache<CacheKey, Arc<CriticalPath>>,
     sched_cache: LruCache<CacheKey, Arc<Schedule>>,
+    /// the memoized CEFT tables (forward and reverse entries, marker-keyed)
+    /// both result caches' misses derive from
+    table_cache: LruCache<CacheKey, Arc<MemoTable>>,
     /// single-flight tables: uncached keys currently being computed; the
     /// entry is inserted by the leader under this same mutex and removed
     /// when its result lands in the cache, so membership here is exact
     cp_inflight: HashMap<CacheKey, Arc<Inflight<CriticalPath>>>,
     sched_inflight: HashMap<CacheKey, Arc<Inflight<Schedule>>>,
-    /// the shard's cross-request critical-path gather queue
+    table_inflight: HashMap<CacheKey, Arc<Inflight<MemoTable>>>,
+    /// the shard's cross-request table gather queue
     collector: BatchCollector,
 }
 
@@ -324,8 +388,10 @@ impl CacheShard {
             state: Mutex::new(ShardState {
                 cp_cache: LruCache::new(cache_capacity),
                 sched_cache: LruCache::new(cache_capacity),
+                table_cache: LruCache::new(cache_capacity),
                 cp_inflight: HashMap::new(),
                 sched_inflight: HashMap::new(),
+                table_inflight: HashMap::new(),
                 collector: BatchCollector::default(),
             }),
         }
@@ -345,8 +411,10 @@ impl CacheShard {
         ShardSnapshot {
             cp_len: st.cp_cache.len(),
             sched_len: st.sched_cache.len(),
+            table_len: st.table_cache.len(),
             cp: st.cp_cache.stats(),
             sched: st.sched_cache.stats(),
+            table: st.table_cache.stats(),
         }
     }
 }
@@ -355,8 +423,10 @@ impl CacheShard {
 struct ShardSnapshot {
     cp_len: usize,
     sched_len: usize,
+    table_len: usize,
     cp: CacheStats,
     sched: CacheStats,
+    table: CacheStats,
 }
 
 /// Request counters — plain atomics so the hit path bumps them without
@@ -368,6 +438,11 @@ struct Counters {
     submits: AtomicU64,
     cp_requests: AtomicU64,
     schedule_requests: AtomicU64,
+    /// calls into [`Engine::handle_batch`] (pipelined client batches)
+    batches: AtomicU64,
+    /// request lines fanned across the pool by those calls; `batch_lines /
+    /// batches` is the mean client-side pipelining depth
+    batch_lines: AtomicU64,
 }
 
 impl Counters {
@@ -655,13 +730,17 @@ impl Engine {
     /// removes the in-flight entry before re-raising, so followers loop
     /// back into admission instead of parking forever. Returns
     /// `(result, was_cached)`; followers report `cached = true` (the
-    /// answer came from another request's computation).
+    /// answer came from another request's computation). `compute` receives
+    /// the leader's trace and charges its own stages (both result caches
+    /// delegate their DP to [`Engine::table_for`], which attributes
+    /// kernel/queue/drain time itself; the residual scheduling or
+    /// path-derivation work is charged to `kernel` by the closure).
     fn single_flight<T>(
         &self,
         shard: &CacheShard,
         key: CacheKey,
         slots: for<'a> fn(&'a mut ShardState) -> Slots<'a, T>,
-        compute: impl Fn() -> T,
+        compute: impl Fn(&mut RequestTrace) -> T,
         trace: &mut RequestTrace,
     ) -> (Arc<T>, bool) {
         loop {
@@ -700,12 +779,8 @@ impl Engine {
                     // request may become the new leader)
                 }
                 Flight::Leader(f) => {
-                    let t_compute = trace.clock();
                     let computed =
-                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| compute()));
-                    if let Some(t0) = t_compute {
-                        trace.add(Stage::Kernel, t0.elapsed().as_nanos() as u64);
-                    }
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| compute(trace)));
                     match computed {
                         Ok(v) => {
                             let v = Arc::new(v);
@@ -742,16 +817,28 @@ impl Engine {
         }
     }
 
-    /// Memoized CEFT critical path with single-flight dedup and
-    /// cross-request batching. Admission (hit / key follower / key leader)
-    /// is the single-flight protocol over the shard's cp slots; a key
-    /// leader then enters the shard's [`BatchCollector`]: it computes
-    /// immediately while a gather slot is free (draining any
-    /// already-queued same-platform requests into one sweep), or — once
-    /// the shard has `threads` gathers in flight — parks on its own cell
-    /// until a running gather finishes, whose completion either served it
-    /// (it was drained into that gather's window) or promoted it to lead
-    /// the next gather.
+    /// The CEFT-table memoization key of one interned instance, in the
+    /// requested orientation.
+    fn table_key(inst: &Interned, rev: bool) -> CacheKey {
+        CacheKey {
+            graph: inst.graph_hash,
+            platform: inst.platform_hash,
+            comp: inst.comp_hash,
+            algorithm: if rev {
+                TABLE_REV_MARKER
+            } else {
+                TABLE_FWD_MARKER
+            },
+        }
+    }
+
+    /// Memoized CEFT critical path. The cp cache keeps its single-flight
+    /// protocol (identical-key dedup, `cached` reporting), but a miss no
+    /// longer runs the DP itself: the leader borrows the memoized
+    /// **table** from [`Engine::table_for`] — joining the shard's gathered
+    /// sweeps and sharing the entry with CEFT-based schedulers — and
+    /// derives the path by the same sink-selection/backtracking code
+    /// serial dispatch runs, so the result is bit-identical.
     fn critical_path_for(
         &self,
         inst: &Arc<Interned>,
@@ -759,17 +846,59 @@ impl Engine {
     ) -> (Arc<CriticalPath>, bool) {
         let key = Self::cp_key(inst);
         let shard = inst.shard.clone();
+        self.single_flight(
+            &shard,
+            key,
+            cp_slots,
+            |tr| {
+                let (memo, _) = self.table_for(inst, false, TableOrigin::Cp, tr);
+                let t0 = tr.clock();
+                let cp = critical_path_from_table(&inst.graph, &memo.table);
+                if let Some(t0) = t0 {
+                    tr.add(Stage::Kernel, t0.elapsed().as_nanos() as u64);
+                }
+                cp
+            },
+            trace,
+        )
+    }
+
+    /// Memoized CEFT table with single-flight dedup and cross-request
+    /// batching. Admission (hit / key follower / key leader) is the
+    /// single-flight protocol over the shard's table slots; a key leader
+    /// then enters the shard's [`BatchCollector`]: it computes immediately
+    /// while a gather slot is free (draining any already-queued
+    /// same-platform requests into one drain), or — once the shard has
+    /// `threads` gathers in flight — parks on its own cell until a running
+    /// gather finishes, whose completion either served it (it was drained
+    /// into that gather's window) or promoted it to lead the next gather.
+    /// A hit (or dedup wake) whose stored origin differs from `origin`
+    /// records a `cp_schedule_shares` event: the table computed for one
+    /// workload just served the other.
+    fn table_for(
+        &self,
+        inst: &Arc<Interned>,
+        rev: bool,
+        origin: TableOrigin,
+        trace: &mut RequestTrace,
+    ) -> (Arc<MemoTable>, bool) {
+        let key = Self::table_key(inst, rev);
+        let shard = inst.shard.clone();
         loop {
             let flight = {
                 let _probe = trace.span(Stage::CacheProbe);
                 let mut st = shard.state.lock().unwrap();
-                if let Some(hit) = st.cp_cache.get(&key) {
-                    Flight::Hit(hit.clone())
-                } else if let Some(f) = st.cp_inflight.get(&key) {
+                if let Some(hit) = st.table_cache.get(&key) {
+                    let hit = hit.clone();
+                    if hit.origin != origin {
+                        st.table_cache.record_share();
+                    }
+                    Flight::Hit(hit)
+                } else if let Some(f) = st.table_inflight.get(&key) {
                     Flight::Follower(f.clone())
                 } else {
                     let f = Arc::new(Inflight::new());
-                    st.cp_inflight.insert(key, f.clone());
+                    st.table_inflight.insert(key, f.clone());
                     Flight::Leader(f)
                 }
             };
@@ -783,15 +912,21 @@ impl Engine {
                         f.wait()
                     };
                     if let Some(v) = waited {
-                        shard.state.lock().unwrap().cp_cache.record_dedup_hit();
+                        let mut st = shard.state.lock().unwrap();
+                        st.table_cache.record_dedup_hit();
+                        if v.origin != origin {
+                            st.table_cache.record_share();
+                        }
                         return (v, true);
                     }
                     // leader unwound; retry admission
                 }
                 Flight::Leader(cell) => {
-                    let me = PendingCp {
+                    let me = PendingTable {
                         inst: inst.clone(),
                         key,
+                        rev,
+                        origin,
                         cell: cell.clone(),
                         queued_at: Instant::now(),
                         timing: Arc::new(BatchTiming::default()),
@@ -852,20 +987,20 @@ impl Engine {
     }
 
     /// Run one gather as its leader: drain up to `batch_window - 1` queued
-    /// same-shard requests, compute all critical paths in one
-    /// [`find_critical_paths_gathered`] sweep (width 1 degenerates to the
-    /// plain fused kernel in a pooled workspace), deposit every result in
-    /// the cp cache, fan each to its single-flight cell, and hand the
-    /// collector to the next queued leader. On unwind every drained cell
-    /// (and one promoted successor) gets the retry signal before the panic
-    /// re-raises — the single-flight leader contract, extended to the
-    /// whole window.
+    /// same-shard requests, compute all CEFT tables — one lock-step
+    /// [`find_ceft_tables_gathered`] sweep per orientation present in the
+    /// window (width 1 degenerates to the plain fused kernel in a pooled
+    /// workspace) — deposit every result in the table cache, fan each to
+    /// its single-flight cell, and hand the collector to the next queued
+    /// leader. On unwind every drained cell (and one promoted successor)
+    /// gets the retry signal before the panic re-raises — the
+    /// single-flight leader contract, extended to the whole window.
     fn run_gather(
         &self,
         shard: &Arc<CacheShard>,
-        first: PendingCp,
+        first: PendingTable,
         trace: &mut RequestTrace,
-    ) -> (Arc<CriticalPath>, bool) {
+    ) -> (Arc<MemoTable>, bool) {
         let mut jobs = vec![first];
         {
             let mut st = shard.state.lock().unwrap();
@@ -888,21 +1023,52 @@ impl Engine {
         };
         let computed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             if jobs.len() == 1 {
-                let only = &jobs[0].inst;
-                vec![only
-                    .ctx
-                    .with_workspace(|ws| find_critical_path_with(ws, only.inst()))]
+                let only = &jobs[0];
+                let rev = only.rev;
+                vec![only.inst.ctx.with_workspace(|ws| {
+                    if rev {
+                        ceft_table_rev_with(ws, only.inst.inst())
+                    } else {
+                        ceft_table_with(ws, only.inst.inst())
+                    }
+                })]
             } else {
+                // one lock-step sweep per orientation in the window; fan
+                // results back in job order regardless of direction mix
                 let ctx = jobs[0].inst.ctx.clone();
-                let insts: Vec<InstanceRef> = jobs.iter().map(|j| j.inst.inst()).collect();
-                find_critical_paths_gathered(&ctx, &insts)
+                let mut out: Vec<Option<CeftTable>> = (0..jobs.len()).map(|_| None).collect();
+                for rev in [false, true] {
+                    let idxs: Vec<usize> =
+                        (0..jobs.len()).filter(|&i| jobs[i].rev == rev).collect();
+                    if idxs.is_empty() {
+                        continue;
+                    }
+                    let insts: Vec<InstanceRef> =
+                        idxs.iter().map(|&i| jobs[i].inst.inst()).collect();
+                    let tables = find_ceft_tables_gathered(&ctx, &insts, rev);
+                    for (&i, t) in idxs.iter().zip(tables) {
+                        out[i] = Some(t);
+                    }
+                }
+                out.into_iter()
+                    .map(|t| t.expect("every drained job got a table"))
+                    .collect()
             }
         }));
         let sweep_ns = t_sweep.map(|t| t.elapsed().as_nanos() as u64);
         match computed {
-            Ok(paths) => {
-                debug_assert_eq!(paths.len(), jobs.len());
-                let results: Vec<Arc<CriticalPath>> = paths.into_iter().map(Arc::new).collect();
+            Ok(tables) => {
+                debug_assert_eq!(tables.len(), jobs.len());
+                let results: Vec<Arc<MemoTable>> = tables
+                    .into_iter()
+                    .zip(&jobs)
+                    .map(|(table, job)| {
+                        Arc::new(MemoTable {
+                            table,
+                            origin: job.origin,
+                        })
+                    })
+                    .collect();
                 if let Some(sweep_ns) = sweep_ns {
                     if jobs.len() == 1 {
                         // a width-1 "gather" is the plain fused kernel — an
@@ -924,10 +1090,10 @@ impl Engine {
                 let promoted = {
                     let mut st = shard.state.lock().unwrap();
                     for (job, res) in jobs.iter().zip(&results) {
-                        st.cp_cache.put(job.key, res.clone());
-                        st.cp_inflight.remove(&job.key);
+                        st.table_cache.put(job.key, res.clone());
+                        st.table_inflight.remove(&job.key);
                     }
-                    st.cp_cache.record_batch(jobs.len() as u64);
+                    st.table_cache.record_batch(jobs.len() as u64);
                     Self::finish_gather(&mut st)
                 };
                 for (job, res) in jobs.iter().zip(&results) {
@@ -942,7 +1108,7 @@ impl Engine {
                 let promoted = {
                     let mut st = shard.state.lock().unwrap();
                     for job in &jobs {
-                        st.cp_inflight.remove(&job.key);
+                        st.table_inflight.remove(&job.key);
                     }
                     Self::finish_gather(&mut st)
                 };
@@ -965,19 +1131,26 @@ impl Engine {
     /// gather slot and leads the next gather — so a backlog always drains
     /// and no parked request is stranded (every completing gather either
     /// drained from the queue front or promotes it).
-    fn finish_gather(st: &mut ShardState) -> Option<PendingCp> {
+    fn finish_gather(st: &mut ShardState) -> Option<PendingTable> {
         st.collector.active = st.collector.active.saturating_sub(1);
         let next = st.collector.pending.pop_front();
         if let Some(ref n) = next {
-            st.cp_inflight.remove(&n.key);
+            st.table_inflight.remove(&n.key);
         }
         next
     }
 
-    /// Memoized schedule with single-flight dedup.
+    /// Memoized schedule with single-flight dedup. A CEFT-family
+    /// algorithm's miss borrows the memoized table (in the orientation
+    /// [`Algorithm::table_use`] declares) from [`Engine::table_for`] —
+    /// joining the shard's gathered sweeps and sharing the entry with
+    /// critical-path traffic — and runs the table-borrowing scheduler
+    /// hook, which is bit-identical to `run_with` by the
+    /// [`crate::sched`] `run_with_tables` contract. Mean-value algorithms
+    /// compute exactly as before.
     fn schedule_for(
         &self,
-        inst: &Interned,
+        inst: &Arc<Interned>,
         algorithm: Algorithm,
         trace: &mut RequestTrace,
     ) -> (Arc<Schedule>, bool) {
@@ -991,9 +1164,29 @@ impl Engine {
             &inst.shard,
             key,
             sched_slots,
-            || {
-                inst.ctx
-                    .with_workspace(|ws| algorithm.run_with(ws, inst.inst()))
+            |tr| match algorithm.table_use() {
+                Some(dir) => {
+                    let rev = dir == TableDir::Reverse;
+                    let (memo, _) = self.table_for(inst, rev, TableOrigin::Schedule, tr);
+                    let t0 = tr.clock();
+                    let s = inst.ctx.with_workspace(|ws| {
+                        algorithm.run_with_tables(ws, inst.inst(), Some(&memo.table))
+                    });
+                    if let Some(t0) = t0 {
+                        tr.add(Stage::Kernel, t0.elapsed().as_nanos() as u64);
+                    }
+                    s
+                }
+                None => {
+                    let t0 = tr.clock();
+                    let s = inst
+                        .ctx
+                        .with_workspace(|ws| algorithm.run_with(ws, inst.inst()));
+                    if let Some(t0) = t0 {
+                        tr.add(Stage::Kernel, t0.elapsed().as_nanos() as u64);
+                    }
+                    s
+                }
             },
             trace,
         )
@@ -1095,10 +1288,15 @@ impl Engine {
                         let mut shard = inst.shard.state.lock().unwrap();
                         let dropped_cp = shard.cp_cache.remove_matching(&matches);
                         let dropped_sched = shard.sched_cache.remove_matching(&matches);
+                        // the marker-keyed table entries share the
+                        // (graph, platform, comp) prefix, so the same
+                        // predicate purges them
+                        let dropped_tables = shard.table_cache.remove_matching(&matches);
                         Ok(protocol::ok_response(vec![
                             ("id", Json::Str(protocol::handle_to_hex(id))),
                             ("dropped_cp", Json::Num(dropped_cp as f64)),
                             ("dropped_schedules", Json::Num(dropped_sched as f64)),
+                            ("dropped_tables", Json::Num(dropped_tables as f64)),
                         ]))
                     }
                     None => Err(format!(
@@ -1112,7 +1310,7 @@ impl Engine {
                 let mut dropped = st.instances.len() + st.ctxs.len();
                 for shard in st.shards.values() {
                     let s = shard.state.lock().unwrap();
-                    dropped += s.cp_cache.len() + s.sched_cache.len();
+                    dropped += s.cp_cache.len() + s.sched_cache.len() + s.table_cache.len();
                 }
                 st.instances.clear();
                 st.ctxs.clear();
@@ -1165,8 +1363,15 @@ impl Engine {
 
     /// Execute a batch of request lines across the worker pool, preserving
     /// input order. This is the throughput path: independent requests run
-    /// concurrently and share the memo caches.
+    /// concurrently and share the memo caches. Each call bumps the
+    /// `batches` / `batch_lines` counters, so `batch_lines / batches` in
+    /// the stats response is the mean client-side pipelining depth the
+    /// gather windows see.
     pub fn handle_batch(&self, lines: &[String]) -> Vec<(Json, bool)> {
+        Counters::bump(&self.counters.batches);
+        self.counters
+            .batch_lines
+            .fetch_add(lines.len() as u64, Ordering::Relaxed);
         pool::parallel_map(lines, self.threads, |_, line| self.handle_line(line))
     }
 
@@ -1176,7 +1381,8 @@ impl Engine {
     /// `panel_ctx_hits`/`panel_ctx_misses` counters loadgen records), and
     /// `workspaces` aggregates the per-context pools with a deterministic
     /// per-context breakdown (sorted by platform hash). The `cp_cache` /
-    /// `sched_cache` sections aggregate over the per-platform shards
+    /// `sched_cache` / `table_cache` sections aggregate over the
+    /// per-platform shards
     /// (lengths and counters sum; `batch_width` is a high-water max;
     /// `capacity` is the per-shard bound and `shards` the live shard
     /// count), so their totals read exactly as the pre-sharding globals
@@ -1204,21 +1410,29 @@ impl Engine {
                 ("dedup_hits", Json::Num(s.dedup_hits as f64)),
                 ("batched_requests", Json::Num(s.batched_requests as f64)),
                 ("batch_width", Json::Num(s.batch_width as f64)),
+                (
+                    "cp_schedule_shares",
+                    Json::Num(s.cp_schedule_shares as f64),
+                ),
             ])
         };
         // aggregate the per-platform shards (state lock before shard lock —
         // the sanctioned order; one shard at a time)
         let mut cp_len = 0;
         let mut sched_len = 0;
+        let mut table_len = 0;
         let mut cp_stats = CacheStats::default();
         let mut sched_stats = CacheStats::default();
+        let mut table_stats = CacheStats::default();
         let shard_count = st.shards.len();
         for shard in st.shards.values() {
             let snap = shard.snapshot();
             cp_len += snap.cp_len;
             sched_len += snap.sched_len;
+            table_len += snap.table_len;
             cp_stats.merge(&snap.cp);
             sched_stats.merge(&snap.sched);
+            table_stats.merge(&snap.table);
         }
         let mut per_ctx: Vec<(u64, &Arc<PlatformCtx>)> =
             st.ctxs.iter().map(|(h, ctx)| (*h, ctx)).collect();
@@ -1257,6 +1471,14 @@ impl Engine {
                 "schedule_requests",
                 Json::Num(Counters::read(&self.counters.schedule_requests) as f64),
             ),
+            (
+                "batches",
+                Json::Num(Counters::read(&self.counters.batches) as f64),
+            ),
+            (
+                "batch_lines",
+                Json::Num(Counters::read(&self.counters.batch_lines) as f64),
+            ),
             ("instances", Json::Num(st.instances.len() as f64)),
             ("threads", Json::Num(self.threads as f64)),
             ("batch_window", Json::Num(self.batch_window as f64)),
@@ -1281,6 +1503,10 @@ impl Engine {
             (
                 "sched_cache",
                 cache_obj(sched_len, self.cache_capacity, shard_count, sched_stats),
+            ),
+            (
+                "table_cache",
+                cache_obj(table_len, self.cache_capacity, shard_count, table_stats),
             ),
         ])
     }
@@ -1375,22 +1601,29 @@ impl Engine {
                 "ceft_schedule_requests_total",
                 Counters::read(&self.counters.schedule_requests),
             ),
+            ("ceft_batches_total", Counters::read(&self.counters.batches)),
+            (
+                "ceft_batch_lines_total",
+                Counters::read(&self.counters.batch_lines),
+            ),
         ] {
             let _ = writeln!(out, "# TYPE {name} counter");
             let _ = writeln!(out, "{name} {v}");
         }
         // cache counters: one coherent snapshot per shard (see
         // `CacheShard::snapshot` for the cross-shard contract)
-        let (cp_stats, sched_stats, panel_stats) = {
+        let (cp_stats, sched_stats, table_stats, panel_stats) = {
             let st = self.state.lock().unwrap();
             let mut cp = CacheStats::default();
             let mut sched = CacheStats::default();
+            let mut table = CacheStats::default();
             for shard in st.shards.values() {
                 let snap = shard.snapshot();
                 cp.merge(&snap.cp);
                 sched.merge(&snap.sched);
+                table.merge(&snap.table);
             }
-            (cp, sched, st.ctxs.stats())
+            (cp, sched, table, st.ctxs.stats())
         };
         for family in [
             "ceft_cache_hits_total",
@@ -1402,6 +1635,7 @@ impl Engine {
         for (cache, s) in [
             ("cp", &cp_stats),
             ("sched", &sched_stats),
+            ("table", &table_stats),
             ("panel", &panel_stats),
         ] {
             let _ = writeln!(out, "ceft_cache_hits_total{{cache=\"{cache}\"}} {}", s.hits);
@@ -1416,11 +1650,19 @@ impl Engine {
                 s.dedup_hits
             );
         }
+        // the gather queue batches *table* computations, so batch counters
+        // live on the table cache
         let _ = writeln!(out, "# TYPE ceft_batched_requests_total counter");
         let _ = writeln!(
             out,
             "ceft_batched_requests_total {}",
-            cp_stats.batched_requests
+            table_stats.batched_requests
+        );
+        let _ = writeln!(out, "# TYPE ceft_table_cp_schedule_shares_total counter");
+        let _ = writeln!(
+            out,
+            "ceft_table_cp_schedule_shares_total {}",
+            table_stats.cp_schedule_shares
         );
         // per-stage latency summaries
         let snap = self.recorder.snapshot();
@@ -1671,6 +1913,7 @@ fn handle_connection(
 mod tests {
     use super::*;
     use crate::cp::ceft::find_critical_path;
+    use crate::cp::workspace::Workspace;
     use crate::graph::generator::{generate, RggParams};
     use crate::platform::CostModel;
 
@@ -1873,6 +2116,109 @@ mod tests {
     }
 
     #[test]
+    fn mixed_cp_and_schedule_requests_compute_one_table() {
+        // The headline guarantee of the table memo layer: a mixed
+        // cp+schedule workload over one instance performs exactly one
+        // CEFT table computation. batch_window 1 keeps every step serial
+        // and deterministic.
+        let engine = Engine::new(EngineConfig {
+            threads: 1,
+            batch_window: 1,
+            ..EngineConfig::default()
+        });
+        let (plat, inst) = small_instance(2100);
+        let serial_cp = find_critical_path(inst.bind(&plat));
+        let serial_cpop = Algorithm::CeftCpop.schedule(inst.bind(&plat)).makespan();
+        let serial_down = Algorithm::CeftHeftDown.schedule(inst.bind(&plat)).makespan();
+        let (a, _) = engine.handle_line(&schedule_line(&inst, "CEFT-CPOP"));
+        assert_eq!(a.get("makespan").and_then(Json::as_f64), Some(serial_cpop));
+        let cp_line = format!(
+            r#"{{"op":"cp","instance":{}}}"#,
+            io::instance_to_json(&inst).to_string()
+        );
+        let (b, _) = engine.handle_line(&cp_line);
+        assert_eq!(
+            b.get("length").and_then(Json::as_f64),
+            Some(serial_cp.length)
+        );
+        let (c, _) = engine.handle_line(&schedule_line(&inst, "CEFT-HEFT-DOWN"));
+        assert_eq!(c.get("makespan").and_then(Json::as_f64), Some(serial_down));
+        let stats = engine.stats_json();
+        let table = stats.get("table_cache").unwrap();
+        let get = |k: &str| table.get(k).and_then(Json::as_f64).unwrap();
+        assert_eq!(get("insertions"), 1.0, "exactly one table computation");
+        assert_eq!(get("misses"), 1.0, "only the first request misses");
+        assert_eq!(get("hits"), 2.0, "cp + second scheduler reuse the entry");
+        assert_eq!(
+            get("cp_schedule_shares"),
+            1.0,
+            "cp consumed the schedule-origin table; CEFT-HEFT-DOWN is same-kind"
+        );
+    }
+
+    #[test]
+    fn racing_mixed_requests_share_one_table() {
+        // Eight threads race cp and forward-table schedule requests for
+        // one uncached instance. Whatever the interleaving, the forward
+        // table must be computed exactly once and every response must
+        // equal serial dispatch.
+        let engine = Arc::new(Engine::with_defaults());
+        let (plat, inst) = small_instance(2200);
+        let serial_cp = find_critical_path(inst.bind(&plat));
+        let serial_cpop = Algorithm::CeftCpop.schedule(inst.bind(&plat)).makespan();
+        let serial_down = Algorithm::CeftHeftDown.schedule(inst.bind(&plat)).makespan();
+        let cp_line = Arc::new(format!(
+            r#"{{"op":"cp","instance":{}}}"#,
+            io::instance_to_json(&inst).to_string()
+        ));
+        let cpop_line = Arc::new(schedule_line(&inst, "CEFT-CPOP"));
+        let down_line = Arc::new(schedule_line(&inst, "CEFT-HEFT-DOWN"));
+        let barrier = Arc::new(std::sync::Barrier::new(8));
+        let mut handles = Vec::new();
+        for i in 0..8usize {
+            let engine = engine.clone();
+            let barrier = barrier.clone();
+            let (line, is_cp) = match i % 3 {
+                0 => (cp_line.clone(), true),
+                1 => (cpop_line.clone(), false),
+                _ => (down_line.clone(), false),
+            };
+            handles.push(std::thread::spawn(move || {
+                barrier.wait();
+                let (resp, _) = engine.handle_line(&line);
+                if is_cp {
+                    resp.get("length").and_then(Json::as_f64).unwrap()
+                } else {
+                    resp.get("makespan").and_then(Json::as_f64).unwrap()
+                }
+            }));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let want = match i % 3 {
+                0 => serial_cp.length,
+                1 => serial_cpop,
+                _ => serial_down,
+            };
+            assert_eq!(h.join().unwrap(), want, "request {i}");
+        }
+        let stats = engine.stats_json();
+        let table = stats.get("table_cache").unwrap();
+        assert_eq!(
+            table.get("insertions").and_then(Json::as_f64),
+            Some(1.0),
+            "one forward table serves cp and both schedulers in every interleaving"
+        );
+        assert!(
+            table
+                .get("cp_schedule_shares")
+                .and_then(Json::as_f64)
+                .unwrap()
+                >= 1.0,
+            "at least one cross-workload reuse must be recorded"
+        );
+    }
+
+    #[test]
     fn platform_ctx_interned_once_per_distinct_platform() {
         let engine = Engine::with_defaults();
         // three distinct instances with no explicit platform all share the
@@ -1964,16 +2310,36 @@ mod tests {
 
     #[test]
     fn engine_gathered_batch_matches_serial_dispatch() {
-        // Deterministic batching test: stage a window of parked key
-        // leaders in the shard's collector exactly as concurrent requests
-        // would, run one gather, and check every fanned-back result —
-        // values, paths, cache state, counters — against serial dispatch.
+        // Deterministic batching test: stage a window of parked table
+        // leaders — mixed origins (cp / schedule) and orientations
+        // (forward / reverse) — in the shard's collector exactly as
+        // concurrent requests would, run one gather, and check every
+        // fanned-back table, and every result later derived from it,
+        // against serial dispatch.
+        let revs = [false, false, false, true, true];
+        let origins = [
+            TableOrigin::Cp,
+            TableOrigin::Schedule,
+            TableOrigin::Cp,
+            TableOrigin::Schedule,
+            TableOrigin::Cp,
+        ];
         let engine = Engine::with_defaults();
         let mut interned = Vec::new();
-        let mut serial = Vec::new();
+        let mut serial_tables = Vec::new();
+        let mut serial_cp = Vec::new();
+        let mut serial_up = Vec::new();
+        let mut ws = Workspace::new();
         for seed in 0..5u64 {
+            let i = seed as usize;
             let (plat, inst) = small_instance(700 + seed);
-            serial.push(find_critical_path(inst.bind(&plat)));
+            serial_tables.push(if revs[i] {
+                ceft_table_rev_with(&mut ws, inst.bind(&plat))
+            } else {
+                ceft_table_with(&mut ws, inst.bind(&plat))
+            });
+            serial_cp.push(find_critical_path(inst.bind(&plat)));
+            serial_up.push(Algorithm::CeftHeftUp.schedule(inst.bind(&plat)).makespan());
             interned.push(
                 engine
                     .resolve(
@@ -1998,14 +2364,16 @@ mod tests {
         {
             let mut st = shard.state.lock().unwrap();
             st.collector.active = 1;
-            for inst in &interned[1..] {
-                let key = Engine::cp_key(inst);
+            for (i, inst) in interned.iter().enumerate().skip(1) {
+                let key = Engine::table_key(inst, revs[i]);
                 let cell = Arc::new(Inflight::new());
                 let timing = Arc::new(BatchTiming::default());
-                st.cp_inflight.insert(key, cell.clone());
-                st.collector.pending.push_back(PendingCp {
+                st.table_inflight.insert(key, cell.clone());
+                st.collector.pending.push_back(PendingTable {
                     inst: inst.clone(),
                     key,
+                    rev: revs[i],
+                    origin: origins[i],
                     cell: cell.clone(),
                     queued_at: Instant::now(),
                     timing: timing.clone(),
@@ -2018,19 +2386,21 @@ mod tests {
         // own stage attribution is checked too
         let leader_recorder = Recorder::new(true);
         let mut leader_trace = leader_recorder.begin(2); // "cp"
-        let first_key = Engine::cp_key(&interned[0]);
+        let first_key = Engine::table_key(&interned[0], revs[0]);
         let first_cell = Arc::new(Inflight::new());
         shard
             .state
             .lock()
             .unwrap()
-            .cp_inflight
+            .table_inflight
             .insert(first_key, first_cell.clone());
         let (first, cached) = engine.run_gather(
             &shard,
-            PendingCp {
+            PendingTable {
                 inst: interned[0].clone(),
                 key: first_key,
+                rev: revs[0],
+                origin: origins[0],
                 cell: first_cell,
                 queued_at: Instant::now(),
                 timing: Arc::new(BatchTiming::default()),
@@ -2038,14 +2408,22 @@ mod tests {
             &mut leader_trace,
         );
         assert!(!cached, "a gathered computation is not a cache hit");
-        assert_eq!(*first, serial[0], "leader result == serial dispatch");
-        // the leader was served by a width-5 sweep: batch_drain, not kernel
+        assert_eq!(first.table.table, serial_tables[0].table);
+        assert_eq!(first.table.backptr, serial_tables[0].backptr);
+        assert_eq!(first.origin, TableOrigin::Cp);
+        // the leader was served by a width-5 drain: batch_drain, not kernel
         assert!(leader_trace.stage_ns(Stage::BatchDrain) > 0);
         assert_eq!(leader_trace.stage_ns(Stage::Kernel), 0);
         assert_eq!(leader_trace.stage_ns(Stage::QueueWait), 0);
         for (i, cell) in cells.iter().enumerate() {
             let got = cell.wait().expect("gathered cell resolves with a result");
-            assert_eq!(*got, serial[i + 1], "queued request {i} == serial");
+            assert_eq!(
+                got.table.table,
+                serial_tables[i + 1].table,
+                "queued table {i} == serial"
+            );
+            assert_eq!(got.table.backptr, serial_tables[i + 1].backptr);
+            assert_eq!(got.origin, origins[i + 1], "origin rides the memo entry");
         }
         // every drained request got park + sweep durations stamped (1 ns
         // floor: "occurred" even below clock resolution)
@@ -2053,24 +2431,58 @@ mod tests {
             assert!(timing.queue_ns.load(Ordering::Relaxed) >= 1);
             assert!(timing.drain_ns.load(Ordering::Relaxed) >= 1);
         }
-        // counters: one gather of width 5, five insertions, no leftovers
+        // counters: one drain of width 5, five insertions, no leftovers
         {
             let st = shard.state.lock().unwrap();
-            assert!(st.cp_inflight.is_empty());
+            assert!(st.table_inflight.is_empty());
             assert!(st.collector.pending.is_empty());
             assert_eq!(st.collector.active, 0, "the staged gather slot was released");
-            let s = st.cp_cache.stats();
+            let s = st.table_cache.stats();
             assert_eq!(s.batched_requests, 5);
             assert_eq!(s.batch_width, 5);
             assert_eq!(s.insertions, 5);
+            assert_eq!(s.cp_schedule_shares, 0, "no consumer has hit yet");
         }
-        // every result is now served from cache, bit-identically
-        for (inst, want) in interned.iter().zip(&serial) {
+        // cp requests on the forward instances derive from the memoized
+        // tables, bit-identically to serial dispatch; instance 1's table
+        // was computed for schedule traffic, so serving its cp request
+        // records a cross-workload share
+        for i in [0usize, 1, 2] {
             let resp = engine.handle(Request::CriticalPath {
-                target: Target::Handle(inst.id),
+                target: Target::Handle(interned[i].id),
             });
-            assert_eq!(resp.get("cached"), Some(&Json::Bool(true)));
-            assert_eq!(resp.get("length").and_then(Json::as_f64), Some(want.length));
+            assert_eq!(
+                resp.get("length").and_then(Json::as_f64),
+                Some(serial_cp[i].length),
+                "cp {i} == serial"
+            );
+            assert_eq!(
+                resp.get("path").and_then(Json::as_arr).unwrap().len(),
+                serial_cp[i].path.len()
+            );
+        }
+        // CEFT-HEFT-UP consumes the reverse tables; instance 4's was
+        // staged with cp origin, so its schedule request shares too
+        for i in [3usize, 4] {
+            let resp = engine.handle(Request::Schedule {
+                algorithm: Algorithm::CeftHeftUp,
+                target: Target::Handle(interned[i].id),
+            });
+            assert_eq!(
+                resp.get("makespan").and_then(Json::as_f64),
+                Some(serial_up[i]),
+                "schedule {i} == serial"
+            );
+        }
+        {
+            let st = shard.state.lock().unwrap();
+            let s = st.table_cache.stats();
+            assert_eq!(s.insertions, 5, "no table was recomputed");
+            assert_eq!(s.hits, 5, "every consumer hit the memoized table");
+            assert_eq!(
+                s.cp_schedule_shares, 2,
+                "cp over a schedule-origin table + schedule over a cp-origin table"
+            );
         }
     }
 
@@ -2111,13 +2523,17 @@ mod tests {
         let cp = stats.get("cp_cache").unwrap();
         let get = |k: &str| cp.get(k).and_then(Json::as_f64).unwrap();
         assert_eq!(get("insertions"), 6.0, "each distinct key computed once");
-        assert!(get("batched_requests") <= 6.0);
-        assert!(get("batch_width") <= 6.0);
+        // the gather queue batches the underlying *table* computations
+        let table = stats.get("table_cache").unwrap();
+        let tget = |k: &str| table.get(k).and_then(Json::as_f64).unwrap();
+        assert_eq!(tget("insertions"), 6.0, "one table per distinct key");
+        assert!(tget("batched_requests") <= 6.0);
+        assert!(tget("batch_width") <= 6.0);
         assert!(
-            get("batched_requests") == 0.0 || get("batched_requests") >= get("batch_width"),
+            tget("batched_requests") == 0.0 || tget("batched_requests") >= tget("batch_width"),
             "batched_requests {} vs batch_width {}",
-            get("batched_requests"),
-            get("batch_width")
+            tget("batched_requests"),
+            tget("batch_width")
         );
     }
 
@@ -2213,20 +2629,26 @@ mod tests {
         for (i, h) in handles.into_iter().enumerate() {
             assert_eq!(h.join().unwrap(), expected[i], "request {i}");
         }
-        // one width-N gather served everything
+        // one width-N gather served everything (batching counts live on
+        // the table cache since the gather queue batches table sweeps)
         let stats = engine.stats_json();
-        let cp = stats.get("cp_cache").unwrap();
+        let table = stats.get("table_cache").unwrap();
         assert_eq!(
-            cp.get("batched_requests").and_then(Json::as_f64),
+            table.get("batched_requests").and_then(Json::as_f64),
             Some(N as f64)
         );
-        assert_eq!(cp.get("batch_width").and_then(Json::as_f64), Some(N as f64));
+        assert_eq!(
+            table.get("batch_width").and_then(Json::as_f64),
+            Some(N as f64)
+        );
         // stage attribution: drained requests (N-1) recorded queue_wait,
-        // all N recorded batch_drain, nobody recorded kernel (no width-1
-        // compute happened), and every request probed the caches
+        // all N recorded batch_drain, every request recorded kernel (the
+        // cp derivation from the memoized table — the DP itself was
+        // batch-drained, not width-1 computed), and every request probed
+        // the caches
         assert_eq!(stage_count(&engine, Stage::QueueWait), (N - 1) as u64);
         assert_eq!(stage_count(&engine, Stage::BatchDrain), N as u64);
-        assert_eq!(stage_count(&engine, Stage::Kernel), 0);
+        assert_eq!(stage_count(&engine, Stage::Kernel), N as u64);
         assert_eq!(stage_count(&engine, Stage::Respond), N as u64);
         assert!(stage_count(&engine, Stage::CacheProbe) >= N as u64);
     }

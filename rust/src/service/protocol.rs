@@ -13,7 +13,7 @@
 //! | `submit`   | `instance`, optional `platform`                    | `id` (16-hex handle), `n`, `p`, `edges` |
 //! | `cp`       | `id` *or* `instance` (+ optional `platform`)       | `length`, `path` `[[task, class], …]`, `cached`, `id` |
 //! | `schedule` | `algorithm`, `id` *or* `instance` (+ `platform`)   | `makespan`, `schedule`, `algorithm`, `cached`, `id` |
-//! | `stats`    | —                                                  | counters + cache occupancy + per-stage latency percentiles |
+//! | `stats`    | —                                                  | counters + cache occupancy (incl. the memoized CEFT-table cache: hits/misses, `batched_requests`/`batch_width`, `cp_schedule_shares`) + per-stage latency percentiles |
 //! | `trace`    | optional `limit` (slowest/recent rows, default 8)  | per-stage histograms, kernel-path throughput, slowest/recent traces |
 //! | `metrics`  | —                                                  | `text`: Prometheus-style exposition (same body `--metrics-addr` serves) |
 //! | `evict`    | `id`                                               | entries dropped |

@@ -13,9 +13,9 @@ use ceft::cp::ceft::simd::KernelDispatch;
 use ceft::cp::ceft::{
     ceft_table, ceft_table_batched_into, ceft_table_batched_into_dispatched, ceft_table_into,
     ceft_table_into_dispatched, ceft_table_rev_into, ceft_table_rev_into_dispatched,
-    ceft_table_rev_scalar_into, ceft_table_scalar, ceft_table_scalar_into,
-    critical_path_from_table, find_critical_path, find_critical_path_with,
-    find_critical_paths_gathered_dispatched,
+    ceft_table_rev_scalar_into, ceft_table_rev_with, ceft_table_scalar, ceft_table_scalar_into,
+    ceft_table_with, critical_path_from_table, find_ceft_tables_gathered_dispatched,
+    find_critical_path, find_critical_path_with, find_critical_paths_gathered_dispatched,
 };
 use ceft::cp::cpmin::cp_min_cost;
 use ceft::cp::minexec::min_exec_critical_path;
@@ -30,7 +30,7 @@ use ceft::model::{CostMatrix, InstanceRef, PlatformCtx};
 use ceft::platform::{CostModel, Platform};
 use ceft::sched::{
     ceft_cpop::CeftCpop, ceft_heft::CeftHeftUp, cpop::Cpop, heft::Heft, list_schedule_with,
-    Algorithm, PlacementWs, Schedule, Scheduler,
+    Algorithm, PlacementWs, Schedule, Scheduler, TableDir,
 };
 use ceft::util::prop::{check_property, default_cases};
 use ceft::util::rng::Xoshiro256;
@@ -639,6 +639,99 @@ fn prop_shared_ctx_two_instances_no_state_leak() {
                 ceft_table_scalar_into(&mut sw, inst.bind(plat));
                 if ws.table != sw.table || ws.backptr != sw.backptr {
                     return Err("batched DP diverged under ctx sharing".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_run_with_tables_bit_identical() {
+    // The table-borrowing registry entry point (`Algorithm::run_with_tables`)
+    // must be bit-identical to plain `run_with` dispatch for every
+    // registered algorithm — values AND placements — whether the borrowed
+    // table comes from the serial pooled producers (`ceft_table_with` /
+    // `ceft_table_rev_with`) or from the gathered multi-instance sweep
+    // (`find_ceft_tables_gathered_dispatched`), under either lane
+    // implementation. This is the contract the service engine's table memo
+    // stands on: a schedule served from a cached or batch-gathered table
+    // must be indistinguishable from one that ran its own DP.
+    check_property(
+        "run_with_tables == run_with for all six (serial + gathered tables)",
+        default_cases() / 2,
+        0xCEF7_0026,
+        |rng| arb_instance(rng),
+        |(inst, plat, seed)| {
+            let iref = inst.bind(plat);
+            let mut ws = Workspace::new();
+            let mut tw = Workspace::new();
+            let fwd = ceft_table_with(&mut tw, iref);
+            let rev = ceft_table_rev_with(&mut tw, iref);
+            // gathered sweeps (instance twice in one window, like a batch
+            // drain that dedups late): every produced table must equal the
+            // serial producer bit for bit before it is allowed to schedule
+            let ctx = PlatformCtx::new(plat.clone());
+            let bound = [inst.bind_ctx(&ctx), inst.bind_ctx(&ctx)];
+            let mut gathered_fwd = Vec::new();
+            let mut gathered_rev = Vec::new();
+            for dispatch in [KernelDispatch::Simd, KernelDispatch::Scalar] {
+                let tf = find_ceft_tables_gathered_dispatched(&ctx, &bound, false, dispatch);
+                let tr = find_ceft_tables_gathered_dispatched(&ctx, &bound, true, dispatch);
+                for t in &tf {
+                    if t.table != fwd.table || t.backptr != fwd.backptr {
+                        return Err(format!(
+                            "gathered forward table diverged from serial under {dispatch:?} (seed {seed})"
+                        ));
+                    }
+                }
+                for t in &tr {
+                    if t.table != rev.table || t.backptr != rev.backptr {
+                        return Err(format!(
+                            "gathered reverse table diverged from serial under {dispatch:?} (seed {seed})"
+                        ));
+                    }
+                }
+                gathered_fwd.push(tf.into_iter().next().unwrap());
+                gathered_rev.push(tr.into_iter().next().unwrap());
+            }
+            for algo in Algorithm::ALL {
+                let baseline = algo.run_with(&mut ws, iref);
+                // no table offered — trivially the plain path
+                let none = algo.run_with_tables(&mut ws, iref, None);
+                if !schedules_identical(&baseline, &none) {
+                    return Err(format!(
+                        "{} diverged with table=None (seed {seed})",
+                        algo.name()
+                    ));
+                }
+                // a table of the declared orientation; the mean-value three
+                // must ignore the offer entirely
+                let serial_table = match algo.table_use() {
+                    Some(TableDir::Reverse) => &rev,
+                    _ => &fwd,
+                };
+                let via_serial = algo.run_with_tables(&mut ws, iref, Some(serial_table));
+                if !schedules_identical(&baseline, &via_serial) {
+                    return Err(format!(
+                        "{} diverged with a serial table (seed {seed})",
+                        algo.name()
+                    ));
+                }
+                if let Some(dir) = algo.table_use() {
+                    let pool = match dir {
+                        TableDir::Forward => &gathered_fwd,
+                        TableDir::Reverse => &gathered_rev,
+                    };
+                    for t in pool {
+                        let via_gathered = algo.run_with_tables(&mut ws, iref, Some(t));
+                        if !schedules_identical(&baseline, &via_gathered) {
+                            return Err(format!(
+                                "{} diverged with a gathered table (seed {seed})",
+                                algo.name()
+                            ));
+                        }
+                    }
                 }
             }
             Ok(())
