@@ -65,12 +65,28 @@ for i in $(seq 1 50); do
 done
 
 ./target/release/repro request --addr "$ADDR" --op ping
-./target/release/repro request --addr "$ADDR" --op submit --n 64 --p 4
+SUBMIT_RESP=$(./target/release/repro request --addr "$ADDR" --op submit --n 64 --p 4)
+echo "$SUBMIT_RESP"
+HANDLE=$(echo "$SUBMIT_RESP" | sed -n 's/.*"id":"\([0-9a-f]*\)".*/\1/p')
 ./target/release/repro request --addr "$ADDR" --op cp --n 64 --p 4
 ./target/release/repro request --addr "$ADDR" --op schedule --algorithm CEFT-CPOP --n 64 --p 4
 # the identical request again must be a cache hit
 ./target/release/repro request --addr "$ADDR" --op schedule --algorithm CEFT-CPOP --n 64 --p 4 \
   | grep -q '"cached":true'
+# incremental update round trip: cp with slack exposes the per-task array,
+# an in-place edit bumps the generation and reports its delta economy, and
+# the follow-up cp serves the edited generation (still with slack)
+./target/release/repro request --addr "$ADDR" --op cp --id "$HANDLE" --slack true \
+  | grep -q '"slack":\['
+UPDATE_RESP=$(./target/release/repro request --addr "$ADDR" --op update --id "$HANDLE" \
+  --edits '[{"edit":"task_cost","task":1,"costs":[2.5,2.5,2.5,2.5]},{"edit":"add_edge","src":0,"dst":63,"data":1.0}]')
+echo "$UPDATE_RESP"
+echo "$UPDATE_RESP" | grep -q '"generation":1'
+echo "$UPDATE_RESP" | grep -q '"slack":\['
+echo "$UPDATE_RESP" | grep -q '"delta_rows_recomputed"'
+echo "$UPDATE_RESP" | grep -q '"skipped":'
+./target/release/repro request --addr "$ADDR" --op cp --id "$HANDLE" --slack true \
+  | grep -q '"slack":\['
 ./target/release/repro request --addr "$ADDR" --op stats
 # telemetry surfacing: the trace op must render the full 8-stage table,
 # and the metrics op the Prometheus-style exposition
@@ -136,9 +152,13 @@ echo "== loadgen cp-share sweep (schedule batching, writes BENCH_service.json) =
 # real miss storm. loadgen itself exits nonzero if a schedule-heavy point
 # gathers zero requests or the 0.0-endpoint batch efficiency falls below
 # half the cp-only baseline; the greps pin the report schema the gates
-# read. This sweep is the tracked BENCH_service.json record.
+# read. --edit-share 0.25 adds in-place update traffic to every point:
+# loadgen exits nonzero unless updates are delta-served and every
+# delta-served update stays within the tail-decile row bound. This sweep
+# is the tracked BENCH_service.json record.
 ./target/release/repro loadgen --n 128 --p 8 --count 48 --rate 2000 --duration 1 \
-  --threads 2 --clients 8 --batch-window 8 --cp-share 0.0,0.25,0.5,1.0
+  --threads 2 --clients 8 --batch-window 8 --cp-share 0.0,0.25,0.5,1.0 \
+  --edit-share 0.25
 grep -q '"sweep":"cp_share"' BENCH_service.json
 # every point must carry the table-cache counters: the memoized CEFT-table
 # layer is what both cp and schedule traffic now batch through
@@ -155,6 +175,17 @@ fi
 # gathered sweeps
 if ! grep -q '"sweep_batch_floor_ok":true' BENCH_service.json; then
   echo "BENCH_service.json reports sweep_batch_floor_ok != true — schedule batching regressed"
+  exit 1
+fi
+# the incremental-recompute economy must be recorded: rows recomputed vs a
+# from-scratch sweep and their ratio (see EXPERIMENTS.md §Incremental
+# re-scheduling)
+if ! grep -q '"delta_speedup"' BENCH_service.json; then
+  echo "BENCH_service.json lacks the delta_speedup field (incremental recompute unmeasured)"
+  exit 1
+fi
+if ! grep -q '"delta_rows_recomputed"' BENCH_service.json; then
+  echo "BENCH_service.json lacks the delta_rows_recomputed counter"
   exit 1
 fi
 
@@ -191,6 +222,12 @@ fi
 # engine's batch-drain shape, so its cells/s sits in the tracked record
 if ! grep -q '"gathered_tables"' BENCH_kernel.json; then
   echo "BENCH_kernel.json lacks the gathered_tables throughput row"
+  exit 1
+fi
+# ... and the delta_suffix rows: the dirty-suffix incremental kernel's
+# throughput at 10/50/90% suffix shares is part of the tracked record
+if ! grep -q '"delta_suffix_10pct"' BENCH_kernel.json; then
+  echo "BENCH_kernel.json lacks the delta_suffix throughput rows"
   exit 1
 fi
 

@@ -20,15 +20,17 @@
 //!
 //! Besides the CSV every bench appends, this bench writes the repo-root
 //! `BENCH_kernel.json` — per-case cells/s for the `scalar`, `simd`,
-//! `batched_b8` and `gathered_tables` rows plus the `telemetry` on/off
-//! pair — seeding the
+//! `batched_b8`, `gathered_tables` and `delta_suffix/{10,50,90}pct`
+//! (dirty-suffix incremental recompute against a memoized basis) rows
+//! plus the `telemetry` on/off pair — seeding the
 //! kernel-throughput trajectory across PRs (the acceptance gauge is
 //! `simd >= scalar` at `P >= 8`).
 
 use ceft::cp::ceft::simd::KernelDispatch;
 use ceft::cp::ceft::{
-    ceft_table_batched_into, ceft_table_into, ceft_table_into_dispatched, ceft_table_rev_into,
-    ceft_table_rev_scalar_into, ceft_table_scalar_into, find_ceft_tables_gathered,
+    ceft_table_batched_into, ceft_table_delta_into, ceft_table_into, ceft_table_into_dispatched,
+    ceft_table_rev_into, ceft_table_rev_scalar_into, ceft_table_scalar_into, ceft_table_with,
+    find_ceft_tables_gathered, DeltaPlan,
 };
 use ceft::cp::workspace::Workspace;
 use ceft::graph::generator::{generate, RggParams};
@@ -126,6 +128,50 @@ fn main() {
             ceft_table_scalar_into(&mut ws, iref);
             black_box(ws.table.last().copied());
         });
+        // Incremental recompute economy: dirty the last {10,50,90}% of the
+        // topological order and re-run the delta kernel against the
+        // memoized basis. Elements are the class-pair cells of the dirty
+        // suffix only (in-edges of suffix tasks × P²), so cells/s stays
+        // comparable to the full-table rows while the wall time shrinks
+        // with the suffix — the rows BENCH_kernel.json tracks across PRs
+        // (EXPERIMENTS.md §Incremental re-scheduling).
+        let basis = {
+            let mut bws = Workspace::new();
+            ceft_table_with(&mut bws, cref)
+        };
+        let topo = inst.graph.topo_order();
+        let mut delta_rates = [0.0f64; 3];
+        for (slot, &pct) in [10usize, 50, 90].iter().enumerate() {
+            let cut = n - (n * pct) / 100;
+            let mut dirty = vec![false; n];
+            for &t in &topo[cut..] {
+                dirty[t] = true;
+            }
+            let in_suffix = |t: usize| dirty[t];
+            let dcells = (inst
+                .graph
+                .edges()
+                .iter()
+                .filter(|e| in_suffix(e.dst))
+                .count() as u64
+                * (p * p) as u64)
+                .max(1);
+            let row = b.case_with_elements(
+                &format!("delta_suffix/{pct}pct_n{n}_p{p}"),
+                Some(dcells),
+                || {
+                    let plan = DeltaPlan {
+                        prev: &basis,
+                        prev_topo: topo,
+                        basis_n: n,
+                        dirty: &dirty,
+                    };
+                    let rows = ceft_table_delta_into(&mut ws, cref, &plan, false);
+                    black_box(rows);
+                },
+            );
+            delta_rates[slot] = row.throughput().unwrap_or(0.0);
+        }
         b.case_with_elements(&format!("kernel_rev/n{n}_p{p}"), Some(cells), || {
             ceft_table_rev_into(&mut ws, iref);
             black_box(ws.table.last().copied());
@@ -179,6 +225,9 @@ fn main() {
                         "gathered_tables",
                         Json::Num(gathered_row.throughput().unwrap_or(0.0)),
                     ),
+                    ("delta_suffix_10pct", Json::Num(delta_rates[0])),
+                    ("delta_suffix_50pct", Json::Num(delta_rates[1])),
+                    ("delta_suffix_90pct", Json::Num(delta_rates[2])),
                 ]),
             ),
             (

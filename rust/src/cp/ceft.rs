@@ -90,6 +90,31 @@
 //! backpointers — is part of the contract; see EXPERIMENTS.md §Gathered
 //! schedule tables.
 //!
+//! **Delta recompute.** Because the DP sweeps a fixed topological order
+//! and a row depends only on rows at earlier sweep positions, an edit to
+//! task `t` (cost row, incident edges) can only invalidate rows at sweep
+//! positions ≥ `t`'s. [`ceft_table_delta_into`] exploits this: given a
+//! [`DeltaPlan`] — the previous table, the topological order it was
+//! computed over, and per-task dirty flags — it copies the longest clean
+//! sweep prefix straight from the basis table, then re-runs the blocked
+//! kernel only over the dirty suffix, with change propagation inside the
+//! suffix (a clean task whose swept parents all reproduced their basis
+//! rows copies its basis row instead of recomputing). The result is
+//! **bit-identical** to a from-scratch sweep of the same orientation
+//! (`prop_delta_ceft_bit_identical_to_scratch`), and
+//! [`find_ceft_tables_gathered_delta`] threads the same suffix offsets
+//! through the gathered lock-step sweep so delta recomputes ride the
+//! service engine's cross-request batches. See EXPERIMENTS.md
+//! §Incremental re-scheduling for the invalidation-bound proof sketch.
+//!
+//! **Slack.** [`slack_from_table_with`] is the CPM latest-finish idiom
+//! generalised to Algorithm 1: a backward pass over the forward table
+//! derives, per task, how far its whole CEFT row may rise uniformly
+//! without increasing the critical-path length. Slack is exactly `0.0`
+//! along the reported critical path and non-negative everywhere — the
+//! user-facing "what's critical now?" answer and the invalidation bound
+//! that lets the service skip recompute for within-slack cost increases.
+//!
 //! Tie-breaking is deterministic: the lowest class id wins `min`s, the
 //! earliest-visited parent wins strict-`>` `max`es, and the lowest task id
 //! wins the final sink selection. This makes the rust and PJRT backends,
@@ -316,6 +341,252 @@ pub fn ceft_table_rev_into_dispatched(
         KernelDispatch::Simd => ceft_dp_kernel_lanes::<SimdLanes>(ws, inst, true),
         KernelDispatch::Scalar => ceft_dp_kernel_lanes::<ScalarLanes>(ws, inst, true),
     }
+}
+
+/// A delta-recompute plan: the memoized basis table plus what changed
+/// since it was computed. The contract a caller must uphold:
+///
+/// * `prev` is a table of the **same orientation** as the recompute,
+///   computed over a basis instance whose task ids are a prefix of the
+///   current id space (`basis_n` tasks; ids `>= basis_n` are new);
+/// * `prev_topo` is the basis graph's topological order;
+/// * `dirty[t]` is `true` for every task (in the current id space) whose
+///   cost row, predecessor list, or successor list differs from the basis
+///   — edge edits must mark **both** endpoints so one dirty set serves
+///   both orientations.
+///
+/// Id-shifting edits (task removal) cannot be expressed as a plan; callers
+/// fall back to a from-scratch sweep instead (`graph::edit` reports this).
+#[derive(Clone, Copy, Debug)]
+pub struct DeltaPlan<'a> {
+    /// the basis table (same orientation as the recompute)
+    pub prev: &'a CeftTable,
+    /// topological order of the graph `prev` was computed over
+    pub prev_topo: &'a [usize],
+    /// basis task count: ids `>= basis_n` did not exist in the basis
+    pub basis_n: usize,
+    /// per-task dirty flags in the current id space (`len == n`)
+    pub dirty: &'a [bool],
+}
+
+/// Length of the clean sweep prefix a [`DeltaPlan`] allows: the largest
+/// `k` such that the first `k` sweep positions of the current topological
+/// order name the same, non-dirty basis tasks as the basis order. Rows at
+/// those positions depend only on earlier (equally clean) positions, so
+/// they are bit-identical to the basis rows and can be copied. `rev`
+/// mirrors the comparison for the reverse sweep (`topo[len-1-i]`).
+pub fn delta_clean_prefix(topo: &[usize], plan: &DeltaPlan, rev: bool) -> usize {
+    let n = topo.len();
+    let pn = plan.prev_topo.len();
+    let lim = n.min(pn);
+    for i in 0..lim {
+        let t = if rev { topo[n - 1 - i] } else { topo[i] };
+        let o = if rev {
+            plan.prev_topo[pn - 1 - i]
+        } else {
+            plan.prev_topo[i]
+        };
+        if t != o || t >= plan.basis_n || plan.dirty[t] {
+            return i;
+        }
+    }
+    lim
+}
+
+/// Delta-CEFT: fill `ws.table` / `ws.backptr` with the DP of the given
+/// orientation, copying the clean sweep prefix from `plan.prev` and
+/// re-running the blocked kernel only over the dirty suffix — with change
+/// propagation inside the suffix, so a clean task whose swept parents all
+/// reproduced their basis rows copies its basis row too. Returns the
+/// number of rows actually recomputed (the `delta_rows_recomputed`
+/// counter of the service stats). **Bit-identical** to the from-scratch
+/// sweep of the same orientation: every copied row is provably equal to
+/// what the sweep would have produced (see the module docs and
+/// `prop_delta_ceft_bit_identical_to_scratch`).
+pub fn ceft_table_delta_into(
+    ws: &mut Workspace,
+    inst: InstanceRef,
+    plan: &DeltaPlan,
+    rev: bool,
+) -> usize {
+    ceft_table_delta_into_dispatched(ws, inst, plan, rev, dispatch_for(&inst))
+}
+
+/// [`ceft_table_delta_into`] with the lane implementation pinned
+/// explicitly (the delta bit-identity property tests exercise both paths
+/// in one process).
+pub fn ceft_table_delta_into_dispatched(
+    ws: &mut Workspace,
+    inst: InstanceRef,
+    plan: &DeltaPlan,
+    rev: bool,
+    dispatch: KernelDispatch,
+) -> usize {
+    match dispatch {
+        KernelDispatch::Simd => ceft_dp_kernel_delta_lanes::<SimdLanes>(ws, inst, plan, rev),
+        KernelDispatch::Scalar => ceft_dp_kernel_delta_lanes::<ScalarLanes>(ws, inst, plan, rev),
+    }
+}
+
+/// Workspace-backed [`ceft_table_delta_into`] copied out as an owned
+/// [`CeftTable`] (the table-memo shape of `service::engine`), paired with
+/// the recomputed-row count.
+pub fn ceft_table_delta_with(
+    ws: &mut Workspace,
+    inst: InstanceRef,
+    plan: &DeltaPlan,
+    rev: bool,
+) -> (CeftTable, usize) {
+    let rows = ceft_table_delta_into(ws, inst, plan, rev);
+    (
+        CeftTable {
+            p: inst.p(),
+            table: ws.table.to_vec(),
+            backptr: ws.backptr.clone(),
+        },
+        rows,
+    )
+}
+
+/// Bit-wise row equality: values compared as `f64` bits (the tables never
+/// hold NaN, but `to_bits` keeps the contract exact even for signed
+/// zeros), backpointers exactly.
+#[inline]
+fn delta_row_equal(a_tab: &[f64], b_tab: &[f64], a_ptr: &[(usize, usize)], b_ptr: &[(usize, usize)]) -> bool {
+    a_tab
+        .iter()
+        .zip(b_tab)
+        .all(|(x, y)| x.to_bits() == y.to_bits())
+        && a_ptr == b_ptr
+}
+
+/// The delta kernel DP, monomorphised per lane implementation: the exact
+/// per-task tiled sweep of [`ceft_dp_kernel_lanes`], restricted to the
+/// dirty suffix of [`delta_clean_prefix`], with basis rows copied
+/// everywhere the sweep provably reproduces them. A recomputed row is
+/// compared bit-wise against its basis row so change propagation stops as
+/// soon as an edit is absorbed by the DP's `min`/`max` structure — the
+/// "zero impact" case where a cost edit never reaches the critical path.
+fn ceft_dp_kernel_delta_lanes<K: LaneKernel>(
+    ws: &mut Workspace,
+    inst: InstanceRef,
+    plan: &DeltaPlan,
+    rev: bool,
+) -> usize {
+    let graph = inst.graph;
+    let costs = inst.costs;
+    let v = inst.n();
+    let p = inst.p();
+    assert_eq!(plan.prev.p, p, "delta basis/platform class count mismatch");
+    assert_eq!(
+        plan.prev.table.len(),
+        plan.basis_n * p,
+        "delta basis table/basis_n mismatch"
+    );
+    assert_eq!(plan.dirty.len(), v, "delta dirty flags must cover every task");
+    let topo = graph.topo_order();
+    let prefix = delta_clean_prefix(topo, plan, rev);
+    // cells/s attribution: the dirty suffix is the work this sweep can do
+    // (change propagation may skip further rows; the counter stays an
+    // upper bound of the same order)
+    let suffix_cells: usize = (prefix..topo.len())
+        .map(|i| {
+            let t = if rev { topo[topo.len() - 1 - i] } else { topo[i] };
+            let deg = if rev {
+                graph.out_degree(t)
+            } else {
+                graph.in_degree(t)
+            };
+            deg * p * p
+        })
+        .sum();
+    let _obs = crate::obs::kernel_timer(K::PATH, suffix_cells as u64);
+    let Workspace {
+        table,
+        backptr,
+        panel_startup,
+        panel_bw,
+        row_changed,
+        ..
+    } = ws;
+    let (panel_startup, panel_bw): (&[f64], &[f64]) = match inst.ctx() {
+        Some(ctx) => {
+            debug_assert_eq!(ctx.p(), p, "ctx/platform class count mismatch");
+            (ctx.panel_startup(), ctx.panel_bw())
+        }
+        None => {
+            fill_comm_panels(inst.platform, panel_startup, panel_bw);
+            (panel_startup.as_slice(), panel_bw.as_slice())
+        }
+    };
+    table.clear();
+    table.resize(v * p, 0.0);
+    backptr.clear();
+    backptr.resize(v * p, (usize::MAX, usize::MAX));
+    row_changed.clear();
+    row_changed.resize(v, false);
+
+    // clean prefix: rows are bit-identical to the basis — copy them
+    for i in 0..prefix {
+        let t = if rev { topo[topo.len() - 1 - i] } else { topo[i] };
+        table[t * p..(t + 1) * p].copy_from_slice(&plan.prev.table[t * p..(t + 1) * p]);
+        backptr[t * p..(t + 1) * p].copy_from_slice(&plan.prev.backptr[t * p..(t + 1) * p]);
+    }
+    let mut recomputed = 0usize;
+    for i in prefix..topo.len() {
+        let t = if rev { topo[topo.len() - 1 - i] } else { topo[i] };
+        // parents of `t` in the swept orientation
+        let preds = if rev { graph.succs(t) } else { graph.preds(t) };
+        // change propagation: a clean basis task whose swept parents all
+        // kept their basis rows feeds the recurrence identical inputs, so
+        // its basis row is the answer — copy instead of recomputing
+        if t < plan.basis_n && !plan.dirty[t] && preds.iter().all(|&(k, _)| !row_changed[k]) {
+            table[t * p..(t + 1) * p].copy_from_slice(&plan.prev.table[t * p..(t + 1) * p]);
+            backptr[t * p..(t + 1) * p]
+                .copy_from_slice(&plan.prev.backptr[t * p..(t + 1) * p]);
+            continue;
+        }
+        recomputed += 1;
+        if preds.is_empty() {
+            table[t * p..(t + 1) * p].copy_from_slice(costs.row(t));
+        } else {
+            let crow = costs.row(t);
+            let mut j0 = 0;
+            while j0 < p {
+                let j1 = (j0 + KERNEL_BLOCK).min(p);
+                // per-block max-fold accumulators on the stack
+                let mut best_total = [f64::NEG_INFINITY; KERNEL_BLOCK];
+                let mut best_ptr = [(usize::MAX, usize::MAX); KERNEL_BLOCK];
+                for &(k, data) in preds {
+                    let krow = &table[k * p..(k + 1) * p];
+                    for (bi, j) in (j0..j1).enumerate() {
+                        let srow = &panel_startup[j * p..j * p + p];
+                        let brow = &panel_bw[j * p..j * p + p];
+                        let (best, best_l) = K::min_plus_row(krow, srow, brow, data);
+                        if best > best_total[bi] {
+                            best_total[bi] = best;
+                            best_ptr[bi] = (k, best_l);
+                        }
+                    }
+                }
+                for (bi, j) in (j0..j1).enumerate() {
+                    table[t * p + j] = best_total[bi] + crow[j];
+                    backptr[t * p + j] = best_ptr[bi];
+                }
+                j0 = j1;
+            }
+        }
+        // an absorbed edit (recomputed row equals the basis row bit-wise)
+        // stops propagating to the task's swept children
+        row_changed[t] = t >= plan.basis_n
+            || !delta_row_equal(
+                &table[t * p..(t + 1) * p],
+                &plan.prev.table[t * p..(t + 1) * p],
+                &backptr[t * p..(t + 1) * p],
+                &plan.prev.backptr[t * p..(t + 1) * p],
+            );
+    }
+    recomputed
 }
 
 /// The dispatch the kernels run an instance under: the context's
@@ -689,9 +960,43 @@ pub fn find_ceft_tables_gathered_dispatched(
     rev: bool,
     dispatch: KernelDispatch,
 ) -> Vec<CeftTable> {
+    find_ceft_tables_gathered_delta_dispatched(ctx, insts, rev, &[], dispatch)
+        .into_iter()
+        .map(|(t, _)| t)
+        .collect()
+}
+
+/// The gathered table sweep with per-instance **delta plans**: instances
+/// with a plan (`plans[i]`, missing or `None` entries mean from-scratch)
+/// have their clean sweep prefix copied from the basis table and join the
+/// lock-step rounds only from their first dirty position — the
+/// `PendingTable` suffix offset of the service engine's batch drain. The
+/// gathered delta is prefix-only (no in-suffix change propagation — the
+/// lock-step rounds have no per-instance early exit), so the per-instance
+/// recomputed-row count returned alongside each table is exactly
+/// `topo len − clean prefix`. Tables remain bit-identical to the serial
+/// producers, delta or not.
+pub fn find_ceft_tables_gathered_delta(
+    ctx: &PlatformCtx,
+    insts: &[InstanceRef],
+    rev: bool,
+    plans: &[Option<DeltaPlan>],
+) -> Vec<(CeftTable, usize)> {
+    find_ceft_tables_gathered_delta_dispatched(ctx, insts, rev, plans, ctx.dispatch())
+}
+
+/// [`find_ceft_tables_gathered_delta`] with the lane implementation pinned
+/// explicitly.
+pub fn find_ceft_tables_gathered_delta_dispatched(
+    ctx: &PlatformCtx,
+    insts: &[InstanceRef],
+    rev: bool,
+    plans: &[Option<DeltaPlan>],
+    dispatch: KernelDispatch,
+) -> Vec<(CeftTable, usize)> {
     match dispatch {
-        KernelDispatch::Simd => gathered_tables_lanes::<SimdLanes>(ctx, insts, rev),
-        KernelDispatch::Scalar => gathered_tables_lanes::<ScalarLanes>(ctx, insts, rev),
+        KernelDispatch::Simd => gathered_tables_lanes::<SimdLanes>(ctx, insts, rev, plans),
+        KernelDispatch::Scalar => gathered_tables_lanes::<ScalarLanes>(ctx, insts, rev, plans),
     }
 }
 
@@ -738,10 +1043,39 @@ fn gathered_dp_fill<K: LaneKernel>(
     rev: bool,
     offs: &[usize],
     total: usize,
+    plans: &[Option<DeltaPlan>],
     ws: &mut Workspace,
-) {
+) -> Vec<usize> {
     let p = ctx.p();
-    let gathered_cells: usize = insts.iter().map(|i| i.graph.num_edges() * p * p).sum();
+    // per-instance clean-prefix lengths (0 without a plan): sweep
+    // positions below the start are copied from the basis, positions at
+    // or past it join the lock-step rounds
+    let starts: Vec<usize> = insts
+        .iter()
+        .enumerate()
+        .map(|(i, inst)| match plans.get(i).and_then(Option::as_ref) {
+            Some(plan) => delta_clean_prefix(inst.graph.topo_order(), plan, rev),
+            None => 0,
+        })
+        .collect();
+    let gathered_cells: usize = insts
+        .iter()
+        .zip(&starts)
+        .map(|(inst, &start)| {
+            let topo = inst.graph.topo_order();
+            (start..topo.len())
+                .map(|i| {
+                    let t = if rev { topo[topo.len() - 1 - i] } else { topo[i] };
+                    let deg = if rev {
+                        inst.graph.out_degree(t)
+                    } else {
+                        inst.graph.in_degree(t)
+                    };
+                    deg * p * p
+                })
+                .sum::<usize>()
+        })
+        .sum();
     let _obs = crate::obs::kernel_timer(crate::obs::KernelPath::Gathered, gathered_cells as u64);
     let (sp, bp) = (ctx.panel_startup(), ctx.panel_bw());
     let rounds = insts
@@ -763,13 +1097,28 @@ fn gathered_dp_fill<K: LaneKernel>(
     table.resize(total * p, 0.0);
     backptr.clear();
     backptr.resize(total * p, (usize::MAX, usize::MAX));
+    // clean prefixes: copy basis rows before the rounds begin, so suffix
+    // relaxations read them exactly as a from-scratch sweep would have
+    // produced them
+    for (i, inst) in insts.iter().enumerate() {
+        let Some(plan) = plans.get(i).and_then(Option::as_ref) else {
+            continue;
+        };
+        let topo = inst.graph.topo_order();
+        for pos in 0..starts[i] {
+            let t = if rev { topo[topo.len() - 1 - pos] } else { topo[pos] };
+            let base = (offs[i] + t) * p;
+            table[base..base + p].copy_from_slice(&plan.prev.table[t * p..(t + 1) * p]);
+            backptr[base..base + p].copy_from_slice(&plan.prev.backptr[t * p..(t + 1) * p]);
+        }
+    }
     for r in 0..rounds {
         batch_rows.clear();
         batch_data.clear();
         gather_seg.clear();
         for (i, inst) in insts.iter().enumerate() {
             let topo = inst.graph.topo_order();
-            if r >= topo.len() {
+            if r >= topo.len() || r < starts[i] {
                 continue;
             }
             let t = if rev { topo[topo.len() - 1 - r] } else { topo[r] };
@@ -829,6 +1178,7 @@ fn gathered_dp_fill<K: LaneKernel>(
             off += cnt;
         }
     }
+    starts
 }
 
 /// The gathered path DP, monomorphised per lane implementation (see
@@ -841,7 +1191,7 @@ fn gathered_lanes<K: LaneKernel>(ctx: &PlatformCtx, insts: &[InstanceRef]) -> Ve
     let p = ctx.p();
     let (offs, total) = gathered_offsets(ctx, insts);
     ctx.with_workspace(|ws| {
-        gathered_dp_fill::<K>(ctx, insts, false, &offs, total, ws);
+        gathered_dp_fill::<K>(ctx, insts, false, &offs, total, &[], ws);
         let Workspace {
             table,
             backptr,
@@ -874,24 +1224,29 @@ fn gathered_tables_lanes<K: LaneKernel>(
     ctx: &PlatformCtx,
     insts: &[InstanceRef],
     rev: bool,
-) -> Vec<CeftTable> {
+    plans: &[Option<DeltaPlan>],
+) -> Vec<(CeftTable, usize)> {
     if insts.is_empty() {
         return Vec::new();
     }
     let p = ctx.p();
     let (offs, total) = gathered_offsets(ctx, insts);
     ctx.with_workspace(|ws| {
-        gathered_dp_fill::<K>(ctx, insts, rev, &offs, total, ws);
+        let starts = gathered_dp_fill::<K>(ctx, insts, rev, &offs, total, plans, ws);
         insts
             .iter()
             .enumerate()
             .map(|(i, inst)| {
                 let range = offs[i] * p..(offs[i] + inst.n()) * p;
-                CeftTable {
-                    p,
-                    table: ws.table[range.clone()].to_vec(),
-                    backptr: ws.backptr[range].to_vec(),
-                }
+                let recomputed = inst.graph.topo_order().len() - starts[i];
+                (
+                    CeftTable {
+                        p,
+                        table: ws.table[range.clone()].to_vec(),
+                        backptr: ws.backptr[range].to_vec(),
+                    },
+                    recomputed,
+                )
             })
             .collect()
     })
@@ -1041,6 +1396,118 @@ fn critical_path_from_parts(
 /// PJRT backend, which fills the table on the accelerator).
 pub fn critical_path_from_table(graph: &TaskGraph, t: &CeftTable) -> CriticalPath {
     critical_path_from_parts(graph, t.p, &t.table, &t.backptr, &mut Vec::new())
+}
+
+/// Per-task slack from a **forward** CEFT table: the largest uniform rise
+/// of a task's CEFT row that provably leaves the critical-path length
+/// unchanged — the CPM "total float" idiom, adapted to the max-of-min
+/// recurrence. Two passes over the forward table only:
+///
+/// 1. rebuild the per-`(task, class)` arrival fold
+///    `m(u, j) = max_k contrib_k(u, j)` with
+///    `contrib_k(u, j) = min_l (CEFT(k, l) + comm(l, j, data))`, using the
+///    same [`ScalarLanes::min_plus_row`] float ops and the same CSR parent
+///    order the kernel folded — so the realized argmax parent's gap
+///    `m(u, j) − contrib_k(u, j)` is an exact float `0.0`;
+/// 2. reverse-topo recursion: sinks get
+///    `slack(t) = CPL − min_j CEFT(t, ·)`, interior tasks
+///    `slack(t) = min_u (slack(u) + min_j (m(u, j) − contrib_t(u, j)))`.
+///
+/// A uniform rise `δ` of `CEFT(t, ·)` raises `contrib_t(u, j)` by exactly
+/// `δ`, so `CEFT(u, j)` rises by at most `max(0, δ − gap_j)`; bounding
+/// that by `slack(u)` for every class gives the recursion. Guarantees:
+/// `slack(t) ≥ 0` everywhere (gaps are non-negative by the max-fold) and
+/// `slack(t) == 0.0` **exactly** along the backpointer critical path — at
+/// each hop the realized parent's gap at the realized class is bit-zero
+/// and the sink anchor is `CPL − CPL`. Returns
+/// `CPL = max_sinks min_j CEFT(t, ·)`; `out` receives the `v` slacks.
+pub fn slack_from_table_with(
+    ws: &mut Workspace,
+    inst: InstanceRef,
+    fwd: &CeftTable,
+    out: &mut Vec<f64>,
+) -> f64 {
+    let graph = inst.graph;
+    let v = inst.n();
+    let p = inst.p();
+    assert_eq!(fwd.p, p, "table/platform class count mismatch");
+    assert_eq!(fwd.table.len(), v * p, "table/graph size mismatch");
+    let Workspace {
+        slack_m,
+        panel_startup,
+        panel_bw,
+        ..
+    } = ws;
+    let (panel_startup, panel_bw): (&[f64], &[f64]) = match inst.ctx() {
+        Some(ctx) => {
+            debug_assert_eq!(ctx.p(), p, "ctx/platform class count mismatch");
+            (ctx.panel_startup(), ctx.panel_bw())
+        }
+        None => {
+            fill_comm_panels(inst.platform, panel_startup, panel_bw);
+            (panel_startup.as_slice(), panel_bw.as_slice())
+        }
+    };
+    // pass 1: the arrival fold `m(u, j)`, bit-for-bit as the kernel built
+    // it (sources keep `−∞` rows; they are never read below)
+    slack_m.clear();
+    slack_m.resize(v * p, f64::NEG_INFINITY);
+    for u in 0..v {
+        let preds = graph.preds(u);
+        if preds.is_empty() {
+            continue;
+        }
+        let mrow = &mut slack_m[u * p..(u + 1) * p];
+        for &(k, data) in preds {
+            let krow = &fwd.table[k * p..(k + 1) * p];
+            for (j, m) in mrow.iter_mut().enumerate() {
+                let srow = &panel_startup[j * p..j * p + p];
+                let brow = &panel_bw[j * p..j * p + p];
+                let (arrival, _) = ScalarLanes::min_plus_row(krow, srow, brow, data);
+                if arrival > *m {
+                    *m = arrival;
+                }
+            }
+        }
+    }
+    // pass 2: reverse topo, anchored at the sinks' distance to the CPL
+    let mut cpl = f64::NEG_INFINITY;
+    for t in 0..v {
+        if graph.out_degree(t) == 0 {
+            cpl = cpl.max(fwd.min_over_classes(t));
+        }
+    }
+    out.clear();
+    out.resize(v, 0.0);
+    let topo = graph.topo_order();
+    for &t in topo.iter().rev() {
+        let succs = graph.succs(t);
+        if succs.is_empty() {
+            out[t] = (cpl - fwd.min_over_classes(t)).max(0.0);
+            continue;
+        }
+        let krow = &fwd.table[t * p..(t + 1) * p];
+        let mut slack = f64::INFINITY;
+        for &(u, data) in succs {
+            let mrow = &slack_m[u * p..(u + 1) * p];
+            let mut gap = f64::INFINITY;
+            for (j, &m) in mrow.iter().enumerate() {
+                let srow = &panel_startup[j * p..j * p + p];
+                let brow = &panel_bw[j * p..j * p + p];
+                let (arrival, _) = ScalarLanes::min_plus_row(krow, srow, brow, data);
+                let g = m - arrival;
+                if g < gap {
+                    gap = g;
+                }
+            }
+            let cand = out[u] + gap;
+            if cand < slack {
+                slack = cand;
+            }
+        }
+        out[t] = slack.max(0.0);
+    }
+    cpl
 }
 
 /// Evaluate the CEFT length of a *given* path (sequence of tasks connected

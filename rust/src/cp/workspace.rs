@@ -138,6 +138,17 @@ pub struct Workspace {
     /// (`cp::ceft::find_critical_paths_gathered`,
     /// `cp::ceft::find_ceft_tables_gathered`)
     pub gather_seg: Vec<(usize, usize, usize)>,
+    /// delta-CEFT change-propagation flags: `row_changed[t]` marks a task
+    /// whose recomputed row differs bit-wise from the basis table, so its
+    /// swept children cannot reuse their basis rows
+    /// (`cp::ceft::ceft_table_delta_into`)
+    pub row_changed: Vec<bool>,
+    /// slack backward pass scratch: the `v × P` max-fold arrival rows
+    /// `m(u, j) = CEFT(u, j) − C_comp(u, j)`, rebuilt with the kernel's
+    /// exact comparison sequence (`cp::ceft::slack_from_table_with`)
+    pub slack_m: AlignedVec,
+    /// per-task slack output scratch (`cp::ceft::slack_from_table_with`)
+    pub slack: Vec<f64>,
 }
 
 impl Workspace {
@@ -180,6 +191,9 @@ impl Workspace {
         self.batch_vals.clear();
         self.batch_args.clear();
         self.gather_seg.clear();
+        self.row_changed.clear();
+        self.slack_m.clear();
+        self.slack.clear();
     }
 
     /// Total `f64`-equivalent capacity across the major buffers — a rough

@@ -1,0 +1,434 @@
+//! In-place graph edits for live, evolving workflows.
+//!
+//! An [`GraphEdit`] sequence mutates a `(TaskGraph, CostMatrix)` pair into
+//! a successor version without re-submitting the whole instance: the
+//! service's `update` request (op 10) parses edits, applies them here, and
+//! bumps the interned instance's generation. [`apply_edits`] additionally
+//! reports everything the delta-CEFT layer needs to recompute only the
+//! damage ([`crate::cp::ceft::DeltaPlan`]):
+//!
+//! * a **dirty set** in the resulting id space — every task whose cost
+//!   row, predecessor list, or successor list differs from the input.
+//!   Edge edits mark *both* endpoints, so one dirty set serves the
+//!   forward and the reverse sweep;
+//! * **id stability** — task removal renumbers ids above the removed
+//!   task, which invalidates any memoized basis table (the delta plan's
+//!   id-prefix contract); callers must fall back to a from-scratch sweep;
+//! * **cost-only** classification with per-task increase bounds — when
+//!   every edit is a [`GraphEdit::TaskCost`], the graph `Arc` is reused
+//!   unchanged (same CSR, same cached topo order) and the per-task
+//!   maximum row increase feeds the slack-based skip rule: increase-only
+//!   edits bounded by each task's slack provably leave the critical-path
+//!   length unchanged, so the engine can skip recompute entirely.
+//!
+//! Edits apply **sequentially**: each edit addresses the id space produced
+//! by the edits before it. Untouched edges keep their relative order in
+//! the edge list (and thus their CSR and tie-breaking order); added edges
+//! append at the end.
+
+use std::sync::Arc;
+
+use super::{Edge, TaskGraph};
+use crate::model::CostMatrix;
+
+/// One mutation of a task graph or its computation-cost matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GraphEdit {
+    /// Replace task `task`'s computation-cost row (length `P`).
+    TaskCost { task: usize, costs: Vec<f64> },
+    /// Set the data payload of every existing `src → dst` edge.
+    EdgeCost { src: usize, dst: usize, data: f64 },
+    /// Append a new `src → dst` edge with payload `data`.
+    AddEdge { src: usize, dst: usize, data: f64 },
+    /// Remove every `src → dst` edge.
+    RemoveEdge { src: usize, dst: usize },
+    /// Append a new task (id `n`) with the given cost row; it starts
+    /// disconnected — follow with [`GraphEdit::AddEdge`] to wire it in.
+    AddTask { costs: Vec<f64> },
+    /// Remove task `task` and every incident edge; ids above `task`
+    /// shift down by one (sets [`EditResult::ids_stable`] to `false`).
+    RemoveTask { task: usize },
+}
+
+impl GraphEdit {
+    /// Stable lower-case tag used by the wire protocol.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            GraphEdit::TaskCost { .. } => "task_cost",
+            GraphEdit::EdgeCost { .. } => "edge_cost",
+            GraphEdit::AddEdge { .. } => "add_edge",
+            GraphEdit::RemoveEdge { .. } => "remove_edge",
+            GraphEdit::AddTask { .. } => "add_task",
+            GraphEdit::RemoveTask { .. } => "remove_task",
+        }
+    }
+}
+
+/// The outcome of [`apply_edits`]: the successor instance plus the
+/// invalidation facts the versioned memo layer consumes.
+#[derive(Clone, Debug)]
+pub struct EditResult {
+    /// the edited graph — the *same* `Arc` as the input when no edit was
+    /// structural (cost-only), so pointer identity doubles as a "topo
+    /// order unchanged" guarantee
+    pub graph: Arc<TaskGraph>,
+    /// the edited cost matrix
+    pub costs: Arc<CostMatrix>,
+    /// per-task dirty flags in the resulting id space (`len == n`); all
+    /// `true` when `ids_stable` is `false`
+    pub dirty: Vec<bool>,
+    /// `false` iff a [`GraphEdit::RemoveTask`] renumbered ids — memoized
+    /// basis tables indexed by task id are then unusable as delta bases
+    pub ids_stable: bool,
+    /// every edit was a [`GraphEdit::TaskCost`]: graph `Arc` reused,
+    /// `max_increase` is populated
+    pub cost_only: bool,
+    /// cost-only runs: `true` iff no cost entry decreased (the
+    /// monotonicity half of the slack skip rule)
+    pub increase_only: bool,
+    /// cost-only runs: per-task `max_j (new − old)` against the input
+    /// matrix, `0.0` for untouched tasks; empty otherwise
+    pub max_increase: Vec<f64>,
+}
+
+/// Apply `edits` in order to `(graph, costs)`, returning the successor
+/// instance and its invalidation facts. Fails — leaving no partial state,
+/// since inputs are immutable — on out-of-range ids, shape-mismatched
+/// cost rows, non-finite or negative payloads/costs, editing an absent
+/// edge, adding a cycle-forming or duplicate-endpoint-invalid edge, or
+/// removing the last task.
+pub fn apply_edits(
+    graph: &Arc<TaskGraph>,
+    costs: &Arc<CostMatrix>,
+    edits: &[GraphEdit],
+) -> Result<EditResult, String> {
+    let p = costs.p();
+    let mut n = graph.num_tasks();
+    if costs.n() != n {
+        return Err(format!(
+            "cost matrix covers {} tasks but graph has {n}",
+            costs.n()
+        ));
+    }
+    let mut edges: Vec<Edge> = graph.edges().to_vec();
+    let mut cost_data: Vec<f64> = costs.as_slice().to_vec();
+    let mut dirty = vec![false; n];
+    let mut ids_stable = true;
+    let mut structural = false;
+
+    for edit in edits {
+        match edit {
+            GraphEdit::TaskCost { task, costs: row } => {
+                let t = *task;
+                if t >= n {
+                    return Err(format!("task_cost: task {t} out of range n={n}"));
+                }
+                check_cost_row(row, p, "task_cost")?;
+                cost_data[t * p..(t + 1) * p].copy_from_slice(row);
+                dirty[t] = true;
+            }
+            GraphEdit::EdgeCost { src, dst, data } => {
+                check_endpoints(*src, *dst, n, "edge_cost")?;
+                check_payload(*data, "edge_cost")?;
+                let mut hit = false;
+                for e in edges.iter_mut() {
+                    if e.src == *src && e.dst == *dst {
+                        e.data = *data;
+                        hit = true;
+                    }
+                }
+                if !hit {
+                    return Err(format!("edge_cost: no edge {src}->{dst}"));
+                }
+                dirty[*src] = true;
+                dirty[*dst] = true;
+                structural = true;
+            }
+            GraphEdit::AddEdge { src, dst, data } => {
+                check_endpoints(*src, *dst, n, "add_edge")?;
+                check_payload(*data, "add_edge")?;
+                edges.push(Edge {
+                    src: *src,
+                    dst: *dst,
+                    data: *data,
+                });
+                dirty[*src] = true;
+                dirty[*dst] = true;
+                structural = true;
+            }
+            GraphEdit::RemoveEdge { src, dst } => {
+                check_endpoints(*src, *dst, n, "remove_edge")?;
+                let before = edges.len();
+                edges.retain(|e| !(e.src == *src && e.dst == *dst));
+                if edges.len() == before {
+                    return Err(format!("remove_edge: no edge {src}->{dst}"));
+                }
+                dirty[*src] = true;
+                dirty[*dst] = true;
+                structural = true;
+            }
+            GraphEdit::AddTask { costs: row } => {
+                check_cost_row(row, p, "add_task")?;
+                cost_data.extend_from_slice(row);
+                dirty.push(true);
+                n += 1;
+                structural = true;
+            }
+            GraphEdit::RemoveTask { task } => {
+                let t = *task;
+                if t >= n {
+                    return Err(format!("remove_task: task {t} out of range n={n}"));
+                }
+                if n == 1 {
+                    return Err("remove_task: cannot remove the last task".to_string());
+                }
+                edges.retain(|e| e.src != t && e.dst != t);
+                for e in edges.iter_mut() {
+                    if e.src > t {
+                        e.src -= 1;
+                    }
+                    if e.dst > t {
+                        e.dst -= 1;
+                    }
+                }
+                cost_data.drain(t * p..(t + 1) * p);
+                dirty.remove(t);
+                n -= 1;
+                ids_stable = false;
+                structural = true;
+            }
+        }
+    }
+
+    if !ids_stable {
+        // renumbered ids void any basis — the whole table is "dirty"
+        dirty.iter_mut().for_each(|d| *d = true);
+    }
+    let cost_only = !structural;
+    let new_graph = if cost_only {
+        Arc::clone(graph)
+    } else {
+        let tuples: Vec<(usize, usize, f64)> =
+            edges.iter().map(|e| (e.src, e.dst, e.data)).collect();
+        Arc::new(TaskGraph::try_from_edges(n, &tuples).map_err(|e| format!("edit result: {e}"))?)
+    };
+    let new_costs = Arc::new(CostMatrix::try_new(p, cost_data).map_err(|e| format!("edit result: {e}"))?);
+
+    let (increase_only, max_increase) = if cost_only {
+        let mut inc = vec![0.0f64; n];
+        let mut monotone = true;
+        for t in 0..n {
+            if !dirty[t] {
+                continue;
+            }
+            let old = costs.row(t);
+            let new = new_costs.row(t);
+            for j in 0..p {
+                let d = new[j] - old[j];
+                if d < 0.0 {
+                    monotone = false;
+                }
+                if d > inc[t] {
+                    inc[t] = d;
+                }
+            }
+        }
+        (monotone, inc)
+    } else {
+        (false, Vec::new())
+    };
+
+    Ok(EditResult {
+        graph: new_graph,
+        costs: new_costs,
+        dirty,
+        ids_stable,
+        cost_only,
+        increase_only,
+        max_increase,
+    })
+}
+
+fn check_cost_row(row: &[f64], p: usize, what: &str) -> Result<(), String> {
+    if row.len() != p {
+        return Err(format!(
+            "{what}: cost row has {} entries, platform has P={p}",
+            row.len()
+        ));
+    }
+    for &c in row {
+        if !c.is_finite() || c < 0.0 {
+            return Err(format!("{what}: cost entries must be finite and >= 0"));
+        }
+    }
+    Ok(())
+}
+
+fn check_endpoints(src: usize, dst: usize, n: usize, what: &str) -> Result<(), String> {
+    if src >= n || dst >= n {
+        return Err(format!("{what}: edge ({src},{dst}) out of range n={n}"));
+    }
+    if src == dst {
+        return Err(format!("{what}: self loop at {src}"));
+    }
+    Ok(())
+}
+
+fn check_payload(data: f64, what: &str) -> Result<(), String> {
+    if !data.is_finite() || data < 0.0 {
+        return Err(format!("{what}: edge data must be finite and >= 0"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> (Arc<TaskGraph>, Arc<CostMatrix>) {
+        let g = TaskGraph::from_edges(4, &[(0, 1, 5.0), (0, 2, 6.0), (1, 3, 7.0), (2, 3, 8.0)]);
+        let c = CostMatrix::new(2, vec![1.0; 8]);
+        (Arc::new(g), Arc::new(c))
+    }
+
+    #[test]
+    fn cost_only_edit_reuses_graph_arc_and_bounds_increase() {
+        let (g, c) = diamond();
+        let r = apply_edits(
+            &g,
+            &c,
+            &[GraphEdit::TaskCost {
+                task: 2,
+                costs: vec![1.5, 3.0],
+            }],
+        )
+        .unwrap();
+        assert!(Arc::ptr_eq(&r.graph, &g));
+        assert!(r.cost_only && r.ids_stable && r.increase_only);
+        assert_eq!(r.dirty, vec![false, false, true, false]);
+        assert_eq!(r.max_increase, vec![0.0, 0.0, 2.0, 0.0]);
+        assert_eq!(r.costs.row(2), &[1.5, 3.0]);
+        // inputs untouched
+        assert_eq!(c.row(2), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn cost_decrease_clears_increase_only() {
+        let (g, c) = diamond();
+        let r = apply_edits(
+            &g,
+            &c,
+            &[GraphEdit::TaskCost {
+                task: 1,
+                costs: vec![0.5, 2.0],
+            }],
+        )
+        .unwrap();
+        assert!(r.cost_only && !r.increase_only);
+        assert_eq!(r.max_increase[1], 1.0);
+    }
+
+    #[test]
+    fn edge_edits_mark_both_endpoints_and_rebuild() {
+        let (g, c) = diamond();
+        let r = apply_edits(&g, &c, &[GraphEdit::EdgeCost { src: 1, dst: 3, data: 9.0 }]).unwrap();
+        assert!(!r.cost_only && r.ids_stable);
+        assert!(!Arc::ptr_eq(&r.graph, &g));
+        assert_eq!(r.dirty, vec![false, true, false, true]);
+        assert!(r.graph.preds(3).iter().any(|&(k, d)| k == 1 && d == 9.0));
+        // untouched edges keep their order, so the cached topo matches
+        assert_eq!(r.graph.topo_order(), g.topo_order());
+    }
+
+    #[test]
+    fn add_and_remove_edge_round_trip_preserves_structure() {
+        let (g, c) = diamond();
+        let added = apply_edits(&g, &c, &[GraphEdit::AddEdge { src: 1, dst: 2, data: 4.0 }]).unwrap();
+        assert_eq!(added.graph.num_edges(), 5);
+        assert_eq!(added.dirty, vec![false, true, true, false]);
+        let removed = apply_edits(
+            &added.graph,
+            &added.costs,
+            &[GraphEdit::RemoveEdge { src: 1, dst: 2 }],
+        )
+        .unwrap();
+        assert_eq!(removed.graph.num_edges(), 4);
+        assert_eq!(removed.graph.edges(), g.edges());
+        assert_eq!(removed.graph.topo_order(), g.topo_order());
+    }
+
+    #[test]
+    fn add_task_appends_id_and_cost_row() {
+        let (g, c) = diamond();
+        let r = apply_edits(
+            &g,
+            &c,
+            &[
+                GraphEdit::AddTask { costs: vec![2.0, 3.0] },
+                GraphEdit::AddEdge { src: 3, dst: 4, data: 1.0 },
+            ],
+        )
+        .unwrap();
+        assert!(r.ids_stable);
+        assert_eq!(r.graph.num_tasks(), 5);
+        assert_eq!(r.costs.n(), 5);
+        assert_eq!(r.costs.row(4), &[2.0, 3.0]);
+        assert_eq!(r.dirty, vec![false, false, false, true, true]);
+    }
+
+    #[test]
+    fn remove_task_shifts_ids_and_voids_stability() {
+        let (g, c) = diamond();
+        let r = apply_edits(&g, &c, &[GraphEdit::RemoveTask { task: 1 }]).unwrap();
+        assert!(!r.ids_stable);
+        assert_eq!(r.graph.num_tasks(), 3);
+        // old task 2 is now id 1, old 3 is 2; only 0->1 and 1->2 survive
+        assert_eq!(r.graph.num_edges(), 2);
+        assert!(r.graph.succs(0).iter().any(|&(s, _)| s == 1));
+        assert!(r.graph.succs(1).iter().any(|&(s, _)| s == 2));
+        assert!(r.dirty.iter().all(|&d| d));
+    }
+
+    #[test]
+    fn cycle_forming_edit_is_rejected_atomically() {
+        let (g, c) = diamond();
+        let err = apply_edits(&g, &c, &[GraphEdit::AddEdge { src: 3, dst: 0, data: 1.0 }]);
+        assert!(err.unwrap_err().contains("cycle"));
+    }
+
+    #[test]
+    fn invalid_edits_report_errors() {
+        let (g, c) = diamond();
+        for (edit, frag) in [
+            (GraphEdit::TaskCost { task: 9, costs: vec![1.0, 1.0] }, "out of range"),
+            (GraphEdit::TaskCost { task: 0, costs: vec![1.0] }, "entries"),
+            (GraphEdit::TaskCost { task: 0, costs: vec![-1.0, 1.0] }, "finite"),
+            (GraphEdit::EdgeCost { src: 0, dst: 3, data: 1.0 }, "no edge"),
+            (GraphEdit::RemoveEdge { src: 0, dst: 3 }, "no edge"),
+            (GraphEdit::AddEdge { src: 0, dst: 0, data: 1.0 }, "self loop"),
+            (GraphEdit::AddEdge { src: 0, dst: 1, data: f64::NAN }, "finite"),
+            (GraphEdit::RemoveTask { task: 7 }, "out of range"),
+        ] {
+            let err = apply_edits(&g, &c, std::slice::from_ref(&edit)).unwrap_err();
+            assert!(err.contains(frag), "{edit:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn sequential_edits_address_the_evolving_id_space() {
+        let (g, c) = diamond();
+        // remove task 0, then edit the task formerly known as 1 (now 0)
+        let r = apply_edits(
+            &g,
+            &c,
+            &[
+                GraphEdit::RemoveTask { task: 0 },
+                GraphEdit::TaskCost { task: 0, costs: vec![5.0, 5.0] },
+            ],
+        )
+        .unwrap();
+        assert_eq!(r.graph.num_tasks(), 3);
+        assert_eq!(r.costs.row(0), &[5.0, 5.0]);
+        assert!(!r.ids_stable && !r.cost_only);
+    }
+}

@@ -8,6 +8,7 @@
 //! and a cached topological order, since every algorithm in [`crate::cp`] and
 //! [`crate::sched`] is a sweep in (reverse) topological order.
 
+pub mod edit;
 pub mod generator;
 pub mod io;
 pub mod realworld;

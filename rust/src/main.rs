@@ -414,7 +414,7 @@ fn cmd_request(tokens: &[String]) -> i32 {
         .opt(
             "op",
             Some("schedule"),
-            "ping | submit | cp | schedule | stats | trace | metrics | evict | clear | shutdown",
+            "ping | submit | cp | schedule | update | stats | trace | metrics | evict | clear | shutdown",
         )
         .opt("algorithm", Some("CEFT-CPOP"), "scheduler for --op schedule")
         .opt(
@@ -426,6 +426,17 @@ fn cmd_request(tokens: &[String]) -> i32 {
             "id",
             None,
             "instance handle from a previous submit (skips instance generation)",
+        )
+        .opt(
+            "slack",
+            Some("false"),
+            "for --op cp: also return the per-task slack array",
+        )
+        .opt(
+            "edits",
+            None,
+            "for --op update: JSON array of edit objects, e.g. \
+             '[{\"edit\":\"task_cost\",\"task\":3,\"costs\":[2.0,1.5]}]'",
         );
     let parsed = parse_or_exit(args, tokens);
     let op = parsed.req("op").to_string();
@@ -475,7 +486,48 @@ fn cmd_request(tokens: &[String]) -> i32 {
                 platform: Some(platform),
             }
         }
-        "cp" => Request::CriticalPath { target: target() },
+        "cp" => Request::CriticalPath {
+            target: target(),
+            slack: parsed.req("slack") == "true",
+        },
+        "update" => {
+            let id = match parsed.get("id") {
+                Some(id) => parse_id(id),
+                None => {
+                    eprintln!("--op update requires --id (updates are handle-only)");
+                    return 2;
+                }
+            };
+            let edits_json = match parsed.get("edits") {
+                Some(e) => e,
+                None => {
+                    eprintln!("--op update requires --edits");
+                    return 2;
+                }
+            };
+            let edits = match Json::parse(edits_json)
+                .map_err(|e| e.to_string())
+                .and_then(|j| {
+                    j.as_arr()
+                        .ok_or_else(|| "--edits must be a JSON array".to_string())
+                        .and_then(|arr| {
+                            arr.iter()
+                                .map(ceft::service::protocol::edit_from_json)
+                                .collect::<Result<Vec<_>, _>>()
+                        })
+                }) {
+                Ok(e) if !e.is_empty() => e,
+                Ok(_) => {
+                    eprintln!("--edits must contain at least one edit");
+                    return 2;
+                }
+                Err(e) => {
+                    eprintln!("bad --edits: {e}");
+                    return 2;
+                }
+            };
+            Request::Update { id, edits }
+        }
         "schedule" => {
             let algorithm = match Algorithm::parse(parsed.req("algorithm")) {
                 Ok(a) => a,
@@ -598,6 +650,22 @@ struct LoadgenCfg {
     /// opens when in-flight misses reach the worker-thread count, so this
     /// must exceed `threads_cfg` for the gather path to be reachable.
     clients: usize,
+    /// fraction of the instance mix that also receives in-place `update`
+    /// traffic (tail-decile cost edits, see [`EditSpec`])
+    edit_share: f64,
+}
+
+/// One edited instance in the loadgen mix: `update` requests flip task
+/// `task` of instance `index` between cost rows `a` and `b`. The task is
+/// chosen from the **tail decile of the topological order**, so any
+/// delta-served recompute may touch at most `bound` rows — the acceptance
+/// invariant `repro loadgen --edit-share` counter-verifies per response.
+struct EditSpec {
+    index: usize,
+    task: usize,
+    a: Vec<f64>,
+    b: Vec<f64>,
+    bound: usize,
 }
 
 /// What one replay point hands back to [`cmd_loadgen`] for the sweep-level
@@ -628,6 +696,12 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         Some("0.25"),
         "fraction of the mix replayed as critical-path requests; a comma \
          list (e.g. 0.0,0.25,1.0) sweeps the mix, one report point each",
+    )
+    .opt(
+        "edit-share",
+        Some("0.0"),
+        "fraction of instances that also receive in-place update traffic \
+         (cost edits on a tail-decile task, exercising delta-CEFT)",
     )
     .opt("cache-capacity", Some("4096"), "LRU entries per result cache")
     .opt("threads", None, "worker threads (default: all cores)")
@@ -674,6 +748,11 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
             return 2;
         }
     };
+    let edit_share: f64 = num_or_exit(&parsed, "edit-share", None);
+    if !(0.0..=1.0).contains(&edit_share) {
+        eprintln!("--edit-share must be a fraction in [0, 1]");
+        return 2;
+    }
     let cache_capacity: usize = num_or_exit(&parsed, "cache-capacity", None);
     let threads_cfg: usize = num_or_exit(&parsed, "threads", Some(pool::default_threads()));
     let batch_window: usize = num_or_exit(&parsed, "batch-window", None);
@@ -692,6 +771,7 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         } else {
             clients_cfg
         },
+        edit_share,
     };
 
     // Build the submit stream once: `count` distinct instances (same grid
@@ -703,7 +783,9 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
     // every sweep point (and the telemetry A/B engines) replays these
     // submits verbatim and gets the same ids back.
     let base = cell_from(&parsed);
+    let edit_count = ((count as f64) * cfg.edit_share).ceil() as usize;
     let mut submit_lines = Vec::with_capacity(count);
+    let mut edit_specs: Vec<EditSpec> = Vec::with_capacity(edit_count);
     for i in 0..count {
         let mut cell = base;
         cell.index = base.index + i as u64;
@@ -714,6 +796,34 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         } else {
             platform
         };
+        if i >= count - edit_count {
+            // Edit target: the task sitting `bound` positions before the
+            // END of the topological order, so a delta recompute's dirty
+            // suffix spans at most `bound` = max(1, n/10) rows — the
+            // last-decile acceptance bound. Two cost variants with
+            // opposite per-class scaling: flipping between them always
+            // changes bits, and for p ≥ 2 the change is never
+            // increase-only, so the slack skip rule stays out of the way
+            // and every flip exercises the delta kernel.
+            let n = inst.graph.num_tasks();
+            let bound = (n / 10).max(1);
+            let task = inst.graph.topo_order()[n - bound];
+            let row = inst.comp.row(task);
+            let scale = |k: usize, up: bool| -> f64 {
+                if (k % 2 == 0) == up {
+                    1.5
+                } else {
+                    0.5
+                }
+            };
+            edit_specs.push(EditSpec {
+                index: i,
+                task,
+                a: row.iter().enumerate().map(|(k, &c)| c * scale(k, true)).collect(),
+                b: row.iter().enumerate().map(|(k, &c)| c * scale(k, false)).collect(),
+                bound,
+            });
+        }
         let line = ceft::service::request_to_json(&Request::Submit {
             instance: inst,
             platform: Some(platform),
@@ -728,7 +838,7 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         if sweep {
             println!("--- cp-share {share} ---");
         }
-        match loadgen_point(&cfg, &submit_lines, share) {
+        match loadgen_point(&cfg, &submit_lines, &edit_specs, share) {
             Ok(pt) => points.push((share, pt)),
             Err(code) => return code,
         }
@@ -823,6 +933,7 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
 fn loadgen_point(
     cfg: &LoadgenCfg,
     submit_lines: &[String],
+    edit_specs: &[EditSpec],
     cp_share: f64,
 ) -> Result<LoadgenPoint, i32> {
     let engine = Engine::new(EngineConfig {
@@ -856,13 +967,14 @@ fn loadgen_point(
     // table misses through the engine's cross-request batcher. Deterministic
     // striping, so a given flag set always produces the same request stream.
     let cp_count = ((cfg.count as f64) * cp_share).ceil() as usize;
-    let lines: Vec<String> = ids
+    let mut lines: Vec<String> = ids
         .iter()
         .enumerate()
         .map(|(i, &id)| {
             let req = if i < cp_count {
                 Request::CriticalPath {
                     target: Target::Handle(id),
+                    slack: false,
                 }
             } else {
                 Request::Schedule {
@@ -873,6 +985,23 @@ fn loadgen_point(
             ceft::service::request_to_json(&req).to_string()
         })
         .collect();
+    // In-place edit traffic: each edited instance contributes both cost
+    // variants, so every cycle of the ring flips the row's bits and the
+    // table miss behind the follow-up cp/schedule is served by a delta
+    // recompute over the tail-decile dirty suffix (the first flip per
+    // instance has no memoized basis yet and recomputes in full).
+    for spec in edit_specs {
+        for costs in [&spec.a, &spec.b] {
+            let req = Request::Update {
+                id: ids[spec.index],
+                edits: vec![ceft::graph::edit::GraphEdit::TaskCost {
+                    task: spec.task,
+                    costs: costs.clone(),
+                }],
+            };
+            lines.push(ceft::service::request_to_json(&req).to_string());
+        }
+    }
 
     // Fire in 50ms ticks at the target rate; measure what the engine
     // actually sustains.
@@ -897,6 +1026,16 @@ fn loadgen_point(
     let threads = engine.threads();
     let mut sent: u64 = 0;
     let mut failures: u64 = 0;
+    // update-response accounting: every update reply carries its own
+    // delta economy counters, so the tail-decile bound is verified on
+    // every single delta-served edit, not just in aggregate
+    let bound_max = edit_specs.iter().map(|s| s.bound).max().unwrap_or(0);
+    let mut upd_seen: u64 = 0;
+    let mut upd_skipped: u64 = 0;
+    let mut upd_delta_served: u64 = 0;
+    let mut upd_delta_rows: f64 = 0.0;
+    let mut upd_full_rows: f64 = 0.0;
+    let mut upd_bound_violations: u64 = 0;
     let start = std::time::Instant::now();
     while start.elapsed() < deadline {
         let tick_start = std::time::Instant::now();
@@ -912,6 +1051,28 @@ fn loadgen_point(
             latencies.push(*secs);
             if resp.get("ok") != Some(&Json::Bool(true)) {
                 failures += 1;
+            } else if let Some(skipped) = resp.get("skipped").and_then(Json::as_bool) {
+                // only update replies carry "skipped"
+                upd_seen += 1;
+                if skipped {
+                    upd_skipped += 1;
+                } else {
+                    let rec = resp
+                        .get("delta_rows_recomputed")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0);
+                    let full = resp.get("full_rows").and_then(Json::as_f64).unwrap_or(0.0);
+                    upd_delta_rows += rec;
+                    upd_full_rows += full;
+                    if rec < full {
+                        // a delta-served recompute: the dirty suffix of a
+                        // tail-decile cost edit is at most `bound` rows
+                        upd_delta_served += 1;
+                        if rec > bound_max as f64 {
+                            upd_bound_violations += 1;
+                        }
+                    }
+                }
             }
         }
         if let Some(rest) = tick.checked_sub(tick_start.elapsed()) {
@@ -1018,6 +1179,43 @@ fn loadgen_point(
          (max width {batch_width}), efficiency {batch_efficiency:.4}, \
          {cp_schedule_shares} cp<->schedule table shares"
     );
+    // Delta-recompute economy (engine-wide: update-triggered eager solves
+    // AND the delta-planned table misses behind later cp/schedule
+    // traffic). `delta_speedup` is the row-count leverage of the
+    // incremental path: rows a from-scratch solve would have swept per
+    // rows actually recomputed.
+    let delta_rows = table_counter("delta_rows_recomputed");
+    let delta_full = table_counter("delta_full_rows");
+    let delta_speedup = if delta_rows > 0.0 {
+        delta_full / delta_rows
+    } else {
+        0.0
+    };
+    if cfg.edit_share > 0.0 {
+        println!(
+            "delta recompute: {upd_seen} updates ({upd_skipped} slack-skipped, \
+             {upd_delta_served} delta-served), {delta_rows} of {delta_full} \
+             rows recomputed, speedup {delta_speedup:.1}x"
+        );
+        if upd_seen == 0 {
+            eprintln!("loadgen: --edit-share {} sent no updates", cfg.edit_share);
+            return Err(1);
+        }
+        if upd_bound_violations > 0 {
+            eprintln!(
+                "loadgen: {upd_bound_violations} delta-served updates recomputed \
+                 more than the {bound_max}-row tail-decile bound"
+            );
+            return Err(1);
+        }
+        if upd_delta_served == 0 {
+            eprintln!(
+                "loadgen: no update was served by a delta recompute — the \
+                 versioned basis never reached the kernel"
+            );
+            return Err(1);
+        }
+    }
     // With an explicit --platform-mix the distinct-platform count is under
     // our control, so enforce the residency invariant: panels built once
     // per platform, never per request. (Without it, the workload's own
@@ -1127,6 +1325,15 @@ fn loadgen_point(
         ("table_cache_hits", Json::Num(table_hits)),
         ("table_cache_misses", Json::Num(table_misses)),
         ("cp_schedule_shares", Json::Num(cp_schedule_shares)),
+        ("edit_share", Json::Num(cfg.edit_share)),
+        ("updates", Json::Num(upd_seen as f64)),
+        ("updates_skipped", Json::Num(upd_skipped as f64)),
+        ("updates_delta_served", Json::Num(upd_delta_served as f64)),
+        ("update_delta_rows", Json::Num(upd_delta_rows)),
+        ("update_full_rows", Json::Num(upd_full_rows)),
+        ("delta_rows_recomputed", Json::Num(delta_rows)),
+        ("delta_full_rows", Json::Num(delta_full)),
+        ("delta_speedup", Json::Num(delta_speedup)),
         ("threads", Json::Num(threads as f64)),
         ("clients", Json::Num(cfg.clients as f64)),
         ("target_rps", Json::Num(cfg.rate)),

@@ -30,6 +30,8 @@
 //! | `batch_drain` | the gathered multi-instance sweep the request was served by   |
 //! | `kernel`      | a single-instance DP / scheduler compute (ungathered miss)    |
 //! | `respond`     | response JSON construction                                    |
+//! | `edit_apply`  | applying an `update` request's edit sequence: graph/cost      |
+//! |               | rebuild, dirty-set derivation, generation bump + cache purge  |
 //!
 //! [`BatchCollector`]: crate::service::engine
 //!
@@ -58,7 +60,7 @@ use std::sync::OnceLock;
 use std::time::Instant;
 
 /// Number of lifecycle stages in the fixed taxonomy.
-pub const NUM_STAGES: usize = 8;
+pub const NUM_STAGES: usize = 9;
 
 /// Request-lifecycle stage (see the module docs for the taxonomy table).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -80,6 +82,9 @@ pub enum Stage {
     Kernel = 6,
     /// Response JSON construction.
     Respond = 7,
+    /// Applying an `update` request's edit sequence (graph/cost rebuild,
+    /// dirty-set derivation, generation bump + stale-cache purge).
+    EditApply = 8,
 }
 
 impl Stage {
@@ -93,6 +98,7 @@ impl Stage {
         Stage::BatchDrain,
         Stage::Kernel,
         Stage::Respond,
+        Stage::EditApply,
     ];
 
     /// Histogram index of this stage.
@@ -112,6 +118,7 @@ impl Stage {
             Stage::BatchDrain => "batch_drain",
             Stage::Kernel => "kernel",
             Stage::Respond => "respond",
+            Stage::EditApply => "edit_apply",
         }
     }
 }
@@ -289,7 +296,8 @@ mod tests {
                 "queue_wait",
                 "batch_drain",
                 "kernel",
-                "respond"
+                "respond",
+                "edit_apply"
             ]
         );
         for (i, s) in Stage::ALL.iter().enumerate() {

@@ -22,6 +22,12 @@ pub struct CacheKey {
     pub comp: u64,
     /// algorithm id (the cost model is already folded into `comp`)
     pub algorithm: u64,
+    /// generation of the interned instance the result was computed over
+    /// (`0` for never-edited instances). Edits bump the generation instead
+    /// of re-hashing, so the structural hashes above stay those of the
+    /// *original* submission — the generation is what keeps a post-edit
+    /// result from colliding with a pre-edit one.
+    pub generation: u64,
 }
 
 /// Counters exposed through the service stats endpoint.
@@ -54,6 +60,14 @@ pub struct CacheStats {
     /// computed — each is a whole `O(P²e)` DP the mutual-inclusivity memo
     /// eliminated (only meaningful on the engine's table cache)
     pub cp_schedule_shares: u64,
+    /// table rows actually recomputed by delta-planned sweeps (the dirty
+    /// suffix minus change-propagation copies); only sweeps that carried a
+    /// delta basis count here
+    pub delta_rows_recomputed: u64,
+    /// total table rows those same delta-planned sweeps *would* have
+    /// computed from scratch — `delta_rows_recomputed / delta_full_rows`
+    /// is the fraction of the DP an edit actually cost
+    pub delta_full_rows: u64,
 }
 
 impl CacheStats {
@@ -68,6 +82,8 @@ impl CacheStats {
         self.batched_requests += other.batched_requests;
         self.batch_width = self.batch_width.max(other.batch_width);
         self.cp_schedule_shares += other.cp_schedule_shares;
+        self.delta_rows_recomputed += other.delta_rows_recomputed;
+        self.delta_full_rows += other.delta_full_rows;
     }
 }
 
@@ -210,6 +226,13 @@ impl<K: Eq + Hash + Copy, V> LruCache<K, V> {
         self.stats.cp_schedule_shares += 1;
     }
 
+    /// Record one delta-planned sweep: `recomputed` rows actually run
+    /// against the `full` rows a from-scratch sweep would have cost.
+    pub fn record_delta(&mut self, recomputed: u64, full: u64) {
+        self.stats.delta_rows_recomputed += recomputed;
+        self.stats.delta_full_rows += full;
+    }
+
     /// Counter snapshot.
     pub fn stats(&self) -> CacheStats {
         self.stats
@@ -226,7 +249,37 @@ mod tests {
             platform: 10 + n,
             comp: 20 + n,
             algorithm: 0,
+            generation: 0,
         }
+    }
+
+    #[test]
+    fn generation_distinguishes_otherwise_equal_keys() {
+        let mut c: LruCache<CacheKey, u32> = LruCache::new(4);
+        let g0 = key(1);
+        let g1 = CacheKey { generation: 1, ..g0 };
+        c.put(g0, 10);
+        c.put(g1, 11);
+        assert_eq!(c.peek(&g0), Some(&10));
+        assert_eq!(c.peek(&g1), Some(&11));
+    }
+
+    #[test]
+    fn delta_counters_accumulate_and_merge() {
+        let mut c: LruCache<CacheKey, u32> = LruCache::new(2);
+        c.record_delta(3, 40);
+        c.record_delta(5, 40);
+        let s = c.stats();
+        assert_eq!(s.delta_rows_recomputed, 8);
+        assert_eq!(s.delta_full_rows, 80);
+        let mut agg = CacheStats {
+            delta_rows_recomputed: 2,
+            delta_full_rows: 20,
+            ..CacheStats::default()
+        };
+        agg.merge(&s);
+        assert_eq!(agg.delta_rows_recomputed, 10);
+        assert_eq!(agg.delta_full_rows, 100);
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //! |------------|----------------------------------------------------|----------|
 //! | `ping`     | —                                                  | `pong`, `version` |
 //! | `submit`   | `instance`, optional `platform`                    | `id` (16-hex handle), `n`, `p`, `edges` |
-//! | `cp`       | `id` *or* `instance` (+ optional `platform`)       | `length`, `path` `[[task, class], …]`, `cached`, `id` |
+//! | `cp`       | `id` *or* `instance` (+ optional `platform`), optional `slack: true` | `length`, `path` `[[task, class], …]`, `cached`, `id` (+ `slack: [per-task float]` when requested) |
 //! | `schedule` | `algorithm`, `id` *or* `instance` (+ `platform`)   | `makespan`, `schedule`, `algorithm`, `cached`, `id` |
+//! | `update`   | `id`, `edits` `[{"edit":"task_cost"\|"edge_cost"\|"add_edge"\|"remove_edge"\|"add_task"\|"remove_task", …}, …]` | `id`, `generation`, `n`, `edges`, `length`, `slack`, `delta_rows_recomputed`, `full_rows`, `skipped` |
 //! | `stats`    | —                                                  | counters + cache occupancy (incl. the memoized CEFT-table cache: hits/misses, `batched_requests`/`batch_width`, `cp_schedule_shares`) + per-stage latency percentiles |
 //! | `trace`    | optional `limit` (slowest/recent rows, default 8)  | per-stage histograms, kernel-path throughput, slowest/recent traces |
 //! | `metrics`  | —                                                  | `text`: Prometheus-style exposition (same body `--metrics-addr` serves) |
@@ -26,6 +27,7 @@
 //! experiments). Submitting the same content twice returns the same handle:
 //! handles are structural hashes, not sequence numbers.
 
+use crate::graph::edit::GraphEdit;
 use crate::graph::generator::Instance;
 use crate::graph::io;
 use crate::platform::Platform;
@@ -68,6 +70,17 @@ pub enum Request {
     CriticalPath {
         /// which instance
         target: Target,
+        /// also return per-task slack (the CPM float idiom) derived from
+        /// the forward table
+        slack: bool,
+    },
+    /// edit an interned instance in place, bumping its generation
+    Update {
+        /// the handle to edit (updates are handle-only: an edit without a
+        /// prior `submit` has nothing to be incremental against)
+        id: u64,
+        /// the edit sequence, applied in order
+        edits: Vec<GraphEdit>,
     },
     /// full schedule with a registry algorithm
     Schedule {
@@ -115,6 +128,7 @@ pub fn op_code(req: &Request) -> u8 {
         Request::Shutdown => 7,
         Request::Trace { .. } => 8,
         Request::Metrics => 9,
+        Request::Update { .. } => 10,
     }
 }
 
@@ -132,6 +146,7 @@ pub fn op_name(code: u8) -> &'static str {
         7 => "shutdown",
         8 => "trace",
         9 => "metrics",
+        10 => "update",
         _ => "invalid",
     }
 }
@@ -168,6 +183,97 @@ fn instance_parts(j: &Json, op: &str) -> Result<(Instance, Option<Platform>), St
     Ok((instance, platform))
 }
 
+fn edit_usize(j: &Json, field: &str, kind: &str) -> Result<usize, String> {
+    j.get(field)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("{kind} edit requires numeric \"{field}\""))
+}
+
+fn edit_f64(j: &Json, field: &str, kind: &str) -> Result<f64, String> {
+    j.get(field)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{kind} edit requires numeric \"{field}\""))
+}
+
+fn edit_costs(j: &Json, kind: &str) -> Result<Vec<f64>, String> {
+    j.get("costs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{kind} edit requires \"costs\" array"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .ok_or_else(|| format!("{kind} edit: \"costs\" entries must be numbers"))
+        })
+        .collect()
+}
+
+/// Decode one edit object (the elements of `update`'s `"edits"` array).
+pub fn edit_from_json(j: &Json) -> Result<GraphEdit, String> {
+    let kind = j
+        .get("edit")
+        .and_then(Json::as_str)
+        .ok_or("each edit requires an \"edit\" tag")?;
+    match kind {
+        "task_cost" => Ok(GraphEdit::TaskCost {
+            task: edit_usize(j, "task", kind)?,
+            costs: edit_costs(j, kind)?,
+        }),
+        "edge_cost" => Ok(GraphEdit::EdgeCost {
+            src: edit_usize(j, "src", kind)?,
+            dst: edit_usize(j, "dst", kind)?,
+            data: edit_f64(j, "data", kind)?,
+        }),
+        "add_edge" => Ok(GraphEdit::AddEdge {
+            src: edit_usize(j, "src", kind)?,
+            dst: edit_usize(j, "dst", kind)?,
+            data: edit_f64(j, "data", kind)?,
+        }),
+        "remove_edge" => Ok(GraphEdit::RemoveEdge {
+            src: edit_usize(j, "src", kind)?,
+            dst: edit_usize(j, "dst", kind)?,
+        }),
+        "add_task" => Ok(GraphEdit::AddTask {
+            costs: edit_costs(j, kind)?,
+        }),
+        "remove_task" => Ok(GraphEdit::RemoveTask {
+            task: edit_usize(j, "task", kind)?,
+        }),
+        other => Err(format!("unknown edit kind {other:?}")),
+    }
+}
+
+/// Encode one edit as its wire object — the inverse of [`edit_from_json`].
+pub fn edit_to_json(e: &GraphEdit) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![("edit", Json::Str(e.kind().to_string()))];
+    match e {
+        GraphEdit::TaskCost { task, costs } => {
+            fields.push(("task", Json::Num(*task as f64)));
+            fields.push(("costs", Json::Arr(costs.iter().map(|&c| Json::Num(c)).collect())));
+        }
+        GraphEdit::EdgeCost { src, dst, data } => {
+            fields.push(("src", Json::Num(*src as f64)));
+            fields.push(("dst", Json::Num(*dst as f64)));
+            fields.push(("data", Json::Num(*data)));
+        }
+        GraphEdit::AddEdge { src, dst, data } => {
+            fields.push(("src", Json::Num(*src as f64)));
+            fields.push(("dst", Json::Num(*dst as f64)));
+            fields.push(("data", Json::Num(*data)));
+        }
+        GraphEdit::RemoveEdge { src, dst } => {
+            fields.push(("src", Json::Num(*src as f64)));
+            fields.push(("dst", Json::Num(*dst as f64)));
+        }
+        GraphEdit::AddTask { costs } => {
+            fields.push(("costs", Json::Arr(costs.iter().map(|&c| Json::Num(c)).collect())));
+        }
+        GraphEdit::RemoveTask { task } => {
+            fields.push(("task", Json::Num(*task as f64)));
+        }
+    }
+    Json::obj(fields)
+}
+
 fn parse_target(j: &Json, op: &str) -> Result<Target, String> {
     if let Some(h) = j.get("id") {
         let s = h.as_str().ok_or("\"id\" must be a hex string")?;
@@ -191,9 +297,36 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             let (instance, platform) = instance_parts(&j, "submit")?;
             Ok(Request::Submit { instance, platform })
         }
-        "cp" => Ok(Request::CriticalPath {
-            target: parse_target(&j, "cp")?,
-        }),
+        "cp" => {
+            let slack = match j.get("slack") {
+                Some(v) => v.as_bool().ok_or("\"slack\" must be a boolean")?,
+                None => false,
+            };
+            Ok(Request::CriticalPath {
+                target: parse_target(&j, "cp")?,
+                slack,
+            })
+        }
+        "update" => {
+            let s = j
+                .get("id")
+                .and_then(Json::as_str)
+                .ok_or("update requires \"id\" (updates are handle-only)")?;
+            let edits = j
+                .get("edits")
+                .and_then(Json::as_arr)
+                .ok_or("update requires \"edits\" array")?
+                .iter()
+                .map(edit_from_json)
+                .collect::<Result<Vec<_>, _>>()?;
+            if edits.is_empty() {
+                return Err("update requires at least one edit".to_string());
+            }
+            Ok(Request::Update {
+                id: parse_handle(s)?,
+                edits,
+            })
+        }
         "schedule" => {
             let name = j
                 .get("algorithm")
@@ -269,9 +402,17 @@ pub fn request_to_json(req: &Request) -> Json {
             fields.push(("op", Json::Str("submit".to_string())));
             push_instance(&mut fields, instance, platform);
         }
-        Request::CriticalPath { target } => {
+        Request::CriticalPath { target, slack } => {
             fields.push(("op", Json::Str("cp".to_string())));
+            if *slack {
+                fields.push(("slack", Json::Bool(true)));
+            }
             push_target(&mut fields, target);
+        }
+        Request::Update { id, edits } => {
+            fields.push(("op", Json::Str("update".to_string())));
+            fields.push(("id", Json::Str(handle_to_hex(*id))));
+            fields.push(("edits", Json::Arr(edits.iter().map(edit_to_json).collect())));
         }
         Request::Schedule { algorithm, target } => {
             fields.push(("op", Json::Str("schedule".to_string())));
@@ -320,8 +461,17 @@ mod tests {
         assert!(matches!(
             parse_request(&cp),
             Ok(Request::CriticalPath {
-                target: Target::Inline { .. }
+                target: Target::Inline { .. },
+                slack: false,
             })
+        ));
+        let cp_slack = format!(
+            r#"{{"op":"cp","slack":true,"instance":{}}}"#,
+            sample_instance_json()
+        );
+        assert!(matches!(
+            parse_request(&cp_slack),
+            Ok(Request::CriticalPath { slack: true, .. })
         ));
         let sched = format!(
             r#"{{"op":"schedule","algorithm":"ceft-cpop","instance":{}}}"#,
@@ -354,6 +504,30 @@ mod tests {
             Request::Trace { limit } => assert_eq!(limit, 3),
             other => panic!("wrong request: {other:?}"),
         }
+        let update = r#"{"op":"update","id":"00000000000000ff","edits":[
+            {"edit":"task_cost","task":2,"costs":[1.5,3.0]},
+            {"edit":"edge_cost","src":1,"dst":3,"data":9.0},
+            {"edit":"add_edge","src":0,"dst":4,"data":1.0},
+            {"edit":"remove_edge","src":1,"dst":2},
+            {"edit":"add_task","costs":[2.0]},
+            {"edit":"remove_task","task":1}]}"#
+            .replace('\n', "");
+        match parse_request(&update).unwrap() {
+            Request::Update { id, edits } => {
+                assert_eq!(id, 0xff);
+                assert_eq!(edits.len(), 6);
+                assert_eq!(
+                    edits[0],
+                    GraphEdit::TaskCost {
+                        task: 2,
+                        costs: vec![1.5, 3.0]
+                    }
+                );
+                assert_eq!(edits[3], GraphEdit::RemoveEdge { src: 1, dst: 2 });
+                assert_eq!(edits[5], GraphEdit::RemoveTask { task: 1 });
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
     }
 
     #[test]
@@ -370,6 +544,7 @@ mod tests {
             },
             Request::CriticalPath {
                 target: Target::Handle(1),
+                slack: false,
             },
             Request::Schedule {
                 algorithm: Algorithm::CeftCpop,
@@ -381,6 +556,10 @@ mod tests {
             Request::Shutdown,
             Request::Trace { limit: 4 },
             Request::Metrics,
+            Request::Update {
+                id: 1,
+                edits: vec![GraphEdit::RemoveEdge { src: 0, dst: 1 }],
+            },
         ];
         let mut codes = std::collections::HashSet::new();
         for req in &reqs {
@@ -388,7 +567,7 @@ mod tests {
             assert!(codes.insert(code), "duplicate op code {code}");
             // every op's trace label parses back to the same variant
             let name = op_name(code);
-            let back = parse_request(&format!(r#"{{"op":"{name}","instance":{},"algorithm":"ceft-cpop","id":"01"}}"#, sample_instance_json()));
+            let back = parse_request(&format!(r#"{{"op":"{name}","instance":{},"algorithm":"ceft-cpop","id":"01","edits":[{{"edit":"remove_edge","src":0,"dst":1}}]}}"#, sample_instance_json()));
             // `id` + `instance` coexisting is fine (id wins for targets);
             // the point is the name is a real wire op
             assert!(back.is_ok(), "op_name({code}) = {name:?} not parseable");
@@ -424,6 +603,34 @@ mod tests {
         assert!(parse_request(r#"{"op":"evict"}"#)
             .unwrap_err()
             .contains("requires \"id\""));
+        // update is handle-only and needs a non-empty edits array
+        assert!(parse_request(r#"{"op":"update","edits":[]}"#)
+            .unwrap_err()
+            .contains("handle-only"));
+        assert!(parse_request(r#"{"op":"update","id":"01","edits":[]}"#)
+            .unwrap_err()
+            .contains("at least one edit"));
+        assert!(parse_request(r#"{"op":"update","id":"01"}"#)
+            .unwrap_err()
+            .contains("\"edits\""));
+        assert!(
+            parse_request(r#"{"op":"update","id":"01","edits":[{"edit":"warp"}]}"#)
+                .unwrap_err()
+                .contains("unknown edit kind")
+        );
+        assert!(
+            parse_request(r#"{"op":"update","id":"01","edits":[{"edit":"add_edge","src":0}]}"#)
+                .unwrap_err()
+                .contains("\"dst\"")
+        );
+        assert!(
+            parse_request(r#"{"op":"update","id":"01","edits":[{"edit":"task_cost","task":0,"costs":["x"]}]}"#)
+                .unwrap_err()
+                .contains("numbers")
+        );
+        assert!(parse_request(r#"{"op":"cp","id":"01","slack":1}"#)
+            .unwrap_err()
+            .contains("boolean"));
         // malformed instance content surfaces io's message
         let cyc = r#"{"op":"cp","instance":{"n":2,"p":1,"edges":[[0,1,1.0],[1,0,1.0]],"comp":[1,2]}}"#;
         assert!(parse_request(cyc).unwrap_err().contains("cycle"));
@@ -464,6 +671,11 @@ mod tests {
             },
             Request::CriticalPath {
                 target: Target::Handle(7),
+                slack: false,
+            },
+            Request::CriticalPath {
+                target: Target::Handle(7),
+                slack: true,
             },
             Request::Schedule {
                 algorithm: Algorithm::CeftHeftUp,
@@ -471,6 +683,28 @@ mod tests {
                     instance: inst,
                     platform: None,
                 },
+            },
+            Request::Update {
+                id: 0xabc,
+                edits: vec![
+                    GraphEdit::TaskCost {
+                        task: 0,
+                        costs: vec![2.5],
+                    },
+                    GraphEdit::EdgeCost {
+                        src: 0,
+                        dst: 1,
+                        data: 0.25,
+                    },
+                    GraphEdit::AddEdge {
+                        src: 0,
+                        dst: 1,
+                        data: 1.5,
+                    },
+                    GraphEdit::RemoveEdge { src: 0, dst: 1 },
+                    GraphEdit::AddTask { costs: vec![1.0] },
+                    GraphEdit::RemoveTask { task: 1 },
+                ],
             },
         ];
         for req in reqs {

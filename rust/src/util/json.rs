@@ -51,6 +51,14 @@ impl Json {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// Bool accessor.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     /// String accessor.
     pub fn as_str(&self) -> Option<&str> {
         match self {

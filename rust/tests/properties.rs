@@ -11,12 +11,15 @@
 
 use ceft::cp::ceft::simd::KernelDispatch;
 use ceft::cp::ceft::{
-    ceft_table, ceft_table_batched_into, ceft_table_batched_into_dispatched, ceft_table_into,
-    ceft_table_into_dispatched, ceft_table_rev_into, ceft_table_rev_into_dispatched,
-    ceft_table_rev_scalar_into, ceft_table_rev_with, ceft_table_scalar, ceft_table_scalar_into,
-    ceft_table_with, critical_path_from_table, find_ceft_tables_gathered_dispatched,
-    find_critical_path, find_critical_path_with, find_critical_paths_gathered_dispatched,
+    ceft_table, ceft_table_batched_into, ceft_table_batched_into_dispatched,
+    ceft_table_delta_into_dispatched, ceft_table_into, ceft_table_into_dispatched,
+    ceft_table_rev_into, ceft_table_rev_into_dispatched, ceft_table_rev_scalar_into,
+    ceft_table_rev_with, ceft_table_scalar, ceft_table_scalar_into, ceft_table_with,
+    critical_path_from_table, find_ceft_tables_gathered_delta_dispatched,
+    find_ceft_tables_gathered_dispatched, find_critical_path, find_critical_path_with,
+    find_critical_paths_gathered_dispatched, slack_from_table_with, DeltaPlan,
 };
+use ceft::graph::edit::{apply_edits, GraphEdit};
 use ceft::cp::cpmin::cp_min_cost;
 use ceft::cp::minexec::min_exec_critical_path;
 use ceft::cp::ranks::{
@@ -34,6 +37,7 @@ use ceft::sched::{
 };
 use ceft::util::prop::{check_property, default_cases};
 use ceft::util::rng::Xoshiro256;
+use std::sync::Arc;
 
 /// Random instance generator spanning both cost models, platform comm
 /// heterogeneity, all sizes the unit tests don't reach.
@@ -782,6 +786,229 @@ fn prop_bit_identity_on_single_chains_and_p1() {
                 let reference = scalar_reference_schedule(algo, inst);
                 if !schedules_identical(&via_registry, &reference) {
                     return Err(format!("{} diverged on a chain", algo.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random structure-preserving edit batch over `graph`: everything except
+/// `remove_task`, whose id renumbering voids any delta basis (the engine
+/// answers those with a full recompute, so there is no delta path to
+/// property-test). `add_edge` picks both endpoints from the current
+/// topological order (src before dst), so a batch can never create a
+/// cycle; `remove_edge`/`edge_cost` draw from the edges still present.
+fn arb_edits(rng: &mut Xoshiro256, graph: &ceft::graph::TaskGraph, p: usize) -> Vec<GraphEdit> {
+    let n = graph.num_tasks();
+    let topo = graph.topo_order();
+    let mut removed: Vec<(usize, usize)> = Vec::new();
+    let mut edits = Vec::new();
+    for _ in 0..rng.range_inclusive(1, 3) {
+        let live_edge = |rng: &mut Xoshiro256, removed: &[(usize, usize)]| {
+            let live: Vec<_> = graph
+                .edges()
+                .iter()
+                .filter(|e| !removed.contains(&(e.src, e.dst)))
+                .collect();
+            if live.is_empty() {
+                None
+            } else {
+                Some(**rng.choose(&live))
+            }
+        };
+        match rng.range_inclusive(0, 4) {
+            1 => {
+                if let Some(e) = live_edge(rng, &removed) {
+                    edits.push(GraphEdit::EdgeCost {
+                        src: e.src,
+                        dst: e.dst,
+                        data: rng.uniform(0.0, 5.0),
+                    });
+                    continue;
+                }
+            }
+            2 if n >= 2 => {
+                let i = rng.range_inclusive(0, n - 2);
+                let j = rng.range_inclusive(i + 1, n - 1);
+                edits.push(GraphEdit::AddEdge {
+                    src: topo[i],
+                    dst: topo[j],
+                    data: rng.uniform(0.0, 5.0),
+                });
+                continue;
+            }
+            3 => {
+                if let Some(e) = live_edge(rng, &removed) {
+                    removed.push((e.src, e.dst));
+                    edits.push(GraphEdit::RemoveEdge {
+                        src: e.src,
+                        dst: e.dst,
+                    });
+                    continue;
+                }
+            }
+            4 => {
+                edits.push(GraphEdit::AddTask {
+                    costs: (0..p).map(|_| rng.uniform(0.5, 10.0)).collect(),
+                });
+                continue;
+            }
+            _ => {}
+        }
+        edits.push(GraphEdit::TaskCost {
+            task: rng.range_inclusive(0, n - 1),
+            costs: (0..p).map(|_| rng.uniform(0.5, 10.0)).collect(),
+        });
+    }
+    edits
+}
+
+/// The incremental-recompute contract (EXPERIMENTS.md §Incremental
+/// re-scheduling): after one or two rounds of random in-place edits, the
+/// delta kernel seeded with the PRE-edit tables and the accumulated dirty
+/// set must reproduce a from-scratch solve of the edited instance bit for
+/// bit — values and backpointers, forward and reverse orientation, both
+/// lane implementations, and through the gathered multi-instance sweep
+/// (a delta-planned job sharing its window with a scratch one).
+#[test]
+fn prop_delta_ceft_bit_identical_to_scratch() {
+    check_property(
+        "delta ceft == scratch ceft",
+        default_cases(),
+        0xCEF7_00D1,
+        |rng| {
+            let (inst, plat, seed) = arb_instance(rng);
+            let p = plat.num_classes();
+            let g0 = Arc::new(inst.graph.clone());
+            let c0 = Arc::new(inst.comp.clone());
+            // one or two edit rounds against the same basis: round two
+            // accumulates its dirty flags on top of round one's, exactly
+            // like the engine when no table of the middle generation was
+            // ever computed
+            let r1 = apply_edits(&g0, &c0, &arb_edits(rng, &g0, p)).expect("edit round 1");
+            let (graph2, costs2, dirty) = if rng.chance(0.5) {
+                let r2 =
+                    apply_edits(&r1.graph, &r1.costs, &arb_edits(rng, &r1.graph, p))
+                        .expect("edit round 2");
+                let merged: Vec<bool> = (0..r2.graph.num_tasks())
+                    .map(|i| r2.dirty[i] || r1.dirty.get(i).copied().unwrap_or(true))
+                    .collect();
+                (r2.graph, r2.costs, merged)
+            } else {
+                (r1.graph.clone(), r1.costs.clone(), r1.dirty)
+            };
+            (inst, plat, graph2, costs2, dirty, seed)
+        },
+        |(inst, plat, graph2, costs2, dirty, seed)| {
+            let basis_ref = inst.bind(plat);
+            let basis_n = inst.graph.num_tasks();
+            let basis_topo = inst.graph.topo_order();
+            let mut ws = Workspace::new();
+            let basis_fwd = ceft_table_with(&mut ws, basis_ref);
+            let basis_rev = ceft_table_rev_with(&mut ws, basis_ref);
+            let ctx = PlatformCtx::new(plat.clone());
+            let eref = ctx.bind(graph2, costs2);
+            for rev in [false, true] {
+                let basis = if rev { &basis_rev } else { &basis_fwd };
+                for dispatch in [KernelDispatch::Scalar, KernelDispatch::Simd] {
+                    let mut sw = Workspace::new();
+                    if rev {
+                        ceft_table_rev_into_dispatched(&mut sw, eref, dispatch);
+                    } else {
+                        ceft_table_into_dispatched(&mut sw, eref, dispatch);
+                    }
+                    let plan = DeltaPlan {
+                        prev: basis,
+                        prev_topo: basis_topo,
+                        basis_n,
+                        dirty,
+                    };
+                    let mut dw = Workspace::new();
+                    let rows = ceft_table_delta_into_dispatched(&mut dw, eref, &plan, rev, dispatch);
+                    if rows > graph2.num_tasks() {
+                        return Err(format!(
+                            "delta recomputed {rows} rows of {} (seed {seed})",
+                            graph2.num_tasks()
+                        ));
+                    }
+                    if dw.table[..] != sw.table[..] || dw.backptr != sw.backptr {
+                        return Err(format!(
+                            "serial delta diverged from scratch (rev={rev}, {dispatch:?}, seed {seed})"
+                        ));
+                    }
+                    // gathered sweep: the delta-planned job shares its
+                    // window with a scratch recompute of the basis
+                    let plan = DeltaPlan {
+                        prev: basis,
+                        prev_topo: basis_topo,
+                        basis_n,
+                        dirty,
+                    };
+                    let gref = ctx.bind(&inst.graph, &inst.comp);
+                    let out = find_ceft_tables_gathered_delta_dispatched(
+                        &ctx,
+                        &[eref, gref],
+                        rev,
+                        &[Some(plan), None],
+                        dispatch,
+                    );
+                    if out[0].0.table[..] != sw.table[..] || out[0].0.backptr != sw.backptr {
+                        return Err(format!(
+                            "gathered delta diverged from scratch (rev={rev}, {dispatch:?}, seed {seed})"
+                        ));
+                    }
+                    let companion = if rev { &basis_rev } else { &basis_fwd };
+                    if out[1].0.table != companion.table {
+                        return Err(format!(
+                            "gathered scratch companion diverged (rev={rev}, seed {seed})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The slack derivation the `update` skip rule rests on: per-task slack
+/// from the forward table is non-negative everywhere, EXACTLY `+0.0` on
+/// every task of the realized critical path, and the returned critical
+/// length is bit-identical to the table's own sink fold.
+#[test]
+fn prop_slack_nonnegative_and_zero_on_critical_path() {
+    check_property(
+        "slack >= 0, == 0 on cp",
+        default_cases(),
+        0xCEF7_00D2,
+        |rng| arb_instance(rng),
+        |(inst, plat, seed)| {
+            let iref = inst.bind(plat);
+            let mut ws = Workspace::new();
+            let fwd = ceft_table_with(&mut ws, iref);
+            let mut slack = Vec::new();
+            let cpl = slack_from_table_with(&mut ws, iref, &fwd, &mut slack);
+            let cp = critical_path_from_table(&inst.graph, &fwd.table);
+            if cpl != cp.length {
+                return Err(format!(
+                    "slack CPL {cpl} != table CPL {} (seed {seed})",
+                    cp.length
+                ));
+            }
+            if slack.len() != inst.graph.num_tasks() {
+                return Err(format!("slack has {} entries (seed {seed})", slack.len()));
+            }
+            for (t, &s) in slack.iter().enumerate() {
+                if !(s >= 0.0) {
+                    return Err(format!("slack[{t}] = {s} < 0 (seed {seed})"));
+                }
+            }
+            for step in &cp.path {
+                if slack[step.task] != 0.0 {
+                    return Err(format!(
+                        "cp task {} has slack {} != 0 (seed {seed})",
+                        step.task, slack[step.task]
+                    ));
                 }
             }
             Ok(())
