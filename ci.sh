@@ -136,6 +136,19 @@ if ! grep -q '"p99_us"' BENCH_service.json; then
   exit 1
 fi
 
+echo "== loadgen smoke, structured fork-join workload (SP fast path) =="
+# A pure fork-join workload must route every full-table computation through
+# the series-parallel tree-DP kernel: loadgen itself exits nonzero if
+# shape_fast_path_hits stays zero, and the report (kept out of
+# BENCH_service.json — the tracked record is the sweep below) must carry
+# the shape counters and per-shape latency rows.
+./target/release/repro loadgen --n 64 --p 4 --count 8 --shape fork-join \
+  --rate 200 --duration 1 --json-out BENCH_shape_smoke.json
+grep -q '"shape":"fork-join"' BENCH_shape_smoke.json
+grep -q '"shape_fast_path_hits"' BENCH_shape_smoke.json
+grep -q '"per_shape_p99_us"' BENCH_shape_smoke.json
+rm -f BENCH_shape_smoke.json
+
 echo "== loadgen smoke with telemetry disabled =="
 # CEFT_TELEMETRY=off must leave every hook a no-op end to end: the replay
 # still succeeds, and the report (kept out of BENCH_service.json — this is
@@ -188,6 +201,17 @@ if ! grep -q '"delta_rows_recomputed"' BENCH_service.json; then
   echo "BENCH_service.json lacks the delta_rows_recomputed counter"
   exit 1
 fi
+# every point must carry the shape-routing counters: the interning-time
+# recognizer and the SP fast path are live on every workload, so the
+# hits/fallbacks split (and per-shape p99) belongs in the tracked record
+if ! grep -q '"shape_fast_path_hits"' BENCH_service.json; then
+  echo "BENCH_service.json lacks the shape_fast_path_hits counter (SP routing unmeasured)"
+  exit 1
+fi
+if ! grep -q '"per_shape_p99_us"' BENCH_service.json; then
+  echo "BENCH_service.json lacks the per_shape_p99_us rows"
+  exit 1
+fi
 
 echo "== service throughput bench (smoke) =="
 CEFT_BENCH_FAST=1 cargo bench --bench service_throughput
@@ -228,6 +252,17 @@ fi
 # throughput at 10/50/90% suffix shares is part of the tracked record
 if ! grep -q '"delta_suffix_10pct"' BENCH_kernel.json; then
   echo "BENCH_kernel.json lacks the delta_suffix throughput rows"
+  exit 1
+fi
+# ... and the sp_tree rows: the series-parallel tree-DP kernel's cells/s
+# over recognizer-decomposed fork-join and pipeline instances is part of
+# the tracked record (EXPERIMENTS.md §Structured-graph fast paths)
+if ! grep -q '"sp_tree_fork_join"' BENCH_kernel.json; then
+  echo "BENCH_kernel.json lacks the sp_tree_fork_join throughput row"
+  exit 1
+fi
+if ! grep -q '"sp_tree_pipeline"' BENCH_kernel.json; then
+  echo "BENCH_kernel.json lacks the sp_tree_pipeline throughput row"
   exit 1
 fi
 

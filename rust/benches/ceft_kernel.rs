@@ -20,9 +20,11 @@
 //!
 //! Besides the CSV every bench appends, this bench writes the repo-root
 //! `BENCH_kernel.json` — per-case cells/s for the `scalar`, `simd`,
-//! `batched_b8`, `gathered_tables` and `delta_suffix/{10,50,90}pct`
-//! (dirty-suffix incremental recompute against a memoized basis) rows
-//! plus the `telemetry` on/off pair — seeding the
+//! `batched_b8`, `gathered_tables`, `delta_suffix/{10,50,90}pct`
+//! (dirty-suffix incremental recompute against a memoized basis) and
+//! `sp_tree_{fork_join,pipeline}` (the series-parallel tree-DP kernel
+//! over recognizer-decomposed structured instances of matching size)
+//! rows plus the `telemetry` on/off pair — seeding the
 //! kernel-throughput trajectory across PRs (the acceptance gauge is
 //! `simd >= scalar` at `P >= 8`).
 
@@ -32,8 +34,10 @@ use ceft::cp::ceft::{
     ceft_table_rev_into, ceft_table_rev_scalar_into, ceft_table_scalar_into, ceft_table_with,
     find_ceft_tables_gathered, DeltaPlan,
 };
+use ceft::cp::ceft::sp::ceft_table_sp_into;
 use ceft::cp::workspace::Workspace;
-use ceft::graph::generator::{generate, RggParams};
+use ceft::graph::generator::{generate, generate_fork_join, generate_pipeline, RggParams};
+use ceft::graph::shape;
 use ceft::model::PlatformCtx;
 use ceft::platform::{CostModel, Platform};
 use ceft::util::bench::{black_box, Bench};
@@ -172,6 +176,58 @@ fn main() {
             );
             delta_rates[slot] = row.throughput().unwrap_or(0.0);
         }
+        // Structured-graph fast path: fork-join and pipeline instances of
+        // matching size, decomposed once by the recognizer, swept by the
+        // series-parallel tree-DP kernel. Cells are the same e·P² measure,
+        // so the rows are directly comparable to the general-kernel ones —
+        // the win comes from the SpTree visit order and the specialized
+        // in-degree-1 fold (EXPERIMENTS.md §Structured-graph fast paths).
+        let fj_depth = ((n.saturating_sub(1)) / 5).max(1);
+        let fj_inst = generate_fork_join(
+            4,
+            fj_depth,
+            1.0,
+            50.0,
+            &CostModel::Classic { beta: 0.5 },
+            &plat,
+            42,
+        );
+        let fj_sp = shape::recognize(&fj_inst.graph)
+            .sp
+            .expect("generated fork-join must be recognized as series-parallel");
+        let fj_ref = fj_inst.bind_ctx(&ctx);
+        let fj_cells = fj_inst.graph.num_edges() as u64 * (p * p) as u64;
+        let fj_row = b.case_with_elements(
+            &format!("sp_tree/fork_join_n{n}_p{p}"),
+            Some(fj_cells),
+            || {
+                ceft_table_sp_into(&mut ws, fj_ref, &fj_sp);
+                black_box(ws.table.last().copied());
+            },
+        );
+        let pl_stages = ((n.saturating_sub(2)) / 4).max(1);
+        let pl_inst = generate_pipeline(
+            pl_stages,
+            4,
+            1.0,
+            50.0,
+            &CostModel::Classic { beta: 0.5 },
+            &plat,
+            42,
+        );
+        let pl_sp = shape::recognize(&pl_inst.graph)
+            .sp
+            .expect("generated pipeline must be recognized as series-parallel");
+        let pl_ref = pl_inst.bind_ctx(&ctx);
+        let pl_cells = pl_inst.graph.num_edges() as u64 * (p * p) as u64;
+        let pl_row = b.case_with_elements(
+            &format!("sp_tree/pipeline_n{n}_p{p}"),
+            Some(pl_cells),
+            || {
+                ceft_table_sp_into(&mut ws, pl_ref, &pl_sp);
+                black_box(ws.table.last().copied());
+            },
+        );
         b.case_with_elements(&format!("kernel_rev/n{n}_p{p}"), Some(cells), || {
             ceft_table_rev_into(&mut ws, iref);
             black_box(ws.table.last().copied());
@@ -228,6 +284,14 @@ fn main() {
                     ("delta_suffix_10pct", Json::Num(delta_rates[0])),
                     ("delta_suffix_50pct", Json::Num(delta_rates[1])),
                     ("delta_suffix_90pct", Json::Num(delta_rates[2])),
+                    (
+                        "sp_tree_fork_join",
+                        Json::Num(fj_row.throughput().unwrap_or(0.0)),
+                    ),
+                    (
+                        "sp_tree_pipeline",
+                        Json::Num(pl_row.throughput().unwrap_or(0.0)),
+                    ),
                 ]),
             ),
             (

@@ -121,6 +121,7 @@
 //! and re-runs, bit-identical.
 
 pub mod simd;
+pub mod sp;
 
 use crate::cp::workspace::Workspace;
 use crate::graph::TaskGraph;

@@ -1,0 +1,295 @@
+//! Structured CEFT: the tree DP over a series-parallel decomposition.
+//!
+//! For a recognizer-accepted graph (`crate::graph::shape`), the CEFT
+//! table factors along the [`SpTree`]: **series** composition applies one
+//! `P×P` min-plus panel product per hop (the parent's CEFT row against the
+//! resident startup/bandwidth panels — exactly the general kernel's
+//! [`LaneKernel::min_plus_row`] scan), and **parallel** composition is an
+//! element-wise max over the branches meeting at a join (the general
+//! kernel's strict-`>` CSR-order max-fold, which is precisely how
+//! branches' series products combine at the join vertex). The sweep visits
+//! tasks in the tree-derived order ([`SpTree::order`]) — no frontier
+//! bookkeeping, linear memory traffic, and the dominant in-degree-1 hops
+//! skip the predecessor fold entirely.
+//!
+//! ## Bit-identity argument
+//!
+//! Each task's table/backpointer row is a deterministic function of its
+//! parents' rows alone, folded in CSR predecessor order — independent of
+//! which valid topological order the sweep visits tasks in. This kernel
+//! changes *only* the visit order (the SP tree order is topological —
+//! proof in `graph::shape`) and specializes the in-degree-1 case, whose
+//! single fold step `best > NEG_INFINITY` is reproduced verbatim; joins
+//! run the general kernel's tiled block loop unchanged, same
+//! [`LaneKernel`] scans, same panels, same float ops in the same order.
+//! Values, argmins and backpointers are therefore bit-identical to
+//! [`super::ceft_table_with`] by construction —
+//! `prop_sp_tree_dp_bit_identical_to_general` (rust/tests/properties.rs)
+//! enforces it across orientations, dispatches and class counts, with the
+//! scalar recurrence retained as the oracle.
+//!
+//! Telemetry attributes this path to `sp_tree`
+//! ([`crate::obs::KernelPath::SpTree`]); the engine's miss path routes
+//! here per interned shape verdict (`service::engine`).
+
+use super::simd::{KernelDispatch, LaneKernel, ScalarLanes, SimdLanes};
+use super::{CeftTable, KERNEL_BLOCK};
+use crate::cp::workspace::Workspace;
+use crate::graph::shape::SpTree;
+use crate::model::{fill_comm_panels, InstanceRef};
+
+/// Fill `ws.table` / `ws.backptr` with the forward CEFT DP swept in
+/// `sp`'s tree order. `sp` must decompose `inst.graph` (the engine
+/// guarantees this by recognizing at intern time; a stale tree would panic
+/// on the order-length debug assert or index out of bounds — edits always
+/// re-verify or demote first).
+pub fn ceft_table_sp_into(ws: &mut Workspace, inst: InstanceRef, sp: &SpTree) {
+    match super::dispatch_for(&inst) {
+        KernelDispatch::Simd => ceft_sp_kernel_lanes::<SimdLanes>(ws, inst, sp, false),
+        KernelDispatch::Scalar => ceft_sp_kernel_lanes::<ScalarLanes>(ws, inst, sp, false),
+    }
+}
+
+/// Reverse-orientation variant of [`ceft_table_sp_into`]: the transpose DP
+/// (successors as parents), swept in reversed tree order — the reverse of
+/// a topological order is topological for the transpose, so
+/// [`super::ceft_table_rev_into`] consumers (CEFT-HEFT-UP's upward rank)
+/// work unchanged.
+pub fn ceft_table_sp_rev_into(ws: &mut Workspace, inst: InstanceRef, sp: &SpTree) {
+    match super::dispatch_for(&inst) {
+        KernelDispatch::Simd => ceft_sp_kernel_lanes::<SimdLanes>(ws, inst, sp, true),
+        KernelDispatch::Scalar => ceft_sp_kernel_lanes::<ScalarLanes>(ws, inst, sp, true),
+    }
+}
+
+/// [`ceft_table_sp_into`] with the lane implementation pinned explicitly —
+/// the hook the bit-identity property tests use to exercise both dispatch
+/// paths in one process.
+pub fn ceft_table_sp_into_dispatched(
+    ws: &mut Workspace,
+    inst: InstanceRef,
+    sp: &SpTree,
+    dispatch: KernelDispatch,
+) {
+    match dispatch {
+        KernelDispatch::Simd => ceft_sp_kernel_lanes::<SimdLanes>(ws, inst, sp, false),
+        KernelDispatch::Scalar => ceft_sp_kernel_lanes::<ScalarLanes>(ws, inst, sp, false),
+    }
+}
+
+/// [`ceft_table_sp_rev_into`] with the lane implementation pinned.
+pub fn ceft_table_sp_rev_into_dispatched(
+    ws: &mut Workspace,
+    inst: InstanceRef,
+    sp: &SpTree,
+    dispatch: KernelDispatch,
+) {
+    match dispatch {
+        KernelDispatch::Simd => ceft_sp_kernel_lanes::<SimdLanes>(ws, inst, sp, true),
+        KernelDispatch::Scalar => ceft_sp_kernel_lanes::<ScalarLanes>(ws, inst, sp, true),
+    }
+}
+
+/// Workspace-backed table producer over the SP kernel, mirroring
+/// [`super::ceft_table_with`]: run the forward tree DP in `ws` and copy
+/// the buffers out as an owned [`CeftTable`] for the engine's table memo.
+pub fn ceft_table_sp_with(ws: &mut Workspace, inst: InstanceRef, sp: &SpTree) -> CeftTable {
+    ceft_table_sp_into(ws, inst, sp);
+    CeftTable {
+        p: inst.p(),
+        table: ws.table.to_vec(),
+        backptr: ws.backptr.clone(),
+    }
+}
+
+/// Reverse-orientation variant of [`ceft_table_sp_with`].
+pub fn ceft_table_sp_rev_with(ws: &mut Workspace, inst: InstanceRef, sp: &SpTree) -> CeftTable {
+    ceft_table_sp_rev_into(ws, inst, sp);
+    CeftTable {
+        p: inst.p(),
+        table: ws.table.to_vec(),
+        backptr: ws.backptr.clone(),
+    }
+}
+
+/// The structured kernel, monomorphised per lane implementation. Identical
+/// to [`super`]'s fused kernel except for (a) the tree-derived visit
+/// order and (b) the in-degree-1 series specialization — see the module
+/// docs for why both preserve bit-identity.
+fn ceft_sp_kernel_lanes<K: LaneKernel>(ws: &mut Workspace, inst: InstanceRef, sp: &SpTree, rev: bool) {
+    let graph = inst.graph;
+    let costs = inst.costs;
+    let v = inst.n();
+    let p = inst.p();
+    debug_assert_eq!(sp.order.len(), v, "SpTree order must cover every task");
+    // cells/s attribution for the structured path (no-op unless telemetry
+    // is on)
+    let _obs = crate::obs::kernel_timer(crate::obs::KernelPath::SpTree, (graph.num_edges() * p * p) as u64);
+    let Workspace {
+        table,
+        backptr,
+        panel_startup,
+        panel_bw,
+        ..
+    } = ws;
+    let (panel_startup, panel_bw): (&[f64], &[f64]) = match inst.ctx() {
+        Some(ctx) => {
+            debug_assert_eq!(ctx.p(), p, "ctx/platform class count mismatch");
+            (ctx.panel_startup(), ctx.panel_bw())
+        }
+        None => {
+            fill_comm_panels(inst.platform, panel_startup, panel_bw);
+            (panel_startup.as_slice(), panel_bw.as_slice())
+        }
+    };
+    table.clear();
+    table.resize(v * p, 0.0);
+    backptr.clear();
+    backptr.resize(v * p, (usize::MAX, usize::MAX));
+
+    for i in 0..sp.order.len() {
+        let t = if rev {
+            sp.order[sp.order.len() - 1 - i]
+        } else {
+            sp.order[i]
+        };
+        // parents of `t` in the swept orientation, CSR order — the same
+        // fold order as the general kernel, so argmax tie-breaks match
+        let preds = if rev { graph.succs(t) } else { graph.preds(t) };
+        if preds.is_empty() {
+            table[t * p..(t + 1) * p].copy_from_slice(costs.row(t));
+            continue;
+        }
+        let crow = costs.row(t);
+        if let [(k, data)] = preds {
+            let (k, data) = (*k, *data);
+            // series hop: one P×P min-plus panel product against the sole
+            // parent row. The general kernel's single fold step accepts
+            // iff `best > NEG_INFINITY` — reproduced verbatim, so values
+            // and backpointers are identical to the fold.
+            let mut j0 = 0;
+            while j0 < p {
+                let j1 = (j0 + KERNEL_BLOCK).min(p);
+                let mut best_total = [f64::NEG_INFINITY; KERNEL_BLOCK];
+                let mut best_ptr = [(usize::MAX, usize::MAX); KERNEL_BLOCK];
+                let krow = &table[k * p..(k + 1) * p];
+                for (bi, j) in (j0..j1).enumerate() {
+                    let srow = &panel_startup[j * p..j * p + p];
+                    let brow = &panel_bw[j * p..j * p + p];
+                    let (best, best_l) = K::min_plus_row(krow, srow, brow, data);
+                    if best > best_total[bi] {
+                        best_total[bi] = best;
+                        best_ptr[bi] = (k, best_l);
+                    }
+                }
+                for (bi, j) in (j0..j1).enumerate() {
+                    table[t * p + j] = best_total[bi] + crow[j];
+                    backptr[t * p + j] = best_ptr[bi];
+                }
+                j0 = j1;
+            }
+            continue;
+        }
+        // parallel join: the branches' series products combine by
+        // element-wise max — the general kernel's tiled block loop,
+        // verbatim
+        let mut j0 = 0;
+        while j0 < p {
+            let j1 = (j0 + KERNEL_BLOCK).min(p);
+            let mut best_total = [f64::NEG_INFINITY; KERNEL_BLOCK];
+            let mut best_ptr = [(usize::MAX, usize::MAX); KERNEL_BLOCK];
+            for &(k, data) in preds {
+                let krow = &table[k * p..(k + 1) * p];
+                for (bi, j) in (j0..j1).enumerate() {
+                    let srow = &panel_startup[j * p..j * p + p];
+                    let brow = &panel_bw[j * p..j * p + p];
+                    let (best, best_l) = K::min_plus_row(krow, srow, brow, data);
+                    if best > best_total[bi] {
+                        best_total[bi] = best;
+                        best_ptr[bi] = (k, best_l);
+                    }
+                }
+            }
+            for (bi, j) in (j0..j1).enumerate() {
+                table[t * p + j] = best_total[bi] + crow[j];
+                backptr[t * p + j] = best_ptr[bi];
+            }
+            j0 = j1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cp::ceft::{ceft_table_rev_with, ceft_table_with};
+    use crate::graph::generator::{generate_fork_join, generate_pipeline, Instance};
+    use crate::graph::shape::{recognize, ShapeClass};
+    use crate::graph::TaskGraph;
+    use crate::model::CostMatrix;
+    use crate::platform::{CostModel, Platform};
+
+    fn assert_tables_bit_identical(a: &CeftTable, b: &CeftTable, what: &str) {
+        assert_eq!(a.p, b.p, "{what}: stride");
+        assert_eq!(a.table.len(), b.table.len(), "{what}: size");
+        for (i, (x, y)) in a.table.iter().zip(&b.table).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: value cell {i}");
+        }
+        assert_eq!(a.backptr, b.backptr, "{what}: backpointers");
+    }
+
+    fn check_instance(inst: &Instance, plat: &Platform, what: &str) {
+        let verdict = recognize(&inst.graph);
+        let sp = verdict.sp.expect("instance must be SP");
+        let mut ws = Workspace::new();
+        let general = ceft_table_with(&mut ws, inst.bind(plat));
+        let fast = ceft_table_sp_with(&mut ws, inst.bind(plat), &sp);
+        assert_tables_bit_identical(&fast, &general, what);
+        let general_rev = ceft_table_rev_with(&mut ws, inst.bind(plat));
+        let fast_rev = ceft_table_sp_rev_with(&mut ws, inst.bind(plat), &sp);
+        assert_tables_bit_identical(&fast_rev, &general_rev, &format!("{what} (rev)"));
+        // pinned dispatches agree too
+        for dispatch in [KernelDispatch::Scalar, KernelDispatch::Simd] {
+            ceft_table_sp_into_dispatched(&mut ws, inst.bind(plat), &sp, dispatch);
+            let got = CeftTable {
+                p: inst.p(),
+                table: ws.table.to_vec(),
+                backptr: ws.backptr.clone(),
+            };
+            assert_tables_bit_identical(&got, &general, &format!("{what} ({dispatch:?})"));
+        }
+    }
+
+    #[test]
+    fn fork_join_instance_matches_general_kernel() {
+        let plat = Platform::uniform(4, 1.0, 0.0);
+        let inst = generate_fork_join(6, 5, 1.0, 50.0, &CostModel::Classic { beta: 0.5 }, &plat, 11);
+        assert_eq!(recognize(&inst.graph).class, ShapeClass::ForkJoin);
+        check_instance(&inst, &plat, "fork_join");
+    }
+
+    #[test]
+    fn pipeline_instance_matches_general_kernel() {
+        let plat = Platform::uniform(3, 1.0, 0.0);
+        let inst = generate_pipeline(7, 4, 1.0, 50.0, &CostModel::Classic { beta: 0.5 }, &plat, 12);
+        assert_eq!(recognize(&inst.graph).class, ShapeClass::SeriesParallel);
+        check_instance(&inst, &plat, "pipeline");
+    }
+
+    #[test]
+    fn hand_built_diamond_matches_including_p1() {
+        for p in [1usize, 2, 8] {
+            let plat = Platform::uniform(p, 1.0, 0.0);
+            let graph = TaskGraph::from_edges(
+                4,
+                &[(0, 1, 1.0), (0, 2, 2.0), (1, 3, 0.5), (2, 3, 1.5)],
+            );
+            let comp: Vec<f64> = (0..4 * p).map(|i| 1.0 + (i % 3) as f64).collect();
+            let inst = Instance {
+                graph,
+                comp: CostMatrix::new(p, comp),
+            };
+            check_instance(&inst, &plat, &format!("diamond p={p}"));
+        }
+    }
+}

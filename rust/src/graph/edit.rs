@@ -25,6 +25,15 @@
 //! by the edits before it. Untouched edges keep their relative order in
 //! the edge list (and thus their CSR and tie-breaking order); added edges
 //! append at the end.
+//!
+//! The shape verdict ([`crate::graph::shape`]) rides on the same
+//! classification: a `cost_only` result reuses the graph `Arc`, so the
+//! interned shape verdict (and its `SpTree`) survives unchanged, while any
+//! structural edit — including [`GraphEdit::EdgeCost`], which rebuilds the
+//! edge list — makes the engine re-run the O(V+E) recognizer on the
+//! successor graph. An edit that breaks series-parallel shape therefore
+//! demotes the handle to the general kernel transparently; it never
+//! panics and never serves a stale decomposition.
 
 use std::sync::Arc;
 

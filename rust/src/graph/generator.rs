@@ -1,6 +1,7 @@
-//! Topcuoglu-style random graph generator (§7.1 of the paper).
+//! Random instance generators: layered RGGs plus structured families.
 //!
-//! Generates layered DAGs controlled by the six paper parameters:
+//! [`generate`] is the Topcuoglu-style layered random graph generator
+//! (§7.1 of the paper), controlled by the six paper parameters:
 //!
 //! * `n` — number of tasks,
 //! * `out_degree` — average out-degree,
@@ -9,10 +10,25 @@
 //! * `beta` — heterogeneity factor (percent, 0..100),
 //! * `gamma` — skewness (fraction of "hot" levels holding heavy tasks).
 //!
-//! The generator guarantees a single entry and a single exit task (levels 0
-//! and h−1 have width 1), every non-entry task has at least one parent in an
-//! earlier level, and every non-exit task has at least one child — the
-//! structural properties CPOP's critical-path extraction needs.
+//! Every generator in this module guarantees a single entry and a single
+//! exit task, every non-entry task has at least one parent, and every
+//! non-exit task has at least one child — the structural properties CPOP's
+//! critical-path extraction needs.
+//!
+//! Two structured families feed the series-parallel fast path
+//! ([`crate::graph::shape`], [`crate::cp::ceft::sp`]):
+//!
+//! * [`generate_fork_join`] — a chain of fork-join blocks (each block fans
+//!   a junction out to `width` parallel tasks and joins them again);
+//!   classifies as [`crate::graph::shape::ShapeClass::ForkJoin`].
+//! * [`generate_pipeline`] — `replicas` independent `stages`-long chains
+//!   between a shared entry and exit (a parallel composition of series
+//!   chains); classifies as
+//!   [`crate::graph::shape::ShapeClass::SeriesParallel`].
+//!
+//! Determinism contract: all three families are pure functions of their
+//! parameters and `seed` — the same seed yields a bit-identical instance
+//! (structure, payloads, and cost matrix), across runs and platforms.
 
 use super::TaskGraph;
 use crate::model::{CostMatrix, InstanceRef, PlatformCtx};
@@ -44,6 +60,9 @@ impl RggParams {
 }
 
 /// A generated problem instance: structure + payloads + execution costs.
+/// Produced by any of the generator families in this module — layered RGG
+/// ([`generate`]), fork-join ([`generate_fork_join`]), or pipeline
+/// ([`generate_pipeline`]) — all of which are deterministic per seed.
 /// The processor-class count lives in the cost matrix ([`Instance::p`]
 /// reads it) — there is deliberately no separate field that could
 /// disagree with the matrix stride.
@@ -209,7 +228,10 @@ fn base_weights(
         .collect()
 }
 
-/// Generate a full instance under the given cost model and platform.
+/// Generate a full layered-RGG instance under the given cost model and
+/// platform. For the structured families see [`generate_fork_join`] and
+/// [`generate_pipeline`]; all three share the determinism contract (same
+/// parameters + same seed ⇒ bit-identical instance).
 ///
 /// Edge data volumes follow the paper: the weight of an edge leaving `t_i`
 /// is `U(w_i·c·(1-β/2), w_i·c·(1+β/2))` where `w_i` is the scalar task
@@ -238,6 +260,117 @@ pub fn generate(
         graph: TaskGraph::from_edges(params.n, &edges),
         comp: CostMatrix::new(platform.num_classes(), comp),
     }
+}
+
+/// Finish a structured skeleton into a full [`Instance`]: draw per-task
+/// base weights (no level skew — structured families are homogeneous),
+/// expand them into the `v × P` cost matrix under `model`, and attach edge
+/// data volumes with the same `U(w_i·c·(1-β/2), w_i·c·(1+β/2))` rule as
+/// [`generate`].
+fn finish_structured(
+    n: usize,
+    skeleton: &[(usize, usize)],
+    ccr: f64,
+    beta_pct: f64,
+    model: &CostModel,
+    platform: &Platform,
+    rng: &mut Xoshiro256,
+) -> Instance {
+    let w_dag = rng.uniform(50.0, 150.0);
+    let w: Vec<f64> = (0..n)
+        .map(|_| rng.uniform(0.0, 2.0 * w_dag).max(1e-3))
+        .collect();
+    let (comp, scalar) = model.generate(&w, platform, rng);
+    let beta = beta_pct / 100.0;
+    let edges: Vec<(usize, usize, f64)> = skeleton
+        .iter()
+        .map(|&(src, dst)| {
+            let lo = scalar[src] * ccr * (1.0 - beta / 2.0);
+            let hi = scalar[src] * ccr * (1.0 + beta / 2.0);
+            let data = if hi > lo { rng.uniform(lo, hi) } else { lo };
+            (src, dst, data.max(0.0))
+        })
+        .collect();
+    Instance {
+        graph: TaskGraph::from_edges(n, &edges),
+        comp: CostMatrix::new(platform.num_classes(), comp),
+    }
+}
+
+/// Generate a fork-join instance: a chain of `depth` blocks, each fanning
+/// a junction out to `width` parallel single-task branches and joining
+/// them at the next junction. Total tasks: `(depth + 1) + depth · width`.
+///
+/// With `width ≥ 2` the result classifies as
+/// [`crate::graph::shape::ShapeClass::ForkJoin`]; `width == 1`
+/// degenerates to a chain. Deterministic per seed, like [`generate`].
+///
+/// Panics if `width == 0` or `depth == 0`.
+pub fn generate_fork_join(
+    width: usize,
+    depth: usize,
+    ccr: f64,
+    beta_pct: f64,
+    model: &CostModel,
+    platform: &Platform,
+    seed: u64,
+) -> Instance {
+    assert!(width >= 1, "fork-join needs at least one branch");
+    assert!(depth >= 1, "fork-join needs at least one block");
+    let mut rng = Xoshiro256::new(seed);
+    let n = (depth + 1) + depth * width;
+    let mut skeleton: Vec<(usize, usize)> = Vec::with_capacity(2 * depth * width);
+    let mut junction = 0usize;
+    let mut next_id = 1usize;
+    for _ in 0..depth {
+        let branch_start = next_id;
+        next_id += width;
+        let next_junction = next_id;
+        next_id += 1;
+        for b in 0..width {
+            skeleton.push((junction, branch_start + b));
+            skeleton.push((branch_start + b, next_junction));
+        }
+        junction = next_junction;
+    }
+    debug_assert_eq!(next_id, n);
+    finish_structured(n, &skeleton, ccr, beta_pct, model, platform, &mut rng)
+}
+
+/// Generate a pipeline instance: `replicas` independent chains of `stages`
+/// tasks each, between a shared entry and exit — a parallel composition of
+/// series chains. Total tasks: `stages · replicas + 2`.
+///
+/// With `replicas ≥ 2` and `stages ≥ 2` the result classifies as
+/// [`crate::graph::shape::ShapeClass::SeriesParallel`]; `stages == 1`
+/// degenerates to fork-join and `replicas == 1` to a chain. Deterministic
+/// per seed, like [`generate`].
+///
+/// Panics if `stages == 0` or `replicas == 0`.
+pub fn generate_pipeline(
+    stages: usize,
+    replicas: usize,
+    ccr: f64,
+    beta_pct: f64,
+    model: &CostModel,
+    platform: &Platform,
+    seed: u64,
+) -> Instance {
+    assert!(stages >= 1, "pipeline needs at least one stage");
+    assert!(replicas >= 1, "pipeline needs at least one replica");
+    let mut rng = Xoshiro256::new(seed);
+    let n = stages * replicas + 2;
+    let exit = n - 1;
+    let mut skeleton: Vec<(usize, usize)> = Vec::with_capacity(replicas * (stages + 1));
+    for r in 0..replicas {
+        let first = 1 + r * stages;
+        skeleton.push((0, first));
+        for s in 1..stages {
+            skeleton.push((first + s - 1, first + s));
+        }
+        skeleton.push((first + stages - 1, exit));
+    }
+    finish_structured(n, &skeleton, ccr, beta_pct, model, platform, &mut rng)
 }
 
 #[cfg(test)]
@@ -336,6 +469,61 @@ mod tests {
         let inst = generate(&params(128, 0.5), &CostModel::two_weight_high(0.5), &plat, 11);
         assert_eq!(inst.comp.len(), 128 * 8);
         assert!(inst.comp.iter().all(|&c| c > 0.0 && c.is_finite()));
+    }
+
+    #[test]
+    fn fork_join_shape_size_and_determinism() {
+        let plat = Platform::uniform(3, 1.0, 0.0);
+        let model = CostModel::Classic { beta: 0.5 };
+        let inst = generate_fork_join(4, 3, 1.0, 50.0, &model, &plat, 21);
+        assert_eq!(inst.graph.num_tasks(), (3 + 1) + 3 * 4);
+        assert_eq!(inst.graph.num_edges(), 2 * 3 * 4);
+        assert_eq!(inst.graph.sources().len(), 1);
+        assert_eq!(inst.graph.sinks().len(), 1);
+        inst.graph.validate(true).unwrap();
+        let verdict = crate::graph::shape::recognize(&inst.graph);
+        assert_eq!(verdict.class, crate::graph::shape::ShapeClass::ForkJoin);
+        let again = generate_fork_join(4, 3, 1.0, 50.0, &model, &plat, 21);
+        assert_eq!(inst.comp, again.comp);
+        assert_eq!(inst.graph.edges(), again.graph.edges());
+        let other = generate_fork_join(4, 3, 1.0, 50.0, &model, &plat, 22);
+        assert_ne!(inst.comp, other.comp);
+    }
+
+    #[test]
+    fn pipeline_shape_size_and_determinism() {
+        let plat = Platform::uniform(3, 1.0, 0.0);
+        let model = CostModel::Classic { beta: 0.5 };
+        let inst = generate_pipeline(5, 3, 1.0, 50.0, &model, &plat, 31);
+        assert_eq!(inst.graph.num_tasks(), 5 * 3 + 2);
+        assert_eq!(inst.graph.num_edges(), 3 * (5 + 1));
+        assert_eq!(inst.graph.sources().len(), 1);
+        assert_eq!(inst.graph.sinks().len(), 1);
+        inst.graph.validate(true).unwrap();
+        let verdict = crate::graph::shape::recognize(&inst.graph);
+        assert_eq!(
+            verdict.class,
+            crate::graph::shape::ShapeClass::SeriesParallel
+        );
+        let again = generate_pipeline(5, 3, 1.0, 50.0, &model, &plat, 31);
+        assert_eq!(inst.comp, again.comp);
+        assert_eq!(inst.graph.edges(), again.graph.edges());
+    }
+
+    #[test]
+    fn structured_degenerate_cases_are_chains() {
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let model = CostModel::Classic { beta: 0.5 };
+        let fj = generate_fork_join(1, 4, 1.0, 50.0, &model, &plat, 41);
+        assert_eq!(
+            crate::graph::shape::recognize(&fj.graph).class,
+            crate::graph::shape::ShapeClass::Chain
+        );
+        let pipe = generate_pipeline(6, 1, 1.0, 50.0, &model, &plat, 43);
+        assert_eq!(
+            crate::graph::shape::recognize(&pipe.graph).class,
+            crate::graph::shape::ShapeClass::Chain
+        );
     }
 
     #[test]

@@ -12,6 +12,9 @@ pub mod edit;
 pub mod generator;
 pub mod io;
 pub mod realworld;
+pub mod shape;
+
+pub use generator::{generate, generate_fork_join, generate_pipeline};
 
 /// A directed edge with a data volume (communication payload).
 #[derive(Clone, Copy, Debug, PartialEq)]

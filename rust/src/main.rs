@@ -30,7 +30,11 @@
 //!   latency percentiles and `telemetry_overhead_pct`) so the perf
 //!   trajectory is tracked across PRs. `--clients` sets dispatch
 //!   concurrency; the default (2× worker threads) oversubscribes the
-//!   pool so the engine's saturation gate actually opens.
+//!   pool so the engine's saturation gate actually opens. `--shape
+//!   layered|fork-join|pipeline|mix` picks the instance family —
+//!   structured families route through the series-parallel tree-DP fast
+//!   path, and the report records `shape_fast_path_hits` /
+//!   `shape_general_fallbacks` plus per-shape p99 latency.
 
 use ceft::coordinator::{Coordinator, EXPERIMENT_IDS};
 use ceft::cp::ceft::find_critical_path;
@@ -653,6 +657,10 @@ struct LoadgenCfg {
     /// fraction of the instance mix that also receives in-place `update`
     /// traffic (tail-decile cost edits, see [`EditSpec`])
     edit_share: f64,
+    /// instance family of the mix: "layered", "fork-join", "pipeline" or
+    /// "mix" — structured families exercise the SP tree-DP fast path, and
+    /// a pure fork-join run gates on `shape_fast_path_hits > 0`
+    shape: String,
 }
 
 /// One edited instance in the loadgen mix: `update` requests flip task
@@ -683,6 +691,13 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         "replay generated instances against an in-process engine",
     )
     .opt("count", Some("16"), "distinct instances in the replay mix")
+    .opt(
+        "shape",
+        Some("layered"),
+        "instance family: layered (RGG), fork-join, pipeline, or mix \
+         (round-robin of all three); structured families route through \
+         the series-parallel tree-DP fast path",
+    )
     .opt(
         "platform-mix",
         Some("1"),
@@ -722,6 +737,11 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
     );
     let parsed = parse_or_exit(args, tokens);
     let count: usize = num_or_exit::<usize>(&parsed, "count", None).max(1);
+    let shape_cfg = parsed.req("shape").to_string();
+    if !["layered", "fork-join", "pipeline", "mix"].contains(&shape_cfg.as_str()) {
+        eprintln!("--shape must be one of layered, fork-join, pipeline, mix");
+        return 2;
+    }
     let platform_mix: usize = num_or_exit::<usize>(&parsed, "platform-mix", None).max(1);
     let rate: f64 = num_or_exit(&parsed, "rate", None);
     let duration_s: f64 = num_or_exit(&parsed, "duration", None);
@@ -772,6 +792,7 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
             clients_cfg
         },
         edit_share,
+        shape: shape_cfg,
     };
 
     // Build the submit stream once: `count` distinct instances (same grid
@@ -785,11 +806,52 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
     let base = cell_from(&parsed);
     let edit_count = ((count as f64) * cfg.edit_share).ceil() as usize;
     let mut submit_lines = Vec::with_capacity(count);
+    let mut inst_shapes: Vec<&'static str> = Vec::with_capacity(count);
     let mut edit_specs: Vec<EditSpec> = Vec::with_capacity(edit_count);
     for i in 0..count {
         let mut cell = base;
         cell.index = base.index + i as u64;
-        let (platform, inst) = build_instance(&cell);
+        // Per-instance family: `--shape mix` round-robins all three. The
+        // structured families size themselves to the cell's --n (fork-join
+        // blocks of width 4, pipelines of 4 replicas) and share the
+        // layered generator's cost/edge-data idiom and seed determinism.
+        let family = match cfg.shape.as_str() {
+            "mix" => ["layered", "fork_join", "pipeline"][i % 3],
+            "fork-join" => "fork_join",
+            other => other, // "layered" | "pipeline"
+        };
+        let (platform, inst) = match family {
+            "fork_join" => {
+                let plat = ceft::platform::Platform::uniform(cell.p, 1.0, 0.0);
+                let depth = (cell.n.saturating_sub(1) / 5).max(1);
+                let inst = ceft::graph::generate_fork_join(
+                    4,
+                    depth,
+                    cell.ccr,
+                    cell.beta_pct,
+                    &ceft::platform::CostModel::Classic { beta: 0.5 },
+                    &plat,
+                    cell.index,
+                );
+                (plat, inst)
+            }
+            "pipeline" => {
+                let plat = ceft::platform::Platform::uniform(cell.p, 1.0, 0.0);
+                let stages = (cell.n.saturating_sub(2) / 4).max(1);
+                let inst = ceft::graph::generate_pipeline(
+                    stages,
+                    4,
+                    cell.ccr,
+                    cell.beta_pct,
+                    &ceft::platform::CostModel::Classic { beta: 0.5 },
+                    &plat,
+                    cell.index,
+                );
+                (plat, inst)
+            }
+            _ => build_instance(&cell),
+        };
+        inst_shapes.push(family);
         let platform = if platform_mix > 1 {
             // distinct bandwidth per mix slot -> distinct platform hash
             ceft::platform::Platform::uniform(inst.p(), 1.0 + (i % platform_mix) as f64, 0.0)
@@ -838,7 +900,7 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         if sweep {
             println!("--- cp-share {share} ---");
         }
-        match loadgen_point(&cfg, &submit_lines, &edit_specs, share) {
+        match loadgen_point(&cfg, &submit_lines, &inst_shapes, &edit_specs, share) {
             Ok(pt) => points.push((share, pt)),
             Err(code) => return code,
         }
@@ -933,6 +995,7 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
 fn loadgen_point(
     cfg: &LoadgenCfg,
     submit_lines: &[String],
+    inst_shapes: &[&'static str],
     edit_specs: &[EditSpec],
     cp_share: f64,
 ) -> Result<LoadgenPoint, i32> {
@@ -985,6 +1048,9 @@ fn loadgen_point(
             ceft::service::request_to_json(&req).to_string()
         })
         .collect();
+    // per-line shape labels (parallel to `lines`), so per-request
+    // latencies can bucket into per-shape percentiles
+    let mut line_shapes: Vec<&'static str> = inst_shapes.to_vec();
     // In-place edit traffic: each edited instance contributes both cost
     // variants, so every cycle of the ring flips the row's bits and the
     // table miss behind the follow-up cp/schedule is served by a delta
@@ -1000,8 +1066,10 @@ fn loadgen_point(
                 }],
             };
             lines.push(ceft::service::request_to_json(&req).to_string());
+            line_shapes.push(inst_shapes[spec.index]);
         }
     }
+    debug_assert_eq!(line_shapes.len(), lines.len());
 
     // Fire in 50ms ticks at the target rate; measure what the engine
     // actually sustains.
@@ -1023,6 +1091,10 @@ fn loadgen_point(
     // can pile up past the saturation gate), so the percentiles below are
     // per-request, not per-tick averages.
     let mut latencies: Vec<f64> = Vec::new();
+    // per-shape latency buckets (keys are the family labels in
+    // `line_shapes`); one percentile row per shape present in the mix
+    let mut shape_lat: std::collections::HashMap<&'static str, Vec<f64>> =
+        std::collections::HashMap::new();
     let threads = engine.threads();
     let mut sent: u64 = 0;
     let mut failures: u64 = 0;
@@ -1047,7 +1119,9 @@ fn loadgen_point(
             (resp, t0.elapsed().as_secs_f64())
         });
         sent += batch.len() as u64;
-        for (resp, secs) in &results {
+        for (j, (resp, secs)) in results.iter().enumerate() {
+            let shape = line_shapes[(offset + j) % lines.len()];
+            shape_lat.entry(shape).or_default().push(*secs);
             latencies.push(*secs);
             if resp.get("ok") != Some(&Json::Bool(true)) {
                 failures += 1;
@@ -1216,6 +1290,50 @@ fn loadgen_point(
             return Err(1);
         }
     }
+    // Structured-shape routing: how many table computations the interned
+    // verdict sent to the SP tree DP vs the general sweep, plus per-shape
+    // latency percentiles. A pure fork-join mix that never engages the
+    // fast path is a routing regression, not a slow run — fail it.
+    let shapes_counter = |k: &str| -> f64 {
+        stats
+            .get("shapes")
+            .and_then(|c| c.get(k))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    let shape_fast_path_hits = shapes_counter("fast_path_hits");
+    let shape_general_fallbacks = shapes_counter("general_fallbacks");
+    println!(
+        "shape routing ({}): {shape_fast_path_hits} fast-path tables, \
+         {shape_general_fallbacks} general fallbacks",
+        cfg.shape
+    );
+    if cfg.shape == "fork-join" && shape_fast_path_hits == 0.0 {
+        eprintln!(
+            "loadgen: pure fork-join workload reported zero shape_fast_path_hits \
+             — the SP fast path never engaged"
+        );
+        return Err(1);
+    }
+    let per_shape_p99 = {
+        let mut rows: Vec<(&'static str, Json)> = shape_lat
+            .iter_mut()
+            .map(|(&shape, lat)| {
+                lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                (
+                    shape,
+                    Json::Num(ceft::util::stats::percentile_sorted(lat, 99.0) * 1e6),
+                )
+            })
+            .collect();
+        rows.sort_by_key(|&(shape, _)| shape);
+        for (shape, p99) in &rows {
+            if let Json::Num(v) = p99 {
+                println!("  p99 {shape}: {:.1} µs", v);
+            }
+        }
+        Json::obj(rows)
+    };
     // With an explicit --platform-mix the distinct-platform count is under
     // our control, so enforce the residency invariant: panels built once
     // per platform, never per request. (Without it, the workload's own
@@ -1334,6 +1452,13 @@ fn loadgen_point(
         ("delta_rows_recomputed", Json::Num(delta_rows)),
         ("delta_full_rows", Json::Num(delta_full)),
         ("delta_speedup", Json::Num(delta_speedup)),
+        ("shape", Json::Str(cfg.shape.clone())),
+        ("shape_fast_path_hits", Json::Num(shape_fast_path_hits)),
+        (
+            "shape_general_fallbacks",
+            Json::Num(shape_general_fallbacks),
+        ),
+        ("per_shape_p99_us", per_shape_p99),
         ("threads", Json::Num(threads as f64)),
         ("clients", Json::Num(cfg.clients as f64)),
         ("target_rps", Json::Num(cfg.rate)),

@@ -150,7 +150,7 @@ pub fn set_enabled(on: bool) {
 }
 
 /// Number of min-plus dispatch paths attributed separately.
-pub const NUM_KERNEL_PATHS: usize = 4;
+pub const NUM_KERNEL_PATHS: usize = 5;
 
 /// Which min-plus implementation served a DP sweep.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -164,6 +164,8 @@ pub enum KernelPath {
     Batched = 2,
     /// Cross-request gathered multi-instance sweep.
     Gathered = 3,
+    /// Series-parallel tree DP over a recognized shape (`cp::ceft::sp`).
+    SpTree = 4,
 }
 
 impl KernelPath {
@@ -173,6 +175,7 @@ impl KernelPath {
         KernelPath::Simd,
         KernelPath::Batched,
         KernelPath::Gathered,
+        KernelPath::SpTree,
     ];
 
     /// Wire/display name.
@@ -182,6 +185,7 @@ impl KernelPath {
             KernelPath::Simd => "simd",
             KernelPath::Batched => "batched",
             KernelPath::Gathered => "gathered",
+            KernelPath::SpTree => "sp_tree",
         }
     }
 }
@@ -202,8 +206,13 @@ impl PathCell {
     }
 }
 
-static KERNEL_PATHS: [PathCell; NUM_KERNEL_PATHS] =
-    [PathCell::new(), PathCell::new(), PathCell::new(), PathCell::new()];
+static KERNEL_PATHS: [PathCell; NUM_KERNEL_PATHS] = [
+    PathCell::new(),
+    PathCell::new(),
+    PathCell::new(),
+    PathCell::new(),
+    PathCell::new(),
+];
 
 /// RAII guard from [`kernel_timer`]; records on drop. Bind it to a named
 /// `_timer` variable — `let _ = ...` drops immediately.

@@ -68,6 +68,15 @@ pub struct CacheStats {
     /// computed from scratch — `delta_rows_recomputed / delta_full_rows`
     /// is the fraction of the DP an edit actually cost
     pub delta_full_rows: u64,
+    /// table computations routed to the series-parallel tree-DP kernel
+    /// because the interned shape verdict carried an `SpTree`
+    /// ([`crate::cp::ceft::sp`]); only meaningful on the engine's table
+    /// cache
+    pub shape_fast_path_hits: u64,
+    /// table computations that ran the general topo-sweep kernel — either
+    /// the graph is a general DAG or the request rode a delta/gathered
+    /// path where the basis table dictates the kernel
+    pub shape_general_fallbacks: u64,
 }
 
 impl CacheStats {
@@ -84,6 +93,8 @@ impl CacheStats {
         self.cp_schedule_shares += other.cp_schedule_shares;
         self.delta_rows_recomputed += other.delta_rows_recomputed;
         self.delta_full_rows += other.delta_full_rows;
+        self.shape_fast_path_hits += other.shape_fast_path_hits;
+        self.shape_general_fallbacks += other.shape_general_fallbacks;
     }
 }
 
@@ -233,6 +244,17 @@ impl<K: Eq + Hash + Copy, V> LruCache<K, V> {
         self.stats.delta_full_rows += full;
     }
 
+    /// Record one table computation's kernel routing: `fast_path` is
+    /// `true` when the interned shape verdict sent it to the
+    /// series-parallel tree DP, `false` when it ran the general sweep.
+    pub fn record_shape_route(&mut self, fast_path: bool) {
+        if fast_path {
+            self.stats.shape_fast_path_hits += 1;
+        } else {
+            self.stats.shape_general_fallbacks += 1;
+        }
+    }
+
     /// Counter snapshot.
     pub fn stats(&self) -> CacheStats {
         self.stats
@@ -280,6 +302,25 @@ mod tests {
         agg.merge(&s);
         assert_eq!(agg.delta_rows_recomputed, 10);
         assert_eq!(agg.delta_full_rows, 100);
+    }
+
+    #[test]
+    fn shape_route_counters_accumulate_and_merge() {
+        let mut c: LruCache<CacheKey, u32> = LruCache::new(2);
+        c.record_shape_route(true);
+        c.record_shape_route(true);
+        c.record_shape_route(false);
+        let s = c.stats();
+        assert_eq!(s.shape_fast_path_hits, 2);
+        assert_eq!(s.shape_general_fallbacks, 1);
+        let mut agg = CacheStats {
+            shape_fast_path_hits: 1,
+            shape_general_fallbacks: 4,
+            ..CacheStats::default()
+        };
+        agg.merge(&s);
+        assert_eq!(agg.shape_fast_path_hits, 3);
+        assert_eq!(agg.shape_general_fallbacks, 5);
     }
 
     #[test]

@@ -119,6 +119,7 @@
 //! (`CEFT_TELEMETRY=off`, or `EngineConfig::telemetry = Some(false)`)
 //! every hook degrades to a branch-predictable no-op with no clock reads.
 
+use crate::cp::ceft::sp::{ceft_table_sp_rev_with, ceft_table_sp_with};
 use crate::cp::ceft::{
     ceft_table_delta_with, ceft_table_rev_with, ceft_table_with, critical_path_from_table,
     find_ceft_tables_gathered_delta, slack_from_table_with, CeftTable, CriticalPath, DeltaPlan,
@@ -126,6 +127,7 @@ use crate::cp::ceft::{
 use crate::graph::edit::{apply_edits, GraphEdit};
 use crate::graph::generator::Instance;
 use crate::graph::io;
+use crate::graph::shape::{self, ShapeClass, ShapeVerdict, NUM_SHAPE_CLASSES};
 use crate::graph::TaskGraph;
 use crate::model::{CostMatrix, InstanceRef, PlatformCtx};
 use crate::obs::{self, Recorder, RequestTrace, Stage};
@@ -245,6 +247,13 @@ struct Snapshot {
     generation: u64,
     graph: Arc<TaskGraph>,
     comp: Arc<CostMatrix>,
+    /// the graph's shape verdict ([`shape::recognize`]), computed once at
+    /// intern time (O(V+E)) and carried through edits: a cost-only edit
+    /// reuses the graph `Arc` and keeps the verdict, a structural edit
+    /// re-runs the recognizer on the successor graph — an SP-breaking
+    /// edit therefore demotes the handle to the general kernel
+    /// transparently, never a stale decomposition
+    shape: ShapeVerdict,
 }
 
 impl Snapshot {
@@ -592,6 +601,11 @@ struct Counters {
     /// request lines fanned across the pool by those calls; `batch_lines /
     /// batches` is the mean client-side pipelining depth
     batch_lines: AtomicU64,
+    /// shape verdicts assigned, indexed by [`ShapeClass::idx`]: one bump
+    /// per recognizer run that produced a snapshot — at intern time and on
+    /// every structural `update` re-check (cost-only edits keep the
+    /// verdict and do not count)
+    shape_verdicts: [AtomicU64; NUM_SHAPE_CLASSES],
 }
 
 impl Counters {
@@ -738,6 +752,9 @@ impl Engine {
         let platform_hash = hashing::hash_platform(&platform);
         let comp_hash = hashing::hash_comp(instance.comp.as_slice());
         let id = hashing::combine(&[graph_hash, platform_hash, comp_hash]);
+        // shape recognition runs once per intern, outside the state lock —
+        // O(V+E), amortized across every request the handle later serves
+        let shape_verdict = shape::recognize(&instance.graph);
         let mut st = self.state.lock().unwrap();
         if let Some(existing) = st.instances.get(&id) {
             // Handles are 64-bit non-cryptographic hashes shared by every
@@ -842,6 +859,7 @@ impl Engine {
             .entry(platform_hash)
             .or_insert_with(|| Arc::new(CacheShard::new(self.cache_capacity)))
             .clone();
+        Counters::bump(&self.counters.shape_verdicts[shape_verdict.class.idx()]);
         let interned = Arc::new(Interned {
             id,
             ctx,
@@ -855,6 +873,7 @@ impl Engine {
                     generation: 0,
                     graph: Arc::new(instance.graph),
                     comp: Arc::new(instance.comp),
+                    shape: shape_verdict,
                 }),
                 basis: None,
             }),
@@ -1214,15 +1233,21 @@ impl Engine {
                     let iref = only.snap.bind(&only.inst.ctx);
                     match &only.delta {
                         // serial delta: clean-prefix copy plus in-suffix
-                        // change propagation — the tightest recompute
+                        // change propagation — the tightest recompute (the
+                        // basis table dictates the kernel, so a delta sweep
+                        // stays on the general path even for SP shapes)
                         Some(d) => ceft_table_delta_with(ws, iref, &d.plan(), rev),
                         None => {
-                            let t = if rev {
-                                ceft_table_rev_with(ws, iref)
-                            } else {
-                                ceft_table_with(ws, iref)
-                            };
                             let n = only.snap.graph.num_tasks();
+                            // interned shape verdict routes the kernel:
+                            // SP-decomposed graphs take the tree-DP fast
+                            // path, bit-identical to the general sweep
+                            let t = match (&only.snap.shape.sp, rev) {
+                                (Some(sp), false) => ceft_table_sp_with(ws, iref, sp),
+                                (Some(sp), true) => ceft_table_sp_rev_with(ws, iref, sp),
+                                (None, false) => ceft_table_with(ws, iref),
+                                (None, true) => ceft_table_rev_with(ws, iref),
+                            };
                             (t, n)
                         }
                     }
@@ -1236,8 +1261,30 @@ impl Engine {
                 let mut out: Vec<Option<(CeftTable, usize)>> =
                     (0..jobs.len()).map(|_| None).collect();
                 for rev in [false, true] {
-                    let idxs: Vec<usize> =
-                        (0..jobs.len()).filter(|&i| jobs[i].rev == rev).collect();
+                    // Gathered windows may mix shapes: SP-decomposed jobs
+                    // without a delta basis peel off before the lock-step
+                    // rounds and run the tree-DP kernel individually (its
+                    // instance-specific sweep order cannot join a
+                    // lock-step round); delta-planned jobs stay general —
+                    // the basis table dictates the kernel.
+                    let (sp_idxs, idxs): (Vec<usize>, Vec<usize>) = (0..jobs.len())
+                        .filter(|&i| jobs[i].rev == rev)
+                        .partition(|&i| {
+                            jobs[i].delta.is_none() && jobs[i].snap.shape.sp.is_some()
+                        });
+                    for &i in &sp_idxs {
+                        let job = &jobs[i];
+                        let sp = job.snap.shape.sp.as_ref().expect("partitioned on sp");
+                        let t = job.inst.ctx.with_workspace(|ws| {
+                            let iref = job.snap.bind(&job.inst.ctx);
+                            if rev {
+                                ceft_table_sp_rev_with(ws, iref, sp)
+                            } else {
+                                ceft_table_sp_with(ws, iref, sp)
+                            }
+                        });
+                        out[i] = Some((t, job.snap.graph.num_tasks()));
+                    }
                     if idxs.is_empty() {
                         continue;
                     }
@@ -1305,6 +1352,11 @@ impl Engine {
                             st.table_cache
                                 .record_delta(res.recomputed_rows as u64, res.full_rows as u64);
                         }
+                        // kernel-routing attribution: mirrors the compute
+                        // branch above (SP tree DP iff the snapshot carries
+                        // a decomposition and no delta basis was captured)
+                        st.table_cache
+                            .record_shape_route(job.delta.is_none() && job.snap.shape.sp.is_some());
                     }
                     st.table_cache.record_batch(jobs.len() as u64);
                     Self::finish_gather(&mut st)
@@ -1504,10 +1556,24 @@ impl Engine {
         } else {
             None
         };
+        // Shape-verdict maintenance: a cost-only batch reuses the graph
+        // `Arc`, so the verdict (and its `SpTree`) carries over unchanged;
+        // any structural edit re-runs the O(V+E) recognizer on the
+        // successor graph. An SP-breaking edit thus demotes the handle to
+        // the general kernel transparently — never a panic, never a stale
+        // decomposition serving wrong answers.
+        let shape_verdict = if res.cost_only {
+            old.shape.clone()
+        } else {
+            let v = shape::recognize(&res.graph);
+            Counters::bump(&self.counters.shape_verdicts[v.class.idx()]);
+            v
+        };
         let new_snap = Arc::new(Snapshot {
             generation: new_gen,
             graph: res.graph,
             comp: res.costs,
+            shape: shape_verdict,
         });
         // Purge every memo entry of prior generations and swap the
         // snapshot inside the same version-mutex critical section: a
@@ -1836,6 +1902,14 @@ impl Engine {
                     Json::Num(s.delta_rows_recomputed as f64),
                 ),
                 ("delta_full_rows", Json::Num(s.delta_full_rows as f64)),
+                (
+                    "shape_fast_path_hits",
+                    Json::Num(s.shape_fast_path_hits as f64),
+                ),
+                (
+                    "shape_general_fallbacks",
+                    Json::Num(s.shape_general_fallbacks as f64),
+                ),
             ])
         };
         // aggregate the per-platform shards (state lock before shard lock —
@@ -1933,6 +2007,36 @@ impl Engine {
             (
                 "table_cache",
                 cache_obj(table_len, self.cache_capacity, shard_count, table_stats),
+            ),
+            (
+                "shapes",
+                Json::obj(vec![
+                    (
+                        "verdicts",
+                        Json::obj(
+                            ShapeClass::ALL
+                                .iter()
+                                .map(|&c| {
+                                    (
+                                        c.name(),
+                                        Json::Num(Counters::read(
+                                            &self.counters.shape_verdicts[c.idx()],
+                                        )
+                                            as f64),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "fast_path_hits",
+                        Json::Num(table_stats.shape_fast_path_hits as f64),
+                    ),
+                    (
+                        "general_fallbacks",
+                        Json::Num(table_stats.shape_general_fallbacks as f64),
+                    ),
+                ]),
             ),
         ])
     }
@@ -2107,6 +2211,29 @@ impl Engine {
             out,
             "ceft_table_delta_full_rows_total {}",
             table_stats.delta_full_rows
+        );
+        // structured-shape routing: interned verdict counts and how table
+        // computations split between the SP tree DP and the general sweep
+        let _ = writeln!(out, "# TYPE ceft_shape_verdicts_total counter");
+        for c in ShapeClass::ALL {
+            let _ = writeln!(
+                out,
+                "ceft_shape_verdicts_total{{class=\"{}\"}} {}",
+                c.name(),
+                Counters::read(&self.counters.shape_verdicts[c.idx()])
+            );
+        }
+        let _ = writeln!(out, "# TYPE ceft_shape_fast_path_hits_total counter");
+        let _ = writeln!(
+            out,
+            "ceft_shape_fast_path_hits_total {}",
+            table_stats.shape_fast_path_hits
+        );
+        let _ = writeln!(out, "# TYPE ceft_shape_general_fallbacks_total counter");
+        let _ = writeln!(
+            out,
+            "ceft_shape_general_fallbacks_total {}",
+            table_stats.shape_general_fallbacks
         );
         // per-stage latency summaries
         let snap = self.recorder.snapshot();
@@ -3433,6 +3560,112 @@ mod tests {
         let plat = Platform::uniform(1, 1.0, 0.0);
         let edited = hand_instance(6, &edges, 1, &[1.0, 5.0, 5.0, 9.0, 9.0, 1.0]);
         assert_eq!(find_critical_path(edited.bind(&plat)).length, 20.0);
+    }
+
+    #[test]
+    fn sp_shaped_requests_route_to_tree_dp_and_match_general() {
+        let engine = Engine::with_defaults();
+        // diamond 0 → {1, 2} → 3: fork-join, recognizer-accepted
+        let edges = [(0, 1, 2.0), (0, 2, 3.0), (1, 3, 1.0), (2, 3, 4.0)];
+        let comp = [3.0, 5.0, 2.0, 7.0, 6.0, 1.0, 4.0, 4.0];
+        let inst = hand_instance(4, &edges, 2, &comp);
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        let expected = find_critical_path(inst.bind(&plat));
+        let id = submit_id(&engine, &inst);
+        let (cp, _) = engine.handle_line(&format!(r#"{{"op":"cp","id":"{id}"}}"#));
+        assert_eq!(cp.get("ok"), Some(&Json::Bool(true)), "{cp:?}");
+        assert_eq!(
+            cp.get("length").and_then(Json::as_f64),
+            Some(expected.length)
+        );
+        // schedulers consume the same (sp-computed) table unchanged
+        let mk = Algorithm::CeftCpop.schedule(inst.bind(&plat)).makespan();
+        let (sched, _) = engine.handle_line(&format!(
+            r#"{{"op":"schedule","algorithm":"CEFT-CPOP","id":"{id}"}}"#
+        ));
+        assert_eq!(sched.get("makespan").and_then(Json::as_f64), Some(mk));
+        let stats = engine.handle(Request::Stats);
+        let shapes = stats.get("shapes").expect("stats carry a shapes section");
+        assert_eq!(
+            shapes
+                .get("verdicts")
+                .and_then(|v| v.get("fork_join"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert!(
+            shapes.get("fast_path_hits").and_then(Json::as_f64) >= Some(1.0),
+            "{stats:?}"
+        );
+        assert_eq!(
+            shapes.get("general_fallbacks").and_then(Json::as_f64),
+            Some(0.0)
+        );
+    }
+
+    #[test]
+    fn sp_breaking_update_demotes_to_general_path_with_correct_results() {
+        let engine = Engine::with_defaults();
+        // diamond (SP) at generation 0
+        let edges = [(0, 1, 1.0), (0, 2, 1.0), (1, 3, 1.0), (2, 3, 1.0)];
+        let comp = [2.0, 3.0, 4.0, 2.0, 5.0, 3.0, 1.0, 6.0];
+        let inst = hand_instance(4, &edges, 2, &comp);
+        let id = submit_id(&engine, &inst);
+        let (cp0, _) = engine.handle_line(&format!(r#"{{"op":"cp","id":"{id}"}}"#));
+        assert_eq!(cp0.get("ok"), Some(&Json::Bool(true)), "{cp0:?}");
+        // the cross-branch edge 1 → 2 turns the diamond into the N-graph —
+        // not series-parallel; the verdict must demote, the answer must
+        // match a from-scratch general computation on the edited content
+        let (up, _) = engine.handle_line(&format!(
+            r#"{{"op":"update","id":"{id}","edits":[{{"edit":"add_edge","src":1,"dst":2,"data":2.0}}]}}"#
+        ));
+        assert_eq!(up.get("ok"), Some(&Json::Bool(true)), "{up:?}");
+        let edited_edges = [
+            (0, 1, 1.0),
+            (0, 2, 1.0),
+            (1, 3, 1.0),
+            (2, 3, 1.0),
+            (1, 2, 2.0),
+        ];
+        let edited = hand_instance(4, &edited_edges, 2, &comp);
+        let plat = Platform::uniform(2, 1.0, 0.0);
+        assert_eq!(
+            up.get("length").and_then(Json::as_f64),
+            Some(find_critical_path(edited.bind(&plat)).length)
+        );
+        // post-edit traffic keeps serving correct answers off the handle
+        let (cp1, _) = engine.handle_line(&format!(r#"{{"op":"cp","id":"{id}"}}"#));
+        assert_eq!(
+            cp1.get("length").and_then(Json::as_f64),
+            Some(find_critical_path(edited.bind(&plat)).length)
+        );
+        let stats = engine.handle(Request::Stats);
+        let shapes = stats.get("shapes").expect("stats carry a shapes section");
+        // one fork-join verdict at intern, one general verdict at re-check
+        assert_eq!(
+            shapes
+                .get("verdicts")
+                .and_then(|v| v.get("fork_join"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(
+            shapes
+                .get("verdicts")
+                .and_then(|v| v.get("general"))
+                .and_then(Json::as_f64),
+            Some(1.0)
+        );
+        // generation 0 rode the fast path; the post-edit recompute fell
+        // back (delta-planned or general from scratch — either way, not sp)
+        assert!(
+            shapes.get("fast_path_hits").and_then(Json::as_f64) >= Some(1.0),
+            "{stats:?}"
+        );
+        assert!(
+            shapes.get("general_fallbacks").and_then(Json::as_f64) >= Some(1.0),
+            "{stats:?}"
+        );
     }
 
     #[test]

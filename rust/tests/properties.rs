@@ -26,8 +26,10 @@ use ceft::cp::ranks::{
     cpop_cp_from_priorities, cpop_cp_processor, cpop_priorities_into, rank_downward_into,
     rank_upward_into,
 };
+use ceft::cp::ceft::sp::{ceft_table_sp_into_dispatched, ceft_table_sp_rev_into_dispatched};
 use ceft::cp::workspace::Workspace;
-use ceft::graph::generator::{generate, Instance, RggParams};
+use ceft::graph::generator::{generate, generate_fork_join, generate_pipeline, Instance, RggParams};
+use ceft::graph::shape::{self, ShapeClass};
 use ceft::graph::TaskGraph;
 use ceft::model::{CostMatrix, InstanceRef, PlatformCtx};
 use ceft::platform::{CostModel, Platform};
@@ -1010,6 +1012,191 @@ fn prop_slack_nonnegative_and_zero_on_critical_path() {
                         step.task, slack[step.task]
                     ));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Recursive series/parallel composition over `(src, sink)`: a leaf is a
+/// direct edge, a series split routes through a fresh midpoint, a parallel
+/// split fans out 2–3 branches each through its own fresh midpoint (so the
+/// graph stays simple — no duplicate `(src, sink)` leaves). Every graph
+/// this builds is two-terminal series-parallel by construction.
+fn build_sp(
+    rng: &mut Xoshiro256,
+    src: usize,
+    sink: usize,
+    budget: &mut usize,
+    edges: &mut Vec<(usize, usize, f64)>,
+    next: &mut usize,
+) {
+    if *budget == 0 || rng.chance(0.35) {
+        edges.push((src, sink, rng.uniform(0.0, 5.0)));
+        return;
+    }
+    *budget -= 1;
+    if rng.chance(0.5) {
+        let mid = *next;
+        *next += 1;
+        build_sp(rng, src, mid, budget, edges, next);
+        build_sp(rng, mid, sink, budget, edges, next);
+    } else {
+        for _ in 0..rng.range_inclusive(2, 3) {
+            let mid = *next;
+            *next += 1;
+            build_sp(rng, src, mid, budget, edges, next);
+            build_sp(rng, mid, sink, budget, edges, next);
+        }
+    }
+}
+
+/// Random series-parallel instance: the explicit structured families
+/// (chain via width-1 fork-join, fork-join, pipeline) plus nested random
+/// series/parallel compositions, over varied platforms including P = 1.
+fn arb_sp_instance(rng: &mut Xoshiro256) -> (Instance, Platform, u64) {
+    let p = *rng.choose(&[1usize, 2, 4, 8]);
+    let plat = if rng.chance(0.5) {
+        Platform::uniform(p, rng.uniform(0.2, 5.0), rng.uniform(0.0, 2.0))
+    } else {
+        Platform::random_links(p, rng, 0.2, 5.0, 0.0, 2.0)
+    };
+    let model = CostModel::Classic {
+        beta: rng.uniform(0.0, 1.0),
+    };
+    let seed = rng.next_u64();
+    let ccr = *rng.choose(&[0.1, 1.0, 10.0]);
+    let beta_pct = rng.uniform(0.0, 100.0);
+    let inst = match rng.range_inclusive(0, 3) {
+        0 => generate_fork_join(1, rng.range_inclusive(1, 8), ccr, beta_pct, &model, &plat, seed),
+        1 => generate_fork_join(
+            rng.range_inclusive(2, 5),
+            rng.range_inclusive(1, 5),
+            ccr,
+            beta_pct,
+            &model,
+            &plat,
+            seed,
+        ),
+        2 => generate_pipeline(
+            rng.range_inclusive(1, 6),
+            rng.range_inclusive(2, 5),
+            ccr,
+            beta_pct,
+            &model,
+            &plat,
+            seed,
+        ),
+        _ => {
+            let mut edges = Vec::new();
+            let mut next = 2usize;
+            let mut budget = rng.range_inclusive(2, 12);
+            build_sp(rng, 0, 1, &mut budget, &mut edges, &mut next);
+            let classes = plat.num_classes();
+            let comp: Vec<f64> = (0..next * classes).map(|_| rng.uniform(0.5, 20.0)).collect();
+            Instance {
+                graph: TaskGraph::from_edges(next, &edges),
+                comp: CostMatrix::new(classes, comp),
+            }
+        }
+    };
+    (inst, plat, seed)
+}
+
+#[test]
+fn prop_sp_tree_dp_bit_identical_to_general() {
+    // The series-parallel tree-DP kernel must reproduce the general
+    // kernel bit for bit — values, backpointers (argmins), tie-breaking,
+    // and therefore every derived placement — in both orientations and
+    // under both lane dispatches, over recognizer-accepted random SP
+    // graphs and the explicit chain/fork-join/pipeline constructions,
+    // including P == 1 platforms.
+    check_property(
+        "sp tree-DP == general kernel (both orientations, both lanes)",
+        default_cases(),
+        0xCEF7_0030,
+        |rng| arb_sp_instance(rng),
+        |(inst, plat, seed)| {
+            let verdict = shape::recognize(&inst.graph);
+            let sp = verdict.sp.as_ref().ok_or_else(|| {
+                format!(
+                    "recognizer rejected a constructed SP graph (class {:?}, seed {seed})",
+                    verdict.class
+                )
+            })?;
+            let iref = inst.bind(plat);
+            let mut spw = Workspace::new();
+            let mut gw = Workspace::new();
+            for &d in &[KernelDispatch::Scalar, KernelDispatch::Simd] {
+                ceft_table_sp_into_dispatched(&mut spw, iref, sp, d);
+                ceft_table_into_dispatched(&mut gw, iref, d);
+                if spw.table != gw.table || spw.backptr != gw.backptr {
+                    return Err(format!("forward sp tree-DP diverged ({d:?}, seed {seed})"));
+                }
+                ceft_table_sp_rev_into_dispatched(&mut spw, iref, sp, d);
+                ceft_table_rev_into_dispatched(&mut gw, iref, d);
+                if spw.table != gw.table || spw.backptr != gw.backptr {
+                    return Err(format!("reverse sp tree-DP diverged ({d:?}, seed {seed})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shape_recognizer_sound() {
+    // Soundness of the SP verdict: the decomposition must re-expand to
+    // exactly the graph's edge set (every edge index once, none invented)
+    // and its derived order must be a source-to-sink permutation of all
+    // tasks. The N-graph — the canonical non-SP witness — must always
+    // come back General with no decomposition.
+    let ngraph = TaskGraph::from_edges(
+        4,
+        &[
+            (0, 1, 1.0),
+            (0, 2, 1.0),
+            (1, 2, 1.0),
+            (1, 3, 1.0),
+            (2, 3, 1.0),
+        ],
+    );
+    let nv = shape::recognize(&ngraph);
+    assert_eq!(nv.class, ShapeClass::General, "N-graph must classify General");
+    assert!(nv.sp.is_none(), "General verdict must carry no decomposition");
+    check_property(
+        "SP decomposition re-expands to the exact edge set",
+        default_cases(),
+        0xCEF7_0031,
+        |rng| arb_sp_instance(rng),
+        |(inst, _plat, seed)| {
+            let verdict = shape::recognize(&inst.graph);
+            let sp = verdict
+                .sp
+                .as_ref()
+                .ok_or_else(|| format!("recognizer rejected a constructed SP graph (seed {seed})"))?;
+            let m = inst.graph.num_edges();
+            let mut leaves = sp.leaf_edges();
+            leaves.sort_unstable();
+            if leaves != (0..m).collect::<Vec<_>>() {
+                return Err(format!(
+                    "decomposition re-expands to {} leaves over {m} edges (seed {seed})",
+                    leaves.len()
+                ));
+            }
+            let n = inst.graph.num_tasks();
+            if sp.order.len() != n {
+                return Err(format!("order covers {} of {n} tasks (seed {seed})", sp.order.len()));
+            }
+            let mut seen = vec![false; n];
+            for &t in &sp.order {
+                if t >= n || seen[t] {
+                    return Err(format!("order is not a permutation at task {t} (seed {seed})"));
+                }
+                seen[t] = true;
+            }
+            if sp.order[0] != sp.source || sp.order[n - 1] != sp.sink {
+                return Err(format!("order endpoints are not source/sink (seed {seed})"));
             }
             Ok(())
         },
