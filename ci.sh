@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # CI entry point: fmt + clippy gates, build, test, run the quickstart +
-# online-service examples, round-trip the serve/request protocol over TCP,
-# record loadgen perf to BENCH_service.json, and smoke the throughput bench.
+# online-service examples, round-trip the serve/request protocol over TCP
+# (including a fault-injected chaos pass), record loadgen perf — with the
+# overload/fault gates — to BENCH_service.json, and smoke the throughput
+# bench.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -96,6 +98,39 @@ echo "$UPDATE_RESP" | grep -q '"skipped":'
 wait "$SERVER_PID"
 trap - EXIT
 
+echo "== chaos serve/request round trip (fault injection over TCP) =="
+# A server armed with one injected kernel panic: the first uncached cp dies
+# mid-gather, the client's --retries turns the structured internal_panic
+# into a served answer, and the resilience counters record the whole story.
+CADDR="127.0.0.1:17078"
+./target/release/repro serve --addr "$CADDR" --fault-plan "seed=0,kernel_panic=1x1" &
+CHAOS_PID=$!
+trap 'kill $CHAOS_PID 2>/dev/null || true' EXIT
+for i in $(seq 1 50); do
+  if ./target/release/repro request --addr "$CADDR" --op ping >/dev/null 2>&1; then
+    break
+  fi
+  sleep 0.1
+done
+# the injected panic is retried into a real answer (exit 0 == served)
+./target/release/repro request --addr "$CADDR" --op cp --n 64 --p 4 --retries 3
+# an expired budget on an uncached instance is a structured refusal with a
+# backoff hint — and the connection/server survive it
+DRESP=$(./target/release/repro request --addr "$CADDR" --op cp --n 96 --p 4 --deadline-ms 0 || true)
+echo "$DRESP" | grep -q '"error":"deadline_exceeded"'
+echo "$DRESP" | grep -q '"retry_after_ms"'
+# the panic was caught exactly once and surfaced in stats + metrics
+STATS_RESP=$(./target/release/repro request --addr "$CADDR" --op stats)
+echo "$STATS_RESP" | grep -q '"resilience"'
+echo "$STATS_RESP" | grep -q '"panics_caught":1'
+echo "$STATS_RESP" | grep -q '"deadline_expired":1'
+./target/release/repro request --addr "$CADDR" --op metrics \
+  | grep -q 'ceft_resilience_panics_caught_total'
+# graceful drain: the faulted server still shuts down cleanly
+./target/release/repro request --addr "$CADDR" --op shutdown
+wait "$CHAOS_PID"
+trap - EXIT
+
 echo "== loadgen smoke (writes BENCH_service.json) =="
 # --platform-mix 3 exercises the per-platform panel cache: loadgen itself
 # fails unless panel_ctx_misses == 3 (panels built once per platform).
@@ -168,10 +203,14 @@ echo "== loadgen cp-share sweep (schedule batching, writes BENCH_service.json) =
 # read. --edit-share 0.25 adds in-place update traffic to every point:
 # loadgen exits nonzero unless updates are delta-served and every
 # delta-served update stays within the tail-decile row bound. This sweep
-# is the tracked BENCH_service.json record.
+# is the tracked BENCH_service.json record. --chaos appends the
+# overload/fault pass: loadgen exits nonzero unless availability stays
+# >= 99%, every surviving (and post-fault recomputed) answer is
+# bit-identical to a fault-free baseline, injected panics were caught and
+# retried, and the served p99 holds against the unshedded run.
 ./target/release/repro loadgen --n 128 --p 8 --count 48 --rate 2000 --duration 1 \
   --threads 2 --clients 8 --batch-window 8 --cp-share 0.0,0.25,0.5,1.0 \
-  --edit-share 0.25
+  --edit-share 0.25 --chaos
 grep -q '"sweep":"cp_share"' BENCH_service.json
 # every point must carry the table-cache counters: the memoized CEFT-table
 # layer is what both cp and schedule traffic now batch through
@@ -212,6 +251,23 @@ if ! grep -q '"per_shape_p99_us"' BENCH_service.json; then
   echo "BENCH_service.json lacks the per_shape_p99_us rows"
   exit 1
 fi
+# The overload/fault record: every entry carries the resilience counters,
+# and the chaos pass must have passed its own gates with both bit-identity
+# checks green — a faulted past that leaves numeric residue is the exact
+# regression this section exists to catch.
+for field in '"availability_pct"' '"shed_requests"' '"deadline_expired"' '"panics_caught"'; do
+  if ! grep -q "$field" BENCH_service.json; then
+    echo "BENCH_service.json lacks the resilience field $field"
+    exit 1
+  fi
+done
+if ! grep -q '"chaos"' BENCH_service.json; then
+  echo "BENCH_service.json lacks the chaos section (overload/fault pass unrecorded)"
+  exit 1
+fi
+grep -q '"chaos_bit_identical":true' BENCH_service.json
+grep -q '"post_fault_bit_identical":true' BENCH_service.json
+grep -q '"gates_passed":true' BENCH_service.json
 
 echo "== service throughput bench (smoke) =="
 CEFT_BENCH_FAST=1 cargo bench --bench service_throughput

@@ -33,6 +33,13 @@ fn main() {
     thread_counts.dedup();
 
     let lines = request_lines(32);
+    // the same memo-hit mix with a generous budget on every request: the
+    // per-request cost of the deadline/admission checks on the hot path
+    // (a hit must stay a hit, deadline or not)
+    let deadlined: Vec<String> = lines
+        .iter()
+        .map(|l| l.replacen('{', r#"{"deadline_ms":60000,"#, 1))
+        .collect();
     for &threads in &thread_counts {
         // cached: warm every entry once, then measure pure memo-hit serving
         let engine = Engine::new(EngineConfig {
@@ -46,6 +53,13 @@ fn main() {
             Some(lines.len() as u64),
             || {
                 black_box(engine.handle_batch(&lines));
+            },
+        );
+        b.case_with_elements(
+            &format!("cached_deadlined/t{threads}"),
+            Some(deadlined.len() as u64),
+            || {
+                black_box(engine.handle_batch(&deadlined));
             },
         );
 

@@ -12,10 +12,15 @@
 //! * `repro runtime-check` — load the PJRT artifacts and cross-validate the
 //!   accelerated CEFT backend against the pure-rust one.
 //! * `repro serve` — run the online scheduling engine (stdin/stdout or TCP);
-//!   `--metrics-addr` adds a Prometheus-style HTTP metrics endpoint.
+//!   `--metrics-addr` adds a Prometheus-style HTTP metrics endpoint,
+//!   `--fault-plan` arms seeded fault injection (kernel panics, stage
+//!   delays, connection drops) and `--admission-budget` pins the overload
+//!   governor's per-shard miss budget.
 //! * `repro request` — send one protocol request to a running server
 //!   (`--op trace` pretty-prints the per-stage latency tables, `--op
-//!   metrics` dumps the text exposition).
+//!   metrics` dumps the text exposition); `--deadline-ms` attaches a
+//!   request budget and `--retries` retries transport errors and
+//!   shed/deadline/panic refusals with jittered exponential backoff.
 //! * `repro loadgen` — replay generated instances against an in-process
 //!   engine at a target rate; reports requests/sec, p50/p95/p99 per-request
 //!   latency, cache hit rate, panel-context counters
@@ -34,7 +39,13 @@
 //!   layered|fork-join|pipeline|mix` picks the instance family —
 //!   structured families route through the series-parallel tree-DP fast
 //!   path, and the report records `shape_fast_path_hits` /
-//!   `shape_general_fallbacks` plus per-shape p99 latency.
+//!   `shape_general_fallbacks` plus per-shape p99 latency. `--chaos`
+//!   appends an overload/fault pass — seeded fault injection plus
+//!   per-request deadlines at 4× dispatch oversubscription against a
+//!   fault-free baseline twin — gated on availability ≥ 99%, bit-identical
+//!   surviving (and post-fault) results, and a served-p99 ceiling, with
+//!   `availability_pct` / `shed_requests` / `deadline_expired` /
+//!   `panics_caught` recorded in every report entry.
 
 use ceft::coordinator::{Coordinator, EXPERIMENT_IDS};
 use ceft::cp::ceft::find_critical_path;
@@ -43,7 +54,7 @@ use ceft::exp::cells::{grid, Scale, Workload};
 use ceft::exp::run::{build_instance, run_cell, ALGOS};
 use ceft::graph::io;
 use ceft::sched::{Algorithm, Scheduler as _};
-use ceft::service::{serve_stdio, Engine, EngineConfig, Request, Server, Target};
+use ceft::service::{serve_stdio, Engine, EngineConfig, FaultPlan, Request, Server, Target};
 use ceft::util::cli::Args;
 use ceft::util::json::Json;
 use ceft::util::pool;
@@ -317,15 +328,41 @@ fn cmd_serve(tokens: &[String]) -> i32 {
             "metrics-addr",
             None,
             "HTTP listen address for Prometheus-style metrics (e.g. 127.0.0.1:9077)",
+        )
+        .opt(
+            "admission-budget",
+            None,
+            "pin the per-shard in-flight miss budget (default: p99-governed)",
+        )
+        .opt(
+            "fault-plan",
+            None,
+            "seeded fault-injection plan, e.g. seed=1,kernel_panic=3x2,delay=7:40x3,conn_drop=5x1 \
+             (also honours CEFT_FAULT)",
         );
     let p = parse_or_exit(args, tokens);
     let cache_capacity: usize = num_or_exit(&p, "cache-capacity", None);
+    // `None` lets the engine fall back to the CEFT_FAULT environment switch
+    let fault = match p.get("fault-plan") {
+        Some(spec) => match FaultPlan::parse(spec) {
+            Ok(plan) => Some(plan),
+            Err(e) => {
+                eprintln!("bad --fault-plan: {e}");
+                return 2;
+            }
+        },
+        None => None,
+    };
     let config = EngineConfig {
         cache_capacity,
         intern_capacity: cache_capacity,
         threads: num_or_exit(&p, "threads", Some(pool::default_threads())),
         batch_window: num_or_exit(&p, "batch-window", None),
         telemetry: None,
+        admission_budget: p
+            .get("admission-budget")
+            .map(|_| num_or_exit(&p, "admission-budget", None)),
+        fault,
     };
     let engine = Arc::new(Engine::new(config));
     if let Some(maddr) = p.get("metrics-addr") {
@@ -412,6 +449,55 @@ fn send_request(addr: &str, line: &str) -> Result<String, String> {
     Ok(resp.trim_end().to_string())
 }
 
+/// Is this response a structured refusal the client should retry? Shed and
+/// deadline refusals clear once the queue drains; `internal_panic` means a
+/// co-batched fault took this request down with it — the work itself is
+/// fine on a fresh attempt.
+fn retryable_refusal(resp: &str) -> Option<u64> {
+    let j = Json::parse(resp).ok()?;
+    if j.get("ok") != Some(&Json::Bool(false)) {
+        return None;
+    }
+    match j.get("error").and_then(Json::as_str) {
+        Some("shed") | Some("deadline_exceeded") | Some("internal_panic") => Some(
+            j.get("retry_after_ms")
+                .and_then(Json::as_f64)
+                .map(|ms| ms as u64)
+                .unwrap_or(0),
+        ),
+        _ => None,
+    }
+}
+
+/// Deterministically jittered exponential backoff: 20ms · 2^attempt plus a
+/// spread derived from the attempt index, floored by the server's
+/// `retry_after_ms` hint when one came back.
+fn backoff_for(attempt: u32, hint_ms: u64) -> std::time::Duration {
+    let base = 20u64.saturating_mul(1 << attempt.min(6));
+    let jitter = (attempt as u64).wrapping_mul(7919) % (base / 2 + 1);
+    std::time::Duration::from_millis((base + jitter).max(hint_ms))
+}
+
+/// [`send_request`] plus a bounded retry loop over transport errors
+/// (connection drops) and retryable structured refusals.
+fn send_request_retrying(addr: &str, line: &str, retries: u32) -> Result<String, String> {
+    let mut attempt = 0u32;
+    loop {
+        let (outcome, hint_ms) = match send_request(addr, line) {
+            Ok(resp) => match retryable_refusal(&resp) {
+                Some(hint) => (Ok(resp), Some(hint)),
+                None => return Ok(resp),
+            },
+            Err(e) => (Err(e), Some(0)),
+        };
+        if attempt >= retries {
+            return outcome;
+        }
+        std::thread::sleep(backoff_for(attempt, hint_ms.unwrap_or(0)));
+        attempt += 1;
+    }
+}
+
 fn cmd_request(tokens: &[String]) -> i32 {
     let args = instance_args("repro request", "send one request to a running `repro serve`")
         .opt("addr", Some("127.0.0.1:7077"), "server address")
@@ -441,9 +527,24 @@ fn cmd_request(tokens: &[String]) -> i32 {
             None,
             "for --op update: JSON array of edit objects, e.g. \
              '[{\"edit\":\"task_cost\",\"task\":3,\"costs\":[2.0,1.5]}]'",
+        )
+        .opt(
+            "deadline-ms",
+            None,
+            "for cp/schedule/update: relative deadline in milliseconds",
+        )
+        .opt(
+            "retries",
+            Some("0"),
+            "retry transport errors and shed/deadline_exceeded/internal_panic refusals \
+             with jittered exponential backoff",
         );
     let parsed = parse_or_exit(args, tokens);
     let op = parsed.req("op").to_string();
+    let deadline_ms: Option<u64> = parsed
+        .get("deadline-ms")
+        .map(|_| num_or_exit(&parsed, "deadline-ms", None));
+    let retries: u32 = num_or_exit(&parsed, "retries", None);
     let parse_id = |s: &str| match ceft::service::protocol::parse_handle(s) {
         Ok(id) => id,
         Err(e) => {
@@ -493,6 +594,7 @@ fn cmd_request(tokens: &[String]) -> i32 {
         "cp" => Request::CriticalPath {
             target: target(),
             slack: parsed.req("slack") == "true",
+            deadline_ms,
         },
         "update" => {
             let id = match parsed.get("id") {
@@ -530,7 +632,11 @@ fn cmd_request(tokens: &[String]) -> i32 {
                     return 2;
                 }
             };
-            Request::Update { id, edits }
+            Request::Update {
+                id,
+                edits,
+                deadline_ms,
+            }
         }
         "schedule" => {
             let algorithm = match Algorithm::parse(parsed.req("algorithm")) {
@@ -543,6 +649,7 @@ fn cmd_request(tokens: &[String]) -> i32 {
             Request::Schedule {
                 algorithm,
                 target: target(),
+                deadline_ms,
             }
         }
         other => {
@@ -551,7 +658,7 @@ fn cmd_request(tokens: &[String]) -> i32 {
         }
     };
     let line = ceft::service::request_to_json(&req).to_string();
-    match send_request(parsed.req("addr"), &line) {
+    match send_request_retrying(parsed.req("addr"), &line, retries) {
         Ok(resp) => match Json::parse(&resp) {
             Ok(j) if j.get("ok") == Some(&Json::Bool(true)) => {
                 // human-oriented renderings for the observability ops;
@@ -734,6 +841,27 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         "json-out",
         Some("BENCH_service.json"),
         "machine-readable report path (\"none\" to disable)",
+    )
+    .flag(
+        "chaos",
+        "after the replay, run an overload/fault pass: seeded fault injection \
+         + per-request deadlines at 4x dispatch oversubscription, gated on \
+         availability and bit-identical surviving results",
+    )
+    .opt(
+        "fault-plan",
+        Some("seed=1,kernel_panic=1x2,delay=3:30x2"),
+        "fault-injection plan for the --chaos pass",
+    )
+    .opt(
+        "deadline-ms",
+        Some("100"),
+        "per-request deadline carried by the --chaos pass",
+    )
+    .opt(
+        "retries",
+        Some("4"),
+        "per-request retry budget for internal_panic refusals under --chaos",
     );
     let parsed = parse_or_exit(args, tokens);
     let count: usize = num_or_exit::<usize>(&parsed, "count", None).max(1);
@@ -893,6 +1021,19 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         .to_string();
         submit_lines.push(line);
     }
+    // One extra, never-replayed instance for the chaos pass's deadline
+    // probe: a guaranteed cache miss, so an already-expired budget is
+    // refused at the cache probe instead of being served as a hit.
+    let probe_submit = {
+        let mut cell = base;
+        cell.index = base.index + count as u64;
+        let (platform, inst) = build_instance(&cell);
+        ceft::service::request_to_json(&Request::Submit {
+            instance: inst,
+            platform: Some(platform),
+        })
+        .to_string()
+    };
 
     let sweep = cp_shares.len() > 1;
     let mut points: Vec<(f64, LoadgenPoint)> = Vec::with_capacity(cp_shares.len());
@@ -958,9 +1099,35 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         }
     }
 
+    // Overload/fault pass: its own engines (a fault-free baseline and a
+    // faulted twin), so the chaos traffic cannot pollute the perf points
+    // above. Runs at the first sweep point's mix.
+    let mut chaos_failed = false;
+    let mut chaos_entry: Option<Json> = None;
+    if parsed.is_set("chaos") {
+        let fault_spec = parsed.req("fault-plan");
+        let chaos_deadline: u64 = num_or_exit(&parsed, "deadline-ms", None);
+        let chaos_retries: u32 = num_or_exit(&parsed, "retries", None);
+        match chaos_point(
+            &cfg,
+            &submit_lines,
+            &probe_submit,
+            fault_spec,
+            chaos_deadline,
+            chaos_retries,
+            cp_shares[0],
+        ) {
+            Ok((entry, failed)) => {
+                chaos_failed = failed;
+                chaos_entry = Some(entry);
+            }
+            Err(code) => return code,
+        }
+    }
+
     let json_out = parsed.req("json-out");
     if json_out != "none" {
-        let report = if sweep {
+        let mut report = if sweep {
             Json::obj(vec![
                 ("bench", Json::Str("repro loadgen".to_string())),
                 ("sweep", Json::Str("cp_share".to_string())),
@@ -974,6 +1141,11 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
         } else {
             points[0].1.entry.clone()
         };
+        if let Some(chaos) = &chaos_entry {
+            if let Json::Obj(m) = &mut report {
+                m.insert("chaos".to_string(), chaos.clone());
+            }
+        }
         match std::fs::write(json_out, format!("{}\n", report.to_string())) {
             Ok(()) => println!("wrote {json_out}"),
             Err(e) => {
@@ -982,7 +1154,10 @@ fn cmd_loadgen(tokens: &[String]) -> i32 {
             }
         }
     }
-    if points.iter().any(|(_, p)| p.failures > 0) || (sweep && batching_possible && !floor_ok) {
+    if points.iter().any(|(_, p)| p.failures > 0)
+        || (sweep && batching_possible && !floor_ok)
+        || chaos_failed
+    {
         1
     } else {
         0
@@ -1007,6 +1182,8 @@ fn loadgen_point(
         // inherit CEFT_TELEMETRY: the same binary serves as both the
         // telemetry smoke (env on) and the zero-overhead check (env off)
         telemetry: None,
+        admission_budget: None,
+        fault: None,
     });
     let mut ids = Vec::with_capacity(cfg.count);
     for line in submit_lines {
@@ -1038,11 +1215,13 @@ fn loadgen_point(
                 Request::CriticalPath {
                     target: Target::Handle(id),
                     slack: false,
+                    deadline_ms: None,
                 }
             } else {
                 Request::Schedule {
                     algorithm: cfg.algo,
                     target: Target::Handle(id),
+                    deadline_ms: None,
                 }
             };
             ceft::service::request_to_json(&req).to_string()
@@ -1064,6 +1243,7 @@ fn loadgen_point(
                     task: spec.task,
                     costs: costs.clone(),
                 }],
+                deadline_ms: None,
             };
             lines.push(ceft::service::request_to_json(&req).to_string());
             line_shapes.push(inst_shapes[spec.index]);
@@ -1301,6 +1481,13 @@ fn loadgen_point(
             .and_then(Json::as_f64)
             .unwrap_or(0.0)
     };
+    let resil = |k: &str| -> f64 {
+        stats
+            .get("resilience")
+            .and_then(|c| c.get(k))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
     let shape_fast_path_hits = shapes_counter("fast_path_hits");
     let shape_general_fallbacks = shapes_counter("general_fallbacks");
     println!(
@@ -1393,6 +1580,8 @@ fn loadgen_point(
             threads: cfg.threads_cfg,
             batch_window: cfg.batch_window,
             telemetry: Some(telemetry),
+            admission_budget: None,
+            fault: None,
         });
         for line in submit_lines {
             let (resp, _) = eng.handle_line(line);
@@ -1490,6 +1679,18 @@ fn loadgen_point(
         ("ab_rps_on", Json::Num(ab_rps_on)),
         ("ab_rps_off", Json::Num(ab_rps_off)),
         ("telemetry_overhead_pct", Json::Num(overhead_pct)),
+        // Resilience counters, always present so overload gates can grep
+        // any report: all zero on a fault-free, undeadlined replay, and a
+        // plain replay counts every ok response as available.
+        (
+            "availability_pct",
+            Json::Num((sent - failures) as f64 / sent as f64 * 100.0),
+        ),
+        ("shed_requests", Json::Num(resil("shed_requests"))),
+        ("deadline_expired", Json::Num(resil("deadline_expired"))),
+        ("panics_caught", Json::Num(resil("panics_caught"))),
+        ("queue_rejects", Json::Num(resil("queue_rejects"))),
+        ("retries", Json::Num(0.0)),
     ]);
     Ok(LoadgenPoint {
         entry,
@@ -1497,6 +1698,374 @@ fn loadgen_point(
         batch_efficiency,
         failures,
     })
+}
+
+/// The `--chaos` overload/fault pass. Three phases on two engines:
+///
+/// 1. a fault-free baseline computes the reference bits for every request
+///    in the mix and its p99 at the same 4× oversubscribed dispatch width;
+/// 2. a faulted twin replays the mix with per-request deadlines — injected
+///    kernel panics are retried with jittered backoff, shed/deadline
+///    refusals count as available-with-error, every surviving answer must
+///    be bit-identical to the baseline, and an expired-budget probe against
+///    a never-cached instance pins the deadline path deterministically;
+/// 3. the plan is disarmed, the caches and interned instances dropped, and
+///    the whole mix recomputed from scratch on the SAME engine — a faulted
+///    past must leave no numeric residue.
+///
+/// Returns the chaos report entry plus whether any gate failed (the report
+/// is still written either way so the failure is inspectable).
+fn chaos_point(
+    cfg: &LoadgenCfg,
+    submit_lines: &[String],
+    probe_submit: &str,
+    fault_spec: &str,
+    deadline_ms: u64,
+    retries: u32,
+    cp_share: f64,
+) -> Result<(Json, bool), i32> {
+    let plan = match FaultPlan::parse(fault_spec) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("bad --fault-plan: {e}");
+            return Err(2);
+        }
+    };
+    // 4× the worker pool: enough dispatchers that misses pile up past the
+    // saturation gate and the queue actually forms under injected delays
+    let clients = cfg.threads_cfg.max(1) * 4;
+    let mk_engine = |fault: Option<FaultPlan>| {
+        Engine::new(EngineConfig {
+            cache_capacity: cfg.cache_capacity,
+            intern_capacity: cfg.cache_capacity.max(cfg.count + 1),
+            threads: cfg.threads_cfg,
+            batch_window: cfg.batch_window,
+            telemetry: None,
+            admission_budget: None,
+            fault,
+        })
+    };
+    let submit_all = |eng: &Engine| -> Result<Vec<u64>, i32> {
+        let mut ids = Vec::with_capacity(submit_lines.len());
+        for line in submit_lines {
+            let (resp, _) = eng.handle_line(line);
+            match resp
+                .get("id")
+                .and_then(Json::as_str)
+                .and_then(|id| ceft::service::protocol::parse_handle(id).ok())
+            {
+                Some(h) => ids.push(h),
+                None => {
+                    eprintln!("chaos submit failed: {}", resp.to_string());
+                    return Err(1);
+                }
+            }
+        }
+        Ok(ids)
+    };
+    let request_lines = |ids: &[u64], deadline: Option<u64>| -> Vec<String> {
+        let cp_count = ((ids.len() as f64) * cp_share).ceil() as usize;
+        ids.iter()
+            .enumerate()
+            .map(|(i, &id)| {
+                let req = if i < cp_count {
+                    Request::CriticalPath {
+                        target: Target::Handle(id),
+                        slack: false,
+                        deadline_ms: deadline,
+                    }
+                } else {
+                    Request::Schedule {
+                        algorithm: cfg.algo,
+                        target: Target::Handle(id),
+                        deadline_ms: deadline,
+                    }
+                };
+                ceft::service::request_to_json(&req).to_string()
+            })
+            .collect()
+    };
+    // the f64 the request exists to produce; bit-compared, not
+    // epsilon-compared — the determinism contract is exact
+    let value_bits = |resp: &Json| -> Option<u64> {
+        resp.get("length")
+            .or_else(|| resp.get("makespan"))
+            .and_then(Json::as_f64)
+            .map(f64::to_bits)
+    };
+
+    // Phase 1 — fault-free baseline: reference bits (serial warm pass),
+    // then the unshedded p99 at the same dispatch width.
+    let baseline = mk_engine(None);
+    let ids = submit_all(&baseline)?;
+    let plain = request_lines(&ids, None);
+    let mut expected: Vec<u64> = Vec::with_capacity(plain.len());
+    for line in &plain {
+        let (resp, _) = baseline.handle_line(line);
+        match value_bits(&resp) {
+            Some(bits) => expected.push(bits),
+            None => {
+                eprintln!("chaos baseline request failed: {}", resp.to_string());
+                return Err(1);
+            }
+        }
+    }
+    let rounds = (512 / plain.len().max(1)).max(4);
+    let mut base_lat: Vec<f64> = Vec::new();
+    for _ in 0..rounds {
+        let timed = pool::parallel_map(&plain, clients, |_, line| {
+            let t0 = std::time::Instant::now();
+            let (resp, _) = baseline.handle_line(line);
+            (
+                resp.get("ok") == Some(&Json::Bool(true)),
+                t0.elapsed().as_secs_f64(),
+            )
+        });
+        for (ok, secs) in timed {
+            if !ok {
+                eprintln!("chaos baseline replay failed");
+                return Err(1);
+            }
+            base_lat.push(secs);
+        }
+    }
+
+    // Phase 2 — the faulted twin under deadlines. Round 0 absorbs the cold
+    // misses (and, with the default plan, the injected panics); its
+    // latencies are excluded from the p99 comparison but every round counts
+    // toward availability.
+    let chaos = mk_engine(Some(plan));
+    let chaos_ids = submit_all(&chaos)?;
+    if chaos_ids != ids {
+        // handles are structural hashes; a mismatch means interning broke
+        eprintln!("chaos: replay handles diverged from the baseline's");
+        return Err(1);
+    }
+    let deadlined = request_lines(&chaos_ids, Some(deadline_ms));
+    let mut served: u64 = 0;
+    let mut refused: u64 = 0; // shed + deadline_exceeded: available-with-error
+    let mut unavailable: u64 = 0;
+    let mut total_retries: u64 = 0;
+    let mut chaos_bit_identical = true;
+    let mut served_lat: Vec<f64> = Vec::new();
+    for round in 0..rounds {
+        let results = pool::parallel_map(&deadlined, clients, |_, line| {
+            let mut attempts = 0u32;
+            loop {
+                let t0 = std::time::Instant::now();
+                let (resp, _) = chaos.handle_line(line);
+                let secs = t0.elapsed().as_secs_f64();
+                if resp.get("ok") == Some(&Json::Bool(true)) {
+                    return (Some(resp), secs, attempts, false);
+                }
+                let err = resp.get("error").and_then(Json::as_str).unwrap_or("");
+                // shed / deadline refusals are the overload design working:
+                // available-with-error, no retry; a panic-poisoned answer
+                // is retried with backoff
+                if err == "shed" || err == "deadline_exceeded" {
+                    return (None, secs, attempts, false);
+                }
+                if err == "internal_panic" && attempts < retries {
+                    let hint = resp
+                        .get("retry_after_ms")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0) as u64;
+                    std::thread::sleep(backoff_for(attempts, hint));
+                    attempts += 1;
+                    continue;
+                }
+                return (None, secs, attempts, true);
+            }
+        });
+        for (i, (resp, secs, attempts, exhausted)) in results.into_iter().enumerate() {
+            total_retries += attempts as u64;
+            match resp {
+                Some(resp) => {
+                    served += 1;
+                    if round > 0 {
+                        served_lat.push(secs);
+                    }
+                    if value_bits(&resp) != Some(expected[i]) {
+                        chaos_bit_identical = false;
+                    }
+                }
+                None if exhausted => unavailable += 1,
+                None => refused += 1,
+            }
+        }
+    }
+    // Deadline probe: a fresh, never-computed instance with an
+    // already-expired budget — a deterministic deadline_exceeded no matter
+    // how the replay's races landed.
+    let (resp, _) = chaos.handle_line(probe_submit);
+    let probe_id = match resp
+        .get("id")
+        .and_then(Json::as_str)
+        .and_then(|id| ceft::service::protocol::parse_handle(id).ok())
+    {
+        Some(h) => h,
+        None => {
+            eprintln!("chaos probe submit failed: {}", resp.to_string());
+            return Err(1);
+        }
+    };
+    let probe_line = ceft::service::request_to_json(&Request::CriticalPath {
+        target: Target::Handle(probe_id),
+        slack: false,
+        deadline_ms: Some(0),
+    })
+    .to_string();
+    let (resp, _) = chaos.handle_line(&probe_line);
+    if resp.get("error").and_then(Json::as_str) != Some("deadline_exceeded") {
+        eprintln!(
+            "chaos: expired-budget probe was not refused with deadline_exceeded: {}",
+            resp.to_string()
+        );
+        return Err(1);
+    }
+    refused += 1;
+
+    let stats = chaos.stats_json();
+    let resil = |k: &str| -> f64 {
+        stats
+            .get("resilience")
+            .and_then(|c| c.get(k))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    let (fired_panics, fired_delays, fired_drops) =
+        chaos.fault().map(|f| f.fired()).unwrap_or((0, 0, 0));
+
+    // Phase 3 — post-fault determinism on the same engine: disarm, drop
+    // everything (results AND interned instances), recompute from scratch.
+    if let Some(f) = chaos.fault() {
+        f.disarm();
+    }
+    let (resp, _) = chaos.handle_line(r#"{"op":"clear"}"#);
+    if resp.get("ok") != Some(&Json::Bool(true)) {
+        eprintln!("chaos: clear failed: {}", resp.to_string());
+        return Err(1);
+    }
+    let replay_ids = submit_all(&chaos)?;
+    let replay = request_lines(&replay_ids, None);
+    let mut post_fault_bit_identical = true;
+    for (i, line) in replay.iter().enumerate() {
+        let (resp, _) = chaos.handle_line(line);
+        if value_bits(&resp) != Some(expected[i]) {
+            post_fault_bit_identical = false;
+        }
+    }
+
+    let total = served + refused + unavailable;
+    let availability_pct = (total - unavailable) as f64 / total.max(1) as f64 * 100.0;
+    base_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    served_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let baseline_p99 = if base_lat.is_empty() {
+        0.0
+    } else {
+        ceft::util::stats::percentile_sorted(&base_lat, 99.0)
+    };
+    let served_p99 = if served_lat.is_empty() {
+        0.0
+    } else {
+        ceft::util::stats::percentile_sorted(&served_lat, 99.0)
+    };
+
+    let mut failed = false;
+    {
+        let mut gate = |ok: bool, msg: String| {
+            if !ok {
+                eprintln!("chaos gate failed: {msg}");
+                failed = true;
+            }
+        };
+        gate(
+            fired_panics + fired_delays + fired_drops > 0,
+            "the fault plan never fired — the chaos pass was vacuous".to_string(),
+        );
+        gate(
+            availability_pct >= 99.0,
+            format!("availability {availability_pct:.2}% < 99%"),
+        );
+        gate(
+            chaos_bit_identical,
+            "a surviving answer diverged from the fault-free baseline".to_string(),
+        );
+        gate(
+            post_fault_bit_identical,
+            "the post-fault from-scratch replay diverged from the baseline".to_string(),
+        );
+        gate(
+            resil("deadline_expired") > 0.0,
+            "no deadline ever expired (probe included)".to_string(),
+        );
+        if fired_panics > 0 {
+            gate(
+                resil("panics_caught") > 0.0,
+                "injected kernel panics were not caught".to_string(),
+            );
+            gate(
+                total_retries > 0,
+                "panicked requests were never retried".to_string(),
+            );
+        }
+        // served tail no worse than the unshedded baseline's, with a small
+        // absolute floor so µs-scale hot-cache noise cannot trip the ratio
+        gate(
+            served_p99 <= baseline_p99 * 1.5 + 200e-6,
+            format!(
+                "served p99 {:.1}µs blew past the unshedded baseline's {:.1}µs",
+                served_p99 * 1e6,
+                baseline_p99 * 1e6
+            ),
+        );
+    }
+
+    println!(
+        "chaos: {total} requests at {clients} clients — {served} served, \
+         {refused} refused (shed/deadline), {unavailable} unavailable, \
+         {total_retries} retries; availability {availability_pct:.2}%"
+    );
+    println!(
+        "chaos: injected {fired_panics} panics / {fired_delays} delays / \
+         {fired_drops} drops; caught {} panics, {} deadline-expired, {} shed; \
+         served p99 {:.1}µs vs baseline {:.1}µs; bit-identical: chaos {}, \
+         post-fault {}",
+        resil("panics_caught"),
+        resil("deadline_expired"),
+        resil("shed_requests"),
+        served_p99 * 1e6,
+        baseline_p99 * 1e6,
+        chaos_bit_identical,
+        post_fault_bit_identical
+    );
+    let entry = Json::obj(vec![
+        ("fault_plan", Json::Str(fault_spec.to_string())),
+        ("deadline_ms", Json::Num(deadline_ms as f64)),
+        ("clients", Json::Num(clients as f64)),
+        ("requests", Json::Num(total as f64)),
+        ("served", Json::Num(served as f64)),
+        ("refused", Json::Num(refused as f64)),
+        ("unavailable", Json::Num(unavailable as f64)),
+        ("retries", Json::Num(total_retries as f64)),
+        ("availability_pct", Json::Num(availability_pct)),
+        ("shed_requests", Json::Num(resil("shed_requests"))),
+        ("deadline_expired", Json::Num(resil("deadline_expired"))),
+        ("panics_caught", Json::Num(resil("panics_caught"))),
+        ("queue_rejects", Json::Num(resil("queue_rejects"))),
+        ("injected_kernel_panics", Json::Num(fired_panics as f64)),
+        ("injected_delays", Json::Num(fired_delays as f64)),
+        ("injected_conn_drops", Json::Num(fired_drops as f64)),
+        ("chaos_bit_identical", Json::Bool(chaos_bit_identical)),
+        (
+            "post_fault_bit_identical",
+            Json::Bool(post_fault_bit_identical),
+        ),
+        ("served_p99_us", Json::Num(served_p99 * 1e6)),
+        ("baseline_p99_us", Json::Num(baseline_p99 * 1e6)),
+        ("gates_passed", Json::Bool(!failed)),
+    ]);
+    Ok((entry, failed))
 }
 
 fn cmd_runtime_check(tokens: &[String]) -> i32 {

@@ -24,7 +24,7 @@
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError, Weak};
 use std::time::Instant;
 
 use super::hist::{Hist, HistSnapshot};
@@ -208,6 +208,14 @@ struct RegistryState {
 
 type Registry = Mutex<RegistryState>;
 
+/// Lock the registry, recovering from poison: the state is a pair of
+/// `Vec<Arc<_>>` pushes, so a thread that panicked mid-lock left nothing
+/// half-updated worth discarding — and telemetry must never take the
+/// engine down with it.
+fn lock_registry(reg: &Registry) -> MutexGuard<'_, RegistryState> {
+    reg.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 /// Thread-local lease on a sink. Dropping it (thread exit or cache
 /// eviction) returns the sink to the recorder's free list so the next
 /// fresh thread reuses it instead of growing the registry.
@@ -219,9 +227,7 @@ struct SinkLease {
 impl Drop for SinkLease {
     fn drop(&mut self) {
         if let Some(reg) = self.registry.upgrade() {
-            if let Ok(mut st) = reg.lock() {
-                st.free.push(self.sink.clone());
-            }
+            lock_registry(&reg).free.push(self.sink.clone());
         }
     }
 }
@@ -274,7 +280,7 @@ impl Recorder {
                 return lease.sink.clone();
             }
             let sink = {
-                let mut st = self.registry.lock().unwrap();
+                let mut st = lock_registry(&self.registry);
                 st.free.pop().unwrap_or_else(|| {
                     let s = Arc::new(ThreadSink::new());
                     st.all.push(s.clone());
@@ -316,7 +322,7 @@ impl Recorder {
     /// slowest / most recent completed traces (deduplicated across the
     /// ring and slow logs by sequence number).
     pub fn snapshot(&self) -> TelemetrySnapshot {
-        let sinks: Vec<Arc<ThreadSink>> = self.registry.lock().unwrap().all.clone();
+        let sinks: Vec<Arc<ThreadSink>> = lock_registry(&self.registry).all.clone();
         let mut stages: Vec<HistSnapshot> = (0..NUM_STAGES).map(|_| HistSnapshot::empty()).collect();
         let mut records: Vec<TraceRecord> = Vec::new();
         for sink in &sinks {

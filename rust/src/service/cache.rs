@@ -8,6 +8,27 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::hash::Hash;
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Lock a mutex, recovering from poisoning instead of propagating it.
+///
+/// A mutex is poisoned when a thread panicked while holding it. Every lock
+/// in `service` guards state with its own consistency story (caches can
+/// only go stale-empty, in-flight tables are cleaned up by the panicking
+/// path's unwind contract), so the right response to poison is to keep
+/// serving with the data as-is — one caught panic must not turn every
+/// later request on the engine into an error. See
+/// EXPERIMENTS.md §Overload & fault model.
+pub(crate) fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`] with the same poison-recovery policy as
+/// [`lock_clean`]: a panic elsewhere while we slept must not kill this
+/// waiter, whose wake condition is re-checked by the caller's loop anyway.
+pub(crate) fn wait_clean<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Memoization key: structural hashes of the problem parts plus the
 /// algorithm id ([`crate::sched::Algorithm::id`], or the critical-path
@@ -433,6 +454,23 @@ mod tests {
         };
         agg.merge(&c.stats());
         assert_eq!(agg.cp_schedule_shares, 5, "shares merge additively");
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_with_data_intact() {
+        use std::sync::{Arc, Mutex};
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let joined = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(joined.is_err());
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_clean(&m), 7, "data survives the poison flag");
+        *lock_clean(&m) = 8;
+        assert_eq!(*lock_clean(&m), 8, "lock stays usable after recovery");
     }
 
     #[test]

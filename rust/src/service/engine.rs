@@ -133,7 +133,8 @@ use crate::model::{CostMatrix, InstanceRef, PlatformCtx};
 use crate::obs::{self, Recorder, RequestTrace, Stage};
 use crate::platform::Platform;
 use crate::sched::{Algorithm, Schedule, TableDir};
-use crate::service::cache::{CacheKey, CacheStats, LruCache};
+use crate::service::cache::{lock_clean, wait_clean, CacheKey, CacheStats, LruCache};
+use crate::service::fault::{FaultPlan, INJECTED_PANIC};
 use crate::service::hashing;
 use crate::service::protocol::{self, Request, Target};
 use crate::util::json::Json;
@@ -141,9 +142,9 @@ use crate::util::pool;
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Algorithm-slot marker for critical-path cache entries. Real algorithm
 /// ids ([`Algorithm::id`]) are small; this can never collide.
@@ -174,7 +175,7 @@ const MAX_REQUEST_BYTES: u64 = 16 * 1024 * 1024;
 const MAX_CONNECTIONS: usize = 256;
 
 /// Engine tuning knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct EngineConfig {
     /// LRU bound per result cache (critical paths and schedules each, per
     /// platform-context shard)
@@ -193,6 +194,13 @@ pub struct EngineConfig {
     /// construction; `Some(false)` forces every tracing hook in this
     /// engine to a no-op, `Some(true)` records regardless of the switch
     pub telemetry: Option<bool>,
+    /// pin the admission governor's per-shard in-flight table budget to a
+    /// fixed value (`Some(n)` disables the feedback loop; `None` lets the
+    /// governor adapt it from the recorder's `queue_wait` p99)
+    pub admission_budget: Option<usize>,
+    /// deterministic fault-injection plan; `None` falls back to the
+    /// `CEFT_FAULT` environment variable ([`FaultPlan::from_env`])
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for EngineConfig {
@@ -203,6 +211,8 @@ impl Default for EngineConfig {
             threads: pool::default_threads(),
             batch_window: 8,
             telemetry: None,
+            admission_budget: None,
+            fault: None,
         }
     }
 }
@@ -296,7 +306,7 @@ struct DeltaBasis {
 impl Interned {
     /// The current snapshot (one mutex acquisition, one `Arc` clone).
     fn current(&self) -> Arc<Snapshot> {
-        self.versioned.lock().unwrap().snap.clone()
+        lock_clean(&self.versioned).snap.clone()
     }
 
     /// The delta-recompute handoff for a table miss of `snap`'s generation
@@ -308,7 +318,7 @@ impl Interned {
         if self.generation.load(Ordering::Acquire) != snap.generation {
             return None;
         }
-        let vs = self.versioned.lock().unwrap();
+        let vs = lock_clean(&self.versioned);
         if vs.snap.generation != snap.generation {
             return None;
         }
@@ -323,17 +333,46 @@ impl Interned {
     }
 }
 
+/// How a single-flight cell resolved, from a parked follower's view.
+enum FlightOutcome<T> {
+    /// the leader landed a result
+    Ready(Arc<T>),
+    /// the computation was abandoned without a verdict for this follower
+    /// (queue purge, promoted-cell handoff, a leader that rejected its own
+    /// admission) — re-enter admission, where the follower's *own*
+    /// deadline and the shard's budget get their say
+    Retry,
+    /// the leader (or its gather) panicked; the message is the panic
+    /// payload — surface a structured `internal_panic` error, do not retry
+    /// (the fault is not the follower's to re-trigger)
+    Failed(Arc<str>),
+}
+
+// manual impl: `derive(Clone)` would demand `T: Clone`, but the payloads
+// only ever clone through the `Arc`s
+impl<T> Clone for FlightOutcome<T> {
+    fn clone(&self) -> Self {
+        match self {
+            FlightOutcome::Ready(v) => FlightOutcome::Ready(v.clone()),
+            FlightOutcome::Retry => FlightOutcome::Retry,
+            FlightOutcome::Failed(m) => FlightOutcome::Failed(m.clone()),
+        }
+    }
+}
+
 /// One in-flight computation cell: the leader deposits the outcome and
 /// wakes every parked follower. The compute runs *outside* the engine's
 /// state mutex, so a panicking leader does not take the engine down —
 /// which is exactly why the leader path must still resolve the cell on
-/// unwind: it completes with `None` (and removes the in-flight entry)
-/// before re-raising, and followers that observe `None` re-enter
-/// admission instead of hanging forever.
+/// unwind: it completes with [`FlightOutcome::Failed`] (and removes the
+/// in-flight entry) before re-raising, so followers surface a structured
+/// error instead of hanging forever. Cell locks use the
+/// poison-recovering [`lock_clean`]/[`wait_clean`] helpers: the stored
+/// outcome is always a whole value, so a panic between lock and unlock
+/// cannot leave a torn cell.
 struct Inflight<T> {
-    /// `None` = still computing; `Some(Some(v))` = completed;
-    /// `Some(None)` = the leader unwound without a result (retry)
-    result: Mutex<Option<Option<Arc<T>>>>,
+    /// `None` = still computing; `Some(outcome)` = resolved
+    result: Mutex<Option<FlightOutcome<T>>>,
     ready: Condvar,
 }
 
@@ -345,19 +384,18 @@ impl<T> Inflight<T> {
         }
     }
 
-    /// Park until the leader resolves the cell; `None` means the leader
-    /// unwound and the caller should retry admission.
-    fn wait(&self) -> Option<Arc<T>> {
-        let mut guard = self.result.lock().unwrap();
+    /// Park until the leader resolves the cell.
+    fn wait(&self) -> FlightOutcome<T> {
+        let mut guard = lock_clean(&self.result);
         while guard.is_none() {
-            guard = self.ready.wait(guard).unwrap();
+            guard = wait_clean(&self.ready, guard);
         }
         guard.as_ref().unwrap().clone()
     }
 
     /// Deposit the outcome and wake all followers.
-    fn complete(&self, value: Option<Arc<T>>) {
-        *self.result.lock().unwrap() = Some(value);
+    fn complete(&self, outcome: FlightOutcome<T>) {
+        *lock_clean(&self.result) = Some(outcome);
         self.ready.notify_all();
     }
 }
@@ -369,6 +407,191 @@ enum Flight<T> {
     Hit(Arc<T>),
     Follower(Arc<Inflight<T>>),
     Leader(Arc<Inflight<T>>),
+}
+
+/// Why the engine refused to serve a request: its deadline expired, the
+/// admission governor shed it, or the computation it depended on
+/// panicked. Every variant maps to a structured error response with a
+/// `retry_after_ms` hint ([`Engine::reject_response`]) — rejection is a
+/// *reply*, never a dropped connection or a hung cell.
+enum Reject {
+    /// `deadline_ms` elapsed before the result could be produced
+    Deadline,
+    /// the shard was over its in-flight miss budget (cache hits are
+    /// exempt — they are served regardless of load)
+    Shed,
+    /// the leader computing this key panicked; the payload message rides
+    /// along so co-batched requests report *which* fault failed them
+    Failed(Arc<str>),
+}
+
+/// Dispatch-level error: a client mistake (bad target, malformed edit —
+/// worth a plain `error_response`) or an engine [`Reject`].
+enum RequestError {
+    Client(String),
+    Reject(Reject),
+}
+
+impl From<String> for RequestError {
+    fn from(msg: String) -> Self {
+        RequestError::Client(msg)
+    }
+}
+
+impl From<Reject> for RequestError {
+    fn from(rej: Reject) -> Self {
+        RequestError::Reject(rej)
+    }
+}
+
+/// Per-request admission terms, fixed at dispatch: the absolute deadline
+/// (from the protocol's relative `deadline_ms`) and whether the shard
+/// governor may shed this request. Compute requests are governed; the
+/// `update` op's eager recompute is not (the edit is already committed —
+/// refusing its recompute would desynchronise the reply from the state),
+/// and its deadline is checked once *before* the edit applies.
+#[derive(Clone, Copy)]
+struct Admission {
+    deadline: Option<Instant>,
+    governed: bool,
+}
+
+impl Admission {
+    /// Ungoverned, deadline-free admission (internal recomputes).
+    fn free() -> Self {
+        Admission {
+            deadline: None,
+            governed: false,
+        }
+    }
+
+    /// Governed admission with the request's optional relative deadline,
+    /// converted to an absolute instant at dispatch.
+    fn governed(deadline_ms: Option<u64>) -> Self {
+        Admission {
+            deadline: deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms)),
+            governed: true,
+        }
+    }
+
+    fn expired(&self) -> bool {
+        self.deadline.map_or(false, |d| Instant::now() >= d)
+    }
+}
+
+/// How many table-admission probes pass between governor refreshes. The
+/// refresh reads a recorder snapshot — O(sinks × buckets) — so it must
+/// stay off the per-request path; at 256 the amortised cost is noise
+/// while the budget still tracks load shifts within a few hundred
+/// requests.
+const GOVERNOR_REFRESH_PROBES: u64 = 256;
+
+/// `queue_wait` p99 above which the governor halves the budget. 250 ms of
+/// queueing means the gather queue is growing faster than the kernels
+/// drain it — deliberately far above anything a healthy engine shows, so
+/// ordinary bursts (and the CI loadgen) never shed.
+const SHED_HIGH_WATER_NS: u64 = 250_000_000;
+
+/// `queue_wait` p99 below which the governor grows the budget back. The
+/// wide (50 ms, 250 ms) dead band is the hysteresis: a budget change
+/// needs a regime change, not noise, so the budget cannot flap between
+/// consecutive refreshes straddling one threshold.
+const SHED_LOW_WATER_NS: u64 = 50_000_000;
+
+/// Pure budget step: halve toward `min` above the high water, grow by a
+/// quarter toward `max` below the low water, hold inside the dead band.
+fn next_budget(cur: usize, p99_ns: u64, min: usize, max: usize) -> usize {
+    if p99_ns > SHED_HIGH_WATER_NS {
+        (cur / 2).max(min)
+    } else if p99_ns < SHED_LOW_WATER_NS {
+        (cur + (cur / 4).max(1)).min(max)
+    } else {
+        cur
+    }
+}
+
+/// The admission governor: a per-engine in-flight miss budget steered by
+/// the telemetry loop. Each shard admits a new table *leader* only while
+/// its `table_inflight` population is under the budget; beyond it, misses
+/// are shed with a `retry_after_ms` hint derived from the same p99 that
+/// tripped the budget. Followers and cache hits are never shed — they add
+/// no kernel work. With telemetry disabled the observed p99 is 0, the
+/// budget rides at `max`, and only a pinned budget
+/// ([`EngineConfig::admission_budget`]) sheds.
+struct Governor {
+    budget: AtomicUsize,
+    min: usize,
+    max: usize,
+    /// `true` ⇒ the budget was pinned by config; the feedback loop is off
+    pinned: bool,
+    probes: AtomicU64,
+    /// last observed `queue_wait` p99 (ns) — the `retry_after_ms` source
+    last_p99_ns: AtomicU64,
+}
+
+impl Governor {
+    fn new(threads: usize, batch_window: usize, pinned: Option<usize>) -> Self {
+        let min = threads.max(1);
+        let max = (threads * batch_window.max(1) * 4).max(min);
+        match pinned {
+            Some(b) => Governor {
+                budget: AtomicUsize::new(b),
+                min,
+                max,
+                pinned: true,
+                probes: AtomicU64::new(0),
+                last_p99_ns: AtomicU64::new(0),
+            },
+            None => Governor {
+                budget: AtomicUsize::new(max),
+                min,
+                max,
+                pinned: false,
+                probes: AtomicU64::new(0),
+                last_p99_ns: AtomicU64::new(0),
+            },
+        }
+    }
+
+    fn budget(&self) -> usize {
+        self.budget.load(Ordering::Relaxed)
+    }
+
+    /// The backoff hint attached to every rejection: the last observed
+    /// queueing p99, clamped to [1 ms, 1000 ms] — "come back after about
+    /// one queue drain".
+    fn retry_after_ms(&self) -> u64 {
+        (self.last_p99_ns.load(Ordering::Relaxed) / 1_000_000).clamp(1, 1000)
+    }
+
+    /// Count one admission probe; every [`GOVERNOR_REFRESH_PROBES`]-th
+    /// re-reads the recorder and steps the budget.
+    fn on_probe(&self, recorder: &Recorder) {
+        let n = self.probes.fetch_add(1, Ordering::Relaxed);
+        if n % GOVERNOR_REFRESH_PROBES != 0 {
+            return;
+        }
+        let p99 = recorder.snapshot().stages[Stage::QueueWait.idx()].p99();
+        self.last_p99_ns.store(p99, Ordering::Relaxed);
+        if self.pinned {
+            return;
+        }
+        let cur = self.budget.load(Ordering::Relaxed);
+        self.budget
+            .store(next_budget(cur, p99, self.min, self.max), Ordering::Relaxed);
+    }
+}
+
+/// Best-effort panic payload extraction (`&str` / `String` payloads; the
+/// common cases from `panic!` and `assert!`).
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic of unknown type".to_string()
+    }
 }
 
 /// The (result cache, in-flight table) pair [`Engine::single_flight`]
@@ -487,6 +710,15 @@ struct PendingTable {
     queued_at: Instant,
     /// where the drain leader deposits this request's telemetry durations
     timing: Arc<BatchTiming>,
+    /// the owning request's absolute deadline; a drain leader purges
+    /// expired cells from the queue instead of sweeping dead work
+    deadline: Option<Instant>,
+}
+
+impl PendingTable {
+    fn expired(&self) -> bool {
+        self.deadline.map_or(false, |d| Instant::now() >= d)
+    }
 }
 
 /// The cross-request gather queue of one shard. Group-commit shaped and
@@ -564,7 +796,7 @@ impl CacheShard {
     /// counters "newer" than another's — cross-shard totals are coherent
     /// per shard and monotone overall, not a global atomic cut.
     fn snapshot(&self) -> ShardSnapshot {
-        let st = self.state.lock().unwrap();
+        let st = lock_clean(&self.state);
         ShardSnapshot {
             cp_len: st.cp_cache.len(),
             sched_len: st.sched_cache.len(),
@@ -606,6 +838,16 @@ struct Counters {
     /// every structural `update` re-check (cost-only edits keep the
     /// verdict and do not count)
     shape_verdicts: [AtomicU64; NUM_SHAPE_CLASSES],
+    /// requests refused by the admission governor (`shed` errors)
+    shed_requests: AtomicU64,
+    /// requests refused because their `deadline_ms` elapsed
+    deadline_expired: AtomicU64,
+    /// panics caught at the request boundary (each counted once, in the
+    /// thread that unwound — co-batched requests failed by the same panic
+    /// report `internal_panic` errors without re-counting it)
+    panics_caught: AtomicU64,
+    /// expired cells purged from gather queues before a drain
+    queue_rejects: AtomicU64,
 }
 
 impl Counters {
@@ -660,6 +902,11 @@ pub struct Engine {
     cache_capacity: usize,
     /// gather-window bound of the cross-request batcher
     batch_window: usize,
+    /// the admission governor (overload shedding); see [`Governor`]
+    admission: Governor,
+    /// deterministic fault-injection plan; `None` ⇒ every hook is one
+    /// `is_some` branch and nothing else
+    fault: Option<Arc<FaultPlan>>,
 }
 
 impl Engine {
@@ -667,6 +914,7 @@ impl Engine {
     pub fn new(config: EngineConfig) -> Self {
         let cap = config.cache_capacity.max(1);
         let threads = config.threads.max(1);
+        let batch_window = config.batch_window.max(1);
         Self {
             state: Mutex::new(State {
                 instances: LruCache::new(config.intern_capacity.max(1)),
@@ -677,7 +925,66 @@ impl Engine {
             recorder: Recorder::new(config.telemetry.unwrap_or_else(obs::enabled)),
             threads,
             cache_capacity: cap,
-            batch_window: config.batch_window.max(1),
+            batch_window,
+            admission: Governor::new(threads, batch_window, config.admission_budget),
+            fault: config
+                .fault
+                .map(Arc::new)
+                .or_else(|| FaultPlan::from_env().map(Arc::new)),
+        }
+    }
+
+    /// The engine's fault-injection plan, if one is armed — loadgen's
+    /// chaos mode disarms it through this handle before its post-fault
+    /// replay.
+    pub fn fault(&self) -> Option<Arc<FaultPlan>> {
+        self.fault.clone()
+    }
+
+    /// Sleep out any injected request delay (fault plan `delay=` rule).
+    /// Placed *before* the deadline checks so a delayed request
+    /// deterministically observes its budget already spent.
+    fn inject_delay(&self) {
+        if let Some(f) = &self.fault {
+            if let Some(d) = f.injected_delay() {
+                std::thread::sleep(d);
+            }
+        }
+    }
+
+    /// Whether the fault plan wants the next TCP response dropped.
+    fn fault_drop_connection(&self) -> bool {
+        self.fault
+            .as_ref()
+            .map_or(false, |f| f.should_drop_connection())
+    }
+
+    /// Build the structured error reply for a [`Reject`], bumping the
+    /// matching resilience counter. The single funnel for rejection
+    /// accounting — `deadline_expired` et al. are bumped here and only
+    /// here, so a request rejected at any checkpoint counts exactly once.
+    fn reject_response(&self, rej: Reject) -> Json {
+        Counters::bump(&self.counters.errors);
+        let retry = Json::Num(self.admission.retry_after_ms() as f64);
+        match rej {
+            Reject::Deadline => {
+                Counters::bump(&self.counters.deadline_expired);
+                protocol::error_response_with(
+                    "deadline_exceeded",
+                    vec![("retry_after_ms", retry)],
+                )
+            }
+            Reject::Shed => {
+                Counters::bump(&self.counters.shed_requests);
+                protocol::error_response_with("shed", vec![("retry_after_ms", retry)])
+            }
+            Reject::Failed(msg) => protocol::error_response_with(
+                "internal_panic",
+                vec![
+                    ("detail", Json::Str(msg.to_string())),
+                    ("retry_after_ms", retry),
+                ],
+            ),
         }
     }
 
@@ -755,7 +1062,7 @@ impl Engine {
         // shape recognition runs once per intern, outside the state lock —
         // O(V+E), amortized across every request the handle later serves
         let shape_verdict = shape::recognize(&instance.graph);
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_clean(&self.state);
         if let Some(existing) = st.instances.get(&id) {
             // Handles are 64-bit non-cryptographic hashes shared by every
             // client, so never trust a handle hit blindly: confirm the
@@ -823,7 +1130,7 @@ impl Engine {
                         platform_hash,
                     ))
                 };
-                st = self.state.lock().unwrap();
+                st = lock_clean(&self.state);
                 // `peek`: a leader losing this race must not inflate the
                 // hit counter (misses already counted the first lookup);
                 // the raced build is recorded as a dedup hit instead, so
@@ -898,9 +1205,7 @@ impl Engine {
         match target {
             Target::Handle(id) => {
                 let _probe = trace.span(Stage::CacheProbe);
-                self.state
-                    .lock()
-                    .unwrap()
+                lock_clean(&self.state)
                     .instances
                     .get(&id)
                     .cloned()
@@ -930,18 +1235,24 @@ impl Engine {
         &self,
         shard: &CacheShard,
         key: CacheKey,
+        adm: Admission,
         slots: for<'a> fn(&'a mut ShardState) -> Slots<'a, T>,
-        compute: impl Fn(&mut RequestTrace) -> T,
+        compute: impl Fn(&mut RequestTrace) -> Result<T, Reject>,
         trace: &mut RequestTrace,
-    ) -> (Arc<T>, bool) {
+    ) -> Result<(Arc<T>, bool), Reject> {
         loop {
             // one admission pass under the lock: cache hit, follower, leader
             let flight = {
                 let _probe = trace.span(Stage::CacheProbe);
-                let mut st = shard.state.lock().unwrap();
+                let mut st = lock_clean(&shard.state);
                 let (cache, inflight) = slots(&mut st);
                 if let Some(hit) = cache.get(&key) {
                     Flight::Hit(hit.clone())
+                } else if adm.expired() {
+                    // a hit is served regardless of deadline (it is
+                    // cheaper than the rejection), but expired *misses*
+                    // are refused before they spend a core
+                    return Err(Reject::Deadline);
                 } else if let Some(f) = inflight.get(&key) {
                     Flight::Follower(f.clone())
                 } else {
@@ -951,7 +1262,7 @@ impl Engine {
                 }
             };
             match flight {
-                Flight::Hit(v) => return (v, true),
+                Flight::Hit(v) => return Ok((v, true)),
                 Flight::Follower(f) => {
                     // park time behind the identical-key leader is dedup
                     // wait — cache_probe, not queue_wait (which is reserved
@@ -960,36 +1271,54 @@ impl Engine {
                         let _park = trace.span(Stage::CacheProbe);
                         f.wait()
                     };
-                    if let Some(v) = waited {
-                        let mut st = shard.state.lock().unwrap();
-                        slots(&mut st).0.record_dedup_hit();
-                        return (v, true);
+                    match waited {
+                        FlightOutcome::Ready(v) => {
+                            let mut st = lock_clean(&shard.state);
+                            slots(&mut st).0.record_dedup_hit();
+                            return Ok((v, true));
+                        }
+                        // the leader stepped aside without producing a
+                        // result and its in-flight entry is gone —
+                        // re-enter admission (this request may become the
+                        // new leader; its own deadline gets re-checked)
+                        FlightOutcome::Retry => {}
+                        FlightOutcome::Failed(msg) => return Err(Reject::Failed(msg)),
                     }
-                    // the leader unwound without producing a result and its
-                    // in-flight entry is gone — re-enter admission (this
-                    // request may become the new leader)
                 }
                 Flight::Leader(f) => {
                     let computed =
                         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| compute(trace)));
                     match computed {
-                        Ok(v) => {
+                        Ok(Ok(v)) => {
                             let v = Arc::new(v);
                             {
-                                let mut st = shard.state.lock().unwrap();
+                                let mut st = lock_clean(&shard.state);
                                 let (cache, inflight) = slots(&mut st);
                                 cache.put(key, v.clone());
                                 inflight.remove(&key);
                             }
-                            f.complete(Some(v.clone()));
-                            return (v, false);
+                            f.complete(FlightOutcome::Ready(v.clone()));
+                            return Ok((v, false));
+                        }
+                        // the compute refused (its table admission shed or
+                        // timed out): followers retry with their own terms
+                        // — this leader's rejection is not theirs
+                        Ok(Err(rej)) => {
+                            {
+                                let mut st = lock_clean(&shard.state);
+                                slots(&mut st).1.remove(&key);
+                            }
+                            f.complete(FlightOutcome::Retry);
+                            return Err(rej);
                         }
                         Err(payload) => {
                             {
-                                let mut st = shard.state.lock().unwrap();
+                                let mut st = lock_clean(&shard.state);
                                 slots(&mut st).1.remove(&key);
                             }
-                            f.complete(None);
+                            f.complete(FlightOutcome::Failed(Arc::from(
+                                panic_msg(payload.as_ref()).as_str(),
+                            )));
                             std::panic::resume_unwind(payload);
                         }
                     }
@@ -1039,22 +1368,24 @@ impl Engine {
         &self,
         inst: &Arc<Interned>,
         snap: &Arc<Snapshot>,
+        adm: Admission,
         trace: &mut RequestTrace,
-    ) -> (Arc<CriticalPath>, bool) {
+    ) -> Result<(Arc<CriticalPath>, bool), Reject> {
         let key = Self::cp_key(inst, snap);
         let shard = inst.shard.clone();
         self.single_flight(
             &shard,
             key,
+            adm,
             cp_slots,
             |tr| {
-                let (memo, _) = self.table_for(inst, snap, false, TableOrigin::Cp, tr);
+                let (memo, _) = self.table_for(inst, snap, false, TableOrigin::Cp, adm, tr)?;
                 let t0 = tr.clock();
                 let cp = critical_path_from_table(&snap.graph, &memo.table);
                 if let Some(t0) = t0 {
                     tr.add(Stage::Kernel, t0.elapsed().as_nanos() as u64);
                 }
-                cp
+                Ok(cp)
             },
             trace,
         )
@@ -1078,22 +1409,37 @@ impl Engine {
         snap: &Arc<Snapshot>,
         rev: bool,
         origin: TableOrigin,
+        adm: Admission,
         trace: &mut RequestTrace,
-    ) -> (Arc<MemoTable>, bool) {
+    ) -> Result<(Arc<MemoTable>, bool), Reject> {
         let key = Self::table_key(inst, snap, rev);
         let shard = inst.shard.clone();
+        if adm.governed {
+            // refresh the governor off the per-request path (snapshot
+            // reads happen outside any shard lock)
+            self.admission.on_probe(&self.recorder);
+        }
         loop {
             let flight = {
                 let _probe = trace.span(Stage::CacheProbe);
-                let mut st = shard.state.lock().unwrap();
+                let mut st = lock_clean(&shard.state);
                 if let Some(hit) = st.table_cache.get(&key) {
                     let hit = hit.clone();
                     if hit.origin != origin {
                         st.table_cache.record_share();
                     }
                     Flight::Hit(hit)
+                } else if adm.expired() {
+                    // hits are served regardless of deadline; an expired
+                    // miss is refused before it parks or computes
+                    return Err(Reject::Deadline);
                 } else if let Some(f) = st.table_inflight.get(&key) {
                     Flight::Follower(f.clone())
+                } else if adm.governed && st.table_inflight.len() >= self.admission.budget() {
+                    // admission control: a *new* miss past the shard's
+                    // in-flight budget is shed (followers add no kernel
+                    // work and are always admitted)
+                    return Err(Reject::Shed);
                 } else {
                     let f = Arc::new(Inflight::new());
                     st.table_inflight.insert(key, f.clone());
@@ -1101,7 +1447,7 @@ impl Engine {
                 }
             };
             match flight {
-                Flight::Hit(v) => return (v, true),
+                Flight::Hit(v) => return Ok((v, true)),
                 Flight::Follower(f) => {
                     // identical-key dedup wait is cache_probe (see the
                     // single_flight follower arm)
@@ -1109,15 +1455,20 @@ impl Engine {
                         let _park = trace.span(Stage::CacheProbe);
                         f.wait()
                     };
-                    if let Some(v) = waited {
-                        let mut st = shard.state.lock().unwrap();
-                        st.table_cache.record_dedup_hit();
-                        if v.origin != origin {
-                            st.table_cache.record_share();
+                    match waited {
+                        FlightOutcome::Ready(v) => {
+                            let mut st = lock_clean(&shard.state);
+                            st.table_cache.record_dedup_hit();
+                            if v.origin != origin {
+                                st.table_cache.record_share();
+                            }
+                            return Ok((v, true));
                         }
-                        return (v, true);
+                        // leader stepped aside; retry admission (deadline
+                        // and budget re-checked there)
+                        FlightOutcome::Retry => {}
+                        FlightOutcome::Failed(msg) => return Err(Reject::Failed(msg)),
                     }
-                    // leader unwound; retry admission
                 }
                 Flight::Leader(cell) => {
                     // capture the delta basis *now*, against the same
@@ -1134,11 +1485,12 @@ impl Engine {
                         cell: cell.clone(),
                         queued_at: Instant::now(),
                         timing: Arc::new(BatchTiming::default()),
+                        deadline: adm.deadline,
                     };
                     let queued_at = me.queued_at;
                     let timing = me.timing.clone();
                     let queued = {
-                        let mut st = shard.state.lock().unwrap();
+                        let mut st = lock_clean(&shard.state);
                         // queue only past saturation: below `threads`
                         // in-flight gathers a distinct miss still gets its
                         // own core, as before this batcher existed
@@ -1157,7 +1509,7 @@ impl Engine {
                         // computed inside the gather that drained us: the
                         // drain leader stamped our park and sweep durations
                         // into the shared timing cell before completing it
-                        Some(v) => {
+                        FlightOutcome::Ready(v) => {
                             if trace.is_enabled() {
                                 trace.add(
                                     Stage::QueueWait,
@@ -1168,14 +1520,16 @@ impl Engine {
                                     timing.drain_ns.load(Ordering::Relaxed),
                                 );
                             }
-                            return (v, false);
+                            return Ok((v, false));
                         }
                         // promoted to lead the next gather (our in-flight
-                        // entry was removed with the retry signal), or the
-                        // gather leader unwound — re-enter admission. The
+                        // entry was removed with the retry signal), purged
+                        // as expired before a drain, or the gather leader
+                        // rejected — re-enter admission (which refuses an
+                        // expired purge victim with `Deadline`). The
                         // queue_wait stage is reserved for requests actually
                         // served by a sweep, so this park is cache_probe.
-                        None => {
+                        FlightOutcome::Retry => {
                             if trace.is_enabled() {
                                 trace.add(
                                     Stage::CacheProbe,
@@ -1184,6 +1538,7 @@ impl Engine {
                             }
                             continue;
                         }
+                        FlightOutcome::Failed(msg) => return Err(Reject::Failed(msg)),
                     }
                 }
             }
@@ -1196,21 +1551,62 @@ impl Engine {
     /// window (width 1 degenerates to the plain fused kernel in a pooled
     /// workspace) — deposit every result in the table cache, fan each to
     /// its single-flight cell, and hand the collector to the next queued
-    /// leader. On unwind every drained cell (and one promoted successor)
-    /// gets the retry signal before the panic re-raises — the
+    /// leader. Expired queue cells are purged at drain time (their owners
+    /// re-admit into a `Deadline` rejection) and a lone expired leader
+    /// aborts before the kernel. On unwind every drained cell resolves
+    /// with [`FlightOutcome::Failed`] (a structured error for its owner —
+    /// never a hang, never a retry into the same fault) and one promoted
+    /// successor gets the retry signal before the panic re-raises — the
     /// single-flight leader contract, extended to the whole window.
     fn run_gather(
         &self,
         shard: &Arc<CacheShard>,
         first: PendingTable,
         trace: &mut RequestTrace,
-    ) -> (Arc<MemoTable>, bool) {
+    ) -> Result<(Arc<MemoTable>, bool), Reject> {
         let mut jobs = vec![first];
-        {
-            let mut st = shard.state.lock().unwrap();
-            let extra = (self.batch_window - 1).min(st.collector.pending.len());
-            jobs.extend(st.collector.pending.drain(..extra));
+        let purged = {
+            let mut st = lock_clean(&shard.state);
+            // drain up to a window of queued requests, purging cells whose
+            // deadline already passed — sweeping dead work would only
+            // delay the live window behind it. Purged owners wake with
+            // the retry signal and re-enter admission, which refuses them
+            // with `Deadline`.
+            let mut purged = Vec::new();
+            while jobs.len() < self.batch_window {
+                match st.collector.pending.pop_front() {
+                    Some(p) if p.expired() => {
+                        st.table_inflight.remove(&p.key);
+                        purged.push(p);
+                    }
+                    Some(p) => jobs.push(p),
+                    None => break,
+                }
+            }
+            purged
+        };
+        for p in purged {
+            Counters::bump(&self.counters.queue_rejects);
+            p.cell.complete(FlightOutcome::Retry);
         }
+        // A lone leader whose own deadline passed while it reached its
+        // gather slot aborts before the kernel: hand the slot to the queue
+        // head and reject. (With a drained window the sweep runs anyway —
+        // the work is shared, only this leader's *reply* is past due.)
+        if jobs.len() == 1 && jobs[0].expired() {
+            let only = jobs.pop().expect("one job");
+            let promoted = {
+                let mut st = lock_clean(&shard.state);
+                st.table_inflight.remove(&only.key);
+                Self::finish_gather(&mut st)
+            };
+            only.cell.complete(FlightOutcome::Retry);
+            if let Some(next) = promoted {
+                next.cell.complete(FlightOutcome::Retry);
+            }
+            return Err(Reject::Deadline);
+        }
+        let leader_expired = jobs[0].expired();
         // Sweep timing has two consumers: this leader's own trace, and the
         // drained requests' timing cells (their threads are parked inside
         // `Inflight::wait`, so the leader measures on their behalf — a
@@ -1226,6 +1622,13 @@ impl Engine {
             None
         };
         let computed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // fault site: an injected kernel panic unwinds through the
+            // same recovery path a real kernel defect would
+            if let Some(f) = &self.fault {
+                if f.should_panic_kernel() {
+                    panic!("{INJECTED_PANIC} (width {})", jobs.len());
+                }
+            }
             if jobs.len() == 1 {
                 let only = &jobs[0];
                 let rev = only.rev;
@@ -1341,7 +1744,7 @@ impl Engine {
                     }
                 }
                 let promoted = {
-                    let mut st = shard.state.lock().unwrap();
+                    let mut st = lock_clean(&shard.state);
                     for (job, res) in jobs.iter().zip(&results) {
                         st.table_cache.put(job.key, res.clone());
                         st.table_inflight.remove(&job.key);
@@ -1362,26 +1765,37 @@ impl Engine {
                     Self::finish_gather(&mut st)
                 };
                 for (job, res) in jobs.iter().zip(&results) {
-                    job.cell.complete(Some(res.clone()));
+                    job.cell.complete(FlightOutcome::Ready(res.clone()));
                 }
                 if let Some(next) = promoted {
-                    next.cell.complete(None);
+                    next.cell.complete(FlightOutcome::Retry);
                 }
-                (results[0].clone(), false)
+                if leader_expired {
+                    // the drained window was computed and cached (shared
+                    // work), but this leader's own reply is past its
+                    // deadline
+                    Err(Reject::Deadline)
+                } else {
+                    Ok((results[0].clone(), false))
+                }
             }
             Err(payload) => {
+                let msg: Arc<str> = Arc::from(panic_msg(payload.as_ref()).as_str());
                 let promoted = {
-                    let mut st = shard.state.lock().unwrap();
+                    let mut st = lock_clean(&shard.state);
                     for job in &jobs {
                         st.table_inflight.remove(&job.key);
                     }
                     Self::finish_gather(&mut st)
                 };
+                // every drained request gets a structured failure — never
+                // a silent retry that would re-run into the same fault,
+                // and never a hang
                 for job in &jobs {
-                    job.cell.complete(None);
+                    job.cell.complete(FlightOutcome::Failed(msg.clone()));
                 }
                 if let Some(next) = promoted {
-                    next.cell.complete(None);
+                    next.cell.complete(FlightOutcome::Retry);
                 }
                 std::panic::resume_unwind(payload);
             }
@@ -1418,8 +1832,9 @@ impl Engine {
         inst: &Arc<Interned>,
         snap: &Arc<Snapshot>,
         algorithm: Algorithm,
+        adm: Admission,
         trace: &mut RequestTrace,
-    ) -> (Arc<Schedule>, bool) {
+    ) -> Result<(Arc<Schedule>, bool), Reject> {
         let key = CacheKey {
             graph: inst.graph_hash,
             platform: inst.platform_hash,
@@ -1430,11 +1845,13 @@ impl Engine {
         self.single_flight(
             &inst.shard,
             key,
+            adm,
             sched_slots,
             |tr| match algorithm.table_use() {
                 Some(dir) => {
                     let rev = dir == TableDir::Reverse;
-                    let (memo, _) = self.table_for(inst, snap, rev, TableOrigin::Schedule, tr);
+                    let (memo, _) =
+                        self.table_for(inst, snap, rev, TableOrigin::Schedule, adm, tr)?;
                     let t0 = tr.clock();
                     let s = inst.ctx.with_workspace(|ws| {
                         algorithm.run_with_tables(ws, snap.bind(&inst.ctx), Some(&memo.table))
@@ -1442,7 +1859,7 @@ impl Engine {
                     if let Some(t0) = t0 {
                         tr.add(Stage::Kernel, t0.elapsed().as_nanos() as u64);
                     }
-                    s
+                    Ok(s)
                 }
                 None => {
                     let t0 = tr.clock();
@@ -1452,7 +1869,7 @@ impl Engine {
                     if let Some(t0) = t0 {
                         tr.add(Stage::Kernel, t0.elapsed().as_nanos() as u64);
                     }
-                    s
+                    Ok(s)
                 }
             },
             trace,
@@ -1472,14 +1889,22 @@ impl Engine {
         &self,
         inst: &Arc<Interned>,
         edits: &[GraphEdit],
+        adm: Admission,
         trace: &mut RequestTrace,
-    ) -> Result<Json, String> {
+    ) -> Result<Json, RequestError> {
+        // Deadline checkpoint: *before* the edit applies, never between
+        // the edit and the reply — once the generation bumps, the reply
+        // must describe the committed state, so the recompute below runs
+        // ungoverned and deadline-free.
+        if adm.expired() {
+            return Err(Reject::Deadline.into());
+        }
         // ---- phase 1: edit + swap + purge, under the version mutex ----
-        let mut vs = inst.versioned.lock().unwrap();
+        let mut vs = lock_clean(&inst.versioned);
         let old = vs.snap.clone();
         let res = {
             let _edit = trace.span(Stage::EditApply);
-            apply_edits(&old.graph, &old.comp, edits)?
+            apply_edits(&old.graph, &old.comp, edits).map_err(RequestError::Client)?
         };
         let new_gen = old.generation + 1;
         let new_n = res.graph.num_tasks();
@@ -1488,7 +1913,7 @@ impl Engine {
         // (peek: basis harvesting must not perturb LRU order or hit
         // counters)
         let (old_fwd, old_rev, old_cp) = {
-            let st = inst.shard.state.lock().unwrap();
+            let st = lock_clean(&inst.shard.state);
             (
                 st.table_cache
                     .peek(&Self::table_key(inst, &old, false))
@@ -1587,7 +2012,7 @@ impl Engine {
             let stale = |k: &CacheKey| {
                 k.graph == g && k.platform == p && k.comp == c && k.generation < new_gen
             };
-            let mut st = inst.shard.state.lock().unwrap();
+            let mut st = lock_clean(&inst.shard.state);
             st.cp_cache.remove_matching(&stale);
             st.sched_cache.remove_matching(&stale);
             st.table_cache.remove_matching(&stale);
@@ -1609,8 +2034,12 @@ impl Engine {
         let (length, slack, recomputed, skipped) = match skip {
             Some((cpl, slack)) => (cpl, slack, 0usize, true),
             None => {
-                let (memo, _) = self.table_for(inst, &new_snap, false, TableOrigin::Cp, trace);
-                let (cp, _) = self.critical_path_for(inst, &new_snap, trace);
+                // ungoverned, deadline-free: the edit is committed, the
+                // reply must carry the new generation's numbers (the only
+                // reject that can surface here is a co-flight panic)
+                let (memo, _) =
+                    self.table_for(inst, &new_snap, false, TableOrigin::Cp, Admission::free(), trace)?;
+                let (cp, _) = self.critical_path_for(inst, &new_snap, Admission::free(), trace)?;
                 let mut slack = Vec::new();
                 let t0 = trace.clock();
                 inst.ctx.with_workspace(|ws| {
@@ -1642,44 +2071,84 @@ impl Engine {
     /// Execute one decoded request, producing the response body.
     pub fn handle(&self, req: Request) -> Json {
         let mut trace = self.recorder.begin(protocol::op_code(&req));
-        let resp = self.dispatch(req, &mut trace);
+        let resp = self.dispatch_caught(req, &mut trace);
         trace.finish();
         resp
+    }
+
+    /// Panic isolation boundary: one request's panic (a kernel defect, an
+    /// injected fault) becomes *its* structured `internal_panic` error —
+    /// the engine, the connection thread and every other request keep
+    /// going. Shared state stays sound across the unwind because every
+    /// critical section either completes its invariant before unlocking or
+    /// holds only whole-value replacements (see [`lock_clean`]), and the
+    /// single-flight/gather unwind paths resolve every dependent cell
+    /// before the payload re-raises.
+    fn dispatch_caught(&self, req: Request, trace: &mut RequestTrace) -> Json {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.dispatch(req, trace)))
+        {
+            Ok(resp) => resp,
+            Err(payload) => {
+                Counters::bump(&self.counters.panics_caught);
+                Counters::bump(&self.counters.errors);
+                protocol::error_response_with(
+                    "internal_panic",
+                    vec![
+                        ("detail", Json::Str(panic_msg(payload.as_ref()))),
+                        (
+                            "retry_after_ms",
+                            Json::Num(self.admission.retry_after_ms() as f64),
+                        ),
+                    ],
+                )
+            }
+        }
     }
 
     /// Execute one decoded request, charging lifecycle stages to `trace`.
     fn dispatch(&self, req: Request, trace: &mut RequestTrace) -> Json {
         Counters::bump(&self.counters.requests);
-        let result = match req {
+        let result: Result<Json, RequestError> = match req {
             Request::Ping => Ok(protocol::ok_response(vec![
                 ("pong", Json::Bool(true)),
                 ("version", Json::Num(protocol::PROTOCOL_VERSION as f64)),
             ])),
             Request::Submit { instance, platform } => {
                 Counters::bump(&self.counters.submits);
-                self.intern(instance, platform, trace).map(|inst| {
+                (|| -> Result<Json, RequestError> {
+                    let inst = self.intern(instance, platform, trace)?;
                     let snap = inst.current();
                     let _respond = trace.span(Stage::Respond);
-                    protocol::ok_response(vec![
+                    Ok(protocol::ok_response(vec![
                         ("id", Json::Str(protocol::handle_to_hex(inst.id))),
                         ("n", Json::Num(snap.graph.num_tasks() as f64)),
                         ("p", Json::Num(inst.ctx.p() as f64)),
                         ("edges", Json::Num(snap.graph.num_edges() as f64)),
-                    ])
-                })
+                    ]))
+                })()
             }
-            Request::CriticalPath { target, slack } => {
+            Request::CriticalPath {
+                target,
+                slack,
+                deadline_ms,
+            } => {
                 Counters::bump(&self.counters.cp_requests);
-                self.resolve(target, trace).map(|inst| {
+                // admission terms are fixed before the injected delay so
+                // a delayed request deterministically sees its budget
+                // already spent at the first checkpoint
+                let adm = Admission::governed(deadline_ms);
+                self.inject_delay();
+                (|| -> Result<Json, RequestError> {
+                    let inst = self.resolve(target, trace)?;
                     let snap = inst.current();
-                    let (cp, cached) = self.critical_path_for(&inst, &snap, trace);
+                    let (cp, cached) = self.critical_path_for(&inst, &snap, adm, trace)?;
                     // per-task slack is derived on demand from the
                     // memoized forward table (a hit after the cp compute)
                     // rather than cached: it is O(v·p²) arithmetic, not a
                     // DP, and most cp traffic never asks for it
                     let slack_json = if slack {
                         let (memo, _) =
-                            self.table_for(&inst, &snap, false, TableOrigin::Cp, trace);
+                            self.table_for(&inst, &snap, false, TableOrigin::Cp, adm, trace)?;
                         let mut out = Vec::new();
                         let t0 = trace.clock();
                         inst.ctx.with_workspace(|ws| {
@@ -1720,28 +2189,42 @@ impl Engine {
                     if let Some(s) = slack_json {
                         fields.push(("slack", s));
                     }
-                    protocol::ok_response(fields)
-                })
+                    Ok(protocol::ok_response(fields))
+                })()
             }
-            Request::Update { id, edits } => {
+            Request::Update {
+                id,
+                edits,
+                deadline_ms,
+            } => {
                 Counters::bump(&self.counters.update_requests);
+                let adm = Admission::governed(deadline_ms);
+                self.inject_delay();
                 self.resolve(Target::Handle(id), trace)
-                    .and_then(|inst| self.apply_update(&inst, &edits, trace))
+                    .map_err(RequestError::Client)
+                    .and_then(|inst| self.apply_update(&inst, &edits, adm, trace))
             }
-            Request::Schedule { algorithm, target } => {
+            Request::Schedule {
+                algorithm,
+                target,
+                deadline_ms,
+            } => {
                 Counters::bump(&self.counters.schedule_requests);
-                self.resolve(target, trace).map(|inst| {
+                let adm = Admission::governed(deadline_ms);
+                self.inject_delay();
+                (|| -> Result<Json, RequestError> {
+                    let inst = self.resolve(target, trace)?;
                     let snap = inst.current();
-                    let (s, cached) = self.schedule_for(&inst, &snap, algorithm, trace);
+                    let (s, cached) = self.schedule_for(&inst, &snap, algorithm, adm, trace)?;
                     let _respond = trace.span(Stage::Respond);
-                    protocol::ok_response(vec![
+                    Ok(protocol::ok_response(vec![
                         ("id", Json::Str(protocol::handle_to_hex(inst.id))),
                         ("algorithm", Json::Str(algorithm.name().to_string())),
                         ("makespan", Json::Num(s.makespan())),
                         ("cached", Json::Bool(cached)),
                         ("schedule", io::schedule_to_json(s.as_ref())),
-                    ])
-                })
+                    ]))
+                })()
             }
             Request::Stats => {
                 let _respond = trace.span(Stage::Respond);
@@ -1759,7 +2242,7 @@ impl Engine {
                 )]))
             }
             Request::Evict { id } => {
-                let mut st = self.state.lock().unwrap();
+                let mut st = lock_clean(&self.state);
                 match st.instances.remove(&id) {
                     Some(inst) => {
                         let (g, p, c) = (inst.graph_hash, inst.platform_hash, inst.comp_hash);
@@ -1768,7 +2251,7 @@ impl Engine {
                         // results live in the instance's platform shard
                         // (state-lock-then-shard-lock is the sanctioned
                         // order)
-                        let mut shard = inst.shard.state.lock().unwrap();
+                        let mut shard = lock_clean(&inst.shard.state);
                         let dropped_cp = shard.cp_cache.remove_matching(&matches);
                         let dropped_sched = shard.sched_cache.remove_matching(&matches);
                         // the marker-keyed table entries share the
@@ -1782,17 +2265,17 @@ impl Engine {
                             ("dropped_tables", Json::Num(dropped_tables as f64)),
                         ]))
                     }
-                    None => Err(format!(
+                    None => Err(RequestError::Client(format!(
                         "unknown instance id {}",
                         protocol::handle_to_hex(id)
-                    )),
+                    ))),
                 }
             }
             Request::Clear => {
-                let mut st = self.state.lock().unwrap();
+                let mut st = lock_clean(&self.state);
                 let mut dropped = st.instances.len() + st.ctxs.len();
                 for shard in st.shards.values() {
-                    let s = shard.state.lock().unwrap();
+                    let s = lock_clean(&shard.state);
                     dropped += s.cp_cache.len() + s.sched_cache.len() + s.table_cache.len();
                 }
                 st.instances.clear();
@@ -1805,17 +2288,51 @@ impl Engine {
                     Json::Num(dropped as f64),
                 )]))
             }
-            Request::Shutdown => Ok(protocol::ok_response(vec![(
-                "shutting_down",
-                Json::Bool(true),
-            )])),
+            Request::Shutdown => {
+                // graceful drain: give in-flight gathers a bounded window
+                // to land before the serving loop stops accepting. The
+                // drain is passive — requests arriving while it polls are
+                // still served (the poll just waits longer).
+                let (drained, in_flight) = self.drain_in_flight(Duration::from_millis(1000));
+                Ok(protocol::ok_response(vec![
+                    ("shutting_down", Json::Bool(true)),
+                    ("drained", Json::Bool(drained)),
+                    ("in_flight", Json::Num(in_flight as f64)),
+                ]))
+            }
         };
         match result {
             Ok(resp) => resp,
-            Err(msg) => {
+            Err(RequestError::Client(msg)) => {
                 Counters::bump(&self.counters.errors);
                 protocol::error_response(&msg)
             }
+            Err(RequestError::Reject(rej)) => self.reject_response(rej),
+        }
+    }
+
+    /// Poll until every shard's gather collector is idle (no active
+    /// gathers, no parked cells) or the budget elapses. Returns
+    /// `(fully_drained, in_flight_at_return)`.
+    fn drain_in_flight(&self, budget: Duration) -> (bool, usize) {
+        let t0 = Instant::now();
+        loop {
+            let in_flight = {
+                let st = lock_clean(&self.state);
+                let mut n = 0usize;
+                for shard in st.shards.values() {
+                    let s = lock_clean(&shard.state);
+                    n += s.collector.active + s.collector.pending.len();
+                }
+                n
+            };
+            if in_flight == 0 {
+                return (true, 0);
+            }
+            if t0.elapsed() >= budget {
+                return (false, in_flight);
+            }
+            std::thread::sleep(Duration::from_millis(1));
         }
     }
 
@@ -1831,7 +2348,7 @@ impl Engine {
             Ok(req) => {
                 trace.set_op(protocol::op_code(&req));
                 let stop = matches!(req, Request::Shutdown);
-                let resp = self.dispatch(req, &mut trace);
+                let resp = self.dispatch_caught(req, &mut trace);
                 trace.finish();
                 (resp, stop)
             }
@@ -1880,7 +2397,7 @@ impl Engine {
         let stages = Self::stages_json(&self.recorder.snapshot());
         let telemetry =
             Json::Str(if self.recorder.enabled() { "on" } else { "off" }.to_string());
-        let st = self.state.lock().unwrap();
+        let st = lock_clean(&self.state);
         let cache_obj = |len: usize, cap: usize, shards: usize, s: CacheStats| {
             Json::obj(vec![
                 ("len", Json::Num(len as f64)),
@@ -2038,6 +2555,35 @@ impl Engine {
                     ),
                 ]),
             ),
+            (
+                "resilience",
+                Json::obj(vec![
+                    (
+                        "shed_requests",
+                        Json::Num(Counters::read(&self.counters.shed_requests) as f64),
+                    ),
+                    (
+                        "deadline_expired",
+                        Json::Num(Counters::read(&self.counters.deadline_expired) as f64),
+                    ),
+                    (
+                        "panics_caught",
+                        Json::Num(Counters::read(&self.counters.panics_caught) as f64),
+                    ),
+                    (
+                        "queue_rejects",
+                        Json::Num(Counters::read(&self.counters.queue_rejects) as f64),
+                    ),
+                    (
+                        "admission_budget",
+                        Json::Num(self.admission.budget() as f64),
+                    ),
+                    (
+                        "fault_plan_armed",
+                        Json::Bool(self.fault.as_ref().map_or(false, |f| f.armed())),
+                    ),
+                ]),
+            ),
         ])
     }
 
@@ -2147,7 +2693,7 @@ impl Engine {
         // cache counters: one coherent snapshot per shard (see
         // `CacheShard::snapshot` for the cross-shard contract)
         let (cp_stats, sched_stats, table_stats, panel_stats) = {
-            let st = self.state.lock().unwrap();
+            let st = lock_clean(&self.state);
             let mut cp = CacheStats::default();
             let mut sched = CacheStats::default();
             let mut table = CacheStats::default();
@@ -2234,6 +2780,35 @@ impl Engine {
             out,
             "ceft_shape_general_fallbacks_total {}",
             table_stats.shape_general_fallbacks
+        );
+        // overload / fault-recovery accounting (the `resilience` stats
+        // section, exported)
+        for (name, v) in [
+            (
+                "ceft_resilience_shed_requests_total",
+                Counters::read(&self.counters.shed_requests),
+            ),
+            (
+                "ceft_resilience_deadline_expired_total",
+                Counters::read(&self.counters.deadline_expired),
+            ),
+            (
+                "ceft_resilience_panics_caught_total",
+                Counters::read(&self.counters.panics_caught),
+            ),
+            (
+                "ceft_resilience_queue_rejects_total",
+                Counters::read(&self.counters.queue_rejects),
+            ),
+        ] {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        let _ = writeln!(out, "# TYPE ceft_resilience_admission_budget gauge");
+        let _ = writeln!(
+            out,
+            "ceft_resilience_admission_budget {}",
+            self.admission.budget()
         );
         // per-stage latency summaries
         let snap = self.recorder.snapshot();
@@ -2455,6 +3030,11 @@ fn handle_connection(
             continue;
         }
         let (resp, is_shutdown) = engine.handle_line(&line);
+        // fault site: a planned connection drop closes without responding
+        // — the client-side retry path's test substrate
+        if engine.fault_drop_connection() {
+            return Ok(());
+        }
         writeln!(writer, "{}", resp.to_string())?;
         writer.flush()?;
         if is_shutdown {
@@ -2933,7 +3513,7 @@ mod tests {
         let mut cells = Vec::new();
         let mut timings = Vec::new();
         {
-            let mut st = shard.state.lock().unwrap();
+            let mut st = lock_clean(&shard.state);
             st.collector.active = 1;
             for (i, inst) in interned.iter().enumerate().skip(1) {
                 let snap = inst.current();
@@ -2951,6 +3531,7 @@ mod tests {
                     cell: cell.clone(),
                     queued_at: Instant::now(),
                     timing: timing.clone(),
+                    deadline: None,
                 });
                 cells.push(cell);
                 timings.push(timing);
@@ -2963,27 +3544,27 @@ mod tests {
         let first_snap = interned[0].current();
         let first_key = Engine::table_key(&interned[0], &first_snap, revs[0]);
         let first_cell = Arc::new(Inflight::new());
-        shard
-            .state
-            .lock()
-            .unwrap()
+        lock_clean(&shard.state)
             .table_inflight
             .insert(first_key, first_cell.clone());
-        let (first, cached) = engine.run_gather(
-            &shard,
-            PendingTable {
-                inst: interned[0].clone(),
-                snap: first_snap,
-                delta: None,
-                key: first_key,
-                rev: revs[0],
-                origin: origins[0],
-                cell: first_cell,
-                queued_at: Instant::now(),
-                timing: Arc::new(BatchTiming::default()),
-            },
-            &mut leader_trace,
-        );
+        let (first, cached) = engine
+            .run_gather(
+                &shard,
+                PendingTable {
+                    inst: interned[0].clone(),
+                    snap: first_snap,
+                    delta: None,
+                    key: first_key,
+                    rev: revs[0],
+                    origin: origins[0],
+                    cell: first_cell,
+                    queued_at: Instant::now(),
+                    timing: Arc::new(BatchTiming::default()),
+                    deadline: None,
+                },
+                &mut leader_trace,
+            )
+            .expect("un-deadlined gather is never rejected");
         assert!(!cached, "a gathered computation is not a cache hit");
         assert_eq!(first.table.table, serial_tables[0].table);
         assert_eq!(first.table.backptr, serial_tables[0].backptr);
@@ -2993,7 +3574,10 @@ mod tests {
         assert_eq!(leader_trace.stage_ns(Stage::Kernel), 0);
         assert_eq!(leader_trace.stage_ns(Stage::QueueWait), 0);
         for (i, cell) in cells.iter().enumerate() {
-            let got = cell.wait().expect("gathered cell resolves with a result");
+            let got = match cell.wait() {
+                FlightOutcome::Ready(v) => v,
+                _ => panic!("gathered cell resolves with a result"),
+            };
             assert_eq!(
                 got.table.table,
                 serial_tables[i + 1].table,
@@ -3010,7 +3594,7 @@ mod tests {
         }
         // counters: one drain of width 5, five insertions, no leftovers
         {
-            let st = shard.state.lock().unwrap();
+            let st = lock_clean(&shard.state);
             assert!(st.table_inflight.is_empty());
             assert!(st.collector.pending.is_empty());
             assert_eq!(st.collector.active, 0, "the staged gather slot was released");
@@ -3028,6 +3612,7 @@ mod tests {
             let resp = engine.handle(Request::CriticalPath {
                 target: Target::Handle(interned[i].id),
                 slack: false,
+                deadline_ms: None,
             });
             assert_eq!(
                 resp.get("length").and_then(Json::as_f64),
@@ -3045,6 +3630,7 @@ mod tests {
             let resp = engine.handle(Request::Schedule {
                 algorithm: Algorithm::CeftHeftUp,
                 target: Target::Handle(interned[i].id),
+                deadline_ms: None,
             });
             assert_eq!(
                 resp.get("makespan").and_then(Json::as_f64),
@@ -3053,7 +3639,7 @@ mod tests {
             );
         }
         {
-            let st = shard.state.lock().unwrap();
+            let st = lock_clean(&shard.state);
             let s = st.table_cache.stats();
             assert_eq!(s.insertions, 5, "no table was recomputed");
             assert_eq!(s.hits, 5, "every consumer hit the memoized table");
@@ -3172,7 +3758,7 @@ mod tests {
         }
         let shard = shard.unwrap();
         // hold the engine's only gather slot
-        shard.state.lock().unwrap().collector.active = 1;
+        lock_clean(&shard.state).collector.active = 1;
         let handles: Vec<_> = ids
             .iter()
             .map(|&id| {
@@ -3181,6 +3767,7 @@ mod tests {
                     let resp = engine.handle(Request::CriticalPath {
                         target: Target::Handle(id),
                         slack: false,
+                        deadline_ms: None,
                     });
                     resp.get("length").and_then(Json::as_f64).unwrap()
                 })
@@ -3188,23 +3775,23 @@ mod tests {
             .collect();
         // wait until all N key leaders parked in the collector
         for _ in 0..2000 {
-            if shard.state.lock().unwrap().collector.pending.len() == N {
+            if lock_clean(&shard.state).collector.pending.len() == N {
                 break;
             }
             std::thread::sleep(std::time::Duration::from_millis(1));
         }
         assert_eq!(
-            shard.state.lock().unwrap().collector.pending.len(),
+            lock_clean(&shard.state).collector.pending.len(),
             N,
             "all requests must queue behind the held gather slot"
         );
         // release the slot as a finishing gather would: promote the head
         let promoted = {
-            let mut st = shard.state.lock().unwrap();
+            let mut st = lock_clean(&shard.state);
             Engine::finish_gather(&mut st)
         }
         .expect("a queued leader to promote");
-        promoted.cell.complete(None);
+        promoted.cell.complete(FlightOutcome::Retry);
         for (i, h) in handles.into_iter().enumerate() {
             assert_eq!(h.join().unwrap(), expected[i], "request {i}");
         }
@@ -3769,5 +4356,446 @@ mod tests {
         assert_eq!(id2, id, "content addressing is deterministic");
         let (cp2, _) = engine.handle_line(&format!(r#"{{"op":"cp","id":"{id2}"}}"#));
         assert_eq!(cp2.get("length").and_then(Json::as_f64), Some(12.0));
+    }
+
+    // ---- resilience: deadlines, admission control, panic isolation ----
+
+    #[test]
+    fn governor_budget_steps_with_hysteresis_dead_band() {
+        // pure step function: halve above the high water, grow below the
+        // low water, hold inside the dead band, clamp at both rails
+        assert_eq!(next_budget(32, SHED_HIGH_WATER_NS + 1, 2, 32), 16);
+        assert_eq!(next_budget(3, SHED_HIGH_WATER_NS + 1, 2, 32), 2);
+        assert_eq!(next_budget(2, SHED_HIGH_WATER_NS + 1, 2, 32), 2, "floor");
+        assert_eq!(next_budget(16, SHED_LOW_WATER_NS - 1, 2, 32), 20);
+        assert_eq!(
+            next_budget(1, SHED_LOW_WATER_NS - 1, 1, 32),
+            2,
+            "growth is at least one even from a tiny budget"
+        );
+        assert_eq!(next_budget(32, SHED_LOW_WATER_NS - 1, 2, 32), 32, "cap");
+        // the dead band holds in both directions — a budget change needs a
+        // regime change, not noise straddling one threshold
+        assert_eq!(next_budget(16, SHED_LOW_WATER_NS, 2, 32), 16);
+        assert_eq!(next_budget(16, SHED_HIGH_WATER_NS, 2, 32), 16);
+        // bounds derive from the engine shape; pinning disables stepping
+        let g = Governor::new(2, 8, None);
+        assert_eq!(g.budget(), 2 * 8 * 4);
+        let pinned = Governor::new(2, 8, Some(3));
+        assert_eq!(pinned.budget(), 3);
+        assert!(pinned.pinned);
+        // the retry hint clamps to [1, 1000] ms
+        assert_eq!(pinned.retry_after_ms(), 1);
+        pinned.last_p99_ns.store(5_000_000_000, Ordering::Relaxed);
+        assert_eq!(pinned.retry_after_ms(), 1000);
+    }
+
+    #[test]
+    fn deadline_rejects_expired_miss_but_serves_cache_hit() {
+        let engine = Engine::with_defaults();
+        let (_plat, inst) = small_instance(5000);
+        let inst_json = io::instance_to_json(&inst).to_string();
+        // an uncached miss with an already-spent budget is refused at the
+        // cache probe, before it costs a core
+        let (miss, _) = engine.handle_line(&format!(
+            r#"{{"op":"cp","instance":{inst_json},"deadline_ms":0}}"#
+        ));
+        assert_eq!(miss.get("ok"), Some(&Json::Bool(false)), "{miss:?}");
+        assert_eq!(
+            miss.get("error").and_then(Json::as_str),
+            Some("deadline_exceeded")
+        );
+        assert!(miss.get("retry_after_ms").and_then(Json::as_f64).unwrap() >= 1.0);
+        // compute it without a deadline; the same expired budget is then
+        // served from cache — the hit is cheaper than the rejection
+        let (full, _) = engine.handle_line(&format!(r#"{{"op":"cp","instance":{inst_json}}}"#));
+        assert_eq!(full.get("ok"), Some(&Json::Bool(true)), "{full:?}");
+        let (hit, _) = engine.handle_line(&format!(
+            r#"{{"op":"cp","instance":{inst_json},"deadline_ms":0}}"#
+        ));
+        assert_eq!(hit.get("ok"), Some(&Json::Bool(true)), "{hit:?}");
+        assert_eq!(hit.get("length"), full.get("length"));
+        let stats = engine.stats_json();
+        let res = stats.get("resilience").expect("resilience stats section");
+        assert_eq!(
+            res.get("deadline_expired").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        assert_eq!(res.get("shed_requests").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn update_deadline_checked_before_the_edit_commits() {
+        // the deadline checkpoint sits *before* the edit applies: a
+        // refused update must not advance the generation (the reply after
+        // a committed edit must describe the committed state, so no
+        // checkpoint may run between edit and reply)
+        let engine = Engine::with_defaults();
+        let inst = hand_instance(2, &[(0, 1, 0.0)], 1, &[1.0, 2.0]);
+        let id = submit_id(&engine, &inst);
+        engine.handle_line(&format!(r#"{{"op":"cp","id":"{id}"}}"#));
+        let (up, _) = engine.handle_line(&format!(
+            r#"{{"op":"update","id":"{id}","deadline_ms":0,"edits":[
+                {{"edit":"task_cost","task":1,"costs":[9.0]}}]}}"#
+        ));
+        assert_eq!(up.get("ok"), Some(&Json::Bool(false)), "{up:?}");
+        assert_eq!(
+            up.get("error").and_then(Json::as_str),
+            Some("deadline_exceeded")
+        );
+        // still generation-0 content: the edit never landed
+        let (cp, _) = engine.handle_line(&format!(r#"{{"op":"cp","id":"{id}"}}"#));
+        assert_eq!(cp.get("length").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn injected_delay_deterministically_expires_deadline() {
+        // fault plan: a single 30 ms stage delay on the first request.
+        // Admission terms are fixed before the injected delay, so a 5 ms
+        // budget is deterministically spent at the first checkpoint.
+        let engine = Engine::new(EngineConfig {
+            fault: Some(FaultPlan::parse("seed=0,delay=1:30x1").unwrap()),
+            ..EngineConfig::default()
+        });
+        let (_plat, inst) = small_instance(5100);
+        let inst_json = io::instance_to_json(&inst).to_string();
+        let (resp, _) = engine.handle_line(&format!(
+            r#"{{"op":"cp","instance":{inst_json},"deadline_ms":5}}"#
+        ));
+        assert_eq!(
+            resp.get("error").and_then(Json::as_str),
+            Some("deadline_exceeded"),
+            "{resp:?}"
+        );
+        // the delay rule's cap is spent: an undeadlined retry computes
+        let (retry, _) = engine.handle_line(&format!(r#"{{"op":"cp","instance":{inst_json}}}"#));
+        assert_eq!(retry.get("ok"), Some(&Json::Bool(true)), "{retry:?}");
+        let (panics, delays, drops) = engine.fault().expect("plan armed").fired();
+        assert_eq!((panics, delays, drops), (0, 1, 0));
+    }
+
+    #[test]
+    fn pinned_admission_budget_sheds_new_misses_not_hits() {
+        let engine = Engine::new(EngineConfig {
+            threads: 1,
+            batch_window: 1,
+            admission_budget: Some(1),
+            ..EngineConfig::default()
+        });
+        // under budget: the first miss computes normally
+        let (_plat, inst_a) = small_instance(5200);
+        let line_a = format!(
+            r#"{{"op":"cp","instance":{}}}"#,
+            io::instance_to_json(&inst_a).to_string()
+        );
+        let (a, _) = engine.handle_line(&line_a);
+        assert_eq!(a.get("ok"), Some(&Json::Bool(true)), "{a:?}");
+        // occupy the whole budget with a staged in-flight table entry
+        let (_plat, inst_b) = small_instance(5300);
+        let interned_b = engine
+            .resolve(
+                Target::Inline {
+                    instance: inst_b,
+                    platform: None,
+                },
+                &mut RequestTrace::disabled(),
+            )
+            .expect("inline resolve");
+        let snap_b = interned_b.current();
+        let key_b = Engine::table_key(&interned_b, &snap_b, false);
+        lock_clean(&interned_b.shard.state)
+            .table_inflight
+            .insert(key_b, Arc::new(Inflight::new()));
+        // a NEW miss is refused with the structured shed error …
+        let (_plat, inst_c) = small_instance(5400);
+        let line_c = format!(
+            r#"{{"op":"cp","instance":{}}}"#,
+            io::instance_to_json(&inst_c).to_string()
+        );
+        let (c, _) = engine.handle_line(&line_c);
+        assert_eq!(c.get("ok"), Some(&Json::Bool(false)), "{c:?}");
+        assert_eq!(c.get("error").and_then(Json::as_str), Some("shed"));
+        assert!(c.get("retry_after_ms").and_then(Json::as_f64).unwrap() >= 1.0);
+        // … while cache hits keep serving under the same pressure
+        let (hit, _) = engine.handle_line(&line_a);
+        assert_eq!(hit.get("ok"), Some(&Json::Bool(true)), "{hit:?}");
+        let stats = engine.stats_json();
+        let res = stats.get("resilience").expect("resilience stats section");
+        assert_eq!(res.get("shed_requests").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(
+            res.get("admission_budget").and_then(Json::as_f64),
+            Some(1.0)
+        );
+        // releasing the pressure re-admits the shed key
+        lock_clean(&interned_b.shard.state)
+            .table_inflight
+            .remove(&key_b);
+        let (c2, _) = engine.handle_line(&line_c);
+        assert_eq!(c2.get("ok"), Some(&Json::Bool(true)), "{c2:?}");
+    }
+
+    #[test]
+    fn mid_gather_panic_resolves_all_cobatched_requests_with_errors() {
+        // A kernel panic inside a width-N gathered sweep must resolve
+        // every co-batched request with a structured `internal_panic`
+        // error — no hung follower, no dead thread — be counted exactly
+        // once, and leave the engine serving.
+        const N: usize = 3;
+        let engine = Arc::new(Engine::new(EngineConfig {
+            threads: 1,
+            batch_window: 8,
+            fault: Some(FaultPlan::parse("seed=0,kernel_panic=1x1").unwrap()),
+            ..EngineConfig::default()
+        }));
+        let mut ids = Vec::new();
+        let mut expected = Vec::new();
+        let mut shard = None;
+        for seed in 0..N as u64 {
+            let (plat, inst) = small_instance(5500 + seed);
+            expected.push(find_critical_path(inst.bind(&plat)).length);
+            let interned = engine
+                .resolve(
+                    Target::Inline {
+                        instance: inst,
+                        platform: None,
+                    },
+                    &mut RequestTrace::disabled(),
+                )
+                .expect("inline resolve");
+            ids.push(interned.id);
+            shard.get_or_insert_with(|| interned.shard.clone());
+        }
+        let shard = shard.unwrap();
+        // hold the single gather slot so all N requests park
+        lock_clean(&shard.state).collector.active = 1;
+        let handles: Vec<_> = ids
+            .iter()
+            .map(|&id| {
+                let engine = engine.clone();
+                std::thread::spawn(move || {
+                    engine.handle(Request::CriticalPath {
+                        target: Target::Handle(id),
+                        slack: false,
+                        deadline_ms: None,
+                    })
+                })
+            })
+            .collect();
+        for _ in 0..2000 {
+            if lock_clean(&shard.state).collector.pending.len() == N {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(
+            lock_clean(&shard.state).collector.pending.len(),
+            N,
+            "all requests must queue behind the held gather slot"
+        );
+        // release the slot: the promoted head leads a width-N gather that
+        // hits the injected kernel panic
+        let promoted = {
+            let mut st = lock_clean(&shard.state);
+            Engine::finish_gather(&mut st)
+        }
+        .expect("a queued leader to promote");
+        promoted.cell.complete(FlightOutcome::Retry);
+        for h in handles {
+            let resp = h.join().expect("request thread must not die");
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "{resp:?}");
+            assert_eq!(
+                resp.get("error").and_then(Json::as_str),
+                Some("internal_panic")
+            );
+            assert!(
+                resp.get("detail")
+                    .and_then(Json::as_str)
+                    .unwrap()
+                    .contains("injected fault"),
+                "{resp:?}"
+            );
+            assert!(resp.get("retry_after_ms").and_then(Json::as_f64).unwrap() >= 1.0);
+        }
+        // the panic is counted once, in the thread that unwound — the
+        // co-batched failures report errors without re-counting it
+        let stats = engine.stats_json();
+        let res = stats.get("resilience").expect("resilience stats section");
+        assert_eq!(res.get("panics_caught").and_then(Json::as_f64), Some(1.0));
+        // the fault cap is spent: the same requests now compute correctly
+        for (i, &id) in ids.iter().enumerate() {
+            let resp = engine.handle(Request::CriticalPath {
+                target: Target::Handle(id),
+                slack: false,
+                deadline_ms: None,
+            });
+            assert_eq!(
+                resp.get("length").and_then(Json::as_f64),
+                Some(expected[i]),
+                "request {i} must recover after the fault"
+            );
+        }
+    }
+
+    #[test]
+    fn expired_queue_cells_are_purged_before_the_drain() {
+        let engine = Engine::with_defaults();
+        let mut interned = Vec::new();
+        for seed in 0..3u64 {
+            let (_plat, inst) = small_instance(5600 + seed);
+            interned.push(
+                engine
+                    .resolve(
+                        Target::Inline {
+                            instance: inst,
+                            platform: None,
+                        },
+                        &mut RequestTrace::disabled(),
+                    )
+                    .expect("inline resolve"),
+            );
+        }
+        let shard = interned[0].shard.clone();
+        // stage two parked cells: one already expired, one live
+        let deadlines = [Some(Instant::now()), None];
+        let mut cells = Vec::new();
+        {
+            let mut st = lock_clean(&shard.state);
+            st.collector.active = 1;
+            for (i, inst) in interned.iter().enumerate().skip(1) {
+                let snap = inst.current();
+                let key = Engine::table_key(inst, &snap, false);
+                let cell = Arc::new(Inflight::new());
+                st.table_inflight.insert(key, cell.clone());
+                st.collector.pending.push_back(PendingTable {
+                    inst: inst.clone(),
+                    snap,
+                    delta: None,
+                    key,
+                    rev: false,
+                    origin: TableOrigin::Cp,
+                    cell: cell.clone(),
+                    queued_at: Instant::now(),
+                    timing: Arc::new(BatchTiming::default()),
+                    deadline: deadlines[i - 1],
+                });
+                cells.push(cell);
+            }
+        }
+        let snap0 = interned[0].current();
+        let key0 = Engine::table_key(&interned[0], &snap0, false);
+        let cell0 = Arc::new(Inflight::new());
+        lock_clean(&shard.state)
+            .table_inflight
+            .insert(key0, cell0.clone());
+        let (_table, cached) = engine
+            .run_gather(
+                &shard,
+                PendingTable {
+                    inst: interned[0].clone(),
+                    snap: snap0,
+                    delta: None,
+                    key: key0,
+                    rev: false,
+                    origin: TableOrigin::Cp,
+                    cell: cell0,
+                    queued_at: Instant::now(),
+                    timing: Arc::new(BatchTiming::default()),
+                    deadline: None,
+                },
+                &mut RequestTrace::disabled(),
+            )
+            .expect("a live leader is served");
+        assert!(!cached);
+        // the expired cell woke with the retry signal (its owner re-admits
+        // into a `Deadline` rejection); the live cell was swept
+        match cells[0].wait() {
+            FlightOutcome::Retry => {}
+            _ => panic!("purged cell must wake with the retry signal"),
+        }
+        match cells[1].wait() {
+            FlightOutcome::Ready(t) => assert_eq!(t.origin, TableOrigin::Cp),
+            _ => panic!("live queued cell must be served by the drain"),
+        }
+        let stats = engine.stats_json();
+        let res = stats.get("resilience").expect("resilience stats section");
+        assert_eq!(res.get("queue_rejects").and_then(Json::as_f64), Some(1.0));
+        // the purge removed the expired key's in-flight entry and the
+        // drain removed the others: nothing leaks
+        let st = lock_clean(&shard.state);
+        assert!(st.table_inflight.is_empty());
+        assert!(st.collector.pending.is_empty());
+    }
+
+    #[test]
+    fn poisoned_locks_recover_and_the_engine_keeps_serving() {
+        let engine = Arc::new(Engine::with_defaults());
+        let (_plat, inst) = small_instance(5700);
+        let line = schedule_line(&inst, "HEFT");
+        let (first, _) = engine.handle_line(&line);
+        assert_eq!(first.get("ok"), Some(&Json::Bool(true)), "{first:?}");
+        // poison both the engine state lock and the shard lock: a thread
+        // panics while holding each
+        let shard = {
+            let st = lock_clean(&engine.state);
+            st.shards.values().next().expect("one shard").clone()
+        };
+        let sh = shard.clone();
+        std::thread::spawn(move || {
+            let _g = sh.state.lock().unwrap();
+            panic!("poison the shard lock");
+        })
+        .join()
+        .unwrap_err();
+        let eng = engine.clone();
+        std::thread::spawn(move || {
+            let _g = eng.state.lock().unwrap();
+            panic!("poison the engine state lock");
+        })
+        .join()
+        .unwrap_err();
+        assert!(shard.state.lock().is_err(), "the shard mutex is poisoned");
+        // every lock site recovers: cached and uncached traffic both serve
+        let (hit, _) = engine.handle_line(&line);
+        assert_eq!(hit.get("ok"), Some(&Json::Bool(true)), "{hit:?}");
+        assert_eq!(hit.get("cached"), Some(&Json::Bool(true)));
+        let (_plat, inst2) = small_instance(5800);
+        let (miss, _) = engine.handle_line(&schedule_line(&inst2, "HEFT"));
+        assert_eq!(miss.get("ok"), Some(&Json::Bool(true)), "{miss:?}");
+    }
+
+    #[test]
+    fn shutdown_drains_while_racing_requests_and_keeps_state_sound() {
+        let engine = Arc::new(Engine::with_defaults());
+        let barrier = Arc::new(std::sync::Barrier::new(4));
+        let mut handles = Vec::new();
+        for seed in 0..3u64 {
+            let engine = engine.clone();
+            let barrier = barrier.clone();
+            let (_plat, inst) = small_instance(5900 + seed);
+            let line = schedule_line(&inst, "CEFT-CPOP");
+            handles.push(std::thread::spawn(move || {
+                barrier.wait();
+                let (resp, _) = engine.handle_line(&line);
+                resp
+            }));
+        }
+        barrier.wait();
+        let (down, is_shutdown) = engine.handle_line(r#"{"op":"shutdown"}"#);
+        assert!(is_shutdown, "shutdown flag rides the response");
+        assert_eq!(down.get("ok"), Some(&Json::Bool(true)), "{down:?}");
+        assert_eq!(down.get("shutting_down"), Some(&Json::Bool(true)));
+        assert!(down.get("drained").is_some(), "{down:?}");
+        assert!(down.get("in_flight").and_then(Json::as_f64).unwrap() >= 0.0);
+        // the drain is passive — it waits, it does not refuse — so racing
+        // requests complete with real results
+        for h in handles {
+            let resp = h.join().unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+            assert!(resp.get("makespan").is_some());
+        }
+        // and the engine remains consistent afterwards
+        let (_plat, inst) = small_instance(5950);
+        let (after, _) = engine.handle_line(&schedule_line(&inst, "HEFT"));
+        assert_eq!(after.get("ok"), Some(&Json::Bool(true)), "{after:?}");
     }
 }

@@ -1,0 +1,327 @@
+//! Deterministic fault injection — the test substrate for the engine's
+//! resilience layer.
+//!
+//! A [`FaultPlan`] is a seeded, ordinal-addressed schedule of faults:
+//! kernel panics, pre-kernel stage delays, and connection drops. Each
+//! fault site owns a monotonic ordinal counter; visiting the site
+//! advances the counter and the plan decides *deterministically* from
+//! `(ordinal, seed)` whether the fault fires. The determinism contract
+//! (see EXPERIMENTS.md §Overload & fault model): for a fixed plan and a
+//! fixed serial sequence of site visits, the same visits fault on every
+//! run. Under concurrency the *set* of ordinals is still consumed exactly
+//! once each — total fault counts are reproducible even when the mapping
+//! from ordinal to request is not.
+//!
+//! Zero-cost when off: the engine stores `Option<Arc<FaultPlan>>` and
+//! every hook is behind a single `is_some` branch; a disarmed plan
+//! ([`FaultPlan::disarm`]) stops advancing ordinals entirely, so a
+//! post-fault replay runs the exact fault-free code path.
+//!
+//! Plan syntax (`repro serve --fault-plan`, `repro loadgen --fault-plan`,
+//! or the `CEFT_FAULT` environment variable):
+//!
+//! ```text
+//! seed=7,kernel_panic=13x4,delay=9:25x6,conn_drop=5x1
+//! ```
+//!
+//! * `seed=N` — phase-shifts every rule: a rule with period `E` fires on
+//!   ordinals `o` with `o % E == seed % E`.
+//! * `kernel_panic=E[xC]` — every `E`-th gathered/width-1 table kernel
+//!   call panics, at most `C` times (`x` omitted ⇒ unbounded).
+//! * `delay=E:MS[xC]` — every `E`-th compute request (`cp` / `schedule` /
+//!   `update`) sleeps `MS` milliseconds before its deadline checks, at
+//!   most `C` times.
+//! * `conn_drop=E[xC]` — every `E`-th TCP request line is dropped: the
+//!   connection closes without a response, at most `C` times.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+/// One ordinal-addressed fault rule: fire on every `every`-th visit whose
+/// ordinal is congruent to `phase`, at most `limit` times.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Rule {
+    every: u64,
+    phase: u64,
+    limit: u64,
+}
+
+impl Rule {
+    fn new(every: u64, seed: u64, limit: u64) -> Result<Rule, String> {
+        if every == 0 {
+            return Err("fault rule period must be >= 1".to_string());
+        }
+        Ok(Rule {
+            every,
+            phase: seed % every,
+            limit,
+        })
+    }
+}
+
+/// A seeded deterministic fault schedule. See the module docs for the
+/// spec grammar and determinism contract.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    kernel_panic: Option<Rule>,
+    delay: Option<(Rule, u64)>,
+    conn_drop: Option<Rule>,
+    kernel_ordinal: AtomicU64,
+    request_ordinal: AtomicU64,
+    line_ordinal: AtomicU64,
+    panics_fired: AtomicU64,
+    delays_fired: AtomicU64,
+    drops_fired: AtomicU64,
+    armed: AtomicBool,
+}
+
+impl Clone for FaultPlan {
+    /// Cloning yields the same *schedule* with fresh ordinal counters — a
+    /// clone replays the plan from ordinal zero.
+    fn clone(&self) -> FaultPlan {
+        FaultPlan {
+            seed: self.seed,
+            kernel_panic: self.kernel_panic,
+            delay: self.delay,
+            conn_drop: self.conn_drop,
+            kernel_ordinal: AtomicU64::new(0),
+            request_ordinal: AtomicU64::new(0),
+            line_ordinal: AtomicU64::new(0),
+            panics_fired: AtomicU64::new(0),
+            delays_fired: AtomicU64::new(0),
+            drops_fired: AtomicU64::new(0),
+            armed: AtomicBool::new(true),
+        }
+    }
+}
+
+/// Parse `E[xC]` — a period with an optional firing cap.
+fn parse_rule(text: &str, seed: u64) -> Result<Rule, String> {
+    let (every, limit) = match text.split_once('x') {
+        Some((e, c)) => (
+            e.parse::<u64>().map_err(|_| format!("bad period {e:?}"))?,
+            c.parse::<u64>().map_err(|_| format!("bad cap {c:?}"))?,
+        ),
+        None => (
+            text.parse::<u64>()
+                .map_err(|_| format!("bad period {text:?}"))?,
+            u64::MAX,
+        ),
+    };
+    Rule::new(every, seed, limit)
+}
+
+impl FaultPlan {
+    /// Parse a plan spec (see module docs). Errors name the offending
+    /// clause — suitable for a CLI flag message.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        // two passes so `seed=` phases every rule regardless of clause order
+        let mut seed = 0u64;
+        for clause in spec.split(',').filter(|c| !c.trim().is_empty()) {
+            if let Some(v) = clause.trim().strip_prefix("seed=") {
+                seed = v
+                    .parse::<u64>()
+                    .map_err(|_| format!("bad fault seed {v:?}"))?;
+            }
+        }
+        let mut kernel_panic = None;
+        let mut delay = None;
+        let mut conn_drop = None;
+        for clause in spec.split(',').filter(|c| !c.trim().is_empty()) {
+            let clause = clause.trim();
+            let (key, value) = clause
+                .split_once('=')
+                .ok_or_else(|| format!("fault clause {clause:?} is not key=value"))?;
+            match key {
+                "seed" => {}
+                "kernel_panic" => kernel_panic = Some(parse_rule(value, seed)?),
+                "delay" => {
+                    let (rule_text, ms_text) = value
+                        .split_once(':')
+                        .ok_or_else(|| format!("delay clause {value:?} needs EVERY:MS"))?;
+                    // the cap rides the millisecond part: delay=E:MSxC
+                    let (ms_text, cap) = match ms_text.split_once('x') {
+                        Some((m, c)) => (m, Some(c)),
+                        None => (ms_text, None),
+                    };
+                    let ms = ms_text
+                        .parse::<u64>()
+                        .map_err(|_| format!("bad delay ms {ms_text:?}"))?;
+                    let rule_spec = match cap {
+                        Some(c) => format!("{rule_text}x{c}"),
+                        None => rule_text.to_string(),
+                    };
+                    delay = Some((parse_rule(&rule_spec, seed)?, ms));
+                }
+                "conn_drop" => conn_drop = Some(parse_rule(value, seed)?),
+                other => return Err(format!("unknown fault clause {other:?}")),
+            }
+        }
+        if kernel_panic.is_none() && delay.is_none() && conn_drop.is_none() {
+            return Err("fault plan has no rules".to_string());
+        }
+        Ok(FaultPlan {
+            seed,
+            kernel_panic,
+            delay,
+            conn_drop,
+            kernel_ordinal: AtomicU64::new(0),
+            request_ordinal: AtomicU64::new(0),
+            line_ordinal: AtomicU64::new(0),
+            panics_fired: AtomicU64::new(0),
+            delays_fired: AtomicU64::new(0),
+            drops_fired: AtomicU64::new(0),
+            armed: AtomicBool::new(true),
+        })
+    }
+
+    /// Build a plan from the `CEFT_FAULT` environment variable, if set.
+    /// A malformed spec is reported to stderr and ignored — a typo in an
+    /// env var must not take the server down at startup.
+    pub fn from_env() -> Option<FaultPlan> {
+        let spec = std::env::var("CEFT_FAULT").ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(&spec) {
+            Ok(plan) => Some(plan),
+            Err(e) => {
+                eprintln!("ignoring CEFT_FAULT={spec:?}: {e}");
+                None
+            }
+        }
+    }
+
+    fn fires(&self, rule: Option<Rule>, ordinal: &AtomicU64, fired: &AtomicU64) -> bool {
+        let Some(r) = rule else { return false };
+        if !self.armed.load(Ordering::Relaxed) {
+            return false;
+        }
+        let o = ordinal.fetch_add(1, Ordering::Relaxed);
+        if o % r.every != r.phase {
+            return false;
+        }
+        // bounded burst: only the first `limit` congruent visits fire
+        fired.fetch_add(1, Ordering::Relaxed) < r.limit
+    }
+
+    /// Visit the kernel fault site; `true` means the caller must panic
+    /// (the engine does, with [`INJECTED_PANIC`] in the message, inside
+    /// its gather `catch_unwind` so the recovery contracts are exercised).
+    pub fn should_panic_kernel(&self) -> bool {
+        self.fires(self.kernel_panic, &self.kernel_ordinal, &self.panics_fired)
+    }
+
+    /// Visit the request-delay site; `Some(d)` means the caller sleeps
+    /// `d` before its deadline checks.
+    pub fn injected_delay(&self) -> Option<Duration> {
+        let (rule, ms) = self.delay?;
+        if self.fires(Some(rule), &self.request_ordinal, &self.delays_fired) {
+            Some(Duration::from_millis(ms))
+        } else {
+            None
+        }
+    }
+
+    /// Visit the connection-drop site; `true` means the server closes the
+    /// connection without responding to the line just read.
+    pub fn should_drop_connection(&self) -> bool {
+        self.fires(self.conn_drop, &self.line_ordinal, &self.drops_fired)
+    }
+
+    /// Disarm every rule: subsequent visits neither fire nor advance
+    /// ordinals, so a replay after `disarm()` runs fault-free.
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::Relaxed);
+    }
+
+    /// Whether the plan is still armed.
+    pub fn armed(&self) -> bool {
+        self.armed.load(Ordering::Relaxed)
+    }
+
+    /// Total faults fired so far: `(kernel panics, delays, conn drops)`.
+    pub fn fired(&self) -> (u64, u64, u64) {
+        (
+            self.panics_fired.load(Ordering::Relaxed),
+            self.delays_fired.load(Ordering::Relaxed),
+            self.drops_fired.load(Ordering::Relaxed),
+        )
+    }
+
+    /// The plan's seed (surfaced in stats for reproducibility).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+/// Marker substring carried by every injected kernel panic's payload, so
+/// tests (and log readers) can tell an injected fault from a real defect.
+pub const INJECTED_PANIC: &str = "injected fault: kernel panic";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec_and_rejects_bad_clauses() {
+        let p = FaultPlan::parse("seed=7,kernel_panic=13x4,delay=9:25x6,conn_drop=5x1").unwrap();
+        assert_eq!(p.seed(), 7);
+        assert_eq!(p.kernel_panic, Some(Rule { every: 13, phase: 7, limit: 4 }));
+        assert_eq!(p.delay, Some((Rule { every: 9, phase: 7, limit: 6 }, 25)));
+        assert_eq!(p.conn_drop, Some(Rule { every: 5, phase: 2, limit: 1 }));
+        // seed phases rules regardless of clause order
+        let p2 = FaultPlan::parse("kernel_panic=13x4,seed=7").unwrap();
+        assert_eq!(p2.kernel_panic, Some(Rule { every: 13, phase: 7, limit: 4 }));
+        assert!(FaultPlan::parse("").is_err(), "empty plan has no rules");
+        assert!(FaultPlan::parse("seed=1").is_err(), "seed alone has no rules");
+        assert!(FaultPlan::parse("kernel_panic=0").is_err(), "period 0");
+        assert!(FaultPlan::parse("warp=1").is_err(), "unknown clause");
+        assert!(FaultPlan::parse("delay=5").is_err(), "delay needs :MS");
+        assert!(FaultPlan::parse("kernel_panic=abc").is_err());
+    }
+
+    #[test]
+    fn ordinals_fire_deterministically_with_phase_and_cap() {
+        let p = FaultPlan::parse("seed=1,kernel_panic=3x2").unwrap();
+        // phase = 1 % 3 = 1: ordinals 1 and 4 fire, the cap stops 7
+        let fired: Vec<bool> = (0..9).map(|_| p.should_panic_kernel()).collect();
+        assert_eq!(
+            fired,
+            vec![false, true, false, false, true, false, false, false, false]
+        );
+        assert_eq!(p.fired().0, 2);
+        // a clone replays the same schedule from ordinal zero
+        let q = p.clone();
+        let refired: Vec<bool> = (0..9).map(|_| q.should_panic_kernel()).collect();
+        assert_eq!(fired, refired);
+    }
+
+    #[test]
+    fn delay_site_returns_duration_and_respects_disarm() {
+        let p = FaultPlan::parse("delay=2:40").unwrap();
+        // phase 0: ordinals 0, 2, 4 … fire
+        assert_eq!(p.injected_delay(), Some(Duration::from_millis(40)));
+        assert_eq!(p.injected_delay(), None);
+        assert_eq!(p.injected_delay(), Some(Duration::from_millis(40)));
+        p.disarm();
+        assert!(!p.armed());
+        for _ in 0..8 {
+            assert_eq!(p.injected_delay(), None, "disarmed plans never fire");
+        }
+        assert_eq!(p.fired().1, 2);
+    }
+
+    #[test]
+    fn independent_sites_keep_independent_ordinals() {
+        let p = FaultPlan::parse("kernel_panic=1x1,conn_drop=2x8").unwrap();
+        assert!(p.should_panic_kernel());
+        assert!(!p.should_panic_kernel(), "cap 1 exhausted");
+        // the kernel visits above must not have advanced the line ordinal
+        assert!(p.should_drop_connection()); // ordinal 0
+        assert!(!p.should_drop_connection()); // ordinal 1
+        assert!(p.should_drop_connection()); // ordinal 2
+        assert_eq!(p.fired(), (1, 0, 2));
+    }
+}

@@ -42,12 +42,29 @@
 //! `cached` flag) whether it was recomputed or served from cache. The
 //! service tests assert this, and the memoization correctness depends on
 //! it.
+//!
+//! Resilience: failure is a first-class input. Requests carry optional
+//! `deadline_ms` budgets the engine checks at cache probe, queue admission
+//! and pre-kernel (expired work is refused with a structured
+//! `deadline_exceeded` + `retry_after_ms`, and expired queue cells are
+//! purged before each gathered drain); a per-shard admission governor fed
+//! by the [`crate::obs`] recorder's `queue_wait` p99 sheds over-budget
+//! *misses* with hysteresis (cache hits are always served); every request
+//! runs under `catch_unwind` with poison-recovering locks, so a panicking
+//! kernel resolves its co-batched followers with errors and the engine
+//! keeps serving; and [`fault`] is a seeded, zero-cost-when-off
+//! fault-injection plan (`CEFT_FAULT` / `repro serve --fault-plan`) that
+//! makes every one of those recovery paths deterministically testable.
+//! Counters surface in the `resilience` stats section and the
+//! `ceft_resilience_*` Prometheus series.
 
 pub mod cache;
 pub mod engine;
+pub mod fault;
 pub mod hashing;
 pub mod protocol;
 
 pub use cache::{CacheKey, CacheStats, LruCache};
 pub use engine::{serve_stdio, Engine, EngineConfig, Server};
+pub use fault::FaultPlan;
 pub use protocol::{parse_request, request_to_json, Request, Target, PROTOCOL_VERSION};

@@ -11,9 +11,9 @@
 //! |------------|----------------------------------------------------|----------|
 //! | `ping`     | —                                                  | `pong`, `version` |
 //! | `submit`   | `instance`, optional `platform`                    | `id` (16-hex handle), `n`, `p`, `edges` |
-//! | `cp`       | `id` *or* `instance` (+ optional `platform`), optional `slack: true` | `length`, `path` `[[task, class], …]`, `cached`, `id` (+ `slack: [per-task float]` when requested) |
-//! | `schedule` | `algorithm`, `id` *or* `instance` (+ `platform`)   | `makespan`, `schedule`, `algorithm`, `cached`, `id` |
-//! | `update`   | `id`, `edits` `[{"edit":"task_cost"\|"edge_cost"\|"add_edge"\|"remove_edge"\|"add_task"\|"remove_task", …}, …]` | `id`, `generation`, `n`, `edges`, `length`, `slack`, `delta_rows_recomputed`, `full_rows`, `skipped` |
+//! | `cp`       | `id` *or* `instance` (+ optional `platform`), optional `slack: true`, optional `deadline_ms` | `length`, `path` `[[task, class], …]`, `cached`, `id` (+ `slack: [per-task float]` when requested) |
+//! | `schedule` | `algorithm`, `id` *or* `instance` (+ `platform`), optional `deadline_ms` | `makespan`, `schedule`, `algorithm`, `cached`, `id` |
+//! | `update`   | `id`, `edits` `[{"edit":"task_cost"\|"edge_cost"\|"add_edge"\|"remove_edge"\|"add_task"\|"remove_task", …}, …]`, optional `deadline_ms` | `id`, `generation`, `n`, `edges`, `length`, `slack`, `delta_rows_recomputed`, `full_rows`, `skipped` |
 //! | `stats`    | —                                                  | counters + cache occupancy (incl. the memoized CEFT-table cache: hits/misses, `batched_requests`/`batch_width`, `cp_schedule_shares`) + per-stage latency percentiles |
 //! | `trace`    | optional `limit` (slowest/recent rows, default 8)  | per-stage histograms, kernel-path throughput, slowest/recent traces |
 //! | `metrics`  | —                                                  | `text`: Prometheus-style exposition (same body `--metrics-addr` serves) |
@@ -26,6 +26,16 @@
 //! platform with unit bandwidth and zero startup, matching the RGG-classic
 //! experiments). Submitting the same content twice returns the same handle:
 //! handles are structural hashes, not sequence numbers.
+//!
+//! Deadlines: the compute ops (`cp`, `schedule`, `update`) accept an
+//! optional `"deadline_ms"` — a non-negative relative budget in
+//! milliseconds, measured from dispatch. A request whose budget expires
+//! before (or while) its computation runs gets
+//! `{"ok":false,"error":"deadline_exceeded","retry_after_ms":N}` instead of
+//! an answer; an over-budget shard sheds uncached work the same way with
+//! `"error":"shed"`. Both are *structured* refusals — the connection
+//! survives, and `retry_after_ms` tells a backoff client when the queue is
+//! likely to have drained (see EXPERIMENTS.md §Overload & fault model).
 
 use crate::graph::edit::GraphEdit;
 use crate::graph::generator::Instance;
@@ -73,6 +83,9 @@ pub enum Request {
         /// also return per-task slack (the CPM float idiom) derived from
         /// the forward table
         slack: bool,
+        /// optional relative deadline (milliseconds from dispatch); the
+        /// engine refuses with `deadline_exceeded` once it expires
+        deadline_ms: Option<u64>,
     },
     /// edit an interned instance in place, bumping its generation
     Update {
@@ -81,6 +94,10 @@ pub enum Request {
         id: u64,
         /// the edit sequence, applied in order
         edits: Vec<GraphEdit>,
+        /// optional relative deadline for the eager recompute phase (the
+        /// edit itself is cheap and always applied; an expired deadline
+        /// refuses before the edit is attempted)
+        deadline_ms: Option<u64>,
     },
     /// full schedule with a registry algorithm
     Schedule {
@@ -88,6 +105,8 @@ pub enum Request {
         algorithm: Algorithm,
         /// which instance
         target: Target,
+        /// optional relative deadline (milliseconds from dispatch)
+        deadline_ms: Option<u64>,
     },
     /// engine counters and cache occupancy
     Stats,
@@ -274,6 +293,23 @@ pub fn edit_to_json(e: &GraphEdit) -> Json {
     Json::obj(fields)
 }
 
+/// Decode the optional `"deadline_ms"` field. Rejects negatives, NaN and
+/// infinities (a `1e999` literal parses to `+inf`, which must not become a
+/// deadline the engine converts to an `Instant`); fractional budgets
+/// truncate to whole milliseconds.
+fn parse_deadline(j: &Json) -> Result<Option<u64>, String> {
+    match j.get("deadline_ms") {
+        None => Ok(None),
+        Some(v) => {
+            let ms = v
+                .as_f64()
+                .filter(|m| m.is_finite() && *m >= 0.0)
+                .ok_or("\"deadline_ms\" must be a finite non-negative number")?;
+            Ok(Some(ms as u64))
+        }
+    }
+}
+
 fn parse_target(j: &Json, op: &str) -> Result<Target, String> {
     if let Some(h) = j.get("id") {
         let s = h.as_str().ok_or("\"id\" must be a hex string")?;
@@ -305,6 +341,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             Ok(Request::CriticalPath {
                 target: parse_target(&j, "cp")?,
                 slack,
+                deadline_ms: parse_deadline(&j)?,
             })
         }
         "update" => {
@@ -325,6 +362,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             Ok(Request::Update {
                 id: parse_handle(s)?,
                 edits,
+                deadline_ms: parse_deadline(&j)?,
             })
         }
         "schedule" => {
@@ -335,6 +373,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             Ok(Request::Schedule {
                 algorithm: Algorithm::parse(name)?,
                 target: parse_target(&j, "schedule")?,
+                deadline_ms: parse_deadline(&j)?,
             })
         }
         "stats" => Ok(Request::Stats),
@@ -402,21 +441,42 @@ pub fn request_to_json(req: &Request) -> Json {
             fields.push(("op", Json::Str("submit".to_string())));
             push_instance(&mut fields, instance, platform);
         }
-        Request::CriticalPath { target, slack } => {
+        Request::CriticalPath {
+            target,
+            slack,
+            deadline_ms,
+        } => {
             fields.push(("op", Json::Str("cp".to_string())));
             if *slack {
                 fields.push(("slack", Json::Bool(true)));
             }
+            if let Some(ms) = deadline_ms {
+                fields.push(("deadline_ms", Json::Num(*ms as f64)));
+            }
             push_target(&mut fields, target);
         }
-        Request::Update { id, edits } => {
+        Request::Update {
+            id,
+            edits,
+            deadline_ms,
+        } => {
             fields.push(("op", Json::Str("update".to_string())));
             fields.push(("id", Json::Str(handle_to_hex(*id))));
             fields.push(("edits", Json::Arr(edits.iter().map(edit_to_json).collect())));
+            if let Some(ms) = deadline_ms {
+                fields.push(("deadline_ms", Json::Num(*ms as f64)));
+            }
         }
-        Request::Schedule { algorithm, target } => {
+        Request::Schedule {
+            algorithm,
+            target,
+            deadline_ms,
+        } => {
             fields.push(("op", Json::Str("schedule".to_string())));
             fields.push(("algorithm", Json::Str(algorithm.name().to_string())));
+            if let Some(ms) = deadline_ms {
+                fields.push(("deadline_ms", Json::Num(*ms as f64)));
+            }
             push_target(&mut fields, target);
         }
     }
@@ -435,6 +495,18 @@ pub fn error_response(msg: &str) -> Json {
         ("ok", Json::Bool(false)),
         ("error", Json::Str(msg.to_string())),
     ])
+}
+
+/// Build an error response with extra structured fields — the shape for
+/// refusals a client is expected to act on (`deadline_exceeded` / `shed`
+/// with `retry_after_ms`, `internal_panic` with `detail`).
+pub fn error_response_with(msg: &str, extra: Vec<(&str, Json)>) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
 }
 
 #[cfg(test)]
@@ -463,6 +535,18 @@ mod tests {
             Ok(Request::CriticalPath {
                 target: Target::Inline { .. },
                 slack: false,
+                deadline_ms: None,
+            })
+        ));
+        let cp_deadline = format!(
+            r#"{{"op":"cp","deadline_ms":250,"instance":{}}}"#,
+            sample_instance_json()
+        );
+        assert!(matches!(
+            parse_request(&cp_deadline),
+            Ok(Request::CriticalPath {
+                deadline_ms: Some(250),
+                ..
             })
         ));
         let cp_slack = format!(
@@ -485,6 +569,7 @@ mod tests {
         match parse_request(by_handle).unwrap() {
             Request::CriticalPath {
                 target: Target::Handle(h),
+                ..
             } => assert_eq!(h, 0xff),
             other => panic!("wrong request: {other:?}"),
         }
@@ -513,7 +598,7 @@ mod tests {
             {"edit":"remove_task","task":1}]}"#
             .replace('\n', "");
         match parse_request(&update).unwrap() {
-            Request::Update { id, edits } => {
+            Request::Update { id, edits, .. } => {
                 assert_eq!(id, 0xff);
                 assert_eq!(edits.len(), 6);
                 assert_eq!(
@@ -545,10 +630,12 @@ mod tests {
             Request::CriticalPath {
                 target: Target::Handle(1),
                 slack: false,
+                deadline_ms: None,
             },
             Request::Schedule {
                 algorithm: Algorithm::CeftCpop,
                 target: Target::Handle(1),
+                deadline_ms: None,
             },
             Request::Stats,
             Request::Evict { id: 1 },
@@ -559,6 +646,7 @@ mod tests {
             Request::Update {
                 id: 1,
                 edits: vec![GraphEdit::RemoveEdge { src: 0, dst: 1 }],
+                deadline_ms: None,
             },
         ];
         let mut codes = std::collections::HashSet::new();
@@ -631,6 +719,21 @@ mod tests {
         assert!(parse_request(r#"{"op":"cp","id":"01","slack":1}"#)
             .unwrap_err()
             .contains("boolean"));
+        // deadline_ms must be a finite non-negative number: negatives,
+        // infinities (1e999 parses to +inf) and strings are all refused
+        for bad in [
+            r#"{"op":"cp","id":"01","deadline_ms":-5}"#,
+            r#"{"op":"cp","id":"01","deadline_ms":1e999}"#,
+            r#"{"op":"schedule","algorithm":"ceft-cpop","id":"01","deadline_ms":"soon"}"#,
+            r#"{"op":"update","id":"01","edits":[{"edit":"remove_edge","src":0,"dst":1}],"deadline_ms":-1}"#,
+        ] {
+            assert!(
+                parse_request(bad)
+                    .unwrap_err()
+                    .contains("finite non-negative"),
+                "accepted bad deadline: {bad}"
+            );
+        }
         // malformed instance content surfaces io's message
         let cyc = r#"{"op":"cp","instance":{"n":2,"p":1,"edges":[[0,1,1.0],[1,0,1.0]],"comp":[1,2]}}"#;
         assert!(parse_request(cyc).unwrap_err().contains("cycle"));
@@ -672,10 +775,12 @@ mod tests {
             Request::CriticalPath {
                 target: Target::Handle(7),
                 slack: false,
+                deadline_ms: None,
             },
             Request::CriticalPath {
                 target: Target::Handle(7),
                 slack: true,
+                deadline_ms: Some(250),
             },
             Request::Schedule {
                 algorithm: Algorithm::CeftHeftUp,
@@ -683,9 +788,11 @@ mod tests {
                     instance: inst,
                     platform: None,
                 },
+                deadline_ms: Some(1000),
             },
             Request::Update {
                 id: 0xabc,
+                deadline_ms: None,
                 edits: vec![
                     GraphEdit::TaskCost {
                         task: 0,
@@ -728,5 +835,9 @@ mod tests {
         let err = error_response("boom");
         assert_eq!(err.get("ok"), Some(&Json::Bool(false)));
         assert_eq!(err.get("error").and_then(Json::as_str), Some("boom"));
+        let shed = error_response_with("shed", vec![("retry_after_ms", Json::Num(25.0))]);
+        assert_eq!(shed.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(shed.get("error").and_then(Json::as_str), Some("shed"));
+        assert_eq!(shed.get("retry_after_ms").and_then(Json::as_f64), Some(25.0));
     }
 }

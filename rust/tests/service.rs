@@ -8,7 +8,7 @@ use ceft::exp::run::{build_instance, run_cell, ALGOS};
 use ceft::graph::io;
 use ceft::platform::Platform;
 use ceft::sched::Algorithm;
-use ceft::service::{Engine, EngineConfig, Server};
+use ceft::service::{Engine, EngineConfig, FaultPlan, Server};
 use ceft::util::json::Json;
 use std::io::{BufRead as _, BufReader, Write as _};
 use std::net::{SocketAddr, TcpStream};
@@ -296,4 +296,212 @@ fn tcp_server_smoke_test_with_concurrent_clients() {
         .join()
         .expect("server thread")
         .expect("server run");
+}
+
+/// Like [`roundtrip`] but surfaces a server-side connection drop (an empty
+/// read) as `None` instead of panicking — what a retrying client observes.
+fn try_roundtrip(stream: &mut TcpStream, line: &str) -> Option<Json> {
+    writeln!(stream, "{line}").ok()?;
+    stream.flush().ok()?;
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut resp = String::new();
+    let n = reader.read_line(&mut resp).ok()?;
+    if n == 0 {
+        return None;
+    }
+    Some(Json::parse(resp.trim_end()).unwrap_or_else(|e| panic!("bad response {resp:?}: {e}")))
+}
+
+fn shutdown_server(
+    addr: SocketAddr,
+    server_thread: std::thread::JoinHandle<std::io::Result<()>>,
+) {
+    let mut stream = connect(addr);
+    let resp = roundtrip(&mut stream, r#"{"op":"shutdown"}"#);
+    assert_eq!(resp.get("shutting_down"), Some(&Json::Bool(true)));
+    server_thread
+        .join()
+        .expect("server thread")
+        .expect("server run");
+}
+
+#[test]
+fn connection_survives_injected_kernel_panic_and_recovers() {
+    // One injected kernel panic: the very first gathered sweep dies. The
+    // connection that asked must get a structured internal_panic — not a
+    // dead socket, not a hang — and the SAME connection's retry must then
+    // be served the real answer.
+    let engine = Arc::new(Engine::new(EngineConfig {
+        cache_capacity: 256,
+        threads: 2,
+        fault: Some(FaultPlan::parse("seed=0,kernel_panic=1x1").unwrap()),
+        ..EngineConfig::default()
+    }));
+    let server = Server::bind(engine.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let mut stream = connect(addr);
+    let cell = smoke_cell();
+    let submitted = roundtrip(&mut stream, &instance_line("submit", None, &cell));
+    let id = submitted.get("id").and_then(Json::as_str).unwrap().to_string();
+    let cp_line = format!(r#"{{"op":"cp","id":"{id}"}}"#);
+
+    let poisoned = roundtrip(&mut stream, &cp_line);
+    assert_eq!(poisoned.get("ok"), Some(&Json::Bool(false)), "{poisoned:?}");
+    assert_eq!(
+        poisoned.get("error").and_then(Json::as_str),
+        Some("internal_panic")
+    );
+    assert!(
+        poisoned
+            .get("detail")
+            .and_then(Json::as_str)
+            .map_or(false, |d| d.contains("injected fault")),
+        "the caught panic's message must reach the client: {poisoned:?}"
+    );
+    assert!(poisoned.get("retry_after_ms").and_then(Json::as_f64).unwrap_or(0.0) >= 1.0);
+
+    // same connection, same request: the plan's cap is spent, so the retry
+    // computes for real
+    let served = roundtrip(&mut stream, &cp_line);
+    assert_eq!(served.get("ok"), Some(&Json::Bool(true)), "{served:?}");
+    assert!(served.get("length").and_then(Json::as_f64).unwrap() > 0.0);
+
+    let stats = roundtrip(&mut stream, r#"{"op":"stats"}"#);
+    let resil = stats.get("resilience").expect("stats carry a resilience section");
+    assert_eq!(resil.get("panics_caught").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(resil.get("fault_plan_armed"), Some(&Json::Bool(true)));
+
+    shutdown_server(addr, server_thread);
+}
+
+#[test]
+fn conn_drop_fault_closes_cleanly_and_a_reconnect_retry_is_served() {
+    // `conn_drop` severs the connection after the work is done but before
+    // the reply is written — the crash-at-the-worst-moment shape. The
+    // client sees an empty read (never a partial line), reconnects, and
+    // the retry is served from cache.
+    let engine = Arc::new(Engine::new(EngineConfig {
+        cache_capacity: 256,
+        threads: 2,
+        fault: Some(FaultPlan::parse("seed=0,conn_drop=1x1").unwrap()),
+        ..EngineConfig::default()
+    }));
+    let server = Server::bind(engine.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let cell = smoke_cell();
+    let line = instance_line("cp", None, &cell);
+    let dropped = {
+        let mut stream = connect(addr);
+        try_roundtrip(&mut stream, &line)
+    };
+    assert!(dropped.is_none(), "the first reply should have been dropped");
+
+    let mut stream = connect(addr);
+    let retried = try_roundtrip(&mut stream, &line).expect("retry after reconnect");
+    assert_eq!(retried.get("ok"), Some(&Json::Bool(true)), "{retried:?}");
+    // the dropped request still did its work before the injected sever
+    assert_eq!(retried.get("cached"), Some(&Json::Bool(true)));
+
+    shutdown_server(addr, server_thread);
+}
+
+#[test]
+fn protocol_hardening_rejects_hostile_input_without_killing_the_connection() {
+    // Hostile bytes on the wire — truncation, pathological nesting, JSON
+    // extensions, out-of-domain deadlines — must each produce a structured
+    // `ok:false` on a connection that keeps serving. A panic here would
+    // kill the connection thread; a hang would kill the client.
+    let engine = Arc::new(Engine::new(EngineConfig {
+        cache_capacity: 64,
+        threads: 2,
+        ..EngineConfig::default()
+    }));
+    let server = Server::bind(engine.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let deep_array = format!("{}{}", "[".repeat(300), "]".repeat(300));
+    let hostile: Vec<String> = vec![
+        // truncated mid-object (a crashed client's final write)
+        r#"{"op":"cp","instance":{"n":2,"p":1,"edges"#.to_string(),
+        // nesting past the parser's depth limit
+        format!(r#"{{"op":"cp","instance":{deep_array}}}"#),
+        // JSON "extensions" the codec must refuse, not absorb
+        r#"{"op":"cp","deadline_ms":NaN}"#.to_string(),
+        // a deadline that parses to f64 infinity
+        r#"{"op":"cp","id":"0000000000000001","deadline_ms":1e999}"#.to_string(),
+        // negative budget
+        r#"{"op":"cp","id":"0000000000000001","deadline_ms":-5}"#.to_string(),
+        // structurally valid, semantically absurd
+        r#"{"op":"update","id":"0000000000000001","edits":[{"edit":"task_cost"}]}"#.to_string(),
+    ];
+    let mut stream = connect(addr);
+    for bad in &hostile {
+        let resp = try_roundtrip(&mut stream, bad)
+            .unwrap_or_else(|| panic!("connection died on hostile input: {bad}"));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)), "accepted: {bad}");
+        assert!(
+            resp.get("error").and_then(Json::as_str).is_some(),
+            "no structured error for: {bad}"
+        );
+    }
+    // the same connection still serves real work
+    let pong = roundtrip(&mut stream, r#"{"op":"ping"}"#);
+    assert_eq!(pong.get("pong"), Some(&Json::Bool(true)));
+    let served = roundtrip(&mut stream, &instance_line("cp", None, &smoke_cell()));
+    assert_eq!(served.get("ok"), Some(&Json::Bool(true)));
+
+    shutdown_server(addr, server_thread);
+}
+
+#[test]
+fn deadline_and_retry_after_surface_over_tcp() {
+    // End-to-end deadline shape: an expired budget on an uncached instance
+    // is refused with deadline_exceeded + retry_after_ms, the connection
+    // survives, and the identical undeadlined request is then served.
+    let engine = Arc::new(Engine::new(EngineConfig {
+        cache_capacity: 64,
+        threads: 2,
+        ..EngineConfig::default()
+    }));
+    let server = Server::bind(engine.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let server_thread = std::thread::spawn(move || server.run());
+
+    let mut stream = connect(addr);
+    let cell = smoke_cell();
+    let submitted = roundtrip(&mut stream, &instance_line("submit", None, &cell));
+    let id = submitted.get("id").and_then(Json::as_str).unwrap().to_string();
+
+    let refused = roundtrip(
+        &mut stream,
+        &format!(r#"{{"op":"cp","id":"{id}","deadline_ms":0}}"#),
+    );
+    assert_eq!(refused.get("ok"), Some(&Json::Bool(false)), "{refused:?}");
+    assert_eq!(
+        refused.get("error").and_then(Json::as_str),
+        Some("deadline_exceeded")
+    );
+    assert!(refused.get("retry_after_ms").and_then(Json::as_f64).unwrap_or(0.0) >= 1.0);
+
+    let served = roundtrip(&mut stream, &format!(r#"{{"op":"cp","id":"{id}"}}"#));
+    assert_eq!(served.get("ok"), Some(&Json::Bool(true)), "{served:?}");
+    // and once cached, even an expired budget is served — a hit costs
+    // nothing, so shedding it would only destroy availability
+    let hit = roundtrip(
+        &mut stream,
+        &format!(r#"{{"op":"cp","id":"{id}","deadline_ms":0}}"#),
+    );
+    assert_eq!(hit.get("ok"), Some(&Json::Bool(true)), "{hit:?}");
+    assert_eq!(hit.get("cached"), Some(&Json::Bool(true)));
+
+    let stats = roundtrip(&mut stream, r#"{"op":"stats"}"#);
+    let resil = stats.get("resilience").expect("resilience section");
+    assert_eq!(resil.get("deadline_expired").and_then(Json::as_f64), Some(1.0));
+
+    shutdown_server(addr, server_thread);
 }
